@@ -1,0 +1,101 @@
+//! Figures 2/3 — session management: cache reuse rate and migration
+//! overhead across session counts and reuse probabilities (measured through
+//! the real session store + router on the serving loop).
+
+use tinyserve::config::ServingConfig;
+use tinyserve::coordinator::{serve_trace, ServeOptions};
+use tinyserve::engine::Engine;
+use tinyserve::harness::scale;
+use tinyserve::plugins::Pipeline;
+use tinyserve::report::{Series, Table};
+use tinyserve::runtime::Manifest;
+use tinyserve::sparsity::PolicyKind;
+use tinyserve::workload::{generate_trace, TraceConfig};
+
+fn main() {
+    let manifest = Manifest::load(&tinyserve::artifacts_dir()).expect("artifacts");
+    let n_requests = scale(32);
+
+    // reuse rate + reused tokens vs session-following probability
+    let probs = [0.0, 0.25, 0.5, 0.75, 0.95];
+    let mut s = Series::new("Figure 3a: session reuse vs follow-up probability", "p_follow");
+    s.x = probs.to_vec();
+    let mut reuse_col = Vec::new();
+    let mut ttft_col = Vec::new();
+    let mut mig_col = Vec::new();
+    for &p in &probs {
+        let cfg = ServingConfig {
+            model: "tiny-trained".into(),
+            policy: PolicyKind::TinyServe,
+            budget: 256,
+            max_batch: 4,
+            ..Default::default()
+        };
+        let mut engine = Engine::from_manifest(&manifest, cfg).expect("engine");
+        let trace = generate_trace(&TraceConfig {
+            n_requests,
+            session_reuse_prob: p,
+            n_sessions: 6,
+            prompt_chars: (200, 400),
+            new_tokens: (6, 14),
+            ..Default::default()
+        });
+        let opts = ServeOptions { n_workers: 4, ..Default::default() };
+        let mut plugins = Pipeline::new();
+        let r = serve_trace(&mut engine, &trace, &opts, &mut plugins).expect("serve");
+        let mut m = r.metrics;
+        reuse_col.push(r.session_stats.reuse_rate());
+        ttft_col.push(m.request_ttft.p50() * 1e3);
+        mig_col.push(r.session_stats.migrations as f64);
+        println!(
+            "p={p}: reuse {:.0}%  reused tokens {}  p50 ttft {:.0} ms  migrations {}",
+            r.session_stats.reuse_rate() * 100.0,
+            r.session_stats.reused_tokens,
+            m.request_ttft.p50() * 1e3,
+            r.session_stats.migrations,
+        );
+    }
+    s.columns.push(("reuse_rate".into(), reuse_col));
+    s.columns.push(("p50_ttft_ms".into(), ttft_col));
+    s.columns.push(("migrations".into(), mig_col));
+    s.emit(&tinyserve::results_dir(), "fig3_sessions");
+
+    // migration overhead vs session size (tokens): measured store+restore
+    let mut t = Table::new(
+        "Figure 3b: snapshot/migration cost vs session size",
+        &["session tokens", "snapshot ms", "restore ms", "migrated MB"],
+    );
+    use tinyserve::kvcache::{PagePool, SeqCache};
+    use tinyserve::util::rng::Rng;
+    let mut rng = Rng::new(3);
+    for tokens in [128usize, 512, 2048, 8192] {
+        let mut pool = PagePool::new(4, 128, 16, tinyserve::config::KvDtype::F32);
+        let mut seq = SeqCache::new();
+        let row: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
+        for _ in 0..tokens {
+            let (page, slot) = seq.slot_for_next(&mut pool);
+            for l in 0..4 {
+                pool.write_token(page, slot, l, &row, &row);
+            }
+            seq.commit_token();
+        }
+        let t0 = std::time::Instant::now();
+        let snap = seq.snapshot(&mut pool);
+        let snap_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = std::time::Instant::now();
+        let mut restored = SeqCache::restore(&snap, &mut pool);
+        let restore_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let bytes = tokens * 128 * 2 * 4 * 4;
+        t.row(vec![
+            format!("{tokens}"),
+            format!("{snap_ms:.3}"),
+            format!("{restore_ms:.3}"),
+            format!("{:.2}", bytes as f64 / 1e6),
+        ]);
+        restored.clear(&mut pool);
+        let mut snap = snap;
+        snap.clear(&mut pool);
+        seq.clear(&mut pool);
+    }
+    t.emit(&tinyserve::results_dir(), "fig3_migration");
+}

@@ -1,0 +1,57 @@
+//! Figure 5 — decode speedup vs FullCache across context lengths and
+//! models (measured), the paper's headline 2.1-3.4x curve.
+
+use tinyserve::config::KvDtype;
+use tinyserve::harness::{measure_decode, scale};
+use tinyserve::report::Series;
+use tinyserve::runtime::Manifest;
+use tinyserve::sparsity::PolicyKind;
+
+fn main() {
+    let manifest = Manifest::load(&tinyserve::artifacts_dir()).expect("artifacts");
+    let steps = scale(16);
+    let quick = tinyserve::harness::quick();
+    let models: &[(&str, usize)] = if quick {
+        &[("tiny-trained", 256)]
+    } else {
+        &[
+            ("tiny-trained", 256),
+            ("tinyllama-125m-sim", 512),
+            ("gpt2-345m-sim", 512),
+        ]
+    };
+    let ctxs: &[usize] = if quick { &[512, 2048] } else { &[512, 1024, 2048, 4096] };
+
+    let mut s = Series::new("Figure 5: speedup vs FullCache over context", "ctx");
+    s.x = ctxs.iter().map(|&c| c as f64).collect();
+    for &(model, budget) in models {
+        let info = manifest.model(model).expect("model");
+        let max_budget = *info.budget_variants().last().unwrap();
+        let mut col = Vec::new();
+        for &ctx in ctxs {
+            let ctx = ctx.min(max_budget); // FullCache budget must cover ctx
+            let full_budget = tinyserve::harness::fullcache_budget(info, ctx);
+            let full = measure_decode(
+                &manifest, model, PolicyKind::FullCache, ctx, full_budget, 1,
+                steps, KvDtype::F32,
+            );
+            let sel = measure_decode(
+                &manifest, model, PolicyKind::TinyServe, ctx,
+                budget.min(max_budget), 1, steps, KvDtype::F32,
+            );
+            match (full, sel) {
+                (Ok(f), Ok(t)) => {
+                    let sp = f.ms_per_token / t.ms_per_token;
+                    println!(
+                        "{model} ctx {ctx}: full {:.2} ms, tinyserve {:.2} ms -> {sp:.2}x",
+                        f.ms_per_token, t.ms_per_token
+                    );
+                    col.push(sp);
+                }
+                _ => col.push(f64::NAN),
+            }
+        }
+        s.columns.push((model.to_string(), col));
+    }
+    s.emit(&tinyserve::results_dir(), "fig5_speedup");
+}

@@ -1,0 +1,95 @@
+//! Microbenchmarks of the L3 hot paths (the §Perf targets in
+//! EXPERIMENTS.md): page scoring scan, top-k select, gather+dequant,
+//! metadata update, and sampling.
+
+use tinyserve::config::KvDtype;
+use tinyserve::kvcache::{PagePool, SeqCache};
+use tinyserve::sparsity::{score_page, top_k_indices};
+use tinyserve::util::benchkit::Bench;
+use tinyserve::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("microbench");
+    let mut rng = Rng::new(1);
+
+    // ---- page scoring: P pages x d channels (tau_meta * P term) ----
+    for (p, d) in [(256usize, 128usize), (2048, 128), (2048, 640)] {
+        let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let metas: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..2 * d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut sink = 0.0f32;
+        b.run_with_items(&format!("score/P{p}_d{d}"), p as f64, || {
+            for m in &metas {
+                sink += score_page(&q, m);
+            }
+        });
+        std::hint::black_box(sink);
+    }
+
+    // ---- top-k over P scores ----
+    for p in [256usize, 2048] {
+        let scores: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+        let k = p * 3 / 10;
+        b.run(&format!("topk/P{p}_k{k}"), || {
+            std::hint::black_box(top_k_indices(&scores, k));
+        });
+    }
+
+    // ---- gather + dequant: K pages of S=16 tokens (tau_hb * K*S term) ----
+    for dt in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+        let d_kv = 128;
+        let s = 16;
+        let mut pool = PagePool::new(1, d_kv, s, dt);
+        let mut seq = SeqCache::new();
+        let row: Vec<f32> = (0..d_kv).map(|_| rng.normal() as f32).collect();
+        for _ in 0..128 * s {
+            let (page, slot) = seq.slot_for_next(&mut pool);
+            pool.write_token(page, slot, 0, &row, &row);
+            seq.commit_token();
+        }
+        let mut kdst = vec![0.0f32; 128 * s * d_kv];
+        let mut vdst = vec![0.0f32; 128 * s * d_kv];
+        let bytes = 128 * s * d_kv * 2 * 4;
+        b.run_with_items(&format!("gather/{dt:?}_128pages"), bytes as f64, || {
+            for (i, e) in seq.pages.iter().enumerate() {
+                let off = i * s * d_kv;
+                pool.gather_rows(
+                    e.id,
+                    0,
+                    s,
+                    &mut kdst[off..off + s * d_kv],
+                    &mut vdst[off..off + s * d_kv],
+                );
+            }
+        });
+        std::hint::black_box((&kdst, &vdst));
+    }
+
+    // ---- metadata update (per-token append cost) ----
+    {
+        let d_kv = 128;
+        let mut pool = PagePool::new(1, d_kv, 16, KvDtype::F32);
+        let mut seq = SeqCache::new();
+        let row: Vec<f32> = (0..d_kv).map(|_| rng.normal() as f32).collect();
+        b.run("append/write_token_d128", || {
+            let (page, slot) = seq.slot_for_next(&mut pool);
+            pool.write_token(page, slot, 0, &row, &row);
+            seq.commit_token();
+        });
+    }
+
+    // ---- sampling over a vocab-512 logits row ----
+    {
+        let logits: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
+        let mut r2 = Rng::new(2);
+        b.run("sample/greedy_v512", || {
+            std::hint::black_box(tinyserve::engine::sample(
+                &logits,
+                tinyserve::engine::Sampling::Greedy,
+                &mut r2,
+            ));
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,174 @@
+//! Table 2 — ablations: page size S, selection ratio K/P, component
+//! on/off (query-aware scoring vs recency, bounding-box vs exact oracle),
+//! and scale consistency. Measured on the real decode path (345m-sim for
+//! efficiency, matching the paper's ablation base).
+
+use tinyserve::config::KvDtype;
+use tinyserve::config::ServingConfig;
+use tinyserve::engine::{Engine, Sampling};
+use tinyserve::harness::scale;
+use tinyserve::metrics::StepMetrics;
+use tinyserve::report::Table;
+use tinyserve::runtime::Manifest;
+use tinyserve::sparsity::PolicyKind;
+use tinyserve::util::rng::Rng;
+use tinyserve::util::stats::Samples;
+
+const MODEL: &str = "gpt2-345m-sim";
+const CTX: usize = 2048;
+
+struct Row {
+    label: String,
+    ms: f64,
+    std: f64,
+    tok_s: f64,
+    hit: f64,
+    gather_mb: f64,
+}
+
+fn measure(cfg: ServingConfig, policy: PolicyKind, steps: usize) -> anyhow::Result<Row> {
+    let manifest = Manifest::load(&tinyserve::artifacts_dir())?;
+    let mut e = Engine::from_manifest(&manifest, cfg)?;
+    let mut rng = Rng::new(13);
+    let mut seq = e.new_sequence_with_policy(policy);
+    e.synthetic_fill(&mut seq, CTX - 1, &mut rng);
+    seq.tokens.push(1);
+    seq.max_new_tokens = usize::MAX / 2;
+    for _ in 0..3 {
+        let mut m = StepMetrics::default();
+        let mut b = [&mut seq];
+        e.decode_step(&mut b, Sampling::Greedy, &mut rng, &mut m)?;
+    }
+    let mut lat = Samples::new();
+    let mut hit = 0.0;
+    let mut gb = 0.0;
+    for _ in 0..steps {
+        let mut m = StepMetrics::default();
+        let mut b = [&mut seq];
+        e.decode_step(&mut b, Sampling::Greedy, &mut rng, &mut m)?;
+        lat.push(m.step_seconds);
+        hit += m.hit_rate();
+        gb += m.gather_bytes as f64;
+    }
+    e.release(&mut seq);
+    Ok(Row {
+        label: String::new(),
+        ms: lat.mean() * 1e3,
+        std: lat.std() * 1e3,
+        tok_s: 1.0 / lat.mean(),
+        hit: hit / steps as f64 * 100.0,
+        gather_mb: gb / steps as f64 / 1e6,
+    })
+}
+
+fn main() {
+    let steps = scale(20);
+    let mut t = Table::new(
+        "Table 2: ablations (gpt2-345m-sim, ctx 2048)",
+        &["config", "ms/tok", "±", "tok/s", "KV hit %", "gather MB/step"],
+    );
+    let base = || ServingConfig {
+        model: MODEL.into(),
+        budget: 512,
+        max_batch: 1,
+        ..Default::default()
+    };
+
+    // --- component ablation: selection strategy variants ---
+    let components: Vec<(String, ServingConfig, PolicyKind)> = vec![
+        ("Full TinyServe (bbox query-aware)".into(), base(), PolicyKind::TinyServe),
+        ("w/o query-aware (recency only = StreamingLLM)".into(), base(), PolicyKind::StreamingLlm),
+        ("exact scoring (Oracle upper bound)".into(), base(), PolicyKind::Oracle),
+        ("observed-mass (SnapKV)".into(), base(), PolicyKind::SnapKv),
+        ("layer taper (PyramidKV)".into(), base(), PolicyKind::PyramidKv),
+        (
+            "FullCache baseline".into(),
+            ServingConfig { budget: CTX, ..base() },
+            PolicyKind::FullCache,
+        ),
+    ];
+    for (label, mut cfg, p) in components {
+        cfg.policy = p;
+        match measure(cfg, p, steps) {
+            Ok(mut r) => {
+                r.label = label;
+                t.row(vec![
+                    r.label.clone(),
+                    format!("{:.2}", r.ms),
+                    format!("{:.2}", r.std),
+                    format!("{:.1}", r.tok_s),
+                    format!("{:.1}", r.hit),
+                    format!("{:.2}", r.gather_mb),
+                ]);
+            }
+            Err(e) => eprintln!("skip {label}: {e}"),
+        }
+    }
+
+    // --- page size sweep (S) at fixed budget tokens ---
+    for s in [8usize, 16, 32, 64] {
+        let cfg = ServingConfig { page_size: s, ..base() };
+        if let Ok(r) = measure(cfg, PolicyKind::TinyServe, steps) {
+            t.row(vec![
+                format!("page size S={s}"),
+                format!("{:.2}", r.ms),
+                format!("{:.2}", r.std),
+                format!("{:.1}", r.tok_s),
+                format!("{:.1}", r.hit),
+                format!("{:.2}", r.gather_mb),
+            ]);
+        }
+    }
+
+    // --- selection ratio K/P: budget tokens as a fraction of ctx ---
+    for (ratio, budget) in [(0.1, 256usize), (0.25, 512), (0.5, 1024), (1.0, 2048)] {
+        let cfg = ServingConfig { budget, ..base() };
+        if let Ok(r) = measure(cfg, PolicyKind::TinyServe, steps) {
+            t.row(vec![
+                format!("K/P ratio {ratio} (budget {budget})"),
+                format!("{:.2}", r.ms),
+                format!("{:.2}", r.std),
+                format!("{:.1}", r.tok_s),
+                format!("{:.1}", r.hit),
+                format!("{:.2}", r.gather_mb),
+            ]);
+        }
+    }
+
+    // --- KV dtype (the FP16/INT8 executor modes) ---
+    for dt in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+        let cfg = ServingConfig { kv_dtype: dt, ..base() };
+        if let Ok(r) = measure(cfg, PolicyKind::TinyServe, steps) {
+            t.row(vec![
+                format!("kv dtype {dt:?}"),
+                format!("{:.2}", r.ms),
+                format!("{:.2}", r.std),
+                format!("{:.1}", r.tok_s),
+                format!("{:.1}", r.hit),
+                format!("{:.2}", r.gather_mb),
+            ]);
+        }
+    }
+
+    // --- scale consistency (full config across model sizes) ---
+    for model in ["tinyllama-125m-sim", "gpt2-345m-sim", "gpt2-774m-sim"] {
+        let cfg = ServingConfig {
+            model: model.into(),
+            budget: 512,
+            max_batch: 1,
+            ..Default::default()
+        };
+        if let Ok(r) = measure(cfg, PolicyKind::TinyServe, steps) {
+            t.row(vec![
+                format!("scale: {model}"),
+                format!("{:.2}", r.ms),
+                format!("{:.2}", r.std),
+                format!("{:.1}", r.tok_s),
+                format!("{:.1}", r.hit),
+                format!("{:.2}", r.gather_mb),
+            ]);
+        }
+    }
+
+    t.emit(&tinyserve::results_dir(), "table2_ablation");
+}

@@ -1,0 +1,74 @@
+//! Table 4 — per-task accuracy + latency on the trained model: every
+//! retrieval task (the LongBench analogues, DESIGN.md §2) x every policy,
+//! real prefill + greedy decode, exact-match scoring.
+
+use tinyserve::harness::{measure_accuracy, scale};
+use tinyserve::report::Table;
+use tinyserve::runtime::Manifest;
+use tinyserve::sparsity::PolicyKind;
+use tinyserve::workload::tasks::Task;
+
+const MODEL: &str = "tiny-trained";
+const BUDGET: usize = 256;
+const CHARS: usize = 700; // ~45 pages of 16 at byte-level
+
+fn main() {
+    let manifest = Manifest::load(&tinyserve::artifacts_dir()).expect("artifacts");
+    let n = scale(10);
+    let mut t = Table::new(
+        &format!(
+            "Table 4: task accuracy x policy ({MODEL}, ~{CHARS} chars, budget {BUDGET})"
+        ),
+        &[
+            "task", "(LongBench analogue)", "policy", "exact %", "char %",
+            "ms/tok", "KV hit %", "speedup",
+        ],
+    );
+    let policies = [
+        PolicyKind::FullCache,
+        PolicyKind::StreamingLlm,
+        PolicyKind::SoftPrune,
+        PolicyKind::SnapKv,
+        PolicyKind::PyramidKv,
+        PolicyKind::TinyServe,
+        PolicyKind::Oracle,
+    ];
+    for &task in Task::all() {
+        let mut full_ms = f64::NAN;
+        for &policy in &policies {
+            // FullCache: smallest budget covering the whole prompt (fair)
+            let info = manifest.model(MODEL).expect("model");
+            let budget = if policy == PolicyKind::FullCache {
+                tinyserve::harness::fullcache_budget(info, CHARS + 32)
+            } else {
+                BUDGET
+            };
+            match measure_accuracy(
+                &manifest, MODEL, policy, task, n, CHARS, budget, 42,
+            ) {
+                Ok(r) => {
+                    if policy == PolicyKind::FullCache {
+                        full_ms = r.ms_per_token;
+                    }
+                    let speedup = full_ms / r.ms_per_token;
+                    t.row(vec![
+                        task.name().into(),
+                        task.longbench_analogue().into(),
+                        policy.name().into(),
+                        format!("{:.0}", r.exact * 100.0),
+                        format!("{:.0}", r.char_acc * 100.0),
+                        format!("{:.2}", r.ms_per_token),
+                        format!("{:.1}", r.hit_rate * 100.0),
+                        if speedup.is_finite() {
+                            format!("{speedup:.2}x")
+                        } else {
+                            "-".into()
+                        },
+                    ]);
+                }
+                Err(e) => eprintln!("skip {}/{:?}: {e}", task.name(), policy),
+            }
+        }
+    }
+    t.emit(&tinyserve::results_dir(), "table4_tasks");
+}

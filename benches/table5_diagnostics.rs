@@ -1,0 +1,41 @@
+//! Table 5 — serving synthetic diagnostics (paper §4.9): repetition,
+//! rare-token recall and attention aliasing, per policy, on the trained
+//! model. Char-level accuracy gives the paper's 0-100 scale.
+
+use tinyserve::harness::{measure_accuracy, scale};
+use tinyserve::report::Table;
+use tinyserve::runtime::Manifest;
+use tinyserve::sparsity::PolicyKind;
+use tinyserve::workload::tasks::Task;
+
+const MODEL: &str = "tiny-trained";
+
+fn main() {
+    let manifest = Manifest::load(&tinyserve::artifacts_dir()).expect("artifacts");
+    let n = scale(12);
+    let diags = [Task::Repeat, Task::RareToken, Task::Alias];
+    let policies = [
+        PolicyKind::FullCache,
+        PolicyKind::StreamingLlm,
+        PolicyKind::SoftPrune,
+        PolicyKind::TinyServe,
+    ];
+    let mut t = Table::new(
+        &format!("Table 5: serving diagnostics ({MODEL}, n={n} per cell, char acc %)"),
+        &["policy", "Repetition", "Rare Token", "Aliasing"],
+    );
+    for &policy in &policies {
+        let mut cells = vec![policy.name().to_string()];
+        for &task in &diags {
+            match measure_accuracy(&manifest, MODEL, policy, task, n, 600, 256, 7) {
+                Ok(r) => cells.push(format!("{:.1}", r.char_acc * 100.0)),
+                Err(e) => {
+                    eprintln!("skip {:?}/{:?}: {e}", policy, task);
+                    cells.push("-".into());
+                }
+            }
+        }
+        t.row(cells);
+    }
+    t.emit(&tinyserve::results_dir(), "table5_diagnostics");
+}

@@ -1,0 +1,138 @@
+//! Table 6 — plugin/component ablation on the serving stack: full system
+//! vs w/o query router (FullCache), w/o page manager (page_size = budget:
+//! one giant page), w/o session reuse, w/o entropy early-exit, w/o
+//! continuous batching.
+
+use tinyserve::config::ServingConfig;
+use tinyserve::coordinator::batcher::BatcherConfig;
+use tinyserve::coordinator::{serve_trace, ServeOptions};
+use tinyserve::engine::Engine;
+use tinyserve::harness::scale;
+use tinyserve::plugins::{EntropyEarlyExit, Pipeline, RepetitionGuard};
+use tinyserve::report::Table;
+use tinyserve::runtime::Manifest;
+use tinyserve::sparsity::PolicyKind;
+use tinyserve::workload::{generate_trace, TraceConfig};
+
+const MODEL: &str = "tiny-trained";
+
+fn main() {
+    let manifest = Manifest::load(&tinyserve::artifacts_dir()).expect("artifacts");
+    let trace = generate_trace(&TraceConfig {
+        n_requests: scale(32),
+        prompt_chars: (150, 450),
+        new_tokens: (10, 25),
+        session_reuse_prob: 0.4,
+        n_sessions: 6,
+        seed: 11,
+        ..Default::default()
+    });
+
+    let base_cfg = || ServingConfig {
+        model: MODEL.into(),
+        policy: PolicyKind::TinyServe,
+        budget: 256,
+        max_batch: 4,
+        ..Default::default()
+    };
+    let base_opts = || ServeOptions::default();
+
+    struct Variant {
+        name: &'static str,
+        cfg: ServingConfig,
+        opts: ServeOptions,
+        plugins: fn() -> Pipeline,
+    }
+    fn full_plugins() -> Pipeline {
+        let mut p = Pipeline::new();
+        p.push(Box::new(EntropyEarlyExit::new(0.05, 3, 4)));
+        p.push(Box::new(RepetitionGuard { max_run: 12 }));
+        p
+    }
+    fn no_plugins() -> Pipeline {
+        Pipeline::new()
+    }
+
+    let variants = vec![
+        Variant { name: "Full TinyServe", cfg: base_cfg(), opts: base_opts(),
+                  plugins: full_plugins },
+        Variant {
+            name: "w/o Query Router (FullCache)",
+            cfg: ServingConfig { policy: PolicyKind::FullCache, budget: 1024, ..base_cfg() },
+            opts: base_opts(),
+            plugins: full_plugins,
+        },
+        Variant {
+            name: "w/o Page Manager (coarse S=64)",
+            cfg: ServingConfig { page_size: 64, recent_pages: 1, sink_pages: 1, ..base_cfg() },
+            opts: base_opts(),
+            plugins: full_plugins,
+        },
+        Variant {
+            name: "w/o Session Reuse",
+            cfg: base_cfg(),
+            opts: ServeOptions { max_sessions: 0, ..base_opts() },
+            plugins: full_plugins,
+        },
+        Variant {
+            name: "w/o Early-Exit Plugins",
+            cfg: base_cfg(),
+            opts: base_opts(),
+            plugins: no_plugins,
+        },
+        Variant {
+            name: "w/o Continuous Batching (batch=1)",
+            cfg: ServingConfig { max_batch: 1, ..base_cfg() },
+            opts: ServeOptions {
+                batcher: BatcherConfig {
+                    max_active: 1,
+                    batch_timeout_s: 0.05,
+                    prefill_per_round: 1,
+                },
+                ..base_opts()
+            },
+            plugins: full_plugins,
+        },
+    ];
+
+    let mut t = Table::new(
+        &format!("Table 6: system component ablation ({MODEL})"),
+        &[
+            "configuration", "P50 e2e ms", "tok/s", "ms/tok", "KV hit %",
+            "acc %", "mem MB peak", "session reuse %",
+        ],
+    );
+    for v in variants {
+        let mut engine = match Engine::from_manifest(&manifest, v.cfg.clone()) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("skip {}: {e}", v.name);
+                continue;
+            }
+        };
+        let mut plugins = (v.plugins)();
+        match serve_trace(&mut engine, &trace, &v.opts, &mut plugins) {
+            Ok(r) => {
+                let mut m = r.metrics;
+                t.row(vec![
+                    v.name.into(),
+                    format!("{:.0}", m.request_e2e.p50() * 1e3),
+                    format!("{:.1}", m.throughput_tps()),
+                    format!("{:.2}", m.ms_per_token()),
+                    format!("{:.1}", m.hit_rate.mean() * 100.0),
+                    format!("{:.1}", r.accuracy * 100.0),
+                    format!(
+                        "{:.1}",
+                        engine.pool.peak_pages as f64
+                            * engine.cfg.page_size as f64
+                            * engine.d_kv as f64
+                            * 2.0 * 4.0 * engine.n_layer as f64 / 1e6
+                    ),
+                    format!("{:.0}", r.session_stats.reuse_rate() * 100.0),
+                ]);
+            }
+            Err(e) => eprintln!("serve {} failed: {e}", v.name),
+        }
+    }
+    t.emit(&tinyserve::results_dir(), "table6_plugins");
+}

@@ -1,0 +1,108 @@
+//! Table 7 — KV page size sweep: latency, perplexity and hit rate vs S
+//! (paper: S in {4..64}, larger pages are faster to scan but less precise).
+
+use tinyserve::config::ServingConfig;
+use tinyserve::harness::{measure_ppl, scale};
+use tinyserve::report::Table;
+use tinyserve::runtime::Manifest;
+use tinyserve::sparsity::PolicyKind;
+
+const MODEL: &str = "tiny-trained";
+const CTX: usize = 2048;
+const BUDGET: usize = 256;
+
+fn main() {
+    let manifest = Manifest::load(&tinyserve::artifacts_dir()).expect("artifacts");
+    let steps = scale(20);
+    let n_docs = scale(6);
+    let mut t = Table::new(
+        &format!("Table 7: page size sweep ({MODEL}, ctx {CTX}, budget {BUDGET})"),
+        &["S", "ms/tok", "±", "PPL", "KV hit %", "score ms", "gather MB/step"],
+    );
+    for s in [4usize, 8, 16, 32, 64] {
+        if BUDGET % s != 0 {
+            continue;
+        }
+        let lat = measure_decode_with_pagesize(&manifest, s, steps);
+        let ppl = measure_ppl(&manifest, MODEL, PolicyKind::TinyServe, s, BUDGET, n_docs, 500);
+        match (lat, ppl) {
+            (Ok(r), Ok(p)) => {
+                t.row(vec![
+                    format!("{s}"),
+                    format!("{:.2}", r.ms_per_token),
+                    format!("{:.2}", r.ms_std),
+                    format!("{p:.3}"),
+                    format!("{:.1}", r.hit_rate * 100.0),
+                    format!("{:.3}", r.score_ms),
+                    format!("{:.2}", r.gather_bytes_per_step / 1e6),
+                ]);
+            }
+            (l, p) => eprintln!("skip S={s}: lat={:?} ppl={:?}", l.is_ok(), p.is_ok()),
+        }
+    }
+    t.emit(&tinyserve::results_dir(), "table7_pagesize");
+}
+
+fn measure_decode_with_pagesize(
+    manifest: &tinyserve::runtime::Manifest,
+    page_size: usize,
+    steps: usize,
+) -> anyhow::Result<tinyserve::harness::DecodeMeasurement> {
+    use tinyserve::engine::{Engine, Sampling};
+    use tinyserve::metrics::StepMetrics;
+    use tinyserve::util::rng::Rng;
+    use tinyserve::util::stats::Samples;
+    let cfg = ServingConfig {
+        model: MODEL.into(),
+        policy: PolicyKind::TinyServe,
+        budget: BUDGET,
+        page_size,
+        max_batch: 1,
+        ..Default::default()
+    };
+    let mut e = Engine::from_manifest(manifest, cfg)?;
+    let mut rng = Rng::new(5);
+    let mut seq = e.new_sequence();
+    e.synthetic_fill(&mut seq, CTX - 1, &mut rng);
+    seq.tokens.push(1);
+    seq.max_new_tokens = usize::MAX / 2;
+    for _ in 0..3 {
+        let mut m = StepMetrics::default();
+        let mut b = [&mut seq];
+        e.decode_step(&mut b, Sampling::Greedy, &mut rng, &mut m)?;
+    }
+    let mut lat = Samples::new();
+    let mut agg = StepMetrics::default();
+    for _ in 0..steps {
+        let mut m = StepMetrics::default();
+        let mut b = [&mut seq];
+        e.decode_step(&mut b, Sampling::Greedy, &mut rng, &mut m)?;
+        lat.push(m.step_seconds);
+        agg.gather_bytes += m.gather_bytes;
+        agg.pages_selected += m.pages_selected;
+        agg.pages_reused += m.pages_reused;
+        agg.score_seconds += m.score_seconds;
+        agg.step_seconds += m.step_seconds;
+    }
+    let pool_bytes = e.pool.bytes_in_use();
+    e.release(&mut seq);
+    Ok(tinyserve::harness::DecodeMeasurement {
+        model: MODEL.into(),
+        policy: PolicyKind::TinyServe,
+        ctx: CTX,
+        budget: BUDGET,
+        batch: 1,
+        ms_per_token: lat.mean() * 1e3,
+        ms_std: lat.std() * 1e3,
+        tokens_per_s: 1.0 / lat.mean(),
+        hit_rate: agg.pages_reused as f64 / agg.pages_selected.max(1) as f64,
+        gather_gb_per_s: 0.0,
+        gather_bytes_per_step: agg.gather_bytes as f64 / steps as f64,
+        score_ms: agg.score_seconds / steps as f64 * 1e3,
+        gather_ms: 0.0,
+        exec_ms: 0.0,
+        pool_bytes,
+        trace_bytes: vec![],
+        trace_hit: vec![],
+    })
+}

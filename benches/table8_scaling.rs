@@ -1,0 +1,99 @@
+//! Table 8 — multi-GPU throughput scaling (1..8 workers). The box has one
+//! core, so absolute scaling comes from the calibrated hardware model fed
+//! with the *measured* single-worker service rate; the router/migration
+//! logic is exercised for real via virtual workers in the serving loop.
+
+use tinyserve::config::{KvDtype, ServingConfig};
+use tinyserve::coordinator::{serve_trace, ServeOptions};
+use tinyserve::engine::Engine;
+use tinyserve::harness::{measure_decode, scale};
+use tinyserve::hwmodel::{HwModel, Shape};
+use tinyserve::plugins::Pipeline;
+use tinyserve::report::Table;
+use tinyserve::runtime::Manifest;
+use tinyserve::sparsity::PolicyKind;
+use tinyserve::workload::{generate_trace, TraceConfig};
+
+const MODEL: &str = "gpt2-345m-sim";
+
+fn main() {
+    let manifest = Manifest::load(&tinyserve::artifacts_dir()).expect("artifacts");
+    let info = manifest.model(MODEL).expect("model").clone();
+
+    // measured single-engine service rate (batch = largest variant)
+    let batch = *info.batch_variants("qkv").last().unwrap();
+    let base = measure_decode(
+        &manifest,
+        MODEL,
+        PolicyKind::TinyServe,
+        2048,
+        2048,
+        batch,
+        scale(16),
+        KvDtype::F32,
+    )
+    .expect("base measurement");
+    println!(
+        "measured single-worker rate: {:.1} tok/s (batch {batch})",
+        base.tokens_per_s
+    );
+
+    let hw = HwModel::a100();
+    let shape = Shape {
+        d_model: info.d_model,
+        n_layer: info.n_layer,
+        n_params: info.n_params,
+        ctx: 16384,
+        page_size: 16,
+        k_pages: 128,
+        kv_dtype: KvDtype::F16,
+        batch,
+    };
+
+    let mut t = Table::new(
+        &format!("Table 8: multi-GPU scaling ({MODEL}, measured base + hw model)"),
+        &["#GPUs", "tok/ms", "speedup", "efficiency %", "router migrations"],
+    );
+    // efficiency is evaluated at the A100-projected service rate (the CPU
+    // base rate is so slow that coordination cost vanishes; the projected
+    // rate exposes it, which is what Table 8 reports); the tok/ms column
+    // scales the *measured* base by that efficiency.
+    let proj_rate = 1e3 / hw.decode_token_ms(&shape) * shape.batch as f64;
+    for n in [1usize, 2, 4, 8] {
+        let eff = hw.multi_gpu_efficiency(&shape, proj_rate, n);
+        let thr = base.tokens_per_s * n as f64 * eff;
+        // run the real router with n virtual workers to count migrations
+        let cfg = ServingConfig {
+            model: "tiny-trained".into(),
+            policy: PolicyKind::TinyServe,
+            budget: 256,
+            max_batch: 4,
+            ..Default::default()
+        };
+        let migrations = Engine::from_manifest(&manifest, cfg)
+            .ok()
+            .and_then(|mut e| {
+                let trace = generate_trace(&TraceConfig {
+                    n_requests: scale(24),
+                    session_reuse_prob: 0.5,
+                    n_sessions: 6,
+                    prompt_chars: (100, 250),
+                    new_tokens: (4, 10),
+                    ..Default::default()
+                });
+                let opts = ServeOptions { n_workers: n, ..Default::default() };
+                let mut plugins = Pipeline::new();
+                serve_trace(&mut e, &trace, &opts, &mut plugins).ok()
+            })
+            .map(|r| r.session_stats.migrations)
+            .unwrap_or(0);
+        t.row(vec![
+            format!("{n}"),
+            format!("{:.3}", thr / 1e3),
+            format!("{:.2}x", thr / base.tokens_per_s.max(1e-9)),
+            format!("{:.1}", eff * 100.0),
+            format!("{migrations}"),
+        ]);
+    }
+    t.emit(&tinyserve::results_dir(), "table8_scaling");
+}

@@ -1,0 +1,194 @@
+//! Regenerate the remaining paper figures' DATA (F1, F4, F6, F7) and the
+//! §3.6 memory-model curves; tables T1-T8 + F3/F5 live in `benches/` (run
+//! `cargo bench`, or `make bench`). CSVs land in results/.
+//!
+//!     cargo run --release --example paper_tables            # all figures
+//!     cargo run --release --example paper_tables -- f7      # one figure
+
+use anyhow::Result;
+
+use tinyserve::config::{KvDtype, ServingConfig};
+use tinyserve::engine::{Engine, Sampling};
+use tinyserve::harness::{measure_decode, scale};
+use tinyserve::hwmodel::HwModel;
+use tinyserve::metrics::StepMetrics;
+use tinyserve::report::{Series, Table};
+use tinyserve::runtime::Manifest;
+use tinyserve::sparsity::{PolicyKind, SelectCtx};
+use tinyserve::util::cli::Args;
+use tinyserve::util::rng::Rng;
+
+const MODEL: &str = "tiny-trained";
+
+/// F1 — motivation heatmap data: page relevance scores for a set of
+/// consecutive decode-step queries (shows the selected set shifting).
+fn fig1(manifest: &Manifest) -> Result<()> {
+    let cfg = ServingConfig {
+        model: MODEL.into(),
+        policy: PolicyKind::TinyServe,
+        budget: 256,
+        max_batch: 1,
+        ..Default::default()
+    };
+    let mut engine = Engine::from_manifest(manifest, cfg)?;
+    let mut rng = Rng::new(3);
+    let mut seq = engine.new_sequence();
+    engine.synthetic_fill(&mut seq, 511, &mut rng);
+    seq.tokens.push(1);
+    seq.max_new_tokens = usize::MAX / 2;
+
+    let n_pages = seq.cache.n_pages();
+    let mut t = Table::new(
+        "Figure 1: per-step page scores (query-dependence of relevance)",
+        &["step", "page", "score", "selected"],
+    );
+    for step in 0..scale(12) {
+        // run one step; afterwards recompute layer-0 scores for the trace
+        let mut m = StepMetrics::default();
+        {
+            let mut b = [&mut seq];
+            engine.decode_step(&mut b, Sampling::Greedy, &mut rng, &mut m)?;
+        }
+        // score pages with a probe query derived from the step (the engine
+        // consumed the real q; we reuse metadata + a fresh probe to expose
+        // the score structure)
+        let d = engine.d_kv;
+        let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut policy = tinyserve::sparsity::make_policy(PolicyKind::TinyServe);
+        let ctx = SelectCtx {
+            layer: 0,
+            n_layers: engine.n_layer,
+            q: &q,
+            pool: &engine.pool,
+            seq: &seq.cache,
+            budget_pages: 16,
+            sink_pages: 1,
+            recent_pages: 2,
+            last_entropy: f32::NAN,
+        };
+        let mut sel = Vec::new();
+        policy.select_into(&ctx, &mut sel);
+        for p in 0..n_pages.min(seq.cache.n_pages()) {
+            let score = tinyserve::sparsity::score_page(
+                &q,
+                engine.pool.meta(seq.cache.pages[p].id, 0),
+            );
+            t.row(vec![
+                format!("{step}"),
+                format!("{p}"),
+                format!("{score:.3}"),
+                format!("{}", sel.contains(&p) as u8),
+            ]);
+        }
+    }
+    engine.release(&mut seq);
+    t.emit(&tinyserve::results_dir(), "fig1_query_scores");
+    Ok(())
+}
+
+/// F4 — radar data: normalized accuracy / latency / throughput / hit rate
+/// per policy (reads table4 results if present, else measures quickly).
+fn fig4(manifest: &Manifest) -> Result<()> {
+    let mut t = Table::new(
+        "Figure 4: radar axes per policy (tiny-trained)",
+        &["policy", "ms/tok", "tok/s", "KV hit %", "gather MB/step"],
+    );
+    for &policy in PolicyKind::all() {
+        let budget = if policy == PolicyKind::FullCache { 4096 } else { 256 };
+        match measure_decode(
+            manifest, MODEL, policy, 1024, budget, 1, scale(12), KvDtype::F32,
+        ) {
+            Ok(r) => {
+                t.row(vec![
+                    policy.name().into(),
+                    format!("{:.2}", r.ms_per_token),
+                    format!("{:.1}", r.tokens_per_s),
+                    format!("{:.1}", r.hit_rate * 100.0),
+                    format!("{:.2}", r.gather_bytes_per_step / 1e6),
+                ]);
+            }
+            Err(e) => eprintln!("skip {policy:?}: {e}"),
+        }
+    }
+    t.emit(&tinyserve::results_dir(), "fig4_radar");
+    Ok(())
+}
+
+/// F6/F7 — KV reuse + bandwidth traces over decode steps per strategy.
+fn fig67(manifest: &Manifest) -> Result<()> {
+    let steps = scale(48);
+    let policies = [
+        PolicyKind::FullCache,
+        PolicyKind::StreamingLlm,
+        PolicyKind::TinyServe,
+    ];
+    let mut hit = Series::new("Figure 6: KV page reuse over decode steps", "step");
+    let mut bw = Series::new(
+        "Figure 7: gather traffic per decode step (HBM analogue)",
+        "step",
+    );
+    hit.x = (0..steps).map(|i| i as f64).collect();
+    bw.x = hit.x.clone();
+    for &p in &policies {
+        let budget = if p == PolicyKind::FullCache { 4096 } else { 256 };
+        let r = measure_decode(manifest, MODEL, p, 2048, budget, 1, steps, KvDtype::F32)?;
+        hit.columns.push((p.name().to_string(), r.trace_hit.clone()));
+        bw.columns.push((
+            p.name().to_string(),
+            r.trace_bytes.iter().map(|b| b / 1e6).collect(),
+        ));
+        println!(
+            "{}: mean gather {:.2} MB/step, hit {:.0}%",
+            p.name(),
+            r.gather_bytes_per_step / 1e6,
+            r.hit_rate * 100.0
+        );
+    }
+    hit.emit(&tinyserve::results_dir(), "fig6_kv_reuse");
+    bw.emit(&tinyserve::results_dir(), "fig7_bandwidth");
+    Ok(())
+}
+
+/// §3.6 memory model curves: memory fraction vs page size and the optimal
+/// S* = sqrt(L/K) prediction.
+fn memmodel() -> Result<()> {
+    let mut s = Series::new("§3.6 memory fraction vs page size (L=32K, K=0.3P)", "S");
+    let l = 32768usize;
+    let sizes = [4usize, 8, 16, 32, 64, 128];
+    s.x = sizes.iter().map(|&x| x as f64).collect();
+    for rho in [0.2, 0.35, 0.6] {
+        let col: Vec<f64> = sizes
+            .iter()
+            .map(|&sz| {
+                let k = (0.3 * (l / sz) as f64) as usize;
+                HwModel::memory_fraction(l, sz, k, rho)
+            })
+            .collect();
+        s.columns.push((format!("rho={rho}"), col));
+    }
+    s.emit(&tinyserve::results_dir(), "memmodel_fraction");
+    println!(
+        "optimal S* for L=32K, K=614: {:.1}",
+        HwModel::optimal_page_size(32768, 614)
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let manifest = Manifest::load(&tinyserve::artifacts_dir())?;
+    let which = args.subcommand().unwrap_or("all");
+    if matches!(which, "all" | "f1") {
+        fig1(&manifest)?;
+    }
+    if matches!(which, "all" | "f4") {
+        fig4(&manifest)?;
+    }
+    if matches!(which, "all" | "f6" | "f7") {
+        fig67(&manifest)?;
+    }
+    if matches!(which, "all" | "mem") {
+        memmodel()?;
+    }
+    Ok(())
+}

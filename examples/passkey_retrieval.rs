@@ -1,0 +1,101 @@
+//! Passkey retrieval under cache pressure: sweep the needle position and
+//! KV budget, compare selection policies. This is the experiment that
+//! motivates query-aware selection (paper Fig. 1): StreamingLLM loses the
+//! needle once it leaves the window, TinyServe retrieves it from anywhere.
+//!
+//!     cargo run --release --example passkey_retrieval -- --n 8
+
+use anyhow::Result;
+
+use tinyserve::config::ServingConfig;
+use tinyserve::engine::{Engine, Sampling};
+use tinyserve::metrics::StepMetrics;
+use tinyserve::report::Table;
+use tinyserve::sparsity::PolicyKind;
+use tinyserve::util::cli::Args;
+use tinyserve::util::rng::Rng;
+use tinyserve::workload::tasks;
+
+/// Passkey at a controlled depth: 0.0 = start of context, 1.0 = end.
+fn doc_at_depth(rng: &mut Rng, total_chars: usize, depth: f64) -> tasks::Doc {
+    let base = tasks::passkey_doc(rng, total_chars);
+    // passkey_doc puts the needle at the start; re-embed it at `depth`
+    let needle_end = base.prompt.find(". Remember it. ").unwrap() + 15;
+    let needle = &base.prompt[..needle_end];
+    let rest = &base.prompt[needle_end..];
+    let tail_q = "What is the pass key? Answer: ";
+    let body = &rest[..rest.len() - tail_q.len()];
+    let cut = ((body.len() as f64) * depth) as usize;
+    tasks::Doc {
+        prompt: format!("{}{}{}{}", &body[..cut], needle, &body[cut..], tail_q),
+        answer: base.answer,
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let n = args.usize_or("n", 6);
+    let chars = args.usize_or("chars", 800);
+    let budget = args.usize_or("budget", 256);
+    let model = args.str_or("model", "tiny-trained");
+
+    let policies = [
+        PolicyKind::FullCache,
+        PolicyKind::StreamingLlm,
+        PolicyKind::TinyServe,
+        PolicyKind::Oracle,
+    ];
+    let depths = [0.0, 0.25, 0.5, 0.75];
+
+    let mut t = Table::new(
+        &format!("passkey retrieval: needle depth x policy (budget {budget}, ~{chars} chars)"),
+        &["depth", "policy", "exact %", "char %", "ms/tok"],
+    );
+    for &depth in &depths {
+        for &policy in &policies {
+            let b = if policy == PolicyKind::FullCache { 4096 } else { budget };
+            let cfg = ServingConfig {
+                model: model.clone(),
+                policy,
+                budget: b,
+                max_batch: 1,
+                ..Default::default()
+            };
+            let mut engine = Engine::new(&tinyserve::artifacts_dir(), cfg)?;
+            let mut task_rng = Rng::new(1234);
+            let mut rng = Rng::new(5);
+            let mut exact = 0usize;
+            let mut chacc = 0.0;
+            let mut ms = 0.0;
+            let mut steps = 0usize;
+            for _ in 0..n {
+                let doc = doc_at_depth(&mut task_rng, chars, depth);
+                let mut seq = engine.new_sequence_with_policy(policy);
+                seq.tokens = tasks::encode_prompt(&doc.prompt);
+                seq.max_new_tokens = doc.answer.len() + 3;
+                let mut m = StepMetrics::default();
+                engine.prefill(&mut seq, &mut m)?;
+                while !seq.finished {
+                    let mut m = StepMetrics::default();
+                    let mut batch = [&mut seq];
+                    engine.decode_step(&mut batch, Sampling::Greedy, &mut rng, &mut m)?;
+                    ms += m.step_seconds * 1e3;
+                    steps += 1;
+                }
+                let gen = tasks::decode_ids(seq.generated_tokens());
+                exact += tasks::answer_matches(&doc, &gen) as usize;
+                chacc += tasks::answer_char_accuracy(&doc, &gen);
+                engine.release(&mut seq);
+            }
+            t.row(vec![
+                format!("{depth:.2}"),
+                policy.name().into(),
+                format!("{:.0}", exact as f64 / n as f64 * 100.0),
+                format!("{:.0}", chacc / n as f64 * 100.0),
+                format!("{:.2}", ms / steps.max(1) as f64),
+            ]);
+        }
+    }
+    t.emit(&tinyserve::results_dir(), "passkey_retrieval");
+    Ok(())
+}

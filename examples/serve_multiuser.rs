@@ -1,0 +1,94 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): serve a realistic multi-user
+//! Poisson workload against the trained tiny model through the full stack —
+//! router -> continuous batcher -> session store -> query-aware engine ->
+//! PJRT executables — and report latency percentiles, throughput and
+//! exact-match accuracy.
+//!
+//!     cargo run --release --example serve_multiuser -- \
+//!         --requests 64 --policy tinyserve --budget 256 --batch 4
+
+use anyhow::Result;
+
+use tinyserve::config::ServingConfig;
+use tinyserve::coordinator::{serve_trace, ServeOptions};
+use tinyserve::engine::Engine;
+use tinyserve::plugins::{EntropyEarlyExit, Pipeline, RepetitionGuard};
+use tinyserve::report::Table;
+use tinyserve::sparsity::PolicyKind;
+use tinyserve::util::cli::Args;
+use tinyserve::workload::{generate_trace, TraceConfig};
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let policy = PolicyKind::parse(&args.str_or("policy", "tinyserve"))
+        .expect("bad --policy");
+    let cfg = ServingConfig {
+        model: args.str_or("model", "tiny-trained"),
+        policy,
+        budget: args.usize_or("budget", 256),
+        max_batch: args.usize_or("batch", 4),
+        ..Default::default()
+    };
+    let trace_cfg = TraceConfig {
+        n_requests: args.usize_or("requests", 64),
+        mean_interarrival_s: args.f64_or("interarrival-ms", 50.0) / 1e3,
+        prompt_chars: (200, 600),
+        new_tokens: (10, 30),
+        session_reuse_prob: args.f64_or("session-prob", 0.35),
+        n_sessions: args.usize_or("sessions", 8),
+        seed: args.usize_or("seed", 42) as u64,
+    };
+
+    println!(
+        "== multi-user serving: {} requests, model {}, policy {}, budget {} ==",
+        trace_cfg.n_requests, cfg.model, policy.name(), cfg.budget
+    );
+    let mut engine = Engine::new(&tinyserve::artifacts_dir(), cfg)?;
+    engine.warmup()?;
+    let trace = generate_trace(&trace_cfg);
+    let opts = ServeOptions {
+        n_workers: args.usize_or("workers", 4),
+        collect_traces: true,
+        ..Default::default()
+    };
+    let mut plugins = Pipeline::new();
+    plugins.push(Box::new(EntropyEarlyExit::new(0.05, 3, 4)));
+    plugins.push(Box::new(RepetitionGuard { max_run: 16 }));
+
+    let t0 = std::time::Instant::now();
+    let r = serve_trace(&mut engine, &trace, &opts, &mut plugins)?;
+    let real = t0.elapsed().as_secs_f64();
+    let mut m = r.metrics;
+
+    let mut t = Table::new("serve_multiuser report", &["metric", "value"]);
+    let rows: Vec<(&str, String)> = vec![
+        ("requests completed", format!("{}", m.total_requests)),
+        ("virtual wall clock", format!("{:.2} s", r.wall_s)),
+        ("real compute time", format!("{real:.2} s")),
+        ("engine busy", format!("{:.0} %", r.busy_frac * 100.0)),
+        ("throughput", format!("{:.1} tok/s", m.throughput_tps())),
+        ("request rate", format!("{:.2} req/s", m.requests_per_sec())),
+        ("decode latency", format!("{:.2} ms/token", m.ms_per_token())),
+        ("e2e latency p50", format!("{:.0} ms", m.request_e2e.p50() * 1e3)),
+        ("e2e latency p99", format!("{:.0} ms", m.request_e2e.p99() * 1e3)),
+        ("ttft p50", format!("{:.0} ms", m.request_ttft.p50() * 1e3)),
+        ("kv page hit rate", format!("{:.1} %", m.hit_rate.mean() * 100.0)),
+        ("exact-match accuracy", format!("{:.1} %", r.accuracy * 100.0)),
+        ("char accuracy", format!("{:.1} %", r.char_accuracy * 100.0)),
+        ("session reuse rate", format!("{:.0} %", r.session_stats.reuse_rate() * 100.0)),
+        ("reused prefix tokens", format!("{}", r.session_stats.reused_tokens)),
+        ("session migrations", format!("{}", r.session_stats.migrations)),
+        ("batcher max queue", format!("{}", r.batcher_stats.max_queue_depth)),
+        ("peak KV pages", format!("{}", engine.pool.peak_pages)),
+    ];
+    for (k, v) in rows {
+        t.row(vec![k.into(), v]);
+    }
+    t.emit(&tinyserve::results_dir(), "serve_multiuser");
+
+    println!("\nper-task accuracy:");
+    for (task, acc, n) in &r.per_task {
+        println!("  {task:10} {:.0}%  (n={n})", acc * 100.0);
+    }
+    Ok(())
+}

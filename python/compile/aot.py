@@ -1,0 +1,321 @@
+"""AOT exporter: lowers every model executable to HLO *text* artifacts.
+
+Interchange is HLO text, never serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 (the version the
+published `xla` 0.1.6 crate links) rejects; the text parser reassigns ids.
+
+Outputs under artifacts/:
+    manifest.json               everything the Rust runtime needs: model
+                                configs, parameter order/shapes, and one
+                                entry per executable variant with its input
+                                and output specs.
+    <model>.weights.bin         tensorfile with all parameters (trained for
+                                tiny-trained, seeded random for the -sim
+                                scale family).
+    hlo/<model>/<kind>_...txt   HLO text per executable variant.
+    golden.json                 fixed-seed reference vectors replayed by
+                                rust/tests (page scoring, top-k, f16, attn).
+
+Usage: python -m compile.aot --out ../artifacts [--models a,b] [--golden-only]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, tensorfile
+from .configs import CONFIGS, ModelConfig
+from .kernels import ref
+
+F32, I32 = "f32", "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _st(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_variant(fn, arg_shapes):
+    args = [_st(s["shape"], jnp.int32 if s["dtype"] == I32 else jnp.float32)
+            for s in arg_shapes]
+    # keep_unused: the Rust runtime passes every manifest-listed parameter,
+    # so jit must not drop args the graph doesn't consume (e.g. lnf in
+    # prefill, which never computes logits).
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+
+
+def weight_specs(cfg: ModelConfig):
+    shapes = model.param_shapes(cfg)
+    return [dict(name=n, **spec(shapes[n])) for n in model.param_names(cfg)]
+
+
+def export_model(cfg: ModelConfig, out_dir: str, quick: bool = False):
+    """Lower all executable variants for one model config."""
+    hlo_dir = os.path.join(out_dir, "hlo", cfg.name)
+    os.makedirs(hlo_dir, exist_ok=True)
+    H, hd, d, L, V = cfg.n_head, cfg.head_dim, cfg.d_model, cfg.n_layer, cfg.vocab
+    wspecs = weight_specs(cfg)
+    entries = []
+
+    def emit(kind, fn, params_used, data_inputs, outputs, tag, **attrs):
+        path = os.path.join("hlo", cfg.name, tag + ".hlo.txt")
+        full = os.path.join(out_dir, path)
+        arg_shapes = [dict(s) for s in params_used] + list(data_inputs)
+        t0 = time.time()
+        text = lower_variant(fn, arg_shapes)
+        with open(full, "w") as f:
+            f.write(text)
+        entries.append({
+            "kind": kind, "path": path,
+            "params": [s["name"] for s in params_used],
+            "inputs": data_inputs, "outputs": outputs, **attrs,
+        })
+        print(f"  {tag:36s} {len(text)//1024:6d} KiB  {time.time()-t0:5.1f}s",
+              flush=True)
+
+    batch_sizes = cfg.batch_sizes if not quick else cfg.batch_sizes[:1]
+    budgets = cfg.budgets if not quick else cfg.budgets[:1]
+    by_name = {s["name"]: s for s in wspecs}
+
+    for B in batch_sizes:
+        emit("embed", model.embed_fn(cfg), [by_name["embed"]],
+             [spec((B,), I32)], [spec((B, d))], f"embed_b{B}", batch=B)
+        emit("qkv", model.qkv_fn(cfg),
+             [dict(by_name["ln1.0"], name="ln1"),
+              dict(by_name["wqkv.0"], name="wqkv")],
+             [spec((B, d))],
+             [spec((B, H, hd))] * 3, f"qkv_b{B}", batch=B)
+        emit("logits", model.logits_fn(cfg),
+             [by_name["lnf"], by_name["embed"]],
+             [spec((B, d))], [spec((B, V))], f"logits_b{B}", batch=B)
+        for T in budgets:
+            emit("post", model.post_fn(cfg),
+                 [dict(by_name["wo.0"], name="wo"),
+                  dict(by_name["ln2.0"], name="ln2"),
+                  dict(by_name["w1.0"], name="w1"),
+                  dict(by_name["w2.0"], name="w2")],
+                 [spec((B, d)), spec((B, H, hd)),
+                  spec((B, T, H, hd)), spec((B, T, H, hd)),
+                  spec((B, T)), spec((B, T))],
+                 [spec((B, d)), spec((B, T)), spec((B,))],
+                 f"post_b{B}_t{T}", batch=B, budget=T)
+
+    # prefill: B=1 only (prompt ingest; decode is the hot path)
+    C, Tp = cfg.prefill_chunk, cfg.ctx
+    emit("prefill", model.prefill_fn(cfg), wspecs,
+         [spec((1, C), I32), spec((), I32),
+          spec((L, 1, Tp, H, hd)), spec((L, 1, Tp, H, hd))],
+         [spec((L, 1, C, H, hd)), spec((L, 1, C, H, hd)), spec((1, d))],
+         f"prefill_b1_c{C}", batch=1, chunk=C, ctx=Tp)
+
+    # fused in-graph decode (ablation) — small page count variant only;
+    # P*S = ctx capped at 4096 to bound the cache round-trip buffer.
+    if cfg.name in ("tiny-trained", "tinyllama-125m-sim") and not quick:
+        S = 16
+        P = min(cfg.ctx, 4096) // S
+        # multiple of 8 so K*S tiles cleanly into 128-token kernel blocks
+        K = max(8, (int(0.3 * P) // 8) * 8)
+        B = 1
+        emit("decode_fused", model.decode_fused_fn(cfg, P, K, S), wspecs,
+             [spec((B,), I32), spec((), I32),
+              spec((L, B, P * S, H, hd)), spec((L, B, P * S, H, hd)),
+              spec((L, B, P, 2, d))],
+             [spec((L, B, P * S, H, hd)), spec((L, B, P * S, H, hd)),
+              spec((L, B, P, 2, d)), spec((B, V)), spec((L, B, K), I32)],
+             f"decode_fused_b{B}_p{P}_k{K}_s{S}",
+             batch=B, n_pages=P, k_pages=K, page_size=S)
+
+    return entries
+
+
+def export_weights(cfg: ModelConfig, out_dir: str):
+    path = os.path.join(out_dir, f"{cfg.name}.weights.bin")
+    if cfg.trained:
+        if not os.path.exists(path):
+            raise SystemExit(
+                f"{path} missing: run `python -m compile.train` first "
+                "(make artifacts does this)")
+        return os.path.basename(path)
+    if not os.path.exists(path):
+        params = model.init_params(cfg, seed=hash(cfg.name) % 2**31)
+        tensorfile.write(path, params, meta={"config": cfg.name, "trained": False})
+    return os.path.basename(path)
+
+
+def model_manifest(cfg: ModelConfig):
+    return {
+        "d_model": cfg.d_model, "n_layer": cfg.n_layer, "n_head": cfg.n_head,
+        "head_dim": cfg.head_dim, "vocab": cfg.vocab, "ctx": cfg.ctx,
+        "act": cfg.act, "trained": cfg.trained,
+        "mlp_dim": cfg.mlp_dim, "n_params": cfg.n_params,
+        "param_order": model.param_names(cfg),
+        "alibi_slopes": [float(s) for s in ref.alibi_slopes(cfg.n_head)],
+    }
+
+
+# --------------------------------------------------------------------------
+# golden vectors for the Rust-side reimplementations
+# --------------------------------------------------------------------------
+
+
+def golden_vectors() -> dict:
+    rng = np.random.default_rng(1234)
+    out = {}
+
+    # page scoring + top-k (spec for rust/src/sparsity/score.rs)
+    B, P, D, K = 2, 16, 24, 5
+    q = rng.normal(size=(B, D)).astype(np.float32)
+    meta = np.sort(rng.normal(size=(B, P, 2, D)).astype(np.float32), axis=2)
+    scores = np.asarray(ref.page_score_ref(jnp.asarray(q), jnp.asarray(meta)))
+    topk = np.asarray(ref.topk_pages_ref(jnp.asarray(scores), K))
+    out["page_score"] = {
+        "q": q.tolist(), "meta": meta.tolist(),
+        "scores": scores.tolist(), "topk": topk.tolist(), "k": K,
+    }
+
+    # page metadata construction (spec for rust/src/kvcache/meta.rs)
+    Bm, L, Dm, S = 1, 32, 8, 8
+    keys = rng.normal(size=(Bm, L, Dm)).astype(np.float32)
+    meta2 = np.asarray(ref.page_meta_ref(jnp.asarray(keys), S))
+    out["page_meta"] = {"keys": keys.tolist(), "page_size": S,
+                        "meta": meta2.tolist()}
+
+    # decode attention on a tiny case (spec for integration testing)
+    Ba, H, hd, T = 1, 2, 8, 16
+    qa = rng.normal(size=(Ba, H, hd)).astype(np.float32)
+    kg = rng.normal(size=(Ba, T, H, hd)).astype(np.float32)
+    vg = rng.normal(size=(Ba, T, H, hd)).astype(np.float32)
+    mask = np.where(np.arange(T) < 12, 0.0, -1e9).astype(np.float32)[None]
+    dist = rng.integers(0, 64, size=(Ba, T)).astype(np.float32)
+    o, alpha = ref.attn_decode_ref(*map(jnp.asarray, (qa, kg, vg, mask, dist)))
+    out["attn_decode"] = {
+        "q": qa.tolist(), "kg": kg.tolist(), "vg": vg.tolist(),
+        "mask": mask.tolist(), "dist": dist.tolist(),
+        "o": np.asarray(o).tolist(), "alpha": np.asarray(alpha).tolist(),
+        "slopes": [float(s) for s in ref.alibi_slopes(H)],
+    }
+
+    # alibi slopes for every head count used by the configs
+    out["alibi"] = {str(h): [float(s) for s in ref.alibi_slopes(h)]
+                    for h in (2, 4, 8, 12, 16)}
+
+    # f16 conversion pins (spec for rust/src/util/f16.rs)
+    vals = np.asarray(
+        [0.0, -0.0, 1.0, -1.0, 0.5, 65504.0, 1e-8, 3.14159, -2.71828,
+         1024.0, 0.099976], np.float32)
+    f16 = vals.astype(np.float16)
+    out["f16"] = {"f32": vals.tolist(),
+                  "bits": [int(b) for b in f16.view(np.uint16)],
+                  "back": f16.astype(np.float32).tolist()}
+    return out
+
+
+def kernel_report(out_dir: str):
+    """DESIGN.md §8: VMEM footprint + MXU/roofline estimates for the L1
+    decode kernel per model config and budget. interpret=True gives no TPU
+    wallclock, so these are *structural* estimates: per-(b,h) program VMEM
+    working set, arithmetic intensity, and HBM-bound time on a TPUv4-class
+    part (1.2 TB/s HBM, 275 TFLOP/s bf16 MXU)."""
+    hbm_bw = 1.2e12
+    mxu_flops = 275e12
+    rows = []
+    for cfg in CONFIGS.values():
+        H, hd = cfg.n_head, cfg.head_dim
+        for T in cfg.budgets:
+            block_t = 128 if T % 128 == 0 else 64
+            # per-program VMEM: K/V tiles (block_t x hd) + bias + q + alpha
+            vmem = (2 * block_t * hd + 2 * block_t + hd + T) * 4
+            # per-(b,h) flops: 2*T*hd (qk) + 2*T*hd (av)
+            flops = 4 * T * hd
+            # HBM bytes per program: K,V streamed once + alpha out
+            bytes_moved = (2 * T * hd + T) * 4
+            ai = flops / bytes_moved  # arithmetic intensity (flops/byte)
+            t_hbm = bytes_moved / hbm_bw
+            t_mxu = flops / mxu_flops
+            bound = "HBM" if t_hbm > t_mxu else "MXU"
+            util = min(1.0, t_mxu / max(t_hbm, t_mxu))
+            rows.append({
+                "model": cfg.name, "budget_T": T, "block_t": block_t,
+                "vmem_bytes_per_program": vmem,
+                "arith_intensity_flops_per_byte": round(ai, 3),
+                "bound": bound,
+                "mxu_utilization_at_roofline": round(util, 4),
+                "hbm_time_us_per_head": round(t_hbm * 1e6, 3),
+            })
+            print(f"{cfg.name:22s} T={T:5d} block={block_t:3d} "
+                  f"VMEM={vmem/1024:7.1f}KiB  AI={ai:5.2f} fl/B  bound={bound}"
+                  f"  MXU@roofline={util*100:5.1f}%")
+    with open(os.path.join(out_dir, "kernel_report.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print("wrote kernel_report.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated subset of model names")
+    ap.add_argument("--quick", action="store_true",
+                    help="first batch/budget variant only (CI smoke)")
+    ap.add_argument("--golden-only", action="store_true")
+    ap.add_argument("--report", action="store_true",
+                    help="emit the kernel VMEM/MXU report only")
+    args = ap.parse_args()
+    if args.report:
+        os.makedirs(args.out, exist_ok=True)
+        kernel_report(args.out)
+        return
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden_vectors(), f)
+    print("wrote golden.json")
+    if args.golden_only:
+        return
+
+    names = (args.models.split(",") if args.models else list(CONFIGS))
+    # merge with an existing manifest so `--models subset` doesn't drop the
+    # other models' entries
+    manifest = {"format": 1, "models": {}}
+    prev = os.path.join(out_dir, "manifest.json")
+    if args.models and os.path.exists(prev):
+        with open(prev) as f:
+            manifest = json.load(f)
+    for name in names:
+        cfg = CONFIGS[name]
+        print(f"[{name}] d={cfg.d_model} L={cfg.n_layer} H={cfg.n_head} "
+              f"ctx={cfg.ctx} params={cfg.n_params/1e6:.1f}M", flush=True)
+        weights = export_weights(cfg, out_dir)
+        entries = export_model(cfg, out_dir, quick=args.quick)
+        m = model_manifest(cfg)
+        m["weights"] = weights
+        m["artifacts"] = entries
+        manifest["models"][name] = m
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

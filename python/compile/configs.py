@@ -1,0 +1,92 @@
+"""Model scale family + artifact variant matrix.
+
+The paper evaluates TinyLLaMA-125M, GPT2-345M, OPT-350M, GPT2-774M and
+LLaMA-1.3B. Checkpoints are not available in this image (see DESIGN.md §2),
+so each scale is replaced by a `-sim` transformer from the same architecture
+family whose KV cache scales identically in (d_model, n_layer, context):
+latency/memory behaviour of cache selection depends only on those shapes.
+`tiny-trained` is additionally *trained* (python/compile/train.py) on the
+structured synthetic corpus so accuracy-bearing experiments use a model that
+genuinely solves the retrieval tasks.
+
+Conventions shared with the Rust side (mirrored in rust/src/config/mod.rs):
+  * byte-level vocab of 512: ids 0..255 = raw bytes, 256 = BOS, 257 = EOS,
+    rest unused (power-of-two padding for the logits matmul).
+  * ALiBi positional scheme (no RoPE) — extrapolates beyond the training
+    window, so a model trained at 512 tokens can be *served* at 4K-32K.
+  * pre-norm RMSNorm, MHA, GELU MLP with 4x expansion, untied biases absent,
+    tied embedding / LM head.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+VOCAB = 512
+BOS = 256
+EOS = 257
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layer: int
+    n_head: int
+    ctx: int                    # max serving context (tokens)
+    vocab: int = VOCAB
+    act: str = "gelu"           # "gelu" (gpt2/llama-sim) or "relu" (opt-sim)
+    trained: bool = False       # weights from train.py vs seeded random
+    batch_sizes: tuple = (1, 4, 8)
+    budgets: tuple = ()         # decode attention T variants (tokens)
+    prefill_chunk: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_head
+
+    @property
+    def mlp_dim(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def n_params(self) -> int:
+        d, v = self.d_model, self.vocab
+        per_layer = 3 * d * d + d * d + 2 * (d * self.mlp_dim) + 2 * d
+        return v * d + self.n_layer * per_layer + d
+
+
+def _cfg(**kw) -> ModelConfig:
+    return ModelConfig(**kw)
+
+
+CONFIGS = {
+    c.name: c
+    for c in [
+        # Trained accuracy-bearing model (see train.py). Served up to 4K ctx.
+        _cfg(name="tiny-trained", d_model=128, n_layer=4, n_head=8, ctx=4096,
+             trained=True, budgets=(128, 256, 512, 1024, 4096)),
+        # Scale family mirroring the paper's Table 1 rows.
+        _cfg(name="tinyllama-125m-sim", d_model=256, n_layer=4, n_head=8,
+             ctx=4096, budgets=(512, 1024, 2048, 4096)),
+        _cfg(name="gpt2-345m-sim", d_model=384, n_layer=6, n_head=12,
+             ctx=8192, budgets=(512, 2048, 8192)),
+        _cfg(name="opt-350m-sim", d_model=384, n_layer=6, n_head=12,
+             ctx=8192, act="relu", batch_sizes=(1, 4),
+             budgets=(2048, 8192)),
+        _cfg(name="gpt2-774m-sim", d_model=512, n_layer=8, n_head=16,
+             ctx=16384, batch_sizes=(1, 4), budgets=(2048, 4096)),
+        _cfg(name="llama-1p3b-sim", d_model=640, n_layer=10, n_head=16,
+             ctx=32768, batch_sizes=(1,), budgets=(2048, 4096)),
+    ]
+}
+
+# Table 1 row order (paper) -> sim config.
+PAPER_SCALE_ROWS: List[str] = [
+    "tinyllama-125m-sim",
+    "gpt2-345m-sim",
+    "opt-350m-sim",
+    "gpt2-774m-sim",
+    "llama-1p3b-sim",
+]

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: directional bounding-box page scoring (paper Eq. 2).
+
+Algorithm 1, step 1: estimate max_{k in page} q.k from per-page channel-wise
+(min, max) key bounds. The identity
+
+    sum_i (q_i >= 0 ? q_i * M_i : q_i * m_i)  ==  sum_i max(q_i*M_i, q_i*m_i)
+
+(valid because M >= m elementwise) turns the paper's sign-split form into a
+branch-free vectorized max — exactly what the TPU VPU (and the Rust SIMD
+scan in `rust/src/sparsity/score.rs`) wants.
+
+Layout: metadata lives as `[P, 2, D]` per batch row (the "SRAM/L2 resident"
+structure of the paper's hardware model); the kernel tiles P so the VMEM
+working set is `2 * block_p * D * 4B` regardless of page count.
+
+Used in-graph by the fully-fused decode variant (`model.decode_fused`) and
+as the spec for the Rust scorer; oracle: `ref.page_score_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(q_ref, meta_ref, out_ref):
+    q = q_ref[0, :]          # [D]
+    m = meta_ref[0, :, 0, :]  # [block_p, D]
+    M = meta_ref[0, :, 1, :]
+    qm = q[None, :] * m
+    qM = q[None, :] * M
+    out_ref[0, :] = jnp.sum(jnp.maximum(qM, qm), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def page_scores(q, meta, block_p: int = 128):
+    """Score pages against the query. q: [B, D], meta: [B, P, 2, D] -> [B, P]."""
+    B, D = q.shape
+    P = meta.shape[1]
+    bp = min(block_p, P)
+    if P % bp != 0:
+        raise ValueError(f"P={P} must be a multiple of block_p={bp}")
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(B, P // bp),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda b, p: (b, 0)),
+            pl.BlockSpec((1, bp, 2, D), lambda b, p: (b, p, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bp), lambda b, p: (b, p)),
+        out_shape=jax.ShapeDtypeStruct((B, P), jnp.float32),
+        interpret=True,
+    )(q, meta)

@@ -1,0 +1,129 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match the corresponding function here to float tolerance (pytest +
+hypothesis sweep shapes/dtypes/seeds in python/tests/test_kernels.py).
+
+They are also the *semantic spec* for the Rust-side reimplementations
+(page scoring, top-k) — `aot.py --golden` evaluates these on fixed seeds and
+dumps the vectors that `rust/tests/golden.rs` replays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def alibi_slopes(n_heads: int) -> np.ndarray:
+    """ALiBi per-head slopes, standard geometric formula (power-of-two safe)."""
+    # For power-of-two H this is 2^(-8i/H) for i in 1..H.
+    return np.asarray(
+        [2.0 ** (-8.0 * (i + 1) / n_heads) for i in range(n_heads)],
+        dtype=np.float32,
+    )
+
+
+def attn_decode_ref(q, kg, vg, mask, dist, slopes=None):
+    """Single-token sparse attention over gathered pages (reference).
+
+    Args:
+      q:    [B, H, hd]   query for the new token (one per head).
+      kg:   [B, T, H, hd] gathered keys (budget T tokens; padded entries
+            are masked out via `mask`).
+      vg:   [B, T, H, hd] gathered values.
+      mask: [B, T] additive mask (0 for valid, -1e9 for padding).
+      dist: [B, T] token distance (pos_query - pos_token, >= 0) for ALiBi.
+      slopes: [H] ALiBi slopes; default = alibi_slopes(H).
+
+    Returns:
+      o:     [B, H, hd] attention output.
+      alpha: [B, H, T]  attention weights (softmax probabilities).
+    """
+    B, H, hd = q.shape
+    if slopes is None:
+        slopes = jnp.asarray(alibi_slopes(H))
+    scale = np.float32(1.0 / np.sqrt(hd))
+    # [B, H, T]
+    logits = jnp.einsum("bhd,bthd->bht", q, kg) * scale
+    bias = -slopes[None, :, None] * dist[:, None, :]
+    logits = logits + bias + mask[:, None, :]
+    alpha = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bht,bthd->bhd", alpha, vg)
+    return o, alpha
+
+
+def attn_prefill_ref(q, k, v, q_pos, k_pos, k_valid, slopes=None):
+    """Chunked causal prefill attention (reference).
+
+    Args:
+      q:       [B, C, H, hd] chunk queries.
+      k:       [B, Tk, H, hd] keys = prior context + this chunk.
+      v:       [B, Tk, H, hd] values.
+      q_pos:   [B, C] absolute positions of chunk tokens.
+      k_pos:   [B, Tk] absolute positions of key tokens.
+      k_valid: [B, Tk] 1.0 for valid keys, 0.0 for padding.
+
+    Returns: o [B, C, H, hd]
+    """
+    B, C, H, hd = q.shape
+    if slopes is None:
+        slopes = jnp.asarray(alibi_slopes(H))
+    scale = np.float32(1.0 / np.sqrt(hd))
+    logits = jnp.einsum("bchd,bthd->bhct", q, k) * scale
+    dist = (q_pos[:, :, None] - k_pos[:, None, :]).astype(jnp.float32)  # [B,C,Tk]
+    causal = (dist >= 0) & (k_valid[:, None, :] > 0.5)
+    logits = logits - slopes[None, :, None, None] * jnp.maximum(dist, 0.0)[:, None]
+    logits = jnp.where(causal[:, None], logits, -1e9)
+    alpha = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhct,bthd->bchd", alpha, v)
+
+
+def page_score_ref(q, meta):
+    """Directional bounding-box page relevance (paper Eq. 2), reference.
+
+    Args:
+      q:    [B, D]      query with all heads concatenated (D = H * hd).
+      meta: [B, P, 2, D] per-page channel-wise (min, max) of stored keys.
+
+    Returns: scores [B, P] with score_j = sum_i max(q_i*M_ji, q_i*m_ji)
+    (equivalent to the paper's sign-split form because M >= m).
+    """
+    m = meta[:, :, 0, :]  # [B, P, D]
+    M = meta[:, :, 1, :]
+    qe = q[:, None, :]
+    return jnp.sum(jnp.maximum(qe * M, qe * m), axis=-1)
+
+
+def page_meta_ref(keys, page_size):
+    """Per-page channel-wise min/max metadata over stored keys.
+
+    Args:
+      keys: [B, L, D] stored (unpadded) keys, L a multiple of page_size.
+    Returns: meta [B, P, 2, D].
+    """
+    B, L, D = keys.shape
+    P = L // page_size
+    pages = keys.reshape(B, P, page_size, D)
+    return jnp.stack([pages.min(axis=2), pages.max(axis=2)], axis=2)
+
+
+def topk_pages_ref(scores, k, forced=None):
+    """Top-k page selection with optional forced pages (sink/recent).
+
+    Args:
+      scores: [B, P]; forced: optional [B, P] bool — pages that must be kept.
+    Returns: indices [B, k] (ascending order per row).
+    """
+    if forced is not None:
+        scores = jnp.where(forced, jnp.float32(np.finfo(np.float32).max), scores)
+    _, idx = jax.lax.top_k(scores, k)
+    return jnp.sort(idx, axis=-1)
+
+
+def entropy_ref(alpha):
+    """Mean per-head attention entropy, [B,H,T] -> [B]."""
+    p = jnp.clip(alpha, 1e-12, 1.0)
+    h = -jnp.sum(p * jnp.log(p), axis=-1)  # [B, H]
+    return h.mean(axis=-1)

@@ -1,0 +1,366 @@
+"""L2 JAX model: the transformer pieces the Rust coordinator orchestrates.
+
+The decode path is split into per-layer executables so that the Rust L3 can
+run the paper's Algorithm 1 *between* them — it owns the paged KV cache and
+page metadata, scores pages against the fresh query, gathers the selected
+pages, and only then dispatches the fused attention kernel:
+
+    embed -> [ qkv -> (rust: append KV, update metadata, score, top-K,
+               gather) -> post ] x n_layer -> logits -> (rust: sample)
+
+Every function here is pure and is lowered once by aot.py to HLO text.
+Weight tensors are ordinary parameters (never baked constants): the Rust
+runtime uploads them to device buffers once and passes them to `execute_b`
+on every call, so the request path moves only activations and gathered KV.
+
+`decode_fused` is the single-call ablation variant ("Fused Kernel" rows of
+paper Table 2): page scoring (Pallas), top-K, gather and attention all run
+in-graph and the whole KV cache round-trips as device buffers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.page_score import page_scores
+from .kernels.sparse_attn import attn_decode
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+LAYER_PARAMS = ("ln1", "wqkv", "wo", "ln2", "w1", "w2")
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Canonical parameter order shared with the Rust runtime manifest."""
+    names = ["embed", "lnf"]
+    for l in range(cfg.n_layer):
+        names += [f"{p}.{l}" for p in LAYER_PARAMS]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    d, m, v = cfg.d_model, cfg.mlp_dim, cfg.vocab
+    shapes = {"embed": (v, d), "lnf": (d,)}
+    for l in range(cfg.n_layer):
+        shapes[f"ln1.{l}"] = (d,)
+        shapes[f"wqkv.{l}"] = (d, 3 * d)
+        shapes[f"wo.{l}"] = (d, d)
+        shapes[f"ln2.{l}"] = (d,)
+        shapes[f"w1.{l}"] = (d, m)
+        shapes[f"w2.{l}"] = (m, d)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Seeded scaled-gaussian init (the weights of the -sim scale family)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, shape in param_shapes(cfg).items():
+        if name.startswith("ln") or name == "lnf":
+            out[name] = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0]
+            std = 1.0 / np.sqrt(fan_in)
+            if name.startswith(("wo", "w2")):
+                std /= np.sqrt(2.0 * cfg.n_layer)  # gpt2-style residual scaling
+            out[name] = rng.normal(0.0, std, size=shape).astype(np.float32)
+    return out
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _act(x, kind: str):
+    return jax.nn.gelu(x) if kind == "gelu" else jax.nn.relu(x)
+
+
+def mlp(h, w1, w2, act: str):
+    return _act(h @ w1, act) @ w2
+
+
+# --------------------------------------------------------------------------
+# decode-path executables (one per `kind` in the artifact manifest)
+# --------------------------------------------------------------------------
+
+
+def embed_fn(cfg: ModelConfig):
+    def f(embed, tokens):
+        # tokens: i32[B] -> h f32[B, d]
+        return (jnp.take(embed, tokens, axis=0),)
+
+    return f
+
+
+def qkv_fn(cfg: ModelConfig):
+    H, hd = cfg.n_head, cfg.head_dim
+
+    def f(ln1, wqkv, h):
+        # h: f32[B, d] -> q, k, v: f32[B, H, hd] (ALiBi: no rotation on k)
+        B = h.shape[0]
+        x = rmsnorm(h, ln1)
+        qkv = x @ wqkv  # [B, 3d]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        return (
+            q.reshape(B, H, hd),
+            k.reshape(B, H, hd),
+            v.reshape(B, H, hd),
+        )
+
+    return f
+
+
+def post_fn(cfg: ModelConfig):
+    H = cfg.n_head
+
+    def f(wo, ln2, w1, w2, h, q, kg, vg, mask, dist):
+        # h: [B, d]; q: [B, H, hd]; kg/vg: [B, T, H, hd];
+        # mask/dist: [B, T] -> h_out [B, d], mass [B, T], ent [B]
+        B, d = h.shape
+        o, alpha = attn_decode(q, kg, vg, mask, dist)
+        h1 = h + o.reshape(B, d) @ wo
+        h2 = h1 + mlp(rmsnorm(h1, ln2), w1, w2, cfg.act)
+        mass = jnp.mean(alpha, axis=1)  # [B, T] mean attention over heads
+        ent = ref.entropy_ref(alpha)    # [B]
+        return (h2, mass, ent)
+
+    return f
+
+
+def logits_fn(cfg: ModelConfig):
+    def f(lnf, embed, h):
+        # h: [B, d] -> logits f32[B, V] (tied LM head)
+        return (rmsnorm(h, lnf) @ embed.T,)
+
+    return f
+
+
+# --------------------------------------------------------------------------
+# prefill (chunked, flash-style over the key axis to bound memory)
+# --------------------------------------------------------------------------
+
+
+def _flash_prefill_attn(q, kbuf, vbuf, q_pos, prior_len, slopes, block=1024):
+    """Causal chunk attention against a [B, Tp, H, hd] key buffer.
+
+    Memory-bounded lax.scan over Tp blocks with online softmax; keys at
+    index >= prior_len + C are invalid, enforced with the causal mask
+    (q_pos >= k_pos covers it because invalid slots sit beyond the chunk).
+    """
+    B, C, H, hd = q.shape
+    Tp = kbuf.shape[1]
+    scale = np.float32(1.0 / np.sqrt(hd))
+    qs = q * scale
+    block = min(block, Tp)
+    n_blocks = Tp // block
+
+    def body(carry, i):
+        m, s, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(kbuf, i * block, block, axis=1)
+        v = jax.lax.dynamic_slice_in_dim(vbuf, i * block, block, axis=1)
+        k_pos = i * block + jnp.arange(block)  # [block]
+        logits = jnp.einsum("bchd,bthd->bhct", qs, k)  # [B,H,C,block]
+        dist = (q_pos[:, :, None] - k_pos[None, None, :]).astype(jnp.float32)
+        valid = dist >= 0
+        logits = logits - slopes[None, :, None, None] * jnp.maximum(dist, 0.0)[:, None]
+        logits = jnp.where(valid[:, None], logits, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        # guard: rows with no valid key yet keep m = -inf; exp(-inf - -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        p = jnp.exp(logits - m_safe[..., None])
+        p = jnp.where(valid[:, None], p, 0.0)
+        s_new = s * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhct,bthd->bhcd", p, v)
+        return (m_new, s_new, acc_new), 0
+
+    m0 = jnp.full((B, H, C), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((B, H, C), jnp.float32)
+    a0 = jnp.zeros((B, H, C, hd), jnp.float32)
+    (m, s, acc), _ = jax.lax.scan(body, (m0, s0, a0), jnp.arange(n_blocks))
+    o = acc / s[..., None]
+    return jnp.transpose(o, (0, 2, 1, 3))  # [B, C, H, hd]
+
+
+def prefill_fn(cfg: ModelConfig):
+    """One prompt chunk through all layers.
+
+    Inputs:  params..., tokens i32[B, C], prior_len i32[],
+             kbuf/vbuf f32[Lyr, B, Tp, H, hd] (host-staged by the Rust engine)
+    Outputs: k_chunk/v_chunk f32[Lyr, B, C, H, hd] (only the new tokens — the
+             engine owns the full buffer and writes the chunk in, so the
+             PJRT tuple result stays small), h_last f32[B, d]
+    """
+    H, hd, L = cfg.n_head, cfg.head_dim, cfg.n_layer
+    slopes = jnp.asarray(ref.alibi_slopes(H))
+
+    def f(*args):
+        names = param_names(cfg)
+        params = dict(zip(names, args[: len(names)]))
+        tokens, prior_len, kbuf, vbuf = args[len(names):]
+        B, C = tokens.shape
+        h = jnp.take(params["embed"], tokens, axis=0)  # [B, C, d]
+        q_pos = prior_len + jnp.arange(C)[None, :] * jnp.ones((B, 1), jnp.int32)
+        new_k, new_v = [], []
+        for l in range(L):
+            x = rmsnorm(h, params[f"ln1.{l}"])
+            qkv = x @ params[f"wqkv.{l}"]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            q = q.reshape(B, C, H, hd)
+            k = k.reshape(B, C, H, hd)
+            v = v.reshape(B, C, H, hd)
+            kb = jax.lax.dynamic_update_slice(
+                kbuf[l], k, (0, prior_len, 0, 0))
+            vb = jax.lax.dynamic_update_slice(
+                vbuf[l], v, (0, prior_len, 0, 0))
+            new_k.append(k)
+            new_v.append(v)
+            o = _flash_prefill_attn(q, kb, vb, q_pos, prior_len, slopes)
+            h = h + o.reshape(B, C, -1) @ params[f"wo.{l}"]
+            h = h + mlp(rmsnorm(h, params[f"ln2.{l}"]),
+                        params[f"w1.{l}"], params[f"w2.{l}"], cfg.act)
+        kout = jnp.stack(new_k)
+        vout = jnp.stack(new_v)
+        return (kout, vout, h[:, -1, :])
+
+    return f
+
+
+# --------------------------------------------------------------------------
+# fully-fused decode step (ablation variant: selection in-graph)
+# --------------------------------------------------------------------------
+
+
+def decode_fused_fn(cfg: ModelConfig, n_pages: int, k_pages: int, page_size: int):
+    """Single-call decode step with in-graph query-aware page selection.
+
+    The KV cache + metadata round-trip as device buffers; Rust only feeds
+    tokens/positions. Used by the "fused kernel" ablation rows and as an
+    upper-bound comparator for the Rust-orchestrated path.
+
+    Inputs:  params..., token i32[B], pos i32[],
+             kcache/vcache f32[Lyr, B, P*S, H, hd],
+             meta f32[Lyr, B, P, 2, d]
+    Outputs: kcache', vcache', meta', logits f32[B, V], sel i32[Lyr, B, K]
+    """
+    H, hd, L, d = cfg.n_head, cfg.head_dim, cfg.n_layer, cfg.d_model
+    S, P, K = page_size, n_pages, k_pages
+    slopes = jnp.asarray(ref.alibi_slopes(H))
+
+    def f(*args):
+        names = param_names(cfg)
+        params = dict(zip(names, args[: len(names)]))
+        token, pos, kcache, vcache, meta = args[len(names):]
+        B = token.shape[0]
+        h = jnp.take(params["embed"], token, axis=0)  # [B, d]
+        page_of_pos = pos // S
+        slot = pos % S
+        ks, vs, ms, sels = [], [], [], []
+        for l in range(L):
+            x = rmsnorm(h, params[f"ln1.{l}"])
+            qkv = x @ params[f"wqkv.{l}"]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            q = q.reshape(B, H, hd)
+            kc = jax.lax.dynamic_update_slice(
+                kcache[l], k.reshape(B, 1, H, hd), (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vcache[l], v.reshape(B, 1, H, hd), (0, pos, 0, 0))
+            # incremental metadata update for the page holding `pos`
+            mt = meta[l]  # [B, P, 2, d]
+            old = jax.lax.dynamic_slice(mt, (0, page_of_pos, 0, 0), (B, 1, 2, d))
+            kflat = k.reshape(B, 1, 1, d)
+            fresh = slot == 0
+            new_min = jnp.where(fresh, kflat, jnp.minimum(old[:, :, 0:1], kflat))
+            new_max = jnp.where(fresh, kflat, jnp.maximum(old[:, :, 1:2], kflat))
+            mt = jax.lax.dynamic_update_slice(
+                mt, jnp.concatenate([new_min, new_max], axis=2),
+                (0, page_of_pos, 0, 0))
+            # Algorithm 1 step 1-2: score + top-K (Pallas scorer in-graph)
+            scores = page_scores(q.reshape(B, d), mt.reshape(B, P, 2, d))
+            page_idx = jnp.arange(P)
+            valid_page = page_idx[None, :] * S <= pos  # page has >= 1 token
+            forced = (page_idx[None, :] == page_of_pos) | (page_idx[None, :] == 0)
+            scores = jnp.where(valid_page, scores, -jnp.inf)
+            scores = jnp.where(forced & valid_page, jnp.float32(3.4e38), scores)
+            # argsort instead of lax.top_k: the TopK HLO op carries a
+            # `largest=` attribute the xla_extension 0.5.1 text parser
+            # rejects; sort lowers to plain `sort`, which round-trips.
+            sel = jnp.argsort(-scores, axis=-1)[:, :K]  # [B, K]
+            sel = jnp.sort(sel, axis=-1)
+            # Algorithm 1 step 3: gather selected pages
+            tok_idx = sel[:, :, None] * S + jnp.arange(S)[None, None, :]
+            tok_idx = tok_idx.reshape(B, K * S)  # [B, T]
+            kg = jnp.take_along_axis(kc, tok_idx[:, :, None, None], axis=1)
+            vg = jnp.take_along_axis(vc, tok_idx[:, :, None, None], axis=1)
+            dist = (pos - tok_idx).astype(jnp.float32)
+            mask = jnp.where((tok_idx <= pos) & (dist >= 0), 0.0, -1e9)
+            dist = jnp.maximum(dist, 0.0)
+            # step 4: fused attention kernel
+            o, _ = attn_decode(q, kg, vg, mask, dist, block_t=min(128, K * S))
+            h = h + o.reshape(B, d) @ params[f"wo.{l}"]
+            h = h + mlp(rmsnorm(h, params[f"ln2.{l}"]),
+                        params[f"w1.{l}"], params[f"w2.{l}"], cfg.act)
+            ks.append(kc)
+            vs.append(vc)
+            ms.append(mt)
+            sels.append(sel)
+        logits = rmsnorm(h, params["lnf"]) @ params["embed"].T
+        return (jnp.stack(ks), jnp.stack(vs), jnp.stack(ms), logits,
+                jnp.stack(sels))
+
+    return f
+
+
+# --------------------------------------------------------------------------
+# dense training forward (used by train.py only; never exported)
+# --------------------------------------------------------------------------
+
+
+def train_loss_fn(cfg: ModelConfig):
+    H, hd, L = cfg.n_head, cfg.head_dim, cfg.n_layer
+    slopes = jnp.asarray(ref.alibi_slopes(H))
+
+    def f(params: Dict[str, jnp.ndarray], tokens):
+        # tokens: i32[B, T+1]; next-token cross-entropy over the window.
+        x, y = tokens[:, :-1], tokens[:, 1:]
+        B, T = x.shape
+        h = jnp.take(params["embed"], x, axis=0)
+        pos = jnp.arange(T)
+        dist = (pos[:, None] - pos[None, :]).astype(jnp.float32)
+        causal = dist >= 0
+        bias = -slopes[:, None, None] * jnp.maximum(dist, 0.0)[None]
+        bias = jnp.where(causal[None], bias, -1e9)  # [H, T, T]
+        scale = np.float32(1.0 / np.sqrt(hd))
+        for l in range(L):
+            xn = rmsnorm(h, params[f"ln1.{l}"])
+            qkv = xn @ params[f"wqkv.{l}"]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            q = q.reshape(B, T, H, hd)
+            k = k.reshape(B, T, H, hd)
+            v = v.reshape(B, T, H, hd)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale + bias[None]
+            alpha = jax.nn.softmax(logits, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", alpha, v)
+            h = h + o.reshape(B, T, -1) @ params[f"wo.{l}"]
+            h = h + mlp(rmsnorm(h, params[f"ln2.{l}"]),
+                        params[f"w1.{l}"], params[f"w2.{l}"], cfg.act)
+        out = rmsnorm(h, params["lnf"]) @ params["embed"].T
+        logp = jax.nn.log_softmax(out, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        return nll.mean()
+
+    return f

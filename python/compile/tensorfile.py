@@ -1,0 +1,67 @@
+"""Dependency-free tensor container shared with the Rust runtime.
+
+Format (little-endian), mirrored by `rust/src/util/tensorfile.rs`:
+
+    magic   b"TSWT"            4 bytes
+    version u32 = 1
+    hlen    u32                header length in bytes
+    header  JSON               {"tensors": [{"name", "dtype", "shape",
+                                             "offset", "nbytes"}, ...],
+                                "meta": {...}}
+    data    raw bytes          each tensor at 64-byte-aligned offset
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"TSWT"
+_DTYPES = {"f32": np.float32, "i32": np.int32, "f16": np.float16, "u8": np.uint8}
+_ALIGN = 64
+
+
+def write(path: str, tensors: Dict[str, np.ndarray], meta: dict | None = None):
+    entries = []
+    offset = 0
+    blobs = []
+    rev = {np.dtype(v): k for k, v in _DTYPES.items()}
+    for name, arr in tensors.items():
+        dtype = rev[np.dtype(arr.dtype)]
+        raw = np.ascontiguousarray(arr).tobytes()
+        pad = (-offset) % _ALIGN
+        offset += pad
+        blobs.append((pad, raw))
+        entries.append({
+            "name": name, "dtype": dtype, "shape": list(arr.shape),
+            "offset": offset, "nbytes": len(raw),
+        })
+        offset += len(raw)
+    header = json.dumps({"tensors": entries, "meta": meta or {}}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(np.uint32(1).tobytes())
+        f.write(np.uint32(len(header)).tobytes())
+        f.write(header)
+        for pad, raw in blobs:
+            f.write(b"\0" * pad)
+            f.write(raw)
+
+
+def read(path: str) -> tuple[Dict[str, np.ndarray], dict]:
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version = np.frombuffer(f.read(4), np.uint32)[0]
+        assert version == 1, f"unsupported version {version}"
+        hlen = int(np.frombuffer(f.read(4), np.uint32)[0])
+        header = json.loads(f.read(hlen))
+        base = f.tell()
+        out = {}
+        for e in header["tensors"]:
+            f.seek(base + e["offset"])
+            raw = f.read(e["nbytes"])
+            arr = np.frombuffer(raw, _DTYPES[e["dtype"]]).reshape(e["shape"])
+            out[e["name"]] = arr
+    return out, header.get("meta", {})

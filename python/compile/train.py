@@ -1,0 +1,130 @@
+"""Build-time trainer for the accuracy-bearing `tiny-trained` model.
+
+Trains a byte-level tiny transformer on the structured synthetic corpus
+(corpus.py) so that serving-time retrieval tasks (passkey, kv-recall,
+repetition, rare token, aliasing) have *real* exact-match accuracy — the
+substitution for the paper's pretrained checkpoints (DESIGN.md §2).
+
+ALiBi makes the model length-extrapolate: trained at `seq_len` (default 384)
+it is served at 4K context, which is exactly the regime where page selection
+matters. Runs once under `make artifacts`; skipped when the weights file
+already exists. Single-core CPU budget: a few minutes.
+
+Usage: python -m compile.train --out ../artifacts [--steps N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model, tensorfile
+from .configs import CONFIGS
+
+
+def adamw_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, wd=0.01, b1=0.9, b2=0.95, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * jnp.square(grads[k]) for k in params}
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    new = {}
+    for k in params:
+        update = (m[k] / bc1) / (jnp.sqrt(v[k] / bc2) + eps)
+        if k.startswith(("wqkv", "wo", "w1", "w2", "embed")):
+            update = update + wd * params[k]
+        new[k] = params[k] - lr * update
+    return new, {"m": m, "v": v, "t": t}
+
+
+def global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads.values()))
+
+
+def train(steps: int = 500, batch: int = 4, seq_len: int = 384,
+          lr_peak: float = 1.5e-3, seed: int = 42, log_every: int = 25,
+          out_dir: str = "../artifacts", resume: bool = False):
+    cfg = CONFIGS["tiny-trained"]
+    rng = np.random.default_rng(seed)
+    resume_path = os.path.join(out_dir, "tiny-trained.weights.bin")
+    if resume and os.path.exists(resume_path):
+        loaded, meta = tensorfile.read(resume_path)
+        params = {k: jnp.asarray(v) for k, v in loaded.items()}
+        rng = np.random.default_rng(seed + int(meta.get("steps", 0)))
+        print(f"resumed from {resume_path} ({meta.get('steps')} prior steps)")
+    else:
+        params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed).items()}
+    loss_fn = model.train_loss_fn(cfg)
+    opt = adamw_init(params)
+    warmup = max(1, steps // 10)
+
+    @jax.jit
+    def step_fn(params, opt, tokens, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens)
+        gn = global_norm(grads)
+        clip = jnp.minimum(1.0, 1.0 / (gn + 1e-6))
+        grads = {k: g * clip for k, g in grads.items()}
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss, gn
+
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        if i < warmup:
+            lr = lr_peak * (i + 1) / warmup
+        else:
+            frac = (i - warmup) / max(1, steps - warmup)
+            lr = lr_peak * 0.5 * (1 + np.cos(np.pi * frac))
+        tokens = jnp.asarray(corpus.training_batch(rng, batch, seq_len))
+        params, opt, loss, gn = step_fn(params, opt, tokens, jnp.float32(lr))
+        losses.append(float(loss))
+        if i % log_every == 0 or i == steps - 1:
+            dt = time.time() - t0
+            print(f"step {i:4d}  loss {float(loss):.4f}  gnorm {float(gn):.3f}"
+                  f"  lr {lr:.2e}  {dt:.1f}s", flush=True)
+
+    # held-out perplexity
+    eval_rng = np.random.default_rng(seed + 1)
+    eval_tokens = jnp.asarray(corpus.training_batch(eval_rng, 8, seq_len))
+    eval_loss = float(loss_fn(params, eval_tokens))
+    ppl = float(np.exp(eval_loss))
+    print(f"eval loss {eval_loss:.4f}  ppl {ppl:.2f}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "tiny-trained.weights.bin")
+    tensorfile.write(
+        path,
+        {k: np.asarray(v) for k, v in params.items()},
+        meta={"config": cfg.name, "steps": steps, "seq_len": seq_len,
+              "final_loss": losses[-1], "eval_ppl": ppl, "seed": seed},
+    )
+    print(f"wrote {path}")
+    return params, losses, ppl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=384)
+    ap.add_argument("--lr", type=float, default=1.5e-3)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    train(steps=args.steps, batch=args.batch, seq_len=args.seq_len,
+          out_dir=args.out, resume=args.resume, lr_peak=args.lr)
+
+
+if __name__ == "__main__":
+    main()

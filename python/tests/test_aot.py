@@ -1,0 +1,81 @@
+"""AOT exporter sanity: golden vectors, HLO text shape, manifest schema."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.configs import CONFIGS, ModelConfig
+
+
+def test_golden_vectors_self_consistent():
+    g = aot.golden_vectors()
+    ps = g["page_score"]
+    q = np.asarray(ps["q"], np.float32)
+    meta = np.asarray(ps["meta"], np.float32)
+    scores = np.asarray(ps["scores"], np.float32)
+    # recompute eq. 2 with numpy and compare
+    m, M = meta[:, :, 0, :], meta[:, :, 1, :]
+    re = np.maximum(q[:, None, :] * M, q[:, None, :] * m).sum(-1)
+    np.testing.assert_allclose(re, scores, rtol=1e-5)
+    # top-k indices actually have the k best scores
+    k = ps["k"]
+    for b, row in enumerate(np.asarray(ps["topk"])):
+        best = set(np.argsort(-scores[b])[:k].tolist())
+        assert set(int(i) for i in row) == best
+
+    # f16 pins agree with numpy
+    f = g["f16"]
+    bits = np.asarray(f["f32"], np.float32).astype(np.float16).view(np.uint16)
+    assert [int(b) for b in bits] == f["bits"]
+
+
+def test_lowering_produces_hlo_text():
+    cfg = ModelConfig(name="t", d_model=16, n_layer=1, n_head=2, ctx=64,
+                      vocab=32, budgets=(16,))
+    text = aot.lower_variant(
+        model.embed_fn(cfg),
+        [aot.spec((32, 16)), aot.spec((2,), aot.I32)],
+    )
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    assert "parameter(1)" in text
+
+
+def test_quick_export_manifest_schema():
+    cfg_name = "tiny-trained"
+    with tempfile.TemporaryDirectory() as d:
+        # reuse the trained weights if present, else fabricate them
+        src = os.path.join(os.path.dirname(__file__), "..", "..",
+                           "artifacts", f"{cfg_name}.weights.bin")
+        if os.path.exists(src):
+            import shutil
+            shutil.copy(src, os.path.join(d, f"{cfg_name}.weights.bin"))
+        else:
+            from compile import tensorfile
+            params = model.init_params(CONFIGS[cfg_name], seed=0)
+            tensorfile.write(os.path.join(d, f"{cfg_name}.weights.bin"),
+                             params, meta={})
+        entries = aot.export_model(CONFIGS[cfg_name], d, quick=True)
+        kinds = {e["kind"] for e in entries}
+        assert {"embed", "qkv", "post", "logits", "prefill"} <= kinds
+        for e in entries:
+            path = os.path.join(d, e["path"])
+            assert os.path.exists(path), e["path"]
+            head = open(path).read(64)
+            assert head.startswith("HloModule"), e["path"]
+            assert isinstance(e["params"], list)
+            assert all("shape" in s for s in e["inputs"])
+            assert all("shape" in s for s in e["outputs"])
+
+
+def test_model_manifest_fields():
+    m = aot.model_manifest(CONFIGS["tinyllama-125m-sim"])
+    assert m["d_model"] == 256
+    assert len(m["param_order"]) == 2 + 6 * m["n_layer"]
+    assert len(m["alibi_slopes"]) == m["n_head"]
+    # json-serializable
+    json.dumps(m)

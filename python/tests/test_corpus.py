@@ -1,0 +1,67 @@
+"""Pins the corpus formats shared with rust/src/workload/tasks.rs."""
+
+import numpy as np
+import pytest
+
+from compile import corpus
+from compile.configs import BOS, EOS
+
+
+def test_passkey_format():
+    rng = np.random.default_rng(0)
+    prompt, answer = corpus.passkey_doc(rng, 400)
+    assert prompt.startswith(f"The pass key is {answer}. Remember it. ")
+    assert prompt.endswith("What is the pass key? Answer: ")
+    assert len(answer) == 5 and answer.isdigit()
+
+
+def test_kvrecall_format():
+    rng = np.random.default_rng(1)
+    prompt, answer = corpus.kvrecall_doc(rng, 500)
+    assert f"holds {answer}. " in prompt
+    assert "Recall what " in prompt and prompt.endswith("holds: ")
+
+
+def test_raretoken_format():
+    rng = np.random.default_rng(2)
+    prompt, answer = corpus.raretoken_doc(rng, 300)
+    assert answer.startswith("zyx") and answer.endswith("qj")
+    assert prompt.endswith("Repeat the rare token: ")
+
+
+def test_alias_latest_wins():
+    rng = np.random.default_rng(3)
+    prompt, answer = corpus.alias_doc(rng, 600)
+    assert f"now holds {answer}. " in prompt
+
+
+def test_word_lists_match_rust():
+    # first/last entries pinned — rust/src/workload/tasks.rs mirrors these
+    assert corpus.WORDS[0] == "the" and corpus.WORDS[-1] == "tide"
+    assert len(corpus.WORDS) == 30
+    assert corpus.NAMES[0] == "alpha" and corpus.NAMES[-1] == "tango"
+    assert len(corpus.NAMES) == 20
+
+
+def test_encode_is_bytes():
+    ids = corpus.encode("Ab!")
+    assert ids.tolist() == [65, 98, 33]
+    assert corpus.decode_ids(ids) == "Ab!"
+    assert BOS == 256 and EOS == 257
+
+
+def test_training_batch_shape_and_range():
+    rng = np.random.default_rng(4)
+    b = corpus.training_batch(rng, 3, 128)
+    assert b.shape == (3, 129)
+    assert b.min() >= 0 and b.max() <= EOS
+    assert (b[:, 0] == BOS).all()
+
+
+def test_filler_is_sentences():
+    rng = np.random.default_rng(5)
+    f = corpus.filler(rng, 200)
+    assert len(f) == 200
+    # truncation may clip the final word; all earlier words are from WORDS
+    words = f.replace(".", "").split()[:-1]
+    assert set(words).issubset(set(corpus.WORDS))

@@ -1,0 +1,147 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the CORE signal).
+
+Hypothesis sweeps shapes/seeds; tolerances are float32-tight. Pallas runs
+under interpret=True, exactly as the exported artifacts do.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import page_score, ref, sparse_attn
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def make_case(seed, B, H, hd, T, valid_frac=1.0):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, B, H, hd)
+    kg = rand(rng, B, T, H, hd)
+    vg = rand(rng, B, T, H, hd)
+    n_valid = max(1, int(T * valid_frac))
+    mask = jnp.where(jnp.arange(T)[None, :] < n_valid, 0.0, -1e9)
+    mask = (mask * jnp.ones((B, 1))).astype(jnp.float32)
+    dist = jnp.asarray(rng.integers(0, 4 * T, size=(B, T)), jnp.float32)
+    return q, kg, vg, mask, dist
+
+
+class TestDecodeAttention:
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31),
+        B=st.sampled_from([1, 2, 4]),
+        H=st.sampled_from([1, 2, 4, 8]),
+        hd=st.sampled_from([8, 16, 32]),
+        T=st.sampled_from([128, 256, 384]),
+        valid=st.floats(0.05, 1.0),
+    )
+    def test_matches_reference(self, seed, B, H, hd, T, valid):
+        case = make_case(seed, B, H, hd, T, valid)
+        o, a = sparse_attn.attn_decode(*case)
+        o_ref, a_ref = ref.attn_decode_ref(*case)
+        np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(a, a_ref, atol=2e-6, rtol=2e-5)
+
+    def test_block_sizes_agree(self):
+        case = make_case(0, 2, 4, 16, 512)
+        o128, _ = sparse_attn.attn_decode(*case, block_t=128)
+        o64, _ = sparse_attn.attn_decode(*case, block_t=64)
+        o512, _ = sparse_attn.attn_decode(*case, block_t=512)
+        np.testing.assert_allclose(o128, o64, atol=1e-5)
+        np.testing.assert_allclose(o128, o512, atol=1e-5)
+
+    def test_non_power_of_two_budget_falls_back(self):
+        # T = 1216 (the decode_fused K*S case) must auto-tile
+        case = make_case(1, 1, 2, 8, 1216)
+        o, _ = sparse_attn.attn_decode(*case)
+        o_ref, _ = ref.attn_decode_ref(*case)
+        np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)
+
+    def test_alpha_rows_sum_to_one(self):
+        case = make_case(3, 2, 2, 8, 128, valid_frac=0.3)
+        _, a = sparse_attn.attn_decode(*case)
+        np.testing.assert_allclose(a.sum(-1), 1.0, atol=1e-5)
+
+    def test_single_valid_token(self):
+        q, kg, vg, _, dist = make_case(4, 1, 2, 8, 128)
+        mask = jnp.full((1, 128), -1e9).at[:, 0].set(0.0)
+        o, a = sparse_attn.attn_decode(q, kg, vg, mask, dist)
+        np.testing.assert_allclose(a[..., 0], 1.0, atol=1e-5)
+        np.testing.assert_allclose(o, jnp.transpose(vg[:, 0], (0, 1, 2)), atol=1e-5)
+
+    def test_alibi_prefers_near_tokens(self):
+        # identical keys: nearer token (smaller dist) must get more mass
+        B, H, hd, T = 1, 2, 8, 128
+        q = jnp.ones((B, H, hd))
+        kg = jnp.ones((B, T, H, hd))
+        vg = jnp.ones((B, T, H, hd))
+        mask = jnp.zeros((B, T))
+        dist = jnp.arange(T, dtype=jnp.float32)[None, :]
+        _, a = sparse_attn.attn_decode(q, kg, vg, mask, dist)
+        a = np.asarray(a)[0, 0]
+        assert a[0] > a[1] > a[T - 1]
+
+
+class TestPageScore:
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31),
+        B=st.sampled_from([1, 2, 4]),
+        D=st.sampled_from([16, 64, 128]),
+        P=st.sampled_from([8, 64, 256]),
+    )
+    def test_matches_reference(self, seed, B, D, P):
+        rng = np.random.default_rng(seed)
+        q = rand(rng, B, D)
+        meta = jnp.asarray(
+            np.sort(rng.normal(size=(B, P, 2, D)), axis=2), jnp.float32
+        )
+        s = page_score.page_scores(q, meta)
+        s_ref = ref.page_score_ref(q, meta)
+        np.testing.assert_allclose(s, s_ref, atol=1e-4, rtol=1e-4)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31))
+    def test_upper_bounds_true_max_dot(self, seed):
+        # Eq. 2 must upper-bound max_k q.k for keys inside the box
+        rng = np.random.default_rng(seed)
+        B, P, S, D = 1, 4, 8, 16
+        keys = rand(rng, B, P * S, D)
+        meta = ref.page_meta_ref(keys, S)
+        q = rand(rng, B, D)
+        scores = np.asarray(ref.page_score_ref(q, meta))
+        dots = np.asarray(jnp.einsum("bd,btd->bt", q, keys)).reshape(B, P, S)
+        assert (scores + 1e-4 >= dots.max(-1)).all()
+
+    def test_topk_selects_best_pages(self):
+        scores = jnp.asarray([[1.0, 5.0, 3.0, 4.0]])
+        idx = np.asarray(ref.topk_pages_ref(scores, 2))
+        assert sorted(idx[0].tolist()) == [1, 3]
+
+
+class TestEntropy:
+    def test_uniform_alpha(self):
+        a = jnp.full((1, 2, 8), 1 / 8)
+        h = ref.entropy_ref(a)
+        np.testing.assert_allclose(h, np.log(8), atol=1e-6)
+
+    def test_peaked_alpha(self):
+        a = jnp.zeros((1, 1, 8)).at[0, 0, 3].set(1.0)
+        h = ref.entropy_ref(a)
+        assert float(h[0]) < 1e-6
+
+
+class TestAlibiSlopes:
+    @pytest.mark.parametrize("H", [2, 4, 8, 16])
+    def test_geometric(self, H):
+        s = ref.alibi_slopes(H)
+        assert len(s) == H
+        ratios = s[1:] / s[:-1]
+        np.testing.assert_allclose(ratios, ratios[0], rtol=1e-6)
+        assert s[0] < 1.0 and (s > 0).all()

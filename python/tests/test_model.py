@@ -1,0 +1,190 @@
+"""L2 model consistency: the split decode-path executables must reproduce
+the dense training forward exactly (same weights, same tokens).
+
+This is the python mirror of what the Rust engine does per token —
+if this passes and the Rust golden tests pass, the serving path computes
+the same function as the trained model.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import ModelConfig
+from compile.kernels import ref
+
+
+CFG = ModelConfig(name="t", d_model=32, n_layer=2, n_head=4, ctx=128,
+                  vocab=64, budgets=(32,))
+
+
+@pytest.fixture(scope="module")
+def params():
+    p = model.init_params(CFG, seed=3)
+    return {k: jnp.asarray(v) for k, v in p.items()}
+
+
+def dense_next_token_logits(params, tokens):
+    """Teacher-forcing forward; logits for every position."""
+    H, hd, L = CFG.n_head, CFG.head_dim, CFG.n_layer
+    slopes = jnp.asarray(ref.alibi_slopes(H))
+    x = jnp.asarray([tokens])
+    B, T = x.shape
+    h = jnp.take(params["embed"], x, axis=0)
+    pos = jnp.arange(T)
+    dist = (pos[:, None] - pos[None, :]).astype(jnp.float32)
+    bias = -slopes[:, None, None] * jnp.maximum(dist, 0.0)[None]
+    bias = jnp.where((dist >= 0)[None], bias, -1e9)
+    scale = 1.0 / np.sqrt(hd)
+    for l in range(L):
+        xn = model.rmsnorm(h, params[f"ln1.{l}"])
+        qkv = xn @ params[f"wqkv.{l}"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(B, T, H, hd)
+        k = k.reshape(B, T, H, hd)
+        v = v.reshape(B, T, H, hd)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale + bias[None]
+        alpha = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", alpha, v)
+        h = h + o.reshape(B, T, -1) @ params[f"wo.{l}"]
+        h = h + model.mlp(model.rmsnorm(h, params[f"ln2.{l}"]),
+                          params[f"w1.{l}"], params[f"w2.{l}"], CFG.act)
+    return model.rmsnorm(h, params["lnf"]) @ params["embed"].T
+
+
+def decode_path_logits(params, tokens, budget=128):
+    """Step-by-step decode using the exported function family with a
+    FullCache gather — mirrors rust/src/engine exactly."""
+    embed_f = model.embed_fn(CFG)
+    qkv_f = model.qkv_fn(CFG)
+    post_f = model.post_fn(CFG)
+    logits_f = model.logits_fn(CFG)
+    H, hd, L = CFG.n_head, CFG.head_dim, CFG.n_layer
+    d_kv = H * hd
+    T = budget
+    kcache = [np.zeros((T, H, hd), np.float32) for _ in range(L)]
+    vcache = [np.zeros((T, H, hd), np.float32) for _ in range(L)]
+    out_logits = []
+    for t, tok in enumerate(tokens):
+        (h,) = embed_f(params["embed"], jnp.asarray([tok]))
+        for l in range(L):
+            q, k, v = qkv_f(params[f"ln1.{l}"], params[f"wqkv.{l}"], h)
+            kcache[l][t] = np.asarray(k[0])
+            vcache[l][t] = np.asarray(v[0])
+            mask = np.full((1, T), -1e9, np.float32)
+            mask[0, : t + 1] = 0.0
+            dist = np.zeros((1, T), np.float32)
+            dist[0, : t + 1] = t - np.arange(t + 1)
+            h, _, _ = post_f(
+                params[f"wo.{l}"], params[f"ln2.{l}"],
+                params[f"w1.{l}"], params[f"w2.{l}"],
+                h, q,
+                jnp.asarray(kcache[l][None]), jnp.asarray(vcache[l][None]),
+                jnp.asarray(mask), jnp.asarray(dist),
+            )
+        (lg,) = logits_f(params["lnf"], params["embed"], h)
+        out_logits.append(np.asarray(lg[0]))
+    return np.stack(out_logits)
+
+
+def test_decode_path_matches_dense_forward(params):
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, CFG.vocab, size=12).tolist()
+    dense = np.asarray(dense_next_token_logits(params, tokens))[0]
+    stepwise = decode_path_logits(params, tokens)
+    np.testing.assert_allclose(stepwise, dense, atol=5e-4, rtol=5e-4)
+
+
+def test_prefill_fn_matches_decode_path(params):
+    rng = np.random.default_rng(1)
+    tokens = rng.integers(0, CFG.vocab, size=10).tolist()
+    L, H, hd, C, Tp = CFG.n_layer, CFG.n_head, CFG.head_dim, 4, 64
+    pre_f = model.prefill_fn(CFG)
+    names = model.param_names(CFG)
+    wargs = [params[n] for n in names]
+    kbuf = jnp.zeros((L, 1, Tp, H, hd))
+    vbuf = jnp.zeros((L, 1, Tp, H, hd))
+    done = 0
+    while done < len(tokens):
+        take = min(C, len(tokens) - done)
+        chunk = tokens[done:done + take] + [0] * (C - take)
+        kc, vc, h_last = pre_f(*wargs, jnp.asarray([chunk], jnp.int32),
+                               jnp.asarray(done, jnp.int32), kbuf, vbuf)
+        kbuf = jax.lax.dynamic_update_slice(
+            kbuf, kc[:, :, :take], (0, 0, done, 0, 0))
+        vbuf = jax.lax.dynamic_update_slice(
+            vbuf, vc[:, :, :take], (0, 0, done, 0, 0))
+        done += take
+    # compare the stored keys of layer 0 against the decode path's cache
+    embed_f = model.embed_fn(CFG)
+    qkv_f = model.qkv_fn(CFG)
+    post_f = model.post_fn(CFG)
+    T = 64
+    kexp = np.zeros((T, H, hd), np.float32)
+    h = None
+    for t, tok in enumerate(tokens):
+        (h,) = embed_f(params["embed"], jnp.asarray([tok]))
+        for l in range(CFG.n_layer):
+            q, k, v = qkv_f(params[f"ln1.{l}"], params[f"wqkv.{l}"], h)
+            if l == 0:
+                kexp[t] = np.asarray(k[0])
+            # full-cache attention to propagate h correctly
+            # (reuse the prefill buffer as the gather source)
+            mask = np.full((1, T), -1e9, np.float32)
+            mask[0, : t + 1] = 0.0
+            dist = np.zeros((1, T), np.float32)
+            dist[0, : t + 1] = t - np.arange(t + 1)
+            kg = np.asarray(kbuf[l, 0][:T])[None]
+            vg = np.asarray(vbuf[l, 0][:T])[None]
+            # overwrite positions > t with zeros to avoid peeking
+            h, _, _ = post_f(
+                params[f"wo.{l}"], params[f"ln2.{l}"],
+                params[f"w1.{l}"], params[f"w2.{l}"],
+                h, q, jnp.asarray(kg), jnp.asarray(vg),
+                jnp.asarray(mask), jnp.asarray(dist),
+            )
+    np.testing.assert_allclose(
+        np.asarray(kbuf[0, 0, : len(tokens)]), kexp[: len(tokens)],
+        atol=5e-4, rtol=5e-4,
+    )
+
+
+def test_param_order_is_stable(params):
+    names = model.param_names(CFG)
+    assert names[0] == "embed"
+    assert names[1] == "lnf"
+    assert names[2:8] == ["ln1.0", "wqkv.0", "wo.0", "ln2.0", "w1.0", "w2.0"]
+    shapes = model.param_shapes(CFG)
+    assert set(names) == set(shapes)
+
+
+def test_init_scaling():
+    p = model.init_params(CFG, seed=0)
+    # residual projections are downscaled by sqrt(2L)
+    assert np.std(p["wo.0"]) < np.std(p["wqkv.0"])
+    assert (p["ln1.0"] == 1.0).all()
+
+
+def test_decode_fused_matches_decode_path(params):
+    """The in-graph fused variant must agree with the orchestrated path
+    while the page count is within budget (selection = all pages)."""
+    S, P, K = 4, 8, 8  # budget covers everything -> exact match expected
+    fused = model.decode_fused_fn(CFG, P, K, S)
+    names = model.param_names(CFG)
+    wargs = [params[n] for n in names]
+    L, H, hd, d = CFG.n_layer, CFG.n_head, CFG.head_dim, CFG.d_model
+    kc = jnp.zeros((L, 1, P * S, H, hd))
+    vc = jnp.zeros((L, 1, P * S, H, hd))
+    meta = jnp.zeros((L, 1, P, 2, d))
+    rng = np.random.default_rng(2)
+    tokens = rng.integers(0, CFG.vocab, size=8).tolist()
+    fused_logits = None
+    for t, tok in enumerate(tokens):
+        kc, vc, meta, fused_logits, _sel = fused(
+            *wargs, jnp.asarray([tok], jnp.int32), jnp.asarray(t, jnp.int32),
+            kc, vc, meta)
+    stepwise = decode_path_logits(params, tokens, budget=P * S)
+    np.testing.assert_allclose(
+        np.asarray(fused_logits)[0], stepwise[-1], atol=5e-4, rtol=5e-4)

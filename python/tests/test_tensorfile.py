@@ -1,0 +1,45 @@
+"""Tensorfile container roundtrip (python writer <-> python reader; the
+rust reader is pinned by rust/src/util/tensorfile.rs tests + golden)."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import tensorfile
+
+
+def test_roundtrip_multiple_dtypes():
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.asarray([1, -2, 3], np.int32),
+        "c": np.asarray([1.5, -0.25], np.float16),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.bin")
+        tensorfile.write(path, tensors, meta={"x": 7})
+        out, meta = tensorfile.read(path)
+    assert meta == {"x": 7}
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+        assert out[k].dtype == tensors[k].dtype
+
+
+def test_alignment():
+    tensors = {"a": np.ones(3, np.float32), "b": np.ones(5, np.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.bin")
+        tensorfile.write(path, tensors)
+        raw = open(path, "rb").read()
+        out, _ = tensorfile.read(path)
+    assert raw[:4] == b"TSWT"
+    np.testing.assert_array_equal(out["b"], np.ones(5, np.float32))
+
+
+def test_rejects_bad_magic():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "bad.bin")
+        open(path, "wb").write(b"NOPE" + b"\0" * 16)
+        with pytest.raises(AssertionError):
+            tensorfile.read(path)

@@ -1,0 +1,141 @@
+//! Serving-side configuration: model descriptions come from the artifact
+//! manifest (single source of truth is python/compile/configs.py); this
+//! module adds everything the *serving* layer chooses at runtime — page
+//! size, token budget, selection policy, batching, KV dtype — mirroring the
+//! paper's §4.13 hyperparameters (page size 16, selection ratio 0.3, batch
+//! timeout 50ms).
+
+use crate::sparsity::PolicyKind;
+
+/// KV cache storage precision (paper §3.1: "FP16/INT8 KV formats").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvDtype {
+    F32,
+    F16,
+    /// 8-bit with one symmetric scale per (page, channel-group); see
+    /// `kvcache::dtype` for the exact quantizer.
+    Int8,
+}
+
+impl KvDtype {
+    pub fn bytes_per_value(&self) -> f64 {
+        match self {
+            KvDtype::F32 => 4.0,
+            KvDtype::F16 => 2.0,
+            KvDtype::Int8 => 1.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        match s {
+            "f32" => Some(KvDtype::F32),
+            "f16" => Some(KvDtype::F16),
+            "int8" | "i8" => Some(KvDtype::Int8),
+            _ => None,
+        }
+    }
+}
+
+/// Per-run serving configuration. Defaults follow the paper's chosen
+/// hyperparameters (§4.13.1).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub model: String,
+    /// tokens per KV page (paper default 16)
+    pub page_size: usize,
+    /// decode attention token budget (paper: 2048-token budget); must match
+    /// one of the exported `post` artifact T variants.
+    pub budget: usize,
+    /// selection policy for non-forced pages
+    pub policy: PolicyKind,
+    /// pages always kept: the attention-sink prefix...
+    pub sink_pages: usize,
+    /// ...and the most recent pages (local window)
+    pub recent_pages: usize,
+    pub kv_dtype: KvDtype,
+    /// decode micro-batch size; must match a compiled `qkv/post` B variant
+    pub max_batch: usize,
+    /// continuous-batching admission window (paper: 50ms)
+    pub batch_timeout_ms: f64,
+    /// cap on concurrently active sequences
+    pub max_active: usize,
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            model: "tiny-trained".to_string(),
+            page_size: 16,
+            budget: 256,
+            policy: PolicyKind::TinyServe,
+            sink_pages: 1,
+            recent_pages: 2,
+            kv_dtype: KvDtype::F32,
+            max_batch: 4,
+            batch_timeout_ms: 50.0,
+            max_active: 64,
+            seed: 42,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Number of selectable pages for a given cache length.
+    pub fn budget_pages(&self) -> usize {
+        self.budget / self.page_size
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.page_size > 0, "page_size must be positive");
+        anyhow::ensure!(
+            self.budget % self.page_size == 0,
+            "budget {} must be a multiple of page_size {}",
+            self.budget,
+            self.page_size
+        );
+        anyhow::ensure!(
+            self.budget_pages() > self.sink_pages + self.recent_pages,
+            "budget too small for sink+recent forced pages"
+        );
+        anyhow::ensure!(self.max_batch > 0 && self.max_active >= self.max_batch);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ServingConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_misaligned_budget() {
+        let cfg = ServingConfig { budget: 100, page_size: 16, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_tiny_budget() {
+        let cfg = ServingConfig {
+            budget: 32,
+            page_size: 16,
+            sink_pages: 1,
+            recent_pages: 2,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(KvDtype::F32.bytes_per_value(), 4.0);
+        assert_eq!(KvDtype::F16.bytes_per_value(), 2.0);
+        assert_eq!(KvDtype::Int8.bytes_per_value(), 1.0);
+        assert_eq!(KvDtype::parse("f16"), Some(KvDtype::F16));
+        assert_eq!(KvDtype::parse("bogus"), None);
+    }
+}

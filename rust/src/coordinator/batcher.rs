@@ -1,0 +1,228 @@
+//! Continuous batcher: admission queue + active set, with the paper's
+//! batch-timeout grouping (§4.13.1, 50ms default).
+//!
+//! Pure state machine over virtual time — the server drives it with real
+//! measured step durations, tests drive it with synthetic clocks.
+
+use std::collections::VecDeque;
+
+/// A queued request the batcher schedules (engine-agnostic).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueuedItem {
+    pub request_idx: usize,
+    pub arrival_s: f64,
+    pub prompt_len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_active: usize,
+    pub batch_timeout_s: f64,
+    /// admit at most this many prefills per scheduling round (prefill is
+    /// expensive; interleaving keeps decode latency bounded)
+    pub prefill_per_round: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_active: 8, batch_timeout_s: 0.05, prefill_per_round: 2 }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct BatcherStats {
+    pub admitted: u64,
+    pub timeout_flushes: u64,
+    pub full_flushes: u64,
+    pub max_queue_depth: usize,
+}
+
+/// Decision for one scheduling round.
+#[derive(Debug, PartialEq)]
+pub enum Round {
+    /// admit these queued items (prefill them), then decode
+    Admit(Vec<QueuedItem>),
+    /// nothing to admit; decode the active set
+    Decode,
+    /// nothing runnable; sleep until this virtual time (next arrival or
+    /// timeout expiry)
+    Idle(f64),
+}
+
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+    queue: VecDeque<QueuedItem>,
+    active: usize,
+    /// arrival time of the oldest queued item (timeout anchor)
+    oldest_wait: Option<f64>,
+    pub stats: BatcherStats,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+            active: 0,
+            oldest_wait: None,
+            stats: BatcherStats::default(),
+        }
+    }
+
+    pub fn enqueue(&mut self, item: QueuedItem) {
+        if self.oldest_wait.is_none() {
+            self.oldest_wait = Some(item.arrival_s);
+        }
+        self.queue.push_back(item);
+        self.stats.max_queue_depth = self.stats.max_queue_depth.max(self.queue.len());
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    pub fn on_finished(&mut self, n: usize) {
+        self.active -= n;
+    }
+
+    /// Decide what to do at virtual time `now`. `next_arrival`: the next
+    /// trace arrival after `now`, if any.
+    pub fn schedule(&mut self, now: f64, next_arrival: Option<f64>) -> Round {
+        let free = self.cfg.max_active.saturating_sub(self.active);
+        if free > 0 && !self.queue.is_empty() {
+            let timeout_hit = self
+                .oldest_wait
+                .map(|t| now - t >= self.cfg.batch_timeout_s)
+                .unwrap_or(false);
+            let batch_full = self.queue.len() >= free || self.active > 0;
+            // admit when the queue can fill capacity, when we already have
+            // active work (continuous batching: don't stall decodes), or
+            // when the oldest request has waited out the batch timeout
+            if batch_full || timeout_hit || next_arrival.is_none() {
+                if timeout_hit && !batch_full {
+                    self.stats.timeout_flushes += 1;
+                } else {
+                    self.stats.full_flushes += 1;
+                }
+                let n = free.min(self.cfg.prefill_per_round).min(self.queue.len());
+                let items: Vec<QueuedItem> = self.queue.drain(..n).collect();
+                self.active += items.len();
+                self.stats.admitted += items.len() as u64;
+                self.oldest_wait = self.queue.front().map(|i| i.arrival_s);
+                return Round::Admit(items);
+            }
+            // hold for more arrivals, bounded by the timeout
+            let deadline = self.oldest_wait.unwrap() + self.cfg.batch_timeout_s;
+            let wake = next_arrival.map(|a| a.min(deadline)).unwrap_or(deadline);
+            if self.active > 0 {
+                return Round::Decode;
+            }
+            return Round::Idle(wake.max(now + 1e-9));
+        }
+        if self.active > 0 {
+            return Round::Decode;
+        }
+        match next_arrival {
+            Some(a) => Round::Idle(a.max(now + 1e-9)),
+            None => Round::Idle(f64::INFINITY),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(idx: usize, t: f64) -> QueuedItem {
+        QueuedItem { request_idx: idx, arrival_s: t, prompt_len: 100 }
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        assert_eq!(b.schedule(0.0, Some(1.5)), Round::Idle(1.5));
+        assert_eq!(b.schedule(0.0, None), Round::Idle(f64::INFINITY));
+    }
+
+    #[test]
+    fn waits_for_timeout_then_flushes() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_active: 8,
+            batch_timeout_s: 0.05,
+            prefill_per_round: 8,
+        });
+        b.enqueue(item(0, 0.0));
+        // a single queued item with upcoming arrivals: hold
+        match b.schedule(0.01, Some(0.02)) {
+            Round::Idle(t) => assert!((t - 0.02).abs() < 1e-9),
+            r => panic!("expected idle, got {r:?}"),
+        }
+        // timeout expired: admit
+        match b.schedule(0.06, Some(0.1)) {
+            Round::Admit(v) => assert_eq!(v.len(), 1),
+            r => panic!("expected admit, got {r:?}"),
+        }
+        assert_eq!(b.stats.timeout_flushes, 1);
+        assert_eq!(b.active(), 1);
+    }
+
+    #[test]
+    fn admits_immediately_when_queue_fills_capacity() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_active: 2,
+            batch_timeout_s: 10.0,
+            prefill_per_round: 2,
+        });
+        b.enqueue(item(0, 0.0));
+        b.enqueue(item(1, 0.0));
+        b.enqueue(item(2, 0.0));
+        match b.schedule(0.001, Some(5.0)) {
+            Round::Admit(v) => assert_eq!(v.len(), 2),
+            r => panic!("{r:?}"),
+        }
+        assert_eq!(b.queue_len(), 1);
+        // at capacity now: decode
+        assert_eq!(b.schedule(0.002, Some(5.0)), Round::Decode);
+        b.on_finished(2);
+        assert_eq!(b.active(), 0);
+    }
+
+    #[test]
+    fn continuous_batching_admits_alongside_active() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_active: 4,
+            batch_timeout_s: 10.0,
+            prefill_per_round: 1,
+        });
+        b.enqueue(item(0, 0.0));
+        b.enqueue(item(1, 0.0));
+        let _ = b.schedule(0.0, None); // admit both? prefill_per_round=1
+        assert_eq!(b.active(), 1);
+        // active work present -> new arrivals admitted without timeout
+        match b.schedule(0.001, Some(9.0)) {
+            Round::Admit(v) => assert_eq!(v.len(), 1),
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn respects_prefill_per_round() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_active: 8,
+            batch_timeout_s: 0.0,
+            prefill_per_round: 2,
+        });
+        for i in 0..6 {
+            b.enqueue(item(i, 0.0));
+        }
+        match b.schedule(0.1, None) {
+            Round::Admit(v) => assert_eq!(v.len(), 2),
+            r => panic!("{r:?}"),
+        }
+        assert_eq!(b.queue_len(), 4);
+    }
+}

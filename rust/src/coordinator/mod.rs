@@ -1,0 +1,12 @@
+//! L3 coordination: continuous batcher, session manager, request router and
+//! the serving loop (paper §3.1 "Modular Scheduling Pipeline" + §4.4).
+
+pub mod batcher;
+pub mod router;
+pub mod server;
+pub mod session;
+
+pub use batcher::{Batcher, BatcherConfig, Round};
+pub use router::Router;
+pub use server::{serve_trace, ServeOptions, ServeReport};
+pub use session::SessionStore;

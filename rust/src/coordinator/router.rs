@@ -1,0 +1,129 @@
+//! Request router over N (virtual) workers: session-affine least-loaded
+//! assignment with migration when the pinned worker is overloaded.
+//!
+//! On this single-core box the workers are virtual (the cost model prices
+//! real multi-GPU dispatch, Table 8); the routing *logic* — affinity,
+//! load balance, migration trade-off — is the real, tested artifact.
+
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    pub routed: u64,
+    pub affinity_hits: u64,
+    pub migrations_triggered: u64,
+    pub rebalances: u64,
+}
+
+pub struct Router {
+    loads: Vec<usize>,
+    /// load imbalance factor that triggers migration away from the pinned
+    /// worker: migrate when pinned load > factor * min load + 1
+    pub imbalance_factor: f64,
+    pub stats: RouterStats,
+}
+
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+pub struct RouteDecision {
+    pub worker: usize,
+    /// session pages must move from this worker first
+    pub migrate_from: Option<usize>,
+}
+
+impl Router {
+    pub fn new(n_workers: usize) -> Router {
+        assert!(n_workers > 0);
+        Router {
+            loads: vec![0; n_workers],
+            imbalance_factor: 2.0,
+            stats: RouterStats::default(),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.loads.len()
+    }
+
+    pub fn load(&self, w: usize) -> usize {
+        self.loads[w]
+    }
+
+    fn least_loaded(&self) -> usize {
+        (0..self.loads.len()).min_by_key(|&w| self.loads[w]).unwrap()
+    }
+
+    /// Route a request. `pinned`: worker holding the session's cache.
+    pub fn route(&mut self, pinned: Option<usize>) -> RouteDecision {
+        self.stats.routed += 1;
+        let best = self.least_loaded();
+        let d = match pinned {
+            Some(p) => {
+                let threshold =
+                    (self.loads[best] as f64 * self.imbalance_factor) + 1.0;
+                if (self.loads[p] as f64) <= threshold {
+                    self.stats.affinity_hits += 1;
+                    RouteDecision { worker: p, migrate_from: None }
+                } else {
+                    self.stats.migrations_triggered += 1;
+                    RouteDecision { worker: best, migrate_from: Some(p) }
+                }
+            }
+            None => RouteDecision { worker: best, migrate_from: None },
+        };
+        self.loads[d.worker] += 1;
+        d
+    }
+
+    pub fn complete(&mut self, worker: usize) {
+        debug_assert!(self.loads[worker] > 0);
+        self.loads[worker] -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spreads_fresh_requests() {
+        let mut r = Router::new(4);
+        let workers: Vec<usize> = (0..8).map(|_| r.route(None).worker).collect();
+        for w in 0..4 {
+            assert_eq!(workers.iter().filter(|&&x| x == w).count(), 2);
+        }
+    }
+
+    #[test]
+    fn session_affinity_under_balance() {
+        let mut r = Router::new(4);
+        let d = r.route(Some(2));
+        assert_eq!(d.worker, 2);
+        assert_eq!(d.migrate_from, None);
+        assert_eq!(r.stats.affinity_hits, 1);
+    }
+
+    #[test]
+    fn migrates_away_from_overload() {
+        let mut r = Router::new(2);
+        for _ in 0..6 {
+            let d = r.route(None);
+            // manually pin everything on worker 0 to force imbalance
+            if d.worker == 1 {
+                r.complete(1);
+                r.loads[0] += 1;
+            }
+        }
+        assert!(r.load(0) >= 6);
+        let d = r.route(Some(0));
+        assert_eq!(d.worker, 1);
+        assert_eq!(d.migrate_from, Some(0));
+        assert_eq!(r.stats.migrations_triggered, 1);
+    }
+
+    #[test]
+    fn complete_decrements() {
+        let mut r = Router::new(2);
+        let d = r.route(None);
+        assert_eq!(r.load(d.worker), 1);
+        r.complete(d.worker);
+        assert_eq!(r.load(d.worker), 0);
+    }
+}

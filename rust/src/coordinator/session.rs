@@ -1,0 +1,276 @@
+//! Session manager: cross-request KV reuse (paper §4.4.2).
+//!
+//! After a request's prefill completes, its prompt-prefix cache can be
+//! snapshotted under the session id. A follow-up whose prompt extends the
+//! stored token prefix restores the snapshot and prefills only the suffix.
+//! Snapshots share full pages with live sequences by refcount (see
+//! `kvcache::seq`), so storage cost is one partial page per snapshot.
+
+use std::collections::HashMap;
+
+use crate::kvcache::{PagePool, SeqCache};
+
+#[derive(Debug, Clone, Default)]
+pub struct SessionStats {
+    pub stores: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub reused_tokens: u64,
+    pub evictions: u64,
+    /// simulated cross-worker migrations (router-driven)
+    pub migrations: u64,
+    pub migrated_bytes: u64,
+}
+
+impl SessionStats {
+    pub fn reuse_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Stored {
+    cache: SeqCache,
+    /// tokens covered by the snapshot (prompt prefix incl. BOS)
+    tokens: Vec<i32>,
+    last_used: u64,
+    /// virtual worker currently holding the pages (router pinning)
+    pub worker: usize,
+}
+
+/// LRU-bounded store of prompt-prefix snapshots.
+pub struct SessionStore {
+    map: HashMap<u64, Stored>,
+    max_sessions: usize,
+    clock: u64,
+    pub stats: SessionStats,
+}
+
+impl SessionStore {
+    pub fn new(max_sessions: usize) -> SessionStore {
+        SessionStore {
+            map: HashMap::new(),
+            max_sessions,
+            clock: 0,
+            stats: SessionStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Store (or refresh) a session snapshot. `cache` is snapshotted;
+    /// the previous snapshot for the id (if any) is released.
+    pub fn store(
+        &mut self,
+        id: u64,
+        cache: &SeqCache,
+        tokens: &[i32],
+        worker: usize,
+        pool: &mut PagePool,
+    ) {
+        self.clock += 1;
+        let snap = cache.snapshot(pool);
+        if let Some(mut old) = self.map.remove(&id) {
+            old.cache.clear(pool);
+        }
+        self.map.insert(
+            id,
+            Stored {
+                cache: snap,
+                tokens: tokens.to_vec(),
+                last_used: self.clock,
+                worker,
+            },
+        );
+        self.stats.stores += 1;
+        // LRU eviction
+        while self.map.len() > self.max_sessions {
+            let lru = *self
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k)
+                .unwrap();
+            if let Some(mut s) = self.map.remove(&lru) {
+                s.cache.clear(pool);
+            }
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Try to reuse a stored snapshot for a new prompt: the *longest common
+    /// token prefix* is restored at page granularity (vLLM-style prefix
+    /// caching), so follow-ups that share the session context but ask a
+    /// different question still reuse the context pages. Returns the
+    /// restored cache and the number of reused tokens; the engine prefills
+    /// only the remainder. At least one prompt token is left pending.
+    pub fn try_reuse(
+        &mut self,
+        id: u64,
+        prompt: &[i32],
+        pool: &mut PagePool,
+    ) -> Option<(SeqCache, usize)> {
+        self.clock += 1;
+        let clock = self.clock;
+        let min_reuse = pool.page_size; // not worth restoring below one page
+        match self.map.get_mut(&id) {
+            Some(s) => {
+                let common = s
+                    .tokens
+                    .iter()
+                    .zip(prompt.iter())
+                    .take_while(|(a, b)| a == b)
+                    .count()
+                    .min(prompt.len().saturating_sub(1));
+                if common < min_reuse {
+                    self.stats.misses += 1;
+                    return None;
+                }
+                s.last_used = clock;
+                let (restored, covered) =
+                    SeqCache::restore_prefix(&s.cache, pool, common);
+                if covered == 0 {
+                    self.stats.misses += 1;
+                    return None;
+                }
+                self.stats.hits += 1;
+                self.stats.reused_tokens += covered as u64;
+                Some((restored, covered))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Which virtual worker holds the session's pages (for the router).
+    pub fn worker_of(&self, id: u64) -> Option<usize> {
+        self.map.get(&id).map(|s| s.worker)
+    }
+
+    /// Simulated migration of a session's pages to another worker:
+    /// accounts bytes over the inter-GPU link (cost model consumes this).
+    pub fn migrate(&mut self, id: u64, to_worker: usize, pool: &PagePool) -> usize {
+        if let Some(s) = self.map.get_mut(&id) {
+            if s.worker != to_worker {
+                s.worker = to_worker;
+                let bytes = s.cache.resident * pool.d_kv * 2 * 4 * pool.n_layers;
+                self.stats.migrations += 1;
+                self.stats.migrated_bytes += bytes as u64;
+                return bytes;
+            }
+        }
+        0
+    }
+
+    pub fn clear(&mut self, pool: &mut PagePool) {
+        for (_, mut s) in self.map.drain() {
+            s.cache.clear(pool);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KvDtype;
+
+    fn fill(pool: &mut PagePool, n: usize) -> SeqCache {
+        let mut seq = SeqCache::new();
+        for i in 0..n {
+            let (page, slot) = seq.slot_for_next(pool);
+            pool.write_token(page, slot, 0, &[i as f32; 4], &[i as f32; 4]);
+            seq.commit_token();
+        }
+        seq
+    }
+
+    #[test]
+    fn prefix_hit_and_miss() {
+        let mut pool = PagePool::new(1, 4, 4, KvDtype::F32);
+        let mut store = SessionStore::new(4);
+        let seq = fill(&mut pool, 6);
+        store.store(1, &seq, &[10, 11, 12, 13, 14, 15], 0, &mut pool);
+
+        // extending prompt -> hit
+        let (restored, reused) = store
+            .try_reuse(1, &[10, 11, 12, 13, 14, 15, 16, 17], &mut pool)
+            .expect("prefix hit");
+        assert_eq!(reused, 6);
+        assert_eq!(restored.pos, 6);
+
+        // diverging prompt -> miss
+        assert!(store.try_reuse(1, &[10, 99], &mut pool).is_none());
+        // unknown session -> miss
+        assert!(store.try_reuse(7, &[10], &mut pool).is_none());
+        assert_eq!(store.stats.hits, 1);
+        assert_eq!(store.stats.misses, 2);
+
+        let mut restored = restored;
+        restored.clear(&mut pool);
+        let mut seq = seq;
+        seq.clear(&mut pool);
+        store.clear(&mut pool);
+        assert_eq!(pool.pages_in_use(), 0);
+        pool.validate().unwrap();
+    }
+
+    #[test]
+    fn lru_eviction_releases_pages() {
+        let mut pool = PagePool::new(1, 4, 4, KvDtype::F32);
+        let mut store = SessionStore::new(2);
+        for id in 0..3u64 {
+            let mut seq = fill(&mut pool, 4);
+            store.store(id, &seq, &[id as i32; 4], 0, &mut pool);
+            seq.clear(&mut pool);
+        }
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.stats.evictions, 1);
+        assert!(store.try_reuse(0, &[0; 8], &mut pool).is_none(), "0 was LRU");
+        store.clear(&mut pool);
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn restore_after_original_freed() {
+        // snapshot must stay valid after the live sequence is cleared
+        let mut pool = PagePool::new(1, 4, 4, KvDtype::F32);
+        let mut store = SessionStore::new(4);
+        let mut seq = fill(&mut pool, 5);
+        store.store(9, &seq, &[1, 2, 3, 4, 5], 0, &mut pool);
+        seq.clear(&mut pool);
+        let (mut r, reused) = store.try_reuse(9, &[1, 2, 3, 4, 5, 6], &mut pool).unwrap();
+        assert_eq!(reused, 5);
+        assert_eq!(pool.key_row(r.pages[0].id, 0, 2), vec![2.0; 4]);
+        r.clear(&mut pool);
+        store.clear(&mut pool);
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn migration_accounting() {
+        let mut pool = PagePool::new(2, 4, 4, KvDtype::F32);
+        let mut store = SessionStore::new(4);
+        let mut seq = fill(&mut pool, 8);
+        store.store(1, &seq, &[0; 8], 0, &mut pool);
+        seq.clear(&mut pool);
+        assert_eq!(store.worker_of(1), Some(0));
+        let bytes = store.migrate(1, 2, &pool);
+        assert!(bytes > 0);
+        assert_eq!(store.worker_of(1), Some(2));
+        assert_eq!(store.migrate(1, 2, &pool), 0, "already there");
+        assert_eq!(store.stats.migrations, 1);
+        store.clear(&mut pool);
+    }
+}

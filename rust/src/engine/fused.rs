@@ -1,0 +1,139 @@
+//! Fully-fused decode variant: the `decode_fused` artifact runs paper
+//! Algorithm 1 *in-graph* — Pallas page scoring, top-K, gather and fused
+//! attention inside one executable, with the KV cache and bounding-box
+//! metadata round-tripping as whole tensors.
+//!
+//! This is the "Fused Kernel" ablation comparator for the Rust-orchestrated
+//! path (`Engine::decode_step`). On CPU PJRT the tuple result forces a
+//! host copy of the full cache every step, so the orchestrated path wins
+//! here; on a real accelerator the cache would stay device-resident and
+//! the trade-off inverts — see EXPERIMENTS.md §T2 notes.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{ArtifactInfo, Input, Manifest, ModelRuntime};
+
+pub struct FusedEngine {
+    pub rt: ModelRuntime,
+    art: ArtifactInfo,
+    /// host mirrors of the device state [L, B, P*S, H, hd] / [L, B, P, 2, d]
+    kcache: Vec<f32>,
+    vcache: Vec<f32>,
+    meta: Vec<f32>,
+    pub n_pages: usize,
+    pub k_pages: usize,
+    pub page_size: usize,
+    pub pos: usize,
+    vocab: usize,
+}
+
+impl FusedEngine {
+    pub fn new(artifacts_dir: &Path, model: &str) -> Result<FusedEngine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Self::from_manifest(&manifest, model)
+    }
+
+    pub fn from_manifest(manifest: &Manifest, model: &str) -> Result<FusedEngine> {
+        let rt = ModelRuntime::from_manifest(manifest, model)?;
+        let art = rt
+            .info
+            .artifacts
+            .iter()
+            .find(|a| a.kind == "decode_fused")
+            .context("model has no decode_fused artifact")?
+            .clone();
+        let p = art.n_pages.context("n_pages")?;
+        let k = art.k_pages.context("k_pages")?;
+        let s = art.page_size.context("page_size")?;
+        let info = &rt.info;
+        let (l, h, hd, d) = (info.n_layer, info.n_head, info.head_dim, info.d_model);
+        let cache_len = l * p * s * h * hd;
+        Ok(FusedEngine {
+            kcache: vec![0.0; cache_len],
+            vcache: vec![0.0; cache_len],
+            meta: vec![0.0; l * p * 2 * d],
+            n_pages: p,
+            k_pages: k,
+            page_size: s,
+            pos: 0,
+            vocab: info.vocab,
+            art,
+            rt,
+        })
+    }
+
+    pub fn reset(&mut self) {
+        self.kcache.fill(0.0);
+        self.vcache.fill(0.0);
+        self.meta.fill(0.0);
+        self.pos = 0;
+    }
+
+    /// One fused decode step: feeds `token` at the current position and
+    /// returns the next-token logits. Returns the selected page indices of
+    /// the last layer as a byproduct (instrumentation parity with the
+    /// orchestrated path).
+    pub fn step(&mut self, token: i32) -> Result<(Vec<f32>, Vec<i32>)> {
+        anyhow::ensure!(
+            self.pos < self.n_pages * self.page_size,
+            "fused cache full ({} tokens)",
+            self.pos
+        );
+        let info = &self.rt.info;
+        let (l, h, hd, d) = (info.n_layer, info.n_head, info.head_dim, info.d_model);
+        let (p, s) = (self.n_pages, self.page_size);
+        let out = self.rt.run(
+            &self.art,
+            None,
+            &[
+                Input::I32(&[token], &[1]),
+                Input::I32(&[self.pos as i32], &[]),
+                Input::F32(&self.kcache, &[l, 1, p * s, h, hd]),
+                Input::F32(&self.vcache, &[l, 1, p * s, h, hd]),
+                Input::F32(&self.meta, &[l, 1, p, 2, d]),
+            ],
+        )?;
+        crate::runtime::literal_into(&out[0], &mut self.kcache)?;
+        crate::runtime::literal_into(&out[1], &mut self.vcache)?;
+        crate::runtime::literal_into(&out[2], &mut self.meta)?;
+        let logits = out[3].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let sel_all = out[4].to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let sel_last = sel_all[sel_all.len() - self.k_pages..].to_vec();
+        self.pos += 1;
+        debug_assert_eq!(logits.len(), self.vocab);
+        Ok((logits, sel_last))
+    }
+
+    /// Greedy generation helper (absorbs `prompt`, then generates).
+    pub fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        self.reset();
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.step(t)?.0;
+        }
+        let mut out = Vec::new();
+        for _ in 0..max_new {
+            let next = argmax(&logits) as i32;
+            if next == super::EOS {
+                break;
+            }
+            out.push(next);
+            logits = self.step(next)?.0;
+        }
+        Ok(out)
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut bi = 0;
+    let mut best = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best {
+            best = x;
+            bi = i;
+        }
+    }
+    bi
+}

@@ -1,0 +1,485 @@
+//! Decode engine: the system-level realization of Algorithm 1.
+//!
+//! Per decode step, per layer:
+//!   1. `qkv` executable produces the fresh query + new K/V;
+//!   2. Rust appends K/V to the paged pool and updates bounding boxes;
+//!   3. Rust scores pages (Eq. 2), applies the active policy, top-Ks;
+//!   4. Rust gathers the selected pages into a contiguous budget buffer
+//!      (the HBM page-fetch analogue — every byte is counted);
+//!   5. the fused Pallas attention executable (`post`) runs over it.
+//!
+//! The engine is deliberately single-threaded (one engine per worker); the
+//! coordinator owns batching and concurrency above it.
+
+pub mod fused;
+pub mod prefill;
+pub mod sample;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ServingConfig;
+use crate::kvcache::{PagePool, SeqCache};
+use crate::metrics::StepMetrics;
+use crate::runtime::{ArtifactInfo, Input, Manifest, ModelRuntime};
+use crate::sparsity::{make_policy, Policy, PolicyKind, SelectCtx};
+use crate::util::rng::Rng;
+
+pub use sample::{sample, SampleOut, Sampling};
+
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+
+/// One in-flight sequence (prompt + generation state + policy instance).
+pub struct Sequence {
+    pub id: u64,
+    pub cache: SeqCache,
+    pub policy: Box<dyn Policy>,
+    /// full token history; position `cache.pos` is the next to process
+    pub tokens: Vec<i32>,
+    pub generated: usize,
+    pub max_new_tokens: usize,
+    pub finished: bool,
+    pub last_entropy: f32,
+    /// per layer: base_pos of pages selected at the previous step
+    last_selected: Vec<Vec<usize>>,
+    /// sum of per-step logprobs of sampled tokens (ppl bookkeeping)
+    pub sum_logprob: f64,
+}
+
+impl Sequence {
+    pub fn new(id: u64, policy: PolicyKind, n_layers: usize) -> Sequence {
+        Sequence {
+            id,
+            cache: SeqCache::new(),
+            policy: make_policy(policy),
+            tokens: Vec::new(),
+            generated: 0,
+            max_new_tokens: 0,
+            finished: false,
+            last_entropy: f32::NAN,
+            last_selected: vec![Vec::new(); n_layers],
+            sum_logprob: 0.0,
+        }
+    }
+
+    /// Tokens still unprocessed (pending prefill/decode input).
+    pub fn pending(&self) -> usize {
+        self.tokens.len().saturating_sub(self.cache.pos)
+    }
+
+    pub fn generated_tokens(&self) -> &[i32] {
+        &self.tokens[self.tokens.len() - self.generated..]
+    }
+}
+
+/// The model-execution engine for one model and one (batch, budget) family.
+pub struct Engine {
+    pub rt: ModelRuntime,
+    pub cfg: ServingConfig,
+    pub pool: PagePool,
+    /// (kind, batch) -> artifact; `post` keyed with the configured budget
+    arts: BTreeMap<(String, usize), ArtifactInfo>,
+    batch_variants: Vec<usize>,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub head_dim: usize,
+    pub d_kv: usize,
+    pub vocab: usize,
+    // --- reusable staging buffers (sized at construction) ---
+    hbuf: Vec<f32>,
+    qbuf: Vec<f32>,
+    kbuf: Vec<f32>,
+    vbuf: Vec<f32>,
+    stage_k: Vec<f32>,
+    stage_v: Vec<f32>,
+    mask: Vec<f32>,
+    dist: Vec<f32>,
+    logits_buf: Vec<f32>,
+    sel_scratch: Vec<usize>,
+    next_id: u64,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path, cfg: ServingConfig) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Self::from_manifest(&manifest, cfg)
+    }
+
+    pub fn from_manifest(manifest: &Manifest, cfg: ServingConfig) -> Result<Engine> {
+        cfg.validate()?;
+        let rt = ModelRuntime::from_manifest(manifest, &cfg.model)?;
+        let info = rt.info.clone();
+        let d_kv = info.n_head * info.head_dim;
+        let pool = PagePool::new(info.n_layer, d_kv, cfg.page_size, cfg.kv_dtype);
+
+        // resolve the decode-path artifact variants we will use
+        let mut arts = BTreeMap::new();
+        let mut batch_variants = Vec::new();
+        for &b in info
+            .batch_variants("qkv")
+            .iter()
+            .filter(|&&b| b <= cfg.max_batch)
+        {
+            let ok = info.find_artifact("post", b, Some(cfg.budget)).is_ok();
+            if !ok {
+                continue;
+            }
+            for kind in ["embed", "qkv", "logits"] {
+                let a = info.find_artifact(kind, b, None)?.clone();
+                arts.insert((kind.to_string(), b), a);
+            }
+            let a = info.find_artifact("post", b, Some(cfg.budget))?.clone();
+            arts.insert(("post".to_string(), b), a);
+            batch_variants.push(b);
+        }
+        anyhow::ensure!(
+            !batch_variants.is_empty(),
+            "no (batch<=({}), budget={}) artifact variants for model {}; \
+             available budgets: {:?}",
+            cfg.max_batch,
+            cfg.budget,
+            cfg.model,
+            info.budget_variants()
+        );
+        let max_b = *batch_variants.last().unwrap();
+        let t = cfg.budget;
+        Ok(Engine {
+            pool,
+            d_model: info.d_model,
+            n_layer: info.n_layer,
+            n_head: info.n_head,
+            head_dim: info.head_dim,
+            d_kv,
+            vocab: info.vocab,
+            hbuf: vec![0.0; max_b * info.d_model],
+            qbuf: vec![0.0; max_b * d_kv],
+            kbuf: vec![0.0; max_b * d_kv],
+            vbuf: vec![0.0; max_b * d_kv],
+            stage_k: vec![0.0; max_b * t * d_kv],
+            stage_v: vec![0.0; max_b * t * d_kv],
+            mask: vec![0.0; max_b * t],
+            dist: vec![0.0; max_b * t],
+            logits_buf: vec![0.0; max_b * info.vocab],
+            sel_scratch: Vec::new(),
+            arts,
+            batch_variants,
+            rt,
+            cfg,
+            next_id: 0,
+        })
+    }
+
+    pub fn new_sequence(&mut self) -> Sequence {
+        self.next_id += 1;
+        Sequence::new(self.next_id, self.cfg.policy, self.n_layer)
+    }
+
+    pub fn new_sequence_with_policy(&mut self, kind: PolicyKind) -> Sequence {
+        self.next_id += 1;
+        Sequence::new(self.next_id, kind, self.n_layer)
+    }
+
+    /// Smallest compiled batch variant that fits `n` rows.
+    pub fn pick_batch(&self, n: usize) -> usize {
+        *self
+            .batch_variants
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or(self.batch_variants.last().unwrap())
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.batch_variants.last().unwrap()
+    }
+
+    fn art(&self, kind: &str, b: usize) -> &ArtifactInfo {
+        &self.arts[&(kind.to_string(), b)]
+    }
+
+    /// Compile the decode executables up front.
+    pub fn warmup(&self) -> Result<()> {
+        for ((_, _), art) in self.arts.iter() {
+            self.rt.executable(art)?;
+        }
+        Ok(())
+    }
+
+    /// Release a finished sequence's pages.
+    pub fn release(&mut self, seq: &mut Sequence) {
+        seq.cache.clear(&mut self.pool);
+    }
+
+    /// One decode step over up to `max_batch` sequences. Each sequence must
+    /// have a pending token (`seq.pending() > 0`). Samples the next token
+    /// for every row, appends it, and returns the sampled tokens.
+    pub fn decode_step(
+        &mut self,
+        seqs: &mut [&mut Sequence],
+        sampling: Sampling,
+        rng: &mut Rng,
+        m: &mut StepMetrics,
+    ) -> Result<Vec<SampleOut>> {
+        let n = seqs.len();
+        anyhow::ensure!(n > 0, "empty batch");
+        let b = self.pick_batch(n);
+        anyhow::ensure!(n <= b, "batch {n} exceeds compiled variant {b}");
+        let t0 = Instant::now();
+        let t = self.cfg.budget;
+        let (d, d_kv, n_head, hd) = (self.d_model, self.d_kv, self.n_head, self.head_dim);
+
+        // ---- embed ----
+        let mut tokens = vec![0i32; b];
+        for (i, s) in seqs.iter().enumerate() {
+            anyhow::ensure!(s.pending() > 0, "sequence {} has no pending token", s.id);
+            tokens[i] = s.tokens[s.cache.pos];
+        }
+        let emb = self.art("embed", b).clone();
+        let out = self.rt.run(&emb, None, &[Input::I32(&tokens, &[b])])?;
+        crate::runtime::literal_into(&out[0], &mut self.hbuf[..b * d])?;
+
+        // ---- allocate this token's slot in each row's page table ----
+        let mut slots = Vec::with_capacity(n);
+        for s in seqs.iter_mut() {
+            slots.push(s.cache.slot_for_next(&mut self.pool));
+        }
+
+        let qkv_art = self.art("qkv", b).clone();
+        let post_art = self.art("post", b).clone();
+
+        for layer in 0..self.n_layer {
+            // ---- qkv ----
+            let out = self.rt.run(
+                &qkv_art,
+                Some(layer),
+                &[Input::F32(&self.hbuf[..b * d], &[b, d])],
+            )?;
+            crate::runtime::literal_into(&out[0], &mut self.qbuf[..b * d_kv])?;
+            crate::runtime::literal_into(&out[1], &mut self.kbuf[..b * d_kv])?;
+            crate::runtime::literal_into(&out[2], &mut self.vbuf[..b * d_kv])?;
+
+            // ---- append K/V + metadata ----
+            for (i, s) in seqs.iter_mut().enumerate() {
+                let (page, slot) = slots[i];
+                self.pool.write_token(
+                    page,
+                    slot,
+                    layer,
+                    &self.kbuf[i * d_kv..(i + 1) * d_kv],
+                    &self.vbuf[i * d_kv..(i + 1) * d_kv],
+                );
+                let _ = s;
+            }
+
+            // ---- select + gather per row ----
+            self.mask[..b * t].fill(-1e9);
+            self.dist[..b * t].fill(0.0);
+            for (i, s) in seqs.iter_mut().enumerate() {
+                let ts = Instant::now();
+                let seq_ref: &mut Sequence = s;
+                let Sequence { cache, policy, last_entropy, last_selected, .. } =
+                    seq_ref;
+                let ctx = SelectCtx {
+                    layer,
+                    n_layers: self.n_layer,
+                    q: &self.qbuf[i * d_kv..(i + 1) * d_kv],
+                    pool: &self.pool,
+                    seq: cache,
+                    budget_pages: self.cfg.budget_pages(),
+                    sink_pages: self.cfg.sink_pages,
+                    recent_pages: self.cfg.recent_pages,
+                    last_entropy: *last_entropy,
+                };
+                let sel = &mut self.sel_scratch;
+                policy.select_into(&ctx, sel);
+                m.score_seconds += ts.elapsed().as_secs_f64();
+                m.pages_scanned += cache.n_pages();
+                m.pages_selected += sel.len();
+
+                // hit-rate bookkeeping on stable page identities
+                let prev = &mut last_selected[layer];
+                let mut cur: Vec<usize> =
+                    sel.iter().map(|&x| cache.pages[x].base_pos).collect();
+                m.pages_reused +=
+                    cur.iter().filter(|bp| prev.binary_search(bp).is_ok()).count();
+                cur.sort_unstable();
+                std::mem::swap(prev, &mut cur);
+
+                // gather
+                let tg = Instant::now();
+                let cur_pos = cache.pos; // token being processed
+                let mut row = 0usize; // tokens staged so far for this seq
+                for &tidx in sel.iter() {
+                    let e = cache.pages[tidx];
+                    let is_last = tidx + 1 == cache.n_pages();
+                    let n_slots = if is_last {
+                        cur_pos - e.base_pos + 1
+                    } else {
+                        self.pool.filled(e.id)
+                    };
+                    if row + n_slots > t {
+                        break; // budget full (policy bug guard)
+                    }
+                    let off = (i * t + row) * d_kv;
+                    m.gather_bytes += self.pool.gather_rows(
+                        e.id,
+                        layer,
+                        n_slots,
+                        &mut self.stage_k[off..off + n_slots * d_kv],
+                        &mut self.stage_v[off..off + n_slots * d_kv],
+                    );
+                    for sl in 0..n_slots {
+                        let pos = e.base_pos + sl;
+                        self.mask[i * t + row + sl] = 0.0;
+                        self.dist[i * t + row + sl] = (cur_pos - pos) as f32;
+                    }
+                    row += n_slots;
+                }
+                m.gather_seconds += tg.elapsed().as_secs_f64();
+            }
+
+            // ---- fused attention + MLP ----
+            let te = Instant::now();
+            let out = self.rt.run(
+                &post_art,
+                Some(layer),
+                &[
+                    Input::F32(&self.hbuf[..b * d], &[b, d]),
+                    Input::F32(&self.qbuf[..b * d_kv], &[b, n_head, hd]),
+                    Input::F32(&self.stage_k[..b * t * d_kv], &[b, t, n_head, hd]),
+                    Input::F32(&self.stage_v[..b * t * d_kv], &[b, t, n_head, hd]),
+                    Input::F32(&self.mask[..b * t], &[b, t]),
+                    Input::F32(&self.dist[..b * t], &[b, t]),
+                ],
+            )?;
+            m.exec_seconds += te.elapsed().as_secs_f64();
+            crate::runtime::literal_into(&out[0], &mut self.hbuf[..b * d])?;
+            let mass = out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            let ent = out[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+
+            // ---- feedback to mass-driven policies + entropy tracking ----
+            for (i, s) in seqs.iter_mut().enumerate() {
+                if layer == self.n_layer - 1 {
+                    s.last_entropy = ent[i];
+                }
+                if !s.policy.wants_feedback() {
+                    continue;
+                }
+                // reconstruct the per-page mass from the staged layout
+                let seq_ref: &Sequence = s;
+                let cache = &seq_ref.cache;
+                let mut fb: Vec<(usize, f32)> = Vec::new();
+                let mut row = 0usize;
+                // re-derive the selection from last_selected base positions
+                let sel_bases = &seq_ref.last_selected[layer];
+                for &bp in sel_bases {
+                    if let Some(tidx) = cache.pages.iter().position(|e| e.base_pos == bp)
+                    {
+                        let is_last = tidx + 1 == cache.n_pages();
+                        let n_slots = if is_last {
+                            cache.pos - bp + 1
+                        } else {
+                            self.pool.filled(cache.pages[tidx].id)
+                        };
+                        if row + n_slots > t {
+                            break;
+                        }
+                        let mslice = &mass[i * t + row..i * t + row + n_slots];
+                        fb.push((bp, mslice.iter().sum()));
+                        row += n_slots;
+                    }
+                }
+                s.policy.feedback(layer, &fb);
+            }
+        }
+
+        // ---- logits + sampling ----
+        let log_art = self.art("logits", b).clone();
+        let out = self.rt.run(
+            &log_art,
+            None,
+            &[Input::F32(&self.hbuf[..b * d], &[b, d])],
+        )?;
+        crate::runtime::literal_into(&out[0], &mut self.logits_buf[..b * self.vocab])?;
+
+        let mut sampled = Vec::with_capacity(n);
+        let mut ent_sum = 0.0f32;
+        for (i, s) in seqs.iter_mut().enumerate() {
+            let row = &self.logits_buf[i * self.vocab..(i + 1) * self.vocab];
+            let o = sample(row, sampling, rng);
+            ent_sum += s.last_entropy.max(0.0);
+            s.cache.commit_token();
+            s.tokens.push(o.token);
+            s.generated += 1;
+            s.sum_logprob += o.logprob as f64;
+            if o.token == EOS || s.generated >= s.max_new_tokens.max(1) {
+                s.finished = true;
+            }
+            m.resident_tokens += s.cache.resident;
+            sampled.push(o);
+        }
+        m.batch = n;
+        m.entropy = ent_sum / n as f32;
+        m.step_seconds += t0.elapsed().as_secs_f64();
+        Ok(sampled)
+    }
+
+    /// Log-probability of `token` in batch row `row` under the logits of
+    /// the most recent `decode_step` (perplexity evaluation).
+    pub fn logprob_of(&self, row: usize, token: i32) -> f32 {
+        let lg = &self.logits_buf[row * self.vocab..(row + 1) * self.vocab];
+        sample::entropy_and_logprob(lg, 1.0, token as usize).1
+    }
+
+    /// Force-feed one known token (teacher forcing / decode-path prefill):
+    /// identical to `decode_step` but ignores sampling and does not extend
+    /// `tokens` (the pending token is consumed instead).
+    pub fn absorb_step(
+        &mut self,
+        seqs: &mut [&mut Sequence],
+        m: &mut StepMetrics,
+    ) -> Result<Vec<f32>> {
+        // run a decode step with greedy sampling but roll back the sampled
+        // token when more prompt remains; returns per-row logprob-ready
+        // logits max for tests.
+        let mut rng = Rng::new(0);
+        let outs = self.decode_step(seqs, Sampling::Greedy, &mut rng, m)?;
+        let mut firsts = Vec::with_capacity(seqs.len());
+        for (s, o) in seqs.iter_mut().zip(&outs) {
+            // undo the speculative append if the prompt continues
+            if s.pending() > 1 {
+                s.tokens.pop();
+                s.generated -= 1;
+                s.finished = false;
+            }
+            firsts.push(o.entropy);
+        }
+        Ok(firsts)
+    }
+
+    /// Fill a sequence's cache with synthetic KV (latency benches where
+    /// values don't matter — see DESIGN.md §2 long-context substitution).
+    pub fn synthetic_fill(&mut self, seq: &mut Sequence, n_tokens: usize, rng: &mut Rng) {
+        let d_kv = self.d_kv;
+        let mut k = vec![0.0f32; d_kv];
+        let mut v = vec![0.0f32; d_kv];
+        for _ in 0..n_tokens {
+            let (page, slot) = seq.cache.slot_for_next(&mut self.pool);
+            for l in 0..self.n_layer {
+                for x in k.iter_mut() {
+                    *x = rng.normal() as f32 * 0.3;
+                }
+                for x in v.iter_mut() {
+                    *x = rng.normal() as f32 * 0.3;
+                }
+                self.pool.write_token(page, slot, l, &k, &v);
+            }
+            seq.cache.commit_token();
+            seq.tokens.push((rng.usize(255)) as i32);
+        }
+    }
+}

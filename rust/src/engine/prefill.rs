@@ -1,0 +1,127 @@
+//! Prompt ingest: chunked prefill through the `prefill` artifact (B=1),
+//! writing the produced KV into the paged pool (+ bounding-box metadata).
+//!
+//! Convention: prefill processes `tokens[0..n-1]`, leaving the final prompt
+//! token *pending* — the first `decode_step` consumes it and produces the
+//! first generated token (so TTFT = queue + prefill + one decode step).
+
+use std::time::Instant;
+
+use anyhow::{Context as _, Result};
+
+use super::{Engine, Sequence};
+use crate::metrics::StepMetrics;
+use crate::runtime::Input;
+
+impl Engine {
+    /// Chunked-artifact prefill for one sequence (prompt already in
+    /// `seq.tokens`). No-op when fewer than 2 tokens are pending.
+    pub fn prefill(&mut self, seq: &mut Sequence, m: &mut StepMetrics) -> Result<()> {
+        let t0 = Instant::now();
+        let n_pre = seq.tokens.len().saturating_sub(1 + seq.cache.pos);
+        if n_pre == 0 {
+            return Ok(());
+        }
+        let art = self
+            .rt
+            .info
+            .find_artifact("prefill", 1, None)
+            .context("no prefill artifact")?
+            .clone();
+        let c = art.chunk.context("prefill artifact missing chunk")?;
+        let tp = art.ctx.context("prefill artifact missing ctx")?;
+        anyhow::ensure!(
+            seq.cache.pos + n_pre <= tp,
+            "prompt ({} tokens) exceeds prefill context {tp}",
+            seq.cache.pos + n_pre
+        );
+        let (l, d_kv) = (self.n_layer, self.d_kv);
+
+        // host-staged full KV buffers [L, Tp, d_kv] (B = 1)
+        let mut kbuf = vec![0.0f32; l * tp * d_kv];
+        let mut vbuf = vec![0.0f32; l * tp * d_kv];
+        // resuming a session: reload resident pages into the staging buffer
+        if seq.cache.pos > 0 {
+            let mut krow = vec![0.0f32; self.pool.page_size * d_kv];
+            let mut vrow = vec![0.0f32; self.pool.page_size * d_kv];
+            for e in &seq.cache.pages {
+                let filled = self.pool.filled(e.id);
+                for layer in 0..l {
+                    self.pool.gather_rows(e.id, layer, filled, &mut krow, &mut vrow);
+                    let off = layer * tp * d_kv + e.base_pos * d_kv;
+                    kbuf[off..off + filled * d_kv]
+                        .copy_from_slice(&krow[..filled * d_kv]);
+                    vbuf[off..off + filled * d_kv]
+                        .copy_from_slice(&vrow[..filled * d_kv]);
+                }
+            }
+        }
+
+        let start = seq.cache.pos;
+        let mut done = 0usize;
+        let mut chunk_tokens = vec![0i32; c];
+        while done < n_pre {
+            let take = c.min(n_pre - done);
+            let base = seq.cache.pos; // == start + done
+            for j in 0..c {
+                chunk_tokens[j] = if j < take {
+                    seq.tokens[base + j]
+                } else {
+                    0
+                };
+            }
+            let prior = [base as i32];
+            let out = self.rt.run(
+                &art,
+                None,
+                &[
+                    Input::I32(&chunk_tokens, &[1, c]),
+                    Input::I32(&prior, &[]),
+                    Input::F32(&kbuf, &[l, 1, tp, self.n_head, self.head_dim]),
+                    Input::F32(&vbuf, &[l, 1, tp, self.n_head, self.head_dim]),
+                ],
+            )?;
+            let kc = out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            let vc = out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            // write real tokens into the staging buffer and the paged pool
+            for j in 0..take {
+                let (page, slot) = seq.cache.slot_for_next(&mut self.pool);
+                for layer in 0..l {
+                    let src = layer * c * d_kv + j * d_kv;
+                    let dst = layer * tp * d_kv + (base + j) * d_kv;
+                    kbuf[dst..dst + d_kv].copy_from_slice(&kc[src..src + d_kv]);
+                    vbuf[dst..dst + d_kv].copy_from_slice(&vc[src..src + d_kv]);
+                    self.pool.write_token(
+                        page,
+                        slot,
+                        layer,
+                        &kc[src..src + d_kv],
+                        &vc[src..src + d_kv],
+                    );
+                }
+                seq.cache.commit_token();
+            }
+            done += take;
+        }
+        debug_assert_eq!(seq.cache.pos, start + n_pre);
+        debug_assert_eq!(seq.pending(), 1);
+        m.step_seconds += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Decode-path prefill: absorbs the prompt one token at a time through
+    /// `decode_step`. Slower (one full selection per token) but exercises
+    /// the exact serving path — used by tests and the quickstart example,
+    /// and as the fallback when no prefill artifact exists.
+    pub fn prefill_stepwise(
+        &mut self,
+        seq: &mut Sequence,
+        m: &mut StepMetrics,
+    ) -> Result<()> {
+        while seq.pending() > 1 {
+            let mut batch = [&mut *seq];
+            self.absorb_step(&mut batch, m)?;
+        }
+        Ok(())
+    }
+}

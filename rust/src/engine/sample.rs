@@ -1,0 +1,141 @@
+//! Token sampling over the logits executable's output.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub enum Sampling {
+    Greedy,
+    /// softmax temperature sampling, optionally top-k truncated
+    Temperature { t: f32, top_k: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SampleOut {
+    pub token: i32,
+    /// entropy of the (possibly tempered) output distribution, nats —
+    /// consumed by the entropy early-exit plugin (paper §3.1(2)).
+    pub entropy: f32,
+    pub logprob: f32,
+}
+
+/// Sample one token from a logits row.
+pub fn sample(logits: &[f32], mode: Sampling, rng: &mut Rng) -> SampleOut {
+    match mode {
+        Sampling::Greedy => {
+            let (mut best, mut bi) = (f32::NEG_INFINITY, 0usize);
+            for (i, &l) in logits.iter().enumerate() {
+                if l > best {
+                    best = l;
+                    bi = i;
+                }
+            }
+            let (h, lp) = entropy_and_logprob(logits, 1.0, bi);
+            SampleOut { token: bi as i32, entropy: h, logprob: lp }
+        }
+        Sampling::Temperature { t, top_k } => {
+            let t = t.max(1e-3);
+            // top-k mask
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            if top_k > 0 && top_k < logits.len() {
+                idx = crate::sparsity::top_k_indices(logits, top_k);
+            }
+            let max = idx.iter().map(|&i| logits[i]).fold(f32::MIN, f32::max);
+            let mut probs: Vec<(usize, f32)> = idx
+                .iter()
+                .map(|&i| (i, ((logits[i] - max) / t).exp()))
+                .collect();
+            let z: f32 = probs.iter().map(|(_, p)| p).sum();
+            let mut u = rng.f32() * z;
+            let mut chosen = probs.last().map(|(i, _)| *i).unwrap_or(0);
+            for &(i, p) in &probs {
+                if u <= p {
+                    chosen = i;
+                    break;
+                }
+                u -= p;
+            }
+            for p in probs.iter_mut() {
+                p.1 /= z;
+            }
+            let h = -probs
+                .iter()
+                .map(|(_, p)| if *p > 0.0 { p * p.ln() } else { 0.0 })
+                .sum::<f32>();
+            let lp = probs
+                .iter()
+                .find(|(i, _)| *i == chosen)
+                .map(|(_, p)| p.ln())
+                .unwrap_or(f32::NEG_INFINITY);
+            SampleOut { token: chosen as i32, entropy: h, logprob: lp }
+        }
+    }
+}
+
+/// Entropy of softmax(logits) and log-prob of `target`, single pass.
+pub fn entropy_and_logprob(logits: &[f32], t: f32, target: usize) -> (f32, f32) {
+    let max = logits.iter().fold(f32::MIN, |m, &x| m.max(x));
+    let mut z = 0.0f64;
+    let mut zl = 0.0f64; // sum p_i * logit_i (unnormalized accumulation)
+    for &l in logits {
+        let e = (((l - max) / t) as f64).exp();
+        z += e;
+        zl += e * ((l - max) / t) as f64;
+    }
+    let h = (z.ln() - zl / z) as f32;
+    let lp = ((logits[target] - max) / t) as f64 - z.ln();
+    (h, lp as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Rng::new(0);
+        let logits = vec![0.0, 5.0, 1.0, -2.0];
+        let out = sample(&logits, Sampling::Greedy, &mut rng);
+        assert_eq!(out.token, 1);
+        assert!(out.logprob < 0.0);
+    }
+
+    #[test]
+    fn entropy_of_uniform_is_log_n() {
+        let logits = vec![1.0; 8];
+        let (h, _) = entropy_and_logprob(&logits, 1.0, 0);
+        assert!((h - (8f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn entropy_of_peaked_is_small() {
+        let mut logits = vec![0.0; 8];
+        logits[3] = 50.0;
+        let (h, lp) = entropy_and_logprob(&logits, 1.0, 3);
+        assert!(h < 1e-3, "{h}");
+        assert!(lp > -1e-3, "{lp}");
+    }
+
+    #[test]
+    fn temperature_sampling_respects_distribution() {
+        let mut rng = Rng::new(7);
+        let logits = vec![0.0, 3.0];
+        let mut counts = [0u32; 2];
+        for _ in 0..2000 {
+            let o = sample(&logits, Sampling::Temperature { t: 1.0, top_k: 0 }, &mut rng);
+            counts[o.token as usize] += 1;
+        }
+        // p(1) = sigmoid(3) ~ 0.95
+        let frac = counts[1] as f64 / 2000.0;
+        assert!((frac - 0.95).abs() < 0.03, "{frac}");
+    }
+
+    #[test]
+    fn top_k_truncates() {
+        let mut rng = Rng::new(9);
+        let logits = vec![1.0, 0.9, -10.0, -10.0];
+        for _ in 0..100 {
+            let o = sample(&logits, Sampling::Temperature { t: 2.0, top_k: 2 }, &mut rng);
+            assert!(o.token < 2, "sampled outside top-k");
+        }
+    }
+}

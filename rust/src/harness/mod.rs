@@ -1,0 +1,264 @@
+//! Experiment harness shared by `benches/` and `examples/paper_tables.rs`:
+//! canned measurement routines for decode latency, task accuracy and
+//! serving runs, so every table/figure regenerates through one code path.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::{KvDtype, ServingConfig};
+use crate::engine::{Engine, Sampling};
+use crate::metrics::StepMetrics;
+use crate::runtime::Manifest;
+use crate::sparsity::PolicyKind;
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+use crate::workload::tasks::{self, Task};
+
+/// Quick mode (env `TINYSERVE_BENCH_QUICK=1`): fewer steps/cases so the
+/// full suite smoke-runs in minutes instead of hours.
+pub fn quick() -> bool {
+    std::env::var("TINYSERVE_BENCH_QUICK").ok().as_deref() == Some("1")
+}
+
+pub fn scale(n: usize) -> usize {
+    if quick() {
+        (n / 4).max(2)
+    } else {
+        n
+    }
+}
+
+/// Smallest compiled decode budget that covers `ctx` tokens (fair budget
+/// for FullCache — padding a 4096-token artifact to serve 512 tokens of
+/// context would overstate every sparse policy's speedup).
+pub fn fullcache_budget(info: &crate::runtime::ModelInfo, ctx: usize) -> usize {
+    info.budget_variants()
+        .into_iter()
+        .find(|&b| b >= ctx)
+        .unwrap_or_else(|| *info.budget_variants().last().unwrap())
+}
+
+#[derive(Debug, Clone)]
+pub struct DecodeMeasurement {
+    pub model: String,
+    pub policy: PolicyKind,
+    pub ctx: usize,
+    pub budget: usize,
+    pub batch: usize,
+    pub ms_per_token: f64,
+    pub ms_std: f64,
+    pub tokens_per_s: f64,
+    pub hit_rate: f64,
+    pub gather_gb_per_s: f64,
+    pub gather_bytes_per_step: f64,
+    pub score_ms: f64,
+    pub gather_ms: f64,
+    pub exec_ms: f64,
+    pub pool_bytes: usize,
+    /// per-step traces (for Figures 6/7)
+    pub trace_bytes: Vec<f64>,
+    pub trace_hit: Vec<f64>,
+}
+
+/// Measure steady-state decode latency for (model, policy, ctx, budget):
+/// fills the cache synthetically to `ctx`, then times `steps` decode steps.
+pub fn measure_decode(
+    manifest: &Manifest,
+    model: &str,
+    policy: PolicyKind,
+    ctx: usize,
+    budget: usize,
+    batch: usize,
+    steps: usize,
+    kv_dtype: KvDtype,
+) -> Result<DecodeMeasurement> {
+    let cfg = ServingConfig {
+        model: model.to_string(),
+        policy,
+        budget,
+        max_batch: batch,
+        kv_dtype,
+        ..Default::default()
+    };
+    let mut engine = Engine::from_manifest(manifest, cfg)?;
+    let mut rng = Rng::new(7);
+    // build `batch` sequences with ctx resident tokens each
+    let mut seqs: Vec<_> = (0..batch)
+        .map(|_| {
+            let mut s = engine.new_sequence_with_policy(policy);
+            engine.synthetic_fill(&mut s, ctx.saturating_sub(1), &mut rng);
+            s.tokens.push(1); // pending token
+            s.max_new_tokens = usize::MAX / 2;
+            s
+        })
+        .collect();
+    engine.warmup()?;
+
+    // warmup steps (compile + cache effects)
+    for _ in 0..3.min(steps) {
+        let mut m = StepMetrics::default();
+        let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+        engine.decode_step(&mut refs, Sampling::Greedy, &mut rng, &mut m)?;
+    }
+    let mut lat = Samples::new();
+    let mut agg = StepMetrics::default();
+    let mut trace_bytes = Vec::new();
+    let mut trace_hit = Vec::new();
+    for _ in 0..steps {
+        let mut m = StepMetrics::default();
+        let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+        engine.decode_step(&mut refs, Sampling::Greedy, &mut rng, &mut m)?;
+        lat.push(m.step_seconds / batch as f64);
+        trace_bytes.push(m.gather_bytes as f64);
+        trace_hit.push(m.hit_rate());
+        agg.gather_bytes += m.gather_bytes;
+        agg.pages_selected += m.pages_selected;
+        agg.pages_reused += m.pages_reused;
+        agg.score_seconds += m.score_seconds;
+        agg.gather_seconds += m.gather_seconds;
+        agg.exec_seconds += m.exec_seconds;
+        agg.step_seconds += m.step_seconds;
+    }
+    let pool_bytes = engine.pool.bytes_in_use();
+    for s in seqs.iter_mut() {
+        engine.release(s);
+    }
+    let mean = lat.mean();
+    Ok(DecodeMeasurement {
+        model: model.to_string(),
+        policy,
+        ctx,
+        budget,
+        batch,
+        ms_per_token: mean * 1e3,
+        ms_std: lat.std() * 1e3,
+        tokens_per_s: batch as f64 / (agg.step_seconds / steps as f64),
+        hit_rate: agg.pages_reused as f64 / agg.pages_selected.max(1) as f64,
+        gather_gb_per_s: agg.gather_bytes as f64 / agg.step_seconds.max(1e-12) / 1e9,
+        gather_bytes_per_step: agg.gather_bytes as f64 / steps as f64,
+        score_ms: agg.score_seconds / steps as f64 * 1e3,
+        gather_ms: agg.gather_seconds / steps as f64 * 1e3,
+        exec_ms: agg.exec_seconds / steps as f64 * 1e3,
+        pool_bytes,
+        trace_bytes,
+        trace_hit,
+    })
+}
+
+#[derive(Debug, Clone)]
+pub struct AccuracyMeasurement {
+    pub policy: PolicyKind,
+    pub task: Task,
+    pub exact: f64,
+    pub char_acc: f64,
+    pub n: usize,
+    pub ms_per_token: f64,
+    pub hit_rate: f64,
+}
+
+/// Task accuracy for one policy on the trained model: real prefill + greedy
+/// decode, exact-match on the known answer.
+pub fn measure_accuracy(
+    manifest: &Manifest,
+    model: &str,
+    policy: PolicyKind,
+    task: Task,
+    n_cases: usize,
+    prompt_chars: usize,
+    budget: usize,
+    seed: u64,
+) -> Result<AccuracyMeasurement> {
+    let cfg = ServingConfig {
+        model: model.to_string(),
+        policy,
+        budget,
+        max_batch: 1,
+        ..Default::default()
+    };
+    let mut engine = Engine::from_manifest(manifest, cfg)?;
+    let mut rng = Rng::new(seed);
+    let mut task_rng = Rng::new(seed ^ 0x5eed);
+    let mut exact = 0usize;
+    let mut char_acc = 0.0f64;
+    let mut lat = Samples::new();
+    let mut hits = 0.0f64;
+    let mut hit_n = 0usize;
+    for _ in 0..n_cases {
+        let doc = tasks::make_doc(&mut task_rng, task, prompt_chars);
+        let mut seq = engine.new_sequence_with_policy(policy);
+        seq.tokens = tasks::encode_prompt(&doc.prompt);
+        seq.max_new_tokens = doc.answer.len() + 4;
+        let mut m = StepMetrics::default();
+        engine.prefill(&mut seq, &mut m)?;
+        while !seq.finished {
+            let mut m = StepMetrics::default();
+            let mut batch = [&mut seq];
+            engine.decode_step(&mut batch, Sampling::Greedy, &mut rng, &mut m)?;
+            lat.push(m.step_seconds);
+            hits += m.hit_rate();
+            hit_n += 1;
+        }
+        let gen = tasks::decode_ids(seq.generated_tokens());
+        exact += tasks::answer_matches(&doc, &gen) as usize;
+        char_acc += tasks::answer_char_accuracy(&doc, &gen);
+        engine.release(&mut seq);
+    }
+    Ok(AccuracyMeasurement {
+        policy,
+        task,
+        exact: exact as f64 / n_cases as f64,
+        char_acc: char_acc / n_cases as f64,
+        n: n_cases,
+        ms_per_token: lat.mean() * 1e3,
+        hit_rate: hits / hit_n.max(1) as f64,
+    })
+}
+
+/// Perplexity of the trained model on held-out task docs under a policy —
+/// the Table 7 "PPL" column (teacher-forcing through the serving path).
+pub fn measure_ppl(
+    manifest: &Manifest,
+    model: &str,
+    policy: PolicyKind,
+    page_size: usize,
+    budget: usize,
+    n_docs: usize,
+    prompt_chars: usize,
+) -> Result<f64> {
+    let cfg = ServingConfig {
+        model: model.to_string(),
+        policy,
+        page_size,
+        budget,
+        max_batch: 1,
+        ..Default::default()
+    };
+    let mut engine = Engine::from_manifest(manifest, cfg)?;
+    let mut task_rng = Rng::new(99);
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for i in 0..n_docs {
+        let task = Task::all()[i % Task::all().len()];
+        let doc = tasks::make_doc(&mut task_rng, task, prompt_chars);
+        // teacher-forced NLL of the answer continuation through the full
+        // serving path (prefill + per-token decode under the policy)
+        let mut m = StepMetrics::default();
+        let mut rng = Rng::new(3);
+        let mut seq = engine.new_sequence_with_policy(policy);
+        seq.tokens = tasks::encode_prompt(&doc.prompt);
+        seq.max_new_tokens = usize::MAX / 2;
+        engine.prefill(&mut seq, &mut m)?;
+        for &want in tasks::encode(&doc.answer).iter() {
+            let mut batch = [&mut seq];
+            engine.decode_step(&mut batch, Sampling::Greedy, &mut rng, &mut m)?;
+            nll -= engine.logprob_of(0, want) as f64;
+            count += 1;
+            // teacher-force the true token for the next step
+            *seq.tokens.last_mut().unwrap() = want;
+            seq.finished = false;
+        }
+        engine.release(&mut seq);
+    }
+    Ok((nll / count.max(1) as f64).exp())
+}

@@ -1,0 +1,278 @@
+//! Hardware cost model — the paper's §3.5 latency model and §3.6 memory
+//! model with A100-class constants, used to *project* measured CPU ratios
+//! onto the paper's testbed (8×A100, DESIGN.md §2) and to generate the
+//! absolute-scale columns of Tables 1/3/8 and Figures 5/7.
+//!
+//! ```text
+//! Latency_t = tau_meta * P  +  tau_hb * K * S  +  tau_attn(K * S)
+//! ```
+//!
+//! Constants are calibrated once (`calibrate`) so that FullCache on the
+//! paper's GPT2-345M/8K row reproduces the paper's FullCache latency; all
+//! other methods/scales are *predicted*, which is exactly the reproduction
+//! claim we can make without the hardware.
+
+use crate::config::KvDtype;
+
+/// Device constants (defaults ≈ NVIDIA A100-80GB SXM).
+#[derive(Debug, Clone)]
+pub struct Device {
+    /// HBM bandwidth, bytes/s
+    pub hbm_bw: f64,
+    /// L2/SRAM bandwidth for metadata scans, bytes/s
+    pub sram_bw: f64,
+    /// sustained matmul/attention throughput for decode GEMV, flops/s
+    /// (decode is bandwidth-bound; this only prices the epilogue)
+    pub flops: f64,
+    /// fixed per-kernel-launch overhead, s
+    pub launch_s: f64,
+    /// per-token fixed framework overhead, s (scheduler, sampling)
+    pub framework_s: f64,
+}
+
+impl Default for Device {
+    fn default() -> Self {
+        Device {
+            hbm_bw: 2.0e12,
+            sram_bw: 8.0e12,
+            flops: 60.0e12,
+            launch_s: 6e-6,
+            framework_s: 35e-6,
+        }
+    }
+}
+
+/// Model/cache shape parameters for the cost model.
+#[derive(Debug, Clone)]
+pub struct Shape {
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_params: usize,
+    /// resident context length (tokens)
+    pub ctx: usize,
+    pub page_size: usize,
+    /// pages selected per step (K); `ctx/page_size` for FullCache
+    pub k_pages: usize,
+    pub kv_dtype: KvDtype,
+    pub batch: usize,
+}
+
+impl Shape {
+    pub fn n_pages(&self) -> usize {
+        self.ctx.div_ceil(self.page_size)
+    }
+
+    pub fn selected_tokens(&self) -> usize {
+        (self.k_pages * self.page_size).min(self.ctx)
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CostBreakdown {
+    /// metadata scan (tau_meta * P)
+    pub meta_s: f64,
+    /// selected KV fetch from HBM (tau_hb * K * S)
+    pub kv_fetch_s: f64,
+    /// attention + MLP compute epilogue
+    pub attn_s: f64,
+    /// weight streaming for the dense layers (GEMV reads)
+    pub weights_s: f64,
+    /// launches + framework
+    pub overhead_s: f64,
+}
+
+impl CostBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.meta_s + self.kv_fetch_s + self.attn_s + self.weights_s + self.overhead_s
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct HwModel {
+    pub dev: Device,
+    /// global multiplicative factor (kept for explicit what-if scaling)
+    pub calib: f64,
+    /// calibration factor on the bandwidth-proportional terms (see
+    /// `calibrate`)
+    pub kv_calib: f64,
+}
+
+impl HwModel {
+    pub fn a100() -> HwModel {
+        HwModel { dev: Device::default(), calib: 1.0, kv_calib: 1.0 }
+    }
+
+    /// Per-token decode latency breakdown (one sequence of the batch; batch
+    /// amortizes weight streaming).
+    pub fn decode_token(&self, s: &Shape) -> CostBreakdown {
+        let d = s.d_model as f64;
+        let layers = s.n_layer as f64;
+        let p = s.n_pages() as f64;
+        let sel = s.selected_tokens() as f64;
+        let kv_bytes_tok = 2.0 * d * s.kv_dtype.bytes_per_value();
+
+        let meta_s = layers * p * 2.0 * d * 4.0 / self.dev.sram_bw;
+        let kv_fetch_s = layers * sel * kv_bytes_tok / self.dev.hbm_bw;
+        // attention epilogue: 2*sel*d MACs (qk) + 2*sel*d (av) per layer
+        let attn_s = layers * 4.0 * sel * d / self.dev.flops;
+        // GEMV weight reads amortized across the batch (fp16 weights)
+        let weights_s =
+            (s.n_params as f64 * 2.0 / self.dev.hbm_bw) / s.batch.max(1) as f64;
+        let overhead_s = layers * 2.0 * self.dev.launch_s + self.dev.framework_s;
+        let c = if self.calib > 0.0 { self.calib } else { 1.0 };
+        let ck = if self.kv_calib > 0.0 { self.kv_calib } else { 1.0 };
+        CostBreakdown {
+            meta_s: meta_s * c * ck,
+            kv_fetch_s: kv_fetch_s * c * ck,
+            attn_s: attn_s * c,
+            weights_s: weights_s * c,
+            overhead_s: overhead_s * c,
+        }
+    }
+
+    pub fn decode_token_ms(&self, s: &Shape) -> f64 {
+        self.decode_token(s).total_s() * 1e3
+    }
+
+    /// Fit the model so `decode_token_ms(reference)` equals `target_ms`
+    /// (the paper's FullCache number for that model row). The paper's
+    /// latencies sit far above raw rooflines, and its §3.5 model prices
+    /// decode as KV-traffic dominated — so calibration scales the
+    /// *bandwidth-proportional* terms (metadata scan + KV fetch), keeping
+    /// compute/overhead terms at device constants. This preserves the
+    /// FullCache-vs-sparse ratio structure the paper reports.
+    pub fn calibrate(&mut self, reference: &Shape, target_ms: f64) {
+        self.calib = 1.0;
+        let b = self.decode_token(reference);
+        let fixed = b.attn_s + b.weights_s + b.overhead_s;
+        let kv = b.meta_s + b.kv_fetch_s;
+        let target_s = target_ms / 1e3;
+        if kv > 0.0 && target_s > fixed {
+            self.kv_calib = (target_s - fixed) / kv;
+        } else if b.total_s() > 0.0 {
+            self.kv_calib = target_s / b.total_s();
+        }
+    }
+
+    /// Paper §3.6 memory-movement fraction vs full-cache attention:
+    /// 1/S (metadata) + rho * K*S/L (amortized page loads).
+    pub fn memory_fraction(l: usize, s: usize, k: usize, rho: f64) -> f64 {
+        1.0 / s as f64 + rho * (k * s) as f64 / l as f64
+    }
+
+    /// Optimal page size S* = sqrt(L/K) from §3.6.
+    pub fn optimal_page_size(l: usize, k: usize) -> f64 {
+        (l as f64 / k.max(1) as f64).sqrt()
+    }
+
+    /// KV cache + weights resident memory, GB (paper "Memory (GB)").
+    pub fn memory_gb(s: &Shape) -> f64 {
+        let weights = s.n_params as f64 * 2.0; // fp16 weights
+        let cache = s.batch as f64
+            * s.ctx as f64
+            * s.n_layer as f64
+            * 2.0
+            * s.d_model as f64
+            * s.kv_dtype.bytes_per_value();
+        // activations + allocator overhead ~12%
+        (weights + cache) * 1.12 / 1e9
+    }
+
+    /// Multi-GPU throughput scaling (Table 8): data-parallel with a small
+    /// per-batch-step coordination cost (router hop + collective setup)
+    /// that amortizes over the batch.
+    pub fn multi_gpu_throughput(&self, s: &Shape, base_tok_per_s: f64, n_gpu: usize) -> f64 {
+        let t_tok = 1.0 / base_tok_per_s.max(1e-9);
+        let coord = (1.5e-6 * (n_gpu as f64).log2().max(0.0)
+            + 0.4e-6 * (n_gpu as f64 - 1.0))
+            / s.batch.max(1) as f64;
+        n_gpu as f64 / (t_tok + coord) * t_tok * base_tok_per_s
+    }
+
+    /// Scaling efficiency vs ideal linear (Table 8 "Efficiency %").
+    pub fn multi_gpu_efficiency(&self, s: &Shape, base_tok_per_s: f64, n_gpu: usize) -> f64 {
+        self.multi_gpu_throughput(s, base_tok_per_s, n_gpu)
+            / (n_gpu as f64 * base_tok_per_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape_345m(k_pages: usize) -> Shape {
+        Shape {
+            d_model: 1024, // real GPT2-345M dims for projection
+            n_layer: 24,
+            n_params: 345_000_000,
+            ctx: 8192,
+            page_size: 16,
+            k_pages,
+            kv_dtype: KvDtype::F16,
+            batch: 1,
+        }
+    }
+
+    #[test]
+    fn sparse_is_faster_than_full() {
+        let hw = HwModel::a100();
+        let full = hw.decode_token_ms(&shape_345m(512));
+        let sparse = hw.decode_token_ms(&shape_345m(128)); // 2048-token budget
+        assert!(sparse < full, "{sparse} vs {full}");
+        let speedup = full / sparse;
+        assert!(speedup > 1.2 && speedup < 6.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn speedup_grows_with_context() {
+        let hw = HwModel::a100();
+        let mut last = 0.0;
+        for ctx in [4096usize, 8192, 16384, 32768] {
+            let mut s_full = shape_345m(ctx / 16);
+            s_full.ctx = ctx;
+            let mut s_sel = shape_345m(128);
+            s_sel.ctx = ctx;
+            let ratio = hw.decode_token_ms(&s_full) / hw.decode_token_ms(&s_sel);
+            assert!(ratio >= last, "ratio should grow: {ratio} < {last}");
+            last = ratio;
+        }
+        assert!(last > 2.0, "32k speedup {last}");
+    }
+
+    #[test]
+    fn calibration_hits_target() {
+        let mut hw = HwModel::a100();
+        let r = shape_345m(512);
+        hw.calibrate(&r, 45.2);
+        assert!((hw.decode_token_ms(&r) - 45.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn memory_fraction_matches_paper_example() {
+        // paper: K = 0.3P, L = 32K, S = 16 -> large reduction
+        let l = 32768;
+        let s = 16;
+        let k = (0.3 * (l / s) as f64) as usize;
+        let frac = HwModel::memory_fraction(l, s, k, 0.35);
+        assert!(frac < 0.25, "{frac}");
+        let s_opt = HwModel::optimal_page_size(l, k);
+        assert!(s_opt > 4.0 && s_opt < 16.0, "{s_opt}");
+    }
+
+    #[test]
+    fn memory_gb_scales_with_dtype() {
+        let f32s = HwModel::memory_gb(&Shape { kv_dtype: KvDtype::F32, ..shape_345m(128) });
+        let i8s = HwModel::memory_gb(&Shape { kv_dtype: KvDtype::Int8, ..shape_345m(128) });
+        assert!(f32s > i8s);
+    }
+
+    #[test]
+    fn multi_gpu_near_linear() {
+        let hw = HwModel::a100();
+        let s = shape_345m(128);
+        let eff8 = hw.multi_gpu_efficiency(&s, 1000.0, 8);
+        assert!(eff8 > 0.9 && eff8 <= 1.0, "{eff8}");
+        let eff1 = hw.multi_gpu_efficiency(&s, 1000.0, 1);
+        assert!((eff1 - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,190 @@
+//! KV storage precision: f32, f16, and per-token-row symmetric int8.
+//!
+//! The paper's Sparse Attention Executor supports "FP16/INT8 KV formats"
+//! (§3.1). Storage conversion happens on append; dequantization happens in
+//! the gather hot loop (`PagePool::gather_rows`). Page *metadata* (the
+//! min/max bounding boxes) always stays f32 — it is the scoring input and
+//! costs only 2*d floats per page.
+
+use crate::config::KvDtype;
+use crate::util::f16;
+
+/// One storage slab: tokens-rows of `width` channels at the configured
+/// precision. Int8 keeps one scale per row (per-token quantization, the
+/// standard KV-quant granularity).
+#[derive(Debug)]
+pub enum Slab {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    I8 { data: Vec<i8>, scales: Vec<f32> },
+}
+
+impl Slab {
+    pub fn new(dtype: KvDtype, rows: usize, width: usize) -> Slab {
+        match dtype {
+            KvDtype::F32 => Slab::F32(vec![0.0; rows * width]),
+            KvDtype::F16 => Slab::F16(vec![0; rows * width]),
+            KvDtype::Int8 => Slab::I8 {
+                data: vec![0; rows * width],
+                scales: vec![0.0; rows],
+            },
+        }
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        match self {
+            Slab::F32(_) => KvDtype::F32,
+            Slab::F16(_) => KvDtype::F16,
+            Slab::I8 { .. } => KvDtype::Int8,
+        }
+    }
+
+    pub fn rows(&self, width: usize) -> usize {
+        match self {
+            Slab::F32(v) => v.len() / width,
+            Slab::F16(v) => v.len() / width,
+            Slab::I8 { data, .. } => data.len() / width,
+        }
+    }
+
+    /// Grow to hold at least `rows` rows.
+    pub fn grow(&mut self, rows: usize, width: usize) {
+        match self {
+            Slab::F32(v) => v.resize(rows * width, 0.0),
+            Slab::F16(v) => v.resize(rows * width, 0),
+            Slab::I8 { data, scales } => {
+                data.resize(rows * width, 0);
+                scales.resize(rows, 0.0);
+            }
+        }
+    }
+
+    /// Store one token row (encode to the slab precision).
+    pub fn store_row(&mut self, row: usize, width: usize, src: &[f32]) {
+        debug_assert_eq!(src.len(), width);
+        let off = row * width;
+        match self {
+            Slab::F32(v) => v[off..off + width].copy_from_slice(src),
+            Slab::F16(v) => {
+                for (dst, &s) in v[off..off + width].iter_mut().zip(src) {
+                    *dst = f16::f32_to_f16_bits(s);
+                }
+            }
+            Slab::I8 { data, scales } => {
+                let amax = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+                scales[row] = scale;
+                let inv = 1.0 / scale;
+                for (dst, &s) in data[off..off + width].iter_mut().zip(src) {
+                    *dst = (s * inv).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+    }
+
+    /// Decode `n_rows` consecutive rows starting at `row` into `dst`
+    /// (f32, row-major). This is the gather hot path.
+    pub fn load_rows(&self, row: usize, n_rows: usize, width: usize, dst: &mut [f32]) {
+        debug_assert!(dst.len() >= n_rows * width);
+        let off = row * width;
+        let n = n_rows * width;
+        match self {
+            Slab::F32(v) => dst[..n].copy_from_slice(&v[off..off + n]),
+            Slab::F16(v) => {
+                f16::f16_slice_to_f32(&v[off..off + n], &mut dst[..n]);
+            }
+            Slab::I8 { data, scales } => {
+                for r in 0..n_rows {
+                    let s = scales[row + r];
+                    let src = &data[(row + r) * width..(row + r + 1) * width];
+                    let out = &mut dst[r * width..(r + 1) * width];
+                    for (d, &q) in out.iter_mut().zip(src) {
+                        *d = q as f32 * s;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Decode a single row into an owned Vec (oracle policy / tests).
+    pub fn load_row_vec(&self, row: usize, width: usize) -> Vec<f32> {
+        let mut out = vec![0.0; width];
+        self.load_rows(row, 1, width, &mut out);
+        out
+    }
+
+    pub fn bytes_per_row(&self, width: usize) -> usize {
+        match self {
+            Slab::F32(_) => width * 4,
+            Slab::F16(_) => width * 2,
+            Slab::I8 { .. } => width + 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(dtype: KvDtype, tol: f32) {
+        let width = 16;
+        let mut slab = Slab::new(dtype, 4, width);
+        let src: Vec<f32> = (0..width).map(|i| (i as f32 - 7.5) * 0.3).collect();
+        slab.store_row(2, width, &src);
+        let mut dst = vec![0.0; width];
+        slab.load_rows(2, 1, width, &mut dst);
+        for (a, b) in src.iter().zip(&dst) {
+            assert!(
+                (a - b).abs() <= tol * a.abs().max(1.0),
+                "{dtype:?}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn f32_exact() {
+        roundtrip(KvDtype::F32, 0.0);
+    }
+
+    #[test]
+    fn f16_half_ulp() {
+        roundtrip(KvDtype::F16, 1.0 / 2048.0);
+    }
+
+    #[test]
+    fn int8_one_percent() {
+        roundtrip(KvDtype::Int8, 0.01);
+    }
+
+    #[test]
+    fn int8_zero_row() {
+        let mut slab = Slab::new(KvDtype::Int8, 1, 4);
+        slab.store_row(0, 4, &[0.0; 4]);
+        let mut dst = [9.0; 4];
+        slab.load_rows(0, 1, 4, &mut dst);
+        assert_eq!(dst, [0.0; 4]);
+    }
+
+    #[test]
+    fn multi_row_load() {
+        let width = 8;
+        let mut slab = Slab::new(KvDtype::F16, 4, width);
+        for r in 0..4 {
+            let row: Vec<f32> = (0..width).map(|i| (r * width + i) as f32).collect();
+            slab.store_row(r, width, &row);
+        }
+        let mut dst = vec![0.0; 2 * width];
+        slab.load_rows(1, 2, width, &mut dst);
+        assert_eq!(dst[0], 8.0);
+        assert_eq!(dst[15], 23.0);
+    }
+
+    #[test]
+    fn grow_preserves() {
+        let mut slab = Slab::new(KvDtype::F32, 2, 4);
+        slab.store_row(1, 4, &[1.0, 2.0, 3.0, 4.0]);
+        slab.grow(8, 4);
+        assert_eq!(slab.rows(4), 8);
+        assert_eq!(slab.load_row_vec(1, 4), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

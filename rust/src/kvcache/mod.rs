@@ -1,0 +1,10 @@
+//! Paged KV cache: pool, per-sequence page tables, storage precisions and
+//! bounding-box page metadata (paper §3.4-§3.5).
+
+pub mod dtype;
+pub mod pool;
+pub mod seq;
+
+pub use dtype::Slab;
+pub use pool::{PageId, PagePool};
+pub use seq::{PageEntry, SeqCache};

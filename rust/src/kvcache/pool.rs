@@ -1,0 +1,363 @@
+//! Paged KV pool: the paper's "structured memory layout via token grouping
+//! into fixed-size pages" (§3.5), plus the per-page bounding-box metadata
+//! that makes query-aware selection possible.
+//!
+//! One `PageId` covers all layers (vLLM-style): layer `l`'s keys/values for
+//! a page live at the same page index in layer `l`'s slab. Pages are
+//! refcounted so sessions can share immutable prefix pages (§4.4.2 session
+//! management); only the *last, partially-filled* page of a sequence is
+//! ever written, and sharing snapshots deep-copy it first.
+
+use anyhow::Result;
+
+use super::dtype::Slab;
+use crate::config::KvDtype;
+
+pub type PageId = u32;
+
+const GROW_PAGES: usize = 256;
+
+/// Global paged KV store for one model.
+pub struct PagePool {
+    pub page_size: usize, // S tokens per page
+    pub d_kv: usize,      // channels per token (H * head_dim)
+    pub n_layers: usize,
+    dtype: KvDtype,
+    /// per layer: K and V slabs, rows = cap_pages * page_size
+    k: Vec<Slab>,
+    v: Vec<Slab>,
+    /// per layer, per page: [min(d_kv), max(d_kv)] f32 bounding boxes
+    meta: Vec<Vec<f32>>,
+    refcount: Vec<u32>,
+    /// tokens filled in each page (frozen once == page_size)
+    filled: Vec<u16>,
+    free: Vec<PageId>,
+    cap_pages: usize,
+    /// high-water mark for stats
+    pub peak_pages: usize,
+}
+
+impl PagePool {
+    pub fn new(n_layers: usize, d_kv: usize, page_size: usize, dtype: KvDtype) -> Self {
+        PagePool {
+            page_size,
+            d_kv,
+            n_layers,
+            dtype,
+            k: (0..n_layers).map(|_| Slab::new(dtype, 0, d_kv)).collect(),
+            v: (0..n_layers).map(|_| Slab::new(dtype, 0, d_kv)).collect(),
+            meta: vec![Vec::new(); n_layers],
+            refcount: Vec::new(),
+            filled: Vec::new(),
+            free: Vec::new(),
+            cap_pages: 0,
+            peak_pages: 0,
+        }
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    fn grow(&mut self) {
+        let new_cap = self.cap_pages + GROW_PAGES;
+        let rows = new_cap * self.page_size;
+        for l in 0..self.n_layers {
+            self.k[l].grow(rows, self.d_kv);
+            self.v[l].grow(rows, self.d_kv);
+            self.meta[l].resize(new_cap * 2 * self.d_kv, 0.0);
+        }
+        self.refcount.resize(new_cap, 0);
+        self.filled.resize(new_cap, 0);
+        for id in (self.cap_pages..new_cap).rev() {
+            self.free.push(id as PageId);
+        }
+        self.cap_pages = new_cap;
+    }
+
+    pub fn alloc(&mut self) -> PageId {
+        if self.free.is_empty() {
+            self.grow();
+        }
+        let id = self.free.pop().expect("grow added pages");
+        self.refcount[id as usize] = 1;
+        self.filled[id as usize] = 0;
+        self.peak_pages = self.peak_pages.max(self.pages_in_use());
+        id
+    }
+
+    pub fn retain(&mut self, id: PageId) {
+        self.refcount[id as usize] += 1;
+    }
+
+    pub fn release(&mut self, id: PageId) {
+        let rc = &mut self.refcount[id as usize];
+        assert!(*rc > 0, "double free of page {id}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(id);
+        }
+    }
+
+    pub fn refcount(&self, id: PageId) -> u32 {
+        self.refcount[id as usize]
+    }
+
+    pub fn filled(&self, id: PageId) -> usize {
+        self.filled[id as usize] as usize
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.cap_pages - self.free.len()
+    }
+
+    /// Bytes of KV storage currently in use (both K and V, all layers).
+    pub fn bytes_in_use(&self) -> usize {
+        let per_row = self.k[0].bytes_per_row(self.d_kv) * 2;
+        self.pages_in_use() * self.page_size * per_row * self.n_layers
+    }
+
+    /// Append one token's K/V for one layer into `page` at `slot`.
+    /// The caller (SeqCache) guarantees slot ordering; the fill counter
+    /// advances when the *last* layer is written.
+    pub fn write_token(
+        &mut self,
+        page: PageId,
+        slot: usize,
+        layer: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        debug_assert!(slot < self.page_size);
+        debug_assert_eq!(self.refcount[page as usize], 1, "write to shared page");
+        let row = page as usize * self.page_size + slot;
+        self.k[layer].store_row(row, self.d_kv, k_row);
+        self.v[layer].store_row(row, self.d_kv, v_row);
+        // bounding-box metadata update (f32, from the unquantized key)
+        let m = &mut self.meta[layer]
+            [page as usize * 2 * self.d_kv..(page as usize + 1) * 2 * self.d_kv];
+        let (mins, maxs) = m.split_at_mut(self.d_kv);
+        if slot == 0 {
+            mins.copy_from_slice(k_row);
+            maxs.copy_from_slice(k_row);
+        } else {
+            for i in 0..self.d_kv {
+                mins[i] = mins[i].min(k_row[i]);
+                maxs[i] = maxs[i].max(k_row[i]);
+            }
+        }
+        if layer == self.n_layers - 1 {
+            self.filled[page as usize] = (slot + 1) as u16;
+        }
+    }
+
+    /// Page metadata: `[min(d_kv) ++ max(d_kv)]` for (page, layer).
+    pub fn meta(&self, page: PageId, layer: usize) -> &[f32] {
+        &self.meta[layer]
+            [page as usize * 2 * self.d_kv..(page as usize + 1) * 2 * self.d_kv]
+    }
+
+    /// Gather `n_slots` token rows of K and V into f32 staging buffers
+    /// (the Algorithm-1 step-3 "sparse KV gather"). Returns bytes touched
+    /// in storage (the measurable HBM-fetch analogue).
+    pub fn gather_rows(
+        &self,
+        page: PageId,
+        layer: usize,
+        n_slots: usize,
+        k_dst: &mut [f32],
+        v_dst: &mut [f32],
+    ) -> usize {
+        let row = page as usize * self.page_size;
+        self.k[layer].load_rows(row, n_slots, self.d_kv, k_dst);
+        self.v[layer].load_rows(row, n_slots, self.d_kv, v_dst);
+        2 * n_slots * self.k[layer].bytes_per_row(self.d_kv)
+    }
+
+    /// Dequantized single key row (oracle policy & tests).
+    pub fn key_row(&self, page: PageId, layer: usize, slot: usize) -> Vec<f32> {
+        self.k[layer].load_row_vec(page as usize * self.page_size + slot, self.d_kv)
+    }
+
+    /// Deep-copy a page's contents (all layers) into a fresh page.
+    /// Used for copy-on-write of partially-filled pages at snapshot time.
+    pub fn clone_page(&mut self, src: PageId) -> PageId {
+        let dst = self.alloc();
+        let n = self.filled[src as usize] as usize;
+        let mut kbuf = vec![0.0f32; self.page_size * self.d_kv];
+        let mut vbuf = vec![0.0f32; self.page_size * self.d_kv];
+        for l in 0..self.n_layers {
+            let row = src as usize * self.page_size;
+            self.k[l].load_rows(row, n.max(1), self.d_kv, &mut kbuf);
+            self.v[l].load_rows(row, n.max(1), self.d_kv, &mut vbuf);
+            for s in 0..n {
+                // store_row re-quantizes; acceptable (same precision class)
+                let kr = kbuf[s * self.d_kv..(s + 1) * self.d_kv].to_vec();
+                let vr = vbuf[s * self.d_kv..(s + 1) * self.d_kv].to_vec();
+                let drow = dst as usize * self.page_size + s;
+                self.k[l].store_row(drow, self.d_kv, &kr);
+                self.v[l].store_row(drow, self.d_kv, &vr);
+            }
+            // copy metadata verbatim
+            let src_off = src as usize * 2 * self.d_kv;
+            let dst_off = dst as usize * 2 * self.d_kv;
+            let (a, b) = if src_off < dst_off {
+                let (lo, hi) = self.meta[l].split_at_mut(dst_off);
+                (&lo[src_off..src_off + 2 * self.d_kv], &mut hi[..2 * self.d_kv])
+            } else {
+                let (lo, hi) = self.meta[l].split_at_mut(src_off);
+                (&hi[..2 * self.d_kv], &mut lo[dst_off..dst_off + 2 * self.d_kv])
+            };
+            b.copy_from_slice(a);
+        }
+        self.filled[dst as usize] = self.filled[src as usize];
+        dst
+    }
+
+    /// Exact (non-estimated) max q.k over a page — the Oracle policy's
+    /// scoring function, and the quantity Eq. 2 upper-bounds.
+    pub fn exact_page_score(&self, page: PageId, layer: usize, q: &[f32]) -> f32 {
+        let n = self.filled[page as usize] as usize;
+        let mut best = f32::NEG_INFINITY;
+        let mut buf = vec![0.0f32; self.d_kv];
+        for s in 0..n {
+            self.k[layer].load_rows(
+                page as usize * self.page_size + s,
+                1,
+                self.d_kv,
+                &mut buf,
+            );
+            let dot: f32 = q.iter().zip(&buf).map(|(a, b)| a * b).sum();
+            best = best.max(dot);
+        }
+        best
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.free.len() <= self.cap_pages);
+        let mut seen = vec![false; self.cap_pages];
+        for &f in &self.free {
+            anyhow::ensure!(!seen[f as usize], "page {f} twice in free list");
+            seen[f as usize] = true;
+            anyhow::ensure!(self.refcount[f as usize] == 0, "free page {f} has refs");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> PagePool {
+        PagePool::new(2, 8, 4, KvDtype::F32)
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut p = pool();
+        let a = p.alloc();
+        let b = p.alloc();
+        assert_ne!(a, b);
+        assert_eq!(p.pages_in_use(), 2);
+        p.release(a);
+        assert_eq!(p.pages_in_use(), 1);
+        let c = p.alloc();
+        assert_eq!(c, a, "freed page is reused");
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.pages_in_use(), 0);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut p = pool();
+        let a = p.alloc();
+        p.release(a);
+        p.release(a);
+    }
+
+    #[test]
+    fn metadata_tracks_min_max() {
+        let mut p = pool();
+        let pg = p.alloc();
+        let k1 = [1.0, -2.0, 3.0, 0.0, 0.0, 0.0, 0.0, 5.0];
+        let k2 = [0.0, -1.0, 4.0, -3.0, 0.0, 0.0, 0.0, 2.0];
+        for l in 0..2 {
+            p.write_token(pg, 0, l, &k1, &[0.0; 8]);
+        }
+        for l in 0..2 {
+            p.write_token(pg, 1, l, &k2, &[0.0; 8]);
+        }
+        let m = p.meta(pg, 0);
+        assert_eq!(m[0], 0.0); // min ch0
+        assert_eq!(m[1], -2.0); // min ch1
+        assert_eq!(m[3], -3.0); // min ch3
+        assert_eq!(m[8], 1.0); // max ch0
+        assert_eq!(m[10], 4.0); // max ch2
+        assert_eq!(p.filled(pg), 2);
+    }
+
+    #[test]
+    fn gather_roundtrip() {
+        let mut p = pool();
+        let pg = p.alloc();
+        for s in 0..4 {
+            let row: Vec<f32> = (0..8).map(|i| (s * 8 + i) as f32).collect();
+            for l in 0..2 {
+                p.write_token(pg, s, l, &row, &row);
+            }
+        }
+        let mut k = vec![0.0; 4 * 8];
+        let mut v = vec![0.0; 4 * 8];
+        let bytes = p.gather_rows(pg, 1, 4, &mut k, &mut v);
+        assert_eq!(bytes, 2 * 4 * 8 * 4);
+        assert_eq!(k[0], 0.0);
+        assert_eq!(k[31], 31.0);
+        assert_eq!(v, k);
+    }
+
+    #[test]
+    fn clone_page_copies_contents() {
+        let mut p = pool();
+        let a = p.alloc();
+        let row = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        for l in 0..2 {
+            p.write_token(a, 0, l, &row, &row);
+        }
+        let b = p.clone_page(a);
+        assert_ne!(a, b);
+        assert_eq!(p.key_row(b, 0, 0), row.to_vec());
+        assert_eq!(p.meta(a, 1), p.meta(b, 1));
+        assert_eq!(p.filled(b), 1);
+    }
+
+    #[test]
+    fn exact_score_is_max_dot() {
+        let mut p = pool();
+        let pg = p.alloc();
+        let k1 = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let k2 = [0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        for l in 0..2 {
+            p.write_token(pg, 0, l, &k1, &[0.0; 8]);
+            p.write_token(pg, 1, l, &k2, &[0.0; 8]);
+        }
+        let q = [1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        assert_eq!(p.exact_page_score(pg, 0, &q), 2.0);
+    }
+
+    #[test]
+    fn bytes_accounting_by_dtype() {
+        for (dt, per_val) in [
+            (KvDtype::F32, 4.0),
+            (KvDtype::F16, 2.0),
+        ] {
+            let mut p = PagePool::new(1, 8, 4, dt);
+            let _ = p.alloc();
+            let expect = (4.0 * 8.0 * per_val * 2.0) as usize; // S*d*K&V
+            assert_eq!(p.bytes_in_use(), expect, "{dt:?}");
+        }
+    }
+}

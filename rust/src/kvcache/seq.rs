@@ -1,0 +1,228 @@
+//! Per-sequence page table over the shared `PagePool`, plus snapshots for
+//! cross-request session reuse (paper §4.4.2).
+
+use super::pool::{PageId, PagePool};
+
+/// One entry in a sequence's page table. `base_pos` is the absolute token
+//  position of the page's first slot — kept explicitly because eviction
+//  (StreamingLLM & friends) can drop interior pages while ALiBi distances
+//  must stay anchored to true positions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PageEntry {
+    pub id: PageId,
+    pub base_pos: usize,
+}
+
+/// A sequence's view of the cache.
+#[derive(Debug, Default, Clone)]
+pub struct SeqCache {
+    pub pages: Vec<PageEntry>,
+    /// total tokens ever appended (absolute next position)
+    pub pos: usize,
+    /// tokens currently resident (pos minus evicted)
+    pub resident: usize,
+}
+
+impl SeqCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Tokens in a given table entry (full page unless it's the last one).
+    pub fn entry_len(&self, idx: usize, pool: &PagePool) -> usize {
+        pool.filled(self.pages[idx].id)
+    }
+
+    /// Begin writing token at `self.pos`: returns (page, slot), allocating
+    /// a fresh page when the previous one is full (or was evicted).
+    pub fn slot_for_next(&mut self, pool: &mut PagePool) -> (PageId, usize) {
+        let need_new = match self.pages.last() {
+            None => true,
+            Some(e) => self.pos - e.base_pos >= pool.page_size,
+        };
+        if need_new {
+            let id = pool.alloc();
+            self.pages.push(PageEntry { id, base_pos: self.pos });
+        }
+        let e = *self.pages.last().unwrap();
+        (e.id, self.pos - e.base_pos)
+    }
+
+    /// Called once per token after all layers are written.
+    pub fn commit_token(&mut self) {
+        self.pos += 1;
+        self.resident += 1;
+    }
+
+    /// Evict the table entry at `idx` (frees the page when unshared).
+    pub fn evict(&mut self, idx: usize, pool: &mut PagePool) {
+        let e = self.pages.remove(idx);
+        self.resident -= pool.filled(e.id);
+        pool.release(e.id);
+    }
+
+    /// Drop everything (sequence finished).
+    pub fn clear(&mut self, pool: &mut PagePool) {
+        for e in self.pages.drain(..) {
+            pool.release(e.id);
+        }
+        self.pos = 0;
+        self.resident = 0;
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Snapshot for session storage: full pages are shared by refcount;
+    /// the trailing partial page (still writable) is deep-copied so later
+    /// appends can't corrupt the snapshot.
+    pub fn snapshot(&self, pool: &mut PagePool) -> SeqCache {
+        let mut pages = Vec::with_capacity(self.pages.len());
+        for (i, e) in self.pages.iter().enumerate() {
+            let last = i + 1 == self.pages.len();
+            let partial = pool.filled(e.id) < pool.page_size;
+            if last && partial {
+                pages.push(PageEntry { id: pool.clone_page(e.id), base_pos: e.base_pos });
+            } else {
+                pool.retain(e.id);
+                pages.push(*e);
+            }
+        }
+        SeqCache { pages, pos: self.pos, resident: self.resident }
+    }
+
+    /// Restore a snapshot into a live sequence. The snapshot itself stays
+    /// valid (pages get another reference); the trailing partial page is
+    /// deep-copied so the restored sequence can append.
+    pub fn restore(snap: &SeqCache, pool: &mut PagePool) -> SeqCache {
+        Self::restore_prefix(snap, pool, usize::MAX).0
+    }
+
+    /// Restore at most the first `max_tokens` tokens of a snapshot at page
+    /// granularity (vLLM-style prefix caching): pages fully inside the
+    /// usable prefix are shared; the first page crossing the limit is
+    /// dropped (its tokens get re-prefilled). Returns (cache, tokens
+    /// actually covered).
+    pub fn restore_prefix(
+        snap: &SeqCache,
+        pool: &mut PagePool,
+        max_tokens: usize,
+    ) -> (SeqCache, usize) {
+        let mut pages = Vec::new();
+        let mut covered = 0usize;
+        let n = snap.pages.len();
+        for (i, e) in snap.pages.iter().enumerate() {
+            let filled = pool.filled(e.id);
+            // only a contiguous, fully-covered prefix is reusable
+            if e.base_pos != covered || e.base_pos + filled > max_tokens {
+                break;
+            }
+            let _ = (i, n);
+            let partial = filled < pool.page_size;
+            if partial {
+                // a partial page is necessarily the last kept page; clone it
+                // so the restored sequence can append into it
+                pages.push(PageEntry {
+                    id: pool.clone_page(e.id),
+                    base_pos: e.base_pos,
+                });
+            } else {
+                pool.retain(e.id);
+                pages.push(*e);
+            }
+            covered = e.base_pos + filled;
+        }
+        (
+            SeqCache { pages, pos: covered, resident: covered },
+            covered,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KvDtype;
+
+    fn setup() -> (PagePool, SeqCache) {
+        (PagePool::new(1, 4, 4, KvDtype::F32), SeqCache::new())
+    }
+
+    fn push_token(seq: &mut SeqCache, pool: &mut PagePool, val: f32) {
+        let (page, slot) = seq.slot_for_next(pool);
+        pool.write_token(page, slot, 0, &[val; 4], &[val; 4]);
+        seq.commit_token();
+    }
+
+    #[test]
+    fn pages_fill_then_allocate() {
+        let (mut pool, mut seq) = setup();
+        for i in 0..10 {
+            push_token(&mut seq, &mut pool, i as f32);
+        }
+        assert_eq!(seq.pos, 10);
+        assert_eq!(seq.n_pages(), 3); // 4 + 4 + 2
+        assert_eq!(pool.filled(seq.pages[0].id), 4);
+        assert_eq!(pool.filled(seq.pages[2].id), 2);
+        assert_eq!(seq.pages[1].base_pos, 4);
+    }
+
+    #[test]
+    fn eviction_frees_and_keeps_positions() {
+        let (mut pool, mut seq) = setup();
+        for i in 0..12 {
+            push_token(&mut seq, &mut pool, i as f32);
+        }
+        assert_eq!(pool.pages_in_use(), 3);
+        seq.evict(1, &mut pool); // drop middle page
+        assert_eq!(seq.n_pages(), 2);
+        assert_eq!(seq.resident, 8);
+        assert_eq!(seq.pages[1].base_pos, 8); // positions preserved
+        assert_eq!(pool.pages_in_use(), 2);
+    }
+
+    #[test]
+    fn snapshot_shares_full_pages() {
+        let (mut pool, mut seq) = setup();
+        for i in 0..6 {
+            push_token(&mut seq, &mut pool, i as f32);
+        }
+        let in_use_before = pool.pages_in_use();
+        let snap = seq.snapshot(&mut pool);
+        // full page shared (refcount 2), partial page copied (one extra page)
+        assert_eq!(pool.pages_in_use(), in_use_before + 1);
+        assert_eq!(pool.refcount(seq.pages[0].id), 2);
+        assert_ne!(snap.pages[1].id, seq.pages[1].id);
+
+        // appending to the live seq must not affect the snapshot
+        push_token(&mut seq, &mut pool, 99.0);
+        assert_eq!(pool.key_row(snap.pages[1].id, 0, 1), vec![5.0; 4]);
+        assert_eq!(pool.filled(snap.pages[1].id), 2);
+    }
+
+    #[test]
+    fn restore_enables_independent_append() {
+        let (mut pool, mut seq) = setup();
+        for i in 0..5 {
+            push_token(&mut seq, &mut pool, i as f32);
+        }
+        let snap = seq.snapshot(&mut pool);
+        let mut restored = SeqCache::restore(&snap, &mut pool);
+        assert_eq!(restored.pos, 5);
+        push_token(&mut restored, &mut pool, 50.0);
+        push_token(&mut seq, &mut pool, 60.0);
+        // each wrote its own copy of the partial page
+        assert_eq!(pool.key_row(restored.pages[1].id, 0, 1), vec![50.0; 4]);
+        assert_eq!(pool.key_row(seq.pages[1].id, 0, 1), vec![60.0; 4]);
+        // snapshot still intact
+        assert_eq!(pool.filled(snap.pages[1].id), 1);
+        // cleanup is balanced
+        restored.clear(&mut pool);
+        seq.clear(&mut pool);
+        let mut snap = snap;
+        snap.clear(&mut pool);
+        assert_eq!(pool.pages_in_use(), 0);
+        pool.validate().unwrap();
+    }
+}

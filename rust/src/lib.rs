@@ -1,0 +1,46 @@
+//! # TinyServe — query-aware KV cache selection for efficient LLM serving
+//!
+//! Rust + JAX + Pallas reproduction of *TinyServe: Query-Aware Cache
+//! Selection for Efficient LLM Serving* (Liu & Yu, MM '25). Three layers:
+//!
+//! * **L3 (this crate)** — the serving coordinator: paged KV cache with
+//!   bounding-box metadata, query-aware page selection + baseline policy
+//!   zoo, continuous batching, sessions, plugins, metrics and the hardware
+//!   cost model.
+//! * **L2 (python/compile/model.py)** — the tiny-transformer compute graph,
+//!   AOT-lowered to HLO text (`make artifacts`), executed via PJRT.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels: fused sparse decode
+//!   attention and bounding-box page scoring.
+//!
+//! Python never runs on the request path. See DESIGN.md for the system
+//! inventory and the per-experiment index, EXPERIMENTS.md for results.
+
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod harness;
+pub mod hwmodel;
+pub mod kvcache;
+pub mod metrics;
+pub mod plugins;
+pub mod report;
+pub mod runtime;
+pub mod sparsity;
+pub mod util;
+pub mod workload;
+
+/// Default artifacts directory (honours `TINYSERVE_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("TINYSERVE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// Default results directory for tables/figures.
+pub fn results_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from("results")
+}
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,237 @@
+//! `tinyserve` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         list models/artifacts from the manifest
+//!   generate --model M --prompt  one-shot generation (quick sanity check)
+//!   serve    --model M ...       run a multi-user trace, print the report
+//!   eval     --model M --task T  task accuracy under a policy
+//!   cost     --model M ...       hardware cost-model projections
+
+use anyhow::Result;
+
+use tinyserve::config::{KvDtype, ServingConfig};
+use tinyserve::coordinator::{serve_trace, ServeOptions};
+use tinyserve::engine::{Engine, Sampling};
+use tinyserve::metrics::StepMetrics;
+use tinyserve::plugins::Pipeline;
+use tinyserve::runtime::Manifest;
+use tinyserve::sparsity::PolicyKind;
+use tinyserve::util::cli::Args;
+use tinyserve::util::rng::Rng;
+use tinyserve::workload::{generate_trace, tasks, TraceConfig};
+
+fn serving_config(args: &Args) -> Result<ServingConfig> {
+    let mut cfg = ServingConfig {
+        model: args.str_or("model", "tiny-trained"),
+        ..Default::default()
+    };
+    cfg.page_size = args.usize_or("page-size", cfg.page_size);
+    cfg.budget = args.usize_or("budget", cfg.budget);
+    cfg.max_batch = args.usize_or("batch", cfg.max_batch);
+    cfg.batch_timeout_ms = args.f64_or("batch-timeout-ms", cfg.batch_timeout_ms);
+    if let Some(p) = args.get("policy") {
+        cfg.policy = PolicyKind::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown policy '{p}'"))?;
+    }
+    if let Some(d) = args.get("kv-dtype") {
+        cfg.kv_dtype = KvDtype::parse(d)
+            .ok_or_else(|| anyhow::anyhow!("unknown kv dtype '{d}'"))?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_info() -> Result<()> {
+    let m = Manifest::load(&tinyserve::artifacts_dir())?;
+    println!("artifacts: {}", m.root.display());
+    for (name, info) in &m.models {
+        println!(
+            "  {name:22} d={:<4} L={:<2} H={:<2} ctx={:<6} params={:.1}M \
+             trained={} budgets={:?}",
+            info.d_model,
+            info.n_layer,
+            info.n_head,
+            info.ctx,
+            info.n_params as f64 / 1e6,
+            info.trained,
+            info.budget_variants(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = serving_config(args)?;
+    let prompt = args.str_or("prompt", "The pass key is 41923. What is the pass key? Answer: ");
+    let max_new = args.usize_or("max-new", 16);
+    let mut engine = Engine::new(&tinyserve::artifacts_dir(), cfg)?;
+    let mut rng = Rng::new(args.usize_or("seed", 42) as u64);
+
+    let mut seq = engine.new_sequence();
+    seq.tokens = tasks::encode_prompt(&prompt);
+    seq.max_new_tokens = max_new;
+    let mut m = StepMetrics::default();
+    engine.prefill(&mut seq, &mut m)?;
+    println!("prefilled {} tokens in {:.1} ms", seq.cache.pos, m.step_seconds * 1e3);
+    let t0 = std::time::Instant::now();
+    while !seq.finished {
+        let mut m = StepMetrics::default();
+        let mut batch = [&mut seq];
+        engine.decode_step(&mut batch, Sampling::Greedy, &mut rng, &mut m)?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let out = tasks::decode_ids(seq.generated_tokens());
+    println!("generated {:?}", out);
+    println!(
+        "{} tokens in {:.1} ms  ({:.1} tok/s)",
+        seq.generated,
+        dt * 1e3,
+        seq.generated as f64 / dt
+    );
+    engine.release(&mut seq);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = serving_config(args)?;
+    let trace_cfg = TraceConfig {
+        n_requests: args.usize_or("requests", 32),
+        mean_interarrival_s: args.f64_or("interarrival-ms", 50.0) / 1e3,
+        session_reuse_prob: args.f64_or("session-prob", 0.3),
+        new_tokens: (
+            args.usize_or("min-new", 16),
+            args.usize_or("max-new", 48),
+        ),
+        seed: args.usize_or("seed", 42) as u64,
+        ..Default::default()
+    };
+    println!(
+        "serving {} requests  model={} policy={} budget={} batch={}",
+        trace_cfg.n_requests,
+        cfg.model,
+        cfg.policy.name(),
+        cfg.budget,
+        cfg.max_batch
+    );
+    let mut engine = Engine::new(&tinyserve::artifacts_dir(), cfg)?;
+    engine.warmup()?;
+    let trace = generate_trace(&trace_cfg);
+    let opts = ServeOptions {
+        n_workers: args.usize_or("workers", 1),
+        seed: trace_cfg.seed,
+        ..Default::default()
+    };
+    let mut plugins = Pipeline::new();
+    let r = serve_trace(&mut engine, &trace, &opts, &mut plugins)?;
+    let mut m = r.metrics;
+    println!("--- serve report ---");
+    println!("requests            {}", m.total_requests);
+    println!("wall (virtual)      {:.2} s   busy {:.0}%", r.wall_s, r.busy_frac * 100.0);
+    println!("throughput          {:.1} tok/s   {:.2} req/s", m.throughput_tps(), m.requests_per_sec());
+    println!("decode latency      {:.2} ms/token", m.ms_per_token());
+    println!(
+        "request e2e         p50 {:.0} ms  p99 {:.0} ms",
+        m.request_e2e.p50() * 1e3,
+        m.request_e2e.p99() * 1e3
+    );
+    println!(
+        "ttft                p50 {:.0} ms  p99 {:.0} ms",
+        m.request_ttft.p50() * 1e3,
+        m.request_ttft.p99() * 1e3
+    );
+    println!("kv page hit rate    {:.1}%", m.hit_rate.mean() * 100.0);
+    println!("exact-match acc     {:.1}%  (char {:.1}%)", r.accuracy * 100.0, r.char_accuracy * 100.0);
+    println!(
+        "sessions            reuse {:.0}%  reused tokens {}  migrations {}",
+        r.session_stats.reuse_rate() * 100.0,
+        r.session_stats.reused_tokens,
+        r.session_stats.migrations
+    );
+    for (task, acc, n) in &r.per_task {
+        println!("  task {task:10} acc {:.0}%  (n={n})", acc * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = serving_config(args)?;
+    let task = match args.str_or("task", "passkey").as_str() {
+        "passkey" => tasks::Task::Passkey,
+        "kvrecall" => tasks::Task::KvRecall,
+        "repeat" => tasks::Task::Repeat,
+        "raretoken" => tasks::Task::RareToken,
+        "alias" => tasks::Task::Alias,
+        t => anyhow::bail!("unknown task {t}"),
+    };
+    let n = args.usize_or("n", 10);
+    let chars = args.usize_or("chars", 600);
+    let mut engine = Engine::new(&tinyserve::artifacts_dir(), cfg)?;
+    let mut rng = Rng::new(args.usize_or("seed", 42) as u64);
+    let mut hits = 0usize;
+    for i in 0..n {
+        let doc = tasks::make_doc(&mut rng, task, chars);
+        let mut seq = engine.new_sequence();
+        seq.tokens = tasks::encode_prompt(&doc.prompt);
+        seq.max_new_tokens = doc.answer.len() + 4;
+        let mut m = StepMetrics::default();
+        engine.prefill(&mut seq, &mut m)?;
+        while !seq.finished {
+            let mut m = StepMetrics::default();
+            let mut batch = [&mut seq];
+            engine.decode_step(&mut batch, Sampling::Greedy, &mut rng, &mut m)?;
+        }
+        let gen = tasks::decode_ids(seq.generated_tokens());
+        let ok = tasks::answer_matches(&doc, &gen);
+        hits += ok as usize;
+        println!("case {i:2}: want {:?} got {:?} {}", doc.answer, gen.trim(), if ok { "OK" } else { "MISS" });
+        engine.release(&mut seq);
+    }
+    println!("accuracy {}/{} = {:.0}%", hits, n, hits as f64 / n as f64 * 100.0);
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    use tinyserve::hwmodel::{HwModel, Shape};
+    let hw = HwModel::a100();
+    let ctx = args.usize_or("ctx", 8192);
+    let s = args.usize_or("page-size", 16);
+    let shape = |k: usize| Shape {
+        d_model: args.usize_or("d", 1024),
+        n_layer: args.usize_or("layers", 24),
+        n_params: args.usize_or("params-m", 345) * 1_000_000,
+        ctx,
+        page_size: s,
+        k_pages: k,
+        kv_dtype: KvDtype::F16,
+        batch: args.usize_or("batch", 1),
+    };
+    let full = shape(ctx / s);
+    let sel = shape(args.usize_or("budget", 2048) / s);
+    println!("A100 cost model (ctx={ctx}, S={s}):");
+    println!("  FullCache  {:.2} ms/token", hw.decode_token_ms(&full));
+    println!("  TinyServe  {:.2} ms/token", hw.decode_token_ms(&sel));
+    println!("  speedup    {:.2}x", hw.decode_token_ms(&full) / hw.decode_token_ms(&sel));
+    println!(
+        "  memory fraction (paper Eq. §3.6): {:.3}",
+        tinyserve::hwmodel::HwModel::memory_fraction(ctx, s, sel.k_pages, 0.35)
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.subcommand() {
+        Some("info") => cmd_info(),
+        Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("cost") => cmd_cost(&args),
+        _ => {
+            eprintln!(
+                "usage: tinyserve <info|generate|serve|eval|cost> [--model M] \
+                 [--policy P] [--budget N] [--batch B] ..."
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Fine-grained serving instrumentation (paper §3.2: "layer-wise performance
+//! monitoring ... lightweight instrumentation hooks").
+//!
+//! Two levels:
+//!  * `StepMetrics` — one decode step of one batch: phase timings, bytes
+//!    gathered per layer, page selection stats, entropy. Cheap to fill
+//!    (plain counters, no allocation after warmup).
+//!  * `ServerMetrics` — aggregation across a run: latency percentiles,
+//!    throughput, KV hit rates, bandwidth trace (Figure 6/7 inputs).
+
+use std::time::Instant;
+
+use crate::util::stats::{Samples, Welford};
+
+/// Per-decode-step record, reset and reused between steps.
+#[derive(Debug, Clone, Default)]
+pub struct StepMetrics {
+    pub batch: usize,
+    /// wall time of the whole step (s)
+    pub step_seconds: f64,
+    /// time in PJRT execute calls
+    pub exec_seconds: f64,
+    /// time scoring pages (the tau_meta * P term)
+    pub score_seconds: f64,
+    /// time gathering pages into the staging buffer (the tau_hb * K*S term)
+    pub gather_seconds: f64,
+    /// bytes read from KV storage during gathers (all layers, all rows)
+    pub gather_bytes: usize,
+    /// pages scanned for scores (P summed over layers/rows)
+    pub pages_scanned: usize,
+    /// pages selected (K summed over layers/rows)
+    pub pages_selected: usize,
+    /// pages selected that were also selected last step (reuse -> "KV hit")
+    pub pages_reused: usize,
+    /// tokens resident in cache across the batch
+    pub resident_tokens: usize,
+    /// mean attention entropy over batch rows (last layer)
+    pub entropy: f32,
+}
+
+impl StepMetrics {
+    pub fn reset(&mut self) {
+        *self = StepMetrics::default();
+    }
+
+    /// Page-level cache hit rate for this step (paper "KV Hit %"):
+    /// fraction of this step's selected pages that were already hot.
+    pub fn hit_rate(&self) -> f64 {
+        if self.pages_selected == 0 {
+            return 1.0;
+        }
+        self.pages_reused as f64 / self.pages_selected as f64
+    }
+}
+
+/// Simple scope timer: `let _t = Timer::new(&mut secs);` adds on drop.
+pub struct Timer<'a> {
+    start: Instant,
+    sink: &'a mut f64,
+}
+
+impl<'a> Timer<'a> {
+    pub fn new(sink: &'a mut f64) -> Self {
+        Timer { start: Instant::now(), sink }
+    }
+}
+
+impl<'a> Drop for Timer<'a> {
+    fn drop(&mut self) {
+        *self.sink += self.start.elapsed().as_secs_f64();
+    }
+}
+
+/// One completed request's timeline.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub queue_seconds: f64,
+    pub prefill_seconds: f64,
+    /// time to first token (queue + prefill)
+    pub ttft_seconds: f64,
+    pub decode_seconds: f64,
+    pub e2e_seconds: f64,
+    pub prompt_tokens: usize,
+    pub new_tokens: usize,
+    pub session_reused_tokens: usize,
+}
+
+/// Run-level aggregation.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    pub step_latency: Samples,
+    pub token_latency: Welford,
+    pub request_e2e: Samples,
+    pub request_ttft: Samples,
+    pub hit_rate: Welford,
+    pub gather_bytes_per_step: Welford,
+    pub entropy: Welford,
+    pub total_steps: u64,
+    pub total_new_tokens: u64,
+    pub total_requests: u64,
+    pub total_gather_bytes: u64,
+    pub run_seconds: f64,
+    /// per-step bandwidth trace (bytes gathered each step) for Figure 7
+    pub bandwidth_trace: Vec<f64>,
+    /// per-step hit-rate trace for Figure 6
+    pub hit_trace: Vec<f64>,
+    pub trace_enabled: bool,
+}
+
+impl ServerMetrics {
+    pub fn new(trace: bool) -> Self {
+        ServerMetrics { trace_enabled: trace, ..Default::default() }
+    }
+
+    pub fn on_step(&mut self, m: &StepMetrics) {
+        self.total_steps += 1;
+        self.total_new_tokens += m.batch as u64;
+        self.step_latency.push(m.step_seconds);
+        if m.batch > 0 {
+            self.token_latency.push(m.step_seconds / m.batch as f64);
+        }
+        self.hit_rate.push(m.hit_rate());
+        self.gather_bytes_per_step.push(m.gather_bytes as f64);
+        self.total_gather_bytes += m.gather_bytes as u64;
+        if m.entropy.is_finite() {
+            self.entropy.push(m.entropy as f64);
+        }
+        if self.trace_enabled {
+            self.bandwidth_trace.push(m.gather_bytes as f64);
+            self.hit_trace.push(m.hit_rate());
+        }
+    }
+
+    pub fn on_request(&mut self, r: &RequestRecord) {
+        self.total_requests += 1;
+        self.request_e2e.push(r.e2e_seconds);
+        self.request_ttft.push(r.ttft_seconds);
+    }
+
+    /// tokens/second across the run (requires `run_seconds` set).
+    pub fn throughput_tps(&self) -> f64 {
+        if self.run_seconds > 0.0 {
+            self.total_new_tokens as f64 / self.run_seconds
+        } else {
+            0.0
+        }
+    }
+
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.run_seconds > 0.0 {
+            self.total_requests as f64 / self.run_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// mean decode latency per token, ms (paper Table 1 "Latency (ms)").
+    pub fn ms_per_token(&self) -> f64 {
+        self.token_latency.mean() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_aggregation() {
+        let mut sm = ServerMetrics::new(true);
+        for i in 0..10 {
+            let m = StepMetrics {
+                batch: 4,
+                step_seconds: 0.01 * (i + 1) as f64,
+                gather_bytes: 1000,
+                pages_selected: 10,
+                pages_reused: 9,
+                entropy: 1.0,
+                ..Default::default()
+            };
+            sm.on_step(&m);
+        }
+        assert_eq!(sm.total_steps, 10);
+        assert_eq!(sm.total_new_tokens, 40);
+        assert!((sm.hit_rate.mean() - 0.9).abs() < 1e-9);
+        assert_eq!(sm.bandwidth_trace.len(), 10);
+        sm.run_seconds = 2.0;
+        assert_eq!(sm.throughput_tps(), 20.0);
+    }
+
+    #[test]
+    fn hit_rate_edge_cases() {
+        let m = StepMetrics::default();
+        assert_eq!(m.hit_rate(), 1.0);
+        let m = StepMetrics { pages_selected: 4, pages_reused: 1, ..Default::default() };
+        assert_eq!(m.hit_rate(), 0.25);
+    }
+
+    #[test]
+    fn timer_accumulates() {
+        let mut acc = 0.0;
+        {
+            let _t = Timer::new(&mut acc);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(acc >= 0.002);
+    }
+}

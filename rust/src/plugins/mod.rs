@@ -1,0 +1,221 @@
+//! Plugin pipeline — the paper's "Modular Scheduling Pipeline" (§3.1(2)):
+//! configurable modules observe each decode step and may trigger early
+//! stopping, pruning, or precision changes without touching the model.
+
+use crate::engine::{SampleOut, Sequence};
+use crate::kvcache::PagePool;
+
+/// What a plugin asks the engine to do after observing a step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PluginAction {
+    Continue,
+    /// finish this sequence now (early exit)
+    Stop,
+    /// evict the sequence's lowest-value page (token-level pruning proxy)
+    PruneColdest,
+}
+
+/// Per-step observation handed to plugins.
+pub struct StepView<'a> {
+    pub seq: &'a Sequence,
+    pub sample: &'a SampleOut,
+    /// attention entropy from the last layer of this step
+    pub attn_entropy: f32,
+    pub pool: &'a PagePool,
+}
+
+pub trait Plugin {
+    fn name(&self) -> &'static str;
+    fn on_step(&mut self, view: &StepView) -> PluginAction;
+    fn reset(&mut self) {}
+}
+
+/// Entropy-based early exit: stop once the *output* distribution has been
+/// confidently peaked for `patience` consecutive steps (paper's
+/// "entropy-based early exit" plugin).
+pub struct EntropyEarlyExit {
+    pub threshold: f32,
+    pub patience: usize,
+    pub min_tokens: usize,
+    streak: usize,
+}
+
+impl EntropyEarlyExit {
+    pub fn new(threshold: f32, patience: usize, min_tokens: usize) -> Self {
+        EntropyEarlyExit { threshold, patience, min_tokens, streak: 0 }
+    }
+}
+
+impl Plugin for EntropyEarlyExit {
+    fn name(&self) -> &'static str {
+        "entropy_early_exit"
+    }
+
+    fn on_step(&mut self, v: &StepView) -> PluginAction {
+        if v.sample.entropy < self.threshold {
+            self.streak += 1;
+        } else {
+            self.streak = 0;
+        }
+        if v.seq.generated >= self.min_tokens && self.streak >= self.patience {
+            return PluginAction::Stop;
+        }
+        PluginAction::Continue
+    }
+
+    fn reset(&mut self) {
+        self.streak = 0;
+    }
+}
+
+/// Cache-pressure pruning: when a sequence holds more pages than
+/// `max_pages`, ask the engine to evict its coldest page.
+pub struct TokenPruning {
+    pub max_pages: usize,
+}
+
+impl Plugin for TokenPruning {
+    fn name(&self) -> &'static str {
+        "token_pruning"
+    }
+
+    fn on_step(&mut self, v: &StepView) -> PluginAction {
+        if v.seq.cache.n_pages() > self.max_pages {
+            PluginAction::PruneColdest
+        } else {
+            PluginAction::Continue
+        }
+    }
+}
+
+/// Repetition guard: stops runaway generations that repeat one token
+/// (serving hygiene; also exercises the diagnostics tasks).
+pub struct RepetitionGuard {
+    pub max_run: usize,
+}
+
+impl Plugin for RepetitionGuard {
+    fn name(&self) -> &'static str {
+        "repetition_guard"
+    }
+
+    fn on_step(&mut self, v: &StepView) -> PluginAction {
+        let g = v.seq.generated_tokens();
+        if g.len() >= self.max_run {
+            let tail = &g[g.len() - self.max_run..];
+            if tail.iter().all(|&t| t == tail[0]) {
+                return PluginAction::Stop;
+            }
+        }
+        PluginAction::Continue
+    }
+}
+
+/// Ordered plugin pipeline; the strongest action across plugins wins
+/// (Stop > PruneColdest > Continue).
+#[derive(Default)]
+pub struct Pipeline {
+    plugins: Vec<Box<dyn Plugin>>,
+}
+
+impl Pipeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, p: Box<dyn Plugin>) -> &mut Self {
+        self.plugins.push(p);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plugins.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.plugins.iter().map(|p| p.name()).collect()
+    }
+
+    pub fn on_step(&mut self, view: &StepView) -> PluginAction {
+        let mut act = PluginAction::Continue;
+        for p in self.plugins.iter_mut() {
+            match p.on_step(view) {
+                PluginAction::Stop => return PluginAction::Stop,
+                PluginAction::PruneColdest => act = PluginAction::PruneColdest,
+                PluginAction::Continue => {}
+            }
+        }
+        act
+    }
+
+    pub fn reset(&mut self) {
+        for p in self.plugins.iter_mut() {
+            p.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KvDtype;
+    use crate::engine::Sampling;
+    use crate::sparsity::PolicyKind;
+
+    fn view<'a>(
+        seq: &'a Sequence,
+        sample: &'a SampleOut,
+        pool: &'a PagePool,
+    ) -> StepView<'a> {
+        StepView { seq, sample, attn_entropy: 1.0, pool }
+    }
+
+    fn seq_with(generated: usize, tokens: Vec<i32>) -> Sequence {
+        let mut s = Sequence::new(1, PolicyKind::TinyServe, 2);
+        s.tokens = tokens;
+        s.generated = generated;
+        s
+    }
+
+    #[test]
+    fn early_exit_needs_patience_and_min_tokens() {
+        let pool = PagePool::new(1, 4, 4, KvDtype::F32);
+        let mut p = EntropyEarlyExit::new(0.5, 3, 5);
+        let low = SampleOut { token: 1, entropy: 0.1, logprob: -0.1 };
+        let seq = seq_with(10, vec![1; 10]);
+        assert_eq!(p.on_step(&view(&seq, &low, &pool)), PluginAction::Continue);
+        assert_eq!(p.on_step(&view(&seq, &low, &pool)), PluginAction::Continue);
+        assert_eq!(p.on_step(&view(&seq, &low, &pool)), PluginAction::Stop);
+        // high entropy resets the streak
+        p.reset();
+        let hi = SampleOut { token: 1, entropy: 2.0, logprob: -2.0 };
+        p.on_step(&view(&seq, &low, &pool));
+        p.on_step(&view(&seq, &hi, &pool));
+        assert_eq!(p.on_step(&view(&seq, &low, &pool)), PluginAction::Continue);
+    }
+
+    #[test]
+    fn repetition_guard_fires_on_runs() {
+        let pool = PagePool::new(1, 4, 4, KvDtype::F32);
+        let mut p = RepetitionGuard { max_run: 4 };
+        let s = SampleOut { token: 7, entropy: 1.0, logprob: -1.0 };
+        let seq = seq_with(4, vec![7, 7, 7, 7]);
+        assert_eq!(p.on_step(&view(&seq, &s, &pool)), PluginAction::Stop);
+        let seq2 = seq_with(4, vec![7, 8, 7, 7]);
+        assert_eq!(p.on_step(&view(&seq2, &s, &pool)), PluginAction::Continue);
+    }
+
+    #[test]
+    fn pipeline_priority() {
+        let pool = PagePool::new(1, 4, 4, KvDtype::F32);
+        let mut pipe = Pipeline::new();
+        pipe.push(Box::new(RepetitionGuard { max_run: 2 }));
+        pipe.push(Box::new(TokenPruning { max_pages: 0 }));
+        let s = SampleOut { token: 3, entropy: 1.0, logprob: -1.0 };
+        let seq = seq_with(2, vec![3, 3]);
+        // repetition guard stops immediately even though pruning also fires
+        assert_eq!(pipe.on_step(&view(&seq, &s, &pool)), PluginAction::Stop);
+        assert_eq!(pipe.names(), vec!["repetition_guard", "token_pruning"]);
+        let _ = Sampling::Greedy; // keep import used
+    }
+}

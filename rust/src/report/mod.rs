@@ -1,0 +1,228 @@
+//! Table/figure emission shared by benches, examples and the paper harness:
+//! aligned text tables for stdout, markdown for EXPERIMENTS.md, CSV for
+//! figure data, and JSON for machine consumption under `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        debug_assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Aligned plain-text rendering for stdout / bench logs.
+    pub fn to_text(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &w));
+        let _ = writeln!(out, "{}", "-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", line(r, &w));
+        }
+        out
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "**{}**\n", self.title);
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::from(self.title.as_str())),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::from(h.as_str())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::Arr(r.iter().map(|c| Json::from(c.as_str())).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Print to stdout and persist under `results/<stem>.{csv,json}`.
+    pub fn emit(&self, results_dir: &Path, stem: &str) {
+        print!("{}", self.to_text());
+        let _ = std::fs::create_dir_all(results_dir);
+        let _ = std::fs::write(results_dir.join(format!("{stem}.csv")), self.to_csv());
+        let _ = std::fs::write(
+            results_dir.join(format!("{stem}.json")),
+            self.to_json().to_string(),
+        );
+    }
+}
+
+/// Series data for figures (x, one or more named y columns).
+pub struct Series {
+    pub title: String,
+    pub x_name: String,
+    pub x: Vec<f64>,
+    pub columns: Vec<(String, Vec<f64>)>,
+}
+
+impl Series {
+    pub fn new(title: &str, x_name: &str) -> Series {
+        Series {
+            title: title.to_string(),
+            x_name: x_name.to_string(),
+            x: Vec::new(),
+            columns: Vec::new(),
+        }
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut headers = vec![self.x_name.as_str()];
+        headers.extend(self.columns.iter().map(|(n, _)| n.as_str()));
+        let mut t = Table::new(&self.title, &headers);
+        for (i, x) in self.x.iter().enumerate() {
+            let mut row = vec![format!("{x}")];
+            for (_, ys) in &self.columns {
+                row.push(
+                    ys.get(i).map(|y| format!("{y:.4}")).unwrap_or_default(),
+                );
+            }
+            t.row(row);
+        }
+        t
+    }
+
+    pub fn emit(&self, results_dir: &Path, stem: &str) {
+        self.to_table().emit(results_dir, stem);
+    }
+}
+
+pub fn fmt_ms(s: f64) -> String {
+    format!("{:.2}", s * 1e3)
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.1}", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("demo", &["method", "lat", "acc"]);
+        t.row(vec!["TinyServe".into(), "11.9".into(), "55.2".into()]);
+        t.row(vec!["FullCache".into(), "25.1".into(), "54.2".into()]);
+        t
+    }
+
+    #[test]
+    fn text_is_aligned() {
+        let txt = sample().to_text();
+        assert!(txt.contains("### demo"));
+        let lines: Vec<&str> = txt.lines().collect();
+        assert_eq!(lines[2].len(), lines[3].len().max(lines[2].len()).min(lines[2].len()));
+        assert!(lines[3].contains("TinyServe"));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample().to_markdown();
+        assert!(md.contains("| method | lat | acc |"));
+        assert!(md.contains("|---|---|---|"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["with,comma".into()]);
+        t.row(vec!["with\"quote".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"with,comma\""));
+        assert!(csv.contains("\"with\"\"quote\""));
+    }
+
+    #[test]
+    fn series_to_table() {
+        let mut s = Series::new("fig", "ctx");
+        s.x = vec![1.0, 2.0];
+        s.columns.push(("speedup".into(), vec![1.5, 2.5]));
+        let t = s.to_table();
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[1][1], "2.5000");
+    }
+}

@@ -1,0 +1,305 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, emitted by aot.py).
+//!
+//! The manifest is the single source of truth for model dimensions,
+//! parameter order and the executable variant matrix — the Rust side never
+//! hard-codes shapes that python chose.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSpec {
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .context("shape not array")?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: j.req("dtype")?.as_str().unwrap_or("f32").to_string(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled executable variant (a single HLO text file).
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub kind: String, // embed | qkv | post | logits | prefill | decode_fused
+    pub path: String, // relative to the artifacts dir
+    /// weight names consumed, in positional order, possibly layer-generic
+    /// ("ln1" resolves to "ln1.{layer}" at call time)
+    pub params: Vec<String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub batch: usize,
+    pub budget: Option<usize>,
+    pub chunk: Option<usize>,
+    pub ctx: Option<usize>,
+    pub n_pages: Option<usize>,
+    pub k_pages: Option<usize>,
+    pub page_size: Option<usize>,
+}
+
+impl ArtifactInfo {
+    fn parse(j: &Json) -> Result<ArtifactInfo> {
+        let get_usize = |k: &str| j.get(k).and_then(|v| v.as_usize());
+        Ok(ArtifactInfo {
+            kind: j.req("kind")?.as_str().context("kind")?.to_string(),
+            path: j.req("path")?.as_str().context("path")?.to_string(),
+            params: j
+                .req("params")?
+                .as_arr()
+                .context("params")?
+                .iter()
+                .map(|x| x.as_str().unwrap_or("").to_string())
+                .collect(),
+            inputs: j
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<_>>()?,
+            outputs: j
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<_>>()?,
+            batch: get_usize("batch").unwrap_or(1),
+            budget: get_usize("budget"),
+            chunk: get_usize("chunk"),
+            ctx: get_usize("ctx"),
+            n_pages: get_usize("n_pages"),
+            k_pages: get_usize("k_pages"),
+            page_size: get_usize("page_size"),
+        })
+    }
+}
+
+/// Static model description from the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub ctx: usize,
+    pub mlp_dim: usize,
+    pub n_params: usize,
+    pub act: String,
+    pub trained: bool,
+    pub weights: String,
+    pub param_order: Vec<String>,
+    pub alibi_slopes: Vec<f32>,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl ModelInfo {
+    fn parse(name: &str, j: &Json) -> Result<ModelInfo> {
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().with_context(|| format!("{k} not usize"))
+        };
+        Ok(ModelInfo {
+            name: name.to_string(),
+            d_model: u("d_model")?,
+            n_layer: u("n_layer")?,
+            n_head: u("n_head")?,
+            head_dim: u("head_dim")?,
+            vocab: u("vocab")?,
+            ctx: u("ctx")?,
+            mlp_dim: u("mlp_dim")?,
+            n_params: u("n_params")?,
+            act: j.req("act")?.as_str().unwrap_or("gelu").to_string(),
+            trained: j.req("trained")?.as_bool().unwrap_or(false),
+            weights: j.req("weights")?.as_str().context("weights")?.to_string(),
+            param_order: j
+                .req("param_order")?
+                .as_arr()
+                .context("param_order")?
+                .iter()
+                .map(|x| x.as_str().unwrap_or("").to_string())
+                .collect(),
+            alibi_slopes: j
+                .req("alibi_slopes")?
+                .as_f32_flat(),
+            artifacts: j
+                .req("artifacts")?
+                .as_arr()
+                .context("artifacts")?
+                .iter()
+                .map(ArtifactInfo::parse)
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Find an executable variant. `budget` is required for `post`.
+    pub fn find_artifact(
+        &self,
+        kind: &str,
+        batch: usize,
+        budget: Option<usize>,
+    ) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.kind == kind
+                    && a.batch == batch
+                    && (budget.is_none() || a.budget == budget)
+            })
+            .with_context(|| {
+                format!(
+                    "no artifact kind={kind} batch={batch} budget={budget:?} for \
+                     model {} (available: {})",
+                    self.name,
+                    self.artifacts
+                        .iter()
+                        .map(|a| format!("{}/b{}/t{:?}", a.kind, a.batch, a.budget))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// All compiled batch sizes for a kind, ascending.
+    pub fn batch_variants(&self, kind: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .map(|a| a.batch)
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// All compiled decode budgets, ascending.
+    pub fn budget_variants(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "post")
+            .filter_map(|a| a.budget)
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let fmt = j.req("format")?.as_i64().unwrap_or(0);
+        if fmt != 1 {
+            bail!("unsupported manifest format {fmt}");
+        }
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.req("models")?.as_obj().context("models")? {
+            models.insert(name.clone(), ModelInfo::parse(name, mj)?);
+        }
+        Ok(Manifest { root: artifacts_dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model '{name}' not in manifest (have: {})",
+                self.models.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "models": {
+        "m": {
+          "d_model": 128, "n_layer": 2, "n_head": 8, "head_dim": 16,
+          "vocab": 512, "ctx": 4096, "mlp_dim": 512, "n_params": 1000,
+          "act": "gelu", "trained": true, "weights": "m.weights.bin",
+          "param_order": ["embed", "lnf", "ln1.0"],
+          "alibi_slopes": [0.5, 0.25],
+          "artifacts": [
+            {"kind": "post", "path": "hlo/m/post_b1_t256.hlo.txt",
+             "params": ["wo", "ln2"], "batch": 1, "budget": 256,
+             "inputs": [{"shape": [1, 128], "dtype": "f32"}],
+             "outputs": [{"shape": [1, 128], "dtype": "f32"}]},
+            {"kind": "post", "path": "hlo/m/post_b4_t256.hlo.txt",
+             "params": ["wo", "ln2"], "batch": 4, "budget": 256,
+             "inputs": [], "outputs": []}
+          ]
+        }
+      }
+    }"#;
+
+    fn sample() -> Manifest {
+        let j = Json::parse(SAMPLE).unwrap();
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.req("models").unwrap().as_obj().unwrap() {
+            models.insert(name.clone(), ModelInfo::parse(name, mj).unwrap());
+        }
+        Manifest { root: PathBuf::from("/tmp"), models }
+    }
+
+    #[test]
+    fn parses_model_info() {
+        let m = sample();
+        let info = m.model("m").unwrap();
+        assert_eq!(info.d_model, 128);
+        assert_eq!(info.alibi_slopes, vec![0.5, 0.25]);
+        assert_eq!(info.artifacts.len(), 2);
+    }
+
+    #[test]
+    fn finds_variants() {
+        let m = sample();
+        let info = m.model("m").unwrap();
+        let a = info.find_artifact("post", 4, Some(256)).unwrap();
+        assert_eq!(a.batch, 4);
+        assert!(info.find_artifact("post", 2, Some(256)).is_err());
+        assert_eq!(info.batch_variants("post"), vec![1, 4]);
+        assert_eq!(info.budget_variants(), vec![256]);
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        assert!(sample().model("nope").is_err());
+    }
+}

@@ -1,0 +1,211 @@
+//! PJRT runtime: loads HLO-text artifacts, uploads weights once, and runs
+//! executables from the L3 hot path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`) — see
+//! DESIGN.md §6 for why serialized protos don't work with xla_extension
+//! 0.5.1. Weight tensors live as device buffers for the process lifetime;
+//! per-call inputs (activations, gathered KV) are uploaded with
+//! `buffer_from_host_buffer` and results come back as host literals.
+
+pub mod manifest;
+pub mod weights;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+pub use manifest::{ArtifactInfo, Manifest, ModelInfo, TensorSpec};
+pub use weights::ModelWeights;
+
+/// Per-call data input (weights are resolved separately by name).
+pub enum Input<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+/// Cumulative runtime counters (feed the metrics layer; bytes moved to the
+/// device is the measurable analogue of the paper's HBM traffic).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub exec_seconds: f64,
+    pub upload_seconds: f64,
+    pub compile_seconds: f64,
+}
+
+/// A loaded model: PJRT client + resident weight buffers + executable cache.
+///
+/// Not `Send`: PJRT wrapper types hold raw pointers. Each serving worker
+/// owns its own `ModelRuntime` (single-core box; see util::threadpool docs).
+pub struct ModelRuntime {
+    pub info: ModelInfo,
+    client: xla::PjRtClient,
+    weights: ModelWeights,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    root: PathBuf,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl ModelRuntime {
+    /// Load a model by name from the artifacts directory.
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Self::from_manifest(&manifest, model)
+    }
+
+    pub fn from_manifest(manifest: &Manifest, model: &str) -> Result<ModelRuntime> {
+        let info = manifest.model(model)?.clone();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let weights_path = manifest.root.join(&info.weights);
+        let weights = ModelWeights::load(&client, &weights_path, &info)?;
+        Ok(ModelRuntime {
+            info,
+            client,
+            weights,
+            exes: RefCell::new(HashMap::new()),
+            root: manifest.root.clone(),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = RuntimeStats::default();
+    }
+
+    pub fn weights(&self) -> &ModelWeights {
+        &self.weights
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn executable(&self, art: &ArtifactInfo) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(&art.path) {
+            return Ok(Rc::clone(e));
+        }
+        let t0 = Instant::now();
+        let full = self.root.join(&art.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            full.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", art.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", art.path))?;
+        self.stats.borrow_mut().compile_seconds += t0.elapsed().as_secs_f64();
+        let rc = Rc::new(exe);
+        self.exes.borrow_mut().insert(art.path.clone(), Rc::clone(&rc));
+        Ok(rc)
+    }
+
+    /// Eagerly compile the decode-path executables for one (batch, budget)
+    /// so the first request doesn't pay compile latency.
+    pub fn warmup(&self, batch: usize, budget: usize) -> Result<()> {
+        for kind in ["embed", "qkv", "logits"] {
+            let art = self.info.find_artifact(kind, batch, None)?.clone();
+            self.executable(&art)?;
+        }
+        let art = self.info.find_artifact("post", batch, Some(budget))?.clone();
+        self.executable(&art)?;
+        Ok(())
+    }
+
+    fn upload(&self, input: &Input) -> Result<xla::PjRtBuffer> {
+        let t0 = Instant::now();
+        let (buf, bytes) = match input {
+            Input::F32(data, dims) => (
+                self.client
+                    .buffer_from_host_buffer::<f32>(data, dims, None)
+                    .map_err(|e| anyhow::anyhow!("upload f32: {e:?}"))?,
+                data.len() * 4,
+            ),
+            Input::I32(data, dims) => (
+                self.client
+                    .buffer_from_host_buffer::<i32>(data, dims, None)
+                    .map_err(|e| anyhow::anyhow!("upload i32: {e:?}"))?,
+                data.len() * 4,
+            ),
+        };
+        let mut s = self.stats.borrow_mut();
+        s.h2d_bytes += bytes as u64;
+        s.upload_seconds += t0.elapsed().as_secs_f64();
+        Ok(buf)
+    }
+
+    /// Execute an artifact: weight buffers are resolved by name (appending
+    /// `.{layer}` for layer-generic params), data inputs are uploaded, and
+    /// the tuple result is decomposed into host literals.
+    pub fn run(
+        &self,
+        art: &ArtifactInfo,
+        layer: Option<usize>,
+        data: &[Input],
+    ) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            data.len() == art.inputs.len(),
+            "{}: expected {} data inputs, got {}",
+            art.kind,
+            art.inputs.len(),
+            data.len()
+        );
+        let exe = self.executable(art)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(
+            art.params.len() + data.len(),
+        );
+        for p in &art.params {
+            args.push(self.weights.resolve(p, layer)?);
+        }
+        let uploaded: Vec<xla::PjRtBuffer> = data
+            .iter()
+            .map(|i| self.upload(i))
+            .collect::<Result<_>>()?;
+        args.extend(uploaded.iter());
+
+        let t0 = Instant::now();
+        let out = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", art.kind))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.exec_seconds += t0.elapsed().as_secs_f64();
+        s.d2h_bytes += parts.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
+        Ok(parts)
+    }
+
+    /// Convenience: run and convert every output to `Vec<f32>`.
+    pub fn run_f32(
+        &self,
+        art: &ArtifactInfo,
+        layer: Option<usize>,
+        data: &[Input],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.run(art, layer, data)?
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}")))
+            .collect()
+    }
+}
+
+/// Copy a literal's f32 payload into a caller-provided slice (avoids the
+/// extra Vec when the engine reuses staging buffers).
+pub fn literal_into(lit: &xla::Literal, dst: &mut [f32]) -> Result<()> {
+    lit.copy_raw_to::<f32>(dst)
+        .map_err(|e| anyhow::anyhow!("copy_raw_to: {e:?}"))
+}

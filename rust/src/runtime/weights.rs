@@ -1,0 +1,65 @@
+//! Weight loading: tensorfile -> device buffers, uploaded once per process.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::ModelInfo;
+use crate::util::tensorfile::TensorFile;
+
+pub struct ModelWeights {
+    buffers: BTreeMap<String, xla::PjRtBuffer>,
+    shapes: BTreeMap<String, Vec<usize>>,
+    pub total_bytes: usize,
+}
+
+impl ModelWeights {
+    pub fn load(
+        client: &xla::PjRtClient,
+        path: &Path,
+        info: &ModelInfo,
+    ) -> Result<ModelWeights> {
+        let tf = TensorFile::read(path)?;
+        let mut buffers = BTreeMap::new();
+        let mut shapes = BTreeMap::new();
+        let mut total = 0usize;
+        for name in &info.param_order {
+            let t = tf.get(name).with_context(|| {
+                format!("weights file {} missing '{name}'", path.display())
+            })?;
+            let data = t.to_f32_vec()?;
+            let buf = client
+                .buffer_from_host_buffer::<f32>(&data, &t.shape, None)
+                .map_err(|e| anyhow::anyhow!("upload weight {name}: {e:?}"))?;
+            total += data.len() * 4;
+            buffers.insert(name.clone(), buf);
+            shapes.insert(name.clone(), t.shape.clone());
+        }
+        Ok(ModelWeights { buffers, shapes, total_bytes: total })
+    }
+
+    /// Resolve a (possibly layer-generic) parameter name to its buffer:
+    /// "wqkv" + layer 2 -> "wqkv.2"; exact names ("embed", "lnf", "ln1.0")
+    /// resolve directly.
+    pub fn resolve(&self, name: &str, layer: Option<usize>) -> Result<&xla::PjRtBuffer> {
+        if let Some(b) = self.buffers.get(name) {
+            return Ok(b);
+        }
+        if let Some(l) = layer {
+            let qualified = format!("{name}.{l}");
+            if let Some(b) = self.buffers.get(&qualified) {
+                return Ok(b);
+            }
+        }
+        anyhow::bail!("weight '{name}' (layer {layer:?}) not found")
+    }
+
+    pub fn shape(&self, name: &str) -> Option<&[usize]> {
+        self.shapes.get(name).map(|s| s.as_slice())
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.buffers.keys()
+    }
+}

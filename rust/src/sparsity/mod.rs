@@ -1,0 +1,10 @@
+//! Query-aware sparsity: page scoring (Eq. 2), top-K selection and the
+//! policy zoo (paper + baselines).
+
+pub mod policy;
+pub mod score;
+pub mod topk;
+
+pub use policy::{make_policy, Policy, PolicyKind, SelectCtx};
+pub use score::{score_page, score_pages};
+pub use topk::top_k_indices;

@@ -1,0 +1,584 @@
+//! Page-selection policies: the paper's query-aware mechanism plus every
+//! baseline from Tables 1/2/4 (FullCache, StreamingLLM, SnapKV-like,
+//! PyramidKV-like, SoftPrune, EntropyStop) and an exact-scoring Oracle
+//! upper bound.
+//!
+//! A policy sees the fresh query, the sequence's page table and the pool
+//! metadata, and returns *table indices* of pages to gather, within the
+//! token budget. Feedback policies additionally receive per-page attention
+//! mass after each step (computed by the engine from the kernel's alpha
+//! output), keyed by `base_pos` so eviction can't shift identities.
+
+use std::collections::HashMap;
+
+use crate::kvcache::{PagePool, SeqCache};
+
+use super::score::score_page;
+use super::topk::top_k_indices;
+
+/// Which selection policy to run (parseable from CLI/bench configs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    FullCache,
+    TinyServe,
+    Oracle,
+    StreamingLlm,
+    SnapKv,
+    PyramidKv,
+    SoftPrune,
+    EntropyStop,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "fullcache" | "full" => PolicyKind::FullCache,
+            "tinyserve" | "queryaware" => PolicyKind::TinyServe,
+            "oracle" => PolicyKind::Oracle,
+            "streamingllm" | "streaming" => PolicyKind::StreamingLlm,
+            "snapkv" => PolicyKind::SnapKv,
+            "pyramidkv" | "pyramid" => PolicyKind::PyramidKv,
+            "softprune" => PolicyKind::SoftPrune,
+            "entropystop" => PolicyKind::EntropyStop,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::FullCache => "FullCache",
+            PolicyKind::TinyServe => "TinyServe",
+            PolicyKind::Oracle => "Oracle",
+            PolicyKind::StreamingLlm => "StreamingLLM",
+            PolicyKind::SnapKv => "SnapKV",
+            PolicyKind::PyramidKv => "PyramidKV",
+            PolicyKind::SoftPrune => "SoftPrune",
+            PolicyKind::EntropyStop => "EntropyStop",
+        }
+    }
+
+    pub fn all() -> &'static [PolicyKind] {
+        &[
+            PolicyKind::FullCache,
+            PolicyKind::StreamingLlm,
+            PolicyKind::SoftPrune,
+            PolicyKind::SnapKv,
+            PolicyKind::PyramidKv,
+            PolicyKind::TinyServe,
+        ]
+    }
+}
+
+/// Everything a policy may inspect for one (sequence, layer, step).
+pub struct SelectCtx<'a> {
+    pub layer: usize,
+    pub n_layers: usize,
+    /// fresh query, heads concatenated (d_kv floats)
+    pub q: &'a [f32],
+    pub pool: &'a PagePool,
+    pub seq: &'a SeqCache,
+    /// max pages the gather buffer holds (budget tokens / page size)
+    pub budget_pages: usize,
+    pub sink_pages: usize,
+    pub recent_pages: usize,
+    /// mean attention entropy from the previous decode step (nan at step 0)
+    pub last_entropy: f32,
+}
+
+impl<'a> SelectCtx<'a> {
+    /// Table indices that are force-included (attention sinks + local
+    /// window). Always <= budget_pages by ServingConfig::validate.
+    fn forced(&self) -> Vec<usize> {
+        let n = self.seq.n_pages();
+        let mut out: Vec<usize> = (0..self.sink_pages.min(n)).collect();
+        let recent_start = n.saturating_sub(self.recent_pages);
+        for i in recent_start..n {
+            if !out.contains(&i) {
+                out.push(i);
+            }
+        }
+        out
+    }
+}
+
+/// Behaviour shared by all selection strategies.
+pub trait Policy {
+    fn kind(&self) -> PolicyKind;
+
+    /// Choose pages (table indices, ascending) for this layer's attention.
+    fn select_into(&mut self, ctx: &SelectCtx, out: &mut Vec<usize>);
+
+    /// Post-step attention-mass feedback: `(base_pos, mass)` per selected
+    /// page for this layer. Default: ignored.
+    fn feedback(&mut self, _layer: usize, _pages: &[(usize, f32)]) {}
+
+    fn wants_feedback(&self) -> bool {
+        false
+    }
+}
+
+/// Construct a policy instance (one per sequence — policies are stateful).
+pub fn make_policy(kind: PolicyKind) -> Box<dyn Policy> {
+    match kind {
+        PolicyKind::FullCache => Box::new(FullCache),
+        PolicyKind::TinyServe => Box::new(TinyServe { scores: Vec::new() }),
+        PolicyKind::Oracle => Box::new(Oracle { scores: Vec::new() }),
+        PolicyKind::StreamingLlm => Box::new(StreamingLlm),
+        PolicyKind::SnapKv => Box::new(SnapKv { ema: HashMap::new(), decay: 0.8 }),
+        PolicyKind::PyramidKv => Box::new(PyramidKv { scores: Vec::new(), taper: 0.6 }),
+        PolicyKind::SoftPrune => Box::new(SoftPrune {
+            ema: HashMap::new(),
+            decay: 0.8,
+            threshold: 0.1,
+        }),
+        PolicyKind::EntropyStop => Box::new(EntropyStop {
+            inner: TinyServe { scores: Vec::new() },
+            threshold: 0.5,
+        }),
+    }
+}
+
+fn merge_forced(selected: &mut Vec<usize>, forced: &[usize]) {
+    for &f in forced {
+        if !selected.contains(&f) {
+            selected.push(f);
+        }
+    }
+    selected.sort_unstable();
+    selected.dedup();
+}
+
+/// Query-aware bounding-box selection on top of forced sink/recent pages —
+/// the paper's contribution.
+struct TinyServe {
+    scores: Vec<f32>,
+}
+
+impl TinyServe {
+    fn select_scored<F: FnMut(usize) -> f32>(
+        ctx: &SelectCtx,
+        scores: &mut Vec<f32>,
+        budget_pages: usize,
+        mut score_fn: F,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
+        let n = ctx.seq.n_pages();
+        let forced = ctx.forced();
+        if n <= budget_pages {
+            out.extend(0..n);
+            return;
+        }
+        scores.clear();
+        for i in 0..n {
+            if forced.contains(&i) {
+                scores.push(f32::NEG_INFINITY); // handled separately
+            } else {
+                scores.push(score_fn(i));
+            }
+        }
+        let free = budget_pages - forced.len();
+        *out = top_k_indices(scores, free);
+        merge_forced(out, &forced);
+    }
+}
+
+impl Policy for TinyServe {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::TinyServe
+    }
+
+    fn select_into(&mut self, ctx: &SelectCtx, out: &mut Vec<usize>) {
+        let (pool, seq, q, layer) = (ctx.pool, ctx.seq, ctx.q, ctx.layer);
+        Self::select_scored(
+            ctx,
+            &mut self.scores,
+            ctx.budget_pages,
+            |i| score_page(q, pool.meta(seq.pages[i].id, layer)),
+            out,
+        );
+    }
+}
+
+/// Exact max-dot-product scoring (scans every key): the quality upper bound
+/// Eq. 2 approximates, at O(L*d) scan cost instead of O(P*d).
+struct Oracle {
+    scores: Vec<f32>,
+}
+
+impl Policy for Oracle {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Oracle
+    }
+
+    fn select_into(&mut self, ctx: &SelectCtx, out: &mut Vec<usize>) {
+        let (pool, seq, q, layer) = (ctx.pool, ctx.seq, ctx.q, ctx.layer);
+        TinyServe::select_scored(
+            ctx,
+            &mut self.scores,
+            ctx.budget_pages,
+            |i| pool.exact_page_score(seq.pages[i].id, layer, q),
+            out,
+        );
+    }
+}
+
+/// Everything in the table (the no-pruning baseline). The engine validates
+/// that budget covers the full context when this policy is active.
+struct FullCache;
+
+impl Policy for FullCache {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::FullCache
+    }
+
+    fn select_into(&mut self, ctx: &SelectCtx, out: &mut Vec<usize>) {
+        out.clear();
+        let n = ctx.seq.n_pages();
+        if n <= ctx.budget_pages {
+            out.extend(0..n);
+        } else {
+            // graceful degradation: most recent pages + sinks
+            let start = n - (ctx.budget_pages - ctx.sink_pages.min(n));
+            out.extend(0..ctx.sink_pages.min(n));
+            out.extend(start..n);
+            out.dedup();
+            out.truncate(ctx.budget_pages);
+        }
+    }
+}
+
+/// Attention sinks + sliding window (Xiao et al. 2024), page-granular.
+struct StreamingLlm;
+
+impl Policy for StreamingLlm {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::StreamingLlm
+    }
+
+    fn select_into(&mut self, ctx: &SelectCtx, out: &mut Vec<usize>) {
+        out.clear();
+        let n = ctx.seq.n_pages();
+        let sink = ctx.sink_pages.min(n);
+        let window = ctx.budget_pages.saturating_sub(sink);
+        out.extend(0..sink);
+        for i in n.saturating_sub(window)..n {
+            if i >= sink {
+                out.push(i);
+            }
+        }
+    }
+}
+
+/// Observed-attention ranking (SnapKV-flavoured): pages that received mass
+/// recently stay hot; never-observed pages rank by recency.
+struct SnapKv {
+    /// (layer, base_pos) -> EMA of attention mass
+    ema: HashMap<(usize, usize), f32>,
+    decay: f32,
+}
+
+impl Policy for SnapKv {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::SnapKv
+    }
+
+    fn wants_feedback(&self) -> bool {
+        true
+    }
+
+    fn select_into(&mut self, ctx: &SelectCtx, out: &mut Vec<usize>) {
+        out.clear();
+        let n = ctx.seq.n_pages();
+        if n <= ctx.budget_pages {
+            out.extend(0..n);
+            return;
+        }
+        let forced = ctx.forced();
+        let mut scores = vec![0.0f32; n];
+        for (i, s) in scores.iter_mut().enumerate() {
+            if forced.contains(&i) {
+                *s = f32::NEG_INFINITY;
+            } else {
+                let key = (ctx.layer, ctx.seq.pages[i].base_pos);
+                // small recency prior so unobserved pages still rotate in
+                let recency = i as f32 / n as f32 * 1e-3;
+                *s = self.ema.get(&key).copied().unwrap_or(0.0) + recency;
+            }
+        }
+        let free = ctx.budget_pages - forced.len();
+        *out = top_k_indices(&scores, free);
+        merge_forced(out, &forced);
+    }
+
+    fn feedback(&mut self, layer: usize, pages: &[(usize, f32)]) {
+        for &(base, mass) in pages {
+            let e = self.ema.entry((layer, base)).or_insert(0.0);
+            *e = self.decay * *e + (1.0 - self.decay) * mass;
+        }
+    }
+}
+
+/// PyramidKV-flavoured: query-aware scores but a per-layer budget taper —
+/// deeper layers get fewer pages (information funnels upward).
+struct PyramidKv {
+    scores: Vec<f32>,
+    taper: f32,
+}
+
+impl Policy for PyramidKv {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::PyramidKv
+    }
+
+    fn select_into(&mut self, ctx: &SelectCtx, out: &mut Vec<usize>) {
+        let frac = if ctx.n_layers <= 1 {
+            1.0
+        } else {
+            1.0 - self.taper * ctx.layer as f32 / (ctx.n_layers - 1) as f32
+        };
+        let forced_len = ctx.sink_pages + ctx.recent_pages;
+        let budget = ((ctx.budget_pages as f32 * frac) as usize)
+            .max(forced_len + 1)
+            .min(ctx.budget_pages);
+        let (pool, seq, q, layer) = (ctx.pool, ctx.seq, ctx.q, ctx.layer);
+        TinyServe::select_scored(
+            ctx,
+            &mut self.scores,
+            budget,
+            |i| score_page(q, pool.meta(seq.pages[i].id, layer)),
+            out,
+        );
+    }
+}
+
+/// Threshold pruning on observed attention mass: pages whose EMA falls
+/// below `threshold / n_pages` are dropped from consideration.
+struct SoftPrune {
+    ema: HashMap<(usize, usize), f32>,
+    decay: f32,
+    threshold: f32,
+}
+
+impl Policy for SoftPrune {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::SoftPrune
+    }
+
+    fn wants_feedback(&self) -> bool {
+        true
+    }
+
+    fn select_into(&mut self, ctx: &SelectCtx, out: &mut Vec<usize>) {
+        out.clear();
+        let n = ctx.seq.n_pages();
+        if n <= ctx.budget_pages {
+            out.extend(0..n);
+            return;
+        }
+        let forced = ctx.forced();
+        let cut = self.threshold / n as f32;
+        let mut kept: Vec<usize> = (0..n)
+            .filter(|&i| {
+                !forced.contains(&i)
+                    && self
+                        .ema
+                        .get(&(ctx.layer, ctx.seq.pages[i].base_pos))
+                        .copied()
+                        // unobserved pages survive until observed
+                        .unwrap_or(f32::INFINITY)
+                        >= cut
+            })
+            .collect();
+        // cap at budget: prefer most recent survivors
+        let free = ctx.budget_pages - forced.len();
+        if kept.len() > free {
+            kept.drain(0..kept.len() - free);
+        }
+        *out = kept;
+        merge_forced(out, &forced);
+    }
+
+    fn feedback(&mut self, layer: usize, pages: &[(usize, f32)]) {
+        for &(base, mass) in pages {
+            let e = self.ema.entry((layer, base)).or_insert(1.0);
+            *e = self.decay * *e + (1.0 - self.decay) * mass;
+        }
+    }
+}
+
+/// Entropy-gated two-mode policy: confident steps (low attention entropy)
+/// use only sink+recent; uncertain steps fall back to query-aware search.
+struct EntropyStop {
+    inner: TinyServe,
+    threshold: f32,
+}
+
+impl Policy for EntropyStop {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::EntropyStop
+    }
+
+    fn select_into(&mut self, ctx: &SelectCtx, out: &mut Vec<usize>) {
+        if ctx.last_entropy.is_finite() && ctx.last_entropy < self.threshold {
+            out.clear();
+            *out = ctx.forced();
+            out.sort_unstable();
+        } else {
+            self.inner.select_into(ctx, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KvDtype;
+
+    /// Build a pool+sequence where page `hot` contains a key aligned with
+    /// the probe query and everything else is anti-aligned.
+    fn setup(n_pages: usize, hot: usize) -> (PagePool, SeqCache, Vec<f32>) {
+        let d = 8;
+        let s = 4;
+        let mut pool = PagePool::new(2, d, s, KvDtype::F32);
+        let mut seq = SeqCache::new();
+        for p in 0..n_pages {
+            for _slot in 0..s {
+                let (page, slot) = seq.slot_for_next(&mut pool);
+                let val = if p == hot { 1.0 } else { -1.0 };
+                let k = vec![val; d];
+                pool.write_token(page, slot, 0, &k, &k);
+                pool.write_token(page, slot, 1, &k, &k);
+                seq.commit_token();
+            }
+        }
+        let q = vec![1.0; d];
+        (pool, seq, q)
+    }
+
+    fn ctx<'a>(
+        pool: &'a PagePool,
+        seq: &'a SeqCache,
+        q: &'a [f32],
+        budget_pages: usize,
+    ) -> SelectCtx<'a> {
+        SelectCtx {
+            layer: 0,
+            n_layers: 2,
+            q,
+            pool,
+            seq,
+            budget_pages,
+            sink_pages: 1,
+            recent_pages: 1,
+            last_entropy: f32::NAN,
+        }
+    }
+
+    #[test]
+    fn tinyserve_finds_hot_page() {
+        let (pool, seq, q) = setup(10, 5);
+        let mut p = make_policy(PolicyKind::TinyServe);
+        let mut out = Vec::new();
+        p.select_into(&ctx(&pool, &seq, &q, 4), &mut out);
+        assert!(out.contains(&5), "hot page selected: {out:?}");
+        assert!(out.contains(&0), "sink forced");
+        assert!(out.contains(&9), "recent forced");
+        assert!(out.len() <= 4);
+        assert!(out.windows(2).all(|w| w[0] < w[1]), "sorted");
+    }
+
+    #[test]
+    fn oracle_agrees_with_tinyserve_on_separable_data() {
+        let (pool, seq, q) = setup(10, 3);
+        let mut a = make_policy(PolicyKind::TinyServe);
+        let mut b = make_policy(PolicyKind::Oracle);
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        a.select_into(&ctx(&pool, &seq, &q, 4), &mut oa);
+        b.select_into(&ctx(&pool, &seq, &q, 4), &mut ob);
+        assert_eq!(oa, ob);
+    }
+
+    #[test]
+    fn fullcache_selects_everything_within_budget() {
+        let (pool, seq, q) = setup(6, 0);
+        let mut p = make_policy(PolicyKind::FullCache);
+        let mut out = Vec::new();
+        p.select_into(&ctx(&pool, &seq, &q, 8), &mut out);
+        assert_eq!(out, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn streaming_is_sink_plus_window() {
+        let (pool, seq, q) = setup(10, 0);
+        let mut p = make_policy(PolicyKind::StreamingLlm);
+        let mut out = Vec::new();
+        p.select_into(&ctx(&pool, &seq, &q, 4), &mut out);
+        assert_eq!(out, vec![0, 7, 8, 9]);
+    }
+
+    #[test]
+    fn snapkv_prefers_observed_pages() {
+        let (pool, seq, q) = setup(10, 0);
+        let mut p = make_policy(PolicyKind::SnapKv);
+        // report strong mass on page base_pos=12 (table idx 3)
+        for _ in 0..5 {
+            p.feedback(0, &[(12, 0.9)]);
+        }
+        let mut out = Vec::new();
+        p.select_into(&ctx(&pool, &seq, &q, 4), &mut out);
+        assert!(out.contains(&3), "{out:?}");
+    }
+
+    #[test]
+    fn pyramid_tapers_with_depth() {
+        let (pool, seq, q) = setup(12, 2);
+        let mut p = make_policy(PolicyKind::PyramidKv);
+        let mut shallow = Vec::new();
+        let mut deep = Vec::new();
+        let mut c0 = ctx(&pool, &seq, &q, 8);
+        c0.layer = 0;
+        p.select_into(&c0, &mut shallow);
+        let mut c1 = ctx(&pool, &seq, &q, 8);
+        c1.layer = 1;
+        p.select_into(&c1, &mut deep);
+        assert!(deep.len() < shallow.len(), "{} vs {}", deep.len(), shallow.len());
+    }
+
+    #[test]
+    fn entropy_stop_gates_on_entropy() {
+        let (pool, seq, q) = setup(10, 5);
+        let mut p = make_policy(PolicyKind::EntropyStop);
+        let mut confident = Vec::new();
+        let mut c = ctx(&pool, &seq, &q, 6);
+        c.last_entropy = 0.1;
+        p.select_into(&c, &mut confident);
+        assert_eq!(confident, vec![0, 9]); // sink + recent only
+        let mut uncertain = Vec::new();
+        c.last_entropy = 3.0;
+        p.select_into(&c, &mut uncertain);
+        assert!(uncertain.len() > confident.len());
+    }
+
+    #[test]
+    fn all_policies_respect_budget() {
+        let (pool, seq, q) = setup(32, 7);
+        for kind in [
+            PolicyKind::FullCache,
+            PolicyKind::TinyServe,
+            PolicyKind::Oracle,
+            PolicyKind::StreamingLlm,
+            PolicyKind::SnapKv,
+            PolicyKind::PyramidKv,
+            PolicyKind::SoftPrune,
+            PolicyKind::EntropyStop,
+        ] {
+            let mut p = make_policy(kind);
+            let mut out = Vec::new();
+            p.select_into(&ctx(&pool, &seq, &q, 5), &mut out);
+            assert!(out.len() <= 5, "{kind:?} exceeded budget: {out:?}");
+            assert!(out.windows(2).all(|w| w[0] < w[1]), "{kind:?} not sorted");
+            assert!(out.iter().all(|&i| i < 32), "{kind:?} out of range");
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Bounding-box page scoring — the Rust implementation of paper Eq. 2 and
+//! the L3 half of Algorithm 1 step 1 ("relevance scoring over page
+//! metadata"). Semantics pinned against `ref.page_score_ref` golden vectors
+//! (rust/tests/golden.rs) and the Pallas kernel.
+//!
+//! This is the per-step metadata scan the paper prices at tau_meta * P; it
+//! runs once per (sequence, layer, decode step), so it is a profiled hot
+//! path (EXPERIMENTS.md §Perf).
+
+/// score = sum_i max(q_i * M_i, q_i * m_i), meta = [min(d) ++ max(d)].
+///
+/// Branch-free form of the paper's sign-split estimator (valid since
+/// M >= m); auto-vectorizes to SIMD min/max.
+#[inline]
+pub fn score_page(q: &[f32], meta: &[f32]) -> f32 {
+    let d = q.len();
+    debug_assert_eq!(meta.len(), 2 * d);
+    let (mins, maxs) = meta.split_at(d);
+    // 8-lane slice chunks: bounds checks hoisted once per chunk, giving the
+    // autovectorizer clean fixed-width arrays (EXPERIMENTS.md §Perf).
+    let mut acc = [0.0f32; 8];
+    let mut qc = q.chunks_exact(8);
+    let mut mc = mins.chunks_exact(8);
+    let mut xc = maxs.chunks_exact(8);
+    for ((qs, ms), xs) in (&mut qc).zip(&mut mc).zip(&mut xc) {
+        for j in 0..8 {
+            acc[j] += (qs[j] * xs[j]).max(qs[j] * ms[j]);
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for ((qv, mv), xv) in qc
+        .remainder()
+        .iter()
+        .zip(mc.remainder())
+        .zip(xc.remainder())
+    {
+        s += (qv * xv).max(qv * mv);
+    }
+    s
+}
+
+/// Score every page of a sequence's table into `out`.
+pub fn score_pages<'a, I>(q: &[f32], metas: I, out: &mut Vec<f32>)
+where
+    I: Iterator<Item = &'a [f32]>,
+{
+    out.clear();
+    for m in metas {
+        out.push(score_page(q, m));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(q: &[f32], meta: &[f32]) -> f32 {
+        let d = q.len();
+        (0..d)
+            .map(|i| {
+                if q[i] >= 0.0 {
+                    q[i] * meta[d + i]
+                } else {
+                    q[i] * meta[i]
+                }
+            })
+            .sum()
+    }
+
+    #[test]
+    fn matches_paper_sign_split_form() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        for d in [3usize, 8, 16, 33, 128] {
+            let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let mut meta = vec![0.0f32; 2 * d];
+            for i in 0..d {
+                let a = rng.normal() as f32;
+                let b = rng.normal() as f32;
+                meta[i] = a.min(b);
+                meta[d + i] = a.max(b);
+            }
+            let fast = score_page(&q, &meta);
+            let slow = naive(&q, &meta);
+            assert!(
+                (fast - slow).abs() <= 1e-4 * slow.abs().max(1.0),
+                "d={d}: {fast} vs {slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn upper_bounds_contained_keys() {
+        // any key inside the box must score <= the bound
+        let mut rng = crate::util::rng::Rng::new(9);
+        let d = 32;
+        for _ in 0..50 {
+            let keys: Vec<Vec<f32>> = (0..8)
+                .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let mut meta = vec![f32::INFINITY; d];
+            meta.extend(vec![f32::NEG_INFINITY; d]);
+            for k in &keys {
+                for i in 0..d {
+                    meta[i] = meta[i].min(k[i]);
+                    meta[d + i] = meta[d + i].max(k[i]);
+                }
+            }
+            let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let bound = score_page(&q, &meta);
+            for k in &keys {
+                let dot: f32 = q.iter().zip(k).map(|(a, b)| a * b).sum();
+                assert!(dot <= bound + 1e-4, "dot {dot} > bound {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_scoring() {
+        let q = vec![1.0, -1.0];
+        let metas: Vec<Vec<f32>> = vec![
+            vec![0.0, 0.0, 1.0, 1.0], // box [0,1]^2 -> 1*1 + -1*0 = 1
+            vec![-1.0, -1.0, 0.0, 0.0], // box [-1,0]^2 -> 0 + 1 = 1
+            vec![2.0, 2.0, 3.0, 3.0], // -> 3 - 2 = 1
+        ];
+        let mut out = Vec::new();
+        score_pages(&q, metas.iter().map(|m| m.as_slice()), &mut out);
+        assert_eq!(out, vec![1.0, 1.0, 1.0]);
+    }
+}

@@ -1,0 +1,141 @@
+//! Top-K selection over page scores (Algorithm 1 step 2).
+//!
+//! The CUDA paper uses a warp radix-select; here a partial quickselect over
+//! (score, index) pairs — O(P) average — followed by an index sort so the
+//! gather walks pages in address order (sequential pool reads).
+
+/// Indices of the `k` largest scores, ascending by index.
+/// Ties break toward the lower index (deterministic across runs).
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let n = scores.len();
+    if k == 0 || n == 0 {
+        return Vec::new();
+    }
+    if k >= n {
+        return (0..n).collect();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    // quickselect partition so the first k entries hold the k best
+    let mut lo = 0usize;
+    let mut hi = n - 1;
+    loop {
+        if lo >= hi {
+            break;
+        }
+        let p = partition(scores, &mut idx, lo, hi);
+        match p.cmp(&k) {
+            std::cmp::Ordering::Equal => break,
+            std::cmp::Ordering::Less => lo = p + 1,
+            std::cmp::Ordering::Greater => {
+                if p == 0 {
+                    break;
+                }
+                hi = p - 1;
+            }
+        }
+    }
+    let mut out: Vec<usize> = idx[..k].to_vec();
+    out.sort_unstable();
+    out
+}
+
+/// `better(a, b)`: is score[a] strictly better than score[b]? NaN-safe
+/// (NaN ranks last), ties by index for determinism.
+#[inline]
+fn better(scores: &[f32], a: usize, b: usize) -> bool {
+    let (sa, sb) = (scores[a], scores[b]);
+    if sa.is_nan() {
+        return false;
+    }
+    if sb.is_nan() {
+        return true;
+    }
+    sa > sb || (sa == sb && a < b)
+}
+
+fn partition(scores: &[f32], idx: &mut [usize], lo: usize, hi: usize) -> usize {
+    // median-of-three pivot for adversarial monotone inputs
+    let mid = lo + (hi - lo) / 2;
+    if better(scores, idx[mid], idx[lo]) {
+        idx.swap(lo, mid);
+    }
+    if better(scores, idx[hi], idx[lo]) {
+        idx.swap(lo, hi);
+    }
+    let pivot = idx[lo];
+    let mut i = lo + 1;
+    let mut j = hi;
+    loop {
+        while i <= j && better(scores, idx[i], pivot) {
+            i += 1;
+        }
+        while j >= i && !better(scores, idx[j], pivot) {
+            if j == 0 {
+                break;
+            }
+            j -= 1;
+        }
+        if i >= j {
+            break;
+        }
+        idx.swap(i, j);
+    }
+    idx.swap(lo, j.max(lo));
+    j.max(lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn reference(scores: &[f32], k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut out: Vec<usize> = idx[..k.min(scores.len())].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn simple_cases() {
+        assert_eq!(top_k_indices(&[1.0, 5.0, 3.0], 2), vec![1, 2]);
+        assert_eq!(top_k_indices(&[1.0], 5), vec![0]);
+        assert_eq!(top_k_indices(&[], 3), Vec::<usize>::new());
+        assert_eq!(top_k_indices(&[2.0, 2.0, 2.0], 2), vec![0, 1]); // tie->low idx
+    }
+
+    #[test]
+    fn matches_reference_on_random_inputs() {
+        let mut rng = Rng::new(21);
+        for _ in 0..200 {
+            let n = 1 + rng.usize(64);
+            let k = 1 + rng.usize(n);
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            assert_eq!(
+                top_k_indices(&scores, k),
+                reference(&scores, k),
+                "n={n} k={k} scores={scores:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_inputs() {
+        let asc: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        assert_eq!(top_k_indices(&asc, 3), vec![97, 98, 99]);
+        let desc: Vec<f32> = (0..100).map(|i| -(i as f32)).collect();
+        assert_eq!(top_k_indices(&desc, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn handles_neg_inf_and_nan() {
+        let scores = [f32::NEG_INFINITY, 1.0, f32::NAN, 2.0];
+        assert_eq!(top_k_indices(&scores, 2), vec![1, 3]);
+    }
+}

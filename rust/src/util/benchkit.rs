@@ -1,0 +1,252 @@
+//! Criterion-like benchmark harness (criterion is unavailable offline).
+//!
+//! Every file in `benches/` sets `harness = false` and drives this instead:
+//! warmup, timed iterations with adaptive batching, mean ± std, percentiles,
+//! and optional throughput. Output is stable, grep-friendly lines:
+//!
+//! ```text
+//! bench <name> ... mean 12.34 ms  std 0.56  p50 12.1  p95 13.9  (n=40)
+//! ```
+//!
+//! plus a machine-readable JSON dump per bench binary under
+//! `target/bench-results/` that EXPERIMENTS.md tooling collects.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats::Samples;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 10_000,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub iters: usize,
+    /// user-supplied items/iteration for throughput reporting
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            self.items_per_iter / self.mean_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("mean_s", Json::from(self.mean_s)),
+            ("std_s", Json::from(self.std_s)),
+            ("p50_s", Json::from(self.p50_s)),
+            ("p95_s", Json::from(self.p95_s)),
+            ("iters", Json::from(self.iters)),
+            ("items_per_iter", Json::from(self.items_per_iter)),
+            ("throughput", Json::from(self.throughput())),
+        ])
+    }
+}
+
+pub struct Bench {
+    cfg: BenchConfig,
+    group: String,
+    results: Vec<BenchResult>,
+    quick: bool,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // TINYSERVE_BENCH_QUICK=1 shrinks budgets for CI smoke runs.
+        let quick = std::env::var("TINYSERVE_BENCH_QUICK").ok().as_deref() == Some("1");
+        let mut cfg = BenchConfig::default();
+        if quick {
+            cfg.warmup = Duration::from_millis(50);
+            cfg.measure = Duration::from_millis(300);
+            cfg.min_iters = 3;
+        }
+        println!("== bench group: {group} ==");
+        Bench { cfg, group: group.to_string(), results: Vec::new(), quick }
+    }
+
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.run_with_items(name, 1.0, f)
+    }
+
+    /// Benchmark with a throughput denominator (`items` per iteration,
+    /// e.g. tokens decoded per call).
+    pub fn run_with_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: F,
+    ) -> &BenchResult {
+        // warmup
+        let t0 = Instant::now();
+        while t0.elapsed() < self.cfg.warmup {
+            f();
+        }
+        // measure
+        let mut samples = Samples::new();
+        let t1 = Instant::now();
+        let mut iters = 0usize;
+        while (t1.elapsed() < self.cfg.measure || iters < self.cfg.min_iters)
+            && iters < self.cfg.max_iters
+        {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            mean_s: samples.mean(),
+            std_s: samples.std(),
+            p50_s: samples.p50(),
+            p95_s: samples.p95(),
+            iters,
+            items_per_iter: items,
+        };
+        let (scale, unit) = scale_for(r.mean_s);
+        println!(
+            "bench {:<48} mean {:>9.3} {}  std {:>8.3}  p50 {:>9.3}  p95 {:>9.3}  (n={})",
+            r.name,
+            r.mean_s * scale,
+            unit,
+            r.std_s * scale,
+            r.p50_s * scale,
+            r.p95_s * scale,
+            r.iters
+        );
+        if items != 1.0 {
+            println!("      {:<48} throughput {:>12.1} items/s", "", r.throughput());
+        }
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally-measured result (for end-to-end harnesses that
+    /// manage their own timing but want unified reporting).
+    pub fn record(&mut self, name: &str, samples: &mut Samples, items: f64) {
+        let r = BenchResult {
+            name: name.to_string(),
+            mean_s: samples.mean(),
+            std_s: samples.std(),
+            p50_s: samples.p50(),
+            p95_s: samples.p95(),
+            iters: samples.len(),
+            items_per_iter: items,
+        };
+        let (scale, unit) = scale_for(r.mean_s);
+        println!(
+            "bench {:<48} mean {:>9.3} {}  std {:>8.3}  p50 {:>9.3}  p95 {:>9.3}  (n={})",
+            r.name,
+            r.mean_s * scale,
+            unit,
+            r.std_s * scale,
+            r.p50_s * scale,
+            r.p95_s * scale,
+            r.iters
+        );
+        self.results.push(r);
+    }
+
+    /// Write target/bench-results/<group>.json. Called on drop too.
+    pub fn finish(&mut self) {
+        if self.results.is_empty() {
+            return;
+        }
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let j = Json::obj(vec![
+            ("group", Json::from(self.group.as_str())),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ]);
+        let path = dir.join(format!("{}.json", self.group));
+        if std::fs::write(&path, j.to_string()).is_ok() {
+            println!("(results -> {})", path.display());
+        }
+        self.results.clear();
+    }
+}
+
+impl Drop for Bench {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+fn scale_for(secs: f64) -> (f64, &'static str) {
+    if secs >= 1.0 {
+        (1.0, "s ")
+    } else if secs >= 1e-3 {
+        (1e3, "ms")
+    } else if secs >= 1e-6 {
+        (1e6, "us")
+    } else {
+        (1e9, "ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("TINYSERVE_BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest");
+        let r = b
+            .run("spin", || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            })
+            .clone();
+        assert!(r.iters >= 3);
+        assert!(r.mean_s > 0.0);
+        b.finish();
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            mean_s: 0.5,
+            std_s: 0.0,
+            p50_s: 0.5,
+            p95_s: 0.5,
+            iters: 1,
+            items_per_iter: 100.0,
+        };
+        assert_eq!(r.throughput(), 200.0);
+    }
+}

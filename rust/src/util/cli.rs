@@ -1,0 +1,136 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog [subcommand] [--flag] [--key value] [positional...]`.
+//! `--key=value` is also accepted. Unknown flags are errors so typos fail
+//! loudly in bench scripts.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    known: Vec<(String, String)>, // (name, help)
+}
+
+impl Args {
+    pub fn describe(mut self, name: &str, help: &str) -> Self {
+        self.known.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        args: I,
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminator: everything after is positional
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1)).unwrap_or_else(|e| {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a number")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parse("serve extra --model tiny --batch 8 --verbose");
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.usize_or("batch", 1), 8);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+    }
+
+    #[test]
+    fn flag_value_binding_is_greedy() {
+        // a bare word after a flag binds as its value (document the rule)
+        let a = parse("--verbose extra");
+        assert_eq!(a.get("verbose"), Some("extra"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--k=v --n=3");
+        assert_eq!(a.get("k"), Some("v"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.str_or("x", "d"), "d");
+        assert_eq!(a.f64_or("r", 1.5), 1.5);
+        assert!(!a.bool("flag"));
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse("cmd -- --not-a-flag");
+        assert_eq!(a.positional, vec!["cmd", "--not-a-flag"]);
+    }
+}

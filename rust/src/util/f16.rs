@@ -1,0 +1,173 @@
+//! Software IEEE-754 binary16 conversion (the `half` crate is unavailable).
+//!
+//! Used by the KV cache's FP16 storage mode (paper §3.1: "support for
+//! FP16/INT8 KV formats"). Round-to-nearest-even on encode, matching
+//! numpy's `astype(float16)` — pinned against golden vectors from aot.py.
+
+/// f32 -> f16 bits, round-to-nearest-even, with overflow to inf and
+/// gradual underflow to subnormals.
+#[inline]
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = (bits >> 16) & 0x8000;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // inf / nan (quiet the nan payload)
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return (sign | 0x7c00 | m) as u16;
+    }
+    let e = exp - 112; // rebias 127 -> 15
+    if e >= 0x1f {
+        return (sign | 0x7c00) as u16; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal or zero
+        if e < -10 {
+            return sign as u16; // underflow to signed zero
+        }
+        let m = mant | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32;
+        let dropped = m & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut v = m >> shift;
+        if dropped > half || (dropped == half && v & 1 == 1) {
+            v += 1; // round to nearest, ties to even
+        }
+        return (sign | v) as u16;
+    }
+    // normal: round mantissa 23 -> 10 bits, nearest-even; a mantissa carry
+    // flows into the exponent bits (and into inf) by construction.
+    let dropped = mant & 0x1fff;
+    let mut v = ((e as u32) << 10) | (mant >> 13);
+    if dropped > 0x1000 || (dropped == 0x1000 && v & 1 == 1) {
+        v += 1;
+    }
+    (sign | v) as u16
+}
+
+/// f16 bits -> f32 (exact).
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = 127 - 15 - 10;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (((e + 10 + 1) as u32) << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[inline]
+pub fn f32_to_f16_to_f32(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Bulk f16 -> f32 decode via a 64K-entry lookup table (256 KiB, resident
+/// in L2). The branchy scalar decode was the gather hot spot for FP16 KV
+/// caches (EXPERIMENTS.md §Perf: ~5x slower than the f32 memcpy path);
+/// the LUT turns it into two loads per element.
+pub fn f16_slice_to_f32(src: &[u16], dst: &mut [f32]) {
+    let lut = f16_lut();
+    for (d, &h) in dst.iter_mut().zip(src) {
+        *d = lut[h as usize];
+    }
+}
+
+fn f16_lut() -> &'static [f32; 65536] {
+    use std::sync::OnceLock;
+    static LUT: OnceLock<Box<[f32; 65536]>> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = vec![0.0f32; 65536].into_boxed_slice();
+        for (i, v) in t.iter_mut().enumerate() {
+            *v = f16_bits_to_f32(i as u16);
+        }
+        t.try_into().unwrap()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values() {
+        for &(f, bits) in &[
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3c00),
+            (-1.0, 0xbc00),
+            (0.5, 0x3800),
+            (2.0, 0x4000),
+            (65504.0, 0x7bff), // f16 max
+            (1024.0, 0x6400),
+        ] {
+            assert_eq!(f32_to_f16_bits(f), bits, "encode {f}");
+            assert_eq!(f16_bits_to_f32(bits), f, "decode {f}");
+        }
+    }
+
+    #[test]
+    fn negative_zero() {
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f16_bits_to_f32(0x8000), -0.0);
+        assert!(f16_bits_to_f32(0x8000).is_sign_negative());
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xfc00);
+        assert!(f16_bits_to_f32(0x7c00).is_infinite());
+    }
+
+    #[test]
+    fn underflow_and_subnormals() {
+        assert_eq!(f32_to_f16_bits(1e-10), 0x0000);
+        // smallest positive subnormal = 2^-24
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(f32_to_f16_bits(tiny), 0x0001);
+        assert_eq!(f16_bits_to_f32(0x0001), tiny);
+    }
+
+    #[test]
+    fn roundtrip_error_bound() {
+        // relative error of a single f16 roundtrip is <= 2^-11 for normals
+        let mut x = 1e-3f32;
+        while x < 6e4 {
+            let y = f32_to_f16_to_f32(x);
+            assert!(((y - x) / x).abs() <= 1.0 / 2048.0, "{x} -> {y}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 -> even (1.0)
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(x), 0x3c00);
+        // slightly above halfway rounds up
+        let y = 1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-16);
+        assert_eq!(f32_to_f16_bits(y), 0x3c01);
+    }
+}

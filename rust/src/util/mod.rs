@@ -1,0 +1,13 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (DESIGN.md §2: serde/rand/clap/criterion/proptest/half are unavailable,
+//! so the serving stack carries its own implementations, each unit-tested).
+
+pub mod benchkit;
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tensorfile;
+pub mod threadpool;

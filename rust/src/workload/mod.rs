@@ -1,0 +1,153 @@
+//! Workload generation: Poisson request arrivals, task documents, and the
+//! multi-user trace used by the serving experiments (paper §4.4.1:
+//! "512-2048 concurrent requests, Poisson arrivals, mean inter-arrival
+//! 50ms, 100-500 generated tokens").
+
+pub mod tasks;
+
+use crate::util::rng::Rng;
+pub use tasks::{make_doc, Doc, Task};
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// seconds since trace start
+    pub arrival_s: f64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// None = fresh conversation; Some(id) = follow-up in a session
+    pub session: Option<u64>,
+    pub task: Option<Task>,
+    pub answer: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub n_requests: usize,
+    /// mean inter-arrival seconds (paper: 0.050)
+    pub mean_interarrival_s: f64,
+    pub prompt_chars: (usize, usize),
+    pub new_tokens: (usize, usize),
+    /// fraction of requests that continue an existing session
+    pub session_reuse_prob: f64,
+    /// number of distinct sessions (zipf-popular)
+    pub n_sessions: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n_requests: 64,
+            mean_interarrival_s: 0.05,
+            prompt_chars: (200, 800),
+            new_tokens: (20, 60),
+            session_reuse_prob: 0.3,
+            n_sessions: 16,
+            seed: 42,
+        }
+    }
+}
+
+/// Generate a full arrival trace (deterministic from the seed). Session
+/// requests reuse a per-session shared context with per-request questions,
+/// so consecutive requests of one session share a long prompt prefix —
+/// the substrate for cross-request cache reuse measurements.
+pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    let all = Task::all();
+    // pre-build session contexts
+    let sess_chars = (cfg.prompt_chars.0 + cfg.prompt_chars.1) / 2;
+    let sessions: Vec<tasks::SessionDoc> = (0..cfg.n_sessions)
+        .map(|_| tasks::kvrecall_session(&mut rng, sess_chars, 8))
+        .collect();
+    for id in 0..cfg.n_requests as u64 {
+        t += rng.exponential(1.0 / cfg.mean_interarrival_s.max(1e-9));
+        let session = if rng.bool(cfg.session_reuse_prob) && cfg.n_sessions > 0 {
+            Some(rng.zipf(cfg.n_sessions, 1.1) as u64)
+        } else {
+            None
+        };
+        let (doc, task) = match session {
+            Some(sid) => {
+                let q = rng.usize(8);
+                (sessions[sid as usize].question(q), Task::KvRecall)
+            }
+            None => {
+                let task = *rng.choice(all);
+                let chars = rng
+                    .range(cfg.prompt_chars.0 as u64, cfg.prompt_chars.1 as u64 + 1)
+                    as usize;
+                (make_doc(&mut rng, task, chars), task)
+            }
+        };
+        out.push(Request {
+            id,
+            arrival_s: t,
+            prompt: tasks::encode_prompt(&doc.prompt),
+            max_new_tokens: rng
+                .range(cfg.new_tokens.0 as u64, cfg.new_tokens.1 as u64 + 1)
+                as usize,
+            session,
+            task: Some(task),
+            answer: Some(doc.answer),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_ordered() {
+        let cfg = TraceConfig::default();
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a.len(), 64);
+        assert_eq!(a[10].prompt, b[10].prompt);
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn interarrival_mean_matches() {
+        let cfg = TraceConfig {
+            n_requests: 5000,
+            mean_interarrival_s: 0.05,
+            ..Default::default()
+        };
+        let t = generate_trace(&cfg);
+        let total = t.last().unwrap().arrival_s;
+        let mean = total / 5000.0;
+        assert!((mean - 0.05).abs() < 0.005, "{mean}");
+    }
+
+    #[test]
+    fn sessions_are_zipf_skewed() {
+        let cfg = TraceConfig {
+            n_requests: 2000,
+            session_reuse_prob: 1.0,
+            n_sessions: 10,
+            ..Default::default()
+        };
+        let t = generate_trace(&cfg);
+        let mut counts = vec![0usize; 10];
+        for r in &t {
+            counts[r.session.unwrap() as usize] += 1;
+        }
+        assert!(counts[0] > counts[9]);
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let cfg = TraceConfig::default();
+        for r in generate_trace(&cfg) {
+            assert!(r.max_new_tokens >= 20 && r.max_new_tokens <= 60);
+            assert!(r.prompt.len() >= 150); // BOS + >=200 chars, some shrink
+        }
+    }
+}

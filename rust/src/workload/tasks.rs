@@ -1,0 +1,324 @@
+//! Synthetic task generators — byte-for-byte mirrors of
+//! python/compile/corpus.py (the trainer saw exactly these formats, so
+//! serving-time accuracy is a true exact-match metric). If you change a
+//! template here, change it there; python/tests/test_corpus.py and
+//! rust tests pin the shared formats.
+
+use crate::util::rng::Rng;
+
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+
+pub const WORDS: &[&str] = &[
+    "the", "time", "stone", "river", "cloud", "light", "garden", "music",
+    "silver", "paper", "stream", "winter", "morning", "bridge", "copper",
+    "forest", "mountain", "shadow", "window", "harbor", "meadow", "lantern",
+    "valley", "ember", "willow", "raven", "cedar", "harvest", "north", "tide",
+];
+
+pub const NAMES: &[&str] = &[
+    "alpha", "bravo", "charlie", "delta", "echo", "foxtrot", "golf", "hotel",
+    "india", "juliet", "kilo", "lima", "mike", "november", "oscar", "papa",
+    "quebec", "romeo", "sierra", "tango",
+];
+
+const CODE_ALPHABET: &[u8] = b"abcdefghjkmnpqrstuvwxyz23456789";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    Passkey,
+    KvRecall,
+    Repeat,
+    RareToken,
+    Alias,
+}
+
+impl Task {
+    pub fn all() -> &'static [Task] {
+        &[Task::Passkey, Task::KvRecall, Task::Repeat, Task::RareToken, Task::Alias]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Passkey => "passkey",
+            Task::KvRecall => "kvrecall",
+            Task::Repeat => "repeat",
+            Task::RareToken => "raretoken",
+            Task::Alias => "alias",
+        }
+    }
+
+    /// LongBench row this task stands in for (DESIGN.md §2 substitution).
+    pub fn longbench_analogue(&self) -> &'static str {
+        match self {
+            Task::Passkey => "NarrativeQA",
+            Task::KvRecall => "Qasper",
+            Task::Repeat => "TriviaQA",
+            Task::RareToken => "HotpotQA",
+            Task::Alias => "GovReport",
+        }
+    }
+}
+
+/// A generated problem instance: prompt text and exact expected answer.
+#[derive(Debug, Clone)]
+pub struct Doc {
+    pub prompt: String,
+    pub answer: String,
+}
+
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+pub fn encode_prompt(text: &str) -> Vec<i32> {
+    let mut v = vec![BOS];
+    v.extend(encode(text));
+    v
+}
+
+pub fn decode_ids(ids: &[i32]) -> String {
+    let bytes: Vec<u8> = ids
+        .iter()
+        .filter(|&&i| (0..256).contains(&i))
+        .map(|&i| i as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+fn sentence(rng: &mut Rng) -> String {
+    let n = rng.range(4, 9) as usize;
+    let mut s = String::new();
+    for i in 0..n {
+        if i > 0 {
+            s.push(' ');
+        }
+        s.push_str(WORDS[rng.usize(WORDS.len())]);
+    }
+    s.push_str(". ");
+    s
+}
+
+pub fn filler(rng: &mut Rng, n_chars: usize) -> String {
+    let mut out = String::new();
+    while out.len() < n_chars {
+        out.push_str(&sentence(rng));
+    }
+    out.truncate(n_chars);
+    out
+}
+
+fn code(rng: &mut Rng, n: usize) -> String {
+    (0..n).map(|_| char::from(b'0' + rng.usize(10) as u8)).collect()
+}
+
+fn word_code(rng: &mut Rng, n: usize) -> String {
+    (0..n)
+        .map(|_| CODE_ALPHABET[rng.usize(CODE_ALPHABET.len())] as char)
+        .collect()
+}
+
+pub fn passkey_doc(rng: &mut Rng, target_chars: usize) -> Doc {
+    let key = code(rng, 5);
+    let head = format!("The pass key is {key}. Remember it. ");
+    let tail = "What is the pass key? Answer: ";
+    let mid = filler(rng, target_chars.saturating_sub(head.len() + tail.len()));
+    Doc { prompt: format!("{head}{mid}{tail}"), answer: key }
+}
+
+pub fn kvrecall_doc(rng: &mut Rng, target_chars: usize, n_pairs: usize) -> Doc {
+    let mut names: Vec<&str> = NAMES.to_vec();
+    rng.shuffle(&mut names);
+    let pairs: Vec<(String, String)> = (0..n_pairs)
+        .map(|i| (names[i].to_string(), word_code(rng, 5)))
+        .collect();
+    let head: String = pairs
+        .iter()
+        .map(|(n, v)| format!("{n} holds {v}. "))
+        .collect();
+    let (qn, qv) = &pairs[rng.usize(n_pairs)];
+    let tail = format!("Recall what {qn} holds: ");
+    let mid = filler(rng, target_chars.saturating_sub(head.len() + tail.len()));
+    Doc { prompt: format!("{head}{mid}{tail}"), answer: qv.clone() }
+}
+
+pub fn repeat_doc(rng: &mut Rng, target_chars: usize) -> Doc {
+    let s = sentence(rng);
+    let reps = (target_chars / s.len()).max(2);
+    let text: String = s.repeat(reps);
+    let cut = s.len() * (reps - 1) + s.len() / 2;
+    Doc {
+        prompt: text[..cut].to_string(),
+        answer: text[cut..cut + s.len() / 2].to_string(),
+    }
+}
+
+pub fn raretoken_doc(rng: &mut Rng, target_chars: usize) -> Doc {
+    let rare = format!("zyx{}qj", word_code(rng, 3));
+    let head = format!("The rare token is {rare}. ");
+    let tail = "Repeat the rare token: ";
+    let mid = filler(rng, target_chars.saturating_sub(head.len() + tail.len()));
+    Doc { prompt: format!("{head}{mid}{tail}"), answer: rare }
+}
+
+pub fn alias_doc(rng: &mut Rng, target_chars: usize) -> Doc {
+    let name = NAMES[rng.usize(NAMES.len())];
+    let v1 = word_code(rng, 5);
+    let v2 = word_code(rng, 5);
+    let head = format!("{name} holds {v1}. ");
+    let mid_len = (target_chars / 2).saturating_sub(head.len());
+    let mid1 = filler(rng, mid_len);
+    let over = format!("Correction: {name} now holds {v2}. ");
+    let tail = format!("Recall what {name} holds: ");
+    let mid2 = filler(
+        rng,
+        target_chars.saturating_sub(head.len() + mid_len + over.len() + tail.len()),
+    );
+    Doc { prompt: format!("{head}{mid1}{over}{mid2}{tail}"), answer: v2 }
+}
+
+/// Multi-turn session context: a kv-recall document body (no question) and
+/// the bindings it contains. Each follow-up request appends one question —
+/// so every request in a session shares a long common prefix, which is what
+/// makes cross-request cache reuse (paper §4.4.2) measurable.
+pub struct SessionDoc {
+    pub context: String,
+    pub pairs: Vec<(String, String)>,
+}
+
+pub fn kvrecall_session(rng: &mut Rng, target_chars: usize, n_pairs: usize) -> SessionDoc {
+    let mut names: Vec<&str> = NAMES.to_vec();
+    rng.shuffle(&mut names);
+    let pairs: Vec<(String, String)> = (0..n_pairs)
+        .map(|i| (names[i].to_string(), word_code(rng, 5)))
+        .collect();
+    let head: String = pairs
+        .iter()
+        .map(|(n, v)| format!("{n} holds {v}. "))
+        .collect();
+    let mid = filler(rng, target_chars.saturating_sub(head.len()));
+    SessionDoc { context: format!("{head}{mid}"), pairs }
+}
+
+impl SessionDoc {
+    /// One follow-up question about binding `i`, as a full-prompt Doc.
+    pub fn question(&self, i: usize) -> Doc {
+        let (n, v) = &self.pairs[i % self.pairs.len()];
+        Doc {
+            prompt: format!("{}Recall what {n} holds: ", self.context),
+            answer: v.clone(),
+        }
+    }
+}
+
+pub fn make_doc(rng: &mut Rng, task: Task, target_chars: usize) -> Doc {
+    match task {
+        Task::Passkey => passkey_doc(rng, target_chars),
+        Task::KvRecall => kvrecall_doc(rng, target_chars, 8),
+        Task::Repeat => repeat_doc(rng, target_chars),
+        Task::RareToken => raretoken_doc(rng, target_chars),
+        Task::Alias => alias_doc(rng, target_chars),
+    }
+}
+
+/// Exact-match score: does the generation start with the expected answer?
+pub fn answer_matches(doc: &Doc, generated: &str) -> bool {
+    generated.trim_start().starts_with(doc.answer.trim())
+}
+
+/// Character-level prefix accuracy in [0,1] (partial credit for the tables).
+pub fn answer_char_accuracy(doc: &Doc, generated: &str) -> f64 {
+    let want: Vec<char> = doc.answer.chars().collect();
+    let got: Vec<char> = generated.trim_start().chars().take(want.len()).collect();
+    if want.is_empty() {
+        return 1.0;
+    }
+    let correct = want
+        .iter()
+        .zip(got.iter().chain(std::iter::repeat(&'\0')))
+        .filter(|(a, b)| a == b)
+        .count();
+    correct as f64 / want.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passkey_answer_embedded() {
+        let mut rng = Rng::new(1);
+        let d = passkey_doc(&mut rng, 500);
+        assert!(d.prompt.contains(&format!("The pass key is {}.", d.answer)));
+        assert!(d.prompt.ends_with("Answer: "));
+        assert!(d.prompt.len() >= 490 && d.prompt.len() <= 560);
+        assert_eq!(d.answer.len(), 5);
+        assert!(d.answer.chars().all(|c| c.is_ascii_digit()));
+    }
+
+    #[test]
+    fn kvrecall_queries_existing_pair() {
+        let mut rng = Rng::new(2);
+        let d = kvrecall_doc(&mut rng, 600, 8);
+        assert!(d.prompt.contains(&format!("holds {}. ", d.answer)));
+    }
+
+    #[test]
+    fn repeat_answer_is_continuation() {
+        let mut rng = Rng::new(3);
+        let d = repeat_doc(&mut rng, 400);
+        // prompt+answer is a prefix of the repeated sentence stream
+        let full = format!("{}{}", d.prompt, d.answer);
+        let first: &str = full.split(". ").next().unwrap();
+        assert!(full.starts_with(first));
+        assert!(!d.answer.is_empty());
+    }
+
+    #[test]
+    fn alias_latest_binding_wins() {
+        let mut rng = Rng::new(4);
+        let d = alias_doc(&mut rng, 800);
+        assert!(d.prompt.contains(&format!("now holds {}.", d.answer)));
+    }
+
+    #[test]
+    fn encode_roundtrip() {
+        let ids = encode("hi!");
+        assert_eq!(ids, vec![104, 105, 33]);
+        assert_eq!(decode_ids(&ids), "hi!");
+        let p = encode_prompt("x");
+        assert_eq!(p[0], BOS);
+    }
+
+    #[test]
+    fn matching_metrics() {
+        let d = Doc { prompt: String::new(), answer: "42".into() };
+        assert!(answer_matches(&d, " 42 and more"));
+        assert!(!answer_matches(&d, "41"));
+        assert_eq!(answer_char_accuracy(&d, "42"), 1.0);
+        assert_eq!(answer_char_accuracy(&d, "40"), 0.5);
+        assert_eq!(answer_char_accuracy(&d, ""), 0.0);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let d1 = passkey_doc(&mut Rng::new(7), 300);
+        let d2 = passkey_doc(&mut Rng::new(7), 300);
+        assert_eq!(d1.prompt, d2.prompt);
+        assert_eq!(d1.answer, d2.answer);
+    }
+
+    #[test]
+    fn all_tasks_fit_target_size() {
+        let mut rng = Rng::new(11);
+        for &t in Task::all() {
+            let d = make_doc(&mut rng, t, 1000);
+            assert!(
+                d.prompt.len() >= 500 && d.prompt.len() <= 1200,
+                "{}: {}",
+                t.name(),
+                d.prompt.len()
+            );
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! Integration tests over the real runtime + artifacts. These exercise the
+//! full stack (manifest -> PJRT compile -> engine decode/prefill -> serving
+//! loop). They require `make artifacts` to have run; otherwise they skip.
+
+use tinyserve::config::{KvDtype, ServingConfig};
+use tinyserve::coordinator::{serve_trace, ServeOptions};
+use tinyserve::engine::{Engine, Sampling};
+use tinyserve::metrics::StepMetrics;
+use tinyserve::plugins::Pipeline;
+use tinyserve::runtime::Manifest;
+use tinyserve::sparsity::PolicyKind;
+use tinyserve::util::rng::Rng;
+use tinyserve::workload::{generate_trace, tasks, TraceConfig};
+
+const MODEL: &str = "tiny-trained";
+
+fn manifest() -> Option<Manifest> {
+    let dir = tinyserve::artifacts_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+macro_rules! require {
+    ($e:expr) => {
+        match $e {
+            Some(v) => v,
+            None => return,
+        }
+    };
+}
+
+fn engine(m: &Manifest, policy: PolicyKind, budget: usize, batch: usize) -> Engine {
+    let cfg = ServingConfig {
+        model: MODEL.to_string(),
+        policy,
+        budget,
+        max_batch: batch,
+        ..Default::default()
+    };
+    Engine::from_manifest(m, cfg).expect("engine")
+}
+
+#[test]
+fn decode_is_deterministic() {
+    let m = require!(manifest());
+    let run = || -> Vec<i32> {
+        let mut e = engine(&m, PolicyKind::TinyServe, 256, 1);
+        let mut rng = Rng::new(5);
+        let mut seq = e.new_sequence();
+        seq.tokens = tasks::encode_prompt("the river and the stone. ");
+        seq.max_new_tokens = 8;
+        let mut sm = StepMetrics::default();
+        e.prefill(&mut seq, &mut sm).unwrap();
+        while !seq.finished {
+            let mut sm = StepMetrics::default();
+            let mut b = [&mut seq];
+            e.decode_step(&mut b, Sampling::Greedy, &mut rng, &mut sm).unwrap();
+        }
+        let out = seq.generated_tokens().to_vec();
+        e.release(&mut seq);
+        out
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn prefill_artifact_matches_stepwise_decode_path() {
+    // The chunked prefill artifact and the token-by-token absorb path must
+    // produce the same cache state, hence identical continuations.
+    let m = require!(manifest());
+    let prompt = "alpha holds q7xk2. the river and the stone and the light. \
+                  Recall what alpha holds: ";
+    let gen_with = |artifact: bool| -> Vec<i32> {
+        let mut e = engine(&m, PolicyKind::FullCache, 4096, 1);
+        let mut rng = Rng::new(5);
+        let mut seq = e.new_sequence();
+        seq.tokens = tasks::encode_prompt(prompt);
+        seq.max_new_tokens = 6;
+        let mut sm = StepMetrics::default();
+        if artifact {
+            e.prefill(&mut seq, &mut sm).unwrap();
+        } else {
+            e.prefill_stepwise(&mut seq, &mut sm).unwrap();
+        }
+        while !seq.finished {
+            let mut sm = StepMetrics::default();
+            let mut b = [&mut seq];
+            e.decode_step(&mut b, Sampling::Greedy, &mut rng, &mut sm).unwrap();
+        }
+        let out = seq.generated_tokens().to_vec();
+        e.release(&mut seq);
+        out
+    };
+    let a = gen_with(true);
+    let b = gen_with(false);
+    assert_eq!(a, b, "artifact vs stepwise prefill diverged");
+}
+
+#[test]
+fn fullcache_budget_equals_policy_budget_when_short() {
+    // With a short prompt (< budget), TinyServe selects everything, so it
+    // must produce exactly FullCache's output.
+    let m = require!(manifest());
+    let prompt = "the time stone river. ";
+    let gen_with = |policy: PolicyKind| -> Vec<i32> {
+        let mut e = engine(&m, policy, 256, 1);
+        let mut rng = Rng::new(9);
+        let mut seq = e.new_sequence_with_policy(policy);
+        seq.tokens = tasks::encode_prompt(prompt);
+        seq.max_new_tokens = 8;
+        let mut sm = StepMetrics::default();
+        e.prefill(&mut seq, &mut sm).unwrap();
+        while !seq.finished {
+            let mut sm = StepMetrics::default();
+            let mut b = [&mut seq];
+            e.decode_step(&mut b, Sampling::Greedy, &mut rng, &mut sm).unwrap();
+        }
+        let out = seq.generated_tokens().to_vec();
+        e.release(&mut seq);
+        out
+    };
+    assert_eq!(gen_with(PolicyKind::TinyServe), gen_with(PolicyKind::FullCache));
+}
+
+#[test]
+fn batched_decode_matches_single() {
+    // Batch-of-2 rows must generate the same tokens as two single runs.
+    let m = require!(manifest());
+    let prompts = ["the river. ", "winter morning bridge. "];
+    let single: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| {
+            let mut e = engine(&m, PolicyKind::TinyServe, 256, 1);
+            let mut rng = Rng::new(1);
+            let mut seq = e.new_sequence();
+            seq.tokens = tasks::encode_prompt(p);
+            seq.max_new_tokens = 5;
+            let mut sm = StepMetrics::default();
+            e.prefill(&mut seq, &mut sm).unwrap();
+            while !seq.finished {
+                let mut sm = StepMetrics::default();
+                let mut b = [&mut seq];
+                e.decode_step(&mut b, Sampling::Greedy, &mut rng, &mut sm).unwrap();
+            }
+            let out = seq.generated_tokens().to_vec();
+            e.release(&mut seq);
+            out
+        })
+        .collect();
+
+    let mut e = engine(&m, PolicyKind::TinyServe, 256, 4);
+    let mut rng = Rng::new(1);
+    let mut seqs: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let mut s = e.new_sequence();
+            s.tokens = tasks::encode_prompt(p);
+            s.max_new_tokens = 5;
+            let mut sm = StepMetrics::default();
+            e.prefill(&mut s, &mut sm).unwrap();
+            s
+        })
+        .collect();
+    for _ in 0..5 {
+        let mut sm = StepMetrics::default();
+        let mut refs: Vec<&mut _> = seqs.iter_mut().filter(|s| !s.finished).collect();
+        if refs.is_empty() {
+            break;
+        }
+        e.decode_step(&mut refs, Sampling::Greedy, &mut rng, &mut sm).unwrap();
+    }
+    for (i, s) in seqs.iter_mut().enumerate() {
+        assert_eq!(s.generated_tokens(), &single[i][..], "row {i}");
+    }
+}
+
+#[test]
+fn kv_dtypes_stay_close_to_f32() {
+    let m = require!(manifest());
+    let prompt = "alpha holds q7xk2. Recall what alpha holds: ";
+    let gen_with = |dt: KvDtype| -> String {
+        let cfg = ServingConfig {
+            model: MODEL.to_string(),
+            policy: PolicyKind::TinyServe,
+            budget: 256,
+            max_batch: 1,
+            kv_dtype: dt,
+            ..Default::default()
+        };
+        let mut e = Engine::from_manifest(&m, cfg).unwrap();
+        let mut rng = Rng::new(2);
+        let mut seq = e.new_sequence();
+        seq.tokens = tasks::encode_prompt(prompt);
+        seq.max_new_tokens = 6;
+        let mut sm = StepMetrics::default();
+        e.prefill_stepwise(&mut seq, &mut sm).unwrap();
+        while !seq.finished {
+            let mut sm = StepMetrics::default();
+            let mut b = [&mut seq];
+            e.decode_step(&mut b, Sampling::Greedy, &mut rng, &mut sm).unwrap();
+        }
+        let out = tasks::decode_ids(seq.generated_tokens());
+        e.release(&mut seq);
+        out
+    };
+    let f32_out = gen_with(KvDtype::F32);
+    let f16_out = gen_with(KvDtype::F16);
+    // f16 KV should rarely change greedy tokens on a short prompt
+    assert_eq!(f32_out, f16_out, "f16 KV diverged from f32");
+}
+
+#[test]
+fn policies_reduce_gather_bytes() {
+    let m = require!(manifest());
+    let mut e = engine(&m, PolicyKind::TinyServe, 256, 1);
+    let mut rng = Rng::new(11);
+    // long synthetic context so selection actually prunes
+    let mut seq = e.new_sequence();
+    e.synthetic_fill(&mut seq, 2047, &mut rng);
+    seq.tokens.push(1);
+    seq.max_new_tokens = 4;
+    let mut m1 = StepMetrics::default();
+    {
+        let mut b = [&mut seq];
+        e.decode_step(&mut b, Sampling::Greedy, &mut rng, &mut m1).unwrap();
+    }
+    // full-cache comparator at matching budget
+    let mut e2 = engine(&m, PolicyKind::FullCache, 4096, 1);
+    let mut seq2 = e2.new_sequence_with_policy(PolicyKind::FullCache);
+    e2.synthetic_fill(&mut seq2, 2047, &mut rng);
+    seq2.tokens.push(1);
+    seq2.max_new_tokens = 4;
+    let mut m2 = StepMetrics::default();
+    {
+        let mut b = [&mut seq2];
+        e2.decode_step(&mut b, Sampling::Greedy, &mut rng, &mut m2).unwrap();
+    }
+    assert!(
+        m1.gather_bytes * 4 < m2.gather_bytes,
+        "sparse {} vs full {}",
+        m1.gather_bytes,
+        m2.gather_bytes
+    );
+    e.release(&mut seq);
+    e2.release(&mut seq2);
+}
+
+#[test]
+fn fused_engine_matches_orchestrated_path() {
+    // While the context fits within the fused variant's K pages, its
+    // in-graph selection keeps everything — so it must generate exactly
+    // what the orchestrated FullCache path generates.
+    let m = require!(manifest());
+    let mut fused = match tinyserve::engine::fused::FusedEngine::from_manifest(&m, MODEL)
+    {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    let prompt = tasks::encode_prompt("alpha holds q7xk2. Recall what alpha holds: ");
+    let fused_out = fused.generate(&prompt, 5).expect("fused generate");
+
+    let mut e = engine(&m, PolicyKind::FullCache, 4096, 1);
+    let mut rng = Rng::new(1);
+    let mut seq = e.new_sequence_with_policy(PolicyKind::FullCache);
+    seq.tokens = prompt.clone();
+    seq.max_new_tokens = 5;
+    let mut sm = StepMetrics::default();
+    e.prefill_stepwise(&mut seq, &mut sm).unwrap();
+    while !seq.finished {
+        let mut sm = StepMetrics::default();
+        let mut b = [&mut seq];
+        e.decode_step(&mut b, Sampling::Greedy, &mut rng, &mut sm).unwrap();
+    }
+    let mut orch: Vec<i32> = seq.generated_tokens().to_vec();
+    if orch.last() == Some(&tinyserve::engine::EOS) {
+        orch.pop();
+    }
+    e.release(&mut seq);
+    assert_eq!(fused_out, orch, "fused vs orchestrated generation diverged");
+}
+
+#[test]
+fn serve_trace_end_to_end() {
+    let m = require!(manifest());
+    let cfg = ServingConfig {
+        model: MODEL.to_string(),
+        policy: PolicyKind::TinyServe,
+        budget: 256,
+        max_batch: 4,
+        ..Default::default()
+    };
+    let mut e = Engine::from_manifest(&m, cfg).unwrap();
+    let trace = generate_trace(&TraceConfig {
+        n_requests: 6,
+        prompt_chars: (80, 200),
+        new_tokens: (4, 8),
+        session_reuse_prob: 0.5,
+        n_sessions: 2,
+        ..Default::default()
+    });
+    let mut plugins = Pipeline::new();
+    let r = serve_trace(&mut e, &trace, &ServeOptions::default(), &mut plugins)
+        .expect("serve");
+    assert_eq!(r.metrics.total_requests, 6);
+    assert!(r.metrics.total_new_tokens >= 6);
+    assert!(r.wall_s > 0.0);
+    assert!(r.busy_frac > 0.0 && r.busy_frac <= 1.0);
+    // sessions were exercised
+    assert!(r.session_stats.stores > 0);
+    // all pages returned to the pool
+    assert_eq!(e.pool.pages_in_use(), 0, "page leak after serving");
+}
+
+#[test]
+fn session_reuse_cuts_prefill_time() {
+    let m = require!(manifest());
+    let cfg = ServingConfig {
+        model: MODEL.to_string(),
+        policy: PolicyKind::TinyServe,
+        budget: 256,
+        max_batch: 1,
+        ..Default::default()
+    };
+    let mut e = Engine::from_manifest(&m, cfg).unwrap();
+    // same session twice: second request must reuse the prefix
+    let mut rng = Rng::new(3);
+    let sess = tasks::kvrecall_session(&mut rng, 400, 4);
+    let q0 = sess.question(0);
+    let q1 = sess.question(1);
+    let mk = |id: u64, doc: &tasks::Doc, t: f64| tinyserve::workload::Request {
+        id,
+        arrival_s: t,
+        prompt: tasks::encode_prompt(&doc.prompt),
+        max_new_tokens: 4,
+        session: Some(7),
+        task: None,
+        answer: Some(doc.answer.clone()),
+    };
+    let trace = vec![mk(0, &q0, 0.0), mk(1, &q1, 0.1)];
+    let mut plugins = Pipeline::new();
+    let r = serve_trace(&mut e, &trace, &ServeOptions::default(), &mut plugins).unwrap();
+    assert_eq!(r.session_stats.hits, 1, "second request must hit");
+    assert!(r.session_stats.reused_tokens > 300);
+    let rec1 = &r.requests[1];
+    assert!(
+        rec1.session_reused_tokens > 300,
+        "reused {}",
+        rec1.session_reused_tokens
+    );
+}

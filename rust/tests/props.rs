@@ -1,0 +1,303 @@
+//! Property-based tests (util::prop) on coordinator/kvcache invariants:
+//! allocator balance, snapshot isolation, top-k correctness, batcher
+//! conservation, session-store page accounting, f16 bounds.
+
+use tinyserve::config::KvDtype;
+use tinyserve::coordinator::batcher::{Batcher, BatcherConfig, QueuedItem, Round};
+use tinyserve::coordinator::session::SessionStore;
+use tinyserve::kvcache::{PagePool, SeqCache};
+use tinyserve::sparsity::top_k_indices;
+use tinyserve::util::prop::prop_check;
+
+#[test]
+fn prop_pool_alloc_free_balance() {
+    prop_check("pool_alloc_free_balance", 100, |ctx| {
+        let mut pool = PagePool::new(1, 4, 4, KvDtype::F32);
+        let n_ops = ctx.scaled(1, 300);
+        let mut live: Vec<u32> = Vec::new();
+        for _ in 0..n_ops {
+            if live.is_empty() || ctx.rng.bool(0.6) {
+                live.push(pool.alloc());
+            } else {
+                let i = ctx.rng.usize(live.len());
+                pool.release(live.swap_remove(i));
+            }
+        }
+        if pool.pages_in_use() != live.len() {
+            return Err(format!(
+                "in_use {} != live {}",
+                pool.pages_in_use(),
+                live.len()
+            ));
+        }
+        for id in live.drain(..) {
+            pool.release(id);
+        }
+        if pool.pages_in_use() != 0 {
+            return Err("leak after full release".into());
+        }
+        pool.validate().map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn prop_refcounted_sharing_never_leaks() {
+    prop_check("refcount_sharing", 60, |ctx| {
+        let mut pool = PagePool::new(2, 4, 4, KvDtype::F32);
+        let mut seq = SeqCache::new();
+        let n = ctx.scaled(1, 40);
+        for i in 0..n {
+            let (page, slot) = seq.slot_for_next(&mut pool);
+            for l in 0..2 {
+                pool.write_token(page, slot, l, &[i as f32; 4], &[i as f32; 4]);
+            }
+            seq.commit_token();
+        }
+        // random snapshot/restore chains
+        let mut snaps: Vec<SeqCache> = Vec::new();
+        for _ in 0..ctx.scaled(0, 6) {
+            if snaps.is_empty() || ctx.rng.bool(0.5) {
+                snaps.push(seq.snapshot(&mut pool));
+            } else {
+                let s = SeqCache::restore(snaps.last().unwrap(), &mut pool);
+                snaps.push(s);
+            }
+        }
+        seq.clear(&mut pool);
+        for mut s in snaps {
+            s.clear(&mut pool);
+        }
+        if pool.pages_in_use() != 0 {
+            return Err(format!("{} pages leaked", pool.pages_in_use()));
+        }
+        pool.validate().map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn prop_snapshot_isolation() {
+    prop_check("snapshot_isolation", 60, |ctx| {
+        let mut pool = PagePool::new(1, 4, 4, KvDtype::F32);
+        let mut seq = SeqCache::new();
+        let n = ctx.scaled(1, 30);
+        for i in 0..n {
+            let (page, slot) = seq.slot_for_next(&mut pool);
+            pool.write_token(page, slot, 0, &[i as f32; 4], &[0.0; 4]);
+            seq.commit_token();
+        }
+        let snap = seq.snapshot(&mut pool);
+        let frozen: Vec<Vec<f32>> = snap
+            .pages
+            .iter()
+            .flat_map(|e| {
+                (0..pool.filled(e.id)).map(|s| pool.key_row(e.id, 0, s)).collect::<Vec<_>>()
+            })
+            .collect();
+        // mutate the live sequence heavily
+        for j in 0..ctx.scaled(1, 20) {
+            let (page, slot) = seq.slot_for_next(&mut pool);
+            pool.write_token(page, slot, 0, &[-(j as f32); 4], &[0.0; 4]);
+            seq.commit_token();
+        }
+        let after: Vec<Vec<f32>> = snap
+            .pages
+            .iter()
+            .flat_map(|e| {
+                (0..pool.filled(e.id)).map(|s| pool.key_row(e.id, 0, s)).collect::<Vec<_>>()
+            })
+            .collect();
+        if frozen != after {
+            return Err("snapshot contents changed under live appends".into());
+        }
+        seq.clear(&mut pool);
+        let mut snap = snap;
+        snap.clear(&mut pool);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_is_exactly_the_k_largest() {
+    prop_check("topk_exact", 200, |ctx| {
+        let n = ctx.scaled(1, 200);
+        let k = 1 + ctx.rng.usize(n);
+        let scores: Vec<f32> = (0..n)
+            .map(|_| (ctx.rng.normal() * 10.0) as f32)
+            .collect();
+        let got = top_k_indices(&scores, k);
+        if got.len() != k.min(n) {
+            return Err(format!("len {} != {}", got.len(), k.min(n)));
+        }
+        if got.windows(2).any(|w| w[0] >= w[1]) {
+            return Err("indices not strictly ascending".into());
+        }
+        let worst_in = got
+            .iter()
+            .map(|&i| scores[i])
+            .fold(f32::INFINITY, f32::min);
+        let best_out = (0..n)
+            .filter(|i| !got.contains(i))
+            .map(|i| scores[i])
+            .fold(f32::NEG_INFINITY, f32::max);
+        if best_out > worst_in {
+            return Err(format!("excluded {best_out} beats included {worst_in}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    prop_check("batcher_conservation", 80, |ctx| {
+        let mut b = Batcher::new(BatcherConfig {
+            max_active: 1 + ctx.rng.usize(8),
+            batch_timeout_s: ctx.rng.f64() * 0.1,
+            prefill_per_round: 1 + ctx.rng.usize(4),
+        });
+        let n = ctx.scaled(1, 60);
+        let mut now = 0.0;
+        let mut admitted = 0usize;
+        let mut enqueued = 0usize;
+        let mut active = 0usize;
+        let mut next_id = 0usize;
+        for _ in 0..n * 3 {
+            // random arrivals
+            if next_id < n && ctx.rng.bool(0.5) {
+                b.enqueue(QueuedItem {
+                    request_idx: next_id,
+                    arrival_s: now,
+                    prompt_len: 10,
+                });
+                next_id += 1;
+                enqueued += 1;
+            }
+            match b.schedule(now, if next_id < n { Some(now + 0.01) } else { None }) {
+                Round::Admit(items) => {
+                    admitted += items.len();
+                    active += items.len();
+                    if active > b.cfg.max_active {
+                        return Err("exceeded max_active".into());
+                    }
+                }
+                Round::Decode => {
+                    // finish a random number of active seqs
+                    if active > 0 && ctx.rng.bool(0.7) {
+                        let f = 1 + ctx.rng.usize(active);
+                        b.on_finished(f);
+                        active -= f;
+                    }
+                }
+                Round::Idle(t) => {
+                    if t.is_finite() {
+                        now = now.max(t);
+                    } else {
+                        now += 0.01;
+                    }
+                }
+            }
+            now += ctx.rng.f64() * 0.01;
+        }
+        // drain
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            if guard > 10_000 {
+                return Err("drain did not converge".into());
+            }
+            match b.schedule(now, None) {
+                Round::Admit(items) => {
+                    admitted += items.len();
+                    active += items.len();
+                }
+                Round::Decode => {
+                    b.on_finished(active);
+                    active = 0;
+                }
+                Round::Idle(_) => break,
+            }
+            now += 0.01;
+        }
+        if admitted != enqueued {
+            return Err(format!("admitted {admitted} != enqueued {enqueued}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_session_store_page_accounting() {
+    prop_check("session_store_accounting", 50, |ctx| {
+        let mut pool = PagePool::new(1, 4, 4, KvDtype::F32);
+        let mut store = SessionStore::new(1 + ctx.rng.usize(4));
+        for round in 0..ctx.scaled(1, 20) {
+            let mut seq = SeqCache::new();
+            let toks = 1 + ctx.rng.usize(12);
+            for i in 0..toks {
+                let (page, slot) = seq.slot_for_next(&mut pool);
+                pool.write_token(page, slot, 0, &[i as f32; 4], &[0.0; 4]);
+                seq.commit_token();
+            }
+            let id = ctx.rng.usize(6) as u64;
+            let tok_ids: Vec<i32> = (0..toks as i32).collect();
+            store.store(id, &seq, &tok_ids, 0, &mut pool);
+            if ctx.rng.bool(0.5) {
+                let mut longer = tok_ids.clone();
+                longer.push(99);
+                if let Some((mut r, _)) = store.try_reuse(id, &longer, &mut pool) {
+                    r.clear(&mut pool);
+                }
+            }
+            seq.clear(&mut pool);
+            let _ = round;
+        }
+        store.clear(&mut pool);
+        if pool.pages_in_use() != 0 {
+            return Err(format!("{} pages leaked", pool.pages_in_use()));
+        }
+        pool.validate().map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn prop_f16_roundtrip_relative_error() {
+    prop_check("f16_roundtrip", 300, |ctx| {
+        use tinyserve::util::f16::f32_to_f16_to_f32;
+        let x = (ctx.rng.normal() * 100.0) as f32;
+        if x.abs() < 6.2e-5 || x.abs() > 65000.0 {
+            return Ok(()); // outside the normal range
+        }
+        let y = f32_to_f16_to_f32(x);
+        let rel = ((y - x) / x).abs();
+        if rel > 1.0 / 2048.0 {
+            return Err(format!("{x} -> {y} rel {rel}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use tinyserve::util::json::Json;
+    prop_check("json_roundtrip", 150, |ctx| {
+        fn gen(ctx: &mut tinyserve::util::prop::CaseCtx, depth: usize) -> Json {
+            match if depth > 3 { ctx.rng.usize(4) } else { ctx.rng.usize(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(ctx.rng.bool(0.5)),
+                2 => Json::Num((ctx.rng.normal() * 1e3).round()),
+                3 => Json::Str(format!("s{}-\"q\"\n", ctx.rng.usize(1000))),
+                4 => Json::Arr((0..ctx.rng.usize(4)).map(|_| gen(ctx, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..ctx.rng.usize(4))
+                        .map(|i| (format!("k{i}"), gen(ctx, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let j = gen(ctx, 0);
+        let j2 = Json::parse(&j.to_string()).map_err(|e| e.to_string())?;
+        if j != j2 {
+            return Err(format!("{j} != {j2}"));
+        }
+        Ok(())
+    });
+}
