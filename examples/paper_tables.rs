@@ -1,9 +1,11 @@
-//! Regenerate the remaining paper figures' DATA (F1, F4, F6, F7) and the
-//! §3.6 memory-model curves; tables T1-T8 + F3/F5 live in `benches/` (run
-//! `cargo bench`, or `make bench`). CSVs land in results/.
+//! Regenerate the remaining paper figures' DATA (F1, F4, F6, F7), the
+//! §3.6 memory-model curves, and a quick Table 9 eviction sweep; tables
+//! T1-T9 + F3/F5 live in `benches/` (run `cargo bench`, or `make bench`).
+//! CSVs land in results/.
 //!
 //!     cargo run --release --example paper_tables            # all figures
 //!     cargo run --release --example paper_tables -- f7      # one figure
+//!     cargo run --release --example paper_tables -- t9      # budget sweep
 
 use anyhow::Result;
 
@@ -149,6 +151,44 @@ fn fig67(manifest: &Manifest) -> Result<()> {
     Ok(())
 }
 
+/// T9 (quick variant) — memory-budgeted page store: residency hit rate
+/// and accuracy at 50% of the unbounded KV peak per eviction policy. The
+/// full budget sweep lives in `benches/table9_eviction.rs`; this entry
+/// registers the table with the one-command figure regeneration flow.
+fn table9(manifest: &Manifest) -> Result<()> {
+    use tinyserve::harness::measure_eviction;
+    use tinyserve::kvcache::EvictionPolicyKind;
+    let n = scale(6);
+    let base = measure_eviction(
+        manifest, MODEL, EvictionPolicyKind::QueryAware, None, n, 500, 256, 11,
+    )?;
+    let budget = base.bytes_peak_unbounded / 2;
+    let mut t = Table::new(
+        &format!(
+            "Table 9 (quick): eviction policies at 50% of {:.2} MB peak",
+            base.bytes_peak_unbounded as f64 / 1e6
+        ),
+        &["policy", "resid hit %", "demote/tok", "acc %", "Δacc pp", "viol"],
+    );
+    for &kind in EvictionPolicyKind::all() {
+        match measure_eviction(manifest, MODEL, kind, Some(budget), n, 500, 256, 11) {
+            Ok(r) => {
+                t.row(vec![
+                    kind.name().to_string(),
+                    format!("{:.1}", r.residency_hit_rate * 100.0),
+                    format!("{:.3}", r.demotions_per_token),
+                    format!("{:.1}", r.accuracy * 100.0),
+                    format!("{:+.1}", (r.accuracy - base.accuracy) * 100.0),
+                    format!("{}", r.violations),
+                ]);
+            }
+            Err(e) => eprintln!("skip {}: {e}", kind.name()),
+        }
+    }
+    t.emit(&tinyserve::results_dir(), "table9_eviction_quick");
+    Ok(())
+}
+
 /// §3.6 memory model curves: memory fraction vs page size and the optimal
 /// S* = sqrt(L/K) prediction.
 fn memmodel() -> Result<()> {
@@ -186,6 +226,9 @@ fn main() -> Result<()> {
     }
     if matches!(which, "all" | "f6" | "f7") {
         fig67(&manifest)?;
+    }
+    if matches!(which, "all" | "t9") {
+        table9(&manifest)?;
     }
     if matches!(which, "all" | "mem") {
         memmodel()?;

@@ -5,6 +5,7 @@
 //! paper's §4.13 hyperparameters (page size 16, selection ratio 0.3, batch
 //! timeout 50ms).
 
+use crate::kvcache::store::EvictionPolicyKind;
 use crate::sparsity::PolicyKind;
 
 /// KV cache storage precision (paper §3.1: "FP16/INT8 KV formats").
@@ -59,6 +60,12 @@ pub struct ServingConfig {
     pub batch_timeout_ms: f64,
     /// cap on concurrently active sequences
     pub max_active: usize,
+    /// KV byte budget in MB (decimal); None = unbounded (pool growth, the
+    /// pre-store behaviour). When set, the engine's `PageStore` demotes
+    /// pages to the q8 cold tier instead of growing past the budget.
+    pub kv_budget_mb: Option<f64>,
+    /// replacement policy for budget-driven demotions
+    pub eviction: EvictionPolicyKind,
     pub seed: u64,
 }
 
@@ -75,6 +82,8 @@ impl Default for ServingConfig {
             max_batch: 4,
             batch_timeout_ms: 50.0,
             max_active: 64,
+            kv_budget_mb: None,
+            eviction: EvictionPolicyKind::QueryAware,
             seed: 42,
         }
     }
@@ -84,6 +93,11 @@ impl ServingConfig {
     /// Number of selectable pages for a given cache length.
     pub fn budget_pages(&self) -> usize {
         self.budget / self.page_size
+    }
+
+    /// KV byte budget in bytes (decimal MB), if bounded.
+    pub fn kv_budget_bytes(&self) -> Option<usize> {
+        self.kv_budget_mb.map(|mb| (mb * 1e6) as usize)
     }
 
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -99,6 +113,12 @@ impl ServingConfig {
             "budget too small for sink+recent forced pages"
         );
         anyhow::ensure!(self.max_batch > 0 && self.max_active >= self.max_batch);
+        if let Some(mb) = self.kv_budget_mb {
+            anyhow::ensure!(
+                mb > 0.0 && mb.is_finite(),
+                "kv_budget_mb must be positive, got {mb}"
+            );
+        }
         Ok(())
     }
 }
@@ -128,6 +148,18 @@ mod tests {
             ..Default::default()
         };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn kv_budget_parsing_and_validation() {
+        let cfg = ServingConfig { kv_budget_mb: Some(1.5), ..Default::default() };
+        cfg.validate().unwrap();
+        assert_eq!(cfg.kv_budget_bytes(), Some(1_500_000));
+        assert_eq!(ServingConfig::default().kv_budget_bytes(), None);
+        let bad = ServingConfig { kv_budget_mb: Some(0.0), ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ServingConfig { kv_budget_mb: Some(-3.0), ..Default::default() };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

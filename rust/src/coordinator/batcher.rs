@@ -35,6 +35,8 @@ pub struct BatcherStats {
     pub timeout_flushes: u64,
     pub full_flushes: u64,
     pub max_queue_depth: usize,
+    /// admissions bounced back by KV-budget pressure (requeue_front)
+    pub deferred: u64,
 }
 
 /// Decision for one scheduling round.
@@ -55,6 +57,9 @@ pub struct Batcher {
     active: usize,
     /// arrival time of the oldest queued item (timeout anchor)
     oldest_wait: Option<f64>,
+    /// set by `requeue_front`: force one decode round before the next
+    /// admission attempt, so deferral under budget pressure cannot spin
+    hold_admissions: bool,
     pub stats: BatcherStats,
 }
 
@@ -65,8 +70,25 @@ impl Batcher {
             queue: VecDeque::new(),
             active: 0,
             oldest_wait: None,
+            hold_admissions: false,
             stats: BatcherStats::default(),
         }
+    }
+
+    /// Return an admitted-but-not-started item to the queue front (the
+    /// server defers admission under KV-budget pressure). Undoes the
+    /// admission accounting and holds further admissions for one decode
+    /// round so in-flight sequences can retire and free pages.
+    pub fn requeue_front(&mut self, item: QueuedItem) {
+        self.active -= 1;
+        self.stats.admitted -= 1;
+        self.stats.deferred += 1;
+        self.oldest_wait = Some(match self.oldest_wait {
+            Some(t) => t.min(item.arrival_s),
+            None => item.arrival_s,
+        });
+        self.queue.push_front(item);
+        self.hold_admissions = true;
     }
 
     pub fn enqueue(&mut self, item: QueuedItem) {
@@ -92,6 +114,12 @@ impl Batcher {
     /// Decide what to do at virtual time `now`. `next_arrival`: the next
     /// trace arrival after `now`, if any.
     pub fn schedule(&mut self, now: f64, next_arrival: Option<f64>) -> Round {
+        if self.hold_admissions {
+            self.hold_admissions = false;
+            if self.active > 0 {
+                return Round::Decode;
+            }
+        }
         let free = self.cfg.max_active.saturating_sub(self.active);
         if free > 0 && !self.queue.is_empty() {
             let timeout_hit = self
@@ -207,6 +235,34 @@ mod tests {
             Round::Admit(v) => assert_eq!(v.len(), 1),
             r => panic!("{r:?}"),
         }
+    }
+
+    #[test]
+    fn requeue_front_defers_then_readmits() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_active: 4,
+            batch_timeout_s: 0.0,
+            prefill_per_round: 2,
+        });
+        b.enqueue(item(0, 0.0));
+        b.enqueue(item(1, 0.0));
+        let admitted = match b.schedule(0.1, None) {
+            Round::Admit(v) => v,
+            r => panic!("{r:?}"),
+        };
+        assert_eq!(admitted.len(), 2);
+        // budget pressure: bounce the second one back
+        b.requeue_front(admitted[1].clone());
+        assert_eq!(b.active(), 1);
+        assert_eq!(b.queue_len(), 1);
+        assert_eq!(b.stats.deferred, 1);
+        // one decode round is forced before the next admission attempt
+        assert_eq!(b.schedule(0.2, None), Round::Decode);
+        match b.schedule(0.3, None) {
+            Round::Admit(v) => assert_eq!(v[0].request_idx, 1),
+            r => panic!("{r:?}"),
+        }
+        assert_eq!(b.stats.admitted, 2);
     }
 
     #[test]

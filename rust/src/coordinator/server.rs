@@ -127,8 +127,26 @@ pub fn serve_trace(
                 now = now.max(t);
             }
             Round::Admit(items) => {
+                let mut deferred: Vec<QueuedItem> = Vec::new();
                 for item in items {
                     let req = &trace[item.request_idx];
+                    // KV-budget admission control: shed idle session
+                    // snapshots first; if the prompt still cannot fit, defer
+                    // while in-flight work can retire and free pages. Once
+                    // one item defers, later ones follow to keep FIFO order.
+                    if !deferred.is_empty() {
+                        deferred.push(item);
+                        continue;
+                    }
+                    if !engine.kv_admission_ok(req.prompt.len()) {
+                        while !engine.kv_admission_ok(req.prompt.len())
+                            && sessions.evict_one_lru(&mut engine.pool, req.session)
+                        {}
+                    }
+                    if !engine.kv_admission_ok(req.prompt.len()) && !active.is_empty() {
+                        deferred.push(item);
+                        continue;
+                    }
                     let mut seq = engine.new_sequence();
                     seq.max_new_tokens = req.max_new_tokens;
                     // session reuse: restore the stored prompt prefix
@@ -174,6 +192,9 @@ pub fn serve_trace(
                             &mut engine.pool,
                         );
                     }
+                    // prefill/snapshot allocations bypass the decode path;
+                    // demote back under the budget before decoding resumes
+                    engine.enforce_kv_budget();
                     active.push(Active {
                         seq,
                         req_idx: item.request_idx,
@@ -183,6 +204,10 @@ pub fn serve_trace(
                         reused_tokens: reused,
                         worker: decision.worker,
                     });
+                }
+                // front of the queue must stay FIFO: requeue in reverse
+                for item in deferred.into_iter().rev() {
+                    batcher.requeue_front(item);
                 }
             }
             Round::Decode => {
@@ -195,8 +220,10 @@ pub fn serve_trace(
                         batch.iter_mut().map(|a| &mut a.seq).collect();
                     engine.decode_step(&mut seqs, opts.sampling, &mut rng, &mut m)?
                 };
-                now += m.step_seconds;
-                busy += m.step_seconds;
+                // spill_seconds is the simulated cold-tier transfer cost of
+                // the budgeted store (hwmodel-priced, not wall time)
+                now += m.step_seconds + m.spill_seconds;
+                busy += m.step_seconds + m.spill_seconds;
                 metrics.on_step(&m);
                 // plugins + first-token bookkeeping
                 for (a, o) in active.iter_mut().take(b).zip(outs.iter()) {
@@ -215,12 +242,9 @@ pub fn serve_trace(
                     };
                     match action {
                         PluginAction::Stop => a.seq.finished = true,
-                        PluginAction::PruneColdest => {
-                            let sink = engine.cfg.sink_pages;
-                            if a.seq.cache.n_pages() > sink + 1 {
-                                a.seq.cache.evict(sink, &mut engine.pool);
-                            }
-                        }
+                        // routed through the page store: the eviction
+                        // policy's rank picks the victim, not table order
+                        PluginAction::PruneColdest => engine.prune_coldest(&mut a.seq),
                         PluginAction::Continue => {}
                     }
                 }

@@ -17,6 +17,9 @@ pub struct SessionStats {
     pub misses: u64,
     pub reused_tokens: u64,
     pub evictions: u64,
+    /// evictions forced by KV-budget pressure (admission path), a subset
+    /// of `evictions`
+    pub pressure_evictions: u64,
     /// simulated cross-worker migrations (router-driven)
     pub migrations: u64,
     pub migrated_bytes: u64,
@@ -154,6 +157,31 @@ impl SessionStore {
         }
     }
 
+    /// Retire the least-recently-used snapshot to relieve KV-budget
+    /// pressure, releasing its pages. `except` protects the session the
+    /// incoming request wants to reuse — shedding it would force a full
+    /// re-prefill and make the pressure worse. Returns false when no
+    /// sheddable snapshot is left.
+    pub fn evict_one_lru(&mut self, pool: &mut PagePool, except: Option<u64>) -> bool {
+        let lru = self
+            .map
+            .iter()
+            .filter(|(&k, _)| Some(k) != except)
+            .min_by_key(|(_, s)| s.last_used)
+            .map(|(&k, _)| k);
+        match lru {
+            Some(id) => {
+                if let Some(mut s) = self.map.remove(&id) {
+                    s.cache.clear(pool);
+                }
+                self.stats.evictions += 1;
+                self.stats.pressure_evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Which virtual worker holds the session's pages (for the router).
     pub fn worker_of(&self, id: u64) -> Option<usize> {
         self.map.get(&id).map(|s| s.worker)
@@ -239,6 +267,35 @@ mod tests {
         assert_eq!(store.stats.evictions, 1);
         assert!(store.try_reuse(0, &[0; 8], &mut pool).is_none(), "0 was LRU");
         store.clear(&mut pool);
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn pressure_eviction_sheds_lru_first() {
+        let mut pool = PagePool::new(1, 4, 4, KvDtype::F32);
+        let mut store = SessionStore::new(8);
+        for id in 0..3u64 {
+            let mut seq = fill(&mut pool, 4);
+            store.store(id, &seq, &[id as i32; 4], 0, &mut pool);
+            seq.clear(&mut pool);
+        }
+        // refresh session 0 so 1 becomes LRU
+        let (mut r, _) = store
+            .try_reuse(0, &[0, 0, 0, 0, 9], &mut pool)
+            .expect("refresh hit");
+        r.clear(&mut pool);
+        assert!(store.evict_one_lru(&mut pool, None));
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.stats.pressure_evictions, 1);
+        assert!(store.try_reuse(1, &[1; 5], &mut pool).is_none(), "1 was shed");
+        // the incoming request's own session is protected
+        assert!(store.evict_one_lru(&mut pool, Some(0)));
+        let (mut r0, _) = store
+            .try_reuse(0, &[0, 0, 0, 0, 7], &mut pool)
+            .expect("protected session still reusable");
+        r0.clear(&mut pool);
+        assert!(store.evict_one_lru(&mut pool, None));
+        assert!(!store.evict_one_lru(&mut pool, None), "store drained");
         assert_eq!(pool.pages_in_use(), 0);
     }
 

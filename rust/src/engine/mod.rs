@@ -22,7 +22,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::ServingConfig;
-use crate::kvcache::{PagePool, SeqCache};
+use crate::kvcache::{PagePool, PageStore, SeqCache, StoreStats};
 use crate::metrics::StepMetrics;
 use crate::runtime::{ArtifactInfo, Input, Manifest, ModelRuntime};
 use crate::sparsity::{make_policy, Policy, PolicyKind, SelectCtx};
@@ -81,6 +81,8 @@ pub struct Engine {
     pub rt: ModelRuntime,
     pub cfg: ServingConfig,
     pub pool: PagePool,
+    /// budget/residency layer over `pool` (pass-through when unbounded)
+    pub store: PageStore,
     /// (kind, batch) -> artifact; `post` keyed with the configured budget
     arts: BTreeMap<(String, usize), ArtifactInfo>,
     batch_variants: Vec<usize>,
@@ -101,6 +103,11 @@ pub struct Engine {
     dist: Vec<f32>,
     logits_buf: Vec<f32>,
     sel_scratch: Vec<usize>,
+    /// store counters already surfaced through StepMetrics: each decode
+    /// step reports growth since the previous one, so demotions/spill from
+    /// between-step work (prefill enforcement, admission) are charged to
+    /// the next step instead of dropped
+    stats_reported: StoreStats,
     next_id: u64,
 }
 
@@ -116,6 +123,7 @@ impl Engine {
         let info = rt.info.clone();
         let d_kv = info.n_head * info.head_dim;
         let pool = PagePool::new(info.n_layer, d_kv, cfg.page_size, cfg.kv_dtype);
+        let store = PageStore::new(cfg.kv_budget_bytes(), cfg.eviction);
 
         // resolve the decode-path artifact variants we will use
         let mut arts = BTreeMap::new();
@@ -150,6 +158,7 @@ impl Engine {
         let t = cfg.budget;
         Ok(Engine {
             pool,
+            store,
             d_model: info.d_model,
             n_layer: info.n_layer,
             n_head: info.n_head,
@@ -166,6 +175,7 @@ impl Engine {
             dist: vec![0.0; max_b * t],
             logits_buf: vec![0.0; max_b * info.vocab],
             sel_scratch: Vec::new(),
+            stats_reported: StoreStats::default(),
             arts,
             batch_variants,
             rt,
@@ -212,6 +222,41 @@ impl Engine {
     /// Release a finished sequence's pages.
     pub fn release(&mut self, seq: &mut Sequence) {
         seq.cache.clear(&mut self.pool);
+        self.store.sync(&self.pool);
+    }
+
+    /// Demote pages until the KV byte budget holds (no-op when unbounded).
+    /// The coordinator calls this after prefill/snapshot bursts that
+    /// allocate outside the decode path.
+    pub fn enforce_kv_budget(&mut self) {
+        self.store.enforce_budget(&mut self.pool);
+    }
+
+    /// Admission-control check: can a prompt of `prompt_tokens` be brought
+    /// fully hot without exceeding the KV budget, assuming every currently
+    /// resident page could be demoted to the cold rate? Unbounded engines
+    /// always admit.
+    pub fn kv_admission_ok(&mut self, prompt_tokens: usize) -> bool {
+        let Some(budget) = self.store.budget_bytes() else { return true };
+        self.store.sync(&self.pool);
+        let (hot, cold) = self.store.tier_counts();
+        let floor = (hot + cold) * self.pool.page_bytes_cold();
+        let need = prompt_tokens.div_ceil(self.cfg.page_size).max(1)
+            * self.pool.page_bytes();
+        floor + need <= budget
+    }
+
+    /// Evict the coldest prunable page of a sequence, as ranked by the
+    /// store's eviction policy (the `PruneColdest` plugin action). Falls
+    /// back to the oldest non-sink page when the store has no signal.
+    pub fn prune_coldest(&mut self, seq: &mut Sequence) {
+        let sink = self.cfg.sink_pages;
+        if seq.cache.n_pages() <= sink + 1 {
+            return;
+        }
+        let idx = self.store.coldest_index(&seq.cache, sink).unwrap_or(sink);
+        seq.cache.evict(idx, &mut self.pool);
+        self.store.sync(&self.pool);
     }
 
     /// One decode step over up to `max_batch` sequences. Each sequence must
@@ -242,10 +287,27 @@ impl Engine {
         let out = self.rt.run(&emb, None, &[Input::I32(&tokens, &[b])])?;
         crate::runtime::literal_into(&out[0], &mut self.hbuf[..b * d])?;
 
+        // ---- pin the batch's pages: decoding sequences are never victims ----
+        let budgeted = self.store.enabled();
+        if budgeted {
+            self.store.sync(&self.pool);
+            for s in seqs.iter() {
+                for e in s.cache.pages.iter() {
+                    self.store.pin(e.id);
+                }
+            }
+        }
+
         // ---- allocate this token's slot in each row's page table ----
+        // (over budget, the store demotes cold pages instead of growing)
         let mut slots = Vec::with_capacity(n);
         for s in seqs.iter_mut() {
-            slots.push(s.cache.slot_for_next(&mut self.pool));
+            slots.push(s.cache.slot_for_next_budgeted(&mut self.pool, &mut self.store));
+        }
+        if budgeted {
+            for &(page, _) in &slots {
+                self.store.pin(page);
+            }
         }
 
         let qkv_art = self.art("qkv", b).clone();
@@ -283,6 +345,17 @@ impl Engine {
                 let seq_ref: &mut Sequence = s;
                 let Sequence { cache, policy, last_entropy, last_selected, .. } =
                     seq_ref;
+                // cold-tier signal: observe every page's bounding-box
+                // relevance against the fresh query (first layer only —
+                // one extra metadata pass per step, same cost class as the
+                // selection scan itself)
+                if layer == 0 && self.store.wants_scores() {
+                    let q = &self.qbuf[i * d_kv..(i + 1) * d_kv];
+                    for e in cache.pages.iter() {
+                        self.store
+                            .note_score(e.id, crate::sparsity::score_page(q, self.pool.meta(e.id, 0)));
+                    }
+                }
                 let ctx = SelectCtx {
                     layer,
                     n_layers: self.n_layer,
@@ -308,6 +381,14 @@ impl Engine {
                     cur.iter().filter(|bp| prev.binary_search(bp).is_ok()).count();
                 cur.sort_unstable();
                 std::mem::swap(prev, &mut cur);
+
+                // residency: promote selected cold pages before the gather
+                // (counts the hit/miss and charges the simulated spill)
+                if budgeted {
+                    for &tidx in sel.iter() {
+                        self.store.ensure_hot(&mut self.pool, cache.pages[tidx].id);
+                    }
+                }
 
                 // gather
                 let tg = Instant::now();
@@ -422,6 +503,21 @@ impl Engine {
             m.resident_tokens += s.cache.resident;
             sampled.push(o);
         }
+        // ---- budget enforcement: bytes_in_use <= budget after every step ----
+        if budgeted {
+            self.store.unpin_all();
+            self.store.enforce_budget(&mut self.pool);
+        }
+        let st = self.store.stats.clone();
+        let st0 = &self.stats_reported;
+        m.store_hits += (st.hits - st0.hits) as usize;
+        m.store_misses += (st.misses - st0.misses) as usize;
+        m.demotions += (st.demotions - st0.demotions) as usize;
+        m.promotions += (st.promotions - st0.promotions) as usize;
+        m.spill_seconds += st.spill_seconds - st0.spill_seconds;
+        self.stats_reported = st;
+        m.kv_bytes_in_use = self.store.bytes_in_use(&self.pool);
+        m.kv_budget_bytes = self.store.budget_bytes().unwrap_or(0);
         m.batch = n;
         m.entropy = ent_sum / n as f32;
         m.step_seconds += t0.elapsed().as_secs_f64();

@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use crate::config::{KvDtype, ServingConfig};
 use crate::engine::{Engine, Sampling};
+use crate::kvcache::EvictionPolicyKind;
 use crate::metrics::StepMetrics;
 use crate::runtime::Manifest;
 use crate::sparsity::PolicyKind;
@@ -212,6 +213,101 @@ pub fn measure_accuracy(
         n: n_cases,
         ms_per_token: lat.mean() * 1e3,
         hit_rate: hits / hit_n.max(1) as f64,
+    })
+}
+
+/// One budgeted-store measurement (Table 9 row): task accuracy plus
+/// residency behaviour under a KV byte budget and eviction policy.
+#[derive(Debug, Clone)]
+pub struct EvictionRun {
+    pub eviction: EvictionPolicyKind,
+    /// None = unbounded baseline
+    pub budget_bytes: Option<usize>,
+    pub accuracy: f64,
+    pub residency_hit_rate: f64,
+    pub demotions_per_token: f64,
+    /// pool high-water mark at the hot rate (the unbounded footprint)
+    pub bytes_peak_unbounded: usize,
+    /// max post-step store bytes (cold pages at the q8 rate)
+    pub max_bytes_in_use: usize,
+    /// steps that ended above the budget (0 = invariant held)
+    pub violations: u64,
+    pub new_tokens: u64,
+}
+
+/// Run the task-accuracy workload through the budgeted page store and
+/// aggregate residency counters. With `budget_bytes = None` this doubles
+/// as the unbounded baseline whose `bytes_peak_unbounded` anchors the
+/// Table 9 budget sweep.
+pub fn measure_eviction(
+    manifest: &Manifest,
+    model: &str,
+    eviction: EvictionPolicyKind,
+    budget_bytes: Option<usize>,
+    n_cases: usize,
+    prompt_chars: usize,
+    budget_tokens: usize,
+    seed: u64,
+) -> Result<EvictionRun> {
+    let cfg = ServingConfig {
+        model: model.to_string(),
+        policy: PolicyKind::TinyServe,
+        budget: budget_tokens,
+        max_batch: 1,
+        kv_budget_mb: budget_bytes.map(|b| b as f64 / 1e6),
+        eviction,
+        ..Default::default()
+    };
+    let mut engine = Engine::from_manifest(manifest, cfg)?;
+    let mut rng = Rng::new(seed);
+    let mut task_rng = Rng::new(seed ^ 0x5eed);
+    let mut exact = 0usize;
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    let mut demotions = 0u64;
+    let mut new_tokens = 0u64;
+    let mut max_bytes = 0usize;
+    let mut violations = 0u64;
+    for i in 0..n_cases {
+        let task = Task::all()[i % Task::all().len()];
+        let doc = tasks::make_doc(&mut task_rng, task, prompt_chars);
+        let mut seq = engine.new_sequence();
+        seq.tokens = tasks::encode_prompt(&doc.prompt);
+        seq.max_new_tokens = doc.answer.len() + 4;
+        let mut m = StepMetrics::default();
+        engine.prefill(&mut seq, &mut m)?;
+        engine.enforce_kv_budget();
+        while !seq.finished {
+            let mut m = StepMetrics::default();
+            let mut batch = [&mut seq];
+            engine.decode_step(&mut batch, Sampling::Greedy, &mut rng, &mut m)?;
+            hits += m.store_hits as u64;
+            misses += m.store_misses as u64;
+            demotions += m.demotions as u64;
+            new_tokens += 1;
+            max_bytes = max_bytes.max(m.kv_bytes_in_use);
+            if m.kv_budget_bytes > 0 && m.kv_bytes_in_use > m.kv_budget_bytes {
+                violations += 1;
+            }
+        }
+        let gen = tasks::decode_ids(seq.generated_tokens());
+        exact += tasks::answer_matches(&doc, &gen) as usize;
+        engine.release(&mut seq);
+    }
+    Ok(EvictionRun {
+        eviction,
+        budget_bytes,
+        accuracy: exact as f64 / n_cases.max(1) as f64,
+        residency_hit_rate: if hits + misses > 0 {
+            hits as f64 / (hits + misses) as f64
+        } else {
+            1.0
+        },
+        demotions_per_token: demotions as f64 / new_tokens.max(1) as f64,
+        bytes_peak_unbounded: engine.pool.bytes_peak(),
+        max_bytes_in_use: max_bytes,
+        violations,
+        new_tokens,
     })
 }
 

@@ -28,6 +28,9 @@ pub struct Device {
     pub launch_s: f64,
     /// per-token fixed framework overhead, s (scheduler, sampling)
     pub framework_s: f64,
+    /// cold-tier (demoted KV slab) bandwidth, bytes/s — slower than HBM,
+    /// prices the budgeted store's demotion/promotion traffic
+    pub cold_bw: f64,
 }
 
 impl Default for Device {
@@ -38,7 +41,17 @@ impl Default for Device {
             flops: 60.0e12,
             launch_s: 6e-6,
             framework_s: 35e-6,
+            cold_bw: 0.6e12,
         }
+    }
+}
+
+impl Device {
+    /// Simulated cost of moving `bytes` across the cold-tier link (one
+    /// demotion or promotion of the budgeted page store), including a
+    /// kernel-launch quantum.
+    pub fn spill_seconds(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.cold_bw + self.launch_s
     }
 }
 
@@ -257,6 +270,18 @@ mod tests {
         assert!(frac < 0.25, "{frac}");
         let s_opt = HwModel::optimal_page_size(l, k);
         assert!(s_opt > 4.0 && s_opt < 16.0, "{s_opt}");
+    }
+
+    #[test]
+    fn spill_cost_scales_with_bytes() {
+        let d = Device::default();
+        let one = d.spill_seconds(1 << 20);
+        let two = d.spill_seconds(2 << 20);
+        assert!(two > one && one > d.launch_s);
+        assert!(
+            d.spill_seconds(1 << 20) > (1 << 20) as f64 / d.hbm_bw,
+            "cold tier must be slower than HBM"
+        );
     }
 
     #[test]

@@ -1,10 +1,13 @@
-//! Paged KV cache: pool, per-sequence page tables, storage precisions and
-//! bounding-box page metadata (paper §3.4-§3.5).
+//! Paged KV cache: pool, per-sequence page tables, storage precisions,
+//! bounding-box page metadata (paper §3.4-§3.5), and the memory-budgeted
+//! page store with pluggable eviction policies.
 
 pub mod dtype;
 pub mod pool;
 pub mod seq;
+pub mod store;
 
 pub use dtype::Slab;
 pub use pool::{PageId, PagePool};
 pub use seq::{PageEntry, SeqCache};
+pub use store::{EvictionPolicyKind, PageStore, StoreStats};

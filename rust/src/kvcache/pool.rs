@@ -35,6 +35,8 @@ pub struct PagePool {
     cap_pages: usize,
     /// high-water mark for stats
     pub peak_pages: usize,
+    /// dtype-aware byte high-water mark (peak_pages hides dtype differences)
+    bytes_peak: usize,
 }
 
 impl PagePool {
@@ -52,6 +54,7 @@ impl PagePool {
             free: Vec::new(),
             cap_pages: 0,
             peak_pages: 0,
+            bytes_peak: 0,
         }
     }
 
@@ -83,6 +86,7 @@ impl PagePool {
         self.refcount[id as usize] = 1;
         self.filled[id as usize] = 0;
         self.peak_pages = self.peak_pages.max(self.pages_in_use());
+        self.bytes_peak = self.bytes_peak.max(self.bytes_in_use());
         id
     }
 
@@ -111,10 +115,31 @@ impl PagePool {
         self.cap_pages - self.free.len()
     }
 
+    pub fn cap_pages(&self) -> usize {
+        self.cap_pages
+    }
+
     /// Bytes of KV storage currently in use (both K and V, all layers).
     pub fn bytes_in_use(&self) -> usize {
-        let per_row = self.k[0].bytes_per_row(self.d_kv) * 2;
-        self.pages_in_use() * self.page_size * per_row * self.n_layers
+        self.pages_in_use() * self.page_bytes()
+    }
+
+    /// Byte high-water mark across the pool's lifetime, at the configured
+    /// KV dtype (the "unbounded footprint" the budgeted store is measured
+    /// against).
+    pub fn bytes_peak(&self) -> usize {
+        self.bytes_peak
+    }
+
+    /// Bytes one page occupies at the pool dtype (K + V, all layers).
+    pub fn page_bytes(&self) -> usize {
+        self.k[0].bytes_per_row(self.d_kv) * 2 * self.page_size * self.n_layers
+    }
+
+    /// Bytes one page occupies after demotion to the q8 cold tier
+    /// (per-row int8 data + one f32 scale, K + V, all layers).
+    pub fn page_bytes_cold(&self) -> usize {
+        (self.d_kv + 4) * 2 * self.page_size * self.n_layers
     }
 
     /// Append one token's K/V for one layer into `page` at `slot`.
@@ -231,6 +256,59 @@ impl PagePool {
             best = best.max(dot);
         }
         best
+    }
+
+    /// Cold-tier demotion: round-trip every filled K/V row of `page`
+    /// through the per-token int8 quantizer (`kvcache::dtype` machinery)
+    /// and store the result back at the pool dtype, then rebuild the
+    /// page's bounding boxes from the quantized keys so Eq.-2 scores stay
+    /// consistent with what a gather will actually read. The data loss is
+    /// the q8 round-trip; the budgeted store charges the page at
+    /// `page_bytes_cold` afterwards. Returns bytes rewritten (the
+    /// spill-traffic analogue).
+    pub fn demote_page_in_place(&mut self, page: PageId) -> usize {
+        let n = self.filled[page as usize] as usize;
+        let d = self.d_kv;
+        if n == 0 {
+            return 0;
+        }
+        let mut scratch = Slab::new(crate::config::KvDtype::Int8, 1, d);
+        let mut buf = vec![0.0f32; d];
+        let mut q = vec![0.0f32; d];
+        let mut bytes = 0usize;
+        for l in 0..self.n_layers {
+            for s in 0..n {
+                let row = page as usize * self.page_size + s;
+                // keys
+                self.k[l].load_rows(row, 1, d, &mut buf);
+                scratch.store_row(0, d, &buf);
+                scratch.load_rows(0, 1, d, &mut q);
+                self.k[l].store_row(row, d, &q);
+                bytes += self.k[l].bytes_per_row(d) + d + 4;
+                // bounding boxes follow the quantized keys
+                {
+                    let m = &mut self.meta[l]
+                        [page as usize * 2 * d..(page as usize + 1) * 2 * d];
+                    let (mins, maxs) = m.split_at_mut(d);
+                    if s == 0 {
+                        mins.copy_from_slice(&q);
+                        maxs.copy_from_slice(&q);
+                    } else {
+                        for i in 0..d {
+                            mins[i] = mins[i].min(q[i]);
+                            maxs[i] = maxs[i].max(q[i]);
+                        }
+                    }
+                }
+                // values
+                self.v[l].load_rows(row, 1, d, &mut buf);
+                scratch.store_row(0, d, &buf);
+                scratch.load_rows(0, 1, d, &mut q);
+                self.v[l].store_row(row, d, &q);
+                bytes += self.v[l].bytes_per_row(d) + d + 4;
+            }
+        }
+        bytes
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -358,6 +436,73 @@ mod tests {
             let _ = p.alloc();
             let expect = (4.0 * 8.0 * per_val * 2.0) as usize; // S*d*K&V
             assert_eq!(p.bytes_in_use(), expect, "{dt:?}");
+            assert_eq!(p.page_bytes(), expect);
+            assert_eq!(p.bytes_peak(), expect);
         }
+    }
+
+    #[test]
+    fn bytes_peak_tracks_high_water() {
+        let mut p = pool();
+        let a = p.alloc();
+        let b = p.alloc();
+        let peak = p.bytes_in_use();
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.bytes_in_use(), 0);
+        assert_eq!(p.bytes_peak(), peak);
+        let _ = p.alloc();
+        assert_eq!(p.bytes_peak(), peak, "reuse below peak leaves it");
+    }
+
+    #[test]
+    fn cold_page_bytes_are_smaller() {
+        let p = pool(); // f32
+        assert!(p.page_bytes_cold() < p.page_bytes());
+        // int8 pools gain nothing from demotion
+        let p8 = PagePool::new(2, 8, 4, KvDtype::Int8);
+        assert_eq!(p8.page_bytes_cold(), p8.page_bytes());
+    }
+
+    #[test]
+    fn demote_roundtrips_within_q8_tolerance() {
+        let mut p = pool();
+        let pg = p.alloc();
+        let mut rng = crate::util::rng::Rng::new(17);
+        let mut rows = Vec::new();
+        for s in 0..4 {
+            let row: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+            for l in 0..2 {
+                p.write_token(pg, s, l, &row, &row);
+            }
+            rows.push(row);
+        }
+        let bytes = p.demote_page_in_place(pg);
+        assert!(bytes > 0);
+        for (s, row) in rows.iter().enumerate() {
+            let amax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let got = p.key_row(pg, 1, s);
+            for (a, b) in row.iter().zip(&got) {
+                assert!(
+                    (a - b).abs() <= amax / 100.0,
+                    "slot {s}: {a} vs {b} (amax {amax})"
+                );
+            }
+        }
+        // bounding boxes still bound the (quantized) keys
+        let m = p.meta(pg, 0).to_vec();
+        for s in 0..4 {
+            let k = p.key_row(pg, 0, s);
+            for i in 0..8 {
+                assert!(m[i] - 1e-6 <= k[i] && k[i] <= m[8 + i] + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn demote_empty_page_is_noop() {
+        let mut p = pool();
+        let pg = p.alloc();
+        assert_eq!(p.demote_page_in_place(pg), 0);
     }
 }

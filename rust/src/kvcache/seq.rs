@@ -33,15 +33,34 @@ impl SeqCache {
         pool.filled(self.pages[idx].id)
     }
 
+    fn needs_new_page(&self, pool: &PagePool) -> bool {
+        match self.pages.last() {
+            None => true,
+            Some(e) => self.pos - e.base_pos >= pool.page_size,
+        }
+    }
+
     /// Begin writing token at `self.pos`: returns (page, slot), allocating
     /// a fresh page when the previous one is full (or was evicted).
     pub fn slot_for_next(&mut self, pool: &mut PagePool) -> (PageId, usize) {
-        let need_new = match self.pages.last() {
-            None => true,
-            Some(e) => self.pos - e.base_pos >= pool.page_size,
-        };
-        if need_new {
+        if self.needs_new_page(pool) {
             let id = pool.alloc();
+            self.pages.push(PageEntry { id, base_pos: self.pos });
+        }
+        let e = *self.pages.last().unwrap();
+        (e.id, self.pos - e.base_pos)
+    }
+
+    /// `slot_for_next`, but allocating through the budgeted `PageStore`
+    /// (over-budget allocations demote cold pages instead of growing the
+    /// pool's footprint). The decode hot path uses this variant.
+    pub fn slot_for_next_budgeted(
+        &mut self,
+        pool: &mut PagePool,
+        store: &mut super::store::PageStore,
+    ) -> (PageId, usize) {
+        if self.needs_new_page(pool) {
+            let id = store.alloc(pool);
             self.pages.push(PageEntry { id, base_pos: self.pos });
         }
         let e = *self.pages.last().unwrap();

@@ -1,0 +1,521 @@
+//! Memory-budgeted page store: wraps `PagePool` with a KV byte budget,
+//! page pinning, pluggable replacement policies and a lower-precision cold
+//! tier — the buffer-manager layer that turns the repo's "2x memory
+//! savings" from a high-water-mark counter into an enforced invariant.
+//!
+//! Residency model: every in-use pool page is either **Hot** (stored at the
+//! pool's configured KV dtype) or **Cold** (demoted in place to the q8
+//! rate via `PagePool::demote_page_in_place`; byte accounting charges the
+//! int8 rate). When an allocation or promotion would push
+//! `bytes_in_use` over the budget, the active `EvictionPolicy` picks
+//! victims to demote — never a pinned page (pages of currently-decoding
+//! sequences), never a still-writable partial page, never a page already
+//! cold. Cold pages selected by a sparsity policy are transparently
+//! promoted before the gather, with a simulated spill cost charged through
+//! the `hwmodel` device constants.
+//!
+//! The store is a sidecar over `PagePool`, not a wrapper type: pages can
+//! still be allocated/freed behind its back (snapshot clones, session
+//! clears); `sync` reconciles against pool refcounts before any budget
+//! decision, so accounting is exact at every enforcement point.
+
+pub mod policy;
+
+pub use policy::{make_eviction_policy, EvictionPolicy, EvictionPolicyKind};
+
+use crate::hwmodel::Device;
+
+use super::pool::{PageId, PagePool};
+use super::seq::SeqCache;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Tier {
+    Untracked,
+    Hot,
+    Cold,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct PageState {
+    tier: Tier,
+    pinned: bool,
+}
+
+impl Default for PageState {
+    fn default() -> Self {
+        PageState { tier: Tier::Untracked, pinned: false }
+    }
+}
+
+/// Cumulative store counters (the engine diffs these per decode step).
+#[derive(Debug, Clone, Default)]
+pub struct StoreStats {
+    /// selected page was already hot
+    pub hits: u64,
+    /// selected page was cold and had to be promoted
+    pub misses: u64,
+    pub demotions: u64,
+    pub promotions: u64,
+    /// simulated cold-tier transfer time (hwmodel-priced)
+    pub spill_seconds: f64,
+    /// enforcement passes that could not reach the budget (everything
+    /// evictable already demoted)
+    pub overflows: u64,
+}
+
+/// Byte-budgeted residency manager over a `PagePool`.
+pub struct PageStore {
+    budget_bytes: Option<usize>,
+    policy: Box<dyn EvictionPolicy>,
+    state: Vec<PageState>,
+    pinned: Vec<PageId>,
+    hot_pages: usize,
+    cold_pages: usize,
+    tick: u64,
+    dev: Device,
+    pub stats: StoreStats,
+}
+
+impl PageStore {
+    pub fn new(budget_bytes: Option<usize>, kind: EvictionPolicyKind) -> PageStore {
+        PageStore {
+            budget_bytes,
+            policy: make_eviction_policy(kind),
+            state: Vec::new(),
+            pinned: Vec::new(),
+            hot_pages: 0,
+            cold_pages: 0,
+            tick: 0,
+            dev: Device::default(),
+            stats: StoreStats::default(),
+        }
+    }
+
+    /// A store without a budget is a transparent pass-through: `alloc`
+    /// falls back to `PagePool::grow` and no page is ever demoted.
+    pub fn enabled(&self) -> bool {
+        self.budget_bytes.is_some()
+    }
+
+    pub fn budget_bytes(&self) -> Option<usize> {
+        self.budget_bytes
+    }
+
+    pub fn policy_kind(&self) -> EvictionPolicyKind {
+        self.policy.kind()
+    }
+
+    /// Whether the engine should feed bounding-box relevance observations.
+    pub fn wants_scores(&self) -> bool {
+        self.enabled() && self.policy.kind() == EvictionPolicyKind::QueryAware
+    }
+
+    pub fn is_cold(&self, id: PageId) -> bool {
+        self.state
+            .get(id as usize)
+            .map(|s| s.tier == Tier::Cold)
+            .unwrap_or(false)
+    }
+
+    pub fn is_hot(&self, id: PageId) -> bool {
+        self.state
+            .get(id as usize)
+            .map(|s| s.tier == Tier::Hot)
+            .unwrap_or(false)
+    }
+
+    pub fn is_pinned(&self, id: PageId) -> bool {
+        self.state
+            .get(id as usize)
+            .map(|s| s.pinned)
+            .unwrap_or(false)
+    }
+
+    /// (hot, cold) resident page counts as of the last sync.
+    pub fn tier_counts(&self) -> (usize, usize) {
+        (self.hot_pages, self.cold_pages)
+    }
+
+    /// KV bytes currently resident, cold pages charged at the q8 rate.
+    /// Without a budget this is exactly `PagePool::bytes_in_use`.
+    pub fn bytes_in_use(&self, pool: &PagePool) -> usize {
+        if !self.enabled() {
+            return pool.bytes_in_use();
+        }
+        self.hot_pages * pool.page_bytes() + self.cold_pages * pool.page_bytes_cold()
+    }
+
+    fn ensure_cap(&mut self, cap: usize) {
+        if self.state.len() < cap {
+            self.state.resize(cap, PageState::default());
+            self.policy.ensure_capacity(cap);
+        }
+    }
+
+    fn register_hot(&mut self, id: PageId) {
+        let st = &mut self.state[id as usize];
+        match st.tier {
+            Tier::Untracked => self.hot_pages += 1,
+            Tier::Cold => {
+                self.cold_pages -= 1;
+                self.hot_pages += 1;
+            }
+            Tier::Hot => {}
+        }
+        st.tier = Tier::Hot;
+        self.tick += 1;
+        self.policy.on_access(id, self.tick);
+    }
+
+    fn remove(&mut self, id: PageId) {
+        let st = &mut self.state[id as usize];
+        match st.tier {
+            Tier::Hot => self.hot_pages -= 1,
+            Tier::Cold => self.cold_pages -= 1,
+            Tier::Untracked => return,
+        }
+        st.tier = Tier::Untracked;
+        st.pinned = false;
+        self.policy.on_remove(id);
+    }
+
+    /// Reconcile residency against pool refcounts: pages allocated behind
+    /// the store's back (snapshot clones, prefill) become Hot; freed pages
+    /// leave the replacement structures. O(cap_pages) — called once per
+    /// enforcement point, not per token.
+    pub fn sync(&mut self, pool: &PagePool) {
+        if !self.enabled() {
+            return;
+        }
+        self.ensure_cap(pool.cap_pages());
+        for id in 0..pool.cap_pages() as u32 {
+            let live = pool.refcount(id) > 0;
+            match (live, self.state[id as usize].tier) {
+                (true, Tier::Untracked) => self.register_hot(id),
+                (false, Tier::Untracked) => {}
+                (false, _) => self.remove(id),
+                (true, _) => {}
+            }
+        }
+    }
+
+    /// Budget-aware allocation: demote victims until one more hot page
+    /// fits, then allocate (falling back to pool growth when nothing is
+    /// evictable — serving never fails on budget pressure, it overflows
+    /// and records the fact).
+    pub fn alloc(&mut self, pool: &mut PagePool) -> PageId {
+        if !self.enabled() {
+            return pool.alloc();
+        }
+        self.sync(pool);
+        self.evict_until(pool, pool.page_bytes());
+        let id = pool.alloc();
+        self.ensure_cap(pool.cap_pages());
+        self.register_hot(id);
+        id
+    }
+
+    /// Pin a page for the duration of the current decode step: pinned
+    /// pages are never demotion victims.
+    pub fn pin(&mut self, id: PageId) {
+        if !self.enabled() || (id as usize) >= self.state.len() {
+            return;
+        }
+        let st = &mut self.state[id as usize];
+        if !st.pinned {
+            st.pinned = true;
+            self.pinned.push(id);
+        }
+    }
+
+    pub fn unpin_all(&mut self) {
+        for id in self.pinned.drain(..) {
+            self.state[id as usize].pinned = false;
+        }
+    }
+
+    /// A sparsity policy selected this page for attention: count the
+    /// residency hit/miss and transparently promote if cold (charging the
+    /// simulated cold-tier transfer). Promotion may displace another page
+    /// to stay inside the budget.
+    pub fn ensure_hot(&mut self, pool: &mut PagePool, id: PageId) {
+        if !self.enabled() {
+            return;
+        }
+        self.ensure_cap(pool.cap_pages());
+        match self.state[id as usize].tier {
+            Tier::Hot => {
+                self.stats.hits += 1;
+                self.tick += 1;
+                self.policy.on_access(id, self.tick);
+            }
+            Tier::Cold => {
+                self.stats.misses += 1;
+                self.stats.promotions += 1;
+                self.state[id as usize].tier = Tier::Hot;
+                self.cold_pages -= 1;
+                self.hot_pages += 1;
+                let bytes = pool.page_bytes_cold() + pool.page_bytes();
+                self.stats.spill_seconds += self.spill_seconds(bytes);
+                self.tick += 1;
+                self.policy.on_access(id, self.tick);
+                // displace someone else, never the page just promoted
+                self.evict_until_excluding(pool, 0, Some(id));
+            }
+            Tier::Untracked => {
+                // allocation raced past a sync point; adopt as hot
+                self.register_hot(id);
+                self.stats.hits += 1;
+            }
+        }
+    }
+
+    /// Feed a bounding-box relevance observation (query-aware policy).
+    pub fn note_score(&mut self, id: PageId, score: f32) {
+        if self.enabled() && (id as usize) < self.state.len() {
+            self.policy.on_score(id, score);
+        }
+    }
+
+    /// Demote victims until `bytes_in_use <= budget`. Called after every
+    /// decode step (post-unpin) and inside alloc/promote.
+    pub fn enforce_budget(&mut self, pool: &mut PagePool) {
+        if !self.enabled() {
+            return;
+        }
+        self.sync(pool);
+        self.evict_until(pool, 0);
+    }
+
+    fn evict_until(&mut self, pool: &mut PagePool, headroom: usize) {
+        self.evict_until_excluding(pool, headroom, None);
+    }
+
+    fn evict_until_excluding(
+        &mut self,
+        pool: &mut PagePool,
+        headroom: usize,
+        exclude: Option<PageId>,
+    ) {
+        let Some(budget) = self.budget_bytes else { return };
+        loop {
+            if self.bytes_in_use(pool) + headroom <= budget {
+                return;
+            }
+            let victim = {
+                let state = &self.state;
+                let page_size = pool.page_size;
+                let pool_ref = &*pool;
+                self.policy.victim(&mut |id| {
+                    Some(id) != exclude
+                        && state
+                            .get(id as usize)
+                            .map(|s| s.tier == Tier::Hot && !s.pinned)
+                            .unwrap_or(false)
+                        && pool_ref.refcount(id) > 0
+                        && pool_ref.filled(id) == page_size
+                })
+            };
+            match victim {
+                Some(id) => self.demote(pool, id),
+                None => {
+                    self.stats.overflows += 1;
+                    return;
+                }
+            }
+        }
+    }
+
+    fn demote(&mut self, pool: &mut PagePool, id: PageId) {
+        debug_assert_eq!(self.state[id as usize].tier, Tier::Hot);
+        debug_assert!(!self.state[id as usize].pinned, "demoting a pinned page");
+        let moved = pool.demote_page_in_place(id);
+        self.state[id as usize].tier = Tier::Cold;
+        self.hot_pages -= 1;
+        self.cold_pages += 1;
+        self.stats.demotions += 1;
+        self.stats.spill_seconds += self.spill_seconds(moved);
+    }
+
+    fn spill_seconds(&self, bytes: usize) -> f64 {
+        self.dev.spill_seconds(bytes)
+    }
+
+    /// Coldest prunable table entry of a sequence (for the `PruneColdest`
+    /// plugin action): lowest policy rank among non-sink entries, never the
+    /// trailing write-head page. With the store disabled every rank ties
+    /// and the first non-sink entry wins — the pre-store behaviour.
+    pub fn coldest_index(&self, seq: &SeqCache, sink: usize) -> Option<usize> {
+        let n = seq.pages.len();
+        if n <= sink + 1 {
+            return None;
+        }
+        (sink..n - 1).min_by(|&a, &b| {
+            let ra = self.policy.rank(seq.pages[a].id);
+            let rb = self.policy.rank(seq.pages[b].id);
+            ra.partial_cmp(&rb).unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KvDtype;
+
+    fn pool() -> PagePool {
+        // 2 layers, d=8, S=4, f32
+        PagePool::new(2, 8, 4, KvDtype::F32)
+    }
+
+    fn fill_page(pool: &mut PagePool, id: PageId, val: f32) {
+        for slot in 0..pool.page_size {
+            for l in 0..pool.n_layers {
+                let row = vec![val + slot as f32 * 0.25; pool.d_kv];
+                pool.write_token(id, slot, l, &row, &row);
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_store_is_pass_through() {
+        let mut p = pool();
+        let mut s = PageStore::new(None, EvictionPolicyKind::Lru);
+        let a = s.alloc(&mut p);
+        assert!(!s.enabled());
+        assert_eq!(s.bytes_in_use(&p), p.bytes_in_use());
+        assert_eq!(s.stats.demotions, 0);
+        p.release(a);
+    }
+
+    #[test]
+    fn alloc_over_budget_demotes_instead_of_growing_bytes() {
+        let mut p = pool();
+        let budget = 3 * p.page_bytes();
+        let mut s = PageStore::new(Some(budget), EvictionPolicyKind::Lru);
+        let mut live = Vec::new();
+        for i in 0..6 {
+            let id = s.alloc(&mut p);
+            fill_page(&mut p, id, i as f32);
+            live.push(id);
+        }
+        s.enforce_budget(&mut p);
+        assert!(s.bytes_in_use(&p) <= budget, "{} > {budget}", s.bytes_in_use(&p));
+        assert!(s.stats.demotions >= 3);
+        let (hot, cold) = s.tier_counts();
+        assert_eq!(hot + cold, 6);
+        for id in live {
+            p.release(id);
+        }
+        s.sync(&p);
+        assert_eq!(s.bytes_in_use(&p), 0);
+    }
+
+    #[test]
+    fn pinned_pages_survive_enforcement() {
+        let mut p = pool();
+        let budget = 2 * p.page_bytes();
+        let mut s = PageStore::new(Some(budget), EvictionPolicyKind::Lru);
+        let a = s.alloc(&mut p);
+        fill_page(&mut p, a, 1.0);
+        s.pin(a);
+        let mut others = Vec::new();
+        for i in 0..4 {
+            let id = s.alloc(&mut p);
+            fill_page(&mut p, id, i as f32);
+            others.push(id);
+        }
+        assert!(s.is_hot(a), "pinned page was demoted");
+        s.unpin_all();
+        s.enforce_budget(&mut p);
+        assert!(s.bytes_in_use(&p) <= budget);
+        p.release(a);
+        for id in others {
+            p.release(id);
+        }
+    }
+
+    #[test]
+    fn promotion_counts_miss_and_restores_hot() {
+        let mut p = pool();
+        let budget = 2 * p.page_bytes();
+        let mut s = PageStore::new(Some(budget), EvictionPolicyKind::Lru);
+        let a = s.alloc(&mut p);
+        fill_page(&mut p, a, 1.0);
+        for i in 0..3 {
+            let id = s.alloc(&mut p);
+            fill_page(&mut p, id, i as f32);
+        }
+        s.enforce_budget(&mut p);
+        assert!(s.is_cold(a), "LRU must have demoted the oldest page");
+        s.ensure_hot(&mut p, a);
+        assert!(s.is_hot(a));
+        assert_eq!(s.stats.misses, 1);
+        assert_eq!(s.stats.promotions, 1);
+        assert!(s.stats.spill_seconds > 0.0);
+        s.ensure_hot(&mut p, a);
+        assert_eq!(s.stats.hits, 1);
+    }
+
+    #[test]
+    fn partial_pages_are_never_demoted() {
+        let mut p = pool();
+        let budget = p.page_bytes(); // room for one page only
+        let mut s = PageStore::new(Some(budget), EvictionPolicyKind::Clock);
+        let a = s.alloc(&mut p);
+        // only one token written: page stays partial
+        p.write_token(a, 0, 0, &[1.0; 8], &[1.0; 8]);
+        p.write_token(a, 0, 1, &[1.0; 8], &[1.0; 8]);
+        let b = s.alloc(&mut p);
+        fill_page(&mut p, b, 2.0);
+        s.enforce_budget(&mut p);
+        assert!(s.is_hot(a), "partial page demoted");
+        assert!(s.is_cold(b) || s.bytes_in_use(&p) <= budget);
+    }
+
+    #[test]
+    fn sync_adopts_and_releases_foreign_pages() {
+        let mut p = pool();
+        let mut s = PageStore::new(Some(10 * p.page_bytes()), EvictionPolicyKind::Lru);
+        let a = p.alloc(); // behind the store's back
+        s.sync(&p);
+        assert!(s.is_hot(a));
+        p.release(a);
+        s.sync(&p);
+        assert!(!s.is_hot(a) && !s.is_cold(a));
+        assert_eq!(s.tier_counts(), (0, 0));
+    }
+
+    #[test]
+    fn overflow_recorded_when_nothing_evictable() {
+        let mut p = pool();
+        let budget = p.page_bytes() / 2; // below even one page
+        let mut s = PageStore::new(Some(budget), EvictionPolicyKind::QueryAware);
+        let a = s.alloc(&mut p);
+        fill_page(&mut p, a, 1.0);
+        s.pin(a);
+        s.enforce_budget(&mut p);
+        assert!(s.stats.overflows > 0);
+        assert!(s.is_hot(a));
+        s.unpin_all();
+        p.release(a);
+    }
+
+    #[test]
+    fn coldest_index_defaults_to_first_non_sink() {
+        let mut p = pool();
+        let s = PageStore::new(None, EvictionPolicyKind::Lru);
+        let mut seq = SeqCache::new();
+        for i in 0..12 {
+            let (page, slot) = seq.slot_for_next(&mut p);
+            for l in 0..2 {
+                p.write_token(page, slot, l, &[i as f32; 8], &[i as f32; 8]);
+            }
+            seq.commit_token();
+        }
+        // untracked pages all rank equal -> first non-sink index
+        assert_eq!(s.coldest_index(&seq, 1), Some(1));
+        assert_eq!(s.coldest_index(&seq, 5), None, "nothing prunable");
+        seq.clear(&mut p);
+    }
+}

@@ -1,0 +1,529 @@
+//! Pluggable page-replacement policies for the budgeted `PageStore`.
+//!
+//! Three contrasting metadata shapes (mirroring the buffer-replacement
+//! design notes this module is modelled on — see docs/pagestore_design.md):
+//!
+//! * **LRU** — exact recency via an intrusive doubly-linked list of page
+//!   indices (`prev`/`next` arrays, no allocation per access).
+//! * **CLOCK** — one reference bit per page plus a sweeping hand
+//!   (second-chance approximation of LRU at O(1) metadata per access).
+//! * **Query-aware cold** — TinyServe-native: demote the page whose recent
+//!   bounding-box relevance (EMA of `sparsity::score_page` against live
+//!   decode queries) is lowest. Recency-blind but query-aligned: a page
+//!   that no current query attends to is cold even if recently written.
+//!
+//! Policies see pages as bare `PageId`s; residency/pin/refcount state stays
+//! in the store, which passes an `evictable` predicate into `victim`.
+
+use crate::kvcache::pool::PageId;
+
+const NIL: u32 = u32::MAX;
+
+/// Which replacement policy the store runs (parseable from CLI flags).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicyKind {
+    Lru,
+    Clock,
+    QueryAware,
+}
+
+impl EvictionPolicyKind {
+    pub fn parse(s: &str) -> Option<EvictionPolicyKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "lru" => EvictionPolicyKind::Lru,
+            "clock" | "second-chance" => EvictionPolicyKind::Clock,
+            "query-aware" | "queryaware" | "qa" => EvictionPolicyKind::QueryAware,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictionPolicyKind::Lru => "lru",
+            EvictionPolicyKind::Clock => "clock",
+            EvictionPolicyKind::QueryAware => "query-aware",
+        }
+    }
+
+    pub fn all() -> &'static [EvictionPolicyKind] {
+        &[
+            EvictionPolicyKind::Lru,
+            EvictionPolicyKind::Clock,
+            EvictionPolicyKind::QueryAware,
+        ]
+    }
+}
+
+/// Replacement strategy behind the store's demotion decisions.
+pub trait EvictionPolicy {
+    fn kind(&self) -> EvictionPolicyKind;
+
+    /// Grow per-page metadata to cover `cap` page ids.
+    fn ensure_capacity(&mut self, cap: usize);
+
+    /// Page became resident or was used (allocation, selection, promotion).
+    /// `now` is the store's monotonic access tick.
+    fn on_access(&mut self, id: PageId, now: u64);
+
+    /// Bounding-box relevance observation for this page (query-aware
+    /// signal; other policies ignore it).
+    fn on_score(&mut self, _id: PageId, _score: f32) {}
+
+    /// Page left residency entirely (freed back to the pool).
+    fn on_remove(&mut self, id: PageId);
+
+    /// Choose and claim the next demotion victim among pages for which
+    /// `evictable` returns true. Claimed pages leave the policy's candidate
+    /// structures; a later `on_access` re-enters them.
+    fn victim(&mut self, evictable: &mut dyn FnMut(PageId) -> bool) -> Option<PageId>;
+
+    /// Relative hotness (higher = keep). Drives `PruneColdest`.
+    fn rank(&self, id: PageId) -> f64;
+}
+
+pub fn make_eviction_policy(kind: EvictionPolicyKind) -> Box<dyn EvictionPolicy> {
+    match kind {
+        EvictionPolicyKind::Lru => Box::new(LruPolicy::default()),
+        EvictionPolicyKind::Clock => Box::new(ClockPolicy::default()),
+        EvictionPolicyKind::QueryAware => Box::new(QueryAwareCold::new(0.7)),
+    }
+}
+
+/// Exact LRU over an intrusive doubly-linked list: `head` is the most
+/// recently used page, `tail` the demotion candidate. All operations are a
+/// handful of index assignments; victim search walks tail -> head skipping
+/// non-evictable (pinned/partial/cold) pages.
+pub struct LruPolicy {
+    prev: Vec<u32>, // toward head (more recent)
+    next: Vec<u32>, // toward tail (less recent)
+    in_list: Vec<bool>,
+    stamp: Vec<u64>,
+    head: u32,
+    tail: u32,
+}
+
+impl Default for LruPolicy {
+    fn default() -> Self {
+        LruPolicy {
+            prev: Vec::new(),
+            next: Vec::new(),
+            in_list: Vec::new(),
+            stamp: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+}
+
+impl LruPolicy {
+    fn detach(&mut self, id: u32) {
+        if !self.in_list[id as usize] {
+            return;
+        }
+        let p = self.prev[id as usize];
+        let n = self.next[id as usize];
+        if p != NIL {
+            self.next[p as usize] = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.prev[n as usize] = p;
+        } else {
+            self.tail = p;
+        }
+        self.prev[id as usize] = NIL;
+        self.next[id as usize] = NIL;
+        self.in_list[id as usize] = false;
+    }
+
+    fn push_head(&mut self, id: u32) {
+        self.prev[id as usize] = NIL;
+        self.next[id as usize] = self.head;
+        if self.head != NIL {
+            self.prev[self.head as usize] = id;
+        } else {
+            self.tail = id;
+        }
+        self.head = id;
+        self.in_list[id as usize] = true;
+    }
+}
+
+impl EvictionPolicy for LruPolicy {
+    fn kind(&self) -> EvictionPolicyKind {
+        EvictionPolicyKind::Lru
+    }
+
+    fn ensure_capacity(&mut self, cap: usize) {
+        self.prev.resize(cap, NIL);
+        self.next.resize(cap, NIL);
+        self.in_list.resize(cap, false);
+        self.stamp.resize(cap, 0);
+    }
+
+    fn on_access(&mut self, id: PageId, now: u64) {
+        self.detach(id);
+        self.push_head(id);
+        self.stamp[id as usize] = now;
+    }
+
+    fn on_remove(&mut self, id: PageId) {
+        self.detach(id);
+    }
+
+    fn victim(&mut self, evictable: &mut dyn FnMut(PageId) -> bool) -> Option<PageId> {
+        let mut cur = self.tail;
+        while cur != NIL {
+            if evictable(cur) {
+                self.detach(cur);
+                return Some(cur);
+            }
+            cur = self.prev[cur as usize];
+        }
+        None
+    }
+
+    fn rank(&self, id: PageId) -> f64 {
+        self.stamp
+            .get(id as usize)
+            .copied()
+            .unwrap_or(0) as f64
+    }
+}
+
+/// CLOCK / second chance: a circular scan over resident pages with one
+/// reference bit each. An accessed page survives one sweep; the hand evicts
+/// the first unreferenced evictable page it meets.
+pub struct ClockPolicy {
+    ring: Vec<PageId>,
+    pos: Vec<u32>, // NIL when absent from the ring
+    refbit: Vec<bool>,
+    stamp: Vec<u64>,
+    hand: usize,
+}
+
+impl Default for ClockPolicy {
+    fn default() -> Self {
+        ClockPolicy {
+            ring: Vec::new(),
+            pos: Vec::new(),
+            refbit: Vec::new(),
+            stamp: Vec::new(),
+            hand: 0,
+        }
+    }
+}
+
+impl ClockPolicy {
+    fn remove_at(&mut self, idx: usize) {
+        let id = self.ring.swap_remove(idx);
+        self.pos[id as usize] = NIL;
+        if let Some(&moved) = self.ring.get(idx) {
+            self.pos[moved as usize] = idx as u32;
+        }
+        if self.hand > idx {
+            self.hand -= 1;
+        }
+        if !self.ring.is_empty() {
+            self.hand %= self.ring.len();
+        } else {
+            self.hand = 0;
+        }
+    }
+}
+
+impl EvictionPolicy for ClockPolicy {
+    fn kind(&self) -> EvictionPolicyKind {
+        EvictionPolicyKind::Clock
+    }
+
+    fn ensure_capacity(&mut self, cap: usize) {
+        self.pos.resize(cap, NIL);
+        self.refbit.resize(cap, false);
+        self.stamp.resize(cap, 0);
+    }
+
+    fn on_access(&mut self, id: PageId, now: u64) {
+        if self.pos[id as usize] == NIL {
+            self.pos[id as usize] = self.ring.len() as u32;
+            self.ring.push(id);
+        }
+        self.refbit[id as usize] = true;
+        self.stamp[id as usize] = now;
+    }
+
+    fn on_remove(&mut self, id: PageId) {
+        let p = self.pos[id as usize];
+        if p != NIL {
+            self.remove_at(p as usize);
+        }
+        self.refbit[id as usize] = false;
+    }
+
+    fn victim(&mut self, evictable: &mut dyn FnMut(PageId) -> bool) -> Option<PageId> {
+        if self.ring.is_empty() {
+            return None;
+        }
+        // two full sweeps: the first clears reference bits, the second must
+        // find a victim unless nothing is evictable
+        let cap = 2 * self.ring.len() + 1;
+        let mut scanned = 0usize;
+        while scanned < cap && !self.ring.is_empty() {
+            if self.hand >= self.ring.len() {
+                self.hand = 0;
+            }
+            let id = self.ring[self.hand];
+            if !evictable(id) {
+                self.hand += 1;
+                scanned += 1;
+                continue;
+            }
+            if self.refbit[id as usize] {
+                self.refbit[id as usize] = false;
+                self.hand += 1;
+                scanned += 1;
+                continue;
+            }
+            let idx = self.hand;
+            self.remove_at(idx);
+            return Some(id);
+        }
+        None
+    }
+
+    fn rank(&self, id: PageId) -> f64 {
+        self.stamp
+            .get(id as usize)
+            .copied()
+            .unwrap_or(0) as f64
+    }
+}
+
+/// TinyServe-native policy: demote the page with the lowest recent
+/// bounding-box relevance. Scores arrive from the engine as
+/// `score_page(q, meta)` observations against live decode queries and are
+/// smoothed with an EMA; never-scored pages (e.g. idle session snapshots)
+/// rank coldest, oldest first.
+pub struct QueryAwareCold {
+    ema: Vec<f32>,
+    scored: Vec<bool>,
+    tracked: Vec<bool>,
+    stamp: Vec<u64>,
+    decay: f32,
+}
+
+impl QueryAwareCold {
+    pub fn new(decay: f32) -> Self {
+        QueryAwareCold {
+            ema: Vec::new(),
+            scored: Vec::new(),
+            tracked: Vec::new(),
+            stamp: Vec::new(),
+            decay,
+        }
+    }
+}
+
+impl EvictionPolicy for QueryAwareCold {
+    fn kind(&self) -> EvictionPolicyKind {
+        EvictionPolicyKind::QueryAware
+    }
+
+    fn ensure_capacity(&mut self, cap: usize) {
+        self.ema.resize(cap, 0.0);
+        self.scored.resize(cap, false);
+        self.tracked.resize(cap, false);
+        self.stamp.resize(cap, 0);
+    }
+
+    fn on_access(&mut self, id: PageId, now: u64) {
+        self.tracked[id as usize] = true;
+        self.stamp[id as usize] = now;
+    }
+
+    fn on_score(&mut self, id: PageId, score: f32) {
+        let i = id as usize;
+        if i >= self.ema.len() {
+            return;
+        }
+        if self.scored[i] {
+            self.ema[i] = self.decay * self.ema[i] + (1.0 - self.decay) * score;
+        } else {
+            self.ema[i] = score;
+            self.scored[i] = true;
+        }
+    }
+
+    fn on_remove(&mut self, id: PageId) {
+        let i = id as usize;
+        self.tracked[i] = false;
+        self.scored[i] = false;
+        self.ema[i] = 0.0;
+    }
+
+    fn victim(&mut self, evictable: &mut dyn FnMut(PageId) -> bool) -> Option<PageId> {
+        let mut best: Option<(PageId, f32, u64)> = None;
+        for i in 0..self.tracked.len() {
+            if !self.tracked[i] || !evictable(i as PageId) {
+                continue;
+            }
+            let s = if self.scored[i] { self.ema[i] } else { f32::NEG_INFINITY };
+            let t = self.stamp[i];
+            let better = match best {
+                None => true,
+                Some((_, bs, bt)) => s < bs || (s == bs && t < bt),
+            };
+            if better {
+                best = Some((i as PageId, s, t));
+            }
+        }
+        best.map(|(id, _, _)| {
+            self.tracked[id as usize] = false;
+            id
+        })
+    }
+
+    fn rank(&self, id: PageId) -> f64 {
+        let i = id as usize;
+        if i < self.scored.len() && self.scored[i] {
+            self.ema[i] as f64
+        } else {
+            // never-scored pages rank coldest, oldest first
+            -1e30 + self.stamp.get(i).copied().unwrap_or(0) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn take_all(p: &mut dyn EvictionPolicy, n: usize) -> Vec<PageId> {
+        let mut out = Vec::new();
+        for _ in 0..n {
+            match p.victim(&mut |_| true) {
+                Some(id) => out.push(id),
+                None => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn lru_evicts_in_recency_order() {
+        let mut p = LruPolicy::default();
+        p.ensure_capacity(8);
+        for id in 0..4u32 {
+            p.on_access(id, id as u64 + 1);
+        }
+        p.on_access(0, 10); // 0 becomes most recent
+        assert_eq!(take_all(&mut p, 4), vec![1, 2, 3, 0]);
+        assert_eq!(p.victim(&mut |_| true), None, "list drained");
+    }
+
+    #[test]
+    fn lru_skips_non_evictable() {
+        let mut p = LruPolicy::default();
+        p.ensure_capacity(4);
+        for id in 0..3u32 {
+            p.on_access(id, id as u64 + 1);
+        }
+        let v = p.victim(&mut |id| id != 0);
+        assert_eq!(v, Some(1), "oldest evictable wins");
+    }
+
+    #[test]
+    fn lru_remove_unlinks() {
+        let mut p = LruPolicy::default();
+        p.ensure_capacity(4);
+        for id in 0..3u32 {
+            p.on_access(id, id as u64 + 1);
+        }
+        p.on_remove(0);
+        assert_eq!(take_all(&mut p, 3), vec![1, 2]);
+    }
+
+    #[test]
+    fn clock_gives_second_chance() {
+        let mut p = ClockPolicy::default();
+        p.ensure_capacity(4);
+        for id in 0..3u32 {
+            p.on_access(id, 1);
+        }
+        // all refbits set: first sweep clears them, victim is the first page
+        assert_eq!(p.victim(&mut |_| true), Some(0));
+        // 1 and 2 now have cleared bits; re-access 1 to protect it
+        p.on_access(1, 2);
+        assert_eq!(p.victim(&mut |_| true), Some(2));
+        assert_eq!(p.victim(&mut |_| true), Some(1));
+        assert_eq!(p.victim(&mut |_| true), None);
+    }
+
+    #[test]
+    fn clock_all_pinned_returns_none() {
+        let mut p = ClockPolicy::default();
+        p.ensure_capacity(4);
+        for id in 0..3u32 {
+            p.on_access(id, 1);
+        }
+        assert_eq!(p.victim(&mut |_| false), None);
+        // the sweep moved the hand but the ring stays intact: eviction
+        // still works once pages become evictable again
+        assert!(p.victim(&mut |_| true).is_some());
+    }
+
+    #[test]
+    fn query_aware_picks_lowest_score() {
+        let mut p = QueryAwareCold::new(0.5);
+        p.ensure_capacity(4);
+        for id in 0..3u32 {
+            p.on_access(id, id as u64 + 1);
+        }
+        p.on_score(0, 5.0);
+        p.on_score(1, -2.0);
+        p.on_score(2, 9.0);
+        assert_eq!(p.victim(&mut |_| true), Some(1));
+        // promoted back in, now with a high score
+        p.on_access(1, 9);
+        p.on_score(1, 50.0);
+        assert_eq!(p.victim(&mut |_| true), Some(0));
+    }
+
+    #[test]
+    fn query_aware_prefers_unscored_then_oldest() {
+        let mut p = QueryAwareCold::new(0.5);
+        p.ensure_capacity(4);
+        p.on_access(0, 1);
+        p.on_access(1, 2);
+        p.on_access(2, 3);
+        p.on_score(2, -100.0); // scored, but unscored pages are colder
+        assert_eq!(p.victim(&mut |_| true), Some(0), "oldest unscored first");
+        assert_eq!(p.victim(&mut |_| true), Some(1));
+        assert_eq!(p.victim(&mut |_| true), Some(2));
+    }
+
+    #[test]
+    fn query_aware_ema_smooths() {
+        let mut p = QueryAwareCold::new(0.5);
+        p.ensure_capacity(2);
+        p.on_access(0, 1);
+        p.on_score(0, 4.0);
+        p.on_score(0, 0.0);
+        assert!((p.rank(0) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(EvictionPolicyKind::parse("lru"), Some(EvictionPolicyKind::Lru));
+        assert_eq!(EvictionPolicyKind::parse("CLOCK"), Some(EvictionPolicyKind::Clock));
+        assert_eq!(
+            EvictionPolicyKind::parse("query-aware"),
+            Some(EvictionPolicyKind::QueryAware)
+        );
+        assert_eq!(EvictionPolicyKind::parse("bogus"), None);
+        for k in EvictionPolicyKind::all() {
+            assert_eq!(EvictionPolicyKind::parse(k.name()), Some(*k));
+        }
+    }
+}

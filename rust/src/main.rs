@@ -11,6 +11,7 @@ use anyhow::Result;
 
 use tinyserve::config::{KvDtype, ServingConfig};
 use tinyserve::coordinator::{serve_trace, ServeOptions};
+use tinyserve::kvcache::EvictionPolicyKind;
 use tinyserve::engine::{Engine, Sampling};
 use tinyserve::metrics::StepMetrics;
 use tinyserve::plugins::Pipeline;
@@ -36,6 +37,13 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
     if let Some(d) = args.get("kv-dtype") {
         cfg.kv_dtype = KvDtype::parse(d)
             .ok_or_else(|| anyhow::anyhow!("unknown kv dtype '{d}'"))?;
+    }
+    // memory-budgeted page store: absent flag keeps the unbounded pool
+    cfg.kv_budget_mb = args.f64_opt("kv-budget-mb");
+    if let Some(e) = args.get("eviction-policy") {
+        cfg.eviction = EvictionPolicyKind::parse(e).ok_or_else(|| {
+            anyhow::anyhow!("unknown eviction policy '{e}' (lru|clock|query-aware)")
+        })?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -123,6 +131,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let mut plugins = Pipeline::new();
     let r = serve_trace(&mut engine, &trace, &opts, &mut plugins)?;
+    let kv_budget = engine.store.budget_bytes();
+    let pool_bytes_peak = engine.pool.bytes_peak();
     let mut m = r.metrics;
     println!("--- serve report ---");
     println!("requests            {}", m.total_requests);
@@ -140,6 +150,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.request_ttft.p99() * 1e3
     );
     println!("kv page hit rate    {:.1}%", m.hit_rate.mean() * 100.0);
+    println!(
+        "kv bytes            mean {:.2} MB  peak {:.2} MB  (pool hot-rate peak {:.2} MB)",
+        m.kv_bytes.mean() / 1e6,
+        m.kv_bytes_peak as f64 / 1e6,
+        pool_bytes_peak as f64 / 1e6
+    );
+    if let Some(b) = kv_budget {
+        println!(
+            "kv budget           {:.2} MB  [{}]  residency hit {:.1}%  violations {}",
+            b as f64 / 1e6,
+            engine.store.policy_kind().name(),
+            m.residency_hit_rate.mean() * 100.0,
+            m.budget_violations
+        );
+        println!(
+            "cold tier           demotions {}  promotions {}  ({:.3}/tok)  spill {:.1} ms",
+            m.total_demotions,
+            m.total_promotions,
+            m.total_demotions as f64 / m.total_new_tokens.max(1) as f64,
+            m.total_spill_seconds * 1e3
+        );
+    }
     println!("exact-match acc     {:.1}%  (char {:.1}%)", r.accuracy * 100.0, r.char_accuracy * 100.0);
     println!(
         "sessions            reuse {:.0}%  reused tokens {}  migrations {}",
@@ -229,7 +261,8 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: tinyserve <info|generate|serve|eval|cost> [--model M] \
-                 [--policy P] [--budget N] [--batch B] ..."
+                 [--policy P] [--budget N] [--batch B] [--kv-budget-mb MB] \
+                 [--eviction-policy lru|clock|query-aware] ..."
             );
             std::process::exit(2);
         }

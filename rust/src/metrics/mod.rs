@@ -36,6 +36,19 @@ pub struct StepMetrics {
     pub resident_tokens: usize,
     /// mean attention entropy over batch rows (last layer)
     pub entropy: f32,
+    // --- budgeted page-store residency (zero when the store is unbounded) ---
+    /// KV bytes resident after this step (cold pages at the q8 rate)
+    pub kv_bytes_in_use: usize,
+    /// byte budget in force (0 = unbounded)
+    pub kv_budget_bytes: usize,
+    /// selected pages that were already hot
+    pub store_hits: usize,
+    /// selected pages that were cold and had to be promoted
+    pub store_misses: usize,
+    pub demotions: usize,
+    pub promotions: usize,
+    /// simulated cold-tier transfer time this step (hwmodel-priced)
+    pub spill_seconds: f64,
 }
 
 impl StepMetrics {
@@ -50,6 +63,16 @@ impl StepMetrics {
             return 1.0;
         }
         self.pages_reused as f64 / self.pages_selected as f64
+    }
+
+    /// Residency hit rate of the budgeted store: fraction of selected
+    /// pages that did not need promotion from the cold tier.
+    pub fn residency_hit_rate(&self) -> f64 {
+        let total = self.store_hits + self.store_misses;
+        if total == 0 {
+            return 1.0;
+        }
+        self.store_hits as f64 / total as f64
     }
 }
 
@@ -100,6 +123,19 @@ pub struct ServerMetrics {
     pub total_new_tokens: u64,
     pub total_requests: u64,
     pub total_gather_bytes: u64,
+    // --- budgeted page-store residency aggregation ---
+    /// mean over steps with store activity (hits + misses > 0)
+    pub residency_hit_rate: Welford,
+    /// KV bytes resident after each step
+    pub kv_bytes: Welford,
+    /// max post-step KV bytes observed
+    pub kv_bytes_peak: usize,
+    pub total_demotions: u64,
+    pub total_promotions: u64,
+    pub total_spill_seconds: f64,
+    /// steps that ended with bytes_in_use above the budget (0 when the
+    /// budget is enforceable — the serving invariant)
+    pub budget_violations: u64,
     pub run_seconds: f64,
     /// per-step bandwidth trace (bytes gathered each step) for Figure 7
     pub bandwidth_trace: Vec<f64>,
@@ -123,6 +159,17 @@ impl ServerMetrics {
         self.hit_rate.push(m.hit_rate());
         self.gather_bytes_per_step.push(m.gather_bytes as f64);
         self.total_gather_bytes += m.gather_bytes as u64;
+        if m.store_hits + m.store_misses > 0 {
+            self.residency_hit_rate.push(m.residency_hit_rate());
+        }
+        self.kv_bytes.push(m.kv_bytes_in_use as f64);
+        self.kv_bytes_peak = self.kv_bytes_peak.max(m.kv_bytes_in_use);
+        self.total_demotions += m.demotions as u64;
+        self.total_promotions += m.promotions as u64;
+        self.total_spill_seconds += m.spill_seconds;
+        if m.kv_budget_bytes > 0 && m.kv_bytes_in_use > m.kv_budget_bytes {
+            self.budget_violations += 1;
+        }
         if m.entropy.is_finite() {
             self.entropy.push(m.entropy as f64);
         }
@@ -186,6 +233,46 @@ mod tests {
         assert_eq!(sm.bandwidth_trace.len(), 10);
         sm.run_seconds = 2.0;
         assert_eq!(sm.throughput_tps(), 20.0);
+    }
+
+    #[test]
+    fn residency_aggregation_and_violations() {
+        let mut sm = ServerMetrics::new(false);
+        // a step with no store activity must not dilute the hit rate
+        sm.on_step(&StepMetrics { batch: 1, kv_bytes_in_use: 100, ..Default::default() });
+        sm.on_step(&StepMetrics {
+            batch: 1,
+            store_hits: 3,
+            store_misses: 1,
+            demotions: 2,
+            promotions: 1,
+            kv_bytes_in_use: 900,
+            kv_budget_bytes: 1000,
+            spill_seconds: 0.5,
+            ..Default::default()
+        });
+        sm.on_step(&StepMetrics {
+            batch: 1,
+            store_hits: 1,
+            store_misses: 1,
+            kv_bytes_in_use: 1200,
+            kv_budget_bytes: 1000,
+            ..Default::default()
+        });
+        assert_eq!(sm.residency_hit_rate.n, 2);
+        assert!((sm.residency_hit_rate.mean() - 0.625).abs() < 1e-9);
+        assert_eq!(sm.kv_bytes_peak, 1200);
+        assert_eq!(sm.total_demotions, 2);
+        assert_eq!(sm.total_promotions, 1);
+        assert_eq!(sm.budget_violations, 1);
+        assert!((sm.total_spill_seconds - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn residency_hit_rate_defaults_to_one() {
+        assert_eq!(StepMetrics::default().residency_hit_rate(), 1.0);
+        let m = StepMetrics { store_hits: 1, store_misses: 3, ..Default::default() };
+        assert_eq!(m.residency_hit_rate(), 0.25);
     }
 
     #[test]

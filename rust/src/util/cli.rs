@@ -78,6 +78,12 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Optional numeric flag: absent -> None (e.g. `--kv-budget-mb`).
+    pub fn f64_opt(&self, key: &str) -> Option<f64> {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a number")))
+    }
+
     pub fn bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
@@ -126,6 +132,13 @@ mod tests {
         assert_eq!(a.str_or("x", "d"), "d");
         assert_eq!(a.f64_or("r", 1.5), 1.5);
         assert!(!a.bool("flag"));
+    }
+
+    #[test]
+    fn optional_numeric_flags() {
+        let a = parse("--kv-budget-mb 12.5");
+        assert_eq!(a.f64_opt("kv-budget-mb"), Some(12.5));
+        assert_eq!(a.f64_opt("absent"), None);
     }
 
     #[test]

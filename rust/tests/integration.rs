@@ -5,6 +5,7 @@
 use tinyserve::config::{KvDtype, ServingConfig};
 use tinyserve::coordinator::{serve_trace, ServeOptions};
 use tinyserve::engine::{Engine, Sampling};
+use tinyserve::kvcache::EvictionPolicyKind;
 use tinyserve::metrics::StepMetrics;
 use tinyserve::plugins::Pipeline;
 use tinyserve::runtime::Manifest;
@@ -317,6 +318,80 @@ fn serve_trace_end_to_end() {
     assert!(r.session_stats.stores > 0);
     // all pages returned to the pool
     assert_eq!(e.pool.pages_in_use(), 0, "page leak after serving");
+}
+
+#[test]
+fn budgeted_store_enforces_kv_budget_in_serving() {
+    // Acceptance: with kv_budget_mb at 50% of the unbounded peak, the trace
+    // completes with bytes_in_use <= budget after every decode step, the
+    // query-aware policy stays within 1% exact-match of the unbounded run,
+    // and beats LRU on residency hit rate.
+    let m = require!(manifest());
+    let trace = generate_trace(&TraceConfig {
+        n_requests: 16,
+        prompt_chars: (250, 600),
+        new_tokens: (4, 10),
+        session_reuse_prob: 0.3,
+        n_sessions: 3,
+        ..Default::default()
+    });
+    let run = |kv_budget_mb: Option<f64>, eviction: EvictionPolicyKind| {
+        let cfg = ServingConfig {
+            model: MODEL.to_string(),
+            policy: PolicyKind::TinyServe,
+            budget: 256,
+            max_batch: 4,
+            kv_budget_mb,
+            eviction,
+            ..Default::default()
+        };
+        let mut e = Engine::from_manifest(&m, cfg).expect("engine");
+        let mut plugins = Pipeline::new();
+        let r = serve_trace(&mut e, &trace, &ServeOptions::default(), &mut plugins)
+            .expect("serve");
+        let peak = e.pool.bytes_peak();
+        assert_eq!(e.pool.pages_in_use(), 0, "page leak after budgeted serving");
+        (r, peak)
+    };
+
+    let (r0, unbounded_peak) = run(None, EvictionPolicyKind::QueryAware);
+    assert_eq!(r0.metrics.total_requests, 16);
+    assert!(unbounded_peak > 0);
+
+    let budget_mb = unbounded_peak as f64 * 0.5 / 1e6;
+    let (r1, _) = run(Some(budget_mb), EvictionPolicyKind::QueryAware);
+    assert_eq!(r1.metrics.total_requests, 16, "budgeted run must complete");
+    assert_eq!(
+        r1.metrics.budget_violations, 0,
+        "bytes_in_use exceeded the budget after a decode step"
+    );
+    assert!(
+        (r1.metrics.kv_bytes_peak as f64) <= budget_mb * 1e6,
+        "post-step peak {} above budget {}",
+        r1.metrics.kv_bytes_peak,
+        budget_mb * 1e6
+    );
+    assert!(
+        r1.metrics.total_demotions > 0,
+        "a 50% budget must force cold-tier demotions"
+    );
+    if r0.accuracy.is_finite() && r1.accuracy.is_finite() {
+        assert!(
+            (r0.accuracy - r1.accuracy).abs() <= 0.0101,
+            "accuracy drifted: unbounded {} vs budgeted {}",
+            r0.accuracy,
+            r1.accuracy
+        );
+    }
+
+    let (r2, _) = run(Some(budget_mb), EvictionPolicyKind::Lru);
+    assert!(
+        r1.metrics.residency_hit_rate.mean()
+            >= r2.metrics.residency_hit_rate.mean() - 1e-9,
+        "query-aware {} must match or beat LRU {}",
+        r1.metrics.residency_hit_rate.mean(),
+        r2.metrics.residency_hit_rate.mean()
+    );
 }
 
 #[test]

@@ -1,11 +1,12 @@
 //! Property-based tests (util::prop) on coordinator/kvcache invariants:
 //! allocator balance, snapshot isolation, top-k correctness, batcher
-//! conservation, session-store page accounting, f16 bounds.
+//! conservation, session-store page accounting, budgeted-store residency,
+//! f16 bounds.
 
 use tinyserve::config::KvDtype;
 use tinyserve::coordinator::batcher::{Batcher, BatcherConfig, QueuedItem, Round};
 use tinyserve::coordinator::session::SessionStore;
-use tinyserve::kvcache::{PagePool, SeqCache};
+use tinyserve::kvcache::{EvictionPolicyKind, PagePool, PageStore, SeqCache};
 use tinyserve::sparsity::top_k_indices;
 use tinyserve::util::prop::prop_check;
 
@@ -255,6 +256,176 @@ fn prop_session_store_page_accounting() {
             return Err(format!("{} pages leaked", pool.pages_in_use()));
         }
         pool.validate().map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn prop_store_budget_pinning_and_conservation() {
+    prop_check("store_budget_invariants", 60, |ctx| {
+        let mut pool = PagePool::new(2, 8, 4, KvDtype::F32);
+        let kind = *ctx
+            .rng
+            .choice(&[
+                EvictionPolicyKind::Lru,
+                EvictionPolicyKind::Clock,
+                EvictionPolicyKind::QueryAware,
+            ]);
+        let budget_pages = 3 + ctx.rng.usize(6);
+        let budget = budget_pages * pool.page_bytes();
+        let mut store = PageStore::new(Some(budget), kind);
+        // refs: one entry per outstanding reference (retain duplicates ids)
+        let mut refs: Vec<u32> = Vec::new();
+        let mut pinned_hot: Vec<u32> = Vec::new();
+        let n_ops = ctx.scaled(4, 120);
+        for _ in 0..n_ops {
+            match ctx.rng.usize(10) {
+                0..=3 => {
+                    let id = store.alloc(&mut pool);
+                    // fill the page completely so it is demotable
+                    for slot in 0..4 {
+                        for l in 0..2 {
+                            let v = ctx.rng.normal() as f32;
+                            pool.write_token(id, slot, l, &[v; 8], &[v; 8]);
+                        }
+                    }
+                    refs.push(id);
+                }
+                4 => {
+                    if !refs.is_empty() {
+                        let id = refs[ctx.rng.usize(refs.len())];
+                        pool.retain(id);
+                        refs.push(id);
+                    }
+                }
+                5..=6 => {
+                    if !refs.is_empty() {
+                        let i = ctx.rng.usize(refs.len());
+                        let id = refs.swap_remove(i);
+                        pool.release(id);
+                        if !refs.contains(&id) {
+                            pinned_hot.retain(|&p| p != id);
+                        }
+                    }
+                }
+                7 => {
+                    if !refs.is_empty() {
+                        let id = refs[ctx.rng.usize(refs.len())];
+                        if store.is_hot(id) {
+                            store.pin(id);
+                            if !pinned_hot.contains(&id) {
+                                pinned_hot.push(id);
+                            }
+                        }
+                    }
+                }
+                8 => {
+                    store.unpin_all();
+                    pinned_hot.clear();
+                }
+                _ => {
+                    if !refs.is_empty() {
+                        let id = refs[ctx.rng.usize(refs.len())];
+                        store.note_score(id, ctx.rng.normal() as f32);
+                    }
+                }
+            }
+            store.enforce_budget(&mut pool);
+            // 1. pages pinned while hot must stay hot
+            for &id in &pinned_hot {
+                if !store.is_hot(id) {
+                    return Err(format!("pinned page {id} left the hot tier"));
+                }
+            }
+            // 2. refcounts conserved: pool residency == live references
+            let mut distinct: Vec<u32> = refs.clone();
+            distinct.sort_unstable();
+            distinct.dedup();
+            if pool.pages_in_use() != distinct.len() {
+                return Err(format!(
+                    "in_use {} != distinct refs {}",
+                    pool.pages_in_use(),
+                    distinct.len()
+                ));
+            }
+            // 3. bytes within budget after enforcement, unless everything
+            //    evictable is already cold or pinned (recorded overflow)
+            let bytes = store.bytes_in_use(&pool);
+            if bytes > budget {
+                let demotable = distinct.iter().any(|&id| {
+                    store.is_hot(id) && !store.is_pinned(id) && pool.filled(id) == 4
+                });
+                if demotable {
+                    return Err(format!(
+                        "bytes {bytes} > budget {budget} with demotable pages left"
+                    ));
+                }
+            }
+        }
+        // drain: all references released -> store and pool empty
+        store.unpin_all();
+        for id in refs.drain(..) {
+            pool.release(id);
+        }
+        store.sync(&pool);
+        if pool.pages_in_use() != 0 || store.bytes_in_use(&pool) != 0 {
+            return Err("store/pool not empty after full release".into());
+        }
+        pool.validate().map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn prop_demote_promote_roundtrip_within_tolerance() {
+    prop_check("demote_roundtrip", 80, |ctx| {
+        let dt = *ctx.rng.choice(&[KvDtype::F32, KvDtype::F16]);
+        let mut pool = PagePool::new(1, 8, 4, dt);
+        let budget = pool.page_bytes(); // forces the second page cold
+        let mut store = PageStore::new(Some(budget), EvictionPolicyKind::Lru);
+        let a = store.alloc(&mut pool);
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for slot in 0..4 {
+            let row: Vec<f32> = (0..8).map(|_| (ctx.rng.normal() * 2.0) as f32).collect();
+            pool.write_token(a, slot, 0, &row, &row);
+            rows.push(row);
+        }
+        let b = store.alloc(&mut pool); // alloc demotes `a`
+        if !store.is_cold(a) {
+            store.enforce_budget(&mut pool);
+        }
+        if !store.is_cold(a) {
+            return Err("page a not demoted under one-page budget".into());
+        }
+        // q8 round-trip tolerance: per-row symmetric int8 keeps values
+        // within amax/100 (scale amax/127, error <= scale/2), plus the
+        // storage dtype's own quantum for f16 pools
+        for (slot, row) in rows.iter().enumerate() {
+            let amax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let got = pool.key_row(a, 0, slot);
+            for (x, y) in row.iter().zip(&got) {
+                let tol = amax / 100.0 + x.abs() / 1024.0 + 1e-6;
+                if (x - y).abs() > tol {
+                    return Err(format!("slot {slot}: {x} vs {y} (tol {tol})"));
+                }
+            }
+        }
+        // promotion restores the hot tier without further data change
+        let frozen: Vec<Vec<f32>> = (0..4).map(|s| pool.key_row(a, 0, s)).collect();
+        store.ensure_hot(&mut pool, a);
+        if !store.is_hot(a) {
+            return Err("promotion did not restore the hot tier".into());
+        }
+        for (s, f) in frozen.iter().enumerate() {
+            if pool.key_row(a, 0, s) != *f {
+                return Err("promotion changed page contents".into());
+            }
+        }
+        pool.release(a);
+        pool.release(b);
+        store.sync(&pool);
+        if store.bytes_in_use(&pool) != 0 {
+            return Err("bytes after release".into());
+        }
+        Ok(())
     });
 }
 

@@ -1,0 +1,176 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements exactly the surface this repository uses — `Error`,
+//! `Result`, the `Context` extension trait for `Result`/`Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros — so the crate builds without
+//! crates.io access. Semantics match anyhow where it matters here:
+//! `Display` shows the outermost context, `Debug` shows the full chain,
+//! and any `std::error::Error` converts via `?`.
+
+use std::fmt;
+
+/// String-backed error with a context chain (outermost last).
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), context: Vec::new() }
+    }
+
+    /// Wrap with an additional layer of context (most recent wins Display).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.context.push(c.to_string());
+        self
+    }
+
+    pub fn to_string_full(&self) -> String {
+        format!("{self:?}")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.last() {
+            Some(c) => write!(f, "{c}"),
+            None => write!(f, "{}", self.msg),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`, which makes
+// this blanket conversion legal (the same trick real anyhow uses).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "Condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        ensure!(flag);
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_context() {
+        assert_eq!(fails(true).unwrap(), 7);
+        let e = fails(false).unwrap_err();
+        assert_eq!(e.to_string(), "flag was false");
+
+        let r: Result<u32> = None.context("missing");
+        assert_eq!(r.unwrap_err().to_string(), "missing");
+
+        let r: Result<u32> = "no".parse::<u32>().context("parsing");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_string(), "parsing");
+        assert!(format!("{e:?}").starts_with("parsing: "));
+
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io_fail() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff, 0xfe])?;
+            Ok(s.to_string())
+        }
+        assert!(io_fail().is_err());
+    }
+}
