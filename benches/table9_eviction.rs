@@ -1,6 +1,6 @@
 //! Table 9 — memory-budgeted page store sweep: KV byte budget at
-//! {25, 50, 75, 100}% of the unbounded peak, across the three eviction
-//! policies (LRU, CLOCK, query-aware-cold). Reports residency hit rate,
+//! {25, 50, 75, 100}% of the unbounded peak, across the four eviction
+//! policies (LRU, CLOCK, query-aware-cold, SIEVE). Reports residency hit rate,
 //! demotions per generated token and exact-match accuracy delta against
 //! the unbounded baseline — the enforced-invariant version of the paper's
 //! ">2x KV memory savings" claim.

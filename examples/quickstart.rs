@@ -1,6 +1,6 @@
-//! Quickstart: load a model, prefill a prompt, stream a greedy generation,
-//! and print the per-step serving metrics the paper's instrumentation
-//! exposes (selected pages, gather bytes, attention entropy, KV hit rate).
+//! Quickstart: load a model and stream a generation through the
+//! request-lifecycle serving API — submit a request, pump the event loop,
+//! and watch tokens surface one by one as typed `ServeEvent`s.
 //!
 //! Run after `make artifacts && cargo build --release`:
 //!     cargo run --release --example quickstart
@@ -8,10 +8,11 @@
 use anyhow::Result;
 
 use tinyserve::config::ServingConfig;
-use tinyserve::engine::{Engine, Sampling};
-use tinyserve::metrics::StepMetrics;
+use tinyserve::coordinator::{Frontend, Lifecycle, ServeEvent, ServeOptions};
+use tinyserve::engine::Engine;
+use tinyserve::plugins::Pipeline;
 use tinyserve::util::rng::Rng;
-use tinyserve::workload::tasks;
+use tinyserve::workload::{tasks, Request};
 
 fn main() -> Result<()> {
     // 1. serving configuration: paper defaults (S=16, query-aware policy)
@@ -38,52 +39,72 @@ fn main() -> Result<()> {
     println!("\nprompt tail: ...{:?}", &doc.prompt[doc.prompt.len() - 60..]);
     println!("expected answer: {:?}\n", doc.answer);
 
-    let mut seq = engine.new_sequence();
-    seq.tokens = tasks::encode_prompt(&doc.prompt);
-    seq.max_new_tokens = 8;
+    // 4. frontend = virtual clock + batcher + router + sessions over the
+    //    engine; submit returns immediately with a handle
+    let mut plugins = Pipeline::new();
+    let mut fe = Frontend::builder()
+        .options(ServeOptions::default())
+        .build(&mut engine, &mut plugins);
+    let handle = fe.submit(Request {
+        id: 0,
+        arrival_s: 0.0,
+        prompt: tasks::encode_prompt(&doc.prompt),
+        max_new_tokens: 8,
+        session: None,
+        task: None,
+        answer: Some(doc.answer.clone()),
+        deadline_ms: None,
+    });
 
-    // 4. prefill (chunked artifact path), then decode token by token
-    let mut m = StepMetrics::default();
-    engine.prefill(&mut seq, &mut m)?;
-    println!(
-        "prefill: {} tokens, {} pages, {:.1} ms",
-        seq.cache.pos,
-        seq.cache.n_pages(),
-        m.step_seconds * 1e3
-    );
-
-    let mut rng = Rng::new(42);
-    while !seq.finished {
-        let mut m = StepMetrics::default();
-        let out = {
-            let mut batch = [&mut seq];
-            engine.decode_step(&mut batch, Sampling::Greedy, &mut rng, &mut m)?
-        };
-        let tok = out[0].token;
-        println!(
-            "step {:2}  token {:>4} {:?}  {:5.1} ms  pages {:2}/{:2}  hit {:4.0}%  \
-             gather {:6.1} KB  entropy {:.2}",
-            seq.generated,
-            tok,
-            tasks::decode_ids(&[tok]),
-            m.step_seconds * 1e3,
-            m.pages_selected / engine.n_layer,
-            seq.cache.n_pages(),
-            m.hit_rate() * 100.0,
-            m.gather_bytes as f64 / 1e3,
-            m.entropy,
-        );
+    // 5. pump the event loop: each step yields typed events, and tokens
+    //    stream incrementally instead of arriving as one final report
+    let mut generated = String::new();
+    while fe.has_work() {
+        for ev in fe.step()? {
+            match ev {
+                ServeEvent::Admitted { id, t } => {
+                    println!("[{t:7.3}s] request {id} admitted, prefilling");
+                }
+                ServeEvent::Token { id, tok, t } => {
+                    let piece = tasks::decode_ids(&[tok]);
+                    generated.push_str(&piece);
+                    println!(
+                        "[{t:7.3}s] request {id} token {tok:>4} {piece:?}  \
+                         ({} KV pages resident)",
+                        fe.engine().pool.pages_in_use()
+                    );
+                }
+                ServeEvent::Finished(rec) => {
+                    println!(
+                        "[{:7.3}s] request {} finished: {} new tokens, \
+                         ttft {:.1} ms, e2e {:.1} ms",
+                        rec.e2e_seconds,
+                        rec.id,
+                        rec.new_tokens,
+                        rec.ttft_seconds * 1e3,
+                        rec.e2e_seconds * 1e3
+                    );
+                }
+                other => println!("event: {other:?}"),
+            }
+        }
     }
+    assert_eq!(fe.state_of(handle.id), Some(Lifecycle::Finished));
+    let report = fe.into_report();
 
-    let generated = tasks::decode_ids(seq.generated_tokens());
     println!("\ngenerated: {generated:?}");
     println!(
         "exact match: {}",
         if tasks::answer_matches(&doc, &generated) { "YES" } else { "no" }
     );
-    engine.release(&mut seq);
+    println!(
+        "throughput {:.1} tok/s over {:.2} s virtual ({:.1} ms/token decode)",
+        report.metrics.throughput_tps(),
+        report.wall_s,
+        report.metrics.ms_per_token()
+    );
 
-    // 5. runtime counters (the instrumentation layer)
+    // 6. runtime counters (the instrumentation layer)
     let s = engine.rt.stats();
     println!(
         "\nruntime: {} executions, {:.1} MB h2d, {:.1} MB d2h, {:.1} ms exec",

@@ -1,16 +1,23 @@
 //! END-TO-END DRIVER (EXPERIMENTS.md §E2E): serve a realistic multi-user
-//! Poisson workload against the trained tiny model through the full stack —
-//! router -> continuous batcher -> session store -> query-aware engine ->
-//! PJRT executables — and report latency percentiles, throughput and
-//! exact-match accuracy.
+//! Poisson workload through the request-lifecycle API — router ->
+//! continuous batcher -> session store -> query-aware engine -> PJRT
+//! executables — with the lifecycle features the monolithic `serve_trace`
+//! loop could not express:
+//!
+//!   * tokens stream incrementally as `ServeEvent::Token`s;
+//!   * one request is cancelled mid-stream and its KV pages provably
+//!     return to the pool (`bytes_in_use` drops at the cancel point);
+//!   * `--deadline-ms D` puts an SLO on every 4th request, and the
+//!     frontend sheds/aborts the ones that miss it.
 //!
 //!     cargo run --release --example serve_multiuser -- \
-//!         --requests 64 --policy tinyserve --budget 256 --batch 4
+//!         --requests 64 --policy tinyserve --budget 256 --batch 4 \
+//!         --cancel-after 3 --deadline-ms 0
 
 use anyhow::Result;
 
 use tinyserve::config::ServingConfig;
-use tinyserve::coordinator::{serve_trace, ServeOptions};
+use tinyserve::coordinator::{Frontend, Lifecycle, ServeEvent, ServeOptions};
 use tinyserve::engine::Engine;
 use tinyserve::plugins::{EntropyEarlyExit, Pipeline, RepetitionGuard};
 use tinyserve::report::Table;
@@ -20,8 +27,17 @@ use tinyserve::workload::{generate_trace, TraceConfig};
 
 fn main() -> Result<()> {
     let args = Args::parse();
-    let policy = PolicyKind::parse(&args.str_or("policy", "tinyserve"))
-        .expect("bad --policy");
+    let policy_arg = args.str_or("policy", "tinyserve");
+    let policy = match PolicyKind::parse(&policy_arg) {
+        Some(p) => p,
+        None => {
+            eprintln!(
+                "unknown --policy '{policy_arg}'; valid: {}",
+                PolicyKind::names().join("|")
+            );
+            std::process::exit(2);
+        }
+    };
     let cfg = ServingConfig {
         model: args.str_or("model", "tiny-trained"),
         policy,
@@ -45,7 +61,29 @@ fn main() -> Result<()> {
     );
     let mut engine = Engine::new(&tinyserve::artifacts_dir(), cfg)?;
     engine.warmup()?;
-    let trace = generate_trace(&trace_cfg);
+    let mut trace = generate_trace(&trace_cfg);
+
+    // optional SLO: every 4th request must finish within --deadline-ms
+    let deadline_ms = args.f64_or("deadline-ms", 0.0);
+    if deadline_ms > 0.0 {
+        for req in trace.iter_mut().filter(|r| r.id % 4 == 0) {
+            req.deadline_ms = Some(deadline_ms);
+        }
+    }
+    // pick a session-free, deadline-free request to cancel after
+    // `cancel_after` streamed tokens (session-free so every one of its
+    // pages is exclusively owned and the byte drop is unambiguous;
+    // deadline-free so expiry cannot race the cancellation)
+    let cancel_after = args.usize_or("cancel-after", 3).max(1);
+    let victim: Option<u64> = trace
+        .iter()
+        .find(|r| {
+            r.session.is_none()
+                && r.deadline_ms.is_none()
+                && r.max_new_tokens > cancel_after + 2
+        })
+        .map(|r| r.id);
+
     let opts = ServeOptions {
         n_workers: args.usize_or("workers", 4),
         collect_traces: true,
@@ -56,13 +94,68 @@ fn main() -> Result<()> {
     plugins.push(Box::new(RepetitionGuard { max_run: 16 }));
 
     let t0 = std::time::Instant::now();
-    let r = serve_trace(&mut engine, &trace, &opts, &mut plugins)?;
+    let mut fe = Frontend::builder().options(opts).build(&mut engine, &mut plugins);
+    for req in trace {
+        fe.submit(req);
+    }
+
+    // pump the event loop, cancelling the victim mid-stream
+    let mut victim_tokens = 0usize;
+    let mut cancel_bytes: Option<(usize, usize)> = None;
+    while fe.has_work() {
+        for ev in fe.step()? {
+            match ev {
+                ServeEvent::Token { id, .. } if Some(id) == victim => {
+                    victim_tokens += 1;
+                    if victim_tokens == cancel_after {
+                        let before =
+                            fe.engine().store.bytes_in_use(&fe.engine().pool);
+                        assert!(fe.cancel(id), "victim cancellable mid-stream");
+                        let after =
+                            fe.engine().store.bytes_in_use(&fe.engine().pool);
+                        assert!(
+                            after < before,
+                            "cancellation must return KV pages to the pool \
+                             ({after} !< {before})"
+                        );
+                        cancel_bytes = Some((before, after));
+                    }
+                }
+                ServeEvent::DeadlineExpired { id, t } => {
+                    println!("request {id} missed its deadline at {t:.2} s");
+                }
+                _ => {}
+            }
+        }
+    }
+    if let Some(id) = victim {
+        match cancel_bytes {
+            Some((before, after)) => {
+                assert_eq!(fe.state_of(id), Some(Lifecycle::Cancelled));
+                println!(
+                    "cancelled request {id} after {victim_tokens} tokens: KV bytes \
+                     {before} -> {after} ({} freed)",
+                    before - after
+                );
+            }
+            // only reachable with a large --cancel-after: a plugin (e.g.
+            // entropy early-exit) can finish the victim first
+            None => println!(
+                "request {id} finished before the --cancel-after {cancel_after} \
+                 trigger; rerun with a smaller value to see mid-stream \
+                 cancellation"
+            ),
+        }
+    }
+    let r = fe.into_report();
     let real = t0.elapsed().as_secs_f64();
     let mut m = r.metrics;
 
     let mut t = Table::new("serve_multiuser report", &["metric", "value"]);
     let rows: Vec<(&str, String)> = vec![
         ("requests completed", format!("{}", m.total_requests)),
+        ("cancelled", format!("{}", m.total_cancelled)),
+        ("deadline expired", format!("{}", m.total_expired)),
         ("virtual wall clock", format!("{:.2} s", r.wall_s)),
         ("real compute time", format!("{real:.2} s")),
         ("engine busy", format!("{:.0} %", r.busy_frac * 100.0)),
@@ -72,6 +165,7 @@ fn main() -> Result<()> {
         ("e2e latency p50", format!("{:.0} ms", m.request_e2e.p50() * 1e3)),
         ("e2e latency p99", format!("{:.0} ms", m.request_e2e.p99() * 1e3)),
         ("ttft p50", format!("{:.0} ms", m.request_ttft.p50() * 1e3)),
+        ("ttft p99", format!("{:.0} ms", m.request_ttft.p99() * 1e3)),
         ("kv page hit rate", format!("{:.1} %", m.hit_rate.mean() * 100.0)),
         ("exact-match accuracy", format!("{:.1} %", r.accuracy * 100.0)),
         ("char accuracy", format!("{:.1} %", r.char_accuracy * 100.0)),

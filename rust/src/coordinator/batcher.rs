@@ -37,6 +37,8 @@ pub struct BatcherStats {
     pub max_queue_depth: usize,
     /// admissions bounced back by KV-budget pressure (requeue_front)
     pub deferred: u64,
+    /// queued items removed before admission (frontend cancellation)
+    pub cancelled: u64,
 }
 
 /// Decision for one scheduling round.
@@ -89,6 +91,29 @@ impl Batcher {
         });
         self.queue.push_front(item);
         self.hold_admissions = true;
+    }
+
+    /// Undo the accounting for an item `schedule` handed out that never
+    /// started (shed past its deadline, or cancelled between pop and
+    /// prefill): it no longer occupies an active slot and must not count
+    /// as admitted.
+    pub fn abort_admission(&mut self, n: usize) {
+        self.active -= n;
+        self.stats.admitted -= n as u64;
+    }
+
+    /// Remove a queued item by request index (cancellation before
+    /// admission). The item never counted as admitted, so only the queue
+    /// and the timeout anchor need fixing. Returns false when absent.
+    pub fn remove(&mut self, request_idx: usize) -> bool {
+        let before = self.queue.len();
+        self.queue.retain(|i| i.request_idx != request_idx);
+        if self.queue.len() == before {
+            return false;
+        }
+        self.stats.cancelled += 1;
+        self.oldest_wait = self.queue.front().map(|i| i.arrival_s);
+        true
     }
 
     pub fn enqueue(&mut self, item: QueuedItem) {
@@ -263,6 +288,52 @@ mod tests {
             r => panic!("{r:?}"),
         }
         assert_eq!(b.stats.admitted, 2);
+    }
+
+    #[test]
+    fn abort_admission_undoes_accounting() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_active: 4,
+            batch_timeout_s: 0.0,
+            prefill_per_round: 2,
+        });
+        b.enqueue(item(0, 0.0));
+        b.enqueue(item(1, 0.0));
+        match b.schedule(0.1, None) {
+            Round::Admit(v) => assert_eq!(v.len(), 2),
+            r => panic!("{r:?}"),
+        }
+        // one item is shed past its deadline before prefill starts
+        b.abort_admission(1);
+        assert_eq!(b.active(), 1);
+        assert_eq!(b.stats.admitted, 1, "shed item must not count as admitted");
+        b.on_finished(1);
+        assert_eq!(b.active(), 0);
+    }
+
+    #[test]
+    fn remove_drops_queued_item_and_fixes_timeout_anchor() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_active: 4,
+            batch_timeout_s: 0.05,
+            prefill_per_round: 4,
+        });
+        b.enqueue(item(0, 0.0));
+        b.enqueue(item(1, 0.02));
+        assert!(b.remove(0));
+        assert_eq!(b.queue_len(), 1);
+        assert_eq!(b.stats.cancelled, 1);
+        assert!(!b.remove(0), "already gone");
+        // the timeout anchor moved to the surviving item's arrival: at
+        // t=0.05 item 0's timeout would have expired, item 1's has not
+        match b.schedule(0.05, Some(1.0)) {
+            Round::Idle(t) => assert!((t - 0.07).abs() < 1e-9, "wake at {t}"),
+            r => panic!("expected idle, got {r:?}"),
+        }
+        // removing the last item empties the queue entirely
+        assert!(b.remove(1));
+        assert_eq!(b.queue_len(), 0);
+        assert_eq!(b.schedule(0.06, None), Round::Idle(f64::INFINITY));
     }
 
     #[test]

@@ -1,0 +1,737 @@
+//! Request-lifecycle serving frontend: the event-driven replacement for the
+//! monolithic `serve_trace` batch call.
+//!
+//! A `Frontend` owns the discrete-event virtual `Clock` and the coordinator
+//! stack (batcher, router, session store) over a mutably borrowed `Engine`.
+//! Callers drive it with per-request operations instead of a pre-materialized
+//! trace:
+//!
+//! ```text
+//! let mut fe = Frontend::builder().options(opts).build(&mut engine, &mut plugins);
+//! let h = fe.submit(request);          // -> RequestHandle
+//! while fe.has_work() {
+//!     for ev in fe.step()? {           // typed ServeEvents
+//!         match ev {
+//!             ServeEvent::Token { id, tok, .. } => stream(id, tok),
+//!             ServeEvent::Finished(rec) => done(rec),
+//!             _ => {}
+//!         }
+//!     }
+//!     if too_slow { fe.cancel(h.id); } // mid-stream cancellation
+//! }
+//! let report = fe.into_report();
+//! ```
+//!
+//! Lifecycle: `Pending` (submitted, arrival in the virtual future) ->
+//! `Queued` (in the batcher) -> `Active` (prefilled, decoding) -> one of
+//! `Finished` / `Cancelled` / `DeadlineExpired`. Cancellation and deadline
+//! expiry release the sequence's KV pages back through the `PageStore`
+//! mid-flight: pins are cleared, refcounts drop, and `bytes_in_use` falls
+//! immediately — admission pressure relaxes without waiting for the request
+//! to run to completion.
+//!
+//! The deprecated `serve_trace` shim (`coordinator::server`) is exactly
+//! "submit everything, drain, report", so trace-driven benches keep their
+//! seed-identical behaviour while live callers get streaming, cancellation
+//! and SLO-aware admission.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::Result;
+
+use crate::engine::{Engine, Sequence};
+use crate::metrics::{RequestRecord, ServerMetrics, StepMetrics};
+use crate::plugins::{Pipeline, PluginAction, StepView};
+use crate::util::rng::Rng;
+use crate::workload::{tasks, Request};
+
+use super::batcher::{Batcher, BatcherConfig, QueuedItem, Round};
+use super::router::Router;
+use super::server::{ServeOptions, ServeReport};
+use super::session::SessionStore;
+
+/// Discrete-event virtual clock. Arrivals advance it to their timestamps;
+/// every compute quantum (prefill, decode step, simulated spill/migration)
+/// advances it by measured or modelled duration — so latency percentiles
+/// are honest on a single-core box that cannot sleep out real gaps.
+#[derive(Debug, Clone, Default)]
+pub struct Clock {
+    now: f64,
+}
+
+impl Clock {
+    pub fn new() -> Clock {
+        Clock { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by a duration (compute happened).
+    pub fn advance(&mut self, dt: f64) {
+        self.now += dt;
+    }
+
+    /// Jump forward to an absolute time (idle until an arrival/timeout).
+    /// Never moves backwards.
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+/// Opaque per-request handle returned by `Frontend::submit`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestHandle {
+    pub id: u64,
+}
+
+/// Where a submitted request is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// submitted; virtual arrival time not reached yet
+    Pending,
+    /// waiting in the batcher's admission queue
+    Queued,
+    /// prefilled and decoding
+    Active,
+    Finished,
+    Cancelled,
+    /// shed or aborted because `deadline_ms` elapsed
+    Expired,
+}
+
+impl Lifecycle {
+    /// Terminal states never transition again (events fire exactly once).
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            Lifecycle::Finished | Lifecycle::Cancelled | Lifecycle::Expired
+        )
+    }
+}
+
+/// Typed event stream produced by the pump. Times are virtual seconds.
+#[derive(Debug, Clone)]
+pub enum ServeEvent {
+    /// request left the queue and its prompt is being prefilled
+    Admitted { id: u64, t: f64 },
+    /// admission bounced by KV-budget pressure; the request stays queued
+    Deferred { id: u64, t: f64 },
+    /// one decoded token surfaced (incremental streaming)
+    Token { id: u64, tok: i32, t: f64 },
+    /// request ran to completion; full timeline attached
+    Finished(RequestRecord),
+    /// request cancelled by the caller (any pre-terminal state)
+    Cancelled { id: u64, t: f64 },
+    /// request shed at admission or aborted mid-decode past its deadline
+    DeadlineExpired { id: u64, t: f64 },
+}
+
+impl ServeEvent {
+    /// The request this event belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            ServeEvent::Admitted { id, .. }
+            | ServeEvent::Deferred { id, .. }
+            | ServeEvent::Token { id, .. }
+            | ServeEvent::Cancelled { id, .. }
+            | ServeEvent::DeadlineExpired { id, .. } => *id,
+            ServeEvent::Finished(rec) => rec.id,
+        }
+    }
+}
+
+/// Builder for `Frontend` (serving config lives in the engine; coordination
+/// behaviour in `ServeOptions`).
+#[derive(Default)]
+pub struct FrontendBuilder {
+    opts: ServeOptions,
+}
+
+impl FrontendBuilder {
+    pub fn options(mut self, opts: ServeOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    pub fn build<'a>(
+        self,
+        engine: &'a mut Engine,
+        plugins: &'a mut Pipeline,
+    ) -> Frontend<'a> {
+        Frontend::new(engine, self.opts, plugins)
+    }
+}
+
+struct Active {
+    seq: Sequence,
+    req_idx: usize,
+    admitted_s: f64,
+    prefill_s: f64,
+    first_token_s: Option<f64>,
+    reused_tokens: usize,
+    worker: usize,
+}
+
+/// The request-lifecycle serving frontend (see module docs).
+pub struct Frontend<'a> {
+    engine: &'a mut Engine,
+    plugins: &'a mut Pipeline,
+    opts: ServeOptions,
+    clock: Clock,
+    rng: Rng,
+    batcher: Batcher,
+    sessions: SessionStore,
+    router: Router,
+    metrics: ServerMetrics,
+    records: Vec<RequestRecord>,
+    active: Vec<Active>,
+    /// every submitted request, indexed by submission order
+    reqs: Vec<Request>,
+    state: Vec<Lifecycle>,
+    id_to_idx: HashMap<u64, usize>,
+    /// submitted-but-not-yet-arrived indices, ascending by arrival time
+    /// (stable for ties, so trace order is preserved); in-order
+    /// submission — the trace shim — inserts and drains at O(1)
+    pending: VecDeque<usize>,
+    events: VecDeque<ServeEvent>,
+    busy: f64,
+    per_task: HashMap<&'static str, (f64, f64, usize)>,
+    exact_hits: usize,
+    char_acc_sum: f64,
+    scored: usize,
+}
+
+impl<'a> Frontend<'a> {
+    pub fn builder() -> FrontendBuilder {
+        FrontendBuilder::default()
+    }
+
+    pub fn new(
+        engine: &'a mut Engine,
+        opts: ServeOptions,
+        plugins: &'a mut Pipeline,
+    ) -> Frontend<'a> {
+        let batcher = Batcher::new(BatcherConfig {
+            max_active: opts.batcher.max_active.min(engine.cfg.max_active),
+            ..opts.batcher.clone()
+        });
+        let metrics = ServerMetrics::new(opts.collect_traces);
+        let rng = Rng::new(opts.seed);
+        let sessions = SessionStore::new(opts.max_sessions);
+        let router = Router::new(opts.n_workers);
+        Frontend {
+            engine,
+            plugins,
+            opts,
+            clock: Clock::new(),
+            rng,
+            batcher,
+            sessions,
+            router,
+            metrics,
+            records: Vec::new(),
+            active: Vec::new(),
+            reqs: Vec::new(),
+            state: Vec::new(),
+            id_to_idx: HashMap::new(),
+            pending: VecDeque::new(),
+            events: VecDeque::new(),
+            busy: 0.0,
+            per_task: HashMap::new(),
+            exact_hits: 0,
+            char_acc_sum: 0.0,
+            scored: 0,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Read-only view of the underlying engine (pool/store introspection:
+    /// `fe.engine().store.bytes_in_use(&fe.engine().pool)`).
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+
+    /// Run-level metrics accumulated so far.
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.metrics
+    }
+
+    /// Lifecycle state of a submitted request, if known.
+    pub fn state_of(&self, id: u64) -> Option<Lifecycle> {
+        self.id_to_idx.get(&id).map(|&i| self.state[i])
+    }
+
+    /// Anything left to pump? (pending arrivals, queued or active requests,
+    /// or undelivered events)
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty()
+            || self.batcher.queue_len() > 0
+            || !self.active.is_empty()
+            || !self.events.is_empty()
+    }
+
+    /// Submit a request. Its `arrival_s` is interpreted on the frontend's
+    /// virtual clock; times already in the past become eligible at the next
+    /// `step`. Re-submitting an id replaces the handle mapping (last wins).
+    pub fn submit(&mut self, req: Request) -> RequestHandle {
+        let idx = self.reqs.len();
+        let id = req.id;
+        let arrival = req.arrival_s;
+        self.reqs.push(req);
+        self.state.push(Lifecycle::Pending);
+        self.id_to_idx.insert(id, idx);
+        // binary-search insert, `<=` so equal arrivals keep submit order;
+        // in-order submission lands at the back in O(log n)
+        let pos = {
+            let reqs = &self.reqs;
+            self.pending.partition_point(|&p| reqs[p].arrival_s <= arrival)
+        };
+        self.pending.insert(pos, idx);
+        RequestHandle { id }
+    }
+
+    /// Cancel a request in any pre-terminal state. Queued requests leave
+    /// the admission queue immediately; active ones abort mid-decode and
+    /// their KV pages return to the pool (pins cleared, `bytes_in_use`
+    /// drops). Returns false for unknown ids and already-terminal requests.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        let Some(&idx) = self.id_to_idx.get(&id) else {
+            return false;
+        };
+        let now = self.clock.now();
+        match self.state[idx] {
+            Lifecycle::Pending => {
+                self.pending.retain(|&p| p != idx);
+            }
+            Lifecycle::Queued => {
+                self.batcher.remove(idx);
+            }
+            Lifecycle::Active => {
+                let Some(pos) = self.active.iter().position(|a| a.req_idx == idx)
+                else {
+                    return false;
+                };
+                self.abort_active(pos);
+            }
+            Lifecycle::Finished | Lifecycle::Cancelled | Lifecycle::Expired => {
+                return false;
+            }
+        }
+        self.state[idx] = Lifecycle::Cancelled;
+        self.metrics.on_cancelled();
+        self.events.push_back(ServeEvent::Cancelled { id, t: now });
+        true
+    }
+
+    /// One scheduling round of the event pump: pull due arrivals, ask the
+    /// batcher for a decision, run it (admit/prefill, decode, or idle-jump
+    /// the clock), and return the events produced. An empty vec with
+    /// `has_work() == false` means the frontend is drained.
+    pub fn step(&mut self) -> Result<Vec<ServeEvent>> {
+        self.pump_round()?;
+        Ok(self.events.drain(..).collect())
+    }
+
+    /// Pump until no work remains, returning every event in order.
+    pub fn drain(&mut self) -> Result<Vec<ServeEvent>> {
+        let mut out = Vec::new();
+        loop {
+            out.extend(self.events.drain(..));
+            if !self.has_work() {
+                return Ok(out);
+            }
+            self.pump_round()?;
+        }
+    }
+
+    /// Consume the frontend into the run report (the `serve_trace` output
+    /// shape). Clears surviving session snapshots back into the pool.
+    pub fn into_report(mut self) -> ServeReport {
+        self.metrics.run_seconds = self.clock.now();
+        self.sessions.clear(&mut self.engine.pool);
+        let mut per_task_out: Vec<(String, f64, usize)> = self
+            .per_task
+            .into_iter()
+            .map(|(k, (hits, _ca, n))| (k.to_string(), hits / n.max(1) as f64, n))
+            .collect();
+        per_task_out.sort_by(|a, b| a.0.cmp(&b.0));
+        let now = self.clock.now();
+        ServeReport {
+            accuracy: if self.scored > 0 {
+                self.exact_hits as f64 / self.scored as f64
+            } else {
+                f64::NAN
+            },
+            char_accuracy: if self.scored > 0 {
+                self.char_acc_sum / self.scored as f64
+            } else {
+                f64::NAN
+            },
+            per_task: per_task_out,
+            session_stats: self.sessions.stats.clone(),
+            router_stats: self.router.stats.clone(),
+            batcher_stats: std::mem::take(&mut self.batcher.stats),
+            metrics: self.metrics,
+            requests: self.records,
+            wall_s: now,
+            busy_frac: if now > 0.0 { self.busy / now } else { 0.0 },
+        }
+    }
+
+    // ---- internal pump ----
+
+    fn pump_round(&mut self) -> Result<()> {
+        let now = self.clock.now();
+        // pull arrivals that have happened
+        while let Some(&idx) = self.pending.front() {
+            if self.reqs[idx].arrival_s > now {
+                break;
+            }
+            self.pending.pop_front();
+            self.state[idx] = Lifecycle::Queued;
+            self.batcher.enqueue(QueuedItem {
+                request_idx: idx,
+                arrival_s: self.reqs[idx].arrival_s,
+                prompt_len: self.reqs[idx].prompt.len(),
+            });
+        }
+        let next_arrival = self.pending.front().map(|&i| self.reqs[i].arrival_s);
+        if self.pending.is_empty()
+            && self.batcher.queue_len() == 0
+            && self.active.is_empty()
+        {
+            return Ok(());
+        }
+        match self.batcher.schedule(now, next_arrival) {
+            Round::Idle(t) => {
+                if t.is_finite() {
+                    self.clock.advance_to(t);
+                }
+            }
+            Round::Admit(items) => self.admit_round(items)?,
+            Round::Decode => self.decode_round()?,
+        }
+        Ok(())
+    }
+
+    /// True when `idx` carries a deadline that has already elapsed.
+    fn deadline_passed(&self, idx: usize) -> bool {
+        match self.reqs[idx].deadline_ms {
+            Some(d) => self.clock.now() > self.reqs[idx].arrival_s + d / 1e3,
+            None => false,
+        }
+    }
+
+    fn admit_round(&mut self, items: Vec<QueuedItem>) -> Result<()> {
+        let mut deferred: Vec<QueuedItem> = Vec::new();
+        for item in items {
+            let idx = item.request_idx;
+            // authoritative state guard: a cancelled item normally leaves
+            // the queue via Batcher::remove, but never trust stragglers
+            if self.state[idx] != Lifecycle::Queued {
+                self.batcher.abort_admission(1);
+                continue;
+            }
+            // SLO-aware shedding: starting a request past its deadline
+            // wastes prefill + decode on an answer nobody will take
+            if self.deadline_passed(idx) {
+                self.batcher.abort_admission(1);
+                self.state[idx] = Lifecycle::Expired;
+                self.metrics.on_expired();
+                self.events.push_back(ServeEvent::DeadlineExpired {
+                    id: self.reqs[idx].id,
+                    t: self.clock.now(),
+                });
+                continue;
+            }
+            // KV-budget admission control: shed idle session snapshots
+            // first; if the prompt still cannot fit, defer while in-flight
+            // work can retire and free pages. Once one item defers, later
+            // ones follow to keep FIFO order.
+            if !deferred.is_empty() {
+                self.events.push_back(ServeEvent::Deferred {
+                    id: self.reqs[idx].id,
+                    t: self.clock.now(),
+                });
+                deferred.push(item);
+                continue;
+            }
+            let prompt_len = self.reqs[idx].prompt.len();
+            let session = self.reqs[idx].session;
+            if !self.engine.kv_admission_ok(prompt_len) {
+                while !self.engine.kv_admission_ok(prompt_len)
+                    && self.sessions.evict_one_lru(&mut self.engine.pool, session)
+                {}
+            }
+            if !self.engine.kv_admission_ok(prompt_len) && !self.active.is_empty() {
+                self.events.push_back(ServeEvent::Deferred {
+                    id: self.reqs[idx].id,
+                    t: self.clock.now(),
+                });
+                deferred.push(item);
+                continue;
+            }
+            let mut seq = self.engine.new_sequence();
+            seq.max_new_tokens = self.reqs[idx].max_new_tokens;
+            // session reuse: restore the stored prompt prefix
+            let mut reused = 0usize;
+            let pinned = session.and_then(|s| self.sessions.worker_of(s));
+            let decision = self.router.route(pinned);
+            if let Some(sid) = session {
+                if decision.migrate_from.is_some() {
+                    let bytes =
+                        self.sessions.migrate(sid, decision.worker, &self.engine.pool);
+                    // migration transit at ~200 GB/s NVLink-class
+                    self.clock.advance(bytes as f64 / 200e9);
+                }
+                if let Some((cache, n)) = self.sessions.try_reuse(
+                    sid,
+                    &self.reqs[idx].prompt,
+                    &mut self.engine.pool,
+                ) {
+                    seq.cache = cache;
+                    reused = n;
+                }
+            }
+            seq.tokens = self.reqs[idx].prompt.clone();
+            self.events.push_back(ServeEvent::Admitted {
+                id: self.reqs[idx].id,
+                t: self.clock.now(),
+            });
+            // prefill the (remaining) prompt, measured
+            let mut m = StepMetrics::default();
+            let t0 = std::time::Instant::now();
+            if self.opts.artifact_prefill
+                && self.engine.rt.info.find_artifact("prefill", 1, None).is_ok()
+            {
+                self.engine.prefill(&mut seq, &mut m)?;
+            } else {
+                self.engine.prefill_stepwise(&mut seq, &mut m)?;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            self.clock.advance(dt);
+            self.busy += dt;
+            // snapshot the prompt prefix for future session turns
+            if let Some(sid) = session {
+                let covered = seq.cache.pos;
+                self.sessions.store(
+                    sid,
+                    &seq.cache,
+                    &self.reqs[idx].prompt[..covered],
+                    decision.worker,
+                    &mut self.engine.pool,
+                );
+            }
+            // prefill/snapshot allocations bypass the decode path; demote
+            // back under the budget before decoding resumes
+            self.engine.enforce_kv_budget();
+            self.state[idx] = Lifecycle::Active;
+            self.active.push(Active {
+                seq,
+                req_idx: idx,
+                admitted_s: item.arrival_s,
+                prefill_s: dt,
+                first_token_s: None,
+                reused_tokens: reused,
+                worker: decision.worker,
+            });
+        }
+        // front of the queue must stay FIFO: requeue in reverse
+        for item in deferred.into_iter().rev() {
+            self.batcher.requeue_front(item);
+        }
+        Ok(())
+    }
+
+    /// Tear down an active request that will not complete (cancellation
+    /// or deadline expiry): drop it from the active set, give back its
+    /// worker and batcher slot, and release its KV pages mid-flight. The
+    /// caller records the terminal state, counter, and event.
+    fn abort_active(&mut self, pos: usize) {
+        let mut a = self.active.swap_remove(pos);
+        self.router.complete(a.worker);
+        self.batcher.on_finished(1);
+        self.engine.release_mid_flight(&mut a.seq);
+        self.plugins.reset();
+    }
+
+    /// Abort active sequences whose deadline elapsed, releasing their KV
+    /// pages mid-flight. Terminal-state transitions guarantee the
+    /// `DeadlineExpired` event fires exactly once per request.
+    fn expire_active(&mut self) {
+        let now = self.clock.now();
+        let mut i = 0;
+        while i < self.active.len() {
+            let idx = self.active[i].req_idx;
+            if self.deadline_passed(idx) {
+                self.abort_active(i);
+                self.state[idx] = Lifecycle::Expired;
+                self.metrics.on_expired();
+                self.events.push_back(ServeEvent::DeadlineExpired {
+                    id: self.reqs[idx].id,
+                    t: now,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn decode_round(&mut self) -> Result<()> {
+        // deadlines are checked at round granularity: abort before burning
+        // a decode step on sequences that already missed their SLO
+        self.expire_active();
+        if self.active.is_empty() {
+            return Ok(());
+        }
+        let b = self.engine.max_batch().min(self.active.len());
+        let mut m = StepMetrics::default();
+        let outs = {
+            let mut batch: Vec<&mut Active> = self.active.iter_mut().take(b).collect();
+            let mut seqs: Vec<&mut Sequence> =
+                batch.iter_mut().map(|a| &mut a.seq).collect();
+            self.engine
+                .decode_step(&mut seqs, self.opts.sampling, &mut self.rng, &mut m)?
+        };
+        // spill_seconds is the simulated cold-tier transfer cost of the
+        // budgeted store (hwmodel-priced, not wall time)
+        self.clock.advance(m.step_seconds + m.spill_seconds);
+        self.busy += m.step_seconds + m.spill_seconds;
+        self.metrics.on_step(&m);
+        let now = self.clock.now();
+        // token events + plugins + first-token bookkeeping
+        for (a, o) in self.active.iter_mut().take(b).zip(outs.iter()) {
+            if a.first_token_s.is_none() {
+                a.first_token_s = Some(now);
+                self.metrics
+                    .on_first_token(now - self.reqs[a.req_idx].arrival_s);
+            }
+            self.events.push_back(ServeEvent::Token {
+                id: self.reqs[a.req_idx].id,
+                tok: o.token,
+                t: now,
+            });
+            let action = if self.plugins.is_empty() {
+                PluginAction::Continue
+            } else {
+                self.plugins.on_step(&StepView {
+                    seq: &a.seq,
+                    sample: o,
+                    attn_entropy: a.seq.last_entropy,
+                    pool: &self.engine.pool,
+                })
+            };
+            match action {
+                PluginAction::Stop => a.seq.finished = true,
+                // routed through the page store: the eviction policy's
+                // rank picks the victim, not table order
+                PluginAction::PruneColdest => self.engine.prune_coldest(&mut a.seq),
+                PluginAction::Continue => {}
+            }
+        }
+        // retire finished sequences
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].seq.finished {
+                let mut a = self.active.swap_remove(i);
+                let idx = a.req_idx;
+                let gen = tasks::decode_ids(a.seq.generated_tokens());
+                if let Some(ans) = self.reqs[idx].answer.clone() {
+                    let doc = tasks::Doc { prompt: String::new(), answer: ans };
+                    let hit = tasks::answer_matches(&doc, &gen);
+                    let ca = tasks::answer_char_accuracy(&doc, &gen);
+                    self.exact_hits += hit as usize;
+                    self.char_acc_sum += ca;
+                    self.scored += 1;
+                    if let Some(t) = self.reqs[idx].task {
+                        let e = self.per_task.entry(t.name()).or_insert((0.0, 0.0, 0));
+                        e.0 += hit as u8 as f64;
+                        e.1 += ca;
+                        e.2 += 1;
+                    }
+                }
+                let rec = RequestRecord {
+                    id: self.reqs[idx].id,
+                    queue_seconds: a.admitted_s - self.reqs[idx].arrival_s,
+                    prefill_seconds: a.prefill_s,
+                    ttft_seconds: a
+                        .first_token_s
+                        .map(|t| t - self.reqs[idx].arrival_s)
+                        .unwrap_or(0.0),
+                    decode_seconds: now - a.admitted_s - a.prefill_s,
+                    e2e_seconds: now - self.reqs[idx].arrival_s,
+                    prompt_tokens: self.reqs[idx].prompt.len(),
+                    new_tokens: a.seq.generated,
+                    session_reused_tokens: a.reused_tokens,
+                };
+                self.metrics.on_request(&rec);
+                self.events.push_back(ServeEvent::Finished(rec.clone()));
+                self.records.push(rec);
+                self.state[idx] = Lifecycle::Finished;
+                self.router.complete(a.worker);
+                self.batcher.on_finished(1);
+                self.engine.release(&mut a.seq);
+                self.plugins.reset();
+            } else {
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut c = Clock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(0.5);
+        c.advance_to(0.25); // never backwards
+        assert_eq!(c.now(), 0.5);
+        c.advance_to(1.0);
+        assert_eq!(c.now(), 1.0);
+        c.advance(0.125);
+        assert_eq!(c.now(), 1.125);
+    }
+
+    #[test]
+    fn lifecycle_terminal_states() {
+        assert!(!Lifecycle::Pending.is_terminal());
+        assert!(!Lifecycle::Queued.is_terminal());
+        assert!(!Lifecycle::Active.is_terminal());
+        assert!(Lifecycle::Finished.is_terminal());
+        assert!(Lifecycle::Cancelled.is_terminal());
+        assert!(Lifecycle::Expired.is_terminal());
+    }
+
+    #[test]
+    fn event_id_extraction() {
+        assert_eq!(ServeEvent::Admitted { id: 7, t: 0.0 }.id(), 7);
+        assert_eq!(ServeEvent::Token { id: 9, tok: 3, t: 0.1 }.id(), 9);
+        assert_eq!(ServeEvent::Cancelled { id: 4, t: 0.2 }.id(), 4);
+        assert_eq!(ServeEvent::DeadlineExpired { id: 5, t: 0.3 }.id(), 5);
+        let rec = RequestRecord {
+            id: 11,
+            queue_seconds: 0.0,
+            prefill_seconds: 0.0,
+            ttft_seconds: 0.0,
+            decode_seconds: 0.0,
+            e2e_seconds: 0.0,
+            prompt_tokens: 0,
+            new_tokens: 0,
+            session_reused_tokens: 0,
+        };
+        assert_eq!(ServeEvent::Finished(rec).id(), 11);
+    }
+}

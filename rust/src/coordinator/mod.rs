@@ -1,12 +1,21 @@
-//! L3 coordination: continuous batcher, session manager, request router and
-//! the serving loop (paper §3.1 "Modular Scheduling Pipeline" + §4.4).
+//! L3 coordination: continuous batcher, session manager, request router,
+//! and the request-lifecycle serving frontend (paper §3.1 "Modular
+//! Scheduling Pipeline" + §4.4). `frontend::Frontend` is the front door —
+//! submit/cancel/step/drain with typed `ServeEvent`s; `server::serve_trace`
+//! remains as a deprecated batch shim over it.
 
 pub mod batcher;
+pub mod frontend;
 pub mod router;
 pub mod server;
 pub mod session;
 
 pub use batcher::{Batcher, BatcherConfig, Round};
+pub use frontend::{
+    Clock, Frontend, FrontendBuilder, Lifecycle, RequestHandle, ServeEvent,
+};
 pub use router::Router;
-pub use server::{serve_trace, ServeOptions, ServeReport};
+#[allow(deprecated)]
+pub use server::serve_trace;
+pub use server::{ServeOptions, ServeReport};
 pub use session::SessionStore;

@@ -1,24 +1,23 @@
-//! The serving front: drives the engine over an arrival trace with
-//! continuous batching, session reuse and plugins, under a virtual clock.
+//! The serving front: `ServeOptions`/`ServeReport` definitions and the
+//! deprecated `serve_trace` batch shim over the request-lifecycle
+//! `Frontend` (see `coordinator::frontend`).
 //!
 //! Queueing is discrete-event (arrivals advance the clock; every compute
 //! quantum advances it by its *measured* wall time), so P50/P99 latency
 //! distributions are honest even though the box has one core and cannot
 //! actually sleep out a 50ms Poisson gap per request.
 
-use std::collections::HashMap;
-
 use anyhow::Result;
 
-use crate::engine::{Engine, Sampling, Sequence};
-use crate::metrics::{RequestRecord, ServerMetrics, StepMetrics};
-use crate::plugins::{Pipeline, PluginAction, StepView};
-use crate::util::rng::Rng;
-use crate::workload::{tasks, Request};
+use crate::engine::{Engine, Sampling};
+use crate::metrics::{RequestRecord, ServerMetrics};
+use crate::plugins::Pipeline;
+use crate::workload::Request;
 
-use super::batcher::{Batcher, BatcherConfig, BatcherStats, QueuedItem, Round};
-use super::router::{Router, RouterStats};
-use super::session::{SessionStats, SessionStore};
+use super::batcher::{BatcherConfig, BatcherStats};
+use super::frontend::Frontend;
+use super::router::RouterStats;
+use super::session::SessionStats;
 
 #[derive(Clone)]
 pub struct ServeOptions {
@@ -66,257 +65,33 @@ pub struct ServeReport {
     pub busy_frac: f64,
 }
 
-struct Active {
-    seq: Sequence,
-    req_idx: usize,
-    admitted_s: f64,
-    prefill_s: f64,
-    first_token_s: Option<f64>,
-    reused_tokens: usize,
-    worker: usize,
-}
-
-/// Run a full trace through the engine. The engine's serving config decides
-/// policy/budget/page size; `opts` decides coordination behaviour.
+/// Run a full trace through the engine: submit every request up front,
+/// pump the frontend to completion, return the report. The engine's
+/// serving config decides policy/budget/page size; `opts` decides
+/// coordination behaviour.
+///
+/// Deprecated shim kept so trace-driven benches compile unchanged with
+/// seed-identical metrics; live callers should drive a
+/// [`Frontend`](super::frontend::Frontend) directly for streaming tokens,
+/// cancellation and deadline-aware admission.
+#[deprecated(
+    note = "use coordinator::Frontend (submit/cancel/step/drain) for \
+            per-request lifecycles; this shim only replays traces"
+)]
 pub fn serve_trace(
     engine: &mut Engine,
     trace: &[Request],
     opts: &ServeOptions,
     plugins: &mut Pipeline,
 ) -> Result<ServeReport> {
-    let mut rng = Rng::new(opts.seed);
-    let mut batcher = Batcher::new(BatcherConfig {
-        max_active: opts.batcher.max_active.min(engine.cfg.max_active),
-        ..opts.batcher.clone()
-    });
-    let mut sessions = SessionStore::new(opts.max_sessions);
-    let mut router = Router::new(opts.n_workers);
-    let mut metrics = ServerMetrics::new(opts.collect_traces);
-    let mut records: Vec<RequestRecord> = Vec::new();
-    let mut active: Vec<Active> = Vec::new();
-    let mut per_task: HashMap<&'static str, (f64, f64, usize)> = HashMap::new();
-
-    let mut now = 0.0f64;
-    let mut busy = 0.0f64;
-    let mut next = 0usize; // next trace index not yet enqueued
-    let mut exact_hits = 0usize;
-    let mut char_acc_sum = 0.0f64;
-    let mut scored = 0usize;
-
-    loop {
-        // pull arrivals that have happened
-        while next < trace.len() && trace[next].arrival_s <= now {
-            batcher.enqueue(QueuedItem {
-                request_idx: next,
-                arrival_s: trace[next].arrival_s,
-                prompt_len: trace[next].prompt.len(),
-            });
-            next += 1;
-        }
-        let next_arrival = trace.get(next).map(|r| r.arrival_s);
-        let done = next >= trace.len() && batcher.queue_len() == 0 && active.is_empty();
-        if done {
-            break;
-        }
-
-        match batcher.schedule(now, next_arrival) {
-            Round::Idle(t) => {
-                if t.is_infinite() {
-                    break;
-                }
-                now = now.max(t);
-            }
-            Round::Admit(items) => {
-                let mut deferred: Vec<QueuedItem> = Vec::new();
-                for item in items {
-                    let req = &trace[item.request_idx];
-                    // KV-budget admission control: shed idle session
-                    // snapshots first; if the prompt still cannot fit, defer
-                    // while in-flight work can retire and free pages. Once
-                    // one item defers, later ones follow to keep FIFO order.
-                    if !deferred.is_empty() {
-                        deferred.push(item);
-                        continue;
-                    }
-                    if !engine.kv_admission_ok(req.prompt.len()) {
-                        while !engine.kv_admission_ok(req.prompt.len())
-                            && sessions.evict_one_lru(&mut engine.pool, req.session)
-                        {}
-                    }
-                    if !engine.kv_admission_ok(req.prompt.len()) && !active.is_empty() {
-                        deferred.push(item);
-                        continue;
-                    }
-                    let mut seq = engine.new_sequence();
-                    seq.max_new_tokens = req.max_new_tokens;
-                    // session reuse: restore the stored prompt prefix
-                    let mut reused = 0usize;
-                    let pinned = req.session.and_then(|s| sessions.worker_of(s));
-                    let decision = router.route(pinned);
-                    if let Some(sid) = req.session {
-                        if let Some(from) = decision.migrate_from {
-                            let _ = from;
-                            let bytes =
-                                sessions.migrate(sid, decision.worker, &engine.pool);
-                            // migration transit at ~200 GB/s NVLink-class
-                            now += bytes as f64 / 200e9;
-                        }
-                        if let Some((cache, n)) =
-                            sessions.try_reuse(sid, &req.prompt, &mut engine.pool)
-                        {
-                            seq.cache = cache;
-                            reused = n;
-                        }
-                    }
-                    seq.tokens = req.prompt.clone();
-                    // prefill the (remaining) prompt, measured
-                    let mut m = StepMetrics::default();
-                    let t0 = std::time::Instant::now();
-                    if opts.artifact_prefill
-                        && engine.rt.info.find_artifact("prefill", 1, None).is_ok()
-                    {
-                        engine.prefill(&mut seq, &mut m)?;
-                    } else {
-                        engine.prefill_stepwise(&mut seq, &mut m)?;
-                    }
-                    let dt = t0.elapsed().as_secs_f64();
-                    now += dt;
-                    busy += dt;
-                    // snapshot the prompt prefix for future session turns
-                    if let Some(sid) = req.session {
-                        sessions.store(
-                            sid,
-                            &seq.cache,
-                            &req.prompt[..seq.cache.pos],
-                            decision.worker,
-                            &mut engine.pool,
-                        );
-                    }
-                    // prefill/snapshot allocations bypass the decode path;
-                    // demote back under the budget before decoding resumes
-                    engine.enforce_kv_budget();
-                    active.push(Active {
-                        seq,
-                        req_idx: item.request_idx,
-                        admitted_s: item.arrival_s,
-                        prefill_s: dt,
-                        first_token_s: None,
-                        reused_tokens: reused,
-                        worker: decision.worker,
-                    });
-                }
-                // front of the queue must stay FIFO: requeue in reverse
-                for item in deferred.into_iter().rev() {
-                    batcher.requeue_front(item);
-                }
-            }
-            Round::Decode => {
-                let b = engine.max_batch().min(active.len());
-                let mut m = StepMetrics::default();
-                let outs = {
-                    let mut batch: Vec<&mut Active> =
-                        active.iter_mut().take(b).collect();
-                    let mut seqs: Vec<&mut Sequence> =
-                        batch.iter_mut().map(|a| &mut a.seq).collect();
-                    engine.decode_step(&mut seqs, opts.sampling, &mut rng, &mut m)?
-                };
-                // spill_seconds is the simulated cold-tier transfer cost of
-                // the budgeted store (hwmodel-priced, not wall time)
-                now += m.step_seconds + m.spill_seconds;
-                busy += m.step_seconds + m.spill_seconds;
-                metrics.on_step(&m);
-                // plugins + first-token bookkeeping
-                for (a, o) in active.iter_mut().take(b).zip(outs.iter()) {
-                    if a.first_token_s.is_none() {
-                        a.first_token_s = Some(now);
-                    }
-                    let action = if plugins.is_empty() {
-                        PluginAction::Continue
-                    } else {
-                        plugins.on_step(&StepView {
-                            seq: &a.seq,
-                            sample: o,
-                            attn_entropy: a.seq.last_entropy,
-                            pool: &engine.pool,
-                        })
-                    };
-                    match action {
-                        PluginAction::Stop => a.seq.finished = true,
-                        // routed through the page store: the eviction
-                        // policy's rank picks the victim, not table order
-                        PluginAction::PruneColdest => engine.prune_coldest(&mut a.seq),
-                        PluginAction::Continue => {}
-                    }
-                }
-                // retire finished sequences
-                let mut i = 0;
-                while i < active.len() {
-                    if active[i].seq.finished {
-                        let mut a = active.swap_remove(i);
-                        let req = &trace[a.req_idx];
-                        let gen = tasks::decode_ids(a.seq.generated_tokens());
-                        if let Some(ans) = &req.answer {
-                            let doc = tasks::Doc {
-                                prompt: String::new(),
-                                answer: ans.clone(),
-                            };
-                            let hit = tasks::answer_matches(&doc, &gen);
-                            let ca = tasks::answer_char_accuracy(&doc, &gen);
-                            exact_hits += hit as usize;
-                            char_acc_sum += ca;
-                            scored += 1;
-                            if let Some(t) = req.task {
-                                let e = per_task.entry(t.name()).or_insert((0.0, 0.0, 0));
-                                e.0 += hit as u8 as f64;
-                                e.1 += ca;
-                                e.2 += 1;
-                            }
-                        }
-                        let rec = RequestRecord {
-                            id: req.id,
-                            queue_seconds: a.admitted_s - req.arrival_s,
-                            prefill_seconds: a.prefill_s,
-                            ttft_seconds: a
-                                .first_token_s
-                                .map(|t| t - req.arrival_s)
-                                .unwrap_or(0.0),
-                            decode_seconds: now - a.admitted_s - a.prefill_s,
-                            e2e_seconds: now - req.arrival_s,
-                            prompt_tokens: req.prompt.len(),
-                            new_tokens: a.seq.generated,
-                            session_reused_tokens: a.reused_tokens,
-                        };
-                        metrics.on_request(&rec);
-                        records.push(rec);
-                        router.complete(a.worker);
-                        batcher.on_finished(1);
-                        engine.release(&mut a.seq);
-                        plugins.reset();
-                    } else {
-                        i += 1;
-                    }
-                }
-            }
-        }
+    let mut fe = Frontend::builder().options(opts.clone()).build(engine, plugins);
+    for req in trace {
+        fe.submit(req.clone());
     }
-
-    metrics.run_seconds = now;
-    sessions.clear(&mut engine.pool);
-    let mut per_task_out: Vec<(String, f64, usize)> = per_task
-        .into_iter()
-        .map(|(k, (hits, _ca, n))| (k.to_string(), hits / n.max(1) as f64, n))
-        .collect();
-    per_task_out.sort_by(|a, b| a.0.cmp(&b.0));
-    Ok(ServeReport {
-        accuracy: if scored > 0 { exact_hits as f64 / scored as f64 } else { f64::NAN },
-        char_accuracy: if scored > 0 { char_acc_sum / scored as f64 } else { f64::NAN },
-        per_task: per_task_out,
-        session_stats: sessions.stats.clone(),
-        router_stats: router.stats.clone(),
-        batcher_stats: std::mem::take(&mut batcher.stats),
-        metrics,
-        requests: records,
-        wall_s: now,
-        busy_frac: if now > 0.0 { busy / now } else { 0.0 },
-    })
+    // discard events per round instead of drain(): a trace replay has no
+    // event consumer, so don't buffer O(total tokens) of them
+    while fe.has_work() {
+        fe.step()?;
+    }
+    Ok(fe.into_report())
 }

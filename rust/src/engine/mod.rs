@@ -225,6 +225,18 @@ impl Engine {
         self.store.sync(&self.pool);
     }
 
+    /// Release a sequence aborted mid-flight (cancellation / deadline
+    /// expiry): clears any pins the store still holds on its pages first —
+    /// the decode loop unpins at step end, but an abort can land between
+    /// pin and unpin — then frees them and re-syncs residency accounting
+    /// so `bytes_in_use` drops immediately.
+    pub fn release_mid_flight(&mut self, seq: &mut Sequence) {
+        for e in seq.cache.pages.iter() {
+            self.store.unpin(e.id);
+        }
+        self.release(seq);
+    }
+
     /// Demote pages until the KV byte budget holds (no-op when unbounded).
     /// The coordinator calls this after prefill/snapshot bursts that
     /// allocate outside the decode path.

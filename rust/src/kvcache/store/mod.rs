@@ -234,6 +234,20 @@ impl PageStore {
         }
     }
 
+    /// Clear one page's pin. The decode loop uses `unpin_all` at step end;
+    /// this is the mid-flight path — cancellation or deadline expiry frees
+    /// a sequence between steps, and its pages must stop being
+    /// pin-protected before they can leave residency.
+    pub fn unpin(&mut self, id: PageId) {
+        if !self.enabled() || (id as usize) >= self.state.len() {
+            return;
+        }
+        if self.state[id as usize].pinned {
+            self.state[id as usize].pinned = false;
+            self.pinned.retain(|&p| p != id);
+        }
+    }
+
     /// A sparsity policy selected this page for attention: count the
     /// residency hit/miss and transparently promote if cold (charging the
     /// simulated cold-tier transfer). Promotion may displace another page
@@ -433,6 +447,31 @@ mod tests {
         for id in others {
             p.release(id);
         }
+    }
+
+    #[test]
+    fn unpin_single_page_allows_demotion() {
+        let mut p = pool();
+        let budget = p.page_bytes(); // room for one hot page only
+        let mut s = PageStore::new(Some(budget), EvictionPolicyKind::Lru);
+        let a = s.alloc(&mut p);
+        fill_page(&mut p, a, 1.0);
+        s.pin(a); // pin before the next alloc can demote it
+        let b = s.alloc(&mut p);
+        fill_page(&mut p, b, 2.0);
+        s.pin(b);
+        s.enforce_budget(&mut p);
+        assert!(s.is_hot(a) && s.is_hot(b), "both pinned, neither demotes");
+        // mid-flight release path: one page unpinned, the other stays safe
+        s.unpin(a);
+        s.enforce_budget(&mut p);
+        assert!(s.is_cold(a), "unpinned page became demotable");
+        assert!(s.is_hot(b), "still-pinned page survived");
+        s.unpin(b);
+        p.release(a);
+        p.release(b);
+        s.sync(&p);
+        assert_eq!(s.bytes_in_use(&p), 0);
     }
 
     #[test]

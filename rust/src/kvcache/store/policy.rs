@@ -11,6 +11,10 @@
 //!   bounding-box relevance (EMA of `sparsity::score_page` against live
 //!   decode queries) is lowest. Recency-blind but query-aligned: a page
 //!   that no current query attends to is cold even if recently written.
+//! * **SIEVE** — FIFO insertion with one visited bit and a hand that
+//!   *survives* evictions (Zhang et al., NSDI'24). New pages get a fast
+//!   path out unless re-accessed, long-lived hot pages stay resident; the
+//!   retained hand is what separates it from CLOCK's circular sweep.
 //!
 //! Policies see pages as bare `PageId`s; residency/pin/refcount state stays
 //! in the store, which passes an `evictable` predicate into `victim`.
@@ -25,6 +29,7 @@ pub enum EvictionPolicyKind {
     Lru,
     Clock,
     QueryAware,
+    Sieve,
 }
 
 impl EvictionPolicyKind {
@@ -33,6 +38,7 @@ impl EvictionPolicyKind {
             "lru" => EvictionPolicyKind::Lru,
             "clock" | "second-chance" => EvictionPolicyKind::Clock,
             "query-aware" | "queryaware" | "qa" => EvictionPolicyKind::QueryAware,
+            "sieve" => EvictionPolicyKind::Sieve,
             _ => return None,
         })
     }
@@ -42,6 +48,7 @@ impl EvictionPolicyKind {
             EvictionPolicyKind::Lru => "lru",
             EvictionPolicyKind::Clock => "clock",
             EvictionPolicyKind::QueryAware => "query-aware",
+            EvictionPolicyKind::Sieve => "sieve",
         }
     }
 
@@ -50,7 +57,13 @@ impl EvictionPolicyKind {
             EvictionPolicyKind::Lru,
             EvictionPolicyKind::Clock,
             EvictionPolicyKind::QueryAware,
+            EvictionPolicyKind::Sieve,
         ]
+    }
+
+    /// Canonical parseable names, for CLI errors and help text.
+    pub fn names() -> Vec<&'static str> {
+        Self::all().iter().map(|k| k.name()).collect()
     }
 }
 
@@ -86,6 +99,7 @@ pub fn make_eviction_policy(kind: EvictionPolicyKind) -> Box<dyn EvictionPolicy>
         EvictionPolicyKind::Lru => Box::new(LruPolicy::default()),
         EvictionPolicyKind::Clock => Box::new(ClockPolicy::default()),
         EvictionPolicyKind::QueryAware => Box::new(QueryAwareCold::new(0.7)),
+        EvictionPolicyKind::Sieve => Box::new(SievePolicy::default()),
     }
 }
 
@@ -395,6 +409,151 @@ impl EvictionPolicy for QueryAwareCold {
     }
 }
 
+/// SIEVE: an intrusive FIFO list (`head` = newest insertion, `tail` =
+/// oldest) with one `visited` bit per page and an eviction hand that walks
+/// tail -> head and *keeps its position across evictions*. A page's first
+/// access inserts it at the head unvisited; a re-access while resident
+/// just sets the bit. The hand clears visited bits as it passes and evicts
+/// the first unvisited evictable page, so one-touch pages get swept out
+/// quickly while anything touched twice survives a full lap — CLOCK's
+/// second chance without the hand reset that makes CLOCK scan-prone.
+pub struct SievePolicy {
+    prev: Vec<u32>, // toward head (newer)
+    next: Vec<u32>, // toward tail (older)
+    in_list: Vec<bool>,
+    visited: Vec<bool>,
+    stamp: Vec<u64>,
+    head: u32,
+    tail: u32,
+    hand: u32,
+    len: usize,
+}
+
+impl Default for SievePolicy {
+    fn default() -> Self {
+        SievePolicy {
+            prev: Vec::new(),
+            next: Vec::new(),
+            in_list: Vec::new(),
+            visited: Vec::new(),
+            stamp: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            hand: NIL,
+            len: 0,
+        }
+    }
+}
+
+impl SievePolicy {
+    fn detach(&mut self, id: u32) {
+        if !self.in_list[id as usize] {
+            return;
+        }
+        // the hand never dangles: removing its node moves it to the next
+        // candidate (toward the head; NIL restarts at the tail)
+        if self.hand == id {
+            self.hand = self.prev[id as usize];
+        }
+        let p = self.prev[id as usize];
+        let n = self.next[id as usize];
+        if p != NIL {
+            self.next[p as usize] = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.prev[n as usize] = p;
+        } else {
+            self.tail = p;
+        }
+        self.prev[id as usize] = NIL;
+        self.next[id as usize] = NIL;
+        self.in_list[id as usize] = false;
+        self.len -= 1;
+    }
+
+    fn push_head(&mut self, id: u32) {
+        self.prev[id as usize] = NIL;
+        self.next[id as usize] = self.head;
+        if self.head != NIL {
+            self.prev[self.head as usize] = id;
+        } else {
+            self.tail = id;
+        }
+        self.head = id;
+        self.in_list[id as usize] = true;
+        self.len += 1;
+    }
+}
+
+impl EvictionPolicy for SievePolicy {
+    fn kind(&self) -> EvictionPolicyKind {
+        EvictionPolicyKind::Sieve
+    }
+
+    fn ensure_capacity(&mut self, cap: usize) {
+        self.prev.resize(cap, NIL);
+        self.next.resize(cap, NIL);
+        self.in_list.resize(cap, false);
+        self.visited.resize(cap, false);
+        self.stamp.resize(cap, 0);
+    }
+
+    fn on_access(&mut self, id: PageId, now: u64) {
+        if self.in_list[id as usize] {
+            // resident hit: mark, do NOT move (FIFO order is immutable)
+            self.visited[id as usize] = true;
+        } else {
+            self.push_head(id);
+            self.visited[id as usize] = false;
+        }
+        self.stamp[id as usize] = now;
+    }
+
+    fn on_remove(&mut self, id: PageId) {
+        self.detach(id);
+        self.visited[id as usize] = false;
+    }
+
+    fn victim(&mut self, evictable: &mut dyn FnMut(PageId) -> bool) -> Option<PageId> {
+        if self.len == 0 {
+            return None;
+        }
+        let mut cur = if self.hand != NIL && self.in_list[self.hand as usize] {
+            self.hand
+        } else {
+            self.tail
+        };
+        // two full laps suffice: the first clears every visited bit the
+        // hand meets, the second must find a victim unless nothing is
+        // evictable
+        let cap = 2 * self.len + 1;
+        let mut scanned = 0usize;
+        while cur != NIL && scanned < cap {
+            let toward_head = self.prev[cur as usize];
+            if self.visited[cur as usize] {
+                self.visited[cur as usize] = false;
+            } else if evictable(cur) {
+                self.hand = toward_head; // survives the eviction
+                self.detach(cur);
+                return Some(cur);
+            }
+            cur = if toward_head != NIL { toward_head } else { self.tail };
+            scanned += 1;
+        }
+        self.hand = cur;
+        None
+    }
+
+    fn rank(&self, id: PageId) -> f64 {
+        self.stamp
+            .get(id as usize)
+            .copied()
+            .unwrap_or(0) as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -514,6 +673,56 @@ mod tests {
     }
 
     #[test]
+    fn sieve_evicts_oldest_unvisited_first() {
+        let mut p = SievePolicy::default();
+        p.ensure_capacity(8);
+        for id in 0..3u32 {
+            p.on_access(id, id as u64 + 1); // insert 0,1,2 (all unvisited)
+        }
+        assert_eq!(p.victim(&mut |_| true), Some(0), "FIFO tail goes first");
+        // touch 1 while resident: the visited bit protects it for one lap
+        p.on_access(1, 9);
+        assert_eq!(p.victim(&mut |_| true), Some(2));
+        assert_eq!(p.victim(&mut |_| true), Some(1), "second lap claims 1");
+        assert_eq!(p.victim(&mut |_| true), None, "drained");
+    }
+
+    #[test]
+    fn sieve_hand_survives_eviction() {
+        let mut p = SievePolicy::default();
+        p.ensure_capacity(8);
+        for id in 0..4u32 {
+            p.on_access(id, id as u64 + 1);
+        }
+        // all visited: the first victim call clears tail-ward bits
+        for id in 0..4u32 {
+            p.on_access(id, 10 + id as u64);
+        }
+        assert_eq!(p.victim(&mut |_| true), Some(0));
+        // a page inserted *after* the hand passed the tail region is newer
+        // than the hand: the retained hand keeps sweeping old pages first
+        p.on_access(7, 20);
+        assert_eq!(p.victim(&mut |_| true), Some(1), "hand did not reset");
+    }
+
+    #[test]
+    fn sieve_skips_non_evictable_and_reinsertion_resets_bit() {
+        let mut p = SievePolicy::default();
+        p.ensure_capacity(8);
+        for id in 0..3u32 {
+            p.on_access(id, id as u64 + 1);
+        }
+        assert_eq!(p.victim(&mut |id| id != 0), Some(1), "pinned 0 skipped");
+        assert_eq!(p.victim(&mut |_| false), None, "all pinned");
+        // evicted page re-enters at the head, unvisited again
+        p.on_access(1, 9);
+        p.on_remove(2);
+        p.on_remove(0);
+        assert_eq!(p.victim(&mut |_| true), Some(1));
+        assert_eq!(p.victim(&mut |_| true), None);
+    }
+
+    #[test]
     fn kind_parsing() {
         assert_eq!(EvictionPolicyKind::parse("lru"), Some(EvictionPolicyKind::Lru));
         assert_eq!(EvictionPolicyKind::parse("CLOCK"), Some(EvictionPolicyKind::Clock));
@@ -521,9 +730,13 @@ mod tests {
             EvictionPolicyKind::parse("query-aware"),
             Some(EvictionPolicyKind::QueryAware)
         );
+        assert_eq!(EvictionPolicyKind::parse("sieve"), Some(EvictionPolicyKind::Sieve));
         assert_eq!(EvictionPolicyKind::parse("bogus"), None);
         for k in EvictionPolicyKind::all() {
             assert_eq!(EvictionPolicyKind::parse(k.name()), Some(*k));
         }
+        let names = EvictionPolicyKind::names();
+        assert_eq!(names.len(), EvictionPolicyKind::all().len());
+        assert!(names.contains(&"sieve"));
     }
 }

@@ -10,7 +10,7 @@
 use anyhow::Result;
 
 use tinyserve::config::{KvDtype, ServingConfig};
-use tinyserve::coordinator::{serve_trace, ServeOptions};
+use tinyserve::coordinator::{Frontend, ServeOptions};
 use tinyserve::kvcache::EvictionPolicyKind;
 use tinyserve::engine::{Engine, Sampling};
 use tinyserve::metrics::StepMetrics;
@@ -30,19 +30,29 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
     cfg.budget = args.usize_or("budget", cfg.budget);
     cfg.max_batch = args.usize_or("batch", cfg.max_batch);
     cfg.batch_timeout_ms = args.f64_or("batch-timeout-ms", cfg.batch_timeout_ms);
+    // enum flags fail loudly, listing every valid name from the registry —
+    // a typo'd policy must never fall back to a default mid-sweep
     if let Some(p) = args.get("policy") {
-        cfg.policy = PolicyKind::parse(p)
-            .ok_or_else(|| anyhow::anyhow!("unknown policy '{p}'"))?;
+        cfg.policy = PolicyKind::parse(p).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown policy '{p}'; valid: {}",
+                PolicyKind::names().join("|")
+            )
+        })?;
     }
     if let Some(d) = args.get("kv-dtype") {
-        cfg.kv_dtype = KvDtype::parse(d)
-            .ok_or_else(|| anyhow::anyhow!("unknown kv dtype '{d}'"))?;
+        cfg.kv_dtype = KvDtype::parse(d).ok_or_else(|| {
+            anyhow::anyhow!("unknown kv dtype '{d}'; valid: f32|f16|int8")
+        })?;
     }
     // memory-budgeted page store: absent flag keeps the unbounded pool
     cfg.kv_budget_mb = args.f64_opt("kv-budget-mb");
     if let Some(e) = args.get("eviction-policy") {
         cfg.eviction = EvictionPolicyKind::parse(e).ok_or_else(|| {
-            anyhow::anyhow!("unknown eviction policy '{e}' (lru|clock|query-aware)")
+            anyhow::anyhow!(
+                "unknown eviction policy '{e}'; valid: {}",
+                EvictionPolicyKind::names().join("|")
+            )
         })?;
     }
     cfg.validate()?;
@@ -123,14 +133,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let mut engine = Engine::new(&tinyserve::artifacts_dir(), cfg)?;
     engine.warmup()?;
-    let trace = generate_trace(&trace_cfg);
+    let mut trace = generate_trace(&trace_cfg);
+    // optional per-request SLO: the frontend sheds/aborts past-deadline work
+    if let Some(d) = args.f64_opt("deadline-ms") {
+        for req in trace.iter_mut() {
+            req.deadline_ms = Some(d);
+        }
+    }
     let opts = ServeOptions {
         n_workers: args.usize_or("workers", 1),
         seed: trace_cfg.seed,
         ..Default::default()
     };
     let mut plugins = Pipeline::new();
-    let r = serve_trace(&mut engine, &trace, &opts, &mut plugins)?;
+    let mut fe = Frontend::builder().options(opts).build(&mut engine, &mut plugins);
+    for req in trace {
+        fe.submit(req);
+    }
+    // pump to completion, discarding per-round events (report-only run)
+    while fe.has_work() {
+        fe.step()?;
+    }
+    let r = fe.into_report();
     let kv_budget = engine.store.budget_bytes();
     let pool_bytes_peak = engine.pool.bytes_peak();
     let mut m = r.metrics;
@@ -149,6 +173,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.request_ttft.p50() * 1e3,
         m.request_ttft.p99() * 1e3
     );
+    if m.total_cancelled > 0 || m.total_expired > 0 {
+        println!(
+            "lifecycle           cancelled {}  deadline-expired {}",
+            m.total_cancelled, m.total_expired
+        );
+    }
     println!("kv page hit rate    {:.1}%", m.hit_rate.mean() * 100.0);
     println!(
         "kv bytes            mean {:.2} MB  peak {:.2} MB  (pool hot-rate peak {:.2} MB)",
@@ -262,9 +292,60 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: tinyserve <info|generate|serve|eval|cost> [--model M] \
                  [--policy P] [--budget N] [--batch B] [--kv-budget-mb MB] \
-                 [--eviction-policy lru|clock|query-aware] ..."
+                 [--eviction-policy lru|clock|query-aware|sieve] \
+                 [--deadline-ms D] ..."
             );
             std::process::exit(2);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn unknown_policy_error_lists_valid_names() {
+        let e = serving_config(&args("serve --policy bogus"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("bogus"), "{e}");
+        for n in PolicyKind::names() {
+            assert!(e.contains(n.as_str()), "error {e:?} missing policy name {n}");
+        }
+    }
+
+    #[test]
+    fn unknown_eviction_policy_error_lists_valid_names() {
+        let e = serving_config(&args("serve --eviction-policy bogus"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("bogus"), "{e}");
+        for k in EvictionPolicyKind::all() {
+            assert!(e.contains(k.name()), "error {e:?} missing {}", k.name());
+        }
+    }
+
+    #[test]
+    fn unknown_kv_dtype_error_lists_valid_names() {
+        let e = serving_config(&args("serve --kv-dtype q4"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("q4") && e.contains("f16") && e.contains("int8"), "{e}");
+    }
+
+    #[test]
+    fn known_enum_values_parse() {
+        let cfg = serving_config(&args(
+            "serve --policy snapkv --eviction-policy sieve --kv-dtype f16",
+        ))
+        .unwrap();
+        assert_eq!(cfg.policy, PolicyKind::SnapKv);
+        assert_eq!(cfg.eviction, EvictionPolicyKind::Sieve);
+        assert_eq!(cfg.kv_dtype, KvDtype::F16);
     }
 }

@@ -122,6 +122,10 @@ pub struct ServerMetrics {
     pub total_steps: u64,
     pub total_new_tokens: u64,
     pub total_requests: u64,
+    /// requests cancelled by the caller before completion
+    pub total_cancelled: u64,
+    /// requests shed or aborted past their deadline
+    pub total_expired: u64,
     pub total_gather_bytes: u64,
     // --- budgeted page-store residency aggregation ---
     /// mean over steps with store activity (hits + misses > 0)
@@ -182,7 +186,21 @@ impl ServerMetrics {
     pub fn on_request(&mut self, r: &RequestRecord) {
         self.total_requests += 1;
         self.request_e2e.push(r.e2e_seconds);
-        self.request_ttft.push(r.ttft_seconds);
+    }
+
+    /// A request's first token surfaced (the frontend sees it as a `Token`
+    /// event). TTFT is recorded here rather than at completion so requests
+    /// that stream a prefix and then get cancelled still count.
+    pub fn on_first_token(&mut self, ttft_s: f64) {
+        self.request_ttft.push(ttft_s);
+    }
+
+    pub fn on_cancelled(&mut self) {
+        self.total_cancelled += 1;
+    }
+
+    pub fn on_expired(&mut self) {
+        self.total_expired += 1;
     }
 
     /// tokens/second across the run (requires `run_seconds` set).
@@ -273,6 +291,34 @@ mod tests {
         assert_eq!(StepMetrics::default().residency_hit_rate(), 1.0);
         let m = StepMetrics { store_hits: 1, store_misses: 3, ..Default::default() };
         assert_eq!(m.residency_hit_rate(), 0.25);
+    }
+
+    #[test]
+    fn lifecycle_counters_and_first_token_ttft() {
+        let mut sm = ServerMetrics::new(false);
+        sm.on_first_token(0.25);
+        sm.on_first_token(0.75);
+        sm.on_cancelled();
+        sm.on_expired();
+        sm.on_expired();
+        // one of the two streaming requests completed, one was cancelled
+        sm.on_request(&RequestRecord {
+            id: 0,
+            queue_seconds: 0.0,
+            prefill_seconds: 0.1,
+            ttft_seconds: 0.25,
+            decode_seconds: 0.4,
+            e2e_seconds: 0.5,
+            prompt_tokens: 10,
+            new_tokens: 5,
+            session_reused_tokens: 0,
+        });
+        assert_eq!(sm.total_requests, 1);
+        assert_eq!(sm.total_cancelled, 1);
+        assert_eq!(sm.total_expired, 2);
+        assert_eq!(sm.request_ttft.len(), 2, "ttft counts streamed firsts");
+        assert!((sm.request_ttft.p50() - 0.5).abs() < 1e-9);
+        assert_eq!(sm.request_e2e.len(), 1, "e2e counts completions only");
     }
 
     #[test]

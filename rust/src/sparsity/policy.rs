@@ -67,6 +67,33 @@ impl PolicyKind {
             PolicyKind::TinyServe,
         ]
     }
+
+    /// Every variant — the full registry, including the diagnostic-only
+    /// kinds (`Oracle`, `EntropyStop`) that `all()` leaves out of paper
+    /// sweeps. New variants must be added here (and the roundtrip test
+    /// keeps `names()` in lockstep with `parse`).
+    pub fn registry() -> &'static [PolicyKind] {
+        &[
+            PolicyKind::FullCache,
+            PolicyKind::TinyServe,
+            PolicyKind::Oracle,
+            PolicyKind::StreamingLlm,
+            PolicyKind::SnapKv,
+            PolicyKind::PyramidKv,
+            PolicyKind::SoftPrune,
+            PolicyKind::EntropyStop,
+        ]
+    }
+
+    /// Canonical parseable names for CLI errors/help, derived from the
+    /// registry (`parse` lowercases, so every lowercased display name is
+    /// a valid spelling).
+    pub fn names() -> Vec<String> {
+        Self::registry()
+            .iter()
+            .map(|k| k.name().to_ascii_lowercase())
+            .collect()
+    }
 }
 
 /// Everything a policy may inspect for one (sequence, layer, step).
@@ -434,6 +461,26 @@ impl Policy for EntropyStop {
 mod tests {
     use super::*;
     use crate::config::KvDtype;
+
+    #[test]
+    fn every_registry_name_parses_back() {
+        for (k, n) in PolicyKind::registry().iter().zip(PolicyKind::names()) {
+            assert_eq!(
+                PolicyKind::parse(&n),
+                Some(*k),
+                "registry name {n} must parse to its own kind"
+            );
+        }
+        for k in PolicyKind::all() {
+            assert!(
+                PolicyKind::registry().contains(k),
+                "sweep set {k:?} missing from registry"
+            );
+            assert_eq!(PolicyKind::parse(k.name()), Some(*k));
+        }
+        assert_eq!(PolicyKind::names().len(), PolicyKind::registry().len());
+        assert!(PolicyKind::parse("bogus").is_none());
+    }
 
     /// Build a pool+sequence where page `hot` contains a key aligned with
     /// the probe query and everything else is anti-aligned.

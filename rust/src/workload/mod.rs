@@ -20,6 +20,10 @@ pub struct Request {
     pub session: Option<u64>,
     pub task: Option<Task>,
     pub answer: Option<String>,
+    /// SLO deadline relative to arrival, in milliseconds. The frontend
+    /// sheds the request at admission or aborts it mid-decode (releasing
+    /// its KV pages) once the deadline elapses; None = no deadline.
+    pub deadline_ms: Option<f64>,
 }
 
 #[derive(Debug, Clone)]
@@ -94,6 +98,7 @@ pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
             session,
             task: Some(task),
             answer: Some(doc.answer),
+            deadline_ms: None,
         });
     }
     out

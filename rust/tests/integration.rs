@@ -2,8 +2,14 @@
 //! full stack (manifest -> PJRT compile -> engine decode/prefill -> serving
 //! loop). They require `make artifacts` to have run; otherwise they skip.
 
+// `serve_trace` is deprecated in favour of the Frontend lifecycle API but
+// stays under test: the shim must keep producing seed-identical reports.
+#![allow(deprecated)]
+
 use tinyserve::config::{KvDtype, ServingConfig};
-use tinyserve::coordinator::{serve_trace, ServeOptions};
+use tinyserve::coordinator::{
+    serve_trace, Frontend, Lifecycle, ServeEvent, ServeOptions, ServeReport,
+};
 use tinyserve::engine::{Engine, Sampling};
 use tinyserve::kvcache::EvictionPolicyKind;
 use tinyserve::metrics::StepMetrics;
@@ -394,6 +400,225 @@ fn budgeted_store_enforces_kv_budget_in_serving() {
     );
 }
 
+fn lifecycle_req(
+    id: u64,
+    arrival_s: f64,
+    prompt: &str,
+    max_new: usize,
+) -> tinyserve::workload::Request {
+    tinyserve::workload::Request {
+        id,
+        arrival_s,
+        prompt: tasks::encode_prompt(prompt),
+        max_new_tokens: max_new,
+        session: None,
+        task: None,
+        answer: None,
+        deadline_ms: None,
+    }
+}
+
+#[test]
+fn frontend_cancel_before_admission() {
+    let m = require!(manifest());
+    let mut e = engine(&m, PolicyKind::TinyServe, 256, 2);
+    let mut plugins = Pipeline::new();
+    let mut fe = Frontend::builder()
+        .options(ServeOptions::default())
+        .build(&mut e, &mut plugins);
+    let h0 = fe.submit(lifecycle_req(0, 0.0, "the river and the stone. ", 4));
+    let h1 = fe.submit(lifecycle_req(1, 0.0, "winter morning bridge. ", 4));
+    assert_eq!(fe.state_of(h1.id), Some(Lifecycle::Pending));
+    assert!(fe.cancel(h1.id), "cancellable before admission");
+    assert!(!fe.cancel(h1.id), "terminal state rejects a second cancel");
+    assert!(!fe.cancel(99), "unknown id");
+    let events = fe.drain().expect("drain");
+    let cancelled: Vec<u64> = events
+        .iter()
+        .filter(|ev| matches!(ev, ServeEvent::Cancelled { .. }))
+        .map(|ev| ev.id())
+        .collect();
+    assert_eq!(cancelled, vec![1], "exactly one Cancelled event");
+    assert!(
+        !events.iter().any(|ev| matches!(ev, ServeEvent::Token { id: 1, .. })),
+        "cancelled-before-admission request must never stream"
+    );
+    assert_eq!(fe.state_of(h0.id), Some(Lifecycle::Finished));
+    assert_eq!(fe.state_of(h1.id), Some(Lifecycle::Cancelled));
+    let r = fe.into_report();
+    assert_eq!(r.metrics.total_requests, 1);
+    assert_eq!(r.metrics.total_cancelled, 1);
+    assert_eq!(e.pool.pages_in_use(), 0, "no pages leaked");
+}
+
+#[test]
+fn frontend_cancel_mid_decode_frees_pages() {
+    let m = require!(manifest());
+    let run = |kv_budget_mb: Option<f64>| -> usize {
+        let cfg = ServingConfig {
+            model: MODEL.to_string(),
+            policy: PolicyKind::TinyServe,
+            budget: 256,
+            max_batch: 2,
+            kv_budget_mb,
+            ..Default::default()
+        };
+        let mut e = Engine::from_manifest(&m, cfg).expect("engine");
+        let mut plugins = Pipeline::new();
+        let mut fe = Frontend::builder()
+            .options(ServeOptions::default())
+            .build(&mut e, &mut plugins);
+        let prompt = "the river and the stone and the light. ".repeat(6);
+        fe.submit(lifecycle_req(7, 0.0, &prompt, 32));
+        let mut cancelled = false;
+        while fe.has_work() {
+            for ev in fe.step().expect("step") {
+                if matches!(ev, ServeEvent::Token { .. }) && !cancelled {
+                    // mid-stream: the request has decoded at least one
+                    // token and still holds all of its KV pages
+                    let before = fe.engine().store.bytes_in_use(&fe.engine().pool);
+                    assert!(fe.engine().pool.pages_in_use() > 0);
+                    assert!(fe.cancel(7), "cancellable mid-decode");
+                    let after = fe.engine().store.bytes_in_use(&fe.engine().pool);
+                    assert!(
+                        after < before,
+                        "bytes_in_use must drop at the cancel point \
+                         ({after} !< {before}, budget {kv_budget_mb:?})"
+                    );
+                    assert_eq!(
+                        fe.engine().pool.pages_in_use(),
+                        0,
+                        "sole request: every page returns to the pool"
+                    );
+                    cancelled = true;
+                }
+            }
+        }
+        assert!(cancelled, "request streamed before cancellation");
+        assert_eq!(fe.state_of(7), Some(Lifecycle::Cancelled));
+        let r = fe.into_report();
+        assert_eq!(r.metrics.total_cancelled, 1);
+        assert_eq!(r.metrics.total_requests, 0, "never completed");
+        assert_eq!(
+            r.metrics.request_ttft.len(),
+            1,
+            "ttft recorded from the streamed prefix despite cancellation"
+        );
+        // refcount conservation after the mid-flight release
+        e.pool.validate().expect("pool invariants");
+        assert_eq!(e.pool.pages_in_use(), 0);
+        e.pool.bytes_peak()
+    };
+    // unbounded pool first; then a budgeted store at 60% of that peak so
+    // the release path also exercises tier accounting + pin clearing
+    let peak = run(None);
+    run(Some(peak as f64 * 0.6 / 1e6));
+}
+
+#[test]
+fn frontend_deadline_expiry_emits_exactly_once() {
+    let m = require!(manifest());
+    let mut e = engine(&m, PolicyKind::TinyServe, 256, 2);
+    let mut plugins = Pipeline::new();
+    let mut fe = Frontend::builder()
+        .options(ServeOptions::default())
+        .build(&mut e, &mut plugins);
+    // 10us deadline: any real prefill overshoots it, so the request is
+    // aborted (or shed) long before its 64 tokens complete
+    let mut doomed = lifecycle_req(1, 0.0, "the river and the stone and the light. ", 64);
+    doomed.deadline_ms = Some(0.01);
+    fe.submit(doomed);
+    fe.submit(lifecycle_req(2, 0.0, "winter morning bridge. ", 4));
+    let events = fe.drain().expect("drain");
+    let expired: Vec<u64> = events
+        .iter()
+        .filter(|ev| matches!(ev, ServeEvent::DeadlineExpired { .. }))
+        .map(|ev| ev.id())
+        .collect();
+    assert_eq!(expired, vec![1], "exactly one DeadlineExpired, for request 1");
+    assert_eq!(fe.state_of(1), Some(Lifecycle::Expired));
+    assert_eq!(fe.state_of(2), Some(Lifecycle::Finished));
+    assert!(!fe.cancel(1), "expired is terminal");
+    let r = fe.into_report();
+    assert_eq!(r.metrics.total_expired, 1);
+    assert_eq!(r.metrics.total_requests, 1, "only the undeadlined one finished");
+    assert_eq!(e.pool.pages_in_use(), 0, "expired request's pages released");
+}
+
+#[test]
+fn serve_trace_shim_matches_hand_pumped_frontend() {
+    let m = require!(manifest());
+    // session-free trace: decode is deterministic per request regardless of
+    // batch grouping, so everything but measured timings must be identical
+    let trace = generate_trace(&TraceConfig {
+        n_requests: 8,
+        prompt_chars: (80, 200),
+        new_tokens: (4, 8),
+        session_reuse_prob: 0.0,
+        n_sessions: 0,
+        ..Default::default()
+    });
+    let cfg = || ServingConfig {
+        model: MODEL.to_string(),
+        policy: PolicyKind::TinyServe,
+        budget: 256,
+        max_batch: 4,
+        ..Default::default()
+    };
+    let summarize = |r: &ServeReport| {
+        let mut reqs: Vec<(u64, usize, usize, usize)> = r
+            .requests
+            .iter()
+            .map(|q| (q.id, q.prompt_tokens, q.new_tokens, q.session_reused_tokens))
+            .collect();
+        reqs.sort();
+        format!(
+            "n={} tokens={} acc={:?} char={:?} admitted={} reqs={:?}",
+            r.metrics.total_requests,
+            r.metrics.total_new_tokens,
+            r.accuracy,
+            r.char_accuracy,
+            r.batcher_stats.admitted,
+            reqs
+        )
+    };
+
+    let mut e1 = Engine::from_manifest(&m, cfg()).expect("engine");
+    let mut p1 = Pipeline::new();
+    let r1 = serve_trace(&mut e1, &trace, &ServeOptions::default(), &mut p1)
+        .expect("shim serve");
+
+    let mut e2 = Engine::from_manifest(&m, cfg()).expect("engine");
+    let mut p2 = Pipeline::new();
+    let mut fe = Frontend::builder()
+        .options(ServeOptions::default())
+        .build(&mut e2, &mut p2);
+    for req in &trace {
+        fe.submit(req.clone());
+    }
+    let mut streamed = 0u64;
+    while fe.has_work() {
+        for ev in fe.step().expect("step") {
+            if matches!(ev, ServeEvent::Token { .. }) {
+                streamed += 1;
+            }
+        }
+    }
+    let r2 = fe.into_report();
+
+    assert_eq!(
+        summarize(&r1),
+        summarize(&r2),
+        "shim and hand-pumped frontend diverged on deterministic fields"
+    );
+    assert_eq!(
+        streamed, r2.metrics.total_new_tokens,
+        "every decoded token surfaced as a Token event"
+    );
+    assert_eq!(e1.pool.pages_in_use(), 0);
+    assert_eq!(e2.pool.pages_in_use(), 0);
+}
+
 #[test]
 fn session_reuse_cuts_prefill_time() {
     let m = require!(manifest());
@@ -418,6 +643,7 @@ fn session_reuse_cuts_prefill_time() {
         session: Some(7),
         task: None,
         answer: Some(doc.answer.clone()),
+        deadline_ms: None,
     };
     let trace = vec![mk(0, &q0, 0.0), mk(1, &q1, 0.1)];
     let mut plugins = Pipeline::new();

@@ -269,6 +269,7 @@ fn prop_store_budget_pinning_and_conservation() {
                 EvictionPolicyKind::Lru,
                 EvictionPolicyKind::Clock,
                 EvictionPolicyKind::QueryAware,
+                EvictionPolicyKind::Sieve,
             ]);
         let budget_pages = 3 + ctx.rng.usize(6);
         let budget = budget_pages * pool.page_bytes();
