@@ -2,6 +2,10 @@
 //! overhead across session counts and reuse probabilities (measured through
 //! the real session store + router on the serving loop).
 
+// `serve_trace` is deprecated in favour of the Frontend lifecycle API but
+// stays the trace-replay entry point for paper-table benches.
+#![allow(deprecated)]
+
 use tinyserve::config::ServingConfig;
 use tinyserve::coordinator::{serve_trace, ServeOptions};
 use tinyserve::engine::Engine;

@@ -6,6 +6,10 @@
 //!   TensorRT-LLM-like  greedy fused batching, larger batch, no timeout
 //!   TinyServe          query-aware selection + continuous batching
 
+// `serve_trace` is deprecated in favour of the Frontend lifecycle API but
+// stays the trace-replay entry point for paper-table benches.
+#![allow(deprecated)]
+
 use tinyserve::config::ServingConfig;
 use tinyserve::coordinator::batcher::BatcherConfig;
 use tinyserve::coordinator::{serve_trace, ServeOptions};

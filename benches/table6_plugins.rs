@@ -3,6 +3,10 @@
 //! one giant page), w/o session reuse, w/o entropy early-exit, w/o
 //! continuous batching.
 
+// `serve_trace` is deprecated in favour of the Frontend lifecycle API but
+// stays the trace-replay entry point for paper-table benches.
+#![allow(deprecated)]
+
 use tinyserve::config::ServingConfig;
 use tinyserve::coordinator::batcher::BatcherConfig;
 use tinyserve::coordinator::{serve_trace, ServeOptions};

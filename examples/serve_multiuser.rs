@@ -1,29 +1,42 @@
 //! END-TO-END DRIVER (EXPERIMENTS.md §E2E): serve a realistic multi-user
-//! Poisson workload through the request-lifecycle API — router ->
-//! continuous batcher -> session store -> query-aware engine -> PJRT
-//! executables — with the lifecycle features the monolithic `serve_trace`
-//! loop could not express:
+//! workload through the request-lifecycle API over a real worker pool —
+//! EDF batcher -> dispatch policy -> per-worker engines/sessions ->
+//! query-aware decode — with the lifecycle features the monolithic
+//! `serve_trace` loop could not express:
 //!
 //!   * tokens stream incrementally as `ServeEvent::Token`s;
+//!   * `--workers N` decodes on N engine workers, each owning a slice of
+//!     the KV budget (`--dispatch` picks round-robin / least-loaded /
+//!     session-affinity);
 //!   * one request is cancelled mid-stream and its KV pages provably
-//!     return to the pool (`bytes_in_use` drops at the cancel point);
-//!   * `--deadline-ms D` puts an SLO on every 4th request, and the
-//!     frontend sheds/aborts the ones that miss it.
+//!     return to its worker's pool (summed `bytes_in_use` drops at the
+//!     cancel point);
+//!   * `--deadline-ms D` puts an SLO on every 4th request — EDF admission
+//!     pulls them forward, and the frontend sheds/aborts the ones that
+//!     miss it anyway;
+//!   * `--arrival poisson|gamma` switches from trace replay to the live
+//!     open-loop generator (`--arrival-shape steady|ramp|burst|diurnal`).
 //!
 //!     cargo run --release --example serve_multiuser -- \
 //!         --requests 64 --policy tinyserve --budget 256 --batch 4 \
-//!         --cancel-after 3 --deadline-ms 0
+//!         --workers 2 --dispatch least-loaded --cancel-after 3 \
+//!         --deadline-ms 0
 
 use anyhow::Result;
 
 use tinyserve::config::ServingConfig;
-use tinyserve::coordinator::{Frontend, Lifecycle, ServeEvent, ServeOptions};
-use tinyserve::engine::Engine;
+use tinyserve::coordinator::{
+    DispatchKind, Frontend, Lifecycle, ServeEvent, ServeOptions, WorkerPool,
+};
 use tinyserve::plugins::{EntropyEarlyExit, Pipeline, RepetitionGuard};
 use tinyserve::report::Table;
+use tinyserve::runtime::Manifest;
 use tinyserve::sparsity::PolicyKind;
 use tinyserve::util::cli::Args;
-use tinyserve::workload::{generate_trace, TraceConfig};
+use tinyserve::workload::{
+    generate_trace, ArrivalProcess, LoadShape, OpenLoopConfig, OpenLoopGen,
+    TraceConfig,
+};
 
 fn main() -> Result<()> {
     let args = Args::parse();
@@ -38,68 +51,119 @@ fn main() -> Result<()> {
             std::process::exit(2);
         }
     };
+    let dispatch_arg = args.str_or("dispatch", "least-loaded");
+    let dispatch = match DispatchKind::parse(&dispatch_arg) {
+        Some(d) => d,
+        None => {
+            eprintln!(
+                "unknown --dispatch '{dispatch_arg}'; valid: {}",
+                DispatchKind::names().join("|")
+            );
+            std::process::exit(2);
+        }
+    };
     let cfg = ServingConfig {
         model: args.str_or("model", "tiny-trained"),
         policy,
         budget: args.usize_or("budget", 256),
         max_batch: args.usize_or("batch", 4),
+        kv_budget_mb: args.f64_opt("kv-budget-mb"),
         ..Default::default()
     };
-    let trace_cfg = TraceConfig {
-        n_requests: args.usize_or("requests", 64),
-        mean_interarrival_s: args.f64_or("interarrival-ms", 50.0) / 1e3,
-        prompt_chars: (200, 600),
-        new_tokens: (10, 30),
-        session_reuse_prob: args.f64_or("session-prob", 0.35),
-        n_sessions: args.usize_or("sessions", 8),
-        seed: args.usize_or("seed", 42) as u64,
-    };
+    let workers = args.usize_or("workers", 2);
+    let n_requests = args.usize_or("requests", 64);
+    let seed = args.usize_or("seed", 42) as u64;
+    let interarrival_ms = args.f64_or("interarrival-ms", 50.0);
+    let session_prob = args.f64_or("session-prob", 0.35);
+    let n_sessions = args.usize_or("sessions", 8);
+    let arrival = args.str_or("arrival", "trace");
+    let deadline_ms = args.f64_or("deadline-ms", 0.0);
 
     println!(
-        "== multi-user serving: {} requests, model {}, policy {}, budget {} ==",
-        trace_cfg.n_requests, cfg.model, policy.name(), cfg.budget
+        "== multi-user serving: {n_requests} requests, model {}, policy {}, \
+         budget {}, {workers} workers ({}), arrival {arrival} ==",
+        cfg.model,
+        policy.name(),
+        cfg.budget,
+        dispatch.name(),
     );
-    let mut engine = Engine::new(&tinyserve::artifacts_dir(), cfg)?;
-    engine.warmup()?;
-    let mut trace = generate_trace(&trace_cfg);
+    let manifest = Manifest::load(&tinyserve::artifacts_dir())?;
+    let pool = WorkerPool::build(&manifest, &cfg, workers, dispatch)?;
+    pool.warmup()?;
 
-    // optional SLO: every 4th request must finish within --deadline-ms
-    let deadline_ms = args.f64_or("deadline-ms", 0.0);
-    if deadline_ms > 0.0 {
-        for req in trace.iter_mut().filter(|r| r.id % 4 == 0) {
-            req.deadline_ms = Some(deadline_ms);
-        }
-    }
-    // pick a session-free, deadline-free request to cancel after
-    // `cancel_after` streamed tokens (session-free so every one of its
-    // pages is exclusively owned and the byte drop is unambiguous;
-    // deadline-free so expiry cannot race the cancellation)
-    let cancel_after = args.usize_or("cancel-after", 3).max(1);
-    let victim: Option<u64> = trace
-        .iter()
-        .find(|r| {
-            r.session.is_none()
-                && r.deadline_ms.is_none()
-                && r.max_new_tokens > cancel_after + 2
-        })
-        .map(|r| r.id);
-
-    let opts = ServeOptions {
-        n_workers: args.usize_or("workers", 4),
-        collect_traces: true,
-        ..Default::default()
-    };
+    let opts = ServeOptions { collect_traces: true, seed, ..Default::default() };
     let mut plugins = Pipeline::new();
     plugins.push(Box::new(EntropyEarlyExit::new(0.05, 3, 4)));
     plugins.push(Box::new(RepetitionGuard { max_run: 16 }));
+    let mut fe = Frontend::builder().options(opts).build_pool(pool, &mut plugins);
 
-    let t0 = std::time::Instant::now();
-    let mut fe = Frontend::builder().options(opts).build(&mut engine, &mut plugins);
-    for req in trace {
-        fe.submit(req);
+    // pick a session-free, deadline-free request to cancel after
+    // `cancel_after` streamed tokens (session-free so every one of its
+    // pages is exclusively owned and the byte drop is unambiguous;
+    // deadline-free so expiry cannot race the cancellation). Only the
+    // trace mode knows its requests upfront; open-loop runs skip the demo.
+    let cancel_after = args.usize_or("cancel-after", 3).max(1);
+    let mut victim: Option<u64> = None;
+    if arrival == "trace" {
+        let mut trace = generate_trace(&TraceConfig {
+            n_requests,
+            mean_interarrival_s: interarrival_ms / 1e3,
+            prompt_chars: (200, 600),
+            new_tokens: (10, 30),
+            session_reuse_prob: session_prob,
+            n_sessions,
+            seed,
+        });
+        // optional SLO: every 4th request must finish within --deadline-ms
+        if deadline_ms > 0.0 {
+            for req in trace.iter_mut().filter(|r| r.id % 4 == 0) {
+                req.deadline_ms = Some(deadline_ms);
+            }
+        }
+        victim = trace
+            .iter()
+            .find(|r| {
+                r.session.is_none()
+                    && r.deadline_ms.is_none()
+                    && r.max_new_tokens > cancel_after + 2
+            })
+            .map(|r| r.id);
+        for req in trace {
+            fe.submit(req);
+        }
+    } else {
+        let process = ArrivalProcess::parse(&arrival).unwrap_or_else(|| {
+            eprintln!(
+                "unknown --arrival '{arrival}'; valid: trace|{}",
+                ArrivalProcess::names().join("|")
+            );
+            std::process::exit(2);
+        });
+        let shape_arg = args.str_or("arrival-shape", "burst");
+        let shape = LoadShape::parse(&shape_arg).unwrap_or_else(|| {
+            eprintln!(
+                "unknown --arrival-shape '{shape_arg}'; valid: {}",
+                LoadShape::names().join("|")
+            );
+            std::process::exit(2);
+        });
+        fe.set_source(Box::new(OpenLoopGen::new(OpenLoopConfig {
+            n_requests,
+            rate_rps: 1e3 / interarrival_ms.max(1e-6),
+            process,
+            shape,
+            prompt_chars: (200, 600),
+            new_tokens: (10, 30),
+            session_reuse_prob: session_prob,
+            n_sessions,
+            deadline_ms: if deadline_ms > 0.0 { Some(deadline_ms) } else { None },
+            deadline_every: 4,
+            seed,
+        })));
     }
 
     // pump the event loop, cancelling the victim mid-stream
+    let t0 = std::time::Instant::now();
     let mut victim_tokens = 0usize;
     let mut cancel_bytes: Option<(usize, usize)> = None;
     while fe.has_work() {
@@ -108,15 +172,13 @@ fn main() -> Result<()> {
                 ServeEvent::Token { id, .. } if Some(id) == victim => {
                     victim_tokens += 1;
                     if victim_tokens == cancel_after {
-                        let before =
-                            fe.engine().store.bytes_in_use(&fe.engine().pool);
+                        let before = fe.kv_bytes_in_use();
                         assert!(fe.cancel(id), "victim cancellable mid-stream");
-                        let after =
-                            fe.engine().store.bytes_in_use(&fe.engine().pool);
+                        let after = fe.kv_bytes_in_use();
                         assert!(
                             after < before,
-                            "cancellation must return KV pages to the pool \
-                             ({after} !< {before})"
+                            "cancellation must return KV pages to its worker's \
+                             pool ({after} !< {before})"
                         );
                         cancel_bytes = Some((before, after));
                     }
@@ -147,36 +209,61 @@ fn main() -> Result<()> {
             ),
         }
     }
-    let r = fe.into_report();
+    let (r, pool) = fe.into_parts();
     let real = t0.elapsed().as_secs_f64();
     let mut m = r.metrics;
 
     let mut t = Table::new("serve_multiuser report", &["metric", "value"]);
-    let rows: Vec<(&str, String)> = vec![
-        ("requests completed", format!("{}", m.total_requests)),
-        ("cancelled", format!("{}", m.total_cancelled)),
-        ("deadline expired", format!("{}", m.total_expired)),
-        ("virtual wall clock", format!("{:.2} s", r.wall_s)),
-        ("real compute time", format!("{real:.2} s")),
-        ("engine busy", format!("{:.0} %", r.busy_frac * 100.0)),
-        ("throughput", format!("{:.1} tok/s", m.throughput_tps())),
-        ("request rate", format!("{:.2} req/s", m.requests_per_sec())),
-        ("decode latency", format!("{:.2} ms/token", m.ms_per_token())),
-        ("e2e latency p50", format!("{:.0} ms", m.request_e2e.p50() * 1e3)),
-        ("e2e latency p99", format!("{:.0} ms", m.request_e2e.p99() * 1e3)),
-        ("ttft p50", format!("{:.0} ms", m.request_ttft.p50() * 1e3)),
-        ("ttft p99", format!("{:.0} ms", m.request_ttft.p99() * 1e3)),
-        ("kv page hit rate", format!("{:.1} %", m.hit_rate.mean() * 100.0)),
-        ("exact-match accuracy", format!("{:.1} %", r.accuracy * 100.0)),
-        ("char accuracy", format!("{:.1} %", r.char_accuracy * 100.0)),
-        ("session reuse rate", format!("{:.0} %", r.session_stats.reuse_rate() * 100.0)),
-        ("reused prefix tokens", format!("{}", r.session_stats.reused_tokens)),
-        ("session migrations", format!("{}", r.session_stats.migrations)),
-        ("batcher max queue", format!("{}", r.batcher_stats.max_queue_depth)),
-        ("peak KV pages", format!("{}", engine.pool.peak_pages)),
+    let mut rows: Vec<(String, String)> = vec![
+        ("requests completed".into(), format!("{}", m.total_requests)),
+        ("cancelled".into(), format!("{}", m.total_cancelled)),
+        ("deadline expired".into(), format!("{}", m.total_expired)),
+        ("virtual wall clock".into(), format!("{:.2} s", r.wall_s)),
+        ("real compute time".into(), format!("{real:.2} s")),
+        ("worker busy (sum)".into(), format!("{:.0} %", r.busy_frac * 100.0)),
+        ("throughput".into(), format!("{:.1} tok/s", m.throughput_tps())),
+        ("request rate".into(), format!("{:.2} req/s", m.requests_per_sec())),
+        ("decode latency".into(), format!("{:.2} ms/token", m.ms_per_token())),
+        ("e2e latency p50".into(), format!("{:.0} ms", m.request_e2e.p50() * 1e3)),
+        ("e2e latency p99".into(), format!("{:.0} ms", m.request_e2e.p99() * 1e3)),
+        ("ttft p50".into(), format!("{:.0} ms", m.request_ttft.p50() * 1e3)),
+        ("ttft p99".into(), format!("{:.0} ms", m.request_ttft.p99() * 1e3)),
+        ("kv page hit rate".into(), format!("{:.1} %", m.hit_rate.mean() * 100.0)),
+        ("exact-match accuracy".into(), format!("{:.1} %", r.accuracy * 100.0)),
+        ("char accuracy".into(), format!("{:.1} %", r.char_accuracy * 100.0)),
+        (
+            "session reuse rate".into(),
+            format!("{:.0} %", r.session_stats.reuse_rate() * 100.0),
+        ),
+        (
+            "reused prefix tokens".into(),
+            format!("{}", r.session_stats.reused_tokens),
+        ),
+        ("session migrations".into(), format!("{}", r.session_stats.migrations)),
+        ("batcher max queue".into(), format!("{}", r.batcher_stats.max_queue_depth)),
+        ("edf queue jumps".into(), format!("{}", r.batcher_stats.edf_jumps)),
+        ("deferred admissions".into(), format!("{}", r.batcher_stats.deferred)),
     ];
+    for (w, ws) in r.worker_stats.iter().enumerate() {
+        rows.push((
+            format!("worker {w}"),
+            format!(
+                "admitted {}  finished {}  tokens {}  steps {}  kv peak {:.2} MB",
+                ws.admitted,
+                ws.finished,
+                ws.new_tokens,
+                ws.steps,
+                ws.kv_bytes_peak as f64 / 1e6
+            ),
+        ));
+        assert_eq!(
+            pool.engine(w).pool.pages_in_use(),
+            0,
+            "worker {w} leaked pages after the run"
+        );
+    }
     for (k, v) in rows {
-        t.row(vec![k.into(), v]);
+        t.row(vec![k, v]);
     }
     t.emit(&tinyserve::results_dir(), "serve_multiuser");
 

@@ -1,10 +1,13 @@
 //! Request-lifecycle serving frontend: the event-driven replacement for the
-//! monolithic `serve_trace` batch call.
+//! monolithic `serve_trace` batch call, pumping one *or many* engine
+//! workers.
 //!
 //! A `Frontend` owns the discrete-event virtual `Clock` and the coordinator
-//! stack (batcher, router, session store) over a mutably borrowed `Engine`.
-//! Callers drive it with per-request operations instead of a pre-materialized
-//! trace:
+//! stack (EDF batcher, router, per-worker session stores) over a
+//! [`WorkerPool`](super::pool::WorkerPool) — either a borrowed single
+//! engine (`build`) or N pool-owned engines (`build_pool`), each with its
+//! own `PageStore` slice of the global KV budget. Callers drive it with
+//! per-request operations instead of a pre-materialized trace:
 //!
 //! ```text
 //! let mut fe = Frontend::builder().options(opts).build(&mut engine, &mut plugins);
@@ -22,13 +25,26 @@
 //! let report = fe.into_report();
 //! ```
 //!
+//! Live workloads skip `submit` entirely: `set_source` attaches a
+//! [`RequestSource`](crate::workload::RequestSource) (e.g.
+//! `workload::openloop::OpenLoopGen`) and the pump pulls arrivals off it
+//! against the virtual clock — open-loop serving instead of trace replay.
+//!
 //! Lifecycle: `Pending` (submitted, arrival in the virtual future) ->
-//! `Queued` (in the batcher) -> `Active` (prefilled, decoding) -> one of
-//! `Finished` / `Cancelled` / `DeadlineExpired`. Cancellation and deadline
-//! expiry release the sequence's KV pages back through the `PageStore`
-//! mid-flight: pins are cleared, refcounts drop, and `bytes_in_use` falls
-//! immediately — admission pressure relaxes without waiting for the request
-//! to run to completion.
+//! `Queued` (in the batcher) -> possibly `Deferred` (admission bounced by
+//! KV-budget pressure, still in the queue) -> `Active` (prefilled,
+//! decoding) -> one of `Finished` / `Cancelled` / `DeadlineExpired`.
+//! Cancellation and deadline expiry release the sequence's KV pages back
+//! through the worker's `PageStore` mid-flight: pins are cleared, refcounts
+//! drop, and `bytes_in_use` falls immediately — admission pressure relaxes
+//! without waiting for the request to run to completion.
+//!
+//! Multi-worker rounds: admissions dispatch to a worker (round-robin /
+//! least-loaded / session-affinity) and prefill serially on the pump;
+//! decode steps every worker's batch in the same scheduling round, merging
+//! the per-worker `StepMetrics` into one record and advancing the clock by
+//! the *slowest* worker — concurrent workers overlap, which is what turns
+//! "N workers" from router bookkeeping into real throughput scaling.
 //!
 //! The deprecated `serve_trace` shim (`coordinator::server`) is exactly
 //! "submit everything, drain, report", so trace-driven benches keep their
@@ -39,16 +55,18 @@ use std::collections::{HashMap, VecDeque};
 
 use anyhow::Result;
 
-use crate::engine::{Engine, Sequence};
+use crate::engine::{Engine, SampleOut, Sequence};
+use crate::hwmodel::{HwModel, Shape};
 use crate::metrics::{RequestRecord, ServerMetrics, StepMetrics};
 use crate::plugins::{Pipeline, PluginAction, StepView};
 use crate::util::rng::Rng;
-use crate::workload::{tasks, Request};
+use crate::workload::{tasks, Request, RequestSource};
 
 use super::batcher::{Batcher, BatcherConfig, QueuedItem, Round};
+use super::pool::WorkerPool;
 use super::router::Router;
-use super::server::{ServeOptions, ServeReport};
-use super::session::SessionStore;
+use super::server::{ServeOptions, ServeReport, TimeModel};
+use super::session::{SessionStats, SessionStore};
 
 /// Discrete-event virtual clock. Arrivals advance it to their timestamps;
 /// every compute quantum (prefill, decode step, simulated spill/migration)
@@ -95,6 +113,10 @@ pub enum Lifecycle {
     Pending,
     /// waiting in the batcher's admission queue
     Queued,
+    /// admission bounced by KV-budget pressure; still queued, retried
+    /// after a decode round — cancellable and deadline-sheddable like any
+    /// queued request
+    Deferred,
     /// prefilled and decoding
     Active,
     Finished,
@@ -142,6 +164,40 @@ impl ServeEvent {
             ServeEvent::Finished(rec) => rec.id,
         }
     }
+
+    /// Compact deterministic wire form for event-log diffing. With
+    /// `with_time` (sound under `TimeModel::Modeled`, where the clock is
+    /// seed-deterministic) timestamps are included bit-exactly; without,
+    /// only the kind/id/payload sequence is compared — the right signature
+    /// under measured time, where wall durations jitter run to run.
+    /// `Finished` carries no absolute clock reading, so its time field is
+    /// the request's e2e *duration*, labelled `e2e@` to keep the log's
+    /// `@` fields (absolute virtual instants) internally consistent.
+    pub fn sig(&self, with_time: bool) -> String {
+        let (kind, id, payload, tag, t) = match self {
+            ServeEvent::Admitted { id, t } => ("A", *id, String::new(), "@", *t),
+            ServeEvent::Deferred { id, t } => ("D", *id, String::new(), "@", *t),
+            ServeEvent::Token { id, tok, t } => {
+                ("T", *id, format!(" {tok}"), "@", *t)
+            }
+            ServeEvent::Cancelled { id, t } => ("C", *id, String::new(), "@", *t),
+            ServeEvent::DeadlineExpired { id, t } => {
+                ("X", *id, String::new(), "@", *t)
+            }
+            ServeEvent::Finished(r) => (
+                "F",
+                r.id,
+                format!(" p{} n{}", r.prompt_tokens, r.new_tokens),
+                "e2e@",
+                r.e2e_seconds,
+            ),
+        };
+        if with_time {
+            format!("{kind} {id}{payload} {tag}{:016x}", t.to_bits())
+        } else {
+            format!("{kind} {id}{payload}")
+        }
+    }
 }
 
 /// Builder for `Frontend` (serving config lives in the engine; coordination
@@ -149,6 +205,7 @@ impl ServeEvent {
 #[derive(Default)]
 pub struct FrontendBuilder {
     opts: ServeOptions,
+    source: Option<Box<dyn RequestSource>>,
 }
 
 impl FrontendBuilder {
@@ -157,12 +214,34 @@ impl FrontendBuilder {
         self
     }
 
+    /// Attach a live request source (open-loop generator); the pump pulls
+    /// arrivals from it against the virtual clock.
+    pub fn source(mut self, src: Box<dyn RequestSource>) -> Self {
+        self.source = Some(src);
+        self
+    }
+
+    /// Single borrowed engine: a one-slot pool, code-path-identical to the
+    /// multi-worker frontend with `workers = 1`.
     pub fn build<'a>(
         self,
         engine: &'a mut Engine,
         plugins: &'a mut Pipeline,
     ) -> Frontend<'a> {
-        Frontend::new(engine, self.opts, plugins)
+        let pool = WorkerPool::single(engine);
+        self.build_pool(pool, plugins)
+    }
+
+    /// Frontend over an explicit worker pool (owned engines, dispatch
+    /// policy and per-worker KV budget slices set at pool construction).
+    pub fn build_pool<'a>(
+        self,
+        pool: WorkerPool<'a>,
+        plugins: &'a mut Pipeline,
+    ) -> Frontend<'a> {
+        let mut fe = Frontend::new_with_pool(pool, self.opts, plugins);
+        fe.source = self.source;
+        fe
     }
 }
 
@@ -173,18 +252,23 @@ struct Active {
     prefill_s: f64,
     first_token_s: Option<f64>,
     reused_tokens: usize,
+    /// virtual router worker (migration accounting within the engine)
     worker: usize,
+    /// pool engine worker actually decoding this request
+    engine_idx: usize,
 }
 
 /// The request-lifecycle serving frontend (see module docs).
 pub struct Frontend<'a> {
-    engine: &'a mut Engine,
+    pool: WorkerPool<'a>,
     plugins: &'a mut Pipeline,
     opts: ServeOptions,
     clock: Clock,
     rng: Rng,
     batcher: Batcher,
-    sessions: SessionStore,
+    /// one session store per engine worker: snapshots hold pages of that
+    /// worker's pool and cannot be restored across workers
+    sessions: Vec<SessionStore>,
     router: Router,
     metrics: ServerMetrics,
     records: Vec<RequestRecord>,
@@ -197,6 +281,8 @@ pub struct Frontend<'a> {
     /// (stable for ties, so trace order is preserved); in-order
     /// submission — the trace shim — inserts and drains at O(1)
     pending: VecDeque<usize>,
+    /// live arrival source, polled by the pump against the virtual clock
+    source: Option<Box<dyn RequestSource>>,
     events: VecDeque<ServeEvent>,
     busy: f64,
     per_task: HashMap<&'static str, (f64, f64, usize)>,
@@ -215,16 +301,33 @@ impl<'a> Frontend<'a> {
         opts: ServeOptions,
         plugins: &'a mut Pipeline,
     ) -> Frontend<'a> {
+        Frontend::new_with_pool(WorkerPool::single(engine), opts, plugins)
+    }
+
+    pub fn new_with_pool(
+        pool: WorkerPool<'a>,
+        opts: ServeOptions,
+        plugins: &'a mut Pipeline,
+    ) -> Frontend<'a> {
+        let n = pool.len();
+        // the configured active cap is per worker: the global batcher cap
+        // is min(opts cap, engine cap) * n, so pools actually scale their
+        // admissible concurrency — a one-slot pool reduces to the classic
+        // min(opts, engine cap)
+        let per_worker_cap = (0..n)
+            .map(|w| pool.engine(w).cfg.max_active)
+            .min()
+            .expect("non-empty pool");
         let batcher = Batcher::new(BatcherConfig {
-            max_active: opts.batcher.max_active.min(engine.cfg.max_active),
+            max_active: opts.batcher.max_active.min(per_worker_cap) * n,
             ..opts.batcher.clone()
         });
         let metrics = ServerMetrics::new(opts.collect_traces);
         let rng = Rng::new(opts.seed);
-        let sessions = SessionStore::new(opts.max_sessions);
+        let sessions = (0..n).map(|_| SessionStore::new(opts.max_sessions)).collect();
         let router = Router::new(opts.n_workers);
         Frontend {
-            engine,
+            pool,
             plugins,
             opts,
             clock: Clock::new(),
@@ -239,6 +342,7 @@ impl<'a> Frontend<'a> {
             state: Vec::new(),
             id_to_idx: HashMap::new(),
             pending: VecDeque::new(),
+            source: None,
             events: VecDeque::new(),
             busy: 0.0,
             per_task: HashMap::new(),
@@ -248,15 +352,35 @@ impl<'a> Frontend<'a> {
         }
     }
 
+    /// Attach (or replace) a live request source mid-run.
+    pub fn set_source(&mut self, src: Box<dyn RequestSource>) {
+        self.source = Some(src);
+    }
+
     /// Current virtual time.
     pub fn now(&self) -> f64 {
         self.clock.now()
     }
 
-    /// Read-only view of the underlying engine (pool/store introspection:
-    /// `fe.engine().store.bytes_in_use(&fe.engine().pool)`).
+    /// Read-only view of the first pool worker's engine (single-engine
+    /// introspection: `fe.engine().store.bytes_in_use(&fe.engine().pool)`).
     pub fn engine(&self) -> &Engine {
-        self.engine
+        self.pool.engine(0)
+    }
+
+    /// Read-only view of worker `w`'s engine.
+    pub fn worker_engine(&self, w: usize) -> &Engine {
+        self.pool.engine(w)
+    }
+
+    /// Number of engine workers in the pool.
+    pub fn n_pool_workers(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Resident KV bytes summed across all pool workers.
+    pub fn kv_bytes_in_use(&self) -> usize {
+        self.pool.total_kv_bytes()
     }
 
     /// Run-level metrics accumulated so far.
@@ -269,13 +393,18 @@ impl<'a> Frontend<'a> {
         self.id_to_idx.get(&id).map(|&i| self.state[i])
     }
 
-    /// Anything left to pump? (pending arrivals, queued or active requests,
-    /// or undelivered events)
+    /// Anything left to pump? (pending arrivals — submitted or still in
+    /// the live source — queued or active requests, or undelivered events)
     pub fn has_work(&self) -> bool {
         !self.pending.is_empty()
             || self.batcher.queue_len() > 0
             || !self.active.is_empty()
             || !self.events.is_empty()
+            || self
+                .source
+                .as_ref()
+                .map(|s| s.peek_arrival_s().is_some())
+                .unwrap_or(false)
     }
 
     /// Submit a request. Its `arrival_s` is interpreted on the frontend's
@@ -298,10 +427,11 @@ impl<'a> Frontend<'a> {
         RequestHandle { id }
     }
 
-    /// Cancel a request in any pre-terminal state. Queued requests leave
-    /// the admission queue immediately; active ones abort mid-decode and
-    /// their KV pages return to the pool (pins cleared, `bytes_in_use`
-    /// drops). Returns false for unknown ids and already-terminal requests.
+    /// Cancel a request in any pre-terminal state. Queued and deferred
+    /// requests leave the admission queue immediately; active ones abort
+    /// mid-decode and their KV pages return to the worker's pool (pins
+    /// cleared, `bytes_in_use` drops). Returns false for unknown ids and
+    /// already-terminal requests.
     pub fn cancel(&mut self, id: u64) -> bool {
         let Some(&idx) = self.id_to_idx.get(&id) else {
             return false;
@@ -311,7 +441,10 @@ impl<'a> Frontend<'a> {
             Lifecycle::Pending => {
                 self.pending.retain(|&p| p != idx);
             }
-            Lifecycle::Queued => {
+            // a Deferred request is physically back in the batcher queue
+            // (requeued at its EDF position), so it cancels exactly like a
+            // Queued one — it must emit Cancelled, never silently vanish
+            Lifecycle::Queued | Lifecycle::Deferred => {
                 self.batcher.remove(idx);
             }
             Lifecycle::Active => {
@@ -331,10 +464,11 @@ impl<'a> Frontend<'a> {
         true
     }
 
-    /// One scheduling round of the event pump: pull due arrivals, ask the
-    /// batcher for a decision, run it (admit/prefill, decode, or idle-jump
-    /// the clock), and return the events produced. An empty vec with
-    /// `has_work() == false` means the frontend is drained.
+    /// One scheduling round of the event pump: pull due arrivals (from
+    /// `submit`ted requests and the live source), ask the batcher for a
+    /// decision, run it (admit/prefill, decode across all workers, or
+    /// idle-jump the clock), and return the events produced. An empty vec
+    /// with `has_work() == false` means the frontend is drained.
     pub fn step(&mut self) -> Result<Vec<ServeEvent>> {
         self.pump_round()?;
         Ok(self.events.drain(..).collect())
@@ -353,10 +487,25 @@ impl<'a> Frontend<'a> {
     }
 
     /// Consume the frontend into the run report (the `serve_trace` output
-    /// shape). Clears surviving session snapshots back into the pool.
-    pub fn into_report(mut self) -> ServeReport {
+    /// shape). Clears surviving session snapshots back into their pools.
+    pub fn into_report(self) -> ServeReport {
+        self.into_parts().0
+    }
+
+    /// Like [`into_report`](Self::into_report), but also hands back the
+    /// worker pool so callers can inspect (or reuse) the engines after the
+    /// run — the owned-pool analogue of keeping your `&mut Engine`.
+    pub fn into_parts(mut self) -> (ServeReport, WorkerPool<'a>) {
         self.metrics.run_seconds = self.clock.now();
-        self.sessions.clear(&mut self.engine.pool);
+        for w in 0..self.pool.len() {
+            let pool = &mut self.pool;
+            let sessions = &mut self.sessions;
+            sessions[w].clear(&mut pool.engine_mut(w).pool);
+        }
+        let mut session_stats = SessionStats::default();
+        for s in &self.sessions {
+            session_stats.merge(&s.stats);
+        }
         let mut per_task_out: Vec<(String, f64, usize)> = self
             .per_task
             .into_iter()
@@ -364,7 +513,7 @@ impl<'a> Frontend<'a> {
             .collect();
         per_task_out.sort_by(|a, b| a.0.cmp(&b.0));
         let now = self.clock.now();
-        ServeReport {
+        let report = ServeReport {
             accuracy: if self.scored > 0 {
                 self.exact_hits as f64 / self.scored as f64
             } else {
@@ -376,20 +525,30 @@ impl<'a> Frontend<'a> {
                 f64::NAN
             },
             per_task: per_task_out,
-            session_stats: self.sessions.stats.clone(),
+            session_stats,
             router_stats: self.router.stats.clone(),
             batcher_stats: std::mem::take(&mut self.batcher.stats),
             metrics: self.metrics,
             requests: self.records,
             wall_s: now,
             busy_frac: if now > 0.0 { self.busy / now } else { 0.0 },
-        }
+            worker_stats: self.pool.stats.clone(),
+        };
+        (report, self.pool)
     }
 
     // ---- internal pump ----
 
     fn pump_round(&mut self) -> Result<()> {
         let now = self.clock.now();
+        // pull live-source arrivals that have happened into the pending set
+        let due = match self.source.as_mut() {
+            Some(src) => src.take_due(now),
+            None => Vec::new(),
+        };
+        for req in due {
+            self.submit(req);
+        }
         // pull arrivals that have happened
         while let Some(&idx) = self.pending.front() {
             if self.reqs[idx].arrival_s > now {
@@ -401,13 +560,27 @@ impl<'a> Frontend<'a> {
                 request_idx: idx,
                 arrival_s: self.reqs[idx].arrival_s,
                 prompt_len: self.reqs[idx].prompt.len(),
+                deadline_s: self.reqs[idx]
+                    .deadline_ms
+                    .map(|d| self.reqs[idx].arrival_s + d / 1e3),
             });
         }
-        let next_arrival = self.pending.front().map(|&i| self.reqs[i].arrival_s);
+        let mut next_arrival = self.pending.front().map(|&i| self.reqs[i].arrival_s);
+        if let Some(t) = self.source.as_ref().and_then(|s| s.peek_arrival_s()) {
+            next_arrival = Some(match next_arrival {
+                Some(a) => a.min(t),
+                None => t,
+            });
+        }
         if self.pending.is_empty()
             && self.batcher.queue_len() == 0
             && self.active.is_empty()
         {
+            // only the live source has work left: idle-jump to its next
+            // arrival so the pump makes progress
+            if let Some(t) = next_arrival {
+                self.clock.advance_to(t);
+            }
             return Ok(());
         }
         match self.batcher.schedule(now, next_arrival) {
@@ -430,13 +603,48 @@ impl<'a> Frontend<'a> {
         }
     }
 
+    /// Deterministic hwmodel price of prefilling `tokens` on this engine
+    /// (TimeModel::Modeled): the chunked prefill artifact processes ~8
+    /// prompt tokens per pass of the decode path.
+    fn modeled_prefill_s(engine: &Engine, tokens: usize) -> f64 {
+        let shape = Self::modeled_shape(engine, engine.cfg.max_batch, tokens.max(1));
+        HwModel::a100().decode_token(&shape).total_s() * tokens.max(1) as f64 / 8.0
+    }
+
+    /// Deterministic hwmodel price of one decode step over `m.batch` rows.
+    fn modeled_step_s(engine: &Engine, m: &StepMetrics) -> f64 {
+        let ctx = m.resident_tokens / m.batch.max(1);
+        let shape = Self::modeled_shape(engine, m.batch.max(1), ctx.max(1));
+        HwModel::a100().decode_token(&shape).total_s()
+    }
+
+    fn modeled_shape(engine: &Engine, batch: usize, ctx: usize) -> Shape {
+        Shape {
+            d_model: engine.d_model,
+            n_layer: engine.n_layer,
+            n_params: engine.rt.info.n_params,
+            ctx,
+            page_size: engine.cfg.page_size,
+            k_pages: engine.cfg.budget_pages(),
+            kv_dtype: engine.cfg.kv_dtype,
+            batch,
+        }
+    }
+
     fn admit_round(&mut self, items: Vec<QueuedItem>) -> Result<()> {
         let mut deferred: Vec<QueuedItem> = Vec::new();
+        // deferral is a *per-worker* condition (that worker's KV pressure
+        // or concurrency cap): once a worker bounces an item, every later
+        // item dispatched to the same worker defers too — preserving the
+        // EDF order within the worker — while items bound for other
+        // workers still admit (no head-of-line blocking across workers).
+        // A one-worker pool degenerates to the old global cascade.
+        let mut blocked = vec![false; self.pool.len()];
         for item in items {
             let idx = item.request_idx;
             // authoritative state guard: a cancelled item normally leaves
             // the queue via Batcher::remove, but never trust stragglers
-            if self.state[idx] != Lifecycle::Queued {
+            if !matches!(self.state[idx], Lifecycle::Queued | Lifecycle::Deferred) {
                 self.batcher.abort_admission(1);
                 continue;
             }
@@ -452,26 +660,25 @@ impl<'a> Frontend<'a> {
                 });
                 continue;
             }
-            // KV-budget admission control: shed idle session snapshots
-            // first; if the prompt still cannot fit, defer while in-flight
-            // work can retire and free pages. Once one item defers, later
-            // ones follow to keep FIFO order.
-            if !deferred.is_empty() {
-                self.events.push_back(ServeEvent::Deferred {
-                    id: self.reqs[idx].id,
-                    t: self.clock.now(),
-                });
-                deferred.push(item);
-                continue;
-            }
             let prompt_len = self.reqs[idx].prompt.len();
             let session = self.reqs[idx].session;
-            if !self.engine.kv_admission_ok(prompt_len) {
-                while !self.engine.kv_admission_ok(prompt_len)
-                    && self.sessions.evict_one_lru(&mut self.engine.pool, session)
-                {}
-            }
-            if !self.engine.kv_admission_ok(prompt_len) && !self.active.is_empty() {
+            // dispatch: a session whose snapshot is already resident on a
+            // worker goes back to that worker regardless of policy —
+            // snapshots hold that worker's pages and cannot be restored
+            // elsewhere, so any other choice re-prefills the whole prompt
+            // AND leaves an orphaned snapshot eating the holder's budget.
+            // Everything else is the dispatch policy's call, re-decided on
+            // every admission attempt so a deferred request can land on a
+            // worker that has since freed pages.
+            let holder = session.and_then(|s| {
+                (0..self.pool.len()).find(|&w| self.sessions[w].contains(s))
+            });
+            let w = match holder {
+                Some(h) => h,
+                None => self.pool.dispatch_worker(session),
+            };
+            if blocked[w] {
+                self.state[idx] = Lifecycle::Deferred;
                 self.events.push_back(ServeEvent::Deferred {
                     id: self.reqs[idx].id,
                     t: self.clock.now(),
@@ -479,23 +686,66 @@ impl<'a> Frontend<'a> {
                 deferred.push(item);
                 continue;
             }
-            let mut seq = self.engine.new_sequence();
+            // per-worker concurrency cap: the global batcher admits up to
+            // cap * n_workers, but a count-oblivious dispatch (affinity,
+            // byte-based least-loaded) could pile them all onto one
+            // engine; defer instead of exceeding that engine's max_active
+            let worker_active =
+                self.active.iter().filter(|a| a.engine_idx == w).count();
+            if worker_active >= self.pool.engine(w).cfg.max_active {
+                blocked[w] = true;
+                self.state[idx] = Lifecycle::Deferred;
+                self.events.push_back(ServeEvent::Deferred {
+                    id: self.reqs[idx].id,
+                    t: self.clock.now(),
+                });
+                deferred.push(item);
+                continue;
+            }
+            // KV-budget admission control: shed the target worker's idle
+            // session snapshots first; if the prompt still cannot fit,
+            // defer while that worker's in-flight work can retire and
+            // free pages
+            if !self.pool.engine_mut(w).kv_admission_ok(prompt_len) {
+                while !self.pool.engine_mut(w).kv_admission_ok(prompt_len)
+                    && self.sessions[w]
+                        .evict_one_lru(&mut self.pool.engine_mut(w).pool, session)
+                {}
+            }
+            let worker_busy = self.active.iter().any(|a| a.engine_idx == w);
+            if !self.pool.engine_mut(w).kv_admission_ok(prompt_len) && worker_busy {
+                blocked[w] = true;
+                self.state[idx] = Lifecycle::Deferred;
+                self.events.push_back(ServeEvent::Deferred {
+                    id: self.reqs[idx].id,
+                    t: self.clock.now(),
+                });
+                deferred.push(item);
+                continue;
+            }
+            // admission instant: queue_seconds measures arrival -> here;
+            // decode_seconds starts after this plus the prefill
+            let admitted_s = self.clock.now();
+            let mut seq = self.pool.engine_mut(w).new_sequence();
             seq.max_new_tokens = self.reqs[idx].max_new_tokens;
             // session reuse: restore the stored prompt prefix
             let mut reused = 0usize;
-            let pinned = session.and_then(|s| self.sessions.worker_of(s));
+            let pinned = session.and_then(|s| self.sessions[w].worker_of(s));
             let decision = self.router.route(pinned);
             if let Some(sid) = session {
                 if decision.migrate_from.is_some() {
-                    let bytes =
-                        self.sessions.migrate(sid, decision.worker, &self.engine.pool);
+                    let bytes = self.sessions[w].migrate(
+                        sid,
+                        decision.worker,
+                        &self.pool.engine(w).pool,
+                    );
                     // migration transit at ~200 GB/s NVLink-class
                     self.clock.advance(bytes as f64 / 200e9);
                 }
-                if let Some((cache, n)) = self.sessions.try_reuse(
+                if let Some((cache, n)) = self.sessions[w].try_reuse(
                     sid,
                     &self.reqs[idx].prompt,
-                    &mut self.engine.pool,
+                    &mut self.pool.engine_mut(w).pool,
                 ) {
                     seq.cache = cache;
                     reused = n;
@@ -506,45 +756,66 @@ impl<'a> Frontend<'a> {
                 id: self.reqs[idx].id,
                 t: self.clock.now(),
             });
-            // prefill the (remaining) prompt, measured
+            // prefill the (remaining) prompt, measured or modeled
+            let to_prefill = seq.pending().saturating_sub(1);
             let mut m = StepMetrics::default();
             let t0 = std::time::Instant::now();
             if self.opts.artifact_prefill
-                && self.engine.rt.info.find_artifact("prefill", 1, None).is_ok()
+                && self
+                    .pool
+                    .engine(w)
+                    .rt
+                    .info
+                    .find_artifact("prefill", 1, None)
+                    .is_ok()
             {
-                self.engine.prefill(&mut seq, &mut m)?;
+                self.pool.engine_mut(w).prefill(&mut seq, &mut m)?;
             } else {
-                self.engine.prefill_stepwise(&mut seq, &mut m)?;
+                self.pool.engine_mut(w).prefill_stepwise(&mut seq, &mut m)?;
             }
-            let dt = t0.elapsed().as_secs_f64();
+            let dt = match self.opts.time_model {
+                TimeModel::Measured => t0.elapsed().as_secs_f64(),
+                TimeModel::Modeled => {
+                    Self::modeled_prefill_s(self.pool.engine(w), to_prefill)
+                }
+            };
             self.clock.advance(dt);
             self.busy += dt;
             // snapshot the prompt prefix for future session turns
             if let Some(sid) = session {
                 let covered = seq.cache.pos;
-                self.sessions.store(
+                let pool = &mut self.pool;
+                self.sessions[w].store(
                     sid,
                     &seq.cache,
                     &self.reqs[idx].prompt[..covered],
                     decision.worker,
-                    &mut self.engine.pool,
+                    &mut pool.engine_mut(w).pool,
                 );
             }
             // prefill/snapshot allocations bypass the decode path; demote
             // back under the budget before decoding resumes
-            self.engine.enforce_kv_budget();
+            self.pool.engine_mut(w).enforce_kv_budget();
+            self.pool.note_kv_peak(w);
+            self.pool.stats[w].admitted += 1;
+            // rotation advances only for placements the dispatch policy
+            // made (holder-routed sessions are not rotation decisions)
+            if holder.is_none() {
+                self.pool.note_admitted(w);
+            }
             self.state[idx] = Lifecycle::Active;
             self.active.push(Active {
                 seq,
                 req_idx: idx,
-                admitted_s: item.arrival_s,
+                admitted_s,
                 prefill_s: dt,
                 first_token_s: None,
                 reused_tokens: reused,
                 worker: decision.worker,
+                engine_idx: w,
             });
         }
-        // front of the queue must stay FIFO: requeue in reverse
+        // deferred items go back to the batcher at their EDF positions
         for item in deferred.into_iter().rev() {
             self.batcher.requeue_front(item);
         }
@@ -559,7 +830,7 @@ impl<'a> Frontend<'a> {
         let mut a = self.active.swap_remove(pos);
         self.router.complete(a.worker);
         self.batcher.on_finished(1);
-        self.engine.release_mid_flight(&mut a.seq);
+        self.pool.engine_mut(a.engine_idx).release_mid_flight(&mut a.seq);
         self.plugins.reset();
     }
 
@@ -592,49 +863,96 @@ impl<'a> Frontend<'a> {
         if self.active.is_empty() {
             return Ok(());
         }
-        let b = self.engine.max_batch().min(self.active.len());
-        let mut m = StepMetrics::default();
-        let outs = {
-            let mut batch: Vec<&mut Active> = self.active.iter_mut().take(b).collect();
-            let mut seqs: Vec<&mut Sequence> =
-                batch.iter_mut().map(|a| &mut a.seq).collect();
-            self.engine
-                .decode_step(&mut seqs, self.opts.sampling, &mut self.rng, &mut m)?
-        };
-        // spill_seconds is the simulated cold-tier transfer cost of the
-        // budgeted store (hwmodel-priced, not wall time)
-        self.clock.advance(m.step_seconds + m.spill_seconds);
-        self.busy += m.step_seconds + m.spill_seconds;
-        self.metrics.on_step(&m);
-        let now = self.clock.now();
-        // token events + plugins + first-token bookkeeping
-        for (a, o) in self.active.iter_mut().take(b).zip(outs.iter()) {
-            if a.first_token_s.is_none() {
-                a.first_token_s = Some(now);
-                self.metrics
-                    .on_first_token(now - self.reqs[a.req_idx].arrival_s);
+        // step every worker's batch this round; workers overlap in real
+        // time, so the clock advances by the slowest worker while `busy`
+        // accumulates the sum
+        let n_workers = self.pool.len();
+        let mut merged = StepMetrics::default();
+        let mut round_dt = 0.0f64;
+        let mut rounds: Vec<(usize, Vec<usize>, Vec<SampleOut>)> = Vec::new();
+        for w in 0..n_workers {
+            let cap = self.pool.engine(w).max_batch();
+            let idxs: Vec<usize> = self
+                .active
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.engine_idx == w)
+                .map(|(i, _)| i)
+                .take(cap)
+                .collect();
+            if idxs.is_empty() {
+                continue;
             }
-            self.events.push_back(ServeEvent::Token {
-                id: self.reqs[a.req_idx].id,
-                tok: o.token,
-                t: now,
-            });
-            let action = if self.plugins.is_empty() {
-                PluginAction::Continue
-            } else {
-                self.plugins.on_step(&StepView {
-                    seq: &a.seq,
-                    sample: o,
-                    attn_entropy: a.seq.last_entropy,
-                    pool: &self.engine.pool,
-                })
+            let mut m = StepMetrics::default();
+            let outs = {
+                let active = &mut self.active;
+                let mut batch: Vec<&mut Active> = active
+                    .iter_mut()
+                    .filter(|a| a.engine_idx == w)
+                    .take(cap)
+                    .collect();
+                let mut seqs: Vec<&mut Sequence> =
+                    batch.iter_mut().map(|a| &mut a.seq).collect();
+                self.pool.engine_mut(w).decode_step(
+                    &mut seqs,
+                    self.opts.sampling,
+                    &mut self.rng,
+                    &mut m,
+                )?
             };
-            match action {
-                PluginAction::Stop => a.seq.finished = true,
-                // routed through the page store: the eviction policy's
-                // rank picks the victim, not table order
-                PluginAction::PruneColdest => self.engine.prune_coldest(&mut a.seq),
-                PluginAction::Continue => {}
+            // spill_seconds is the simulated cold-tier transfer cost of
+            // the budgeted store (hwmodel-priced, not wall time)
+            let dt_w = match self.opts.time_model {
+                TimeModel::Measured => m.step_seconds + m.spill_seconds,
+                TimeModel::Modeled => {
+                    Self::modeled_step_s(self.pool.engine(w), &m) + m.spill_seconds
+                }
+            };
+            self.busy += dt_w;
+            round_dt = round_dt.max(dt_w);
+            self.pool.stats[w].steps += 1;
+            self.pool.stats[w].new_tokens += outs.len() as u64;
+            self.pool.note_kv_peak(w);
+            merged.merge(&m);
+            rounds.push((w, idxs, outs));
+        }
+        self.clock.advance(round_dt);
+        self.metrics.on_step(&merged);
+        let now = self.clock.now();
+        // token events + plugins + first-token bookkeeping, in worker
+        // order then batch order — deterministic
+        for (w, idxs, outs) in &rounds {
+            for (&i, o) in idxs.iter().zip(outs.iter()) {
+                let a = &mut self.active[i];
+                if a.first_token_s.is_none() {
+                    a.first_token_s = Some(now);
+                    self.metrics
+                        .on_first_token(now - self.reqs[a.req_idx].arrival_s);
+                }
+                self.events.push_back(ServeEvent::Token {
+                    id: self.reqs[a.req_idx].id,
+                    tok: o.token,
+                    t: now,
+                });
+                let action = if self.plugins.is_empty() {
+                    PluginAction::Continue
+                } else {
+                    self.plugins.on_step(&StepView {
+                        seq: &a.seq,
+                        sample: o,
+                        attn_entropy: a.seq.last_entropy,
+                        pool: &self.pool.engine(*w).pool,
+                    })
+                };
+                match action {
+                    PluginAction::Stop => a.seq.finished = true,
+                    // routed through the page store: the eviction policy's
+                    // rank picks the victim, not table order
+                    PluginAction::PruneColdest => {
+                        self.pool.engine_mut(*w).prune_coldest(&mut a.seq)
+                    }
+                    PluginAction::Continue => {}
+                }
             }
         }
         // retire finished sequences
@@ -678,7 +996,8 @@ impl<'a> Frontend<'a> {
                 self.state[idx] = Lifecycle::Finished;
                 self.router.complete(a.worker);
                 self.batcher.on_finished(1);
-                self.engine.release(&mut a.seq);
+                self.pool.stats[a.engine_idx].finished += 1;
+                self.pool.engine_mut(a.engine_idx).release(&mut a.seq);
                 self.plugins.reset();
             } else {
                 i += 1;
@@ -709,6 +1028,7 @@ mod tests {
     fn lifecycle_terminal_states() {
         assert!(!Lifecycle::Pending.is_terminal());
         assert!(!Lifecycle::Queued.is_terminal());
+        assert!(!Lifecycle::Deferred.is_terminal());
         assert!(!Lifecycle::Active.is_terminal());
         assert!(Lifecycle::Finished.is_terminal());
         assert!(Lifecycle::Cancelled.is_terminal());
@@ -733,5 +1053,25 @@ mod tests {
             session_reused_tokens: 0,
         };
         assert_eq!(ServeEvent::Finished(rec).id(), 11);
+    }
+
+    #[test]
+    fn event_sig_is_stable_and_time_optional() {
+        let tok = ServeEvent::Token { id: 3, tok: 17, t: 0.25 };
+        assert_eq!(tok.sig(false), "T 3 17");
+        assert_eq!(tok.sig(true), format!("T 3 17 @{:016x}", 0.25f64.to_bits()));
+        let rec = RequestRecord {
+            id: 2,
+            queue_seconds: 0.0,
+            prefill_seconds: 0.0,
+            ttft_seconds: 0.0,
+            decode_seconds: 0.0,
+            e2e_seconds: 1.5,
+            prompt_tokens: 10,
+            new_tokens: 4,
+            session_reused_tokens: 0,
+        };
+        assert_eq!(ServeEvent::Finished(rec).sig(false), "F 2 p10 n4");
+        assert_eq!(ServeEvent::Deferred { id: 1, t: 0.0 }.sig(false), "D 1");
     }
 }

@@ -1,11 +1,13 @@
-//! L3 coordination: continuous batcher, session manager, request router,
-//! and the request-lifecycle serving frontend (paper §3.1 "Modular
-//! Scheduling Pipeline" + §4.4). `frontend::Frontend` is the front door —
-//! submit/cancel/step/drain with typed `ServeEvent`s; `server::serve_trace`
-//! remains as a deprecated batch shim over it.
+//! L3 coordination: EDF continuous batcher, session manager, request
+//! router, worker pool, and the request-lifecycle serving frontend (paper
+//! §3.1 "Modular Scheduling Pipeline" + §4.4). `frontend::Frontend` is the
+//! front door — submit/cancel/step/drain with typed `ServeEvent`s over one
+//! borrowed engine or a `pool::WorkerPool` of N owned engine workers;
+//! `server::serve_trace` remains as a deprecated batch shim over it.
 
 pub mod batcher;
 pub mod frontend;
+pub mod pool;
 pub mod router;
 pub mod server;
 pub mod session;
@@ -14,8 +16,9 @@ pub use batcher::{Batcher, BatcherConfig, Round};
 pub use frontend::{
     Clock, Frontend, FrontendBuilder, Lifecycle, RequestHandle, ServeEvent,
 };
+pub use pool::{DispatchKind, WorkerPool, WorkerStats};
 pub use router::Router;
 #[allow(deprecated)]
 pub use server::serve_trace;
-pub use server::{ServeOptions, ServeReport};
+pub use server::{ServeOptions, ServeReport, TimeModel};
 pub use session::SessionStore;

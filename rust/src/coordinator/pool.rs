@@ -1,0 +1,384 @@
+//! Worker pool: the frontend's N engine workers and the dispatch policy
+//! that assigns admitted requests to them.
+//!
+//! The pre-pool frontend drove exactly one `Engine` and accounted
+//! "workers" virtually through the router. A `WorkerPool` makes them real:
+//! each slot is a full `Engine` — its own `PagePool`, its own `PageStore`
+//! carrying an equal slice of the global `kv_budget_mb` — and the decode
+//! pump steps every worker's batch per scheduling round, advancing the
+//! virtual clock by the *slowest* worker (they overlap in real time) while
+//! `busy` accumulates the sum.
+//!
+//! Budget-split rule: a global budget of B bytes over N workers gives each
+//! worker `B / N` (integer division), so the sum of per-worker budgets —
+//! and therefore the sum of per-worker `bytes_in_use` after enforcement —
+//! never exceeds B. Each worker's `PageStore` enforces its slice
+//! independently; there is no cross-worker page traffic (sessions pin to
+//! the worker holding their snapshot pages).
+//!
+//! Dispatch policies:
+//!  * `RoundRobin` — rotate through workers; oblivious but fair in count.
+//!  * `LeastLoaded` — pick the worker with the fewest resident KV bytes;
+//!    load-adaptive, so long prompts and bursts spread by footprint.
+//!  * `SessionAffinity` — hash the session id to a stable worker (fresh
+//!    requests fall back to least-loaded); maximizes cross-request prefix
+//!    reuse because session snapshots live in one worker's pool.
+//!
+//! A pool can also borrow a caller-owned engine (`WorkerPool::single`),
+//! which is how the single-engine `Frontend::build` path is expressed —
+//! a one-slot pool is code-path-identical to the pre-pool frontend.
+
+use anyhow::Result;
+
+use crate::config::ServingConfig;
+use crate::engine::Engine;
+use crate::kvcache::PageStore;
+use crate::runtime::Manifest;
+
+/// How admitted requests are assigned to pool workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchKind {
+    RoundRobin,
+    /// fewest resident KV bytes wins (ties: lowest worker index)
+    LeastLoaded,
+    /// sessions hash to a stable worker; session-free requests fall back
+    /// to least-loaded
+    SessionAffinity,
+}
+
+impl DispatchKind {
+    pub fn parse(s: &str) -> Option<DispatchKind> {
+        match s {
+            "round-robin" | "rr" => Some(DispatchKind::RoundRobin),
+            "least-loaded" | "ll" => Some(DispatchKind::LeastLoaded),
+            "session-affinity" | "affinity" => Some(DispatchKind::SessionAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchKind::RoundRobin => "round-robin",
+            DispatchKind::LeastLoaded => "least-loaded",
+            DispatchKind::SessionAffinity => "session-affinity",
+        }
+    }
+
+    pub fn all() -> &'static [DispatchKind] {
+        &[
+            DispatchKind::RoundRobin,
+            DispatchKind::LeastLoaded,
+            DispatchKind::SessionAffinity,
+        ]
+    }
+
+    pub fn names() -> Vec<&'static str> {
+        Self::all().iter().map(|k| k.name()).collect()
+    }
+}
+
+/// Stable session -> worker hash (one SplitMix64 step — the same mixer
+/// the RNG seeds through, so nearby session ids land on distant workers).
+pub fn affinity_hash(session: u64) -> u64 {
+    let mut state = session;
+    crate::util::rng::splitmix64(&mut state)
+}
+
+/// Pure dispatch decision over per-worker KV loads (bytes resident):
+/// reads the rotation pointer without advancing it, so a candidate that
+/// subsequently defers (worker full, KV pressure) does not drift the
+/// round-robin rotation. Separated from the pool so the policy logic is
+/// unit-testable without constructing engines.
+pub fn peek_worker(
+    kind: DispatchKind,
+    session: Option<u64>,
+    rr_next: usize,
+    kv_loads: &[usize],
+) -> usize {
+    let n = kv_loads.len();
+    debug_assert!(n > 0);
+    if n == 1 {
+        return 0;
+    }
+    let least = || {
+        (0..n)
+            .min_by_key(|&w| kv_loads[w])
+            .expect("non-empty worker set")
+    };
+    match kind {
+        DispatchKind::RoundRobin => rr_next % n,
+        DispatchKind::LeastLoaded => least(),
+        DispatchKind::SessionAffinity => match session {
+            Some(s) => (affinity_hash(s) % n as u64) as usize,
+            None => least(),
+        },
+    }
+}
+
+/// Committing variant of [`peek_worker`]: advances the round-robin
+/// rotation past the returned worker (what a successful placement does).
+pub fn select_worker(
+    kind: DispatchKind,
+    session: Option<u64>,
+    rr_next: &mut usize,
+    kv_loads: &[usize],
+) -> usize {
+    let w = peek_worker(kind, session, *rr_next, kv_loads);
+    if kind == DispatchKind::RoundRobin && kv_loads.len() > 1 {
+        *rr_next = (w + 1) % kv_loads.len();
+    }
+    w
+}
+
+/// Per-worker serving counters, reported in `ServeReport::worker_stats`.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    /// requests dispatched to and prefilled on this worker
+    pub admitted: u64,
+    /// requests that ran to completion here
+    pub finished: u64,
+    /// decode tokens produced by this worker
+    pub new_tokens: u64,
+    /// decode rounds in which this worker stepped a batch
+    pub steps: u64,
+    /// peak post-step resident KV bytes (cold pages at the q8 rate)
+    pub kv_bytes_peak: usize,
+}
+
+enum Slot<'a> {
+    /// caller-owned engine (the classic single-engine frontend path)
+    Borrowed(&'a mut Engine),
+    /// pool-owned engine built by `WorkerPool::build`
+    Owned(Box<Engine>),
+}
+
+impl<'a> Slot<'a> {
+    fn get(&self) -> &Engine {
+        match self {
+            Slot::Borrowed(e) => e,
+            Slot::Owned(e) => e,
+        }
+    }
+
+    fn get_mut(&mut self) -> &mut Engine {
+        match self {
+            Slot::Borrowed(e) => e,
+            Slot::Owned(e) => e,
+        }
+    }
+}
+
+/// N engine workers plus the dispatch state (see module docs).
+pub struct WorkerPool<'a> {
+    slots: Vec<Slot<'a>>,
+    pub dispatch: DispatchKind,
+    rr_next: usize,
+    pub stats: Vec<WorkerStats>,
+}
+
+impl WorkerPool<'static> {
+    /// Build `workers` owned engines from one manifest + serving config.
+    /// A bounded `kv_budget_mb` is split `total_bytes / workers` per
+    /// worker (integer division — the per-worker budgets can never sum
+    /// past the global budget).
+    pub fn build(
+        manifest: &Manifest,
+        cfg: &ServingConfig,
+        workers: usize,
+        dispatch: DispatchKind,
+    ) -> Result<WorkerPool<'static>> {
+        anyhow::ensure!(workers > 0, "worker pool needs at least one worker");
+        let per_worker_budget = cfg.kv_budget_bytes().map(|b| b / workers);
+        let mut slots = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let mut engine = Engine::from_manifest(manifest, cfg.clone())?;
+            if let Some(b) = per_worker_budget {
+                anyhow::ensure!(
+                    b > 0,
+                    "kv budget {:?} MB splits to zero bytes across {} workers",
+                    cfg.kv_budget_mb,
+                    workers
+                );
+                engine.store = PageStore::new(Some(b), cfg.eviction);
+            }
+            slots.push(Slot::Owned(Box::new(engine)));
+        }
+        Ok(WorkerPool {
+            slots,
+            dispatch,
+            rr_next: 0,
+            stats: vec![WorkerStats::default(); workers],
+        })
+    }
+}
+
+impl<'a> WorkerPool<'a> {
+    /// One-slot pool borrowing a caller-owned engine. Dispatch is
+    /// irrelevant with a single worker; `RoundRobin` is recorded.
+    pub fn single(engine: &'a mut Engine) -> WorkerPool<'a> {
+        WorkerPool {
+            slots: vec![Slot::Borrowed(engine)],
+            dispatch: DispatchKind::RoundRobin,
+            rr_next: 0,
+            stats: vec![WorkerStats::default()],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn engine(&self, w: usize) -> &Engine {
+        self.slots[w].get()
+    }
+
+    pub fn engine_mut(&mut self, w: usize) -> &mut Engine {
+        self.slots[w].get_mut()
+    }
+
+    /// Compile every worker's decode executables up front.
+    pub fn warmup(&self) -> Result<()> {
+        for s in &self.slots {
+            s.get().warmup()?;
+        }
+        Ok(())
+    }
+
+    /// Resident KV bytes on one worker (cold pages at the q8 rate).
+    pub fn kv_bytes(&self, w: usize) -> usize {
+        let e = self.slots[w].get();
+        e.store.bytes_in_use(&e.pool)
+    }
+
+    /// Sum of resident KV bytes across workers.
+    pub fn total_kv_bytes(&self) -> usize {
+        (0..self.len()).map(|w| self.kv_bytes(w)).sum()
+    }
+
+    /// Sum of per-worker byte budgets (None when unbounded).
+    pub fn total_budget_bytes(&self) -> Option<usize> {
+        let mut total = 0usize;
+        for s in &self.slots {
+            total += s.get().store.budget_bytes()?;
+        }
+        Some(total)
+    }
+
+    /// Candidate worker for a request under the active dispatch policy.
+    /// Does not advance the round-robin rotation — call
+    /// [`note_admitted`](Self::note_admitted) once the placement sticks,
+    /// so deferrals (worker full, KV pressure) cannot drift the rotation.
+    pub fn dispatch_worker(&self, session: Option<u64>) -> usize {
+        let loads: Vec<usize> = (0..self.len()).map(|w| self.kv_bytes(w)).collect();
+        peek_worker(self.dispatch, session, self.rr_next, &loads)
+    }
+
+    /// A dispatch-policy placement on `w` succeeded: advance the
+    /// round-robin rotation past it.
+    pub fn note_admitted(&mut self, w: usize) {
+        if self.dispatch == DispatchKind::RoundRobin && self.len() > 1 {
+            self.rr_next = (w + 1) % self.len();
+        }
+    }
+
+    /// Record a post-step residency observation for `worker_stats`.
+    pub fn note_kv_peak(&mut self, w: usize) {
+        let bytes = self.kv_bytes(w);
+        let s = &mut self.stats[w];
+        s.kv_bytes_peak = s.kv_bytes_peak.max(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut rr = 0usize;
+        let loads = [0usize; 3];
+        let seq: Vec<usize> = (0..7)
+            .map(|_| select_worker(DispatchKind::RoundRobin, None, &mut rr, &loads))
+            .collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min_bytes_with_stable_ties() {
+        let mut rr = 0usize;
+        let w = select_worker(
+            DispatchKind::LeastLoaded,
+            None,
+            &mut rr,
+            &[500, 100, 100, 900],
+        );
+        assert_eq!(w, 1, "min bytes, lowest index on tie");
+        let w = select_worker(DispatchKind::LeastLoaded, Some(7), &mut rr, &[5, 0]);
+        assert_eq!(w, 1, "session id is ignored by least-loaded");
+    }
+
+    #[test]
+    fn session_affinity_is_stable_and_spreads() {
+        let mut rr = 0usize;
+        let loads = [0usize; 4];
+        for sid in 0..32u64 {
+            let a =
+                select_worker(DispatchKind::SessionAffinity, Some(sid), &mut rr, &loads);
+            let b =
+                select_worker(DispatchKind::SessionAffinity, Some(sid), &mut rr, &loads);
+            assert_eq!(a, b, "same session, same worker");
+            assert!(a < 4);
+        }
+        // distinct sessions must not all collapse onto one worker
+        let mut hit = [false; 4];
+        for sid in 0..64u64 {
+            hit[select_worker(DispatchKind::SessionAffinity, Some(sid), &mut rr, &loads)] =
+                true;
+        }
+        assert!(hit.iter().all(|&h| h), "64 sessions cover 4 workers: {hit:?}");
+        // session-free requests fall back to least-loaded
+        let w = select_worker(
+            DispatchKind::SessionAffinity,
+            None,
+            &mut rr,
+            &[10, 3, 10, 10],
+        );
+        assert_eq!(w, 1);
+    }
+
+    #[test]
+    fn single_worker_always_wins() {
+        let mut rr = 5usize;
+        for kind in DispatchKind::all() {
+            assert_eq!(select_worker(*kind, Some(9), &mut rr, &[123]), 0);
+            assert_eq!(select_worker(*kind, None, &mut rr, &[123]), 0);
+        }
+        assert_eq!(rr, 5, "one-worker pools never touch dispatch state");
+    }
+
+    #[test]
+    fn dispatch_kind_parse_roundtrip() {
+        for k in DispatchKind::all() {
+            assert_eq!(DispatchKind::parse(k.name()), Some(*k));
+        }
+        assert_eq!(DispatchKind::parse("rr"), Some(DispatchKind::RoundRobin));
+        assert_eq!(DispatchKind::parse("ll"), Some(DispatchKind::LeastLoaded));
+        assert_eq!(DispatchKind::parse("bogus"), None);
+        assert_eq!(DispatchKind::names().len(), 3);
+    }
+
+    #[test]
+    fn budget_split_never_sums_past_total() {
+        // the WorkerPool::build rule, checked directly on the arithmetic
+        for total in [1usize, 1_000_000, 1_500_001, 7_777_777] {
+            for n in 1usize..=8 {
+                let per = total / n;
+                assert!(per * n <= total, "split {per}x{n} > {total}");
+            }
+        }
+    }
+}

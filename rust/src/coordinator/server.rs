@@ -16,20 +16,54 @@ use crate::workload::Request;
 
 use super::batcher::{BatcherConfig, BatcherStats};
 use super::frontend::Frontend;
+use super::pool::WorkerStats;
 use super::router::RouterStats;
 use super::session::SessionStats;
+
+/// How the frontend's discrete-event clock prices compute quanta.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeModel {
+    /// advance by measured wall time of each prefill/decode call (honest
+    /// latency percentiles on this box; run-to-run timing jitter)
+    Measured,
+    /// advance by hwmodel-priced durations — fully deterministic from the
+    /// seed, so two identical runs produce bit-identical `ServeEvent`
+    /// streams including timestamps (determinism tests, CI double-run
+    /// diffs, golden serve reports)
+    Modeled,
+}
+
+impl TimeModel {
+    pub fn parse(s: &str) -> Option<TimeModel> {
+        match s {
+            "measured" => Some(TimeModel::Measured),
+            "modeled" => Some(TimeModel::Modeled),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TimeModel::Measured => "measured",
+            TimeModel::Modeled => "modeled",
+        }
+    }
+}
 
 #[derive(Clone)]
 pub struct ServeOptions {
     pub sampling: Sampling,
-    /// virtual workers for routing/migration accounting (real compute is
-    /// single-engine; Table 8 scales via hwmodel)
+    /// virtual workers for routing/migration accounting *within* each
+    /// engine worker (real concurrency is the pool's worker count, set by
+    /// building the frontend over a `WorkerPool`)
     pub n_workers: usize,
     pub max_sessions: usize,
     pub batcher: BatcherConfig,
     /// use the chunked prefill artifact (true) or the stepwise decode path
     pub artifact_prefill: bool,
     pub collect_traces: bool,
+    /// virtual-clock pricing (measured wall time vs deterministic model)
+    pub time_model: TimeModel,
     pub seed: u64,
 }
 
@@ -42,6 +76,7 @@ impl Default for ServeOptions {
             batcher: BatcherConfig::default(),
             artifact_prefill: true,
             collect_traces: false,
+            time_model: TimeModel::Measured,
             seed: 42,
         }
     }
@@ -61,8 +96,12 @@ pub struct ServeReport {
     pub per_task: Vec<(String, f64, usize)>,
     /// virtual wall-clock of the run
     pub wall_s: f64,
-    /// fraction of wall time the engine was executing
+    /// fraction of wall time the engine was executing (sum of worker busy
+    /// time over wall; > 1.0 means workers genuinely overlapped)
     pub busy_frac: f64,
+    /// per-engine-worker counters (one entry per pool slot; single-engine
+    /// frontends report exactly one)
+    pub worker_stats: Vec<WorkerStats>,
 }
 
 /// Run a full trace through the engine: submit every request up front,

@@ -26,6 +26,20 @@ pub struct SessionStats {
 }
 
 impl SessionStats {
+    /// Fold another worker's session counters into this one (the pooled
+    /// frontend keeps one `SessionStore` per engine worker — snapshots
+    /// hold pages of that worker's pool — and reports merged stats).
+    pub fn merge(&mut self, o: &SessionStats) {
+        self.stores += o.stores;
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.reused_tokens += o.reused_tokens;
+        self.evictions += o.evictions;
+        self.pressure_evictions += o.pressure_evictions;
+        self.migrations += o.migrations;
+        self.migrated_bytes += o.migrated_bytes;
+    }
+
     pub fn reuse_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -69,6 +83,12 @@ impl SessionStore {
 
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
+    }
+
+    /// Whether a snapshot for this session id is resident (the pooled
+    /// frontend routes a session's next turn to the store that holds it).
+    pub fn contains(&self, id: u64) -> bool {
+        self.map.contains_key(&id)
     }
 
     /// Store (or refresh) a session snapshot. `cache` is snapshotted;
@@ -313,6 +333,29 @@ mod tests {
         r.clear(&mut pool);
         store.clear(&mut pool);
         assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn stats_merge_sums_every_counter() {
+        let mut a = SessionStats {
+            stores: 1,
+            hits: 2,
+            misses: 3,
+            reused_tokens: 4,
+            evictions: 5,
+            pressure_evictions: 1,
+            migrations: 6,
+            migrated_bytes: 7,
+        };
+        a.merge(&a.clone());
+        assert_eq!(a.stores, 2);
+        assert_eq!(a.hits, 4);
+        assert_eq!(a.misses, 6);
+        assert_eq!(a.reused_tokens, 8);
+        assert_eq!(a.evictions, 10);
+        assert_eq!(a.pressure_evictions, 2);
+        assert_eq!(a.migrations, 12);
+        assert_eq!(a.migrated_bytes, 14);
     }
 
     #[test]

@@ -3,14 +3,25 @@
 //! Subcommands:
 //!   info                         list models/artifacts from the manifest
 //!   generate --model M --prompt  one-shot generation (quick sanity check)
-//!   serve    --model M ...       run a multi-user trace, print the report
+//!   serve    --model M ...       multi-worker serving over a trace or an
+//!                                open-loop arrival process, print report
 //!   eval     --model M --task T  task accuracy under a policy
 //!   cost     --model M ...       hardware cost-model projections
+//!
+//! Serving flags: `--workers N` builds N engine workers (each with an
+//! equal slice of `--kv-budget-mb`); `--dispatch
+//! round-robin|least-loaded|session-affinity` picks the dispatch policy;
+//! `--arrival trace|poisson|gamma` (+ `--arrival-shape
+//! steady|ramp|burst|diurnal`) switches from trace replay to the live
+//! open-loop generator; `--modeled-time` makes the virtual clock
+//! deterministic from the seed.
 
 use anyhow::Result;
 
 use tinyserve::config::{KvDtype, ServingConfig};
-use tinyserve::coordinator::{Frontend, ServeOptions};
+use tinyserve::coordinator::{
+    DispatchKind, Frontend, ServeOptions, TimeModel, WorkerPool,
+};
 use tinyserve::kvcache::EvictionPolicyKind;
 use tinyserve::engine::{Engine, Sampling};
 use tinyserve::metrics::StepMetrics;
@@ -19,7 +30,10 @@ use tinyserve::runtime::Manifest;
 use tinyserve::sparsity::PolicyKind;
 use tinyserve::util::cli::Args;
 use tinyserve::util::rng::Rng;
-use tinyserve::workload::{generate_trace, tasks, TraceConfig};
+use tinyserve::workload::{
+    generate_trace, tasks, ArrivalProcess, LoadShape, OpenLoopConfig, OpenLoopGen,
+    TraceConfig,
+};
 
 fn serving_config(args: &Args) -> Result<ServingConfig> {
     let mut cfg = ServingConfig {
@@ -112,51 +126,100 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = serving_config(args)?;
-    let trace_cfg = TraceConfig {
-        n_requests: args.usize_or("requests", 32),
-        mean_interarrival_s: args.f64_or("interarrival-ms", 50.0) / 1e3,
-        session_reuse_prob: args.f64_or("session-prob", 0.3),
-        new_tokens: (
-            args.usize_or("min-new", 16),
-            args.usize_or("max-new", 48),
-        ),
-        seed: args.usize_or("seed", 42) as u64,
-        ..Default::default()
+    let workers = args.usize_or("workers", 1);
+    let dispatch = match args.get("dispatch") {
+        Some(d) => DispatchKind::parse(d).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown dispatch '{d}'; valid: {}",
+                DispatchKind::names().join("|")
+            )
+        })?,
+        None => DispatchKind::LeastLoaded,
     };
+    let time_model = if args.bool("modeled-time") {
+        TimeModel::Modeled
+    } else {
+        TimeModel::Measured
+    };
+    let n_requests = args.usize_or("requests", 32);
+    let seed = args.usize_or("seed", 42) as u64;
+    let interarrival_ms = args.f64_or("interarrival-ms", 50.0);
+    let session_prob = args.f64_or("session-prob", 0.3);
+    let new_tokens = (args.usize_or("min-new", 16), args.usize_or("max-new", 48));
+    let arrival = args.str_or("arrival", "trace");
     println!(
-        "serving {} requests  model={} policy={} budget={} batch={}",
-        trace_cfg.n_requests,
+        "serving {n_requests} requests  model={} policy={} budget={} batch={} \
+         workers={workers} dispatch={} arrival={arrival} time={}",
         cfg.model,
         cfg.policy.name(),
         cfg.budget,
-        cfg.max_batch
+        cfg.max_batch,
+        dispatch.name(),
+        time_model.name(),
     );
-    let mut engine = Engine::new(&tinyserve::artifacts_dir(), cfg)?;
-    engine.warmup()?;
-    let mut trace = generate_trace(&trace_cfg);
-    // optional per-request SLO: the frontend sheds/aborts past-deadline work
-    if let Some(d) = args.f64_opt("deadline-ms") {
-        for req in trace.iter_mut() {
-            req.deadline_ms = Some(d);
-        }
-    }
-    let opts = ServeOptions {
-        n_workers: args.usize_or("workers", 1),
-        seed: trace_cfg.seed,
-        ..Default::default()
-    };
+    let manifest = Manifest::load(&tinyserve::artifacts_dir())?;
+    let pool = WorkerPool::build(&manifest, &cfg, workers, dispatch)?;
+    pool.warmup()?;
+    let kv_budget = pool.total_budget_bytes();
+    let policy_kind = pool.engine(0).store.policy_kind();
+    let opts = ServeOptions { time_model, seed, ..Default::default() };
     let mut plugins = Pipeline::new();
-    let mut fe = Frontend::builder().options(opts).build(&mut engine, &mut plugins);
-    for req in trace {
-        fe.submit(req);
+    let mut fe = Frontend::builder().options(opts).build_pool(pool, &mut plugins);
+    if arrival == "trace" {
+        let trace_cfg = TraceConfig {
+            n_requests,
+            mean_interarrival_s: interarrival_ms / 1e3,
+            session_reuse_prob: session_prob,
+            new_tokens,
+            seed,
+            ..Default::default()
+        };
+        let mut trace = generate_trace(&trace_cfg);
+        // optional SLO on every `--deadline-every`-th request (default:
+        // all): the frontend sheds/aborts past-deadline work, and EDF
+        // admission orders the queue by urgency — same semantics as the
+        // open-loop generator's deadline knobs
+        if let Some(d) = args.f64_opt("deadline-ms") {
+            let every = args.usize_or("deadline-every", 1).max(1) as u64;
+            for req in trace.iter_mut().filter(|r| r.id % every == 0) {
+                req.deadline_ms = Some(d);
+            }
+        }
+        for req in trace {
+            fe.submit(req);
+        }
+    } else {
+        let process = ArrivalProcess::parse(&arrival).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown arrival '{arrival}'; valid: trace|{}",
+                ArrivalProcess::names().join("|")
+            )
+        })?;
+        let shape_arg = args.str_or("arrival-shape", "steady");
+        let shape = LoadShape::parse(&shape_arg).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown arrival shape '{shape_arg}'; valid: {}",
+                LoadShape::names().join("|")
+            )
+        })?;
+        fe.set_source(Box::new(OpenLoopGen::new(OpenLoopConfig {
+            n_requests,
+            rate_rps: 1e3 / interarrival_ms.max(1e-6),
+            process,
+            shape,
+            new_tokens,
+            session_reuse_prob: session_prob,
+            deadline_ms: args.f64_opt("deadline-ms"),
+            deadline_every: args.usize_or("deadline-every", 1),
+            seed,
+            ..Default::default()
+        })));
     }
     // pump to completion, discarding per-round events (report-only run)
     while fe.has_work() {
         fe.step()?;
     }
     let r = fe.into_report();
-    let kv_budget = engine.store.budget_bytes();
-    let pool_bytes_peak = engine.pool.bytes_peak();
     let mut m = r.metrics;
     println!("--- serve report ---");
     println!("requests            {}", m.total_requests);
@@ -181,16 +244,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!("kv page hit rate    {:.1}%", m.hit_rate.mean() * 100.0);
     println!(
-        "kv bytes            mean {:.2} MB  peak {:.2} MB  (pool hot-rate peak {:.2} MB)",
+        "kv bytes            mean {:.2} MB  peak {:.2} MB (summed across workers)",
         m.kv_bytes.mean() / 1e6,
         m.kv_bytes_peak as f64 / 1e6,
-        pool_bytes_peak as f64 / 1e6
     );
+    for (w, ws) in r.worker_stats.iter().enumerate() {
+        println!(
+            "  worker {w}          admitted {}  finished {}  tokens {}  steps {}  \
+             kv peak {:.2} MB",
+            ws.admitted,
+            ws.finished,
+            ws.new_tokens,
+            ws.steps,
+            ws.kv_bytes_peak as f64 / 1e6
+        );
+    }
     if let Some(b) = kv_budget {
         println!(
-            "kv budget           {:.2} MB  [{}]  residency hit {:.1}%  violations {}",
+            "kv budget           {:.2} MB over {} workers  [{}]  residency hit \
+             {:.1}%  violations {}",
             b as f64 / 1e6,
-            engine.store.policy_kind().name(),
+            r.worker_stats.len(),
+            policy_kind.name(),
             m.residency_hit_rate.mean() * 100.0,
             m.budget_violations
         );
@@ -293,7 +368,10 @@ fn main() -> Result<()> {
                 "usage: tinyserve <info|generate|serve|eval|cost> [--model M] \
                  [--policy P] [--budget N] [--batch B] [--kv-budget-mb MB] \
                  [--eviction-policy lru|clock|query-aware|sieve] \
-                 [--deadline-ms D] ..."
+                 [--workers N] [--dispatch round-robin|least-loaded|session-affinity] \
+                 [--arrival trace|poisson|gamma] \
+                 [--arrival-shape steady|ramp|burst|diurnal] \
+                 [--modeled-time] [--deadline-ms D] ..."
             );
             std::process::exit(2);
         }

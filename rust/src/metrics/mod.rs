@@ -56,6 +56,39 @@ impl StepMetrics {
         *self = StepMetrics::default();
     }
 
+    /// Fold another worker's step of the same scheduling round into this
+    /// one (multi-worker frontend: N engines step concurrently, the round
+    /// reports one merged record). Counters and byte totals sum; the time
+    /// fields take the max, because concurrent workers overlap on the
+    /// virtual clock; entropy averages weighted by batch rows. Merging
+    /// into a fresh default is an exact copy, so a single-worker pool
+    /// reports bit-identical metrics to the pre-pool frontend.
+    pub fn merge(&mut self, o: &StepMetrics) {
+        if self.batch == 0 {
+            *self = o.clone();
+            return;
+        }
+        let (b0, b1) = (self.batch as f32, o.batch as f32);
+        self.entropy = (self.entropy * b0 + o.entropy * b1) / (b0 + b1);
+        self.batch += o.batch;
+        self.step_seconds = self.step_seconds.max(o.step_seconds);
+        self.exec_seconds = self.exec_seconds.max(o.exec_seconds);
+        self.score_seconds = self.score_seconds.max(o.score_seconds);
+        self.gather_seconds = self.gather_seconds.max(o.gather_seconds);
+        self.gather_bytes += o.gather_bytes;
+        self.pages_scanned += o.pages_scanned;
+        self.pages_selected += o.pages_selected;
+        self.pages_reused += o.pages_reused;
+        self.resident_tokens += o.resident_tokens;
+        self.kv_bytes_in_use += o.kv_bytes_in_use;
+        self.kv_budget_bytes += o.kv_budget_bytes;
+        self.store_hits += o.store_hits;
+        self.store_misses += o.store_misses;
+        self.demotions += o.demotions;
+        self.promotions += o.promotions;
+        self.spill_seconds += o.spill_seconds;
+    }
+
     /// Page-level cache hit rate for this step (paper "KV Hit %"):
     /// fraction of this step's selected pages that were already hot.
     pub fn hit_rate(&self) -> f64 {
@@ -284,6 +317,43 @@ mod tests {
         assert_eq!(sm.total_promotions, 1);
         assert_eq!(sm.budget_violations, 1);
         assert!((sm.total_spill_seconds - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_into_empty_is_identity_and_times_take_max() {
+        let a = StepMetrics {
+            batch: 2,
+            step_seconds: 0.4,
+            gather_bytes: 100,
+            pages_selected: 6,
+            kv_bytes_in_use: 1000,
+            entropy: 2.0,
+            spill_seconds: 0.1,
+            ..Default::default()
+        };
+        let mut m = StepMetrics::default();
+        m.merge(&a);
+        assert_eq!(m.batch, 2);
+        assert_eq!(m.step_seconds, 0.4, "first merge is an exact copy");
+        assert_eq!(m.entropy, 2.0);
+        let b = StepMetrics {
+            batch: 2,
+            step_seconds: 0.3,
+            gather_bytes: 50,
+            pages_selected: 2,
+            kv_bytes_in_use: 500,
+            entropy: 1.0,
+            spill_seconds: 0.2,
+            ..Default::default()
+        };
+        m.merge(&b);
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.step_seconds, 0.4, "concurrent workers overlap: max");
+        assert_eq!(m.gather_bytes, 150, "traffic sums");
+        assert_eq!(m.pages_selected, 8);
+        assert_eq!(m.kv_bytes_in_use, 1500, "residency sums across workers");
+        assert!((m.entropy - 1.5).abs() < 1e-6, "batch-weighted mean");
+        assert!((m.spill_seconds - 0.3).abs() < 1e-12, "spill time sums");
     }
 
     #[test]

@@ -11,7 +11,11 @@ pub struct Rng {
     s: [u64; 4],
 }
 
-fn splitmix64(state: &mut u64) -> u64 {
+/// One SplitMix64 step: advance `state` by the golden-ratio increment and
+/// return the finalized mix. Public because it doubles as the stateless
+/// integer mixer behind the worker pool's session-affinity hash — one
+/// copy of the constants, not two.
+pub fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
     let mut z = *state;
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
@@ -91,6 +95,36 @@ impl Rng {
     /// process — paper §4.4.1, mean inter-arrival 50ms <=> rate 20/s).
     pub fn exponential(&mut self, rate: f64) -> f64 {
         -(1.0 - self.f64()).ln() / rate
+    }
+
+    /// Gamma(shape, scale) via Marsaglia-Tsang squeeze (2000), with the
+    /// standard boost for shape < 1. Unit-mean interarrivals come from
+    /// `gamma(k, 1/k)`: k < 1 is burstier than Poisson (CV > 1), k > 1
+    /// smoother — the open-loop workload generator's knob for arrival
+    /// burstiness at a fixed offered rate.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            // Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u = self.f64().max(f64::MIN_POSITIVE);
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.f64().max(f64::MIN_POSITIVE);
+            if u < 1.0 - 0.0331 * x * x * x * x
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v * scale;
+            }
+        }
     }
 
     /// Poisson-distributed count: Knuth for small lambda, normal
@@ -205,6 +239,38 @@ mod tests {
         let n = 50_000;
         let m: f64 = (0..n).map(|_| r.exponential(rate)).sum::<f64>() / n as f64;
         assert!((m - 1.0 / rate).abs() < 0.005, "m {m}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(23);
+        let n = 50_000;
+        for &(shape, scale) in &[(0.5, 2.0), (1.0, 1.0), (4.0, 0.25)] {
+            let xs: Vec<f64> = (0..n).map(|_| r.gamma(shape, scale)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var =
+                xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+            let (want_m, want_v) = (shape * scale, shape * scale * scale);
+            assert!((mean - want_m).abs() < want_m * 0.05, "k={shape} mean {mean}");
+            assert!((var - want_v).abs() < want_v * 0.15, "k={shape} var {var}");
+            assert!(xs.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn gamma_shape_below_one_is_burstier() {
+        // CV of unit-mean interarrivals: gamma(0.3, 1/0.3) >> exp(1)
+        let mut r = Rng::new(29);
+        let n = 30_000;
+        let cv = |xs: &[f64]| {
+            let m = xs.iter().sum::<f64>() / xs.len() as f64;
+            let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+                / xs.len() as f64;
+            v.sqrt() / m
+        };
+        let bursty: Vec<f64> = (0..n).map(|_| r.gamma(0.3, 1.0 / 0.3)).collect();
+        let smooth: Vec<f64> = (0..n).map(|_| r.exponential(1.0)).collect();
+        assert!(cv(&bursty) > cv(&smooth) * 1.3, "{} vs {}", cv(&bursty), cv(&smooth));
     }
 
     #[test]

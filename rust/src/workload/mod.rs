@@ -1,12 +1,30 @@
-//! Workload generation: Poisson request arrivals, task documents, and the
+//! Workload generation: Poisson request arrivals, task documents, the
 //! multi-user trace used by the serving experiments (paper §4.4.1:
 //! "512-2048 concurrent requests, Poisson arrivals, mean inter-arrival
-//! 50ms, 100-500 generated tokens").
+//! 50ms, 100-500 generated tokens"), and the open-loop live generator
+//! (`openloop`) that feeds the frontend against its virtual clock instead
+//! of pre-materializing a `Vec<Request>`.
 
+pub mod openloop;
 pub mod tasks;
 
 use crate::util::rng::Rng;
+pub use openloop::{ArrivalProcess, LoadShape, OpenLoopConfig, OpenLoopGen};
 pub use tasks::{make_doc, Doc, Task};
+
+/// A live arrival stream the serving frontend pulls from between
+/// scheduling rounds — the open-loop alternative to submitting a
+/// pre-materialized trace. Implementations must yield requests in
+/// non-decreasing `arrival_s` order and be deterministic from their seed.
+pub trait RequestSource {
+    /// Virtual time of the next arrival, or None when the source is
+    /// exhausted. Must not advance the source.
+    fn peek_arrival_s(&self) -> Option<f64>;
+
+    /// Remove and return every request with `arrival_s <= now`, in
+    /// arrival order.
+    fn take_due(&mut self, now: f64) -> Vec<Request>;
+}
 
 /// One request in a trace.
 #[derive(Debug, Clone)]

@@ -1,0 +1,502 @@
+//! Open-loop live workload generator: a seeded arrival *process* the
+//! frontend polls against its virtual clock, instead of a pre-materialized
+//! trace vector.
+//!
+//! Open-loop means arrivals do not wait for completions — exactly the
+//! §4.4.1 serving regime ("Poisson arrivals, mean inter-arrival 50ms") and
+//! the load model under which admission ordering (EDF) and dispatch
+//! policy actually matter: when the server falls behind, the queue grows
+//! and scheduling decides who pays.
+//!
+//! Two interarrival processes at a common offered rate:
+//!  * `Poisson` — exponential interarrivals (CV = 1), the paper's default;
+//!  * `Gamma { shape }` — gamma-distributed unit-mean interarrivals; shape
+//!    < 1 is burstier than Poisson (CV = 1/sqrt(shape)), shape > 1
+//!    smoother. The burstiness knob at a fixed rate.
+//!
+//! The offered rate itself is modulated by a `LoadShape` phase curve —
+//! warm-up ramps, recurring bursts, or a diurnal sinusoid — so a single
+//! seeded generator covers the workload shapes a real frontend sees over
+//! a day. Generation is deterministic from the seed: two generators with
+//! the same config yield bit-identical request streams (the determinism
+//! battery and the CI double-run diff both pin this).
+
+use crate::util::rng::Rng;
+
+use super::tasks::{self, Task};
+use super::{Request, RequestSource};
+
+/// Interarrival process at a fixed offered rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// exponential interarrivals (memoryless, CV = 1)
+    Poisson,
+    /// gamma(shape, 1/shape) unit-mean interarrivals scaled by the rate;
+    /// shape < 1 => bursty (CV > 1), shape > 1 => smoother than Poisson
+    Gamma { shape: f64 },
+}
+
+impl ArrivalProcess {
+    pub fn parse(s: &str) -> Option<ArrivalProcess> {
+        match s {
+            "poisson" => Some(ArrivalProcess::Poisson),
+            "gamma" => Some(ArrivalProcess::Gamma { shape: 0.35 }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Gamma { .. } => "gamma",
+        }
+    }
+
+    pub fn names() -> Vec<&'static str> {
+        vec!["poisson", "gamma"]
+    }
+}
+
+/// Rate modulation over virtual time (multiplies the base rate).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadShape {
+    /// constant offered rate
+    Steady,
+    /// linear warm-up from 10% to 100% of the base rate over `ramp_s`,
+    /// then steady
+    Ramp { ramp_s: f64 },
+    /// recurring bursts: every `period_s`, the first `burst_s` run at
+    /// `factor` times the base rate
+    Bursts { period_s: f64, burst_s: f64, factor: f64 },
+    /// sinusoidal day curve: rate * (1 + amplitude * sin(2 pi t / period)),
+    /// floored at 5% of base
+    Diurnal { period_s: f64, amplitude: f64 },
+}
+
+impl LoadShape {
+    pub fn parse(s: &str) -> Option<LoadShape> {
+        match s {
+            "steady" => Some(LoadShape::Steady),
+            "ramp" => Some(LoadShape::Ramp { ramp_s: 2.0 }),
+            "burst" | "bursts" => {
+                Some(LoadShape::Bursts { period_s: 2.0, burst_s: 0.4, factor: 4.0 })
+            }
+            "diurnal" => Some(LoadShape::Diurnal { period_s: 8.0, amplitude: 0.8 }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LoadShape::Steady => "steady",
+            LoadShape::Ramp { .. } => "ramp",
+            LoadShape::Bursts { .. } => "burst",
+            LoadShape::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    pub fn names() -> Vec<&'static str> {
+        vec!["steady", "ramp", "burst", "diurnal"]
+    }
+}
+
+/// Configuration of the open-loop generator. Prompt/session/task knobs
+/// mirror `TraceConfig`; the arrival side replaces a fixed mean
+/// interarrival with (rate, process, shape).
+#[derive(Debug, Clone)]
+pub struct OpenLoopConfig {
+    /// total requests to emit (the generator then reports exhausted)
+    pub n_requests: usize,
+    /// base offered rate, requests/second (paper: 20/s <=> 50ms mean)
+    pub rate_rps: f64,
+    pub process: ArrivalProcess,
+    pub shape: LoadShape,
+    pub prompt_chars: (usize, usize),
+    pub new_tokens: (usize, usize),
+    /// fraction of requests that continue an existing session
+    pub session_reuse_prob: f64,
+    /// number of distinct sessions (zipf-popular)
+    pub n_sessions: usize,
+    /// SLO attached to every `deadline_every`-th request (None = no SLOs)
+    pub deadline_ms: Option<f64>,
+    /// 1 = every request carries the SLO, 4 = every 4th, 0 treated as 1
+    pub deadline_every: usize,
+    pub seed: u64,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> Self {
+        OpenLoopConfig {
+            n_requests: 64,
+            rate_rps: 20.0,
+            process: ArrivalProcess::Poisson,
+            shape: LoadShape::Steady,
+            prompt_chars: (200, 800),
+            new_tokens: (20, 60),
+            session_reuse_prob: 0.3,
+            n_sessions: 16,
+            deadline_ms: None,
+            deadline_every: 1,
+            seed: 42,
+        }
+    }
+}
+
+/// Seeded open-loop request generator (see module docs). Implements
+/// [`RequestSource`], so `Frontend::set_source` pulls arrivals from it
+/// live; `collect_all` materializes the remainder as a trace for callers
+/// that still want a `Vec<Request>`.
+pub struct OpenLoopGen {
+    cfg: OpenLoopConfig,
+    rng: Rng,
+    sessions: Vec<tasks::SessionDoc>,
+    /// virtual time of the most recently generated arrival
+    t: f64,
+    emitted: u64,
+    /// pre-generated next request (so peek is exact)
+    next: Option<Request>,
+}
+
+impl OpenLoopGen {
+    pub fn new(cfg: OpenLoopConfig) -> OpenLoopGen {
+        let mut rng = Rng::new(cfg.seed);
+        let sess_chars = (cfg.prompt_chars.0 + cfg.prompt_chars.1) / 2;
+        let sessions: Vec<tasks::SessionDoc> = (0..cfg.n_sessions)
+            .map(|_| tasks::kvrecall_session(&mut rng, sess_chars, 8))
+            .collect();
+        let mut g =
+            OpenLoopGen { cfg, rng, sessions, t: 0.0, emitted: 0, next: None };
+        g.next = g.gen_next();
+        g
+    }
+
+    /// Offered rate at virtual time `t` (base rate through the phase
+    /// curve).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let base = self.cfg.rate_rps;
+        match self.cfg.shape {
+            LoadShape::Steady => base,
+            LoadShape::Ramp { ramp_s } => {
+                if ramp_s <= 0.0 || t >= ramp_s {
+                    base
+                } else {
+                    base * (0.1 + 0.9 * t / ramp_s)
+                }
+            }
+            LoadShape::Bursts { period_s, burst_s, factor } => {
+                if period_s <= 0.0 {
+                    return base;
+                }
+                let phase = t % period_s;
+                if phase < burst_s {
+                    base * factor
+                } else {
+                    base
+                }
+            }
+            LoadShape::Diurnal { period_s, amplitude } => {
+                if period_s <= 0.0 {
+                    return base;
+                }
+                let s = (2.0 * std::f64::consts::PI * t / period_s).sin();
+                (base * (1.0 + amplitude * s)).max(base * 0.05)
+            }
+        }
+    }
+
+    /// How many requests the generator has handed out so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Materialize every remaining request as a trace (arrival order).
+    pub fn collect_all(mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        while let Some(r) = self.pop() {
+            out.push(r);
+        }
+        out
+    }
+
+    fn pop(&mut self) -> Option<Request> {
+        let r = self.next.take()?;
+        self.next = self.gen_next();
+        Some(r)
+    }
+
+    fn gen_next(&mut self) -> Option<Request> {
+        if self.emitted >= self.cfg.n_requests as u64 {
+            return None;
+        }
+        // unit-mean interarrival draw, scaled by the instantaneous rate at
+        // the previous arrival (piecewise-constant thinning approximation:
+        // exact for Steady, and phase-accurate whenever interarrivals are
+        // short against the phase period, which serving loads are)
+        let unit = match self.cfg.process {
+            ArrivalProcess::Poisson => self.rng.exponential(1.0),
+            ArrivalProcess::Gamma { shape } => {
+                let k = shape.max(1e-3);
+                self.rng.gamma(k, 1.0 / k)
+            }
+        };
+        let rate = self.rate_at(self.t).max(1e-9);
+        self.t += unit / rate;
+        let id = self.emitted;
+        let session = if self.rng.bool(self.cfg.session_reuse_prob)
+            && self.cfg.n_sessions > 0
+        {
+            Some(self.rng.zipf(self.cfg.n_sessions, 1.1) as u64)
+        } else {
+            None
+        };
+        let all = Task::all();
+        let (doc, task) = match session {
+            Some(sid) => {
+                let q = self.rng.usize(8);
+                (self.sessions[sid as usize].question(q), Task::KvRecall)
+            }
+            None => {
+                let task = *self.rng.choice(all);
+                let chars = self.rng.range(
+                    self.cfg.prompt_chars.0 as u64,
+                    self.cfg.prompt_chars.1 as u64 + 1,
+                ) as usize;
+                (tasks::make_doc(&mut self.rng, task, chars), task)
+            }
+        };
+        let every = self.cfg.deadline_every.max(1) as u64;
+        let deadline_ms = match self.cfg.deadline_ms {
+            Some(d) if id % every == 0 => Some(d),
+            _ => None,
+        };
+        self.emitted += 1;
+        Some(Request {
+            id,
+            arrival_s: self.t,
+            prompt: tasks::encode_prompt(&doc.prompt),
+            max_new_tokens: self.rng.range(
+                self.cfg.new_tokens.0 as u64,
+                self.cfg.new_tokens.1 as u64 + 1,
+            ) as usize,
+            session,
+            task: Some(task),
+            answer: Some(doc.answer),
+            deadline_ms,
+        })
+    }
+}
+
+impl RequestSource for OpenLoopGen {
+    fn peek_arrival_s(&self) -> Option<f64> {
+        self.next.as_ref().map(|r| r.arrival_s)
+    }
+
+    fn take_due(&mut self, now: f64) -> Vec<Request> {
+        let mut out = Vec::new();
+        while self
+            .next
+            .as_ref()
+            .map(|r| r.arrival_s <= now)
+            .unwrap_or(false)
+        {
+            out.push(self.pop().expect("peeked Some"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(r: &Request) -> String {
+        format!(
+            "{} @{:016x} p{} n{} s{:?} d{:?}",
+            r.id,
+            r.arrival_s.to_bits(),
+            r.prompt.len(),
+            r.max_new_tokens,
+            r.session,
+            r.deadline_ms.map(|d| d.to_bits())
+        )
+    }
+
+    /// Same seed => bit-identical request streams; also the CI
+    /// double-run determinism gate's always-available log writer (the
+    /// serve-level event log needs artifacts; this one never skips).
+    #[test]
+    fn same_seed_same_stream() {
+        let seed: u64 = std::env::var("PALLAS_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(42);
+        let cfg = OpenLoopConfig {
+            n_requests: 200,
+            process: ArrivalProcess::Gamma { shape: 0.4 },
+            shape: LoadShape::Bursts { period_s: 1.0, burst_s: 0.25, factor: 5.0 },
+            deadline_ms: Some(250.0),
+            deadline_every: 4,
+            seed,
+            ..Default::default()
+        };
+        let a: Vec<String> =
+            OpenLoopGen::new(cfg.clone()).collect_all().iter().map(sig).collect();
+        let b: Vec<String> =
+            OpenLoopGen::new(cfg).collect_all().iter().map(sig).collect();
+        assert_eq!(a, b, "same seed must generate identical streams");
+        assert_eq!(a.len(), 200);
+        if let Ok(dir) = std::env::var("TINYSERVE_EVENT_LOG") {
+            let _ = std::fs::create_dir_all(&dir);
+            let _ = std::fs::write(
+                std::path::Path::new(&dir).join("openloop_requests.log"),
+                a.join("\n"),
+            );
+        }
+    }
+
+    #[test]
+    fn take_due_respects_the_clock_and_order() {
+        let cfg = OpenLoopConfig { n_requests: 50, rate_rps: 100.0, ..Default::default() };
+        let mut g = OpenLoopGen::new(cfg);
+        let first = g.peek_arrival_s().expect("has arrivals");
+        assert!(g.take_due(first / 2.0).is_empty(), "nothing due before t0");
+        let batch = g.take_due(0.2);
+        assert!(!batch.is_empty());
+        assert!(batch.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert!(batch.iter().all(|r| r.arrival_s <= 0.2));
+        if let Some(t) = g.peek_arrival_s() {
+            assert!(t > 0.2, "peek after take_due is in the future");
+        }
+        // drain to exhaustion
+        let rest = g.take_due(f64::INFINITY);
+        assert_eq!(rest.len() + batch.len(), 50);
+        assert_eq!(g.peek_arrival_s(), None);
+        assert!(g.take_due(f64::INFINITY).is_empty());
+    }
+
+    #[test]
+    fn poisson_rate_is_approximately_offered() {
+        let cfg = OpenLoopConfig {
+            n_requests: 4000,
+            rate_rps: 50.0,
+            session_reuse_prob: 0.0,
+            n_sessions: 0,
+            ..Default::default()
+        };
+        let trace = OpenLoopGen::new(cfg).collect_all();
+        let total = trace.last().unwrap().arrival_s;
+        let rate = 4000.0 / total;
+        assert!((rate - 50.0).abs() < 5.0, "observed rate {rate}");
+    }
+
+    #[test]
+    fn gamma_is_burstier_than_poisson_at_same_rate() {
+        let mk = |process| OpenLoopConfig {
+            n_requests: 3000,
+            rate_rps: 20.0,
+            process,
+            session_reuse_prob: 0.0,
+            n_sessions: 0,
+            ..Default::default()
+        };
+        let cv = |trace: &[Request]| {
+            let gaps: Vec<f64> = trace
+                .windows(2)
+                .map(|w| w[1].arrival_s - w[0].arrival_s)
+                .collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let v = gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>()
+                / gaps.len() as f64;
+            v.sqrt() / m
+        };
+        let p = OpenLoopGen::new(mk(ArrivalProcess::Poisson)).collect_all();
+        let g =
+            OpenLoopGen::new(mk(ArrivalProcess::Gamma { shape: 0.3 })).collect_all();
+        assert!(cv(&g) > cv(&p) * 1.3, "gamma CV {} vs poisson {}", cv(&g), cv(&p));
+    }
+
+    #[test]
+    fn burst_phases_concentrate_arrivals() {
+        let cfg = OpenLoopConfig {
+            n_requests: 3000,
+            rate_rps: 50.0,
+            shape: LoadShape::Bursts { period_s: 2.0, burst_s: 0.5, factor: 6.0 },
+            session_reuse_prob: 0.0,
+            n_sessions: 0,
+            ..Default::default()
+        };
+        let trace = OpenLoopGen::new(cfg).collect_all();
+        let in_burst = trace
+            .iter()
+            .filter(|r| (r.arrival_s % 2.0) < 0.5)
+            .count() as f64
+            / trace.len() as f64;
+        // burst windows are 25% of the time but at 6x rate: expect well
+        // over half the arrivals inside them
+        assert!(in_burst > 0.55, "burst share {in_burst}");
+    }
+
+    #[test]
+    fn ramp_starts_slow() {
+        let cfg = OpenLoopConfig {
+            n_requests: 2000,
+            rate_rps: 100.0,
+            shape: LoadShape::Ramp { ramp_s: 4.0 },
+            session_reuse_prob: 0.0,
+            n_sessions: 0,
+            ..Default::default()
+        };
+        let g = OpenLoopGen::new(cfg);
+        assert!(g.rate_at(0.0) < 20.0);
+        assert!((g.rate_at(10.0) - 100.0).abs() < 1e-9);
+        let trace = g.collect_all();
+        let first_s = trace.iter().filter(|r| r.arrival_s < 1.0).count();
+        let late_s = trace
+            .iter()
+            .filter(|r| r.arrival_s >= 4.0 && r.arrival_s < 5.0)
+            .count();
+        assert!(
+            late_s > first_s,
+            "post-ramp second ({late_s}) must outpace the first ({first_s})"
+        );
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates_with_floor() {
+        let g = OpenLoopGen::new(OpenLoopConfig {
+            shape: LoadShape::Diurnal { period_s: 8.0, amplitude: 0.9 },
+            rate_rps: 40.0,
+            ..Default::default()
+        });
+        assert!(g.rate_at(2.0) > 70.0, "peak of the sinusoid");
+        assert!(g.rate_at(6.0) < 10.0, "trough of the sinusoid");
+        assert!(g.rate_at(6.0) >= 40.0 * 0.05, "floored at 5%");
+    }
+
+    #[test]
+    fn deadlines_attach_every_nth() {
+        let cfg = OpenLoopConfig {
+            n_requests: 40,
+            deadline_ms: Some(100.0),
+            deadline_every: 4,
+            ..Default::default()
+        };
+        for r in OpenLoopGen::new(cfg).collect_all() {
+            assert_eq!(r.deadline_ms.is_some(), r.id % 4 == 0, "id {}", r.id);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrips() {
+        assert_eq!(ArrivalProcess::parse("poisson"), Some(ArrivalProcess::Poisson));
+        assert!(matches!(
+            ArrivalProcess::parse("gamma"),
+            Some(ArrivalProcess::Gamma { .. })
+        ));
+        assert_eq!(ArrivalProcess::parse("bogus"), None);
+        for n in LoadShape::names() {
+            assert!(LoadShape::parse(n).is_some(), "{n}");
+        }
+        assert_eq!(LoadShape::parse("nope"), None);
+    }
+}

@@ -1,6 +1,8 @@
 //! Golden-vector tests: the Rust reimplementations (page scoring, top-k,
 //! metadata, f16, ALiBi slopes) replay fixed-seed vectors produced by the
-//! python oracle (`python -m compile.aot` writes artifacts/golden.json).
+//! python oracle (`python -m compile.aot` writes artifacts/golden.json),
+//! and the multi-worker serve snapshot pins admission counters under
+//! deterministic modeled time.
 //!
 //! Skipped (with a loud message) when artifacts/golden.json is missing —
 //! run `make artifacts` first.
@@ -135,6 +137,110 @@ fn alibi_slopes_match_python() {
         for (i, &w) in want.iter().enumerate() {
             let got = (2.0f32).powf(-8.0 * (i as f32 + 1.0) / h as f32);
             assert!((got - w).abs() < 1e-6, "H={h} i={i}");
+        }
+    }
+}
+
+/// Golden serve snapshot: a `--workers 2 --arrival poisson` run under
+/// deterministic modeled time, reduced to counters only (no wall timings).
+/// The snapshot pins admission behaviour so dispatch-policy refactors
+/// cannot silently change it: on first run (no snapshot committed yet) the
+/// test writes `rust/tests/snapshots/serve_workers2.golden` and passes;
+/// once that file is checked in, any drift fails here. Either way the
+/// counters must be identical across two in-process runs.
+#[test]
+fn workers2_poisson_serve_counters_golden() {
+    use tinyserve::config::ServingConfig;
+    use tinyserve::coordinator::{
+        DispatchKind, Frontend, ServeOptions, TimeModel, WorkerPool,
+    };
+    use tinyserve::plugins::Pipeline;
+    use tinyserve::runtime::Manifest;
+    use tinyserve::sparsity::PolicyKind;
+    use tinyserve::workload::{
+        ArrivalProcess, LoadShape, OpenLoopConfig, OpenLoopGen,
+    };
+
+    let m = match Manifest::load(&tinyserve::artifacts_dir()) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+            return;
+        }
+    };
+    let run = || -> String {
+        let cfg = ServingConfig {
+            model: "tiny-trained".to_string(),
+            policy: PolicyKind::TinyServe,
+            budget: 256,
+            max_batch: 4,
+            ..Default::default()
+        };
+        let pool = WorkerPool::build(&m, &cfg, 2, DispatchKind::LeastLoaded)
+            .expect("pool");
+        let opts =
+            ServeOptions { time_model: TimeModel::Modeled, ..Default::default() };
+        let mut plugins = Pipeline::new();
+        let mut fe =
+            Frontend::builder().options(opts).build_pool(pool, &mut plugins);
+        fe.set_source(Box::new(OpenLoopGen::new(OpenLoopConfig {
+            n_requests: 16,
+            rate_rps: 30.0,
+            process: ArrivalProcess::Poisson,
+            shape: LoadShape::Steady,
+            prompt_chars: (100, 300),
+            new_tokens: (4, 8),
+            session_reuse_prob: 0.25,
+            n_sessions: 3,
+            deadline_ms: None,
+            deadline_every: 1,
+            seed: 42,
+        })));
+        while fe.has_work() {
+            fe.step().expect("step");
+        }
+        let r = fe.into_report();
+        // structural pins that hold with or without a committed snapshot
+        assert_eq!(r.metrics.total_requests, 16, "all open-loop requests complete");
+        assert_eq!(r.worker_stats.len(), 2);
+        let finished: u64 = r.worker_stats.iter().map(|w| w.finished).sum();
+        let tokens: u64 = r.worker_stats.iter().map(|w| w.new_tokens).sum();
+        assert_eq!(finished, r.metrics.total_requests);
+        assert_eq!(tokens, r.metrics.total_new_tokens, "per-worker tokens sum up");
+        let per_worker: Vec<String> = r
+            .worker_stats
+            .iter()
+            .map(|w| format!("({},{},{})", w.admitted, w.finished, w.new_tokens))
+            .collect();
+        format!(
+            "requests={} tokens={} admitted={} deferred={} cancelled={} \
+             expired={} workers=[{}]",
+            r.metrics.total_requests,
+            r.metrics.total_new_tokens,
+            r.batcher_stats.admitted,
+            r.batcher_stats.deferred,
+            r.metrics.total_cancelled,
+            r.metrics.total_expired,
+            per_worker.join(" ")
+        )
+    };
+    let got = run();
+    assert_eq!(got, run(), "modeled-time serve counters must be deterministic");
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/snapshots/serve_workers2.golden");
+    match std::fs::read_to_string(&path) {
+        Ok(want) => assert_eq!(
+            got,
+            want.trim(),
+            "serve counters drifted from the committed snapshot {}; if the \
+             change is intentional, delete the file and rerun to regenerate",
+            path.display()
+        ),
+        Err(_) => {
+            let _ = std::fs::create_dir_all(path.parent().unwrap());
+            std::fs::write(&path, format!("{got}\n")).expect("seed snapshot");
+            eprintln!("seeded golden snapshot at {}", path.display());
         }
     }
 }

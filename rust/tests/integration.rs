@@ -8,7 +8,8 @@
 
 use tinyserve::config::{KvDtype, ServingConfig};
 use tinyserve::coordinator::{
-    serve_trace, Frontend, Lifecycle, ServeEvent, ServeOptions, ServeReport,
+    serve_trace, DispatchKind, Frontend, Lifecycle, ServeEvent, ServeOptions,
+    ServeReport, TimeModel, WorkerPool,
 };
 use tinyserve::engine::{Engine, Sampling};
 use tinyserve::kvcache::EvictionPolicyKind;
@@ -17,7 +18,10 @@ use tinyserve::plugins::Pipeline;
 use tinyserve::runtime::Manifest;
 use tinyserve::sparsity::PolicyKind;
 use tinyserve::util::rng::Rng;
-use tinyserve::workload::{generate_trace, tasks, TraceConfig};
+use tinyserve::workload::{
+    generate_trace, tasks, ArrivalProcess, LoadShape, OpenLoopConfig, OpenLoopGen,
+    TraceConfig,
+};
 
 const MODEL: &str = "tiny-trained";
 
@@ -617,6 +621,482 @@ fn serve_trace_shim_matches_hand_pumped_frontend() {
     );
     assert_eq!(e1.pool.pages_in_use(), 0);
     assert_eq!(e2.pool.pages_in_use(), 0);
+}
+
+fn pallas_seed() -> u64 {
+    std::env::var("PALLAS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42)
+}
+
+/// Serialize an event stream for diffing; under `TimeModel::Modeled` the
+/// timestamps are deterministic and included bit-exactly.
+fn event_log(events: &[ServeEvent]) -> String {
+    events.iter().map(|e| e.sig(true)).collect::<Vec<_>>().join("\n")
+}
+
+fn write_ci_log(name: &str, content: &str) {
+    if let Ok(dir) = std::env::var("TINYSERVE_EVENT_LOG") {
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::write(std::path::Path::new(&dir).join(name), content);
+    }
+}
+
+fn pump_all(fe: &mut Frontend<'_>) -> Vec<ServeEvent> {
+    let mut events = Vec::new();
+    while fe.has_work() {
+        events.extend(fe.step().expect("step"));
+    }
+    events
+}
+
+fn serve_cfg(budget_mb: Option<f64>) -> ServingConfig {
+    ServingConfig {
+        model: MODEL.to_string(),
+        policy: PolicyKind::TinyServe,
+        budget: 256,
+        max_batch: 4,
+        kv_budget_mb: budget_mb,
+        ..Default::default()
+    }
+}
+
+fn bursty_openloop(seed: u64) -> OpenLoopGen {
+    OpenLoopGen::new(OpenLoopConfig {
+        n_requests: 12,
+        rate_rps: 40.0,
+        process: ArrivalProcess::Gamma { shape: 0.5 },
+        shape: LoadShape::Bursts { period_s: 0.5, burst_s: 0.15, factor: 4.0 },
+        prompt_chars: (100, 300),
+        new_tokens: (4, 8),
+        session_reuse_prob: 0.3,
+        n_sessions: 3,
+        deadline_ms: None,
+        deadline_every: 1,
+        seed,
+    })
+}
+
+#[test]
+fn openloop_pool_event_stream_is_deterministic() {
+    // Determinism battery: the same seed must yield a bit-identical
+    // ServeEvent stream (timestamps included) across two full runs of a
+    // 2-worker pool fed by the open-loop generator under modeled time.
+    // Also the CI double-run gate's serve-level log writer.
+    let m = require!(manifest());
+    let seed = pallas_seed();
+    let run = || -> String {
+        let pool = WorkerPool::build(&m, &serve_cfg(None), 2, DispatchKind::LeastLoaded)
+            .expect("pool");
+        let opts = ServeOptions {
+            time_model: TimeModel::Modeled,
+            seed,
+            ..Default::default()
+        };
+        let mut plugins = Pipeline::new();
+        let mut fe = Frontend::builder().options(opts).build_pool(pool, &mut plugins);
+        fe.set_source(Box::new(bursty_openloop(seed)));
+        let mut events = Vec::new();
+        while fe.has_work() {
+            events.extend(fe.step().expect("step"));
+        }
+        let (r, pool) = fe.into_parts();
+        assert_eq!(r.metrics.total_requests, 12, "every request completes");
+        for w in 0..pool.len() {
+            assert_eq!(pool.engine(w).pool.pages_in_use(), 0, "worker {w} leak");
+        }
+        event_log(&events)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed, same event stream (timestamps included)");
+    write_ci_log("serve_events.log", &a);
+}
+
+#[test]
+fn pool_of_one_matches_single_engine_frontend() {
+    // Extends the PR-2 shim-equivalence: a 1-worker owned pool must be
+    // event-stream-equivalent (including modeled timestamps) to the
+    // borrowed single-engine frontend over the same trace.
+    let m = require!(manifest());
+    let trace = generate_trace(&TraceConfig {
+        n_requests: 8,
+        prompt_chars: (80, 200),
+        new_tokens: (4, 8),
+        session_reuse_prob: 0.4,
+        n_sessions: 2,
+        ..Default::default()
+    });
+    let opts = || ServeOptions {
+        time_model: TimeModel::Modeled,
+        ..Default::default()
+    };
+
+    // run A: classic borrowed single engine
+    let mut e = Engine::from_manifest(&m, serve_cfg(None)).expect("engine");
+    let mut p1 = Pipeline::new();
+    let mut fe = Frontend::builder().options(opts()).build(&mut e, &mut p1);
+    for req in &trace {
+        fe.submit(req.clone());
+    }
+    let ev_a = pump_all(&mut fe);
+    let r_a = fe.into_report();
+    assert_eq!(e.pool.pages_in_use(), 0);
+
+    // run B: owned pool with one worker
+    let pool = WorkerPool::build(&m, &serve_cfg(None), 1, DispatchKind::RoundRobin)
+        .expect("pool");
+    let mut p2 = Pipeline::new();
+    let mut fe = Frontend::builder().options(opts()).build_pool(pool, &mut p2);
+    for req in &trace {
+        fe.submit(req.clone());
+    }
+    let ev_b = pump_all(&mut fe);
+    let (r_b, pool) = fe.into_parts();
+    assert_eq!(pool.engine(0).pool.pages_in_use(), 0);
+
+    assert_eq!(
+        event_log(&ev_a),
+        event_log(&ev_b),
+        "1-worker pool must replay the single-engine event stream exactly"
+    );
+    assert_eq!(r_a.metrics.total_requests, r_b.metrics.total_requests);
+    assert_eq!(r_a.metrics.total_new_tokens, r_b.metrics.total_new_tokens);
+    assert_eq!(r_a.batcher_stats.admitted, r_b.batcher_stats.admitted);
+    assert_eq!(r_b.worker_stats.len(), 1);
+    assert_eq!(r_b.worker_stats[0].finished, r_b.metrics.total_requests);
+}
+
+/// Deferral scaffolding for the Deferred-lifecycle battery: a blocker
+/// request whose pages fill the budget, and an oversized victim arriving
+/// mid-decode that must defer. Returns (blocker, victim, budget_mb),
+/// all derived from a deterministic modeled-time probe.
+fn deferral_setup(
+    m: &Manifest,
+) -> (tinyserve::workload::Request, tinyserve::workload::Request, f64) {
+    let blocker_prompt = "the river and the stone and the light. ".repeat(4);
+    let victim_prompt = "winter morning bridge over the quiet water. ".repeat(12);
+    // probe: solo blocker, unbounded, modeled time — peak bytes and the
+    // mid-decode instant at which the victim should arrive
+    let mut e = Engine::from_manifest(m, serve_cfg(None)).expect("engine");
+    let mut plugins = Pipeline::new();
+    let opts = ServeOptions { time_model: TimeModel::Modeled, ..Default::default() };
+    let mut fe = Frontend::builder().options(opts).build(&mut e, &mut plugins);
+    fe.submit(lifecycle_req(0, 0.0, &blocker_prompt, 24));
+    let mut first_token_t = None;
+    let mut finish_t = None;
+    while fe.has_work() {
+        for ev in fe.step().expect("step") {
+            match ev {
+                ServeEvent::Token { t, .. } if first_token_t.is_none() => {
+                    first_token_t = Some(t)
+                }
+                ServeEvent::Finished(rec) => finish_t = Some(rec.e2e_seconds),
+                _ => {}
+            }
+        }
+    }
+    drop(fe);
+    let peak = e.pool.bytes_peak();
+    let (t0, t1) = (first_token_t.expect("streamed"), finish_t.expect("finished"));
+    assert!(t1 > t0);
+    let budget_mb = peak as f64 * 1.2 / 1e6;
+    let arrival = (t0 + t1) / 2.0;
+    let blocker = lifecycle_req(0, 0.0, &blocker_prompt, 24);
+    let victim = lifecycle_req(1, arrival, &victim_prompt, 8);
+    (blocker, victim, budget_mb)
+}
+
+#[test]
+fn pool_budget_invariant_under_random_lifecycle_interleavings() {
+    // The pool-level serving invariant: with a global kv_budget split
+    // across 2 workers, the summed bytes_in_use never exceeds the global
+    // budget after any pump step, under randomized submit/cancel/deadline
+    // interleavings, for all four eviction policies.
+    let m = require!(manifest());
+    // size the global budget from an unbounded probe of the same workload
+    let trace = generate_trace(&TraceConfig {
+        n_requests: 10,
+        prompt_chars: (150, 400),
+        new_tokens: (4, 8),
+        session_reuse_prob: 0.3,
+        n_sessions: 2,
+        ..Default::default()
+    });
+    let mut probe = Engine::from_manifest(&m, serve_cfg(None)).expect("engine");
+    let mut pp = Pipeline::new();
+    let r = serve_trace(&mut probe, &trace, &ServeOptions::default(), &mut pp)
+        .expect("probe serve");
+    assert_eq!(r.metrics.total_requests, 10);
+    let budget_mb = probe.pool.bytes_peak() as f64 * 0.7 / 1e6;
+    drop(probe);
+
+    for eviction in EvictionPolicyKind::all() {
+        let cfg = ServingConfig { eviction: *eviction, ..serve_cfg(Some(budget_mb)) };
+        let pool = WorkerPool::build(&m, &cfg, 2, DispatchKind::LeastLoaded)
+            .expect("pool");
+        let budget = pool.total_budget_bytes().expect("bounded");
+        assert!(
+            budget <= (budget_mb * 1e6) as usize,
+            "split sums past the global budget"
+        );
+        let opts = ServeOptions {
+            time_model: TimeModel::Modeled,
+            ..Default::default()
+        };
+        let mut plugins = Pipeline::new();
+        let mut fe = Frontend::builder().options(opts).build_pool(pool, &mut plugins);
+        let mut chaos = Rng::new(0x5EED ^ *eviction as u64);
+        for (i, req) in trace.iter().enumerate() {
+            let mut req = req.clone();
+            // every third request carries a tightish SLO
+            if i % 3 == 0 {
+                req.deadline_ms = Some(5.0 + chaos.f64() * 200.0);
+            }
+            fe.submit(req);
+        }
+        // `excused` is armed by a *fresh* overflow (pinned/partial pages
+        // blocked demotion) and disarmed the moment the pool returns
+        // under budget — so a later genuine violation needs its own
+        // overflow to pass, instead of hiding behind an early one
+        let mut excused = false;
+        let mut last_overflows = vec![0u64; fe.n_pool_workers()];
+        while fe.has_work() {
+            fe.step().expect("step");
+            // random mid-flight cancellations
+            if chaos.bool(0.1) {
+                let id = chaos.usize(10) as u64;
+                let _ = fe.cancel(id);
+            }
+            let total: usize = (0..fe.n_pool_workers())
+                .map(|w| {
+                    let e = fe.worker_engine(w);
+                    e.store.bytes_in_use(&e.pool)
+                })
+                .sum();
+            let mut fresh_overflow = false;
+            for (w, last) in last_overflows.iter_mut().enumerate() {
+                let o = fe.worker_engine(w).store.stats.overflows;
+                if o > *last {
+                    fresh_overflow = true;
+                }
+                *last = o;
+            }
+            if total <= budget {
+                excused = false;
+            } else {
+                excused = excused || fresh_overflow;
+                assert!(
+                    excused,
+                    "[{}] summed bytes_in_use {total} > pool budget {budget} \
+                     without an overflow",
+                    eviction.name()
+                );
+            }
+        }
+        let (_, pool) = fe.into_parts();
+        for w in 0..pool.len() {
+            assert_eq!(
+                pool.engine(w).pool.pages_in_use(),
+                0,
+                "[{}] worker {w} leaked pages",
+                eviction.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn session_turns_follow_their_snapshot_across_pool_workers() {
+    // Regression for count-oblivious dispatch orphaning session
+    // snapshots: under round-robin (which would alternate workers), the
+    // second turn of a session must be routed back to the worker holding
+    // its snapshot and reuse the prefix instead of re-prefilling.
+    let m = require!(manifest());
+    let pool = WorkerPool::build(&m, &serve_cfg(None), 2, DispatchKind::RoundRobin)
+        .expect("pool");
+    let opts = ServeOptions { time_model: TimeModel::Modeled, ..Default::default() };
+    let mut plugins = Pipeline::new();
+    let mut fe = Frontend::builder().options(opts).build_pool(pool, &mut plugins);
+    let mut rng = Rng::new(3);
+    let sess = tasks::kvrecall_session(&mut rng, 400, 4);
+    let mk = |id: u64, doc: &tasks::Doc, t: f64| tinyserve::workload::Request {
+        id,
+        arrival_s: t,
+        prompt: tasks::encode_prompt(&doc.prompt),
+        max_new_tokens: 4,
+        session: Some(7),
+        task: None,
+        answer: Some(doc.answer.clone()),
+        deadline_ms: None,
+    };
+    let q0 = sess.question(0);
+    let q1 = sess.question(1);
+    fe.submit(mk(0, &q0, 0.0));
+    fe.submit(mk(1, &q1, 0.1));
+    while fe.has_work() {
+        fe.step().expect("step");
+    }
+    let (r, pool) = fe.into_parts();
+    assert_eq!(r.metrics.total_requests, 2);
+    assert_eq!(r.session_stats.hits, 1, "turn 2 must hit the stored prefix");
+    assert!(r.session_stats.reused_tokens > 300, "{:?}", r.session_stats);
+    let rec1 = &r.requests[1];
+    assert!(rec1.session_reused_tokens > 300, "reused {}", rec1.session_reused_tokens);
+    for w in 0..pool.len() {
+        assert_eq!(pool.engine(w).pool.pages_in_use(), 0, "worker {w} leak");
+    }
+}
+
+#[test]
+fn deferred_request_eventually_finishes() {
+    // Deferred -> Active -> Finished: the victim defers under budget
+    // pressure while the blocker decodes, then admits once the blocker
+    // retires and frees its pages.
+    let m = require!(manifest());
+    let (blocker, victim, budget_mb) = deferral_setup(&m);
+    let mut e = Engine::from_manifest(&m, serve_cfg(Some(budget_mb))).expect("engine");
+    let mut plugins = Pipeline::new();
+    let opts = ServeOptions { time_model: TimeModel::Modeled, ..Default::default() };
+    let mut fe = Frontend::builder().options(opts).build(&mut e, &mut plugins);
+    fe.submit(blocker);
+    fe.submit(victim);
+    let mut saw_deferred = false;
+    while fe.has_work() {
+        for ev in fe.step().expect("step") {
+            if matches!(ev, ServeEvent::Deferred { id: 1, .. }) {
+                saw_deferred = true;
+                assert_eq!(
+                    fe.state_of(1),
+                    Some(Lifecycle::Deferred),
+                    "state tracks the deferral"
+                );
+            }
+        }
+    }
+    assert!(saw_deferred, "budget pressure must defer the victim at least once");
+    assert_eq!(fe.state_of(0), Some(Lifecycle::Finished));
+    assert_eq!(fe.state_of(1), Some(Lifecycle::Finished), "deferred -> finished");
+    let r = fe.into_report();
+    assert_eq!(r.metrics.total_requests, 2);
+    assert!(r.batcher_stats.deferred > 0);
+    assert_eq!(e.pool.pages_in_use(), 0);
+}
+
+#[test]
+fn cancel_while_deferred_emits_cancelled() {
+    // The regression this PR fixes: cancelling a Deferred request must
+    // emit a Cancelled event and count in total_cancelled — not silently
+    // vanish from the batcher queue.
+    let m = require!(manifest());
+    let (blocker, victim, budget_mb) = deferral_setup(&m);
+    let mut e = Engine::from_manifest(&m, serve_cfg(Some(budget_mb))).expect("engine");
+    let mut plugins = Pipeline::new();
+    let opts = ServeOptions { time_model: TimeModel::Modeled, ..Default::default() };
+    let mut fe = Frontend::builder().options(opts).build(&mut e, &mut plugins);
+    fe.submit(blocker);
+    fe.submit(victim);
+    let mut cancelled_events = 0u32;
+    let mut cancelled = false;
+    while fe.has_work() {
+        for ev in fe.step().expect("step") {
+            match ev {
+                ServeEvent::Deferred { id: 1, .. } if !cancelled => {
+                    assert_eq!(fe.state_of(1), Some(Lifecycle::Deferred));
+                    assert!(fe.cancel(1), "deferred request is cancellable");
+                    assert_eq!(fe.state_of(1), Some(Lifecycle::Cancelled));
+                    assert!(!fe.cancel(1), "terminal after cancellation");
+                    cancelled = true;
+                }
+                ServeEvent::Cancelled { id: 1, .. } => cancelled_events += 1,
+                ServeEvent::Token { id: 1, .. } => {
+                    panic!("cancelled-while-deferred request must never stream")
+                }
+                _ => {}
+            }
+        }
+    }
+    assert!(cancelled, "victim never deferred — budget sizing broke");
+    assert_eq!(cancelled_events, 1, "exactly one Cancelled event");
+    assert_eq!(fe.state_of(0), Some(Lifecycle::Finished));
+    let r = fe.into_report();
+    assert_eq!(r.metrics.total_cancelled, 1);
+    assert_eq!(r.metrics.total_requests, 1, "only the blocker completed");
+    assert_eq!(e.pool.pages_in_use(), 0);
+}
+
+#[test]
+fn deadline_expiry_while_deferred_emits_expired() {
+    // Deferred -> Expired: first run a deadline-free probe to learn the
+    // (deterministic, modeled-time) instants of the victim's first
+    // deferral and eventual admission, then rerun with a deadline strictly
+    // between them — the victim must defer at least once and then be shed
+    // with exactly one DeadlineExpired, never admitted.
+    let m = require!(manifest());
+    let (blocker, victim, budget_mb) = deferral_setup(&m);
+    let run = |deadline_ms: Option<f64>| -> (Vec<ServeEvent>, ServeReport, usize) {
+        let mut e =
+            Engine::from_manifest(&m, serve_cfg(Some(budget_mb))).expect("engine");
+        let mut plugins = Pipeline::new();
+        let opts =
+            ServeOptions { time_model: TimeModel::Modeled, ..Default::default() };
+        let mut fe = Frontend::builder().options(opts).build(&mut e, &mut plugins);
+        fe.submit(blocker.clone());
+        let mut v = victim.clone();
+        v.deadline_ms = deadline_ms;
+        fe.submit(v);
+        let mut events = Vec::new();
+        while fe.has_work() {
+            events.extend(fe.step().expect("step"));
+        }
+        let r = fe.into_report();
+        let leaked = e.pool.pages_in_use();
+        (events, r, leaked)
+    };
+    // probe: victim defers at t_def, admits at t_adm
+    let (probe_events, _, _) = run(None);
+    let t_def = probe_events
+        .iter()
+        .find_map(|ev| match ev {
+            ServeEvent::Deferred { id: 1, t } => Some(*t),
+            _ => None,
+        })
+        .expect("probe run must defer the victim");
+    let t_adm = probe_events
+        .iter()
+        .find_map(|ev| match ev {
+            ServeEvent::Admitted { id: 1, t } => Some(*t),
+            _ => None,
+        })
+        .expect("probe run must eventually admit the victim");
+    assert!(t_adm > t_def);
+    // deadline halfway between first deferral and admission, relative to
+    // the victim's arrival
+    let mid = (t_def + t_adm) / 2.0;
+    let deadline_ms = (mid - victim.arrival_s) * 1e3;
+    assert!(deadline_ms > 0.0);
+    let (events, r, leaked) = run(Some(deadline_ms));
+    let deferred_n = events
+        .iter()
+        .filter(|ev| matches!(ev, ServeEvent::Deferred { id: 1, .. }))
+        .count();
+    let expired: Vec<u64> = events
+        .iter()
+        .filter(|ev| matches!(ev, ServeEvent::DeadlineExpired { .. }))
+        .map(|ev| ev.id())
+        .collect();
+    assert!(deferred_n >= 1, "victim must defer before expiring");
+    assert_eq!(expired, vec![1], "exactly one DeadlineExpired, for the victim");
+    assert!(
+        !events
+            .iter()
+            .any(|ev| matches!(ev, ServeEvent::Admitted { id: 1, .. })),
+        "expired-while-deferred request is never admitted"
+    );
+    assert_eq!(r.metrics.total_expired, 1);
+    assert_eq!(r.metrics.total_requests, 1, "only the blocker completed");
+    assert_eq!(leaked, 0, "no pages leaked");
 }
 
 #[test]

@@ -162,12 +162,18 @@ fn prop_batcher_conserves_requests() {
         let mut active = 0usize;
         let mut next_id = 0usize;
         for _ in 0..n * 3 {
-            // random arrivals
+            // random arrivals, some carrying SLO deadlines (EDF reorders,
+            // conservation must hold regardless)
             if next_id < n && ctx.rng.bool(0.5) {
                 b.enqueue(QueuedItem {
                     request_idx: next_id,
                     arrival_s: now,
                     prompt_len: 10,
+                    deadline_s: if ctx.rng.bool(0.3) {
+                        Some(now + ctx.rng.f64())
+                    } else {
+                        None
+                    },
                 });
                 next_id += 1;
                 enqueued += 1;
@@ -220,6 +226,173 @@ fn prop_batcher_conserves_requests() {
         }
         if admitted != enqueued {
             return Err(format!("admitted {admitted} != enqueued {enqueued}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_edf_pop_order_is_total_and_stable() {
+    // EDF invariant: whatever the enqueue order, the batcher pops items
+    // sorted by (deadline or +inf, arrival, request id) — a total order,
+    // so the pop sequence is exactly the sorted key sequence.
+    prop_check("edf_pop_order", 120, |ctx| {
+        let mut b = Batcher::new(BatcherConfig {
+            max_active: 1024,
+            batch_timeout_s: 0.0,
+            prefill_per_round: 1 + ctx.rng.usize(5),
+        });
+        let n = ctx.scaled(1, 80);
+        let mut items: Vec<QueuedItem> = (0..n)
+            .map(|i| {
+                // coarse grids force deadline and arrival ties, so the
+                // id tie-break is actually exercised
+                let arrival = ctx.rng.usize(5) as f64 * 0.01;
+                QueuedItem {
+                    request_idx: i,
+                    arrival_s: arrival,
+                    prompt_len: 10,
+                    deadline_s: if ctx.rng.bool(0.6) {
+                        Some(arrival + ctx.rng.usize(3) as f64 * 0.05)
+                    } else {
+                        None
+                    },
+                }
+            })
+            .collect();
+        ctx.rng.shuffle(&mut items);
+        for it in &items {
+            b.enqueue(it.clone());
+        }
+        let mut want = items.clone();
+        want.sort_by(|a, x| {
+            let ka = (a.deadline_s.unwrap_or(f64::INFINITY), a.arrival_s, a.request_idx);
+            let kx = (x.deadline_s.unwrap_or(f64::INFINITY), x.arrival_s, x.request_idx);
+            ka.partial_cmp(&kx).unwrap()
+        });
+        let mut got: Vec<usize> = Vec::new();
+        let mut guard = 0;
+        while b.queue_len() > 0 {
+            guard += 1;
+            if guard > 10_000 {
+                return Err("drain did not converge".into());
+            }
+            match b.schedule(10.0, None) {
+                Round::Admit(v) => {
+                    got.extend(v.iter().map(|i| i.request_idx));
+                    b.on_finished(v.len());
+                }
+                Round::Decode => {
+                    let n = b.active();
+                    b.on_finished(n);
+                }
+                Round::Idle(_) => return Err("idle with a non-empty queue".into()),
+            }
+        }
+        let want_ids: Vec<usize> = want.iter().map(|i| i.request_idx).collect();
+        if got != want_ids {
+            return Err(format!("pop order {got:?} != EDF order {want_ids:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_worker_budget_split_conserves_total() {
+    // The WorkerPool budget-split rule: a global budget B over n workers
+    // gives each worker B/n, and each worker's PageStore enforces its
+    // slice independently — so the summed bytes_in_use never exceeds B
+    // (unless a worker recorded an overflow: everything evictable pinned
+    // or partial), under random alloc/release/pin/unpin/score
+    // interleavings across all four eviction policies.
+    prop_check("worker_budget_split", 50, |ctx| {
+        let n_workers = 1 + ctx.rng.usize(4);
+        let kind = *ctx.rng.choice(&[
+            EvictionPolicyKind::Lru,
+            EvictionPolicyKind::Clock,
+            EvictionPolicyKind::QueryAware,
+            EvictionPolicyKind::Sieve,
+        ]);
+        let mut pools: Vec<PagePool> =
+            (0..n_workers).map(|_| PagePool::new(2, 8, 4, KvDtype::F32)).collect();
+        let total_budget = (2 + ctx.rng.usize(8)) * pools[0].page_bytes()
+            + ctx.rng.usize(pools[0].page_bytes());
+        let per_worker = total_budget / n_workers;
+        if per_worker == 0 {
+            return Ok(());
+        }
+        let mut stores: Vec<PageStore> = (0..n_workers)
+            .map(|_| PageStore::new(Some(per_worker), kind))
+            .collect();
+        let mut refs: Vec<Vec<u32>> = vec![Vec::new(); n_workers];
+        for _ in 0..ctx.scaled(4, 100) {
+            let w = ctx.rng.usize(n_workers);
+            match ctx.rng.usize(8) {
+                0..=3 => {
+                    let id = stores[w].alloc(&mut pools[w]);
+                    for slot in 0..4 {
+                        for l in 0..2 {
+                            let v = ctx.rng.normal() as f32;
+                            pools[w].write_token(id, slot, l, &[v; 8], &[v; 8]);
+                        }
+                    }
+                    refs[w].push(id);
+                }
+                4..=5 => {
+                    if !refs[w].is_empty() {
+                        let i = ctx.rng.usize(refs[w].len());
+                        let id = refs[w].swap_remove(i);
+                        pools[w].release(id);
+                    }
+                }
+                6 => {
+                    if !refs[w].is_empty() {
+                        let id = refs[w][ctx.rng.usize(refs[w].len())];
+                        if stores[w].is_hot(id) {
+                            stores[w].pin(id);
+                        }
+                    }
+                }
+                _ => {
+                    if !refs[w].is_empty() {
+                        let id = refs[w][ctx.rng.usize(refs[w].len())];
+                        stores[w].note_score(id, ctx.rng.normal() as f32);
+                    }
+                    if ctx.rng.bool(0.3) {
+                        stores[w].unpin_all();
+                    }
+                }
+            }
+            let ovf_before: Vec<u64> =
+                (0..n_workers).map(|w| stores[w].stats.overflows).collect();
+            for w in 0..n_workers {
+                stores[w].enforce_budget(&mut pools[w]);
+            }
+            let sum: usize =
+                (0..n_workers).map(|w| stores[w].bytes_in_use(&pools[w])).sum();
+            // an overflow recorded by *this* enforcement pass (pinned or
+            // partial pages blocked demotion) is the only excuse
+            let overflowed = (0..n_workers)
+                .any(|w| stores[w].stats.overflows > ovf_before[w]);
+            if sum > total_budget && !overflowed {
+                return Err(format!(
+                    "sum bytes_in_use {sum} > global budget {total_budget} \
+                     ({n_workers} workers x {per_worker}, policy {kind:?}) \
+                     without an overflow"
+                ));
+            }
+        }
+        // full release drains every worker
+        for w in 0..n_workers {
+            stores[w].unpin_all();
+            for id in refs[w].drain(..) {
+                pools[w].release(id);
+            }
+            stores[w].sync(&pools[w]);
+            if stores[w].bytes_in_use(&pools[w]) != 0 {
+                return Err(format!("worker {w} bytes after release"));
+            }
+            pools[w].validate().map_err(|e| e.to_string())?;
         }
         Ok(())
     });
