@@ -21,6 +21,7 @@ use tinyserve::plugins::Pipeline;
 use tinyserve::report::Table;
 use tinyserve::runtime::Manifest;
 use tinyserve::sparsity::PolicyKind;
+use tinyserve::util::json::Json;
 use tinyserve::workload::{
     ArrivalProcess, LoadShape, OpenLoopConfig, OpenLoopGen,
 };
@@ -148,6 +149,14 @@ fn main() {
         }
     }
     t.emit(&tinyserve::results_dir(), "table8_scaling");
+    t.emit_bench(
+        &tinyserve::results_dir(),
+        "table8",
+        vec![
+            ("model", Json::from(SERVE_MODEL)),
+            ("n_requests", Json::from(n_requests)),
+        ],
+    );
 
     // ---- A100 projection (measured base rate x hwmodel efficiency) ----
     let batch = *info.batch_variants("qkv").last().unwrap();

@@ -152,26 +152,48 @@ fn fig67(manifest: &Manifest) -> Result<()> {
 }
 
 /// T9 (quick variant) — memory-budgeted page store: residency hit rate
-/// and accuracy at 50% of the unbounded KV peak per eviction policy. The
-/// full budget sweep lives in `benches/table9_eviction.rs`; this entry
-/// registers the table with the one-command figure regeneration flow.
+/// and accuracy at 50% of the unbounded KV peak per eviction policy,
+/// with the disk spill tier enabled (spill budget = peak). The full
+/// three-tier budget sweep lives in `benches/table9_eviction.rs`; this
+/// entry registers the table with the one-command figure regeneration
+/// flow.
 fn table9(manifest: &Manifest) -> Result<()> {
-    use tinyserve::harness::measure_eviction;
+    use tinyserve::harness::{measure_eviction, EvictionCase};
     use tinyserve::kvcache::EvictionPolicyKind;
-    let n = scale(6);
-    let base = measure_eviction(
-        manifest, MODEL, EvictionPolicyKind::QueryAware, None, n, 500, 256, 11,
-    )?;
+    let base_case = EvictionCase {
+        n_cases: scale(6),
+        prompt_chars: 500,
+        budget_tokens: 256,
+        seed: 11,
+        ..Default::default()
+    };
+    let base = measure_eviction(manifest, MODEL, &base_case)?;
     let budget = base.bytes_peak_unbounded / 2;
     let mut t = Table::new(
         &format!(
-            "Table 9 (quick): eviction policies at 50% of {:.2} MB peak",
+            "Table 9 (quick): eviction policies at 50% of {:.2} MB peak \
+             (disk spill on)",
             base.bytes_peak_unbounded as f64 / 1e6
         ),
-        &["policy", "resid hit %", "demote/tok", "acc %", "Δacc pp", "viol"],
+        &[
+            "policy",
+            "resid hit %",
+            "demote/tok",
+            "acc %",
+            "Δacc pp",
+            "viol",
+            "faults",
+        ],
     );
     for &kind in EvictionPolicyKind::all() {
-        match measure_eviction(manifest, MODEL, kind, Some(budget), n, 500, 256, 11) {
+        let case = EvictionCase {
+            eviction: kind,
+            budget_bytes: Some(budget),
+            spill_budget_bytes: Some(base.bytes_peak_unbounded.max(1)),
+            readahead_pages: 2,
+            ..base_case.clone()
+        };
+        match measure_eviction(manifest, MODEL, &case) {
             Ok(r) => {
                 t.row(vec![
                     kind.name().to_string(),
@@ -180,6 +202,7 @@ fn table9(manifest: &Manifest) -> Result<()> {
                     format!("{:.1}", r.accuracy * 100.0),
                     format!("{:+.1}", (r.accuracy - base.accuracy) * 100.0),
                     format!("{}", r.violations),
+                    format!("{}", r.disk_faults),
                 ]);
             }
             Err(e) => eprintln!("skip {}: {e}", kind.name()),

@@ -5,7 +5,10 @@
 //! paper's §4.13 hyperparameters (page size 16, selection ratio 0.3, batch
 //! timeout 50ms).
 
-use crate::kvcache::store::EvictionPolicyKind;
+use std::path::PathBuf;
+
+use crate::kvcache::store::spill::default_spill_root;
+use crate::kvcache::store::{EvictionPolicyKind, SpillConfig};
 use crate::sparsity::PolicyKind;
 
 /// KV cache storage precision (paper §3.1: "FP16/INT8 KV formats").
@@ -66,6 +69,17 @@ pub struct ServingConfig {
     pub kv_budget_mb: Option<f64>,
     /// replacement policy for budget-driven demotions
     pub eviction: EvictionPolicyKind,
+    /// disk spill tier budget in MB (decimal); None = two-tier store (no
+    /// disk). Requires `kv_budget_mb` — the disk tier holds pages the RAM
+    /// budget evicted.
+    pub spill_budget_mb: Option<f64>,
+    /// segment-file directory for the spill tier; None = a process-unique
+    /// temp directory. Requires `spill_budget_mb`. Worker pools slice it
+    /// into per-worker subdirectories.
+    pub spill_dir: Option<PathBuf>,
+    /// disk pages prefetched per decode step by score-driven readahead
+    /// (0 = off). Requires `spill_budget_mb`.
+    pub readahead_pages: usize,
     pub seed: u64,
 }
 
@@ -84,6 +98,9 @@ impl Default for ServingConfig {
             max_active: 64,
             kv_budget_mb: None,
             eviction: EvictionPolicyKind::QueryAware,
+            spill_budget_mb: None,
+            spill_dir: None,
+            readahead_pages: 0,
             seed: 42,
         }
     }
@@ -98,6 +115,51 @@ impl ServingConfig {
     /// KV byte budget in bytes (decimal MB), if bounded.
     pub fn kv_budget_bytes(&self) -> Option<usize> {
         self.kv_budget_mb.map(|mb| (mb * 1e6) as usize)
+    }
+
+    /// Disk spill tier budget in bytes (decimal MB), if enabled.
+    pub fn spill_budget_bytes(&self) -> Option<usize> {
+        self.spill_budget_mb.map(|mb| (mb * 1e6) as usize)
+    }
+
+    /// The spill root directory to slice per-worker configs under: an
+    /// explicit `spill_dir` as-is, otherwise a fresh process-unique temp
+    /// directory (so two engines in one process never share segment
+    /// files). Multi-worker pools must resolve this ONCE and slice with
+    /// [`spill_config_in`](Self::spill_config_in) so all workers land in
+    /// sibling `worker-<w>/` slices of the same root.
+    pub fn spill_root(&self) -> Option<PathBuf> {
+        self.spill_budget_mb?;
+        Some(match &self.spill_dir {
+            Some(d) => d.clone(),
+            None => default_spill_root(),
+        })
+    }
+
+    /// The single place that knows the per-worker spill slicing rule:
+    /// worker `w` of `n_workers` gets `root/worker-<w>` and
+    /// `spill_budget / n_workers` bytes (integer division, like the KV
+    /// budget split). `None` when the spill tier is disabled.
+    pub fn spill_config_in(
+        &self,
+        root: &std::path::Path,
+        w: usize,
+        n_workers: usize,
+    ) -> Option<SpillConfig> {
+        let total = self.spill_budget_bytes()?;
+        let mut sc = SpillConfig::new(
+            root.join(format!("worker-{w}")),
+            (total / n_workers.max(1)).max(1),
+        );
+        sc.readahead_pages = self.readahead_pages;
+        Some(sc)
+    }
+
+    /// Single-engine convenience: resolve a root and take the whole spill
+    /// budget as worker 0 of 1.
+    pub fn spill_config(&self, w: usize, n_workers: usize) -> Option<SpillConfig> {
+        let root = self.spill_root()?;
+        self.spill_config_in(&root, w, n_workers)
     }
 
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -116,7 +178,39 @@ impl ServingConfig {
         if let Some(mb) = self.kv_budget_mb {
             anyhow::ensure!(
                 mb > 0.0 && mb.is_finite(),
-                "kv_budget_mb must be positive, got {mb}"
+                "kv_budget_mb must be positive, got {mb} \
+                 (drop --kv-budget-mb entirely for an unbounded pool)"
+            );
+        }
+        if let Some(mb) = self.spill_budget_mb {
+            anyhow::ensure!(
+                mb > 0.0 && mb.is_finite(),
+                "spill_budget_mb must be positive, got {mb} \
+                 (drop --spill-budget-mb entirely to disable the disk tier)"
+            );
+            anyhow::ensure!(
+                self.kv_budget_mb.is_some(),
+                "--spill-budget-mb requires --kv-budget-mb: the disk tier \
+                 holds pages the RAM budget evicted, so without a KV budget \
+                 nothing ever spills; pass both, e.g. \
+                 --kv-budget-mb 64 --spill-budget-mb 256"
+            );
+        }
+        if self.spill_dir.is_some() {
+            anyhow::ensure!(
+                self.spill_budget_mb.is_some(),
+                "--spill-dir requires --spill-budget-mb: the spill tier is \
+                 sized by its byte budget; pass both, e.g. \
+                 --spill-dir /tmp/kv-spill --spill-budget-mb 256, or drop \
+                 --spill-dir"
+            );
+        }
+        if self.readahead_pages > 0 {
+            anyhow::ensure!(
+                self.spill_budget_mb.is_some(),
+                "--readahead requires --spill-budget-mb: readahead \
+                 prefetches from the disk spill tier; pass both, e.g. \
+                 --spill-budget-mb 256 --readahead 4, or drop --readahead"
             );
         }
         Ok(())
@@ -160,6 +254,77 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = ServingConfig { kv_budget_mb: Some(-3.0), ..Default::default() };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn spill_flag_pairings_are_validated() {
+        // spill budget without a KV budget: rejected, names the pairing
+        let bad = ServingConfig { spill_budget_mb: Some(8.0), ..Default::default() };
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("--spill-budget-mb") && e.contains("--kv-budget-mb"), "{e}");
+        // spill dir without a spill budget
+        let bad = ServingConfig {
+            kv_budget_mb: Some(4.0),
+            spill_dir: Some(PathBuf::from("/tmp/x")),
+            ..Default::default()
+        };
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("--spill-dir") && e.contains("--spill-budget-mb"), "{e}");
+        // readahead without a spill budget
+        let bad = ServingConfig {
+            kv_budget_mb: Some(4.0),
+            readahead_pages: 2,
+            ..Default::default()
+        };
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("--readahead") && e.contains("--spill-budget-mb"), "{e}");
+        // zero / negative spill budgets
+        for mb in [0.0, -1.0] {
+            let bad = ServingConfig {
+                kv_budget_mb: Some(4.0),
+                spill_budget_mb: Some(mb),
+                ..Default::default()
+            };
+            assert!(bad.validate().is_err(), "spill budget {mb} accepted");
+        }
+        // the full, consistent combo passes
+        let ok = ServingConfig {
+            kv_budget_mb: Some(4.0),
+            spill_budget_mb: Some(16.0),
+            spill_dir: Some(PathBuf::from("/tmp/kv-spill")),
+            readahead_pages: 2,
+            ..Default::default()
+        };
+        ok.validate().unwrap();
+        assert_eq!(ok.spill_budget_bytes(), Some(16_000_000));
+    }
+
+    #[test]
+    fn spill_config_slices_dir_and_budget_per_worker() {
+        let cfg = ServingConfig {
+            kv_budget_mb: Some(4.0),
+            spill_budget_mb: Some(8.0),
+            spill_dir: Some(PathBuf::from("/tmp/spill-root")),
+            readahead_pages: 3,
+            ..Default::default()
+        };
+        let a = cfg.spill_config(0, 4).unwrap();
+        let b = cfg.spill_config(3, 4).unwrap();
+        assert_eq!(a.dir, PathBuf::from("/tmp/spill-root/worker-0"));
+        assert_eq!(b.dir, PathBuf::from("/tmp/spill-root/worker-3"));
+        assert_eq!(a.budget_bytes, 2_000_000, "8 MB over 4 workers");
+        assert_eq!(a.readahead_pages, 3);
+        // default dirs are unique per call: two engines never collide
+        let cfg = ServingConfig {
+            kv_budget_mb: Some(4.0),
+            spill_budget_mb: Some(8.0),
+            ..Default::default()
+        };
+        let a = cfg.spill_config(0, 1).unwrap();
+        let b = cfg.spill_config(0, 1).unwrap();
+        assert_ne!(a.dir, b.dir);
+        // disabled without a spill budget
+        assert!(ServingConfig::default().spill_config(0, 1).is_none());
     }
 
     #[test]

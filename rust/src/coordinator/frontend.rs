@@ -900,12 +900,15 @@ impl<'a> Frontend<'a> {
                     &mut m,
                 )?
             };
-            // spill_seconds is the simulated cold-tier transfer cost of
-            // the budgeted store (hwmodel-priced, not wall time)
+            // spill_seconds / disk_seconds are the simulated q8- and
+            // disk-tier transfer costs of the budgeted store
+            // (hwmodel-priced, not wall time; deterministic byte counts,
+            // so Modeled event streams stay seed-stable with spill on)
+            let tier_s = m.spill_seconds + m.disk_seconds;
             let dt_w = match self.opts.time_model {
-                TimeModel::Measured => m.step_seconds + m.spill_seconds,
+                TimeModel::Measured => m.step_seconds + tier_s,
                 TimeModel::Modeled => {
-                    Self::modeled_step_s(self.pool.engine(w), &m) + m.spill_seconds
+                    Self::modeled_step_s(self.pool.engine(w), &m) + tier_s
                 }
             };
             self.busy += dt_w;

@@ -180,7 +180,9 @@ impl WorkerPool<'static> {
     /// Build `workers` owned engines from one manifest + serving config.
     /// A bounded `kv_budget_mb` is split `total_bytes / workers` per
     /// worker (integer division — the per-worker budgets can never sum
-    /// past the global budget).
+    /// past the global budget). The spill tier splits the same way, and
+    /// every worker gets its own spill directory slice (`worker-<w>/`
+    /// under `spill_dir`) so segment files are never shared.
     pub fn build(
         manifest: &Manifest,
         cfg: &ServingConfig,
@@ -189,9 +191,19 @@ impl WorkerPool<'static> {
     ) -> Result<WorkerPool<'static>> {
         anyhow::ensure!(workers > 0, "worker pool needs at least one worker");
         let per_worker_budget = cfg.kv_budget_bytes().map(|b| b / workers);
+        // one spill root for the whole pool, resolved ONCE so the workers
+        // land in sibling `worker-<w>/` slices of the same directory
+        let spill_root = cfg.spill_root();
         let mut slots = Vec::with_capacity(workers);
-        for _ in 0..workers {
-            let mut engine = Engine::from_manifest(manifest, cfg.clone())?;
+        // the pool installs each worker's store below; strip the spill
+        // fields from the per-engine config so `from_manifest` does not
+        // create (and immediately discard) a whole-budget spill manager
+        let mut engine_cfg = cfg.clone();
+        engine_cfg.spill_budget_mb = None;
+        engine_cfg.spill_dir = None;
+        engine_cfg.readahead_pages = 0;
+        for w in 0..workers {
+            let mut engine = Engine::from_manifest(manifest, engine_cfg.clone())?;
             if let Some(b) = per_worker_budget {
                 anyhow::ensure!(
                     b > 0,
@@ -199,7 +211,13 @@ impl WorkerPool<'static> {
                     cfg.kv_budget_mb,
                     workers
                 );
-                engine.store = PageStore::new(Some(b), cfg.eviction);
+                let spill_cfg = spill_root
+                    .as_deref()
+                    .and_then(|root| cfg.spill_config_in(root, w, workers));
+                engine.store = match spill_cfg {
+                    Some(sc) => PageStore::with_spill(Some(b), cfg.eviction, sc)?,
+                    None => PageStore::new(Some(b), cfg.eviction),
+                };
             }
             slots.push(Slot::Owned(Box::new(engine)));
         }

@@ -123,7 +123,12 @@ impl Engine {
         let info = rt.info.clone();
         let d_kv = info.n_head * info.head_dim;
         let pool = PagePool::new(info.n_layer, d_kv, cfg.page_size, cfg.kv_dtype);
-        let store = PageStore::new(cfg.kv_budget_bytes(), cfg.eviction);
+        // single-engine path: the whole spill budget belongs to worker 0
+        // (WorkerPool::build re-slices stores for multi-worker pools)
+        let store = match cfg.spill_config(0, 1) {
+            Some(sc) => PageStore::with_spill(cfg.kv_budget_bytes(), cfg.eviction, sc)?,
+            None => PageStore::new(cfg.kv_budget_bytes(), cfg.eviction),
+        };
 
         // resolve the decode-path artifact variants we will use
         let mut arts = BTreeMap::new();
@@ -246,13 +251,15 @@ impl Engine {
 
     /// Admission-control check: can a prompt of `prompt_tokens` be brought
     /// fully hot without exceeding the KV budget, assuming every currently
-    /// resident page could be demoted to the cold rate? Unbounded engines
-    /// always admit.
+    /// resident page could be demoted to the cold rate — and, with a disk
+    /// spill tier attached, that as many cold pages as the tier still has
+    /// room for could leave RAM entirely? Unbounded engines always admit.
     pub fn kv_admission_ok(&mut self, prompt_tokens: usize) -> bool {
         let Some(budget) = self.store.budget_bytes() else { return true };
         self.store.sync(&self.pool);
         let (hot, cold) = self.store.tier_counts();
-        let floor = (hot + cold) * self.pool.page_bytes_cold();
+        let spillable = self.store.spill_free_pages(&self.pool).min(hot + cold);
+        let floor = (hot + cold - spillable) * self.pool.page_bytes_cold();
         let need = prompt_tokens.div_ceil(self.cfg.page_size).max(1)
             * self.pool.page_bytes();
         floor + need <= budget
@@ -394,11 +401,12 @@ impl Engine {
                 cur.sort_unstable();
                 std::mem::swap(prev, &mut cur);
 
-                // residency: promote selected cold pages before the gather
-                // (counts the hit/miss and charges the simulated spill)
+                // residency: promote selected cold pages (and fault
+                // disk-spilled ones) back before the gather — counts the
+                // hit/miss and charges the simulated q8/disk transfers
                 if budgeted {
                     for &tidx in sel.iter() {
-                        self.store.ensure_hot(&mut self.pool, cache.pages[tidx].id);
+                        self.store.ensure_hot(&mut self.pool, cache.pages[tidx].id)?;
                     }
                 }
 
@@ -433,6 +441,14 @@ impl Engine {
                     row += n_slots;
                 }
                 m.gather_seconds += tg.elapsed().as_secs_f64();
+            }
+
+            // ---- score-driven readahead, once per decode step ----
+            // every row's layer-0 scores are in by now; prefetch the disk
+            // pages the current queries rank highest so later layers (and
+            // the next step) fault from the cache instead of the segment
+            if layer == 0 {
+                self.store.readahead_tick();
             }
 
             // ---- fused attention + MLP ----
@@ -527,7 +543,16 @@ impl Engine {
         m.demotions += (st.demotions - st0.demotions) as usize;
         m.promotions += (st.promotions - st0.promotions) as usize;
         m.spill_seconds += st.spill_seconds - st0.spill_seconds;
+        m.spill_out_bytes += (st.spill_out_bytes - st0.spill_out_bytes) as usize;
+        m.spill_in_bytes += (st.spill_in_bytes - st0.spill_in_bytes) as usize;
+        m.disk_faults += (st.faults - st0.faults) as usize;
+        m.readahead_hits += (st.readahead_hits - st0.readahead_hits) as usize;
+        m.disk_seconds += st.disk_seconds - st0.disk_seconds;
         self.stats_reported = st;
+        let (hot, cold, disk) = self.store.tier_residency();
+        m.pages_hot = hot;
+        m.pages_cold = cold;
+        m.pages_disk = disk;
         m.kv_bytes_in_use = self.store.bytes_in_use(&self.pool);
         m.kv_budget_bytes = self.store.budget_bytes().unwrap_or(0);
         m.batch = n;

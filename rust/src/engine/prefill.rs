@@ -44,6 +44,23 @@ impl Engine {
         if seq.cache.pos > 0 {
             let mut krow = vec![0.0f32; self.pool.page_size * d_kv];
             let mut vrow = vec![0.0f32; self.pool.page_size * d_kv];
+            // snapshot pages may have been spilled to disk while the
+            // session idled — fault them back before gathering, holding
+            // pins across the whole resume (same discipline as the decode
+            // batch: without pins, faulting page B could displace
+            // already-faulted page A back to disk and the gather below
+            // would read A's zeroed rows). Hot/cold pages are
+            // RAM-resident and read as-is, so the classic two-tier path
+            // stays bit-identical (no extra sync, no pins).
+            if self.store.spill_enabled() {
+                self.store.sync(&self.pool);
+                for e in &seq.cache.pages {
+                    self.store.pin(e.id);
+                }
+                for e in &seq.cache.pages {
+                    self.store.fault_if_spilled(&mut self.pool, e.id)?;
+                }
+            }
             for e in &seq.cache.pages {
                 let filled = self.pool.filled(e.id);
                 for layer in 0..l {
@@ -53,6 +70,11 @@ impl Engine {
                         .copy_from_slice(&krow[..filled * d_kv]);
                     vbuf[off..off + filled * d_kv]
                         .copy_from_slice(&vrow[..filled * d_kv]);
+                }
+            }
+            if self.store.spill_enabled() {
+                for e in &seq.cache.pages {
+                    self.store.unpin(e.id);
                 }
             }
         }

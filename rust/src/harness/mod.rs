@@ -216,6 +216,42 @@ pub fn measure_accuracy(
     })
 }
 
+/// One budgeted-store measurement case (Table 9 row). `Default` is the
+/// classic two-tier sweep shape; set `spill_budget_bytes` (and optionally
+/// `readahead_pages`) to exercise the three-tier cascade. The spill
+/// directory is a process-unique temp slice (honouring
+/// `TINYSERVE_SPILL_DIR`) cleaned up when the engine drops.
+#[derive(Debug, Clone)]
+pub struct EvictionCase {
+    pub eviction: EvictionPolicyKind,
+    /// None = unbounded baseline
+    pub budget_bytes: Option<usize>,
+    /// None = no disk tier (requires `budget_bytes` when set)
+    pub spill_budget_bytes: Option<usize>,
+    pub readahead_pages: usize,
+    pub kv_dtype: KvDtype,
+    pub n_cases: usize,
+    pub prompt_chars: usize,
+    pub budget_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for EvictionCase {
+    fn default() -> Self {
+        EvictionCase {
+            eviction: EvictionPolicyKind::QueryAware,
+            budget_bytes: None,
+            spill_budget_bytes: None,
+            readahead_pages: 0,
+            kv_dtype: KvDtype::F32,
+            n_cases: 10,
+            prompt_chars: 600,
+            budget_tokens: 256,
+            seed: 11,
+        }
+    }
+}
+
 /// One budgeted-store measurement (Table 9 row): task accuracy plus
 /// residency behaviour under a KV byte budget and eviction policy.
 #[derive(Debug, Clone)]
@@ -233,6 +269,15 @@ pub struct EvictionRun {
     /// steps that ended above the budget (0 = invariant held)
     pub violations: u64,
     pub new_tokens: u64,
+    // --- disk spill tier (zero without one) ---
+    pub spill_out_bytes: u64,
+    pub spill_in_bytes: u64,
+    pub disk_faults: u64,
+    pub readahead_hits: u64,
+    /// max post-step disk-resident page count
+    pub disk_pages_peak: usize,
+    /// wall-clock of the measured run (perf-record trajectory input)
+    pub run_seconds: f64,
 }
 
 /// Run the task-accuracy workload through the budgeted page store and
@@ -242,25 +287,24 @@ pub struct EvictionRun {
 pub fn measure_eviction(
     manifest: &Manifest,
     model: &str,
-    eviction: EvictionPolicyKind,
-    budget_bytes: Option<usize>,
-    n_cases: usize,
-    prompt_chars: usize,
-    budget_tokens: usize,
-    seed: u64,
+    case: &EvictionCase,
 ) -> Result<EvictionRun> {
     let cfg = ServingConfig {
         model: model.to_string(),
         policy: PolicyKind::TinyServe,
-        budget: budget_tokens,
+        budget: case.budget_tokens,
         max_batch: 1,
-        kv_budget_mb: budget_bytes.map(|b| b as f64 / 1e6),
-        eviction,
+        kv_dtype: case.kv_dtype,
+        kv_budget_mb: case.budget_bytes.map(|b| b as f64 / 1e6),
+        eviction: case.eviction,
+        spill_budget_mb: case.spill_budget_bytes.map(|b| b as f64 / 1e6),
+        readahead_pages: case.readahead_pages,
         ..Default::default()
     };
+    let t_run = std::time::Instant::now();
     let mut engine = Engine::from_manifest(manifest, cfg)?;
-    let mut rng = Rng::new(seed);
-    let mut task_rng = Rng::new(seed ^ 0x5eed);
+    let mut rng = Rng::new(case.seed);
+    let mut task_rng = Rng::new(case.seed ^ 0x5eed);
     let mut exact = 0usize;
     let mut hits = 0u64;
     let mut misses = 0u64;
@@ -268,9 +312,14 @@ pub fn measure_eviction(
     let mut new_tokens = 0u64;
     let mut max_bytes = 0usize;
     let mut violations = 0u64;
-    for i in 0..n_cases {
+    let mut spill_out_bytes = 0u64;
+    let mut spill_in_bytes = 0u64;
+    let mut disk_faults = 0u64;
+    let mut readahead_hits = 0u64;
+    let mut disk_pages_peak = 0usize;
+    for i in 0..case.n_cases {
         let task = Task::all()[i % Task::all().len()];
-        let doc = tasks::make_doc(&mut task_rng, task, prompt_chars);
+        let doc = tasks::make_doc(&mut task_rng, task, case.prompt_chars);
         let mut seq = engine.new_sequence();
         seq.tokens = tasks::encode_prompt(&doc.prompt);
         seq.max_new_tokens = doc.answer.len() + 4;
@@ -289,15 +338,20 @@ pub fn measure_eviction(
             if m.kv_budget_bytes > 0 && m.kv_bytes_in_use > m.kv_budget_bytes {
                 violations += 1;
             }
+            spill_out_bytes += m.spill_out_bytes as u64;
+            spill_in_bytes += m.spill_in_bytes as u64;
+            disk_faults += m.disk_faults as u64;
+            readahead_hits += m.readahead_hits as u64;
+            disk_pages_peak = disk_pages_peak.max(m.pages_disk);
         }
         let gen = tasks::decode_ids(seq.generated_tokens());
         exact += tasks::answer_matches(&doc, &gen) as usize;
         engine.release(&mut seq);
     }
     Ok(EvictionRun {
-        eviction,
-        budget_bytes,
-        accuracy: exact as f64 / n_cases.max(1) as f64,
+        eviction: case.eviction,
+        budget_bytes: case.budget_bytes,
+        accuracy: exact as f64 / case.n_cases.max(1) as f64,
         residency_hit_rate: if hits + misses > 0 {
             hits as f64 / (hits + misses) as f64
         } else {
@@ -308,6 +362,12 @@ pub fn measure_eviction(
         max_bytes_in_use: max_bytes,
         violations,
         new_tokens,
+        spill_out_bytes,
+        spill_in_bytes,
+        disk_faults,
+        readahead_hits,
+        disk_pages_peak,
+        run_seconds: t_run.elapsed().as_secs_f64(),
     })
 }
 

@@ -31,6 +31,11 @@ pub struct Device {
     /// cold-tier (demoted KV slab) bandwidth, bytes/s — slower than HBM,
     /// prices the budgeted store's demotion/promotion traffic
     pub cold_bw: f64,
+    /// disk spill-tier bandwidth, bytes/s (NVMe-class, far below the
+    /// cold-tier link) — prices segment-file spill/fault traffic
+    pub disk_bw: f64,
+    /// per-operation disk latency quantum, s (submission + seek)
+    pub disk_lat_s: f64,
 }
 
 impl Default for Device {
@@ -42,6 +47,8 @@ impl Default for Device {
             launch_s: 6e-6,
             framework_s: 35e-6,
             cold_bw: 0.6e12,
+            disk_bw: 8.0e9,
+            disk_lat_s: 80e-6,
         }
     }
 }
@@ -52,6 +59,14 @@ impl Device {
     /// kernel-launch quantum.
     pub fn spill_seconds(&self, bytes: usize) -> f64 {
         bytes as f64 / self.cold_bw + self.launch_s
+    }
+
+    /// Simulated cost of moving `bytes` across the disk spill tier (one
+    /// segment-slot write, fault read or readahead batch), including the
+    /// per-operation latency quantum. Deterministic in the byte count, so
+    /// `TimeModel::Modeled` event streams stay seed-stable with spill on.
+    pub fn disk_seconds(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.disk_bw + self.disk_lat_s
     }
 }
 
@@ -282,6 +297,18 @@ mod tests {
             d.spill_seconds(1 << 20) > (1 << 20) as f64 / d.hbm_bw,
             "cold tier must be slower than HBM"
         );
+    }
+
+    #[test]
+    fn disk_tier_is_slower_than_cold_tier() {
+        let d = Device::default();
+        let bytes = 1 << 20;
+        assert!(
+            d.disk_seconds(bytes) > d.spill_seconds(bytes),
+            "spill tier must sit below the q8 cold tier in the hierarchy"
+        );
+        assert!(d.disk_seconds(0) >= d.disk_lat_s, "latency floor");
+        assert!(d.disk_seconds(2 * bytes) > d.disk_seconds(bytes));
     }
 
     #[test]

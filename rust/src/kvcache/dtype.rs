@@ -113,6 +113,33 @@ impl Slab {
         out
     }
 
+    /// Raw view of one quantized row (int8 slabs only): the i8 data and
+    /// its per-row scale. The disk spill tier copies these bytes verbatim
+    /// instead of re-quantizing — a dequantize/requantize cycle can drift
+    /// the stored scale by an ulp, and spill must be bit-exact.
+    pub fn q8_row(&self, row: usize, width: usize) -> Option<(&[i8], f32)> {
+        match self {
+            Slab::I8 { data, scales } => {
+                Some((&data[row * width..(row + 1) * width], scales[row]))
+            }
+            _ => None,
+        }
+    }
+
+    /// Store one raw quantized row (int8 slabs only). Returns false for
+    /// other precisions — callers fall back to the f32 path.
+    pub fn store_q8_row(&mut self, row: usize, width: usize, q: &[i8], scale: f32) -> bool {
+        debug_assert_eq!(q.len(), width);
+        match self {
+            Slab::I8 { data, scales } => {
+                data[row * width..(row + 1) * width].copy_from_slice(q);
+                scales[row] = scale;
+                true
+            }
+            _ => false,
+        }
+    }
+
     pub fn bytes_per_row(&self, width: usize) -> usize {
         match self {
             Slab::F32(_) => width * 4,
@@ -177,6 +204,24 @@ mod tests {
         slab.load_rows(1, 2, width, &mut dst);
         assert_eq!(dst[0], 8.0);
         assert_eq!(dst[15], 23.0);
+    }
+
+    #[test]
+    fn q8_raw_roundtrip_is_bit_exact() {
+        let width = 8;
+        let mut a = Slab::new(KvDtype::Int8, 2, width);
+        let src: Vec<f32> = (0..width).map(|i| (i as f32 - 3.3) * 0.7).collect();
+        a.store_row(1, width, &src);
+        let (q, s) = a.q8_row(1, width).unwrap();
+        let (q, s) = (q.to_vec(), s);
+        let mut b = Slab::new(KvDtype::Int8, 2, width);
+        assert!(b.store_q8_row(1, width, &q, s));
+        assert_eq!(a.load_row_vec(1, width), b.load_row_vec(1, width));
+        assert_eq!(b.q8_row(1, width).unwrap().1, s);
+        // non-int8 slabs refuse the raw path
+        let mut f = Slab::new(KvDtype::F32, 2, width);
+        assert!(f.q8_row(1, width).is_none());
+        assert!(!f.store_q8_row(1, width, &q, s));
     }
 
     #[test]

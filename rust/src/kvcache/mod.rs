@@ -10,4 +10,7 @@ pub mod store;
 pub use dtype::Slab;
 pub use pool::{PageId, PagePool};
 pub use seq::{PageEntry, SeqCache};
-pub use store::{EvictionPolicyKind, PageStore, StoreStats};
+pub use store::{
+    default_spill_root, EvictionPolicyKind, PageStore, SpillConfig, SpillError,
+    StoreStats,
+};

@@ -266,10 +266,16 @@ impl PagePool {
     /// the q8 round-trip; the budgeted store charges the page at
     /// `page_bytes_cold` afterwards. Returns bytes rewritten (the
     /// spill-traffic analogue).
+    ///
+    /// Int8 pools are already at the q8 rate: re-quantizing their rows is
+    /// the identity and the byte accounting gains nothing
+    /// (`page_bytes_cold == page_bytes`), so demotion is a free no-op —
+    /// values *and* bounding boxes stay bit-identical, which is what lets
+    /// a budgeted int8 run decode token-identically to an unbounded one.
     pub fn demote_page_in_place(&mut self, page: PageId) -> usize {
         let n = self.filled[page as usize] as usize;
         let d = self.d_kv;
-        if n == 0 {
+        if n == 0 || self.dtype == KvDtype::Int8 {
             return 0;
         }
         let mut scratch = Slab::new(crate::config::KvDtype::Int8, 1, d);
@@ -309,6 +315,86 @@ impl PagePool {
             }
         }
         bytes
+    }
+
+    /// Disk-spill support: physically free a page's K/V rows (zero them at
+    /// the pool dtype) while its id stays allocated. Bounding-box metadata
+    /// is deliberately left resident — it is the scoring input and must
+    /// keep working while the payload lives on disk. A gather that skips
+    /// the fault path reads zeros, so a missed fault is loud, not subtly
+    /// stale.
+    pub fn purge_rows(&mut self, page: PageId) {
+        let zeros = vec![0.0f32; self.d_kv];
+        for l in 0..self.n_layers {
+            for s in 0..self.page_size {
+                let row = page as usize * self.page_size + s;
+                self.k[l].store_row(row, self.d_kv, &zeros);
+                self.v[l].store_row(row, self.d_kv, &zeros);
+            }
+        }
+    }
+
+    /// Disk-spill support: restore `n_rows` K/V rows of one layer from
+    /// dequantized f32 data (stored back at the pool dtype). Unlike
+    /// `write_token` this neither advances fill counters nor touches
+    /// metadata or refcounts — the page is already fully accounted; only
+    /// its payload was away.
+    pub fn import_rows(
+        &mut self,
+        page: PageId,
+        layer: usize,
+        n_rows: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) {
+        debug_assert!(n_rows <= self.page_size);
+        let d = self.d_kv;
+        for s in 0..n_rows {
+            let row = page as usize * self.page_size + s;
+            self.k[layer].store_row(row, d, &k_rows[s * d..(s + 1) * d]);
+            self.v[layer].store_row(row, d, &v_rows[s * d..(s + 1) * d]);
+        }
+    }
+
+    /// Disk-spill support, int8 pools: raw (K, V) quantized rows for one
+    /// slot — `((k_data, k_scale), (v_data, v_scale))`. `None` for f32 or
+    /// f16 pools. The spill codec copies these bytes verbatim so an int8
+    /// page round-trips the disk tier bit-exactly (re-quantization could
+    /// drift the per-row scale by an ulp).
+    #[allow(clippy::type_complexity)]
+    pub fn q8_rows_raw(
+        &self,
+        page: PageId,
+        layer: usize,
+        slot: usize,
+    ) -> Option<((&[i8], f32), (&[i8], f32))> {
+        let row = page as usize * self.page_size + slot;
+        let k = self.k[layer].q8_row(row, self.d_kv)?;
+        let v = self.v[layer].q8_row(row, self.d_kv)?;
+        Some((k, v))
+    }
+
+    /// Disk-spill support, int8 pools: restore one slot's raw quantized
+    /// (K, V) rows. Returns false (and stores nothing) for other dtypes.
+    pub fn import_q8_row(
+        &mut self,
+        page: PageId,
+        layer: usize,
+        slot: usize,
+        k: (&[i8], f32),
+        v: (&[i8], f32),
+    ) -> bool {
+        let row = page as usize * self.page_size + slot;
+        self.k[layer].store_q8_row(row, self.d_kv, k.0, k.1)
+            && self.v[layer].store_q8_row(row, self.d_kv, v.0, v.1)
+    }
+
+    /// Disk-spill support: reinstate a page's `[min ++ max]` bounding box
+    /// for one layer (the durable copy a spill slot carries).
+    pub fn set_meta(&mut self, page: PageId, layer: usize, meta: &[f32]) {
+        debug_assert_eq!(meta.len(), 2 * self.d_kv);
+        self.meta[layer][page as usize * 2 * self.d_kv..(page as usize + 1) * 2 * self.d_kv]
+            .copy_from_slice(meta);
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -504,5 +590,48 @@ mod tests {
         let mut p = pool();
         let pg = p.alloc();
         assert_eq!(p.demote_page_in_place(pg), 0);
+    }
+
+    #[test]
+    fn demote_int8_pool_is_identity() {
+        let mut p = PagePool::new(1, 8, 4, KvDtype::Int8);
+        let pg = p.alloc();
+        let row = [0.3, -1.2, 0.9, 2.0, -0.5, 0.0, 1.1, -2.2];
+        for s in 0..4 {
+            p.write_token(pg, s, 0, &row, &row);
+        }
+        let before: Vec<Vec<f32>> = (0..4).map(|s| p.key_row(pg, 0, s)).collect();
+        let meta_before = p.meta(pg, 0).to_vec();
+        assert_eq!(p.demote_page_in_place(pg), 0, "int8 demotion moves nothing");
+        let after: Vec<Vec<f32>> = (0..4).map(|s| p.key_row(pg, 0, s)).collect();
+        assert_eq!(before, after);
+        assert_eq!(meta_before, p.meta(pg, 0).to_vec());
+    }
+
+    #[test]
+    fn purge_then_import_restores_rows_and_meta() {
+        let mut p = pool();
+        let pg = p.alloc();
+        for s in 0..4 {
+            let row: Vec<f32> = (0..8).map(|i| (s * 8 + i) as f32 * 0.25).collect();
+            for l in 0..2 {
+                p.write_token(pg, s, l, &row, &row);
+            }
+        }
+        let rows: Vec<Vec<f32>> = (0..4).map(|s| p.key_row(pg, 1, s)).collect();
+        let meta = p.meta(pg, 1).to_vec();
+        p.purge_rows(pg);
+        assert!(p.key_row(pg, 1, 2).iter().all(|&x| x == 0.0), "rows freed");
+        assert_eq!(p.meta(pg, 1).to_vec(), meta, "bboxes stay resident");
+        let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+        for l in 0..2 {
+            p.import_rows(pg, l, 4, &flat, &flat);
+            p.set_meta(pg, l, &meta);
+        }
+        for (s, row) in rows.iter().enumerate() {
+            assert_eq!(&p.key_row(pg, 1, s), row, "import restores slot {s}");
+        }
+        assert_eq!(p.meta(pg, 1).to_vec(), meta);
+        assert_eq!(p.filled(pg), 4, "fill counter untouched by purge/import");
     }
 }

@@ -18,12 +18,25 @@
 //! still be allocated/freed behind its back (snapshot clones, session
 //! clears); `sync` reconciles against pool refcounts before any budget
 //! decision, so accounting is exact at every enforcement point.
+//!
+//! With a [`spill`] tier attached the residency machine grows a third
+//! state: `Hot -> ColdQ8 -> Disk`. Budget enforcement cascades — demote
+//! hot pages to q8 first, and once nothing hot is evictable, move the
+//! oldest-demoted cold pages onto disk (their pool rows are zeroed; the
+//! page charges zero RAM bytes). `ensure_hot` faults disk pages back —
+//! read, dequantize, reinstate bounding boxes — priced through the
+//! `hwmodel` disk-bandwidth constants so modeled event streams stay
+//! seed-deterministic.
 
 pub mod policy;
+pub mod spill;
 
 pub use policy::{make_eviction_policy, EvictionPolicy, EvictionPolicyKind};
+pub use spill::{default_spill_root, SpillConfig, SpillError, SpillManager};
 
 use crate::hwmodel::Device;
+
+use spill::FaultSource;
 
 use super::pool::{PageId, PagePool};
 use super::seq::SeqCache;
@@ -32,7 +45,10 @@ use super::seq::SeqCache;
 enum Tier {
     Untracked,
     Hot,
-    Cold,
+    /// demoted in place to the q8 rate, still RAM-resident
+    ColdQ8,
+    /// payload on the spill tier; pool rows are zeroed, bboxes stay hot
+    Disk,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -52,15 +68,34 @@ impl Default for PageState {
 pub struct StoreStats {
     /// selected page was already hot
     pub hits: u64,
-    /// selected page was cold and had to be promoted
+    /// selected page was cold (q8 or disk) and had to be promoted
     pub misses: u64,
     pub demotions: u64,
     pub promotions: u64,
     /// simulated cold-tier transfer time (hwmodel-priced)
     pub spill_seconds: f64,
     /// enforcement passes that could not reach the budget (everything
-    /// evictable already demoted)
+    /// evictable already demoted/spilled)
     pub overflows: u64,
+    // --- disk spill tier (zero without a spill manager) ---
+    /// cold pages moved onto the disk tier
+    pub spill_outs: u64,
+    /// payload bytes written toward the disk tier
+    pub spill_out_bytes: u64,
+    /// disk pages faulted back into residency
+    pub faults: u64,
+    /// payload bytes read back from the disk tier
+    pub spill_in_bytes: u64,
+    /// faults served from the write-back staging buffer (no disk read)
+    pub staging_hits: u64,
+    /// faults served from the readahead cache (read already paid)
+    pub readahead_hits: u64,
+    /// bytes prefetched by readahead ticks
+    pub readahead_bytes: u64,
+    /// spill-tier I/O or corruption failures absorbed on the write path
+    pub spill_errors: u64,
+    /// simulated disk-tier transfer time (hwmodel-priced)
+    pub disk_seconds: f64,
 }
 
 /// Byte-budgeted residency manager over a `PagePool`.
@@ -71,6 +106,12 @@ pub struct PageStore {
     pinned: Vec<PageId>,
     hot_pages: usize,
     cold_pages: usize,
+    disk_pages: usize,
+    /// store tick at demotion time: the q8→disk cascade spills the
+    /// oldest-demoted cold page first (FIFO on demotion age)
+    demoted_at: Vec<u64>,
+    /// disk tier below q8 (None = the classic two-tier store)
+    spill: Option<SpillManager>,
     tick: u64,
     dev: Device,
     pub stats: StoreStats,
@@ -85,9 +126,56 @@ impl PageStore {
             pinned: Vec::new(),
             hot_pages: 0,
             cold_pages: 0,
+            disk_pages: 0,
+            demoted_at: Vec::new(),
+            spill: None,
             tick: 0,
             dev: Device::default(),
             stats: StoreStats::default(),
+        }
+    }
+
+    /// A store with a disk spill tier under the q8 cold tier. Creates the
+    /// spill directory eagerly so misconfiguration fails at construction,
+    /// not mid-serve.
+    pub fn with_spill(
+        budget_bytes: Option<usize>,
+        kind: EvictionPolicyKind,
+        spill_cfg: SpillConfig,
+    ) -> anyhow::Result<PageStore> {
+        let mut s = PageStore::new(budget_bytes, kind);
+        s.spill = Some(SpillManager::new(spill_cfg)?);
+        Ok(s)
+    }
+
+    pub fn spill_enabled(&self) -> bool {
+        self.spill.is_some()
+    }
+
+    /// Whole pages the disk tier can still accept (0 without one).
+    pub fn spill_free_pages(&self, pool: &PagePool) -> usize {
+        self.spill.as_ref().map(|s| s.pages_free(pool)).unwrap_or(0)
+    }
+
+    /// Payload bytes currently held by the disk tier.
+    pub fn spill_bytes(&self) -> usize {
+        self.spill.as_ref().map(|s| s.bytes_on_tier()).unwrap_or(0)
+    }
+
+    /// Flush the spill staging buffer to segment files (tests, shutdown).
+    pub fn flush_spill(&mut self) -> anyhow::Result<()> {
+        if let Some(sp) = self.spill.as_mut() {
+            sp.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Resize the disk tier's byte budget at runtime (no-op without one).
+    /// Shrinking never evicts already-spilled pages; it only stops new
+    /// spills. The next `enforce_budget` sees the new cap.
+    pub fn set_spill_budget_bytes(&mut self, bytes: usize) {
+        if let Some(sp) = self.spill.as_mut() {
+            sp.set_budget_bytes(bytes);
         }
     }
 
@@ -105,15 +193,30 @@ impl PageStore {
         self.policy.kind()
     }
 
-    /// Whether the engine should feed bounding-box relevance observations.
+    /// Whether the engine should feed bounding-box relevance observations
+    /// (the query-aware eviction signal, and the disk tier's readahead
+    /// predictor).
     pub fn wants_scores(&self) -> bool {
-        self.enabled() && self.policy.kind() == EvictionPolicyKind::QueryAware
+        self.enabled()
+            && (self.policy.kind() == EvictionPolicyKind::QueryAware
+                || self.readahead_enabled())
+    }
+
+    fn readahead_enabled(&self) -> bool {
+        self.spill.as_ref().map(|s| s.readahead_enabled()).unwrap_or(false)
     }
 
     pub fn is_cold(&self, id: PageId) -> bool {
         self.state
             .get(id as usize)
-            .map(|s| s.tier == Tier::Cold)
+            .map(|s| s.tier == Tier::ColdQ8)
+            .unwrap_or(false)
+    }
+
+    pub fn is_on_disk(&self, id: PageId) -> bool {
+        self.state
+            .get(id as usize)
+            .map(|s| s.tier == Tier::Disk)
             .unwrap_or(false)
     }
 
@@ -131,12 +234,19 @@ impl PageStore {
             .unwrap_or(false)
     }
 
-    /// (hot, cold) resident page counts as of the last sync.
+    /// (hot, q8-cold) RAM-resident page counts as of the last sync.
     pub fn tier_counts(&self) -> (usize, usize) {
         (self.hot_pages, self.cold_pages)
     }
 
-    /// KV bytes currently resident, cold pages charged at the q8 rate.
+    /// (hot, q8-cold, disk) page counts as of the last sync.
+    pub fn tier_residency(&self) -> (usize, usize, usize) {
+        (self.hot_pages, self.cold_pages, self.disk_pages)
+    }
+
+    /// KV bytes currently RAM-resident: cold pages charge the q8 rate,
+    /// disk pages charge nothing (their rows are zeroed in the pool; only
+    /// the per-page bounding boxes stay hot, as metadata always does).
     /// Without a budget this is exactly `PagePool::bytes_in_use`.
     pub fn bytes_in_use(&self, pool: &PagePool) -> usize {
         if !self.enabled() {
@@ -148,6 +258,7 @@ impl PageStore {
     fn ensure_cap(&mut self, cap: usize) {
         if self.state.len() < cap {
             self.state.resize(cap, PageState::default());
+            self.demoted_at.resize(cap, 0);
             self.policy.ensure_capacity(cap);
         }
     }
@@ -156,13 +267,24 @@ impl PageStore {
         let st = &mut self.state[id as usize];
         match st.tier {
             Tier::Untracked => self.hot_pages += 1,
-            Tier::Cold => {
+            Tier::ColdQ8 => {
                 self.cold_pages -= 1;
                 self.hot_pages += 1;
             }
+            Tier::Disk => {
+                // disk pages re-enter through `ensure_hot`'s fault path;
+                // adopting one here means the caller bypassed it — keep the
+                // accounting sound and drop the (now dead) spill payload
+                debug_assert!(false, "page {id} adopted hot while on disk");
+                self.disk_pages -= 1;
+                self.hot_pages += 1;
+                if let Some(sp) = self.spill.as_mut() {
+                    sp.free(id);
+                }
+            }
             Tier::Hot => {}
         }
-        st.tier = Tier::Hot;
+        self.state[id as usize].tier = Tier::Hot;
         self.tick += 1;
         self.policy.on_access(id, self.tick);
     }
@@ -171,11 +293,17 @@ impl PageStore {
         let st = &mut self.state[id as usize];
         match st.tier {
             Tier::Hot => self.hot_pages -= 1,
-            Tier::Cold => self.cold_pages -= 1,
+            Tier::ColdQ8 => self.cold_pages -= 1,
+            Tier::Disk => {
+                self.disk_pages -= 1;
+                if let Some(sp) = self.spill.as_mut() {
+                    sp.free(id);
+                }
+            }
             Tier::Untracked => return,
         }
-        st.tier = Tier::Untracked;
-        st.pinned = false;
+        self.state[id as usize].tier = Tier::Untracked;
+        self.state[id as usize].pinned = false;
         self.policy.on_remove(id);
     }
 
@@ -250,11 +378,14 @@ impl PageStore {
 
     /// A sparsity policy selected this page for attention: count the
     /// residency hit/miss and transparently promote if cold (charging the
-    /// simulated cold-tier transfer). Promotion may displace another page
-    /// to stay inside the budget.
-    pub fn ensure_hot(&mut self, pool: &mut PagePool, id: PageId) {
+    /// simulated cold-tier transfer) or **fault** if on disk (read the
+    /// segment slot, dequantize into the pool, reinstate bounding boxes,
+    /// priced at disk bandwidth). Promotion may displace another page to
+    /// stay inside the budget. Only the disk path can fail — a corrupted
+    /// or truncated segment surfaces as a typed [`SpillError`].
+    pub fn ensure_hot(&mut self, pool: &mut PagePool, id: PageId) -> anyhow::Result<()> {
         if !self.enabled() {
-            return;
+            return Ok(());
         }
         self.ensure_cap(pool.cap_pages());
         match self.state[id as usize].tier {
@@ -263,7 +394,7 @@ impl PageStore {
                 self.tick += 1;
                 self.policy.on_access(id, self.tick);
             }
-            Tier::Cold => {
+            Tier::ColdQ8 => {
                 self.stats.misses += 1;
                 self.stats.promotions += 1;
                 self.state[id as usize].tier = Tier::Hot;
@@ -276,18 +407,85 @@ impl PageStore {
                 // displace someone else, never the page just promoted
                 self.evict_until_excluding(pool, 0, Some(id));
             }
+            Tier::Disk => {
+                let sp = self.spill.as_mut().ok_or_else(|| {
+                    anyhow::anyhow!("page {id} marked Disk without a spill tier")
+                })?;
+                let (bytes, src) = sp.fault(pool, id)?;
+                self.stats.misses += 1;
+                self.stats.promotions += 1;
+                self.stats.faults += 1;
+                self.stats.spill_in_bytes += bytes as u64;
+                match src {
+                    // still in the write-back buffer: no disk traffic
+                    FaultSource::Staging => self.stats.staging_hits += 1,
+                    // prefetched: the read was priced at the readahead tick
+                    FaultSource::Readahead => self.stats.readahead_hits += 1,
+                    FaultSource::Disk => {
+                        self.stats.disk_seconds += self.dev.disk_seconds(bytes);
+                    }
+                }
+                // the dequantized rows land at the hot rate: charge the
+                // same q8→hot promotion the cold path pays
+                self.stats.spill_seconds += self.spill_seconds(pool.page_bytes());
+                self.state[id as usize].tier = Tier::Hot;
+                self.disk_pages -= 1;
+                self.hot_pages += 1;
+                self.tick += 1;
+                self.policy.on_access(id, self.tick);
+                self.evict_until_excluding(pool, 0, Some(id));
+            }
             Tier::Untracked => {
                 // allocation raced past a sync point; adopt as hot
                 self.register_hot(id);
                 self.stats.hits += 1;
             }
         }
+        Ok(())
     }
 
-    /// Feed a bounding-box relevance observation (query-aware policy).
+    /// Fault a page back only if it lives on the disk tier (no-op for
+    /// hot/cold pages — their bytes are RAM-resident and readable). The
+    /// prefill session-resume path uses this before gathering.
+    pub fn fault_if_spilled(
+        &mut self,
+        pool: &mut PagePool,
+        id: PageId,
+    ) -> anyhow::Result<()> {
+        if self.is_on_disk(id) {
+            self.ensure_hot(pool, id)?;
+        }
+        Ok(())
+    }
+
+    /// Feed a bounding-box relevance observation (query-aware policy and
+    /// the disk tier's readahead predictor).
     pub fn note_score(&mut self, id: PageId, score: f32) {
         if self.enabled() && (id as usize) < self.state.len() {
             self.policy.on_score(id, score);
+            if self.state[id as usize].tier == Tier::Disk {
+                if let Some(sp) = self.spill.as_mut() {
+                    sp.note_score(id, score);
+                }
+            }
+        }
+    }
+
+    /// Prefetch the disk pages the current query scores highest into the
+    /// readahead cache (one batched read, priced at disk bandwidth). The
+    /// engine calls this once per decode step after feeding scores; a
+    /// no-op without a spill tier or with readahead disabled. Read
+    /// failures are absorbed (`spill_errors`) — readahead is a hint, and
+    /// the synchronous fault path will surface a real corruption.
+    pub fn readahead_tick(&mut self) {
+        let Some(sp) = self.spill.as_mut() else { return };
+        match sp.prefetch() {
+            Ok(0) => {}
+            Ok(bytes) => {
+                self.stats.readahead_bytes += bytes as u64;
+                self.stats.disk_seconds += self.dev.disk_seconds(bytes);
+            }
+            Err(_) => self.stats.spill_errors += 1,
         }
     }
 
@@ -305,6 +503,10 @@ impl PageStore {
         self.evict_until_excluding(pool, headroom, None);
     }
 
+    /// Budget cascade: demote hot pages to q8 while the policy still has
+    /// victims; once nothing hot is evictable, spill the oldest-demoted
+    /// cold pages to disk (fully freeing their pool bytes); only when both
+    /// rungs are exhausted does the pass record an overflow.
     fn evict_until_excluding(
         &mut self,
         pool: &mut PagePool,
@@ -333,8 +535,10 @@ impl PageStore {
             match victim {
                 Some(id) => self.demote(pool, id),
                 None => {
-                    self.stats.overflows += 1;
-                    return;
+                    if !self.spill_one(pool, exclude) {
+                        self.stats.overflows += 1;
+                        return;
+                    }
                 }
             }
         }
@@ -344,11 +548,58 @@ impl PageStore {
         debug_assert_eq!(self.state[id as usize].tier, Tier::Hot);
         debug_assert!(!self.state[id as usize].pinned, "demoting a pinned page");
         let moved = pool.demote_page_in_place(id);
-        self.state[id as usize].tier = Tier::Cold;
+        self.state[id as usize].tier = Tier::ColdQ8;
         self.hot_pages -= 1;
         self.cold_pages += 1;
+        self.tick += 1;
+        self.demoted_at[id as usize] = self.tick;
         self.stats.demotions += 1;
         self.stats.spill_seconds += self.spill_seconds(moved);
+    }
+
+    /// The q8→disk rung of the cascade: move the oldest-demoted,
+    /// unpinned cold page onto the spill tier. Returns false when there
+    /// is no spill tier, it is at its byte budget, nothing qualifies, or
+    /// the write path failed (recorded, never fatal — serving overflows
+    /// instead of erroring on budget pressure).
+    fn spill_one(&mut self, pool: &mut PagePool, exclude: Option<PageId>) -> bool {
+        let can = match self.spill.as_ref() {
+            Some(sp) => sp.can_accept(pool),
+            None => false,
+        };
+        if !can {
+            return false;
+        }
+        let mut best: Option<(PageId, u64)> = None;
+        for i in 0..self.state.len() {
+            let id = i as PageId;
+            if Some(id) == exclude {
+                continue;
+            }
+            let st = self.state[i];
+            if st.tier != Tier::ColdQ8 || st.pinned || pool.refcount(id) == 0 {
+                continue;
+            }
+            let t = self.demoted_at[i];
+            if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+                best = Some((id, t));
+            }
+        }
+        let Some((id, _)) = best else { return false };
+        let (bytes, new_write_errors) = {
+            let sp = self.spill.as_mut().expect("checked above");
+            let before = sp.write_errors;
+            let bytes = sp.spill(pool, id);
+            (bytes, sp.write_errors - before)
+        };
+        self.state[id as usize].tier = Tier::Disk;
+        self.cold_pages -= 1;
+        self.disk_pages += 1;
+        self.stats.spill_outs += 1;
+        self.stats.spill_out_bytes += bytes as u64;
+        self.stats.spill_errors += new_write_errors;
+        self.stats.disk_seconds += self.dev.disk_seconds(bytes);
+        true
     }
 
     fn spill_seconds(&self, bytes: usize) -> f64 {
@@ -487,12 +738,12 @@ mod tests {
         }
         s.enforce_budget(&mut p);
         assert!(s.is_cold(a), "LRU must have demoted the oldest page");
-        s.ensure_hot(&mut p, a);
+        s.ensure_hot(&mut p, a).unwrap();
         assert!(s.is_hot(a));
         assert_eq!(s.stats.misses, 1);
         assert_eq!(s.stats.promotions, 1);
         assert!(s.stats.spill_seconds > 0.0);
-        s.ensure_hot(&mut p, a);
+        s.ensure_hot(&mut p, a).unwrap();
         assert_eq!(s.stats.hits, 1);
     }
 
@@ -556,5 +807,125 @@ mod tests {
         assert_eq!(s.coldest_index(&seq, 1), Some(1));
         assert_eq!(s.coldest_index(&seq, 5), None, "nothing prunable");
         seq.clear(&mut p);
+    }
+
+    fn spill_store(budget: usize, tag: &str) -> PageStore {
+        PageStore::with_spill(
+            Some(budget),
+            EvictionPolicyKind::Lru,
+            SpillConfig::new(default_spill_root().join(tag), 1 << 20),
+        )
+        .expect("spill store")
+    }
+
+    #[test]
+    fn budget_cascade_demotes_then_spills_to_disk() {
+        let mut p = pool();
+        // budget holds exactly one hot page; cold pages overflow it too,
+        // so the cascade must push them onto the disk tier
+        let budget = p.page_bytes();
+        let mut s = spill_store(budget, "cascade");
+        let mut live = Vec::new();
+        for i in 0..4 {
+            let id = s.alloc(&mut p);
+            fill_page(&mut p, id, i as f32);
+            live.push(id);
+        }
+        s.enforce_budget(&mut p);
+        assert!(s.bytes_in_use(&p) <= budget, "cascade reached the budget");
+        let (hot, cold, disk) = s.tier_residency();
+        assert_eq!(hot + cold + disk, 4);
+        assert!(disk > 0, "q8 alone cannot fit: pages must hit the disk tier");
+        assert!(s.stats.spill_outs as usize == disk);
+        assert!(s.stats.spill_out_bytes > 0);
+        assert!(s.stats.disk_seconds > 0.0, "disk traffic is hwmodel-priced");
+        assert_eq!(s.spill_bytes(), disk * (8 + 4) * 2 * 4 * 2 + disk * 2 * 2 * 8 * 4);
+        // a spilled page's pool rows are physically zeroed
+        let spilled = *live.iter().find(|&&id| s.is_on_disk(id)).unwrap();
+        assert!(p.key_row(spilled, 0, 0).iter().all(|&x| x == 0.0));
+        // fault it back: contents must match a pure q8 demotion round-trip
+        s.ensure_hot(&mut p, spilled).unwrap();
+        assert!(s.is_hot(spilled));
+        assert_eq!(s.stats.faults, 1);
+        assert!(s.stats.spill_in_bytes > 0);
+        assert!(!p.key_row(spilled, 0, 0).iter().all(|&x| x == 0.0));
+        for id in live {
+            p.release(id);
+        }
+        s.sync(&p);
+        assert_eq!(s.bytes_in_use(&p), 0);
+        assert_eq!(s.spill_bytes(), 0, "released pages leave the disk tier");
+    }
+
+    #[test]
+    fn spilled_pages_survive_release_and_realloc() {
+        let mut p = pool();
+        let budget = p.page_bytes();
+        let mut s = spill_store(budget, "realloc");
+        let mut live = Vec::new();
+        for i in 0..3 {
+            let id = s.alloc(&mut p);
+            fill_page(&mut p, id, i as f32);
+            live.push(id);
+        }
+        s.enforce_budget(&mut p);
+        let disk_before = s.tier_residency().2;
+        assert!(disk_before > 0);
+        // release a disk-resident page: its slot must recycle and the next
+        // alloc of the same PageId must start clean (hot, zero fill)
+        let victim = *live.iter().find(|&&id| s.is_on_disk(id)).unwrap();
+        p.release(victim);
+        s.sync(&p);
+        assert_eq!(s.tier_residency().2, disk_before - 1);
+        let fresh = s.alloc(&mut p);
+        assert!(s.is_hot(fresh));
+        for &id in live.iter().filter(|&&id| id != victim) {
+            p.release(id);
+        }
+        p.release(fresh);
+        s.sync(&p);
+        assert_eq!(s.spill_bytes(), 0);
+    }
+
+    #[test]
+    fn corrupted_segment_bubbles_typed_error_through_ensure_hot() {
+        use std::io::{Seek, SeekFrom, Write};
+        let mut p = pool();
+        let budget = p.page_bytes();
+        let dir = default_spill_root().join("store-corrupt");
+        let mut s = PageStore::with_spill(
+            Some(budget),
+            EvictionPolicyKind::Lru,
+            SpillConfig::new(dir.clone(), 1 << 20),
+        )
+        .unwrap();
+        let mut live = Vec::new();
+        for i in 0..3 {
+            let id = s.alloc(&mut p);
+            fill_page(&mut p, id, i as f32);
+            live.push(id);
+        }
+        s.enforce_budget(&mut p);
+        s.flush_spill().unwrap();
+        let spilled = *live.iter().find(|&&id| s.is_on_disk(id)).unwrap();
+        // corrupt the segment behind the store's back
+        let seg = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .find(|p| p.extension().map(|x| x == "kvseg").unwrap_or(false))
+            .expect("segment file exists");
+        let mut f = std::fs::OpenOptions::new().write(true).open(&seg).unwrap();
+        f.seek(SeekFrom::Start(20)).unwrap();
+        f.write_all(&[0xEE, 0xEE, 0xEE]).unwrap();
+        drop(f);
+        let err = s.ensure_hot(&mut p, spilled).unwrap_err().to_string();
+        assert!(
+            err.contains("checksum") || err.contains("magic"),
+            "typed corruption error, got: {err}"
+        );
+        for id in live {
+            p.release(id);
+        }
     }
 }

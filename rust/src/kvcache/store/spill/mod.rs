@@ -1,0 +1,823 @@
+//! Disk-backed spill tier below the q8 cold tier: segment files plus a
+//! buffer-manager-style staging/readahead layer.
+//!
+//! The classic disk-manager / buffer-manager split (simpledb lineage):
+//!
+//! * [`SegmentFile`](segment::SegmentFile) — fixed-slot files, free-slot
+//!   bitmap, slot reuse on free. One slot holds one serialized KV page:
+//!   q8-quantized K/V rows (per-row symmetric int8 + f32 scale) plus the
+//!   page's bounding-box metadata, framed by a magic/filled/checksum
+//!   header so corruption surfaces as a typed [`SpillError`], never a
+//!   panic or silent garbage.
+//! * [`SpillManager`] — the policy layer: a bounded write-back **staging
+//!   buffer** (spilled pages accumulate in RAM and flush to slots in
+//!   batches, so demotion bursts pay one batched write instead of N
+//!   seeks), a **readahead cache** fed by the query-aware relevance
+//!   scores (the pages the selection scores predict will be touched next
+//!   are prefetched before `ensure_hot` faults on them), and the
+//!   page → slot map.
+//!
+//! Spilling **fully frees pool memory**: the page's K/V rows are zeroed
+//! in the pool slabs after encoding (a gather that skips the fault path
+//! would read zeros — bugs are loud, not subtly stale). Bounding-box
+//! metadata stays RAM-resident so Eq.-2 scoring keeps working while the
+//! page is on disk; the slot carries a copy so a fault restores exactly
+//! the boxes the scores were computed from.
+//!
+//! Determinism: all internal maps are `BTreeMap`s keyed by `PageId`, so
+//! flush order, readahead candidate order and the resulting byte
+//! counters are identical run-to-run for a fixed workload — the
+//! `TimeModel::Modeled` event streams stay seed-deterministic with the
+//! spill tier enabled.
+
+pub mod segment;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::kvcache::dtype::Slab;
+use crate::kvcache::pool::{PageId, PagePool};
+
+pub use segment::SegmentFile;
+
+/// Slots per segment file; a full segment spawns `seg-<n>.kvseg` next to it.
+const SEG_SLOTS: usize = 64;
+
+/// Slot header: magic u32, filled u16, reserved u16, FNV-1a checksum u64.
+const HEADER_BYTES: usize = 16;
+const SLOT_MAGIC: u32 = 0x4B56_5350; // "KVSP"
+
+static SPILL_DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh process-unique spill directory under `TINYSERVE_SPILL_DIR`
+/// (CI passes a tmpdir) or the system temp dir. Each call returns a new
+/// path, so two engines in one process never share segment files.
+pub fn default_spill_root() -> PathBuf {
+    let base = std::env::var("TINYSERVE_SPILL_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| std::env::temp_dir());
+    base.join(format!(
+        "tinyserve-spill-{}-{}",
+        std::process::id(),
+        SPILL_DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Typed spill-tier failure. Read-path corruption (bad magic, checksum
+/// mismatch, truncation) is distinguishable from plain I/O so callers and
+/// tests can assert on the exact failure class.
+#[derive(Debug)]
+pub enum SpillError {
+    Io(std::io::Error),
+    BadMagic { path: PathBuf, slot: u32, got: u32 },
+    ChecksumMismatch { path: PathBuf, slot: u32 },
+    Truncated { path: PathBuf, slot: u32 },
+    SlotOutOfRange { slot: u32, n_slots: usize },
+    /// fault on a page the tier does not hold (map desync — a logic bug)
+    MissingPage(PageId),
+    /// slot header's filled count disagrees with the pool's page shape
+    ShapeMismatch { slot: u32, filled: usize, expect: usize },
+}
+
+impl std::fmt::Display for SpillError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpillError::Io(e) => write!(f, "spill i/o error: {e}"),
+            SpillError::BadMagic { path, slot, got } => write!(
+                f,
+                "bad slot magic {got:#010x} in {} slot {slot} (corrupted segment?)",
+                path.display()
+            ),
+            SpillError::ChecksumMismatch { path, slot } => write!(
+                f,
+                "checksum mismatch in {} slot {slot} (corrupted segment)",
+                path.display()
+            ),
+            SpillError::Truncated { path, slot } => write!(
+                f,
+                "segment {} truncated under slot {slot}",
+                path.display()
+            ),
+            SpillError::SlotOutOfRange { slot, n_slots } => {
+                write!(f, "slot {slot} out of range (segment holds {n_slots})")
+            }
+            SpillError::MissingPage(id) => {
+                write!(f, "page {id} is not held by the spill tier")
+            }
+            SpillError::ShapeMismatch { slot, filled, expect } => write!(
+                f,
+                "slot {slot} holds {filled} filled rows, pool expects {expect}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SpillError {}
+
+impl From<std::io::Error> for SpillError {
+    fn from(e: std::io::Error) -> SpillError {
+        SpillError::Io(e)
+    }
+}
+
+/// Spill-tier sizing and behaviour knobs.
+#[derive(Debug, Clone)]
+pub struct SpillConfig {
+    /// directory holding this manager's segment files (one per worker)
+    pub dir: PathBuf,
+    /// byte cap on spilled payloads (staged + on disk)
+    pub budget_bytes: usize,
+    /// pages prefetched per readahead tick (0 disables readahead)
+    pub readahead_pages: usize,
+    /// write-back staging buffer capacity in pages; a full buffer flushes
+    /// as one batch
+    pub staging_slots: usize,
+}
+
+impl SpillConfig {
+    pub fn new(dir: PathBuf, budget_bytes: usize) -> SpillConfig {
+        SpillConfig { dir, budget_bytes, readahead_pages: 0, staging_slots: 8 }
+    }
+}
+
+/// Where a fault was served from (the store prices each differently).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSource {
+    /// still in the write-back staging buffer — no disk read
+    Staging,
+    /// prefetched by readahead — the read was already paid
+    Readahead,
+    /// synchronous segment read
+    Disk,
+}
+
+/// Fixed per-pool slot geometry (set on the first spill, invariant after).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct SlotShape {
+    n_layers: usize,
+    d_kv: usize,
+    page_size: usize,
+}
+
+impl SlotShape {
+    fn of(pool: &PagePool) -> SlotShape {
+        SlotShape { n_layers: pool.n_layers, d_kv: pool.d_kv, page_size: pool.page_size }
+    }
+
+    /// q8 rows (i8 data + f32 scale per row, K and V) + f32 bbox meta.
+    fn payload_bytes(&self) -> usize {
+        self.n_layers * self.page_size * 2 * (self.d_kv + 4)
+            + self.n_layers * 2 * self.d_kv * 4
+    }
+
+    fn slot_bytes(&self) -> usize {
+        HEADER_BYTES + self.payload_bytes()
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Encode one page into a slot-sized buffer: header + q8 rows + bboxes.
+/// Int8 pools copy their raw (i8 data, scale) rows verbatim — the slot
+/// layout is identical, but the round trip is bit-exact by construction
+/// instead of by quantizer idempotency. Other dtypes quantize the
+/// gathered f32 rows through a scratch `Slab::I8` — literally the same
+/// per-row symmetric quantizer the cold tier uses, so the two can never
+/// drift apart.
+fn encode_page(pool: &PagePool, id: PageId, shape: SlotShape) -> Vec<u8> {
+    let (l_n, d, s_n) = (shape.n_layers, shape.d_kv, shape.page_size);
+    let mut buf = vec![0u8; shape.slot_bytes()];
+    let mut off = HEADER_BYTES;
+    let raw = pool.dtype() == crate::config::KvDtype::Int8;
+    let mut scratch = Slab::new(crate::config::KvDtype::Int8, 1, d);
+    let mut k = vec![0.0f32; s_n * d];
+    let mut v = vec![0.0f32; s_n * d];
+    for layer in 0..l_n {
+        if raw {
+            for s in 0..s_n {
+                let ((kq, ks), (vq, vs)) =
+                    pool.q8_rows_raw(id, layer, s).expect("int8 pool has raw rows");
+                off = put_raw_row(&mut buf, off, kq, ks);
+                off = put_raw_row(&mut buf, off, vq, vs);
+            }
+        } else {
+            pool.gather_rows(id, layer, s_n, &mut k, &mut v);
+            for s in 0..s_n {
+                for row in [&k[s * d..(s + 1) * d], &v[s * d..(s + 1) * d]] {
+                    scratch.store_row(0, d, row);
+                    let (q, sc) = scratch.q8_row(0, d).expect("scratch is int8");
+                    off = put_raw_row(&mut buf, off, q, sc);
+                }
+            }
+        }
+    }
+    for layer in 0..l_n {
+        for &x in pool.meta(id, layer) {
+            buf[off..off + 4].copy_from_slice(&x.to_le_bytes());
+            off += 4;
+        }
+    }
+    debug_assert_eq!(off, shape.slot_bytes());
+    let ck = fnv1a(&buf[HEADER_BYTES..]);
+    buf[0..4].copy_from_slice(&SLOT_MAGIC.to_le_bytes());
+    buf[4..6].copy_from_slice(&(pool.filled(id) as u16).to_le_bytes());
+    buf[8..16].copy_from_slice(&ck.to_le_bytes());
+    buf
+}
+
+fn put_raw_row(buf: &mut [u8], mut off: usize, q: &[i8], scale: f32) -> usize {
+    for &b in q {
+        buf[off] = b as u8;
+        off += 1;
+    }
+    buf[off..off + 4].copy_from_slice(&scale.to_le_bytes());
+    off + 4
+}
+
+/// Verify framing and restore a page from its slot buffer: dequantize the
+/// q8 rows back into the pool slabs and reinstate the bounding boxes.
+fn decode_page(
+    pool: &mut PagePool,
+    id: PageId,
+    shape: SlotShape,
+    slot: u32,
+    path: &std::path::Path,
+    buf: &[u8],
+) -> Result<(), SpillError> {
+    if buf.len() < shape.slot_bytes() {
+        return Err(SpillError::Truncated { path: path.to_path_buf(), slot });
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if magic != SLOT_MAGIC {
+        return Err(SpillError::BadMagic { path: path.to_path_buf(), slot, got: magic });
+    }
+    let ck = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+    if fnv1a(&buf[HEADER_BYTES..shape.slot_bytes()]) != ck {
+        return Err(SpillError::ChecksumMismatch { path: path.to_path_buf(), slot });
+    }
+    let filled = u16::from_le_bytes(buf[4..6].try_into().unwrap()) as usize;
+    if filled != shape.page_size {
+        return Err(SpillError::ShapeMismatch {
+            slot,
+            filled,
+            expect: shape.page_size,
+        });
+    }
+    let (l_n, d, s_n) = (shape.n_layers, shape.d_kv, shape.page_size);
+    let raw = pool.dtype() == crate::config::KvDtype::Int8;
+    let mut off = HEADER_BYTES;
+    let mut scratch = Slab::new(crate::config::KvDtype::Int8, 1, d);
+    let mut k = vec![0.0f32; s_n * d];
+    let mut v = vec![0.0f32; s_n * d];
+    let mut kq = vec![0i8; d];
+    let mut vq = vec![0i8; d];
+    for layer in 0..l_n {
+        if raw {
+            for s in 0..s_n {
+                let (next, ks) = get_raw_row(buf, off, &mut kq);
+                let (next, vs) = get_raw_row(buf, next, &mut vq);
+                off = next;
+                pool.import_q8_row(id, layer, s, (&kq, ks), (&vq, vs));
+            }
+        } else {
+            // dequantize through the scratch Slab — the cold tier's own
+            // decode path, so spill and q8 demotion can never disagree
+            for s in 0..s_n {
+                let (next, ks) = get_raw_row(buf, off, &mut kq);
+                let (next, vs) = get_raw_row(buf, next, &mut vq);
+                off = next;
+                scratch.store_q8_row(0, d, &kq, ks);
+                scratch.load_rows(0, 1, d, &mut k[s * d..(s + 1) * d]);
+                scratch.store_q8_row(0, d, &vq, vs);
+                scratch.load_rows(0, 1, d, &mut v[s * d..(s + 1) * d]);
+            }
+            pool.import_rows(id, layer, s_n, &k, &v);
+        }
+    }
+    let mut meta = vec![0.0f32; 2 * d];
+    for layer in 0..l_n {
+        for m in meta.iter_mut() {
+            *m = f32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+            off += 4;
+        }
+        pool.set_meta(id, layer, &meta);
+    }
+    Ok(())
+}
+
+fn get_raw_row(buf: &[u8], mut off: usize, q: &mut [i8]) -> (usize, f32) {
+    for x in q.iter_mut() {
+        *x = buf[off] as i8;
+        off += 1;
+    }
+    let scale = f32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+    (off + 4, scale)
+}
+
+/// The buffer-manager half: staging buffer, readahead cache, page → slot
+/// map, segment-file pool. Owned by one `PageStore` (one worker); see the
+/// lock-ordering note in docs/pagestore_design.md.
+pub struct SpillManager {
+    cfg: SpillConfig,
+    shape: Option<SlotShape>,
+    segments: Vec<SegmentFile>,
+    /// flushed pages: page -> (segment index, slot)
+    map: BTreeMap<PageId, (u32, u32)>,
+    /// write-back buffer: encoded slots awaiting the next batched flush
+    staging: Vec<(PageId, Vec<u8>)>,
+    /// readahead payload cache (page stays in `map`; the slot is freed
+    /// only when the page actually faults back)
+    cache: BTreeMap<PageId, Vec<u8>>,
+    /// cache insertion order — overflow evicts the OLDEST prefetch, never
+    /// the entry just read (may hold stale ids of pages that already
+    /// faulted; they are skipped lazily)
+    cache_fifo: VecDeque<PageId>,
+    /// relevance scores of disk-resident pages (readahead signal)
+    scores: BTreeMap<PageId, f32>,
+    /// batched flushes performed (bench/observability)
+    pub flushes: u64,
+    /// failed flush attempts (payloads stay staged; the next flush
+    /// retries) — the store folds this into its `spill_errors` counter
+    pub write_errors: u64,
+}
+
+impl SpillManager {
+    pub fn new(cfg: SpillConfig) -> Result<SpillManager, SpillError> {
+        std::fs::create_dir_all(&cfg.dir)?;
+        Ok(SpillManager {
+            cfg,
+            shape: None,
+            segments: Vec::new(),
+            map: BTreeMap::new(),
+            staging: Vec::new(),
+            cache: BTreeMap::new(),
+            cache_fifo: VecDeque::new(),
+            scores: BTreeMap::new(),
+            flushes: 0,
+            write_errors: 0,
+        })
+    }
+
+    pub fn config(&self) -> &SpillConfig {
+        &self.cfg
+    }
+
+    /// Resize the tier's byte budget at runtime (ops lever for host disk
+    /// pressure). Shrinking never evicts already-spilled pages — it only
+    /// stops new spills until faults drain the tier below the new cap.
+    pub fn set_budget_bytes(&mut self, bytes: usize) {
+        self.cfg.budget_bytes = bytes;
+    }
+
+    pub fn readahead_enabled(&self) -> bool {
+        self.cfg.readahead_pages > 0
+    }
+
+    /// Pages currently held by the tier (staged or flushed).
+    pub fn pages_on_tier(&self) -> usize {
+        self.map.len() + self.staging.len()
+    }
+
+    /// Payload bytes currently committed to the tier.
+    pub fn bytes_on_tier(&self) -> usize {
+        match self.shape {
+            Some(s) => self.pages_on_tier() * s.payload_bytes(),
+            None => 0,
+        }
+    }
+
+    /// Whole pages the tier can still accept under its byte budget.
+    pub fn pages_free(&self, pool: &PagePool) -> usize {
+        let payload = SlotShape::of(pool).payload_bytes();
+        (self.cfg.budget_bytes.saturating_sub(self.bytes_on_tier())) / payload.max(1)
+    }
+
+    pub fn can_accept(&self, pool: &PagePool) -> bool {
+        self.pages_free(pool) > 0
+    }
+
+    fn shape_for(&mut self, pool: &PagePool) -> SlotShape {
+        let s = SlotShape::of(pool);
+        match self.shape {
+            Some(have) => {
+                debug_assert_eq!(have, s, "one spill manager per pool shape");
+                have
+            }
+            None => {
+                self.shape = Some(s);
+                s
+            }
+        }
+    }
+
+    /// Move a page onto the tier: encode, zero its pool rows, stage the
+    /// slot. Returns the payload bytes committed. A full staging buffer
+    /// triggers a batched flush; a flush failure keeps the payloads
+    /// staged (nothing is lost — the fault path serves from staging and
+    /// the next flush retries), counted in `write_errors`. Once staged
+    /// the page **is** on the tier, so this cannot fail.
+    pub fn spill(&mut self, pool: &mut PagePool, id: PageId) -> usize {
+        debug_assert!(!self.holds(id), "double spill of page {id}");
+        let shape = self.shape_for(pool);
+        let buf = encode_page(pool, id, shape);
+        pool.purge_rows(id);
+        self.staging.push((id, buf));
+        if self.staging.len() >= self.cfg.staging_slots.max(1) {
+            let _ = self.flush();
+        }
+        shape.payload_bytes()
+    }
+
+    pub fn holds(&self, id: PageId) -> bool {
+        self.map.contains_key(&id) || self.staging.iter().any(|(p, _)| *p == id)
+    }
+
+    /// Write every staged page to a segment slot (creating segments as
+    /// needed). On error the unwritten tail stays staged and the failure
+    /// is counted (`write_errors`). Payloads are written by reference and
+    /// the staged prefix is drained once — no per-page buffer copies.
+    pub fn flush(&mut self) -> Result<(), SpillError> {
+        if self.staging.is_empty() {
+            return Ok(());
+        }
+        let Some(shape) = self.shape else { return Ok(()) };
+        // deterministic flush order: page id, not arrival order
+        self.staging.sort_by_key(|(p, _)| *p);
+        let mut written = 0usize;
+        while written < self.staging.len() {
+            let (seg_idx, slot) = match self.alloc_slot(shape) {
+                Ok(a) => a,
+                Err(e) => {
+                    self.write_errors += 1;
+                    self.staging.drain(..written);
+                    return Err(e);
+                }
+            };
+            let id = self.staging[written].0;
+            let buf = &self.staging[written].1;
+            if let Err(e) = self.segments[seg_idx as usize].write_slot(slot, buf) {
+                self.segments[seg_idx as usize].free_slot(slot);
+                self.write_errors += 1;
+                self.staging.drain(..written);
+                return Err(e);
+            }
+            self.map.insert(id, (seg_idx, slot));
+            written += 1;
+        }
+        self.staging.clear();
+        self.flushes += 1;
+        Ok(())
+    }
+
+    fn alloc_slot(&mut self, shape: SlotShape) -> Result<(u32, u32), SpillError> {
+        for (i, seg) in self.segments.iter_mut().enumerate() {
+            if let Some(slot) = seg.alloc_slot() {
+                return Ok((i as u32, slot));
+            }
+        }
+        let idx = self.segments.len();
+        let path = self.cfg.dir.join(format!("seg-{idx:03}.kvseg"));
+        let mut seg = SegmentFile::create(&path, shape.slot_bytes(), SEG_SLOTS)?;
+        let slot = seg.alloc_slot().expect("fresh segment has free slots");
+        self.segments.push(seg);
+        Ok((idx as u32, slot))
+    }
+
+    /// Fault a page back into the pool: restore its rows and bounding
+    /// boxes, release its slot, and report where the payload came from.
+    /// Returns the payload bytes moved.
+    pub fn fault(
+        &mut self,
+        pool: &mut PagePool,
+        id: PageId,
+    ) -> Result<(usize, FaultSource), SpillError> {
+        let shape = self.shape_for(pool);
+        self.scores.remove(&id);
+        if let Some(pos) = self.staging.iter().position(|(p, _)| *p == id) {
+            let (_, buf) = self.staging.remove(pos);
+            if let Err(e) = decode_page(pool, id, shape, 0, &self.cfg.dir, &buf) {
+                // keep the payload on the tier so a retry (or drain via
+                // `free`) still accounts for it
+                self.staging.push((id, buf));
+                return Err(e);
+            }
+            return Ok((shape.payload_bytes(), FaultSource::Staging));
+        }
+        if let Some(buf) = self.cache.remove(&id) {
+            self.cache_fifo.retain(|p| *p != id);
+            let (seg, slot) = self.map.remove(&id).ok_or(SpillError::MissingPage(id))?;
+            let path = self.segments[seg as usize].path().to_path_buf();
+            if let Err(e) = decode_page(pool, id, shape, slot, &path, &buf) {
+                // a corrupted prefetch: reinstate the mapping (the slot
+                // still holds the bytes — the synchronous path will
+                // surface the same error on retry, and `free` can still
+                // recycle the slot); drop the bad cache entry
+                self.map.insert(id, (seg, slot));
+                return Err(e);
+            }
+            self.segments[seg as usize].free_slot(slot);
+            return Ok((shape.payload_bytes(), FaultSource::Readahead));
+        }
+        let (seg, slot) = self.map.remove(&id).ok_or(SpillError::MissingPage(id))?;
+        let mut buf = Vec::new();
+        let read = self.segments[seg as usize].read_slot(slot, &mut buf);
+        if let Err(e) = read {
+            // leave the mapping intact so a retry (or drain) still sees it
+            self.map.insert(id, (seg, slot));
+            return Err(e);
+        }
+        let path = self.segments[seg as usize].path().to_path_buf();
+        match decode_page(pool, id, shape, slot, &path, &buf) {
+            Ok(()) => {
+                self.segments[seg as usize].free_slot(slot);
+                Ok((shape.payload_bytes(), FaultSource::Disk))
+            }
+            Err(e) => {
+                self.map.insert(id, (seg, slot));
+                Err(e)
+            }
+        }
+    }
+
+    /// The page left residency entirely (freed back to the pool): drop it
+    /// from every structure and recycle its slot.
+    pub fn free(&mut self, id: PageId) {
+        self.staging.retain(|(p, _)| *p != id);
+        if self.cache.remove(&id).is_some() {
+            self.cache_fifo.retain(|p| *p != id);
+        }
+        self.scores.remove(&id);
+        if let Some((seg, slot)) = self.map.remove(&id) {
+            self.segments[seg as usize].free_slot(slot);
+        }
+    }
+
+    /// Relevance observation for a disk-resident page (readahead signal).
+    pub fn note_score(&mut self, id: PageId, score: f32) {
+        if self.map.contains_key(&id) || self.staging.iter().any(|(p, _)| *p == id) {
+            self.scores.insert(id, score);
+        }
+    }
+
+    /// Prefetch the top-scored flushed pages into the readahead cache.
+    /// Returns the bytes read from disk (0 when readahead is off or
+    /// nothing qualifies). The cache is bounded at twice the readahead
+    /// width; overflow drops the oldest-prefetched entries — never this
+    /// tick's reads (payloads stay on disk, so a dropped entry just
+    /// degrades back to a synchronous read).
+    pub fn prefetch(&mut self) -> Result<usize, SpillError> {
+        if self.cfg.readahead_pages == 0 {
+            return Ok(0);
+        }
+        let Some(shape) = self.shape else { return Ok(0) };
+        // top-N by score among flushed, not-yet-cached pages; ties break
+        // toward the lower page id (BTreeMap order keeps this stable)
+        let mut cands: Vec<(PageId, f32)> = self
+            .scores
+            .iter()
+            .filter(|(id, _)| self.map.contains_key(id) && !self.cache.contains_key(id))
+            .map(|(&id, &s)| (id, s))
+            .collect();
+        cands.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        cands.truncate(self.cfg.readahead_pages);
+        let mut bytes = 0usize;
+        let mut buf = Vec::new();
+        for (id, _) in cands {
+            let &(seg, slot) = self.map.get(&id).expect("candidate is mapped");
+            self.segments[seg as usize].read_slot(slot, &mut buf)?;
+            self.cache.insert(id, buf.clone());
+            self.cache_fifo.push_back(id);
+            bytes += shape.payload_bytes();
+        }
+        // overflow evicts oldest-prefetched first (never this tick's
+        // reads: the cap is 2x the per-tick insert count); evicted
+        // payloads stay on disk, degrading to a synchronous read
+        while self.cache.len() > 2 * self.cfg.readahead_pages {
+            match self.cache_fifo.pop_front() {
+                Some(old) => {
+                    self.cache.remove(&old);
+                }
+                None => break,
+            }
+        }
+        Ok(bytes)
+    }
+
+    /// Segment files currently backing the tier (tests, diagnostics).
+    pub fn segment_paths(&self) -> Vec<PathBuf> {
+        self.segments.iter().map(|s| s.path().to_path_buf()).collect()
+    }
+}
+
+impl Drop for SpillManager {
+    /// Best-effort cleanup: spill files are scratch state, never a
+    /// database — remove our segments and the directory if emptied.
+    fn drop(&mut self) {
+        for seg in &self.segments {
+            let _ = std::fs::remove_file(seg.path());
+        }
+        let _ = std::fs::remove_dir(&self.cfg.dir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KvDtype;
+
+    fn pool() -> PagePool {
+        PagePool::new(2, 8, 4, KvDtype::F32)
+    }
+
+    fn fill_page(pool: &mut PagePool, id: PageId, seed: u64) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        for slot in 0..pool.page_size {
+            for l in 0..pool.n_layers {
+                let row: Vec<f32> =
+                    (0..pool.d_kv).map(|_| rng.normal() as f32).collect();
+                pool.write_token(id, slot, l, &row, &row);
+            }
+        }
+    }
+
+    fn manager(tag: &str, budget: usize) -> SpillManager {
+        let dir = default_spill_root().join(tag);
+        SpillManager::new(SpillConfig::new(dir, budget)).unwrap()
+    }
+
+    fn page_rows(pool: &PagePool, id: PageId) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        for l in 0..pool.n_layers {
+            for s in 0..pool.page_size {
+                out.push(pool.key_row(id, l, s));
+            }
+            out.push(pool.meta(id, l).to_vec());
+        }
+        out
+    }
+
+    #[test]
+    fn spill_fault_roundtrips_q8_content_bit_exactly() {
+        let mut p = pool();
+        let mut m = manager("roundtrip", 1 << 20);
+        let id = p.alloc();
+        fill_page(&mut p, id, 11);
+        // put the page in the q8 state the store spills from
+        p.demote_page_in_place(id);
+        let before = page_rows(&p, id);
+        let bytes = m.spill(&mut p, id);
+        assert!(bytes > 0);
+        assert_eq!(m.pages_on_tier(), 1);
+        // pool rows are physically freed (zeroed) while on the tier
+        assert!(p.key_row(id, 0, 0).iter().all(|&x| x == 0.0));
+        let (got, src) = m.fault(&mut p, id).unwrap();
+        assert_eq!(got, bytes);
+        assert_eq!(src, FaultSource::Staging, "unflushed page serves from staging");
+        assert_eq!(page_rows(&p, id), before, "q8 payload + bbox round-trip");
+        assert_eq!(m.pages_on_tier(), 0);
+    }
+
+    #[test]
+    fn flush_then_fault_reads_from_disk() {
+        let mut p = pool();
+        let mut m = manager("disk", 1 << 20);
+        let id = p.alloc();
+        fill_page(&mut p, id, 3);
+        p.demote_page_in_place(id);
+        let before = page_rows(&p, id);
+        m.spill(&mut p, id);
+        m.flush().unwrap();
+        assert_eq!(m.flushes, 1);
+        let (_, src) = m.fault(&mut p, id).unwrap();
+        assert_eq!(src, FaultSource::Disk);
+        assert_eq!(page_rows(&p, id), before);
+        // slot was recycled
+        assert_eq!(m.segments[0].used_slots(), 0);
+        p.release(id);
+    }
+
+    #[test]
+    fn readahead_prefetch_serves_faults_from_cache() {
+        let mut p = pool();
+        let dir = default_spill_root().join("readahead");
+        let mut cfg = SpillConfig::new(dir, 1 << 20);
+        cfg.readahead_pages = 2;
+        let mut m = SpillManager::new(cfg).unwrap();
+        let ids: Vec<PageId> = (0..3).map(|_| p.alloc()).collect();
+        for (i, &id) in ids.iter().enumerate() {
+            fill_page(&mut p, id, 100 + i as u64);
+            p.demote_page_in_place(id);
+            m.spill(&mut p, id);
+        }
+        m.flush().unwrap();
+        m.note_score(ids[0], 0.1);
+        m.note_score(ids[1], 9.0);
+        m.note_score(ids[2], 5.0);
+        let bytes = m.prefetch().unwrap();
+        assert!(bytes > 0, "two pages prefetched");
+        let (_, src) = m.fault(&mut p, ids[1]).unwrap();
+        assert_eq!(src, FaultSource::Readahead, "top-scored page was cached");
+        let (_, src) = m.fault(&mut p, ids[0]).unwrap();
+        assert_eq!(src, FaultSource::Disk, "low-scored page was not");
+    }
+
+    #[test]
+    fn budget_bounds_accepted_pages() {
+        let mut p = pool();
+        let payload = SlotShape::of(&p).payload_bytes();
+        let mut m = manager("budget", 2 * payload);
+        assert_eq!(m.pages_free(&p), 2);
+        for i in 0..2 {
+            let id = p.alloc();
+            fill_page(&mut p, id, i);
+            p.demote_page_in_place(id);
+            m.spill(&mut p, id);
+        }
+        assert!(!m.can_accept(&p), "tier is full at its byte budget");
+        assert_eq!(m.bytes_on_tier(), 2 * payload);
+    }
+
+    #[test]
+    fn corrupted_slot_is_a_checksum_error_not_a_panic() {
+        use std::io::{Seek, SeekFrom, Write};
+        let mut p = pool();
+        let mut m = manager("corrupt", 1 << 20);
+        let id = p.alloc();
+        fill_page(&mut p, id, 5);
+        p.demote_page_in_place(id);
+        m.spill(&mut p, id);
+        m.flush().unwrap();
+        // flip one payload byte behind the manager's back
+        let path = m.segment_paths()[0].clone();
+        let mut f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.seek(SeekFrom::Start(HEADER_BYTES as u64 + 5)).unwrap();
+        f.write_all(&[0xAB]).unwrap();
+        drop(f);
+        match m.fault(&mut p, id) {
+            Err(SpillError::ChecksumMismatch { .. }) => {}
+            other => panic!("expected ChecksumMismatch, got {other:?}"),
+        }
+        // the mapping survives the failed fault, so cleanup still drains it
+        m.free(id);
+        assert_eq!(m.pages_on_tier(), 0);
+        p.release(id);
+    }
+
+    #[test]
+    fn truncated_segment_is_a_typed_error_not_a_panic() {
+        let mut p = pool();
+        let mut m = manager("trunc", 1 << 20);
+        let id = p.alloc();
+        fill_page(&mut p, id, 6);
+        p.demote_page_in_place(id);
+        m.spill(&mut p, id);
+        m.flush().unwrap();
+        let path = m.segment_paths()[0].clone();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(8)
+            .unwrap();
+        match m.fault(&mut p, id) {
+            Err(SpillError::Truncated { .. }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        p.release(id);
+    }
+
+    #[test]
+    fn free_recycles_slots_for_reuse() {
+        let mut p = pool();
+        let mut m = manager("recycle", 1 << 20);
+        let a = p.alloc();
+        fill_page(&mut p, a, 1);
+        p.demote_page_in_place(a);
+        m.spill(&mut p, a);
+        m.flush().unwrap();
+        m.free(a);
+        assert_eq!(m.pages_on_tier(), 0);
+        assert_eq!(m.segments[0].free_slots(), SEG_SLOTS);
+        // the freed slot is reused by the next spill
+        let b = p.alloc();
+        fill_page(&mut p, b, 2);
+        p.demote_page_in_place(b);
+        m.spill(&mut p, b);
+        m.flush().unwrap();
+        assert_eq!(m.segments.len(), 1, "no new segment for a reused slot");
+        p.release(a);
+        p.release(b);
+    }
+}

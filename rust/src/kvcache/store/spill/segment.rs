@@ -1,0 +1,202 @@
+//! Fixed-slot segment files: the disk-manager half of the spill tier.
+//!
+//! A `SegmentFile` is a preallocated file of `n_slots` equal-sized slots
+//! (one spilled KV page per slot), with an in-memory free-slot bitmap.
+//! Slots are reused LIFO on free — the classic database disk-manager
+//! shape (see the simpledb buffer-manager notes this subsystem is
+//! modelled on), chosen over an append-only log because spilled pages
+//! free in arbitrary order as sequences finish and the working set must
+//! not leak disk space over a long serving run.
+//!
+//! The file layer knows nothing about the KV payload format: slots are
+//! opaque byte blocks. Framing, checksums and (de)quantization live in
+//! the [`SpillManager`](super::SpillManager) above.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::SpillError;
+
+/// One fixed-slot spill file plus its free-slot bookkeeping.
+pub struct SegmentFile {
+    path: PathBuf,
+    file: File,
+    slot_bytes: usize,
+    n_slots: usize,
+    /// occupancy bitmap (true = slot holds a live page)
+    used: Vec<bool>,
+    /// free slot indices, reused LIFO
+    free: Vec<u32>,
+}
+
+impl SegmentFile {
+    /// Create (truncating) a segment of `n_slots` slots of `slot_bytes`
+    /// each, preallocated to its full size so writes never grow the file.
+    pub fn create(
+        path: &Path,
+        slot_bytes: usize,
+        n_slots: usize,
+    ) -> Result<SegmentFile, SpillError> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        file.set_len((slot_bytes * n_slots) as u64)?;
+        Ok(SegmentFile {
+            path: path.to_path_buf(),
+            file,
+            slot_bytes,
+            n_slots,
+            used: vec![false; n_slots],
+            free: (0..n_slots as u32).rev().collect(),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_bytes
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_slots(&self) -> usize {
+        self.n_slots - self.free.len()
+    }
+
+    /// Claim a free slot (the caller writes it next). `None` when full.
+    pub fn alloc_slot(&mut self) -> Option<u32> {
+        let slot = self.free.pop()?;
+        self.used[slot as usize] = true;
+        Some(slot)
+    }
+
+    /// Return a slot to the free list (its bytes stay on disk but are
+    /// dead; the next `alloc_slot`/`write_slot` pair overwrites them).
+    pub fn free_slot(&mut self, slot: u32) {
+        let s = slot as usize;
+        debug_assert!(self.used[s], "freeing a free slot {slot}");
+        if self.used[s] {
+            self.used[s] = false;
+            self.free.push(slot);
+        }
+    }
+
+    pub fn write_slot(&mut self, slot: u32, buf: &[u8]) -> Result<(), SpillError> {
+        debug_assert_eq!(buf.len(), self.slot_bytes, "slot write size mismatch");
+        if slot as usize >= self.n_slots {
+            return Err(SpillError::SlotOutOfRange { slot, n_slots: self.n_slots });
+        }
+        self.file
+            .seek(SeekFrom::Start(slot as u64 * self.slot_bytes as u64))?;
+        self.file.write_all(buf)?;
+        Ok(())
+    }
+
+    /// Read a slot into `buf` (resized to `slot_bytes`). A file shorter
+    /// than the slot demands — external truncation, partial write — maps
+    /// to the typed `Truncated` error instead of an opaque I/O failure.
+    pub fn read_slot(&mut self, slot: u32, buf: &mut Vec<u8>) -> Result<(), SpillError> {
+        if slot as usize >= self.n_slots {
+            return Err(SpillError::SlotOutOfRange { slot, n_slots: self.n_slots });
+        }
+        buf.resize(self.slot_bytes, 0);
+        self.file
+            .seek(SeekFrom::Start(slot as u64 * self.slot_bytes as u64))?;
+        match self.file.read_exact(buf) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                Err(SpillError::Truncated { path: self.path.clone(), slot })
+            }
+            Err(e) => Err(SpillError::Io(e)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        super::super::default_spill_root().join(format!("{tag}.kvseg"))
+    }
+
+    #[test]
+    fn slots_roundtrip_and_reuse() {
+        let path = tmp_path("roundtrip");
+        let mut seg = SegmentFile::create(&path, 32, 4).unwrap();
+        assert_eq!(seg.free_slots(), 4);
+        let a = seg.alloc_slot().unwrap();
+        let b = seg.alloc_slot().unwrap();
+        assert_ne!(a, b);
+        seg.write_slot(a, &[7u8; 32]).unwrap();
+        seg.write_slot(b, &[9u8; 32]).unwrap();
+        let mut buf = Vec::new();
+        seg.read_slot(a, &mut buf).unwrap();
+        assert_eq!(buf, vec![7u8; 32]);
+        seg.read_slot(b, &mut buf).unwrap();
+        assert_eq!(buf, vec![9u8; 32]);
+        // free -> reuse gives the same slot back (LIFO)
+        seg.free_slot(a);
+        assert_eq!(seg.alloc_slot(), Some(a));
+        assert_eq!(seg.used_slots(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let path = tmp_path("exhaust");
+        let mut seg = SegmentFile::create(&path, 8, 2).unwrap();
+        assert!(seg.alloc_slot().is_some());
+        assert!(seg.alloc_slot().is_some());
+        assert_eq!(seg.alloc_slot(), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_file_is_a_typed_error() {
+        let path = tmp_path("truncated");
+        let mut seg = SegmentFile::create(&path, 64, 2).unwrap();
+        let s = seg.alloc_slot().unwrap();
+        seg.write_slot(s, &[1u8; 64]).unwrap();
+        // external truncation under the open handle
+        OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(10)
+            .unwrap();
+        let mut buf = Vec::new();
+        match seg.read_slot(s, &mut buf) {
+            Err(SpillError::Truncated { .. }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn out_of_range_slot_is_rejected() {
+        let path = tmp_path("range");
+        let mut seg = SegmentFile::create(&path, 8, 1).unwrap();
+        let mut buf = Vec::new();
+        assert!(matches!(
+            seg.read_slot(5, &mut buf),
+            Err(SpillError::SlotOutOfRange { .. })
+        ));
+        assert!(matches!(
+            seg.write_slot(5, &[0u8; 8]),
+            Err(SpillError::SlotOutOfRange { .. })
+        ));
+        let _ = std::fs::remove_file(&path);
+    }
+}

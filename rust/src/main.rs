@@ -69,6 +69,14 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
             )
         })?;
     }
+    // disk spill tier below q8: --spill-budget-mb enables it (requires a
+    // KV budget), --spill-dir picks the segment-file location (default: a
+    // process-unique temp dir), --readahead N prefetches the N top-scored
+    // disk pages per step. Inconsistent combos are rejected by validate()
+    // with the expected pairing spelled out.
+    cfg.spill_budget_mb = args.f64_opt("spill-budget-mb");
+    cfg.spill_dir = args.get("spill-dir").map(std::path::PathBuf::from);
+    cfg.readahead_pages = args.usize_or("readahead", 0);
     cfg.validate()?;
     Ok(cfg)
 }
@@ -276,6 +284,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
             m.total_demotions as f64 / m.total_new_tokens.max(1) as f64,
             m.total_spill_seconds * 1e3
         );
+        if cfg.spill_budget_mb.is_some() {
+            println!(
+                "disk tier           out {:.2} MB  in {:.2} MB  faults {}  \
+                 readahead hits {}  i/o {:.1} ms",
+                m.total_spill_out_bytes as f64 / 1e6,
+                m.total_spill_in_bytes as f64 / 1e6,
+                m.total_disk_faults,
+                m.total_readahead_hits,
+                m.total_disk_seconds * 1e3
+            );
+            println!(
+                "disk residency      mean {:.1} pages  peak {} pages  \
+                 (budget {:.2} MB over {} workers)",
+                m.disk_pages.mean(),
+                m.disk_pages_peak,
+                cfg.spill_budget_mb.unwrap_or(0.0),
+                r.worker_stats.len()
+            );
+        }
     }
     println!("exact-match acc     {:.1}%  (char {:.1}%)", r.accuracy * 100.0, r.char_accuracy * 100.0);
     println!(
@@ -368,6 +395,7 @@ fn main() -> Result<()> {
                 "usage: tinyserve <info|generate|serve|eval|cost> [--model M] \
                  [--policy P] [--budget N] [--batch B] [--kv-budget-mb MB] \
                  [--eviction-policy lru|clock|query-aware|sieve] \
+                 [--spill-budget-mb MB] [--spill-dir DIR] [--readahead N] \
                  [--workers N] [--dispatch round-robin|least-loaded|session-affinity] \
                  [--arrival trace|poisson|gamma] \
                  [--arrival-shape steady|ramp|burst|diurnal] \
@@ -425,5 +453,67 @@ mod tests {
         assert_eq!(cfg.policy, PolicyKind::SnapKv);
         assert_eq!(cfg.eviction, EvictionPolicyKind::Sieve);
         assert_eq!(cfg.kv_dtype, KvDtype::F16);
+    }
+
+    #[test]
+    fn spill_budget_without_kv_budget_is_rejected_with_pairing() {
+        let e = serving_config(&args("serve --spill-budget-mb 64"))
+            .unwrap_err()
+            .to_string();
+        assert!(
+            e.contains("--spill-budget-mb") && e.contains("--kv-budget-mb"),
+            "error must name the expected flag pairing: {e}"
+        );
+    }
+
+    #[test]
+    fn spill_dir_without_spill_budget_is_rejected_with_pairing() {
+        let e = serving_config(&args(
+            "serve --kv-budget-mb 8 --spill-dir /tmp/kv-spill",
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(
+            e.contains("--spill-dir") && e.contains("--spill-budget-mb"),
+            "error must name the expected flag pairing: {e}"
+        );
+    }
+
+    #[test]
+    fn readahead_without_spill_budget_is_rejected_with_pairing() {
+        let e = serving_config(&args("serve --kv-budget-mb 8 --readahead 4"))
+            .unwrap_err()
+            .to_string();
+        assert!(
+            e.contains("--readahead") && e.contains("--spill-budget-mb"),
+            "error must name the expected flag pairing: {e}"
+        );
+    }
+
+    #[test]
+    fn zero_budgets_are_rejected() {
+        for bad in [
+            "serve --kv-budget-mb 0",
+            "serve --kv-budget-mb 8 --spill-budget-mb 0",
+            "serve --kv-budget-mb -2",
+        ] {
+            assert!(serving_config(&args(bad)).is_err(), "{bad} accepted");
+        }
+    }
+
+    #[test]
+    fn full_spill_combo_parses() {
+        let cfg = serving_config(&args(
+            "serve --kv-budget-mb 8 --spill-budget-mb 64 \
+             --spill-dir /tmp/kv-spill --readahead 4",
+        ))
+        .unwrap();
+        assert_eq!(cfg.kv_budget_mb, Some(8.0));
+        assert_eq!(cfg.spill_budget_mb, Some(64.0));
+        assert_eq!(
+            cfg.spill_dir,
+            Some(std::path::PathBuf::from("/tmp/kv-spill"))
+        );
+        assert_eq!(cfg.readahead_pages, 4);
     }
 }

@@ -49,6 +49,21 @@ pub struct StepMetrics {
     pub promotions: usize,
     /// simulated cold-tier transfer time this step (hwmodel-priced)
     pub spill_seconds: f64,
+    // --- disk spill tier (zero without one) ---
+    /// payload bytes written toward the disk tier this step
+    pub spill_out_bytes: usize,
+    /// payload bytes faulted back from the disk tier this step
+    pub spill_in_bytes: usize,
+    /// disk pages faulted back into residency this step
+    pub disk_faults: usize,
+    /// faults served from the readahead cache this step
+    pub readahead_hits: usize,
+    /// simulated disk-tier transfer time this step (hwmodel-priced)
+    pub disk_seconds: f64,
+    /// per-tier page residency after this step
+    pub pages_hot: usize,
+    pub pages_cold: usize,
+    pub pages_disk: usize,
 }
 
 impl StepMetrics {
@@ -87,6 +102,14 @@ impl StepMetrics {
         self.demotions += o.demotions;
         self.promotions += o.promotions;
         self.spill_seconds += o.spill_seconds;
+        self.spill_out_bytes += o.spill_out_bytes;
+        self.spill_in_bytes += o.spill_in_bytes;
+        self.disk_faults += o.disk_faults;
+        self.readahead_hits += o.readahead_hits;
+        self.disk_seconds += o.disk_seconds;
+        self.pages_hot += o.pages_hot;
+        self.pages_cold += o.pages_cold;
+        self.pages_disk += o.pages_disk;
     }
 
     /// Page-level cache hit rate for this step (paper "KV Hit %"):
@@ -170,6 +193,16 @@ pub struct ServerMetrics {
     pub total_demotions: u64,
     pub total_promotions: u64,
     pub total_spill_seconds: f64,
+    // --- disk spill tier aggregation ---
+    pub total_spill_out_bytes: u64,
+    pub total_spill_in_bytes: u64,
+    pub total_disk_faults: u64,
+    pub total_readahead_hits: u64,
+    pub total_disk_seconds: f64,
+    /// disk-resident pages after each step (summed across workers)
+    pub disk_pages: Welford,
+    /// max post-step disk-resident page count observed
+    pub disk_pages_peak: usize,
     /// steps that ended with bytes_in_use above the budget (0 when the
     /// budget is enforceable — the serving invariant)
     pub budget_violations: u64,
@@ -204,6 +237,13 @@ impl ServerMetrics {
         self.total_demotions += m.demotions as u64;
         self.total_promotions += m.promotions as u64;
         self.total_spill_seconds += m.spill_seconds;
+        self.total_spill_out_bytes += m.spill_out_bytes as u64;
+        self.total_spill_in_bytes += m.spill_in_bytes as u64;
+        self.total_disk_faults += m.disk_faults as u64;
+        self.total_readahead_hits += m.readahead_hits as u64;
+        self.total_disk_seconds += m.disk_seconds;
+        self.disk_pages.push(m.pages_disk as f64);
+        self.disk_pages_peak = self.disk_pages_peak.max(m.pages_disk);
         if m.kv_budget_bytes > 0 && m.kv_bytes_in_use > m.kv_budget_bytes {
             self.budget_violations += 1;
         }
@@ -354,6 +394,38 @@ mod tests {
         assert_eq!(m.kv_bytes_in_use, 1500, "residency sums across workers");
         assert!((m.entropy - 1.5).abs() < 1e-6, "batch-weighted mean");
         assert!((m.spill_seconds - 0.3).abs() < 1e-12, "spill time sums");
+    }
+
+    #[test]
+    fn spill_tier_fields_sum_on_merge_and_aggregate() {
+        let a = StepMetrics {
+            batch: 1,
+            spill_out_bytes: 100,
+            spill_in_bytes: 40,
+            disk_faults: 2,
+            readahead_hits: 1,
+            disk_seconds: 0.25,
+            pages_hot: 3,
+            pages_cold: 2,
+            pages_disk: 5,
+            ..Default::default()
+        };
+        let mut m = StepMetrics { batch: 1, pages_disk: 1, ..Default::default() };
+        m.merge(&a);
+        assert_eq!(m.spill_out_bytes, 100);
+        assert_eq!(m.disk_faults, 2);
+        assert_eq!(m.pages_disk, 6, "per-tier residency sums across workers");
+        assert!((m.disk_seconds - 0.25).abs() < 1e-12);
+        let mut sm = ServerMetrics::new(false);
+        sm.on_step(&m);
+        sm.on_step(&StepMetrics { batch: 1, pages_disk: 2, ..Default::default() });
+        assert_eq!(sm.total_spill_out_bytes, 100);
+        assert_eq!(sm.total_spill_in_bytes, 40);
+        assert_eq!(sm.total_disk_faults, 2);
+        assert_eq!(sm.total_readahead_hits, 1);
+        assert_eq!(sm.disk_pages_peak, 6);
+        assert_eq!(sm.disk_pages.n, 2);
+        assert!((sm.total_disk_seconds - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -130,6 +130,26 @@ impl Table {
             self.to_json().to_string(),
         );
     }
+
+    /// Write `results/BENCH_<bench>.json` — a machine-readable perf record
+    /// (schema-versioned, with free-form context fields) so CI can upload
+    /// the file as an artifact and the bench trajectory is comparable
+    /// across PRs without scraping stdout tables.
+    pub fn emit_bench(&self, results_dir: &Path, bench: &str, context: Vec<(&str, Json)>) {
+        let _ = std::fs::create_dir_all(results_dir);
+        let mut fields = vec![
+            ("bench", Json::from(bench)),
+            ("schema", Json::from(1usize)),
+            ("quick", Json::from(crate::harness::quick())),
+        ];
+        fields.extend(context);
+        fields.push(("table", self.to_json()));
+        let j = Json::obj(fields);
+        let path = results_dir.join(format!("BENCH_{bench}.json"));
+        if std::fs::write(&path, j.to_string()).is_ok() {
+            println!("(perf record -> {})", path.display());
+        }
+    }
 }
 
 /// Series data for figures (x, one or more named y columns).
@@ -214,6 +234,25 @@ mod tests {
         let csv = t.to_csv();
         assert!(csv.contains("\"with,comma\""));
         assert!(csv.contains("\"with\"\"quote\""));
+    }
+
+    #[test]
+    fn bench_record_is_valid_json_with_schema() {
+        let dir = std::env::temp_dir().join(format!(
+            "tinyserve-bench-record-{}",
+            std::process::id()
+        ));
+        sample().emit_bench(&dir, "selftest", vec![("model", Json::from("tiny"))]);
+        let path = dir.join("BENCH_selftest.json");
+        let raw = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&raw).unwrap();
+        assert_eq!(j.get("bench").and_then(|b| b.as_str()), Some("selftest"));
+        assert_eq!(j.get("schema").and_then(|s| s.as_usize()), Some(1));
+        assert_eq!(j.get("model").and_then(|m| m.as_str()), Some("tiny"));
+        let table = j.get("table").unwrap();
+        assert!(table.get("rows").and_then(|r| r.as_arr()).is_some());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
     }
 
     #[test]

@@ -404,6 +404,108 @@ fn budgeted_store_enforces_kv_budget_in_serving() {
     );
 }
 
+#[test]
+fn spill_tier_is_token_transparent_under_int8_budget() {
+    // Acceptance for the disk spill tier: int8 KV pools make q8 demotion
+    // value-neutral (`demote_page_in_place` is the identity there) and
+    // the spill codec copies raw q8 rows verbatim, so a budgeted run that
+    // cascades pages all the way to disk must decode token-identically to
+    // the unbounded run — while `bytes_in_use <= budget` holds after
+    // every step and real spill-out/fault traffic flows. int8 is the
+    // regime where the disk tier is the ONLY relief: `page_bytes_cold ==
+    // page_bytes`, so q8 demotion frees nothing and a sub-peak budget is
+    // unreachable without fully evicting pages from RAM.
+    let m = require!(manifest());
+    let trace = generate_trace(&TraceConfig {
+        n_requests: 16,
+        prompt_chars: (250, 600),
+        new_tokens: (4, 10),
+        // sessions would couple the two runs through snapshot shedding
+        // (a shed session re-prefills with full-precision staging, which
+        // is a pre-existing resume-vs-prefill difference, not a spill one)
+        session_reuse_prob: 0.0,
+        ..Default::default()
+    });
+    let run = |kv_mb: Option<f64>, spill_mb: Option<f64>| {
+        let cfg = ServingConfig {
+            model: MODEL.to_string(),
+            policy: PolicyKind::TinyServe,
+            budget: 256,
+            max_batch: 4,
+            kv_dtype: KvDtype::Int8,
+            kv_budget_mb: kv_mb,
+            spill_budget_mb: spill_mb,
+            readahead_pages: if spill_mb.is_some() { 2 } else { 0 },
+            eviction: EvictionPolicyKind::Lru,
+            ..Default::default()
+        };
+        let mut e = Engine::from_manifest(&m, cfg).expect("engine");
+        let mut plugins = Pipeline::new();
+        let opts = ServeOptions {
+            time_model: TimeModel::Modeled,
+            ..Default::default()
+        };
+        let mut fe = Frontend::builder().options(opts).build(&mut e, &mut plugins);
+        for req in &trace {
+            fe.submit(req.clone());
+        }
+        let events = pump_all(&mut fe);
+        let mut tokens: std::collections::BTreeMap<u64, Vec<i32>> = Default::default();
+        for ev in &events {
+            if let ServeEvent::Token { id, tok, .. } = ev {
+                tokens.entry(*id).or_default().push(*tok);
+            }
+        }
+        let log = event_log(&events);
+        let r = fe.into_report();
+        assert_eq!(e.pool.pages_in_use(), 0, "page leak after spill serving");
+        (tokens, r, e.pool.bytes_peak(), log)
+    };
+
+    let (tok0, r0, peak, _) = run(None, None);
+    assert_eq!(r0.metrics.total_requests, 16);
+    assert!(peak > 0);
+
+    let budget_mb = peak as f64 * 0.5 / 1e6;
+    // ample disk headroom (spill slots carry bbox metadata on top of the
+    // q8 payload): admission must never defer, so the budgeted run admits
+    // on the unbounded run's exact schedule
+    let spill_mb = peak as f64 * 2.0 / 1e6 + 1.0;
+    let (tok1, r1, _, log1) = run(Some(budget_mb), Some(spill_mb));
+    assert_eq!(r1.metrics.total_requests, 16, "spill-backed run completes");
+    assert_eq!(
+        r1.metrics.budget_violations, 0,
+        "bytes_in_use exceeded the budget after a decode step"
+    );
+    assert!(
+        (r1.metrics.kv_bytes_peak as f64) <= budget_mb * 1e6,
+        "post-step peak {} above budget {}",
+        r1.metrics.kv_bytes_peak,
+        budget_mb * 1e6
+    );
+    assert!(
+        r1.metrics.total_spill_out_bytes > 0,
+        "int8 pressure at a 50% budget must spill pages to disk"
+    );
+    assert!(
+        r1.metrics.total_disk_faults > 0,
+        "selection must fault spilled pages back"
+    );
+    assert!(r1.metrics.disk_pages_peak > 0);
+    assert_eq!(
+        tok0, tok1,
+        "disk spill must be token-transparent (int8 demote is the \
+         identity and the raw-q8 codec is bit-exact)"
+    );
+
+    // determinism battery: the spill-enabled modeled-time event stream
+    // (timestamps include hwmodel-priced disk transfers) must replay
+    // bit-exactly; the CI double-run gate diffs this log across processes
+    let (_, _, _, log2) = run(Some(budget_mb), Some(spill_mb));
+    assert_eq!(log1, log2, "same seed, same spill-enabled event stream");
+    write_ci_log("spill_serve_events.log", &log1);
+}
+
 fn lifecycle_req(
     id: u64,
     arrival_s: f64,

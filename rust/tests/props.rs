@@ -6,7 +6,9 @@
 use tinyserve::config::KvDtype;
 use tinyserve::coordinator::batcher::{Batcher, BatcherConfig, QueuedItem, Round};
 use tinyserve::coordinator::session::SessionStore;
-use tinyserve::kvcache::{EvictionPolicyKind, PagePool, PageStore, SeqCache};
+use tinyserve::kvcache::{
+    default_spill_root, EvictionPolicyKind, PagePool, PageStore, SeqCache, SpillConfig,
+};
 use tinyserve::sparsity::top_k_indices;
 use tinyserve::util::prop::prop_check;
 
@@ -584,7 +586,7 @@ fn prop_demote_promote_roundtrip_within_tolerance() {
         }
         // promotion restores the hot tier without further data change
         let frozen: Vec<Vec<f32>> = (0..4).map(|s| pool.key_row(a, 0, s)).collect();
-        store.ensure_hot(&mut pool, a);
+        store.ensure_hot(&mut pool, a).map_err(|e| e.to_string())?;
         if !store.is_hot(a) {
             return Err("promotion did not restore the hot tier".into());
         }
@@ -601,6 +603,185 @@ fn prop_demote_promote_roundtrip_within_tolerance() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_spill_roundtrip_is_bit_exact_across_policies_and_dtypes() {
+    // Spill durability property, in three phases:
+    //   1. fill pages under a one-hot-page RAM budget with the disk tier's
+    //      byte budget at ZERO — the cascade demotes everything to q8 but
+    //      cannot spill, so the cold pages' exact contents are observable;
+    //   2. snapshot the cold pages (rows + bounding boxes), open the disk
+    //      budget, enforce — the cascade now spills cold pages, zeroing
+    //      their pool rows;
+    //   3. fault every snapshotted page back via ensure_hot and require
+    //      its rows AND bboxes to match the snapshot bit-exactly.
+    // Holds across all four eviction policies and all three KV dtypes
+    // (int8 pools take the raw-copy codec path; f32/f16 the q8 path,
+    // whose demote->spill->fault pipeline is quantizer-idempotent).
+    prop_check("spill_roundtrip_bit_exact", 40, |ctx| {
+        let kind = *ctx.rng.choice(&[
+            EvictionPolicyKind::Lru,
+            EvictionPolicyKind::Clock,
+            EvictionPolicyKind::QueryAware,
+            EvictionPolicyKind::Sieve,
+        ]);
+        let dt = *ctx.rng.choice(&[KvDtype::F32, KvDtype::F16, KvDtype::Int8]);
+        let mut pool = PagePool::new(2, 8, 4, dt);
+        let budget = pool.page_bytes(); // room for one hot page
+        let dir = default_spill_root().join(format!("prop-{}", ctx.index));
+        let mut sc = SpillConfig::new(dir, 0); // tier attached, budget shut
+        // small staging buffers so flushed segment slots get exercised
+        sc.staging_slots = 1 + ctx.rng.usize(3);
+        let mut store =
+            PageStore::with_spill(Some(budget), kind, sc).map_err(|e| e.to_string())?;
+        let n = 3 + ctx.scaled(0, 5);
+        let mut ids = Vec::new();
+        for _ in 0..n {
+            let id = store.alloc(&mut pool);
+            for slot in 0..4 {
+                for l in 0..2 {
+                    let row: Vec<f32> =
+                        (0..8).map(|_| (ctx.rng.normal() * 2.0) as f32).collect();
+                    pool.write_token(id, slot, l, &row, &row);
+                }
+            }
+            store.note_score(id, ctx.rng.normal() as f32);
+            ids.push(id);
+            store.enforce_budget(&mut pool);
+        }
+        if store.tier_residency().2 != 0 {
+            return Err("pages spilled under a zero disk budget".into());
+        }
+        // phase 2: snapshot the cold set, open the tier, cascade
+        let cold: Vec<u32> = ids.iter().copied().filter(|&id| store.is_cold(id)).collect();
+        if cold.is_empty() {
+            return Err("workload produced no cold pages".into());
+        }
+        let snapshot: Vec<(u32, Vec<Vec<f32>>, Vec<Vec<f32>>)> = cold
+            .iter()
+            .map(|&id| {
+                let rows = (0..2)
+                    .flat_map(|l| (0..4).map(move |s| (l, s)))
+                    .map(|(l, s)| pool.key_row(id, l, s))
+                    .collect();
+                let meta = (0..2).map(|l| pool.meta(id, l).to_vec()).collect();
+                (id, rows, meta)
+            })
+            .collect();
+        store.set_spill_budget_bytes(1 << 20);
+        store.enforce_budget(&mut pool);
+        if store.stats.spill_outs == 0 {
+            return Err(format!("cascade never spilled ({kind:?}, {dt:?})"));
+        }
+        if let Some(&spilled) = ids.iter().find(|&&id| store.is_on_disk(id)) {
+            if !pool.key_row(spilled, 0, 0).iter().all(|&x| x == 0.0) {
+                return Err("disk page rows not purged from the pool".into());
+            }
+        }
+        store.flush_spill().map_err(|e| e.to_string())?;
+        // phase 3: fault back and compare bit-exactly
+        for (id, rows, meta) in &snapshot {
+            store.ensure_hot(&mut pool, *id).map_err(|e| e.to_string())?;
+            let mut i = 0usize;
+            for l in 0..2 {
+                for s in 0..4 {
+                    let got = pool.key_row(*id, l, s);
+                    if got != rows[i] {
+                        return Err(format!(
+                            "page {id} layer {l} slot {s} not bit-exact after \
+                             spill round-trip ({kind:?}, {dt:?}): {got:?} vs {:?}",
+                            rows[i]
+                        ));
+                    }
+                    i += 1;
+                }
+                if pool.meta(*id, l) != meta[l].as_slice() {
+                    return Err(format!(
+                        "page {id} layer {l} bbox not bit-exact after spill \
+                         round-trip ({kind:?}, {dt:?})"
+                    ));
+                }
+            }
+        }
+        if store.stats.faults == 0 {
+            return Err("promoting disk pages must count faults".into());
+        }
+        // drain: the spill tier must empty with the pool
+        store.unpin_all();
+        for id in ids {
+            pool.release(id);
+        }
+        store.sync(&pool);
+        if store.spill_bytes() != 0 {
+            return Err("spill tier holds bytes after full release".into());
+        }
+        if store.bytes_in_use(&pool) != 0 {
+            return Err("bytes after release".into());
+        }
+        pool.validate().map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn two_workers_concurrent_enforce_promote_without_deadlock() {
+    // Lock-ordering regression for shared-pool multi-engine workers (see
+    // docs/pagestore_design.md): each worker owns its store -> pool ->
+    // spill stack and acquires strictly in that order, never touching
+    // another worker's; two workers hammering the enforce/promote cascade
+    // concurrently must run to completion with both tiers exercised.
+    // A deadlock shows up as this test hanging; a panic as a join error.
+    let root = default_spill_root();
+    let handles: Vec<_> = (0..2u64)
+        .map(|w| {
+            let dir = root.join(format!("worker-{w}"));
+            std::thread::spawn(move || {
+                let mut pool = PagePool::new(2, 8, 4, KvDtype::F32);
+                let budget = pool.page_bytes();
+                let mut store = PageStore::with_spill(
+                    Some(budget),
+                    EvictionPolicyKind::Lru,
+                    SpillConfig::new(dir, 1 << 20),
+                )
+                .expect("spill store");
+                let mut rng = tinyserve::util::rng::Rng::new(0xC0FFEE ^ w);
+                let mut live: Vec<u32> = Vec::new();
+                for round in 0..200 {
+                    let id = store.alloc(&mut pool);
+                    for slot in 0..4 {
+                        for l in 0..2 {
+                            let v = rng.normal() as f32;
+                            pool.write_token(id, slot, l, &[v; 8], &[v; 8]);
+                        }
+                    }
+                    live.push(id);
+                    store.enforce_budget(&mut pool);
+                    // promote a random resident page (faults disk pages)
+                    let pick = live[rng.usize(live.len())];
+                    store.ensure_hot(&mut pool, pick).expect("fault");
+                    store.enforce_budget(&mut pool);
+                    if round % 3 == 0 && live.len() > 2 {
+                        let i = rng.usize(live.len());
+                        pool.release(live.swap_remove(i));
+                        store.sync(&pool);
+                    }
+                }
+                let stats = store.stats.clone();
+                for id in live {
+                    pool.release(id);
+                }
+                store.sync(&pool);
+                assert_eq!(store.spill_bytes(), 0, "worker {w} leaked spill bytes");
+                assert_eq!(pool.pages_in_use(), 0, "worker {w} leaked pages");
+                (stats.spill_outs, stats.faults)
+            })
+        })
+        .collect();
+    for (w, h) in handles.into_iter().enumerate() {
+        let (spill_outs, faults) = h.join().expect("worker thread panicked");
+        assert!(spill_outs > 0, "worker {w} never spilled to disk");
+        assert!(faults > 0, "worker {w} never faulted a page back");
+    }
 }
 
 #[test]
