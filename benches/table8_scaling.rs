@@ -47,12 +47,18 @@ fn workload(n_requests: usize) -> OpenLoopConfig {
     }
 }
 
+/// One pool run under modeled time. Returns the report plus the *real*
+/// wall-clock seconds of the pump loop — modeled time prices the virtual
+/// clock deterministically, but the decode work is genuinely executed, so
+/// wall time is where `threads > 1` shows up (the event stream does not
+/// change; see the determinism contract in docs/serving_api.md).
 fn serve_pool(
     manifest: &Manifest,
     workers: usize,
+    threads: usize,
     dispatch: DispatchKind,
     n_requests: usize,
-) -> Option<ServeReport> {
+) -> Option<(ServeReport, f64)> {
     let cfg = ServingConfig {
         model: SERVE_MODEL.into(),
         policy: PolicyKind::TinyServe,
@@ -61,14 +67,20 @@ fn serve_pool(
         ..Default::default()
     };
     let pool = WorkerPool::build(manifest, &cfg, workers, dispatch).ok()?;
-    let opts = ServeOptions { time_model: TimeModel::Modeled, ..Default::default() };
+    let opts = ServeOptions {
+        time_model: TimeModel::Modeled,
+        threads,
+        ..Default::default()
+    };
     let mut plugins = Pipeline::new();
     let mut fe = Frontend::builder().options(opts).build_pool(pool, &mut plugins);
     fe.set_source(Box::new(OpenLoopGen::new(workload(n_requests))));
+    let t0 = std::time::Instant::now();
     while fe.has_work() {
         fe.step().ok()?;
     }
-    Some(fe.into_report())
+    let wall_s = t0.elapsed().as_secs_f64();
+    Some((fe.into_report(), wall_s))
 }
 
 fn main() {
@@ -76,7 +88,11 @@ fn main() {
     let info = manifest.model(MODEL).expect("model").clone();
     let n_requests = scale(48);
 
-    // ---- real pools: workers x dispatch on the bursty open-loop mix ----
+    // ---- real pools: workers x threads x dispatch on the bursty mix ----
+    // the threads dimension reports *real wall-clock* seconds of the pump
+    // loop (modeled virtual time is identical by the determinism
+    // contract): threads=N must beat threads=1 on the same 4-worker pool,
+    // which is the whole point of the thread-parallel round executor
     let mut t = Table::new(
         &format!(
             "Table 8a: concurrent worker pools ({SERVE_MODEL}, bursty open-loop, \
@@ -84,23 +100,32 @@ fn main() {
         ),
         &[
             "workers",
+            "threads",
             "dispatch",
             "tok/s",
             "tok/s per worker",
             "ttft p50 ms",
             "ttft p99 ms",
             "deferred",
+            "wall s",
+            "wall speedup",
         ],
     );
     let mut base_tps: Option<f64> = None;
+    let mut seq_wall_4w: Option<f64> = None;
     let mut ll_vs_rr: Option<(f64, f64)> = None;
-    for &(n, dispatch) in &[
-        (1usize, DispatchKind::LeastLoaded),
-        (2, DispatchKind::LeastLoaded),
-        (4, DispatchKind::LeastLoaded),
-        (4, DispatchKind::RoundRobin),
+    // recorded from the rows actually run, so the emitted perf-record
+    // context can never drift from the sweep list
+    let mut threads_dim: Vec<usize> = Vec::new();
+    for &(n, threads, dispatch) in &[
+        (1usize, 1usize, DispatchKind::LeastLoaded),
+        (2, 1, DispatchKind::LeastLoaded),
+        (4, 1, DispatchKind::LeastLoaded),
+        (4, 4, DispatchKind::LeastLoaded),
+        (4, 1, DispatchKind::RoundRobin),
     ] {
-        let Some(r) = serve_pool(&manifest, n, dispatch, n_requests) else {
+        let Some((r, wall_s)) = serve_pool(&manifest, n, threads, dispatch, n_requests)
+        else {
             println!("(engine unavailable: skipping real-pool sweep)");
             break;
         };
@@ -109,8 +134,27 @@ fn main() {
         if n == 1 {
             base_tps = Some(tps);
         }
+        if !threads_dim.contains(&threads) {
+            threads_dim.push(threads);
+        }
+        let mut wall_speedup = f64::NAN;
+        if n == 4 && dispatch == DispatchKind::LeastLoaded {
+            match threads {
+                1 => seq_wall_4w = Some(wall_s),
+                _ => {
+                    if let Some(seq) = seq_wall_4w {
+                        wall_speedup = seq / wall_s.max(1e-9);
+                        println!(
+                            "  4 workers, {threads} threads: {wall_speedup:.2}x \
+                             real wall-clock over sequential stepping \
+                             ({seq:.2}s -> {wall_s:.2}s)"
+                        );
+                    }
+                }
+            }
+        }
         let p99 = m.request_ttft.p99() * 1e3;
-        if n == 4 {
+        if n == 4 && threads == 1 {
             match dispatch {
                 DispatchKind::LeastLoaded => ll_vs_rr = Some((p99, f64::NAN)),
                 DispatchKind::RoundRobin => {
@@ -123,15 +167,22 @@ fn main() {
         }
         t.row(vec![
             format!("{n}"),
+            format!("{threads}"),
             dispatch.name().to_string(),
             format!("{tps:.1}"),
             format!("{:.1}", tps / n as f64),
             format!("{:.0}", m.request_ttft.p50() * 1e3),
             format!("{p99:.0}"),
             format!("{}", r.batcher_stats.deferred),
+            format!("{wall_s:.3}"),
+            if wall_speedup.is_finite() {
+                format!("{wall_speedup:.2}x")
+            } else {
+                "-".to_string()
+            },
         ]);
         if let Some(base) = base_tps {
-            if n > 1 && dispatch == DispatchKind::LeastLoaded {
+            if n > 1 && threads == 1 && dispatch == DispatchKind::LeastLoaded {
                 println!(
                     "  {n} workers: {:.2}x the 1-worker throughput",
                     tps / base.max(1e-9)
@@ -155,6 +206,10 @@ fn main() {
         vec![
             ("model", Json::from(SERVE_MODEL)),
             ("n_requests", Json::from(n_requests)),
+            (
+                "threads_dim",
+                Json::Arr(threads_dim.iter().map(|&t| Json::from(t)).collect()),
+            ),
         ],
     );
 

@@ -7,7 +7,9 @@
 //!   * tokens stream incrementally as `ServeEvent::Token`s;
 //!   * `--workers N` decodes on N engine workers, each owning a slice of
 //!     the KV budget (`--dispatch` picks round-robin / least-loaded /
-//!     session-affinity);
+//!     session-affinity), and `--threads N` steps them on real OS
+//!     threads per decode round (per-worker utilization lands in the
+//!     report);
 //!   * one request is cancelled mid-stream and its KV pages provably
 //!     return to its worker's pool (summed `bytes_in_use` drops at the
 //!     cancel point);
@@ -91,7 +93,12 @@ fn main() -> Result<()> {
     let pool = WorkerPool::build(&manifest, &cfg, workers, dispatch)?;
     pool.warmup()?;
 
-    let opts = ServeOptions { collect_traces: true, seed, ..Default::default() };
+    let opts = ServeOptions {
+        collect_traces: true,
+        seed,
+        threads: args.usize_or("threads", 1),
+        ..Default::default()
+    };
     let mut plugins = Pipeline::new();
     plugins.push(Box::new(EntropyEarlyExit::new(0.05, 3, 4)));
     plugins.push(Box::new(RepetitionGuard { max_run: 16 }));
@@ -248,11 +255,13 @@ fn main() -> Result<()> {
         rows.push((
             format!("worker {w}"),
             format!(
-                "admitted {}  finished {}  tokens {}  steps {}  kv peak {:.2} MB",
+                "admitted {}  finished {}  tokens {}  steps {}  util {:.0}%  \
+                 kv peak {:.2} MB",
                 ws.admitted,
                 ws.finished,
                 ws.new_tokens,
                 ws.steps,
+                ws.utilization(r.wall_s) * 100.0,
                 ws.kv_bytes_peak as f64 / 1e6
             ),
         ));

@@ -40,11 +40,28 @@
 //! without waiting for the request to run to completion.
 //!
 //! Multi-worker rounds: admissions dispatch to a worker (round-robin /
-//! least-loaded / session-affinity) and prefill serially on the pump;
-//! decode steps every worker's batch in the same scheduling round, merging
-//! the per-worker `StepMetrics` into one record and advancing the clock by
-//! the *slowest* worker — concurrent workers overlap, which is what turns
-//! "N workers" from router bookkeeping into real throughput scaling.
+//! least-loaded / session-affinity) and prefill serially on the pump.
+//! Each decode round then runs in three phases:
+//!
+//! 1. **dispatch** (pure): build an immutable [`RoundPlan`] — which
+//!    active-set indices step on which worker, in ascending worker order —
+//!    from a read-only view of the frontend;
+//! 2. **step** (parallel): execute the plan through the pool's
+//!    [`RoundExecutor`](super::pool::RoundExecutor) — sequential on the
+//!    pump thread, or each worker's `&mut Engine` + batch + forked RNG on
+//!    its own scoped OS thread (`ServeOptions::threads`, `--threads`);
+//!    workers share no mutable state during this phase;
+//! 3. **commit** (serial): merge per-worker `StepMetrics` in fixed worker
+//!    order, advance the clock by the *slowest* worker while `busy`
+//!    accumulates the sum, emit token events, run plugins, retire
+//!    finished sequences, and re-queue deferred work.
+//!
+//! Every worker samples from its own RNG stream (forked from the seed in
+//! worker order at construction), so the two executors produce
+//! byte-identical event streams under `TimeModel::Modeled` — and the
+//! serial commit phase is the architectural seam where preemption and
+//! cross-worker session migration slot in later without touching the
+//! parallel step.
 //!
 //! The deprecated `serve_trace` shim (`coordinator::server`) is exactly
 //! "submit everything, drain, report", so trace-driven benches keep their
@@ -63,7 +80,7 @@ use crate::util::rng::Rng;
 use crate::workload::{tasks, Request, RequestSource};
 
 use super::batcher::{Batcher, BatcherConfig, QueuedItem, Round};
-use super::pool::WorkerPool;
+use super::pool::{WorkerPool, WorkerStats};
 use super::router::Router;
 use super::server::{ServeOptions, ServeReport, TimeModel};
 use super::session::{SessionStats, SessionStore};
@@ -245,6 +262,18 @@ impl FrontendBuilder {
     }
 }
 
+/// Immutable output of a decode round's dispatch phase: per-worker
+/// batches as `(worker, active-set indices in batch order)`, ascending by
+/// worker. The step phase executes exactly this plan; the commit phase
+/// consumes it to attribute results — neither re-decides membership, so
+/// the three phases cannot disagree about who stepped where.
+struct RoundPlan {
+    batches: Vec<(usize, Vec<usize>)>,
+}
+
+/// One worker's step-phase output: its step metrics and sampled tokens.
+type WorkerStepOut = (StepMetrics, Vec<SampleOut>);
+
 struct Active {
     seq: Sequence,
     req_idx: usize,
@@ -264,7 +293,10 @@ pub struct Frontend<'a> {
     plugins: &'a mut Pipeline,
     opts: ServeOptions,
     clock: Clock,
-    rng: Rng,
+    /// one sampling RNG per pool worker, forked from the seed in worker
+    /// order at construction — each worker's draw sequence is independent
+    /// of how (and on how many threads) the round executes
+    worker_rngs: Vec<Rng>,
     batcher: Batcher,
     /// one session store per engine worker: snapshots hold pages of that
     /// worker's pool and cannot be restored across workers
@@ -284,7 +316,6 @@ pub struct Frontend<'a> {
     /// live arrival source, polled by the pump against the virtual clock
     source: Option<Box<dyn RequestSource>>,
     events: VecDeque<ServeEvent>,
-    busy: f64,
     per_task: HashMap<&'static str, (f64, f64, usize)>,
     exact_hits: usize,
     char_acc_sum: f64,
@@ -305,11 +336,16 @@ impl<'a> Frontend<'a> {
     }
 
     pub fn new_with_pool(
-        pool: WorkerPool<'a>,
+        mut pool: WorkerPool<'a>,
         opts: ServeOptions,
         plugins: &'a mut Pipeline,
     ) -> Frontend<'a> {
         let n = pool.len();
+        // per-run accounting: `into_parts` hands the pool back for reuse,
+        // so a fresh frontend must not inherit a previous run's worker
+        // counters — `busy_frac` and `utilization` divide them by THIS
+        // run's clock
+        pool.stats = vec![WorkerStats::default(); n];
         // the configured active cap is per worker: the global batcher cap
         // is min(opts cap, engine cap) * n, so pools actually scale their
         // admissible concurrency — a one-slot pool reduces to the classic
@@ -323,7 +359,8 @@ impl<'a> Frontend<'a> {
             ..opts.batcher.clone()
         });
         let metrics = ServerMetrics::new(opts.collect_traces);
-        let rng = Rng::new(opts.seed);
+        let mut seed_rng = Rng::new(opts.seed);
+        let worker_rngs = (0..n).map(|w| seed_rng.fork(w as u64)).collect();
         let sessions = (0..n).map(|_| SessionStore::new(opts.max_sessions)).collect();
         let router = Router::new(opts.n_workers);
         Frontend {
@@ -331,7 +368,7 @@ impl<'a> Frontend<'a> {
             plugins,
             opts,
             clock: Clock::new(),
-            rng,
+            worker_rngs,
             batcher,
             sessions,
             router,
@@ -344,7 +381,6 @@ impl<'a> Frontend<'a> {
             pending: VecDeque::new(),
             source: None,
             events: VecDeque::new(),
-            busy: 0.0,
             per_task: HashMap::new(),
             exact_hits: 0,
             char_acc_sum: 0.0,
@@ -513,6 +549,10 @@ impl<'a> Frontend<'a> {
             .collect();
         per_task_out.sort_by(|a, b| a.0.cmp(&b.0));
         let now = self.clock.now();
+        // workers overlap, so total busy time is the sum of the per-worker
+        // counters — the single source of busy accounting (utilization
+        // divides the same counters by the same wall clock)
+        let busy: f64 = self.pool.stats.iter().map(|s| s.busy_s).sum();
         let report = ServeReport {
             accuracy: if self.scored > 0 {
                 self.exact_hits as f64 / self.scored as f64
@@ -531,7 +571,7 @@ impl<'a> Frontend<'a> {
             metrics: self.metrics,
             requests: self.records,
             wall_s: now,
-            busy_frac: if now > 0.0 { self.busy / now } else { 0.0 },
+            busy_frac: if now > 0.0 { busy / now } else { 0.0 },
             worker_stats: self.pool.stats.clone(),
         };
         (report, self.pool)
@@ -780,7 +820,7 @@ impl<'a> Frontend<'a> {
                 }
             };
             self.clock.advance(dt);
-            self.busy += dt;
+            self.pool.stats[w].busy_s += dt;
             // snapshot the prompt prefix for future session turns
             if let Some(sid) = session {
                 let covered = seq.cache.pos;
@@ -856,6 +896,8 @@ impl<'a> Frontend<'a> {
         }
     }
 
+    // ---- the three-phase decode round (see module docs) ----
+
     fn decode_round(&mut self) -> Result<()> {
         // deadlines are checked at round granularity: abort before burning
         // a decode step on sequences that already missed their SLO
@@ -863,14 +905,18 @@ impl<'a> Frontend<'a> {
         if self.active.is_empty() {
             return Ok(());
         }
-        // step every worker's batch this round; workers overlap in real
-        // time, so the clock advances by the slowest worker while `busy`
-        // accumulates the sum
-        let n_workers = self.pool.len();
-        let mut merged = StepMetrics::default();
-        let mut round_dt = 0.0f64;
-        let mut rounds: Vec<(usize, Vec<usize>, Vec<SampleOut>)> = Vec::new();
-        for w in 0..n_workers {
+        let plan = self.plan_round();
+        let stepped = self.step_round(&plan);
+        self.commit_round(plan, stepped)
+    }
+
+    /// Dispatch phase (pure): which active-set indices step on which
+    /// worker this round, in ascending worker order, capped at each
+    /// engine's compiled batch size. Built from an immutable view, so the
+    /// plan is fixed before any engine state changes.
+    fn plan_round(&self) -> RoundPlan {
+        let mut batches = Vec::new();
+        for w in 0..self.pool.len() {
             let cap = self.pool.engine(w).max_batch();
             let idxs: Vec<usize> = self
                 .active
@@ -880,25 +926,93 @@ impl<'a> Frontend<'a> {
                 .map(|(i, _)| i)
                 .take(cap)
                 .collect();
-            if idxs.is_empty() {
-                continue;
+            if !idxs.is_empty() {
+                batches.push((w, idxs));
             }
-            let mut m = StepMetrics::default();
-            let outs = {
-                let active = &mut self.active;
-                let mut batch: Vec<&mut Active> = active
-                    .iter_mut()
-                    .filter(|a| a.engine_idx == w)
-                    .take(cap)
+        }
+        RoundPlan { batches }
+    }
+
+    /// Step phase: decode every planned worker batch through the round
+    /// executor. Each item moves that worker's batch of `&mut Active` and
+    /// its forked RNG onto the executor; with `threads > 1` the batches
+    /// run on scoped OS threads against their own `&mut Engine`. No
+    /// frontend state outside the batches is touched — the phase returns
+    /// raw per-worker results (success or failure) for the serial commit
+    /// to settle; failures are NOT short-circuited here, because sibling
+    /// workers may already be running on other threads and their
+    /// completed work must still be committed.
+    fn step_round(&mut self, plan: &RoundPlan) -> Vec<(usize, Result<WorkerStepOut>)> {
+        let sampling = self.opts.sampling;
+        let exec = self.opts.round_executor();
+        let mut actives: Vec<Option<&mut Active>> =
+            self.active.iter_mut().map(Some).collect();
+        let mut rngs: Vec<Option<&mut Rng>> =
+            self.worker_rngs.iter_mut().map(Some).collect();
+        let work: Vec<(usize, (Vec<&mut Active>, &mut Rng))> = plan
+            .batches
+            .iter()
+            .map(|(w, idxs)| {
+                let batch: Vec<&mut Active> = idxs
+                    .iter()
+                    .map(|&i| actives[i].take().expect("plan indices are unique"))
                     .collect();
-                let mut seqs: Vec<&mut Sequence> =
-                    batch.iter_mut().map(|a| &mut a.seq).collect();
-                self.pool.engine_mut(w).decode_step(
-                    &mut seqs,
-                    self.opts.sampling,
-                    &mut self.rng,
-                    &mut m,
-                )?
+                let rng = rngs[*w].take().expect("plan workers are unique");
+                (*w, (batch, rng))
+            })
+            .collect();
+        self.pool.run_round(exec, work, |_w, engine, payload| {
+            let (mut batch, rng) = payload;
+            let mut m = StepMetrics::default();
+            let mut seqs: Vec<&mut Sequence> =
+                batch.iter_mut().map(|a| &mut a.seq).collect();
+            engine
+                .decode_step(&mut seqs, sampling, rng, &mut m)
+                .map(|outs| (m, outs))
+        })
+    }
+
+    /// Commit phase (serial): price each worker's step, advance the clock
+    /// by the *slowest* worker while `busy` accumulates the sum (workers
+    /// overlap in real time), merge metrics in fixed worker order, then
+    /// emit token events, run plugins and retire finished sequences —
+    /// byte-identical regardless of how the step phase executed. A failed
+    /// worker aborts the round with its error, but only *after* every
+    /// successful worker's results are committed (first failure in worker
+    /// order wins), so successful workers' sequences stay consistent with
+    /// the metrics and event stream under both executors. The failed
+    /// worker's batch keeps its (possibly partial) cache state but its
+    /// pins are cleared; the error is fatal for those requests — callers
+    /// cancel() them to release their pages.
+    fn commit_round(
+        &mut self,
+        plan: RoundPlan,
+        stepped: Vec<(usize, Result<WorkerStepOut>)>,
+    ) -> Result<()> {
+        let mut merged = StepMetrics::default();
+        let mut round_dt = 0.0f64;
+        let mut rounds: Vec<(usize, Vec<usize>, Vec<SampleOut>)> = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+        for ((w, idxs), (sw, res)) in plan.batches.into_iter().zip(stepped) {
+            debug_assert_eq!(w, sw, "step results follow the plan order");
+            let (m, outs) = match res {
+                Ok(out) => out,
+                Err(e) => {
+                    // the failed step may have left its batch's pages
+                    // pinned (decode_step unpins at step end, which an
+                    // error skips): clear them so budget enforcement and
+                    // teardown can never wedge on a dead pin. The batch's
+                    // requests stay Active — the caller sees the error
+                    // from step()/drain() and can cancel() them, which
+                    // releases their pages as usual.
+                    let eng = self.pool.engine_mut(w);
+                    eng.store.unpin_all();
+                    if first_err.is_none() {
+                        first_err =
+                            Some(e.context(format!("decode step on worker {w}")));
+                    }
+                    continue;
+                }
             };
             // spill_seconds / disk_seconds are the simulated q8- and
             // disk-tier transfer costs of the budgeted store
@@ -911,7 +1025,7 @@ impl<'a> Frontend<'a> {
                     Self::modeled_step_s(self.pool.engine(w), &m) + tier_s
                 }
             };
-            self.busy += dt_w;
+            self.pool.stats[w].busy_s += dt_w;
             round_dt = round_dt.max(dt_w);
             self.pool.stats[w].steps += 1;
             self.pool.stats[w].new_tokens += outs.len() as u64;
@@ -920,7 +1034,11 @@ impl<'a> Frontend<'a> {
             rounds.push((w, idxs, outs));
         }
         self.clock.advance(round_dt);
-        self.metrics.on_step(&merged);
+        // a round where every worker failed records no step (the old
+        // sequential path bailed before on_step too)
+        if !rounds.is_empty() {
+            self.metrics.on_step(&merged);
+        }
         let now = self.clock.now();
         // token events + plugins + first-token bookkeeping, in worker
         // order then batch order — deterministic
@@ -1006,7 +1124,10 @@ impl<'a> Frontend<'a> {
                 i += 1;
             }
         }
-        Ok(())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 

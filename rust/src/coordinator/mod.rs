@@ -16,7 +16,7 @@ pub use batcher::{Batcher, BatcherConfig, Round};
 pub use frontend::{
     Clock, Frontend, FrontendBuilder, Lifecycle, RequestHandle, ServeEvent,
 };
-pub use pool::{DispatchKind, WorkerPool, WorkerStats};
+pub use pool::{DispatchKind, RoundExecutor, WorkerPool, WorkerStats};
 pub use router::Router;
 #[allow(deprecated)]
 pub use server::serve_trace;

@@ -27,6 +27,21 @@
 //! A pool can also borrow a caller-owned engine (`WorkerPool::single`),
 //! which is how the single-engine `Frontend::build` path is expressed —
 //! a one-slot pool is code-path-identical to the pre-pool frontend.
+//!
+//! Round execution: the frontend splits every decode round into a pure
+//! *dispatch* phase (an immutable per-worker plan), a *step* phase, and a
+//! serial *commit* phase. The step phase runs through a
+//! [`RoundExecutor`]: `Sequential` steps each worker's batch in ascending
+//! worker order on the pump thread; `Threaded` moves each worker's
+//! exclusive `&mut Engine` (engine + `PageStore` slice + per-worker spill
+//! directory) onto a scoped OS thread and joins. Results are always
+//! merged in ascending worker order, and every worker draws from its own
+//! forked RNG stream, so the two executors are *byte-identical* under
+//! `TimeModel::Modeled` — threading changes wall time, never the event
+//! stream. Workers share no mutable state during the step phase (each
+//! owns its full store → pool → spill stack; see the lock-ordering note
+//! in docs/pagestore_design.md), which is what makes the scoped-thread
+//! path safe without any cross-worker locking.
 
 use anyhow::Result;
 
@@ -75,6 +90,96 @@ impl DispatchKind {
     pub fn names() -> Vec<&'static str> {
         Self::all().iter().map(|k| k.name()).collect()
     }
+}
+
+/// How the step phase of a decode round executes its per-worker batches
+/// (`--threads` on the CLI; `ServeOptions::threads`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundExecutor {
+    /// step workers one after another on the pump thread (threads = 1)
+    Sequential,
+    /// step workers on up to `threads` scoped OS threads, joining before
+    /// the commit phase; results merge in fixed worker order, so event
+    /// streams match `Sequential` byte-for-byte under modeled time
+    Threaded { threads: usize },
+}
+
+impl RoundExecutor {
+    /// Executor for a `--threads N` value: 1 is the sequential path.
+    pub fn with_threads(threads: usize) -> RoundExecutor {
+        if threads <= 1 {
+            RoundExecutor::Sequential
+        } else {
+            RoundExecutor::Threaded { threads }
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        match self {
+            RoundExecutor::Sequential => 1,
+            RoundExecutor::Threaded { threads } => (*threads).max(1),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoundExecutor::Sequential => "sequential",
+            RoundExecutor::Threaded { .. } => "threaded",
+        }
+    }
+}
+
+/// Run one round's worth of per-worker work items through an executor.
+///
+/// `work` is `(worker index, payload)` in ascending worker order; `f`
+/// runs once per item and must only touch state owned by (or moved in
+/// with) that item — workers are independent by construction. The
+/// returned vector is in the *input* order regardless of executor, which
+/// is the determinism contract the commit phase relies on. `Threaded`
+/// splits the items into at most `threads` contiguous chunks, one scoped
+/// OS thread each; a panic on any thread propagates (no work is silently
+/// dropped).
+///
+/// Separated from `WorkerPool` so the scheduling core is testable without
+/// constructing engines (see the executor property tests).
+pub fn execute_round<T: Send, R: Send>(
+    exec: RoundExecutor,
+    work: Vec<(usize, T)>,
+    f: &(impl Fn(usize, T) -> R + Sync),
+) -> Vec<(usize, R)> {
+    let threads = exec.threads();
+    if threads == 1 || work.len() <= 1 {
+        return work.into_iter().map(|(w, t)| (w, f(w, t))).collect();
+    }
+    let chunk = work.len().div_ceil(threads);
+    let mut chunks: Vec<Vec<(usize, T)>> = Vec::new();
+    let mut it = work.into_iter();
+    loop {
+        let c: Vec<(usize, T)> = it.by_ref().take(chunk).collect();
+        if c.is_empty() {
+            break;
+        }
+        chunks.push(c);
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|c| {
+                s.spawn(move || {
+                    c.into_iter().map(|(w, t)| (w, f(w, t))).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        // join in spawn order: chunks are contiguous, so the flattened
+        // result preserves the input order exactly
+        handles
+            .into_iter()
+            .flat_map(|h| match h.join() {
+                Ok(v) => v,
+                Err(e) => std::panic::resume_unwind(e),
+            })
+            .collect()
+    })
 }
 
 /// Stable session -> worker hash (one SplitMix64 step — the same mixer
@@ -143,6 +248,24 @@ pub struct WorkerStats {
     pub steps: u64,
     /// peak post-step resident KV bytes (cold pages at the q8 rate)
     pub kv_bytes_peak: usize,
+    /// virtual seconds this worker spent computing (prefill + decode);
+    /// divide by the run's wall time for utilization
+    pub busy_s: f64,
+}
+
+impl WorkerStats {
+    /// Fraction of the run's (virtual) wall time this worker was
+    /// computing. Workers overlap, so per-worker utilization is the
+    /// honest dispatch-skew signal the summed `busy_frac` hides: an idle
+    /// worker shows up as a low number here while the pool-wide busy
+    /// fraction still looks healthy.
+    pub fn utilization(&self, wall_s: f64) -> f64 {
+        if wall_s > 0.0 {
+            self.busy_s / wall_s
+        } else {
+            0.0
+        }
+    }
 }
 
 enum Slot<'a> {
@@ -309,6 +432,33 @@ impl<'a> WorkerPool<'a> {
         let s = &mut self.stats[w];
         s.kv_bytes_peak = s.kv_bytes_peak.max(bytes);
     }
+
+    /// Step phase of a decode round: run `f` once per `(worker, payload)`
+    /// item with that worker's exclusive `&mut Engine`, through the given
+    /// executor. Items must name distinct workers (each engine is handed
+    /// out exactly once); results come back in input order — ascending
+    /// worker order, as the frontend's dispatch phase builds them — so
+    /// the commit phase merges identically under both executors.
+    pub fn run_round<T: Send, R: Send>(
+        &mut self,
+        exec: RoundExecutor,
+        work: Vec<(usize, T)>,
+        f: impl Fn(usize, &mut Engine, T) -> R + Sync,
+    ) -> Vec<(usize, R)> {
+        let mut engines: Vec<Option<&mut Engine>> =
+            self.slots.iter_mut().map(|s| Some(s.get_mut())).collect();
+        let work: Vec<(usize, (&mut Engine, T))> = work
+            .into_iter()
+            .map(|(w, t)| {
+                let e = engines[w].take().expect("duplicate worker in round plan");
+                (w, (e, t))
+            })
+            .collect();
+        execute_round(exec, work, &|w, payload| {
+            let (engine, t) = payload;
+            f(w, engine, t)
+        })
+    }
 }
 
 #[cfg(test)]
@@ -387,6 +537,78 @@ mod tests {
         assert_eq!(DispatchKind::parse("ll"), Some(DispatchKind::LeastLoaded));
         assert_eq!(DispatchKind::parse("bogus"), None);
         assert_eq!(DispatchKind::names().len(), 3);
+    }
+
+    #[test]
+    fn round_executor_parse_points() {
+        assert_eq!(RoundExecutor::with_threads(0), RoundExecutor::Sequential);
+        assert_eq!(RoundExecutor::with_threads(1), RoundExecutor::Sequential);
+        assert_eq!(
+            RoundExecutor::with_threads(4),
+            RoundExecutor::Threaded { threads: 4 }
+        );
+        assert_eq!(RoundExecutor::Sequential.threads(), 1);
+        assert_eq!(RoundExecutor::Threaded { threads: 4 }.threads(), 4);
+        assert_eq!(RoundExecutor::Sequential.name(), "sequential");
+        assert_eq!(RoundExecutor::Threaded { threads: 2 }.name(), "threaded");
+    }
+
+    #[test]
+    fn execute_round_preserves_order_and_results_across_thread_counts() {
+        // per-item stateful work (an owned RNG each) must come back in
+        // input order with identical results no matter how many threads
+        // the round is chunked over — the determinism contract
+        let run = |exec: RoundExecutor| -> Vec<(usize, u64)> {
+            let work: Vec<(usize, crate::util::rng::Rng)> = (0..7)
+                .map(|w| (w, crate::util::rng::Rng::new(0xBEEF ^ w as u64)))
+                .collect();
+            execute_round(exec, work, &|w, mut rng: crate::util::rng::Rng| {
+                let mut acc = w as u64;
+                for _ in 0..50 {
+                    acc = acc.wrapping_add(rng.next_u64());
+                }
+                acc
+            })
+        };
+        let base = run(RoundExecutor::Sequential);
+        let order: Vec<usize> = base.iter().map(|(w, _)| *w).collect();
+        assert_eq!(order, (0..7).collect::<Vec<_>>());
+        for threads in [2usize, 3, 7, 16] {
+            assert_eq!(
+                base,
+                run(RoundExecutor::Threaded { threads }),
+                "threaded({threads}) diverged from sequential"
+            );
+        }
+    }
+
+    #[test]
+    fn execute_round_handles_empty_and_single_item_rounds() {
+        let exec = RoundExecutor::Threaded { threads: 4 };
+        let empty: Vec<(usize, ())> = Vec::new();
+        let out = execute_round(exec, empty, &|_, ()| 1);
+        assert!(out.is_empty());
+        let out = execute_round(exec, vec![(3, 10)], &|w, x| w + x);
+        assert_eq!(out, vec![(3, 13)]);
+    }
+
+    #[test]
+    fn worker_stats_utilization() {
+        let ws = WorkerStats { busy_s: 0.5, ..Default::default() };
+        assert!((ws.utilization(2.0) - 0.25).abs() < 1e-12);
+        assert_eq!(ws.utilization(0.0), 0.0, "zero wall never divides");
+    }
+
+    #[test]
+    fn engine_stack_is_send_for_threaded_rounds() {
+        // compile-time gate for the whole Send refactor: a threaded round
+        // moves these across thread boundaries
+        fn assert_send<T: Send>() {}
+        assert_send::<Engine>();
+        assert_send::<crate::engine::Sequence>();
+        assert_send::<PageStore>();
+        assert_send::<WorkerPool<'static>>();
+        assert_send::<&mut Engine>();
     }
 
     #[test]

@@ -65,6 +65,11 @@ pub struct ServeOptions {
     /// virtual-clock pricing (measured wall time vs deterministic model)
     pub time_model: TimeModel,
     pub seed: u64,
+    /// OS threads for the decode round's step phase (1 = sequential).
+    /// Under `TimeModel::Modeled` the event stream is byte-identical for
+    /// every value — threading buys wall-clock time, never different
+    /// results (see the "Threading model" section of docs/serving_api.md).
+    pub threads: usize,
 }
 
 impl Default for ServeOptions {
@@ -78,7 +83,15 @@ impl Default for ServeOptions {
             collect_traces: false,
             time_model: TimeModel::Measured,
             seed: 42,
+            threads: 1,
         }
+    }
+}
+
+impl ServeOptions {
+    /// The round executor the `threads` knob selects.
+    pub fn round_executor(&self) -> super::pool::RoundExecutor {
+        super::pool::RoundExecutor::with_threads(self.threads)
     }
 }
 

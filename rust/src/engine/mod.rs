@@ -8,8 +8,12 @@
 //!      (the HBM page-fetch analogue — every byte is counted);
 //!   5. the fused Pallas attention executable (`post`) runs over it.
 //!
-//! The engine is deliberately single-threaded (one engine per worker); the
-//! coordinator owns batching and concurrency above it.
+//! The engine is single-threaded *internally* (no locks on the hot path)
+//! but the whole stack is `Send`: one engine per worker, and the
+//! coordinator's round executor may move a worker's `&mut Engine` onto a
+//! scoped OS thread for the decode step (`--threads N`). The coordinator
+//! owns batching and concurrency above it; engines never share mutable
+//! state with each other.
 
 pub mod fused;
 pub mod prefill;

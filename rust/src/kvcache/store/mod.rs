@@ -27,6 +27,13 @@
 //! read, dequantize, reinstate bounding boxes — priced through the
 //! `hwmodel` disk-bandwidth constants so modeled event streams stay
 //! seed-deterministic.
+//!
+//! The whole store stack is `Send` (the `EvictionPolicy` trait carries a
+//! `Send` supertrait; the spill tier is owned files and maps): each
+//! serving worker's store moves onto a scoped OS thread with its engine
+//! when decode rounds run thread-parallel. The stack stays lock-free
+//! because ownership is per-worker exclusive — see the lock-ordering
+//! note in docs/pagestore_design.md.
 
 pub mod policy;
 pub mod spill;

@@ -68,7 +68,12 @@ impl EvictionPolicyKind {
 }
 
 /// Replacement strategy behind the store's demotion decisions.
-pub trait EvictionPolicy {
+///
+/// `Send` is a supertrait: each worker's `PageStore` (and the policy
+/// inside it) moves onto a scoped OS thread when decode rounds execute
+/// workers in parallel. Policies are per-store state (never shared
+/// across workers), so all implementations are `Send` for free.
+pub trait EvictionPolicy: Send {
     fn kind(&self) -> EvictionPolicyKind;
 
     /// Grow per-page metadata to cover `cap` page ids.

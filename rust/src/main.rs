@@ -9,7 +9,9 @@
 //!   cost     --model M ...       hardware cost-model projections
 //!
 //! Serving flags: `--workers N` builds N engine workers (each with an
-//! equal slice of `--kv-budget-mb`); `--dispatch
+//! equal slice of `--kv-budget-mb`); `--threads N` steps each decode
+//! round's workers on up to N OS threads (1 = sequential; byte-identical
+//! event streams under `--modeled-time` either way); `--dispatch
 //! round-robin|least-loaded|session-affinity` picks the dispatch policy;
 //! `--arrival trace|poisson|gamma` (+ `--arrival-shape
 //! steady|ramp|burst|diurnal`) switches from trace replay to the live
@@ -135,6 +137,14 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = serving_config(args)?;
     let workers = args.usize_or("workers", 1);
+    // decode rounds step workers on real OS threads; 1 = sequential. Under
+    // --modeled-time the event stream is byte-identical for every value.
+    let threads = args.usize_or("threads", 1);
+    anyhow::ensure!(
+        threads >= 1,
+        "--threads must be >= 1 (1 steps workers sequentially; N runs each \
+         decode round's workers on up to N OS threads)"
+    );
     let dispatch = match args.get("dispatch") {
         Some(d) => DispatchKind::parse(d).ok_or_else(|| {
             anyhow::anyhow!(
@@ -157,7 +167,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let arrival = args.str_or("arrival", "trace");
     println!(
         "serving {n_requests} requests  model={} policy={} budget={} batch={} \
-         workers={workers} dispatch={} arrival={arrival} time={}",
+         workers={workers} threads={threads} dispatch={} arrival={arrival} time={}",
         cfg.model,
         cfg.policy.name(),
         cfg.budget,
@@ -170,7 +180,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     pool.warmup()?;
     let kv_budget = pool.total_budget_bytes();
     let policy_kind = pool.engine(0).store.policy_kind();
-    let opts = ServeOptions { time_model, seed, ..Default::default() };
+    let opts = ServeOptions { time_model, seed, threads, ..Default::default() };
     let mut plugins = Pipeline::new();
     let mut fe = Frontend::builder().options(opts).build_pool(pool, &mut plugins);
     if arrival == "trace" {
@@ -256,14 +266,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.kv_bytes.mean() / 1e6,
         m.kv_bytes_peak as f64 / 1e6,
     );
+    // per-worker utilization vs round wall time: idle workers (dispatch
+    // skew, affinity pile-ups) surface here even when the summed busy
+    // fraction looks healthy
     for (w, ws) in r.worker_stats.iter().enumerate() {
         println!(
             "  worker {w}          admitted {}  finished {}  tokens {}  steps {}  \
-             kv peak {:.2} MB",
+             util {:.0}%  kv peak {:.2} MB",
             ws.admitted,
             ws.finished,
             ws.new_tokens,
             ws.steps,
+            ws.utilization(r.wall_s) * 100.0,
             ws.kv_bytes_peak as f64 / 1e6
         );
     }
@@ -396,7 +410,8 @@ fn main() -> Result<()> {
                  [--policy P] [--budget N] [--batch B] [--kv-budget-mb MB] \
                  [--eviction-policy lru|clock|query-aware|sieve] \
                  [--spill-budget-mb MB] [--spill-dir DIR] [--readahead N] \
-                 [--workers N] [--dispatch round-robin|least-loaded|session-affinity] \
+                 [--workers N] [--threads N] \
+                 [--dispatch round-robin|least-loaded|session-affinity] \
                  [--arrival trace|poisson|gamma] \
                  [--arrival-shape steady|ramp|burst|diurnal] \
                  [--modeled-time] [--deadline-ms D] ..."
@@ -488,6 +503,13 @@ mod tests {
             e.contains("--readahead") && e.contains("--spill-budget-mb"),
             "error must name the expected flag pairing: {e}"
         );
+    }
+
+    #[test]
+    fn zero_threads_is_rejected_with_guidance() {
+        let e = cmd_serve(&args("serve --threads 0")).unwrap_err().to_string();
+        assert!(e.contains("--threads"), "{e}");
+        assert!(e.contains("sequential"), "error explains the 1 case: {e}");
     }
 
     #[test]

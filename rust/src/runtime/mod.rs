@@ -10,10 +10,9 @@
 pub mod manifest;
 pub mod weights;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -41,15 +40,36 @@ pub struct RuntimeStats {
 
 /// A loaded model: PJRT client + resident weight buffers + executable cache.
 ///
-/// Not `Send`: PJRT wrapper types hold raw pointers. Each serving worker
-/// owns its own `ModelRuntime` (single-core box; see util::threadpool docs).
+/// **`Send`, by construction.** Each serving worker owns its own
+/// `ModelRuntime`, and the thread-parallel round executor
+/// (`coordinator::pool::RoundExecutor`) moves that exclusive `&mut`
+/// borrow onto a scoped OS thread for the decode step — so every field
+/// must be `Send`. The PJRT wrappers are (clients and loaded executables
+/// are internally synchronized; buffers and literals are owned payloads).
+/// Strictly, `Send` alone only required the `Rc` -> `Arc` swap
+/// (`RefCell<T>` is `Send` when `T` is); the interior-mutability cells
+/// are `Mutex`es so the runtime is *also* `Sync` — ready to be shared
+/// behind an `Arc` by a future multi-engine/shared-executable-cache
+/// deployment without another refactor. Both locks are uncontended
+/// single-owner today; their cost is noise next to a PJRT call.
+///
+/// Lock protocol: `exes` and `stats` are **leaf locks** — each is taken
+/// for a handful of map/counter operations and released before any PJRT
+/// call, and the two are never held at the same time. In particular
+/// `executable()` compiles *outside* the `exes` lock (a concurrent
+/// compile of the same artifact is a benign duplicated effort, last
+/// insert wins), so no lock is ever held across a potentially slow
+/// runtime call. Nothing in this module calls back into the engine or
+/// store layers while holding either lock, which keeps these locks out
+/// of the store → pool → spill ordering documented in
+/// docs/pagestore_design.md.
 pub struct ModelRuntime {
     pub info: ModelInfo,
     client: xla::PjRtClient,
     weights: ModelWeights,
-    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     root: PathBuf,
-    stats: RefCell<RuntimeStats>,
+    stats: Mutex<RuntimeStats>,
 }
 
 impl ModelRuntime {
@@ -69,18 +89,18 @@ impl ModelRuntime {
             info,
             client,
             weights,
-            exes: RefCell::new(HashMap::new()),
+            exes: Mutex::new(HashMap::new()),
             root: manifest.root.clone(),
-            stats: RefCell::new(RuntimeStats::default()),
+            stats: Mutex::new(RuntimeStats::default()),
         })
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.lock().expect("runtime stats lock").clone()
     }
 
     pub fn reset_stats(&self) {
-        *self.stats.borrow_mut() = RuntimeStats::default();
+        *self.stats.lock().expect("runtime stats lock") = RuntimeStats::default();
     }
 
     pub fn weights(&self) -> &ModelWeights {
@@ -88,9 +108,15 @@ impl ModelRuntime {
     }
 
     /// Compile (or fetch from cache) the executable for an artifact.
-    pub fn executable(&self, art: &ArtifactInfo) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.exes.borrow().get(&art.path) {
-            return Ok(Rc::clone(e));
+    /// Compilation runs with no lock held (see the struct-level lock
+    /// protocol); a racing compile of the same artifact wastes one
+    /// compile, never deadlocks or corrupts the cache.
+    pub fn executable(
+        &self,
+        art: &ArtifactInfo,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.lock().expect("exe cache lock").get(&art.path) {
+            return Ok(Arc::clone(e));
         }
         let t0 = Instant::now();
         let full = self.root.join(&art.path);
@@ -103,9 +129,13 @@ impl ModelRuntime {
             .client
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", art.path))?;
-        self.stats.borrow_mut().compile_seconds += t0.elapsed().as_secs_f64();
-        let rc = Rc::new(exe);
-        self.exes.borrow_mut().insert(art.path.clone(), Rc::clone(&rc));
+        self.stats.lock().expect("runtime stats lock").compile_seconds +=
+            t0.elapsed().as_secs_f64();
+        let rc = Arc::new(exe);
+        self.exes
+            .lock()
+            .expect("exe cache lock")
+            .insert(art.path.clone(), Arc::clone(&rc));
         Ok(rc)
     }
 
@@ -137,7 +167,7 @@ impl ModelRuntime {
                 data.len() * 4,
             ),
         };
-        let mut s = self.stats.borrow_mut();
+        let mut s = self.stats.lock().expect("runtime stats lock");
         s.h2d_bytes += bytes as u64;
         s.upload_seconds += t0.elapsed().as_secs_f64();
         Ok(buf)
@@ -182,7 +212,7 @@ impl ModelRuntime {
         let parts = lit
             .to_tuple()
             .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
-        let mut s = self.stats.borrow_mut();
+        let mut s = self.stats.lock().expect("runtime stats lock");
         s.executions += 1;
         s.exec_seconds += t0.elapsed().as_secs_f64();
         s.d2h_bytes += parts.iter().map(|l| l.size_bytes() as u64).sum::<u64>();
@@ -208,4 +238,18 @@ impl ModelRuntime {
 pub fn literal_into(lit: &xla::Literal, dst: &mut [f32]) -> Result<()> {
     lit.copy_raw_to::<f32>(dst)
         .map_err(|e| anyhow::anyhow!("copy_raw_to: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_is_send_for_per_worker_threads() {
+        // the thread-parallel round executor moves `&mut Engine` (and with
+        // it the runtime) onto scoped threads; this must never regress
+        fn assert_send<T: Send>() {}
+        assert_send::<ModelRuntime>();
+        assert_send::<RuntimeStats>();
+    }
 }

@@ -129,7 +129,13 @@ impl<'a> SelectCtx<'a> {
 }
 
 /// Behaviour shared by all selection strategies.
-pub trait Policy {
+///
+/// `Send` is a supertrait: a policy instance lives inside a `Sequence`,
+/// and sequences cross thread boundaries when the coordinator's round
+/// executor steps each worker's batch on its own OS thread. Policies are
+/// per-sequence state machines (never shared), so plain owned data — all
+/// implementations are `Send` for free.
+pub trait Policy: Send {
     fn kind(&self) -> PolicyKind;
 
     /// Choose pages (table indices, ascending) for this layer's attention.

@@ -732,6 +732,17 @@ fn pallas_seed() -> u64 {
         .unwrap_or(42)
 }
 
+/// Round-executor width for the determinism battery (CI sets
+/// `TINYSERVE_THREADS=4` for the threaded double-run; the cross-executor
+/// gate then diffs those event logs against the sequential runs' — they
+/// must be byte-identical under modeled time).
+fn env_threads() -> usize {
+    std::env::var("TINYSERVE_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
 /// Serialize an event stream for diffing; under `TimeModel::Modeled` the
 /// timestamps are deterministic and included bit-exactly.
 fn event_log(events: &[ServeEvent]) -> String {
@@ -794,6 +805,7 @@ fn openloop_pool_event_stream_is_deterministic() {
         let opts = ServeOptions {
             time_model: TimeModel::Modeled,
             seed,
+            threads: env_threads(),
             ..Default::default()
         };
         let mut plugins = Pipeline::new();
@@ -814,6 +826,92 @@ fn openloop_pool_event_stream_is_deterministic() {
     let b = run();
     assert_eq!(a, b, "same seed, same event stream (timestamps included)");
     write_ci_log("serve_events.log", &a);
+}
+
+#[test]
+fn threaded_rounds_replay_sequential_event_logs_exactly() {
+    // The `--threads N` determinism contract end to end: a 4-worker pool
+    // serving the bursty open-loop mix under modeled time must produce a
+    // *byte-identical* serialized event log (timestamps included) with the
+    // scoped-thread round executor and with sequential stepping. Covered
+    // across all dispatch kinds and eviction policies (each axis swept in
+    // full against a fixed partner to bound runtime) with a distinct seed
+    // per config, under KV-budget pressure so demotion/promotion paths run
+    // inside the parallel step phase.
+    let m = require!(manifest());
+    let base_seed = pallas_seed();
+    let run = |dispatch: DispatchKind,
+               eviction: EvictionPolicyKind,
+               seed: u64,
+               threads: usize,
+               budget_mb: Option<f64>|
+     -> (String, ServeReport) {
+        let cfg = ServingConfig { eviction, ..serve_cfg(budget_mb) };
+        let pool = WorkerPool::build(&m, &cfg, 4, dispatch).expect("pool");
+        let opts = ServeOptions {
+            time_model: TimeModel::Modeled,
+            seed,
+            threads,
+            ..Default::default()
+        };
+        let mut plugins = Pipeline::new();
+        let mut fe = Frontend::builder().options(opts).build_pool(pool, &mut plugins);
+        fe.set_source(Box::new(bursty_openloop(seed)));
+        let mut events = Vec::new();
+        while fe.has_work() {
+            events.extend(fe.step().expect("step"));
+        }
+        let (r, pool) = fe.into_parts();
+        for w in 0..pool.len() {
+            assert_eq!(pool.engine(w).pool.pages_in_use(), 0, "worker {w} leak");
+        }
+        (event_log(&events), r)
+    };
+    // unbounded probe sizes a global budget that forces evictions
+    let (_, probe) = run(
+        DispatchKind::LeastLoaded,
+        EvictionPolicyKind::QueryAware,
+        base_seed,
+        1,
+        None,
+    );
+    assert!(probe.metrics.kv_bytes_peak > 0);
+    let budget_mb = probe.metrics.kv_bytes_peak as f64 * 0.8 / 1e6;
+    let mut configs: Vec<(DispatchKind, EvictionPolicyKind)> = DispatchKind::all()
+        .iter()
+        .map(|&d| (d, EvictionPolicyKind::QueryAware))
+        .collect();
+    configs.extend(
+        EvictionPolicyKind::all()
+            .iter()
+            .filter(|&&e| e != EvictionPolicyKind::QueryAware)
+            .map(|&e| (DispatchKind::LeastLoaded, e)),
+    );
+    let mut threaded_log = String::new();
+    for (i, &(dispatch, eviction)) in configs.iter().enumerate() {
+        let seed = base_seed + i as u64;
+        let (log_seq, r_seq) = run(dispatch, eviction, seed, 1, Some(budget_mb));
+        let (log_par, r_par) = run(dispatch, eviction, seed, 4, Some(budget_mb));
+        assert_eq!(
+            log_seq,
+            log_par,
+            "[{} / {} / seed {seed}] threaded rounds diverged from sequential",
+            dispatch.name(),
+            eviction.name()
+        );
+        assert_eq!(r_seq.metrics.total_requests, r_par.metrics.total_requests);
+        assert_eq!(r_seq.metrics.total_new_tokens, r_par.metrics.total_new_tokens);
+        for (ws, wp) in r_seq.worker_stats.iter().zip(r_par.worker_stats.iter()) {
+            assert_eq!(ws.new_tokens, wp.new_tokens);
+            assert_eq!(ws.steps, wp.steps);
+            assert!(
+                (ws.busy_s - wp.busy_s).abs() < 1e-12,
+                "virtual per-worker busy time is executor-independent"
+            );
+        }
+        threaded_log = log_par;
+    }
+    write_ci_log("serve_events_threads4.log", &threaded_log);
 }
 
 #[test]

@@ -723,30 +723,105 @@ fn prop_spill_roundtrip_is_bit_exact_across_policies_and_dtypes() {
     });
 }
 
+/// Shared worker body for the concurrent store->pool->spill regressions:
+/// hammer one worker's private three-tier stack through the
+/// enforce/promote/fault cascade for `rounds` rounds, assert its leak
+/// invariants, and return `(spill_outs, faults)`. One copy of the
+/// workload, driven below by both raw `thread::spawn` and the round
+/// executor — a change to the store API or the invariants lands in both
+/// harnesses at once.
+fn spill_hammer(w: u64, dir: std::path::PathBuf, rounds: usize) -> (u64, u64) {
+    let mut pool = PagePool::new(2, 8, 4, KvDtype::F32);
+    let budget = pool.page_bytes();
+    let mut store = PageStore::with_spill(
+        Some(budget),
+        EvictionPolicyKind::Lru,
+        SpillConfig::new(dir, 1 << 20),
+    )
+    .expect("spill store");
+    let mut rng = tinyserve::util::rng::Rng::new(0xC0FFEE ^ w);
+    let mut live: Vec<u32> = Vec::new();
+    for round in 0..rounds {
+        let id = store.alloc(&mut pool);
+        for slot in 0..4 {
+            for l in 0..2 {
+                let v = rng.normal() as f32;
+                pool.write_token(id, slot, l, &[v; 8], &[v; 8]);
+            }
+        }
+        live.push(id);
+        store.enforce_budget(&mut pool);
+        // promote a random resident page (faults disk pages)
+        let pick = live[rng.usize(live.len())];
+        store.ensure_hot(&mut pool, pick).expect("fault");
+        store.enforce_budget(&mut pool);
+        if round % 3 == 0 && live.len() > 2 {
+            let i = rng.usize(live.len());
+            pool.release(live.swap_remove(i));
+            store.sync(&pool);
+        }
+    }
+    let stats = store.stats.clone();
+    for id in live {
+        pool.release(id);
+    }
+    store.sync(&pool);
+    assert_eq!(store.spill_bytes(), 0, "worker {w} leaked spill bytes");
+    assert_eq!(pool.pages_in_use(), 0, "worker {w} leaked pages");
+    (stats.spill_outs, stats.faults)
+}
+
 #[test]
 fn two_workers_concurrent_enforce_promote_without_deadlock() {
-    // Lock-ordering regression for shared-pool multi-engine workers (see
-    // docs/pagestore_design.md): each worker owns its store -> pool ->
-    // spill stack and acquires strictly in that order, never touching
-    // another worker's; two workers hammering the enforce/promote cascade
-    // concurrently must run to completion with both tiers exercised.
-    // A deadlock shows up as this test hanging; a panic as a join error.
+    // Concurrency regression for per-worker store -> pool -> spill stacks
+    // (see docs/pagestore_design.md): each worker owns its stack
+    // exclusively, so two workers hammering the enforce/promote cascade
+    // concurrently must run to completion with both tiers exercised. This
+    // pins the *exclusive-ownership* contract that makes the stack
+    // lock-free — it cannot detect an ordering bug in a future
+    // shared-pool mutex protocol, which will need its own battery. A
+    // regression (accidental cross-worker sharing, a lock added to one
+    // layer) shows up as this test hanging; a panic as a join error.
     let root = default_spill_root();
     let handles: Vec<_> = (0..2u64)
         .map(|w| {
             let dir = root.join(format!("worker-{w}"));
-            std::thread::spawn(move || {
+            std::thread::spawn(move || spill_hammer(w, dir, 200))
+        })
+        .collect();
+    for (w, h) in handles.into_iter().enumerate() {
+        let (spill_outs, faults) = h.join().expect("worker thread panicked");
+        assert!(spill_outs > 0, "worker {w} never spilled to disk");
+        assert!(faults > 0, "worker {w} never faulted a page back");
+    }
+}
+
+#[test]
+fn prop_round_executor_threaded_matches_sequential() {
+    // The round-executor determinism contract at the store level: the same
+    // per-worker workload (own PagePool + PageStore, seeded ops over the
+    // enforce/promote cascade) must produce byte-identical digests whether
+    // the workers run sequentially or chunked over 2/4/8 scoped threads,
+    // in the same (ascending-worker) result order, for every eviction
+    // policy. This is the engine-free core of the `--threads N` ==
+    // `--threads 1` event-log guarantee (the full frontend version is the
+    // artifact-gated integration test).
+    use tinyserve::coordinator::pool::{execute_round, RoundExecutor};
+    prop_check("round_executor_equivalence", 30, |ctx| {
+        let n_workers = 1 + ctx.rng.usize(4);
+        let policy =
+            EvictionPolicyKind::all()[ctx.rng.usize(EvictionPolicyKind::all().len())];
+        let seeds: Vec<u64> = (0..n_workers).map(|_| ctx.rng.next_u64()).collect();
+        let n_rounds = ctx.scaled(5, 60);
+        let digest = |exec: RoundExecutor| -> Vec<(usize, String)> {
+            let work: Vec<(usize, u64)> = seeds.iter().cloned().enumerate().collect();
+            execute_round(exec, work, &|w, seed: u64| {
                 let mut pool = PagePool::new(2, 8, 4, KvDtype::F32);
-                let budget = pool.page_bytes();
-                let mut store = PageStore::with_spill(
-                    Some(budget),
-                    EvictionPolicyKind::Lru,
-                    SpillConfig::new(dir, 1 << 20),
-                )
-                .expect("spill store");
-                let mut rng = tinyserve::util::rng::Rng::new(0xC0FFEE ^ w);
+                let budget = 2 * pool.page_bytes();
+                let mut store = PageStore::new(Some(budget), policy);
+                let mut rng = tinyserve::util::rng::Rng::new(seed);
                 let mut live: Vec<u32> = Vec::new();
-                for round in 0..200 {
+                for _ in 0..n_rounds {
                     let id = store.alloc(&mut pool);
                     for slot in 0..4 {
                         for l in 0..2 {
@@ -756,29 +831,71 @@ fn two_workers_concurrent_enforce_promote_without_deadlock() {
                     }
                     live.push(id);
                     store.enforce_budget(&mut pool);
-                    // promote a random resident page (faults disk pages)
                     let pick = live[rng.usize(live.len())];
-                    store.ensure_hot(&mut pool, pick).expect("fault");
-                    store.enforce_budget(&mut pool);
-                    if round % 3 == 0 && live.len() > 2 {
+                    store.ensure_hot(&mut pool, pick).expect("promote");
+                    if live.len() > 3 && rng.bool(0.3) {
                         let i = rng.usize(live.len());
                         pool.release(live.swap_remove(i));
                         store.sync(&pool);
                     }
                 }
-                let stats = store.stats.clone();
+                let (hot, cold, disk) = store.tier_residency();
+                let s = &store.stats;
+                let out = format!(
+                    "w{w} hot{hot} cold{cold} disk{disk} hit{} miss{} dem{} pro{} \
+                     bytes{}",
+                    s.hits,
+                    s.misses,
+                    s.demotions,
+                    s.promotions,
+                    store.bytes_in_use(&pool)
+                );
                 for id in live {
                     pool.release(id);
                 }
-                store.sync(&pool);
-                assert_eq!(store.spill_bytes(), 0, "worker {w} leaked spill bytes");
-                assert_eq!(pool.pages_in_use(), 0, "worker {w} leaked pages");
-                (stats.spill_outs, stats.faults)
+                out
             })
-        })
+        };
+        let base = digest(RoundExecutor::Sequential);
+        let order: Vec<usize> = base.iter().map(|(w, _)| *w).collect();
+        if order != (0..n_workers).collect::<Vec<_>>() {
+            return Err(format!("sequential order drifted: {order:?}"));
+        }
+        for threads in [2usize, n_workers.max(2), 8] {
+            let got = digest(RoundExecutor::Threaded { threads });
+            if got != base {
+                return Err(format!(
+                    "[{}] threads={threads} diverged:\n{got:?}\n!=\n{base:?}",
+                    policy.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn round_executor_concurrent_spill_stacks_without_deadlock() {
+    // Concurrency stress for the threaded step phase: four workers run
+    // the same spill_hammer workload *through the executor* (the exact
+    // code path `--threads 4` serving takes), concurrently driving
+    // enforce_budget / ensure_hot cascades against per-worker spill
+    // directory slices. Like the raw-thread variant above, this pins the
+    // exclusive-ownership contract (each worker's whole store -> pool ->
+    // spill stack moves onto its thread with no cross-worker sharing);
+    // a regression shows up as this test hanging or a join panic.
+    use tinyserve::coordinator::pool::{execute_round, RoundExecutor};
+    let root = default_spill_root();
+    let work: Vec<(usize, std::path::PathBuf)> = (0..4usize)
+        .map(|w| (w, root.join(format!("worker-{w}"))))
         .collect();
-    for (w, h) in handles.into_iter().enumerate() {
-        let (spill_outs, faults) = h.join().expect("worker thread panicked");
+    let results = execute_round(
+        RoundExecutor::Threaded { threads: 4 },
+        work,
+        &|w, dir: std::path::PathBuf| spill_hammer(w as u64, dir, 150),
+    );
+    assert_eq!(results.len(), 4);
+    for (w, (spill_outs, faults)) in results {
         assert!(spill_outs > 0, "worker {w} never spilled to disk");
         assert!(faults > 0, "worker {w} never faulted a page back");
     }

@@ -11,10 +11,18 @@
 use std::fmt;
 use std::marker::PhantomData;
 
-/// Raw-pointer marker: the real PJRT wrappers are `!Send + !Sync`, and
-/// code is written against that (one runtime per worker) — keep the stub
-/// honest so threading bugs can't creep in silently.
-type NotSend = PhantomData<*const ()>;
+/// Raw-pointer marker suppressing the auto traits, so every wrapper's
+/// thread-safety is an *explicit, documented decision* below rather than
+/// an accident of field types. The real PJRT C++ objects behind these
+/// wrappers are internally synchronized: `PjRtClient` and
+/// `PjRtLoadedExecutable` are documented thread-safe (compilation and
+/// execution may be issued from any thread), while buffers and literals
+/// are plain owned data that may *move* between threads but are not
+/// synchronized for shared mutation. The stub mirrors exactly that
+/// contract — `Send` everywhere, `Sync` only where PJRT guarantees it —
+/// so the thread-parallel worker stepping in `coordinator::pool` is
+/// type-checked against the same bounds a real binding would impose.
+type RawHandle = PhantomData<*const ()>;
 
 #[derive(Debug)]
 pub enum Error {
@@ -53,28 +61,44 @@ impl NativeType for f32 {}
 impl NativeType for i32 {}
 
 pub struct PjRtClient {
-    _not_send: NotSend,
+    _handle: RawHandle,
 }
 
 pub struct PjRtBuffer {
-    _not_send: NotSend,
+    _handle: RawHandle,
 }
 
 pub struct PjRtLoadedExecutable {
-    _not_send: NotSend,
+    _handle: RawHandle,
 }
 
 pub struct Literal {
-    _not_send: NotSend,
+    _handle: RawHandle,
 }
 
 pub struct HloModuleProto {
-    _not_send: NotSend,
+    _handle: RawHandle,
 }
 
 pub struct XlaComputation {
-    _not_send: NotSend,
+    _handle: RawHandle,
 }
+
+// Thread-safety contract (see `RawHandle` docs). PJRT clients and loaded
+// executables are internally synchronized by the runtime, so they may be
+// both moved across and shared between threads — which is what lets
+// `runtime::ModelRuntime` cache executables in `Arc`s. Buffers, literals
+// and HLO protos are owned payloads: movable (`Send`) but accessed from
+// one thread at a time (`!Sync`), matching how the engine uses them
+// (per-call uploads and results that never outlive a decode step).
+unsafe impl Send for PjRtClient {}
+unsafe impl Sync for PjRtClient {}
+unsafe impl Send for PjRtLoadedExecutable {}
+unsafe impl Sync for PjRtLoadedExecutable {}
+unsafe impl Send for PjRtBuffer {}
+unsafe impl Send for Literal {}
+unsafe impl Send for HloModuleProto {}
+unsafe impl Send for XlaComputation {}
 
 impl PjRtClient {
     pub fn cpu() -> Result<PjRtClient> {
@@ -133,7 +157,7 @@ impl HloModuleProto {
 
 impl XlaComputation {
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
-        XlaComputation { _not_send: PhantomData }
+        XlaComputation { _handle: PhantomData }
     }
 }
 
@@ -148,5 +172,19 @@ mod tests {
         assert!(format!("{e:?}").contains("Unavailable"));
         let proto = HloModuleProto::from_text_file("x");
         assert!(proto.is_err());
+    }
+
+    #[test]
+    fn thread_safety_contract_is_exactly_as_documented() {
+        fn send<T: Send>() {}
+        fn send_sync<T: Send + Sync>() {}
+        // internally synchronized by PJRT: shareable
+        send_sync::<PjRtClient>();
+        send_sync::<PjRtLoadedExecutable>();
+        // owned payloads: movable only
+        send::<PjRtBuffer>();
+        send::<Literal>();
+        send::<HloModuleProto>();
+        send::<XlaComputation>();
     }
 }
