@@ -74,8 +74,13 @@ use anyhow::Result;
 
 use crate::engine::{Engine, SampleOut, Sequence};
 use crate::hwmodel::{HwModel, Shape};
+use crate::kvcache::store::StoreTraceEvent;
 use crate::metrics::{RequestRecord, ServerMetrics, StepMetrics};
 use crate::plugins::{Pipeline, PluginAction, StepView};
+use crate::trace::{
+    MetricsRegistry, PhaseProfile, RunHeader, SpanCtx, TraceEvent, TraceSink,
+    Tracer,
+};
 use crate::util::rng::Rng;
 use crate::workload::{tasks, Request, RequestSource};
 
@@ -217,12 +222,43 @@ impl ServeEvent {
     }
 }
 
+/// Schema version of the serialized `TINYSERVE_EVENT_LOG` format (the
+/// [`event_log_header`] line carries it). Bump on any `ServeEvent::sig`
+/// format change so archived logs stay self-describing.
+pub const EVENT_LOG_SCHEMA: u64 = 1;
+
+/// Run-identifying first line for serialized event logs: schema version
+/// plus the knobs that shaped the stream. The header itself is versioned,
+/// so double-run determinism diffs stay byte-stable — identical
+/// configurations produce identical headers, and a schema bump changes the
+/// first line of every log loudly instead of silently. Cross-executor
+/// diffs (`--threads 1` vs `--threads 4`) must skip this line: the body is
+/// executor-independent by contract, the header records the executor.
+pub fn event_log_header(
+    seed: u64,
+    threads: usize,
+    workers: usize,
+    policy: &str,
+    budget_mb: Option<f64>,
+) -> String {
+    let budget = match budget_mb {
+        Some(mb) => format!("{mb}mb"),
+        None => "unbounded".to_string(),
+    };
+    format!(
+        "# tinyserve-event-log v{EVENT_LOG_SCHEMA} seed={seed} \
+         threads={threads} workers={workers} policy={policy} budget={budget}"
+    )
+}
+
 /// Builder for `Frontend` (serving config lives in the engine; coordination
 /// behaviour in `ServeOptions`).
 #[derive(Default)]
 pub struct FrontendBuilder {
     opts: ServeOptions,
     source: Option<Box<dyn RequestSource>>,
+    tracer: Option<Tracer>,
+    metrics_sink: Option<Box<dyn TraceSink>>,
 }
 
 impl FrontendBuilder {
@@ -235,6 +271,22 @@ impl FrontendBuilder {
     /// arrivals from it against the virtual clock.
     pub fn source(mut self, src: Box<dyn RequestSource>) -> Self {
         self.source = Some(src);
+        self
+    }
+
+    /// Attach a span tracer (`--trace-out`): the frontend emits the run
+    /// header, turns on per-worker store tier-transition buffering, and
+    /// streams one JSONL span event per lifecycle transition.
+    pub fn tracer(mut self, tracer: Tracer) -> Self {
+        self.tracer = Some(tracer);
+        self
+    }
+
+    /// Attach a metrics time-series sink (`--metrics-every` +
+    /// `--metrics-out`): registry snapshots land here every N committed
+    /// decode rounds.
+    pub fn metrics_sink(mut self, sink: Box<dyn TraceSink>) -> Self {
+        self.metrics_sink = Some(sink);
         self
     }
 
@@ -258,6 +310,12 @@ impl FrontendBuilder {
     ) -> Frontend<'a> {
         let mut fe = Frontend::new_with_pool(pool, self.opts, plugins);
         fe.source = self.source;
+        if let Some(t) = self.tracer {
+            fe.set_tracer(t);
+        }
+        if let Some(s) = self.metrics_sink {
+            fe.set_metrics_sink(s);
+        }
         fe
     }
 }
@@ -315,6 +373,16 @@ pub struct Frontend<'a> {
     pending: VecDeque<usize>,
     /// live arrival source, polled by the pump against the virtual clock
     source: Option<Box<dyn RequestSource>>,
+    /// span tracer (`Tracer::off()` unless a sink is attached); every hook
+    /// is guarded by `enabled()`, so serving untraced pays one branch
+    tracer: Tracer,
+    /// metrics time-series sink (`--metrics-every`); snapshots emitted at
+    /// decode-round commit points
+    metrics_sink: Option<Box<dyn TraceSink>>,
+    /// committed decode rounds so far (trace round ids, snapshot cadence)
+    round_idx: u64,
+    /// executor phase profile (`ServeOptions::profile`)
+    profile: Option<PhaseProfile>,
     events: VecDeque<ServeEvent>,
     per_task: HashMap<&'static str, (f64, f64, usize)>,
     exact_hits: usize,
@@ -363,6 +431,7 @@ impl<'a> Frontend<'a> {
         let worker_rngs = (0..n).map(|w| seed_rng.fork(w as u64)).collect();
         let sessions = (0..n).map(|_| SessionStore::new(opts.max_sessions)).collect();
         let router = Router::new(opts.n_workers);
+        let profile = opts.profile.then(|| PhaseProfile::new(n));
         Frontend {
             pool,
             plugins,
@@ -380,6 +449,10 @@ impl<'a> Frontend<'a> {
             id_to_idx: HashMap::new(),
             pending: VecDeque::new(),
             source: None,
+            tracer: Tracer::off(),
+            metrics_sink: None,
+            round_idx: 0,
+            profile,
             events: VecDeque::new(),
             per_task: HashMap::new(),
             exact_hits: 0,
@@ -391,6 +464,75 @@ impl<'a> Frontend<'a> {
     /// Attach (or replace) a live request source mid-run.
     pub fn set_source(&mut self, src: Box<dyn RequestSource>) {
         self.source = Some(src);
+    }
+
+    /// Attach a span tracer. An enabled tracer emits the run-header line
+    /// immediately and turns on per-worker store tier-transition
+    /// buffering (drained serially at prefill and commit points, so
+    /// multi-threaded rounds serialize deterministically).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+        if self.tracer.enabled() {
+            let header = self.run_header().to_line();
+            self.tracer.emit_line(&header);
+            for w in 0..self.pool.len() {
+                self.pool.engine_mut(w).store.set_trace(true);
+            }
+        }
+    }
+
+    /// Attach the metrics time-series sink; the run header is its first
+    /// line, so a snapshot stream is self-describing like a trace.
+    pub fn set_metrics_sink(&mut self, mut sink: Box<dyn TraceSink>) {
+        sink.emit(&self.run_header().to_line());
+        self.metrics_sink = Some(sink);
+    }
+
+    /// Run-identifying header shared by the trace and metrics streams.
+    /// Deliberately carries no thread count: under modeled time both
+    /// streams are executor-independent, and CI diffs `--threads 1`
+    /// output against `--threads 4` byte-for-byte.
+    fn run_header(&self) -> RunHeader {
+        let cfg = &self.pool.engine(0).cfg;
+        let budget = self.pool.total_budget_bytes().unwrap_or(0) as u64;
+        RunHeader {
+            seed: self.opts.seed,
+            workers: self.pool.len(),
+            policy: cfg.policy.name().to_string(),
+            eviction: cfg.eviction.name().to_string(),
+            budget_bytes: budget,
+            time: self.opts.time_model.name().to_string(),
+        }
+    }
+
+    /// Serialize worker `w`'s buffered store tier-transitions into the
+    /// trace, anchored to the enclosing span. Call order (worker order at
+    /// commit, admission order at prefill) is fixed, so the interleaving
+    /// is identical however the step phase executed.
+    fn drain_store_trace(&mut self, w: usize, ctx: SpanCtx) {
+        if !self.tracer.enabled() {
+            return;
+        }
+        for ev in self.pool.engine_mut(w).store.take_trace() {
+            let te = match ev {
+                StoreTraceEvent::Demote { page } => {
+                    TraceEvent::Demote { ctx, worker: w, page: page as u64 }
+                }
+                StoreTraceEvent::SpillOut { page } => {
+                    TraceEvent::SpillOut { ctx, worker: w, page: page as u64 }
+                }
+                StoreTraceEvent::Fault { page, src } => TraceEvent::SpillFault {
+                    ctx,
+                    worker: w,
+                    page: page as u64,
+                    src: src.name(),
+                },
+                StoreTraceEvent::Readahead { bytes } => {
+                    TraceEvent::Readahead { ctx, worker: w, bytes }
+                }
+            };
+            self.tracer.emit(&te);
+        }
     }
 
     /// Current virtual time.
@@ -497,6 +639,9 @@ impl<'a> Frontend<'a> {
         self.state[idx] = Lifecycle::Cancelled;
         self.metrics.on_cancelled();
         self.events.push_back(ServeEvent::Cancelled { id, t: now });
+        if self.tracer.enabled() {
+            self.tracer.emit(&TraceEvent::Cancelled { id, t: now });
+        }
         true
     }
 
@@ -533,6 +678,10 @@ impl<'a> Frontend<'a> {
     /// run — the owned-pool analogue of keeping your `&mut Engine`.
     pub fn into_parts(mut self) -> (ServeReport, WorkerPool<'a>) {
         self.metrics.run_seconds = self.clock.now();
+        self.tracer.flush();
+        if let Some(s) = self.metrics_sink.as_mut() {
+            s.flush();
+        }
         for w in 0..self.pool.len() {
             let pool = &mut self.pool;
             let sessions = &mut self.sessions;
@@ -573,6 +722,7 @@ impl<'a> Frontend<'a> {
             wall_s: now,
             busy_frac: if now > 0.0 { busy / now } else { 0.0 },
             worker_stats: self.pool.stats.clone(),
+            profile: self.profile,
         };
         (report, self.pool)
     }
@@ -596,6 +746,12 @@ impl<'a> Frontend<'a> {
             }
             self.pending.pop_front();
             self.state[idx] = Lifecycle::Queued;
+            if self.tracer.enabled() {
+                self.tracer.emit(&TraceEvent::Queued {
+                    id: self.reqs[idx].id,
+                    t: self.reqs[idx].arrival_s,
+                });
+            }
             self.batcher.enqueue(QueuedItem {
                 request_idx: idx,
                 arrival_s: self.reqs[idx].arrival_s,
@@ -633,6 +789,16 @@ impl<'a> Frontend<'a> {
             Round::Decode => self.decode_round()?,
         }
         Ok(())
+    }
+
+    /// Record an admission bounce: lifecycle, serve event, trace span.
+    fn mark_deferred(&mut self, idx: usize) {
+        self.state[idx] = Lifecycle::Deferred;
+        let (id, t) = (self.reqs[idx].id, self.clock.now());
+        self.events.push_back(ServeEvent::Deferred { id, t });
+        if self.tracer.enabled() {
+            self.tracer.emit(&TraceEvent::Deferred { id, t });
+        }
     }
 
     /// True when `idx` carries a deadline that has already elapsed.
@@ -694,10 +860,11 @@ impl<'a> Frontend<'a> {
                 self.batcher.abort_admission(1);
                 self.state[idx] = Lifecycle::Expired;
                 self.metrics.on_expired();
-                self.events.push_back(ServeEvent::DeadlineExpired {
-                    id: self.reqs[idx].id,
-                    t: self.clock.now(),
-                });
+                let (id, t) = (self.reqs[idx].id, self.clock.now());
+                self.events.push_back(ServeEvent::DeadlineExpired { id, t });
+                if self.tracer.enabled() {
+                    self.tracer.emit(&TraceEvent::Expired { id, t });
+                }
                 continue;
             }
             let prompt_len = self.reqs[idx].prompt.len();
@@ -718,11 +885,7 @@ impl<'a> Frontend<'a> {
                 None => self.pool.dispatch_worker(session),
             };
             if blocked[w] {
-                self.state[idx] = Lifecycle::Deferred;
-                self.events.push_back(ServeEvent::Deferred {
-                    id: self.reqs[idx].id,
-                    t: self.clock.now(),
-                });
+                self.mark_deferred(idx);
                 deferred.push(item);
                 continue;
             }
@@ -734,11 +897,7 @@ impl<'a> Frontend<'a> {
                 self.active.iter().filter(|a| a.engine_idx == w).count();
             if worker_active >= self.pool.engine(w).cfg.max_active {
                 blocked[w] = true;
-                self.state[idx] = Lifecycle::Deferred;
-                self.events.push_back(ServeEvent::Deferred {
-                    id: self.reqs[idx].id,
-                    t: self.clock.now(),
-                });
+                self.mark_deferred(idx);
                 deferred.push(item);
                 continue;
             }
@@ -755,11 +914,7 @@ impl<'a> Frontend<'a> {
             let worker_busy = self.active.iter().any(|a| a.engine_idx == w);
             if !self.pool.engine_mut(w).kv_admission_ok(prompt_len) && worker_busy {
                 blocked[w] = true;
-                self.state[idx] = Lifecycle::Deferred;
-                self.events.push_back(ServeEvent::Deferred {
-                    id: self.reqs[idx].id,
-                    t: self.clock.now(),
-                });
+                self.mark_deferred(idx);
                 deferred.push(item);
                 continue;
             }
@@ -796,6 +951,13 @@ impl<'a> Frontend<'a> {
                 id: self.reqs[idx].id,
                 t: self.clock.now(),
             });
+            if self.tracer.enabled() {
+                self.tracer.emit(&TraceEvent::Admitted {
+                    id: self.reqs[idx].id,
+                    worker: w,
+                    t: self.clock.now(),
+                });
+            }
             // prefill the (remaining) prompt, measured or modeled
             let to_prefill = seq.pending().saturating_sub(1);
             let mut m = StepMetrics::default();
@@ -819,6 +981,7 @@ impl<'a> Frontend<'a> {
                     Self::modeled_prefill_s(self.pool.engine(w), to_prefill)
                 }
             };
+            let prefill_t0 = self.clock.now();
             self.clock.advance(dt);
             self.pool.stats[w].busy_s += dt;
             // snapshot the prompt prefix for future session turns
@@ -837,6 +1000,19 @@ impl<'a> Frontend<'a> {
             // back under the budget before decoding resumes
             self.pool.engine_mut(w).enforce_kv_budget();
             self.pool.note_kv_peak(w);
+            if self.tracer.enabled() {
+                let id = self.reqs[idx].id;
+                self.tracer.emit(&TraceEvent::Prefill {
+                    id,
+                    worker: w,
+                    t0: prefill_t0,
+                    t1: self.clock.now(),
+                });
+                // store activity during this admission (session eviction,
+                // prefill allocation, budget enforcement) anchors to the
+                // prefill span
+                self.drain_store_trace(w, SpanCtx::Prefill { id });
+            }
             self.pool.stats[w].admitted += 1;
             // rotation advances only for placements the dispatch policy
             // made (holder-routed sessions are not rotation decisions)
@@ -886,10 +1062,11 @@ impl<'a> Frontend<'a> {
                 self.abort_active(i);
                 self.state[idx] = Lifecycle::Expired;
                 self.metrics.on_expired();
-                self.events.push_back(ServeEvent::DeadlineExpired {
-                    id: self.reqs[idx].id,
-                    t: now,
-                });
+                let id = self.reqs[idx].id;
+                self.events.push_back(ServeEvent::DeadlineExpired { id, t: now });
+                if self.tracer.enabled() {
+                    self.tracer.emit(&TraceEvent::Expired { id, t: now });
+                }
             } else {
                 i += 1;
             }
@@ -905,9 +1082,11 @@ impl<'a> Frontend<'a> {
         if self.active.is_empty() {
             return Ok(());
         }
+        let t_dispatch = std::time::Instant::now();
         let plan = self.plan_round();
+        let dispatch_s = t_dispatch.elapsed().as_secs_f64();
         let stepped = self.step_round(&plan);
-        self.commit_round(plan, stepped)
+        self.commit_round(plan, stepped, dispatch_s)
     }
 
     /// Dispatch phase (pure): which active-set indices step on which
@@ -988,11 +1167,16 @@ impl<'a> Frontend<'a> {
         &mut self,
         plan: RoundPlan,
         stepped: Vec<(usize, Result<WorkerStepOut>)>,
+        dispatch_s: f64,
     ) -> Result<()> {
+        let t_commit = std::time::Instant::now();
+        let round_t0 = self.clock.now();
         let mut merged = StepMetrics::default();
         let mut round_dt = 0.0f64;
         let mut rounds: Vec<(usize, Vec<usize>, Vec<SampleOut>)> = Vec::new();
         let mut first_err: Option<anyhow::Error> = None;
+        // (worker, measured step wall) pairs for the phase profile
+        let mut step_walls: Vec<(usize, f64)> = Vec::new();
         for ((w, idxs), (sw, res)) in plan.batches.into_iter().zip(stepped) {
             debug_assert_eq!(w, sw, "step results follow the plan order");
             let (m, outs) = match res {
@@ -1007,6 +1191,13 @@ impl<'a> Frontend<'a> {
                     // releases their pages as usual.
                     let eng = self.pool.engine_mut(w);
                     eng.store.unpin_all();
+                    // whatever tier transitions the failed step performed
+                    // still happened: drain them so they cannot leak into
+                    // the next round's span
+                    self.drain_store_trace(
+                        w,
+                        SpanCtx::Round { round: self.round_idx },
+                    );
                     if first_err.is_none() {
                         first_err =
                             Some(e.context(format!("decode step on worker {w}")));
@@ -1026,10 +1217,31 @@ impl<'a> Frontend<'a> {
                 }
             };
             self.pool.stats[w].busy_s += dt_w;
+            self.pool.stats[w].step_wall_s += m.step_seconds;
+            step_walls.push((w, m.step_seconds));
             round_dt = round_dt.max(dt_w);
             self.pool.stats[w].steps += 1;
             self.pool.stats[w].new_tokens += outs.len() as u64;
             self.pool.note_kv_peak(w);
+            if self.tracer.enabled() {
+                // this worker's slice of the round spans [round_t0,
+                // round_t0 + its own virtual step price]; the clock itself
+                // advances by the slowest worker below
+                self.tracer.emit(&TraceEvent::Round {
+                    round: self.round_idx,
+                    worker: w,
+                    ids: idxs
+                        .iter()
+                        .map(|&i| self.reqs[self.active[i].req_idx].id)
+                        .collect(),
+                    t0: round_t0,
+                    t1: round_t0 + dt_w,
+                });
+                self.drain_store_trace(
+                    w,
+                    SpanCtx::Round { round: self.round_idx },
+                );
+            }
             merged.merge(&m);
             rounds.push((w, idxs, outs));
         }
@@ -1038,6 +1250,9 @@ impl<'a> Frontend<'a> {
         // sequential path bailed before on_step too)
         if !rounds.is_empty() {
             self.metrics.on_step(&merged);
+            // the round's virtual duration over its tokens: the bucketed
+            // deterministic per-token latency
+            self.metrics.on_round_dt(round_dt, merged.batch);
         }
         let now = self.clock.now();
         // token events + plugins + first-token bookkeeping, in worker
@@ -1112,6 +1327,9 @@ impl<'a> Frontend<'a> {
                     session_reused_tokens: a.reused_tokens,
                 };
                 self.metrics.on_request(&rec);
+                if self.tracer.enabled() {
+                    self.tracer.emit(&TraceEvent::Finished { id: rec.id, t: now });
+                }
                 self.events.push_back(ServeEvent::Finished(rec.clone()));
                 self.records.push(rec);
                 self.state[idx] = Lifecycle::Finished;
@@ -1124,10 +1342,68 @@ impl<'a> Frontend<'a> {
                 i += 1;
             }
         }
+        self.round_idx += 1;
+        // periodic metrics snapshot: a schema-versioned JSONL line every N
+        // committed rounds (deterministic values only, so the stream
+        // double-run-diffs like the trace)
+        if self.opts.metrics_every > 0
+            && self.metrics_sink.is_some()
+            && self.round_idx % self.opts.metrics_every as u64 == 0
+        {
+            let line = self
+                .metrics_registry()
+                .snapshot_line(self.round_idx, self.clock.now());
+            if let Some(s) = self.metrics_sink.as_mut() {
+                s.emit(&line);
+            }
+        }
+        if self.profile.is_some() {
+            let commit_s = t_commit.elapsed().as_secs_f64();
+            let round = self.round_idx - 1;
+            if self.tracer.enabled() {
+                self.tracer.emit_line(&PhaseProfile::round_line(
+                    round, dispatch_s, &step_walls, commit_s,
+                ));
+            }
+            if let Some(p) = self.profile.as_mut() {
+                p.on_round(dispatch_s, &step_walls, commit_s);
+            }
+        }
         match first_err {
             Some(e) => Err(e),
             None => Ok(()),
         }
+    }
+
+    /// Publish the run's aggregation state into a fresh registry. Only
+    /// modeled-deterministic values go in (virtual-clock prices, counters,
+    /// virtual-time histograms) — wall-measured signals like
+    /// `step_latency` or the phase profile are exported through the
+    /// Prometheus dump and `--profile` table instead, never through the
+    /// double-run-diffed JSONL stream.
+    pub fn metrics_registry(&self) -> MetricsRegistry {
+        let m = &self.metrics;
+        let mut r = MetricsRegistry::new();
+        r.counter("steps", m.total_steps);
+        r.counter("new_tokens", m.total_new_tokens);
+        r.counter("requests_finished", m.total_requests);
+        r.counter("requests_cancelled", m.total_cancelled);
+        r.counter("requests_expired", m.total_expired);
+        r.counter("gather_bytes", m.total_gather_bytes);
+        r.counter("demotions", m.total_demotions);
+        r.counter("promotions", m.total_promotions);
+        r.counter("spill_out_bytes", m.total_spill_out_bytes);
+        r.counter("spill_in_bytes", m.total_spill_in_bytes);
+        r.counter("disk_faults", m.total_disk_faults);
+        r.counter("readahead_hits", m.total_readahead_hits);
+        r.counter("budget_violations", m.budget_violations);
+        r.gauge("kv_bytes_in_use", self.pool.total_kv_bytes() as f64);
+        r.gauge("kv_bytes_peak", m.kv_bytes_peak as f64);
+        r.gauge("active_requests", self.active.len() as f64);
+        r.gauge("queued_requests", self.batcher.queue_len() as f64);
+        r.histogram("ttft_seconds", &m.ttft_hist);
+        r.histogram("token_latency_seconds", &m.token_lat_hist);
+        r
     }
 }
 
@@ -1177,6 +1453,19 @@ mod tests {
             session_reused_tokens: 0,
         };
         assert_eq!(ServeEvent::Finished(rec).id(), 11);
+    }
+
+    #[test]
+    fn event_log_header_is_versioned_and_stable() {
+        let h = event_log_header(42, 4, 2, "tinyserve", Some(256.0));
+        assert_eq!(
+            h,
+            "# tinyserve-event-log v1 seed=42 threads=4 workers=2 \
+             policy=tinyserve budget=256mb"
+        );
+        let h = event_log_header(7, 1, 1, "full", None);
+        assert!(h.ends_with("budget=unbounded"));
+        assert!(h.contains(&format!("v{EVENT_LOG_SCHEMA} ")));
     }
 
     #[test]

@@ -14,7 +14,8 @@ pub mod session;
 
 pub use batcher::{Batcher, BatcherConfig, Round};
 pub use frontend::{
-    Clock, Frontend, FrontendBuilder, Lifecycle, RequestHandle, ServeEvent,
+    event_log_header, Clock, Frontend, FrontendBuilder, Lifecycle,
+    RequestHandle, ServeEvent, EVENT_LOG_SCHEMA,
 };
 pub use pool::{DispatchKind, RoundExecutor, WorkerPool, WorkerStats};
 pub use router::Router;

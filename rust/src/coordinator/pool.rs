@@ -251,6 +251,10 @@ pub struct WorkerStats {
     /// virtual seconds this worker spent computing (prefill + decode);
     /// divide by the run's wall time for utilization
     pub busy_s: f64,
+    /// *measured* wall seconds this worker spent inside decode steps
+    /// (step-phase time, real `Instant` reads — the phase-profiling
+    /// signal, unlike the virtual `busy_s`)
+    pub step_wall_s: f64,
 }
 
 impl WorkerStats {

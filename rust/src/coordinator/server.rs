@@ -70,6 +70,13 @@ pub struct ServeOptions {
     /// every value — threading buys wall-clock time, never different
     /// results (see the "Threading model" section of docs/serving_api.md).
     pub threads: usize,
+    /// emit a metrics-registry JSONL snapshot every N committed decode
+    /// rounds to the frontend's metrics sink (0 = off; `--metrics-every`)
+    pub metrics_every: usize,
+    /// record executor phase wall times (dispatch/step/commit + per-round
+    /// worker skew) and attach a `PhaseProfile` to the report
+    /// (`--profile`); wall-measured, so never part of deterministic output
+    pub profile: bool,
 }
 
 impl Default for ServeOptions {
@@ -84,6 +91,8 @@ impl Default for ServeOptions {
             time_model: TimeModel::Measured,
             seed: 42,
             threads: 1,
+            metrics_every: 0,
+            profile: false,
         }
     }
 }
@@ -115,6 +124,8 @@ pub struct ServeReport {
     /// per-engine-worker counters (one entry per pool slot; single-engine
     /// frontends report exactly one)
     pub worker_stats: Vec<WorkerStats>,
+    /// executor phase wall-time profile (`ServeOptions::profile`)
+    pub profile: Option<crate::trace::PhaseProfile>,
 }
 
 /// Run a full trace through the engine: submit every request up front,

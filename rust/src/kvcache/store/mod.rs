@@ -39,14 +39,29 @@ pub mod policy;
 pub mod spill;
 
 pub use policy::{make_eviction_policy, EvictionPolicy, EvictionPolicyKind};
-pub use spill::{default_spill_root, SpillConfig, SpillError, SpillManager};
+pub use spill::{
+    default_spill_root, FaultSource, SpillConfig, SpillError, SpillManager,
+};
 
 use crate::hwmodel::Device;
 
-use spill::FaultSource;
-
 use super::pool::{PageId, PagePool};
 use super::seq::SeqCache;
+
+/// One tier-transition the store performed, buffered per worker when
+/// tracing is on and drained serially at the frontend's commit points
+/// (worker order), so multi-threaded rounds serialize deterministically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StoreTraceEvent {
+    /// hot page demoted in place to the q8 cold tier
+    Demote { page: PageId },
+    /// cold page moved onto the disk spill tier
+    SpillOut { page: PageId },
+    /// disk page faulted back into residency
+    Fault { page: PageId, src: FaultSource },
+    /// readahead tick prefetched this many payload bytes
+    Readahead { bytes: u64 },
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Tier {
@@ -122,6 +137,9 @@ pub struct PageStore {
     tick: u64,
     dev: Device,
     pub stats: StoreStats,
+    /// tier-transition event buffer; `None` = tracing off (the hot path's
+    /// only cost is this option check)
+    trace_buf: Option<Vec<StoreTraceEvent>>,
 }
 
 impl PageStore {
@@ -139,6 +157,34 @@ impl PageStore {
             tick: 0,
             dev: Device::default(),
             stats: StoreStats::default(),
+            trace_buf: None,
+        }
+    }
+
+    /// Enable (or disable) tier-transition tracing. On enable the buffer
+    /// starts empty; callers drain it with [`take_trace`](Self::take_trace)
+    /// at their commit points.
+    pub fn set_trace(&mut self, on: bool) {
+        self.trace_buf = if on { Some(Vec::new()) } else { None };
+    }
+
+    pub fn trace_enabled(&self) -> bool {
+        self.trace_buf.is_some()
+    }
+
+    /// Drain the buffered tier-transition events (empty when tracing is
+    /// off or nothing happened since the last drain).
+    pub fn take_trace(&mut self) -> Vec<StoreTraceEvent> {
+        match self.trace_buf.as_mut() {
+            Some(buf) => std::mem::take(buf),
+            None => Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn trace(&mut self, ev: StoreTraceEvent) {
+        if let Some(buf) = self.trace_buf.as_mut() {
+            buf.push(ev);
         }
     }
 
@@ -435,6 +481,7 @@ impl PageStore {
                 // the dequantized rows land at the hot rate: charge the
                 // same q8→hot promotion the cold path pays
                 self.stats.spill_seconds += self.spill_seconds(pool.page_bytes());
+                self.trace(StoreTraceEvent::Fault { page: id, src });
                 self.state[id as usize].tier = Tier::Hot;
                 self.disk_pages -= 1;
                 self.hot_pages += 1;
@@ -491,6 +538,7 @@ impl PageStore {
             Ok(bytes) => {
                 self.stats.readahead_bytes += bytes as u64;
                 self.stats.disk_seconds += self.dev.disk_seconds(bytes);
+                self.trace(StoreTraceEvent::Readahead { bytes: bytes as u64 });
             }
             Err(_) => self.stats.spill_errors += 1,
         }
@@ -562,6 +610,7 @@ impl PageStore {
         self.demoted_at[id as usize] = self.tick;
         self.stats.demotions += 1;
         self.stats.spill_seconds += self.spill_seconds(moved);
+        self.trace(StoreTraceEvent::Demote { page: id });
     }
 
     /// The q8→disk rung of the cascade: move the oldest-demoted,
@@ -606,6 +655,7 @@ impl PageStore {
         self.stats.spill_out_bytes += bytes as u64;
         self.stats.spill_errors += new_write_errors;
         self.stats.disk_seconds += self.dev.disk_seconds(bytes);
+        self.trace(StoreTraceEvent::SpillOut { page: id });
         true
     }
 
@@ -681,6 +731,76 @@ mod tests {
         }
         s.sync(&p);
         assert_eq!(s.bytes_in_use(&p), 0);
+    }
+
+    #[test]
+    fn trace_buffer_records_tier_transitions_and_drains() {
+        let mut p = pool();
+        let budget = 2 * p.page_bytes();
+        let mut s = PageStore::new(Some(budget), EvictionPolicyKind::Lru);
+        assert!(!s.trace_enabled());
+        s.set_trace(true);
+        let mut live = Vec::new();
+        for i in 0..4 {
+            let id = s.alloc(&mut p);
+            fill_page(&mut p, id, i as f32);
+            live.push(id);
+        }
+        s.enforce_budget(&mut p);
+        let evs = s.take_trace();
+        let demotes =
+            evs.iter().filter(|e| matches!(e, StoreTraceEvent::Demote { .. })).count();
+        assert_eq!(demotes as u64, s.stats.demotions, "one event per demotion");
+        assert!(s.take_trace().is_empty(), "drain empties the buffer");
+        // promotion back is a policy access, not a tier-transition event;
+        // faults (disk tier) are covered by the spill battery
+        let cold = *live.iter().find(|&&id| s.is_cold(id)).unwrap();
+        s.ensure_hot(&mut p, cold).unwrap();
+        let evs = s.take_trace();
+        assert!(
+            evs.iter().all(|e| matches!(e, StoreTraceEvent::Demote { .. })),
+            "promotion may displace (demote) but emits no fault: {evs:?}"
+        );
+        s.set_trace(false);
+        s.enforce_budget(&mut p);
+        assert!(s.take_trace().is_empty(), "tracing off buffers nothing");
+        for id in live {
+            p.release(id);
+        }
+    }
+
+    #[test]
+    fn spill_and_fault_emit_trace_events() {
+        let mut p = pool();
+        let budget = p.page_bytes();
+        let mut s = spill_store(budget, "trace-events");
+        s.set_trace(true);
+        let mut live = Vec::new();
+        for i in 0..4 {
+            let id = s.alloc(&mut p);
+            fill_page(&mut p, id, i as f32);
+            live.push(id);
+        }
+        s.enforce_budget(&mut p);
+        let evs = s.take_trace();
+        let spills = evs
+            .iter()
+            .filter(|e| matches!(e, StoreTraceEvent::SpillOut { .. }))
+            .count();
+        assert_eq!(spills as u64, s.stats.spill_outs);
+        let spilled = *live.iter().find(|&&id| s.is_on_disk(id)).unwrap();
+        s.ensure_hot(&mut p, spilled).unwrap();
+        let evs = s.take_trace();
+        assert!(
+            evs.iter().any(|e| matches!(
+                e,
+                StoreTraceEvent::Fault { page, .. } if *page == spilled
+            )),
+            "fault event names the faulted page: {evs:?}"
+        );
+        for id in live {
+            p.release(id);
+        }
     }
 
     #[test]

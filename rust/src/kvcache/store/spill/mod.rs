@@ -152,6 +152,18 @@ pub enum FaultSource {
     Disk,
 }
 
+impl FaultSource {
+    /// Stable wire name, used as the `src` field of `spill_fault` trace
+    /// events.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultSource::Staging => "staging",
+            FaultSource::Readahead => "readahead",
+            FaultSource::Disk => "disk",
+        }
+    }
+}
+
 /// Fixed per-pool slot geometry (set on the first spill, invariant after).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct SlotShape {

@@ -26,6 +26,7 @@ pub mod plugins;
 pub mod report;
 pub mod runtime;
 pub mod sparsity;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

@@ -30,6 +30,7 @@ use tinyserve::metrics::StepMetrics;
 use tinyserve::plugins::Pipeline;
 use tinyserve::runtime::Manifest;
 use tinyserve::sparsity::PolicyKind;
+use tinyserve::trace::{FileSink, Tracer};
 use tinyserve::util::cli::Args;
 use tinyserve::util::rng::Rng;
 use tinyserve::workload::{
@@ -159,6 +160,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         TimeModel::Measured
     };
+    // observability: --trace-out PATH streams one JSONL span event per
+    // lifecycle transition; --metrics-every N snapshots the metrics
+    // registry every N decode rounds into --metrics-out (default
+    // metrics.jsonl); --prom-out PATH dumps a one-shot Prometheus-style
+    // exposition at end of run; --profile records executor phase wall
+    // times and prints the table. Under --modeled-time the trace and
+    // metrics streams are byte-deterministic from the seed.
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let metrics_every = args.usize_or("metrics-every", 0);
+    let metrics_out = args.get("metrics-out").map(std::path::PathBuf::from);
+    let prom_out = args.get("prom-out").map(std::path::PathBuf::from);
+    let profile = args.bool("profile");
+    anyhow::ensure!(
+        metrics_out.is_none() || metrics_every > 0,
+        "--metrics-out requires --metrics-every N (the snapshot cadence in \
+         decode rounds; without a cadence no snapshot would ever be written)"
+    );
     let n_requests = args.usize_or("requests", 32);
     let seed = args.usize_or("seed", 42) as u64;
     let interarrival_ms = args.f64_or("interarrival-ms", 50.0);
@@ -180,9 +198,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
     pool.warmup()?;
     let kv_budget = pool.total_budget_bytes();
     let policy_kind = pool.engine(0).store.policy_kind();
-    let opts = ServeOptions { time_model, seed, threads, ..Default::default() };
+    let opts = ServeOptions {
+        time_model,
+        seed,
+        threads,
+        metrics_every,
+        profile,
+        ..Default::default()
+    };
     let mut plugins = Pipeline::new();
-    let mut fe = Frontend::builder().options(opts).build_pool(pool, &mut plugins);
+    let mut builder = Frontend::builder().options(opts);
+    if let Some(p) = &trace_out {
+        let sink = FileSink::create(p)
+            .map_err(|e| anyhow::anyhow!("--trace-out {}: {e}", p.display()))?;
+        builder = builder.tracer(Tracer::to_sink(Box::new(sink)));
+    }
+    if metrics_every > 0 {
+        let p = metrics_out
+            .clone()
+            .unwrap_or_else(|| std::path::PathBuf::from("metrics.jsonl"));
+        let sink = FileSink::create(&p)
+            .map_err(|e| anyhow::anyhow!("--metrics-out {}: {e}", p.display()))?;
+        builder = builder.metrics_sink(Box::new(sink));
+    }
+    let mut fe = builder.build_pool(pool, &mut plugins);
     if arrival == "trace" {
         let trace_cfg = TraceConfig {
             n_requests,
@@ -237,7 +276,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     while fe.has_work() {
         fe.step()?;
     }
+    // the registry lives on the frontend; render the exposition before the
+    // report consumes it
+    let prom = prom_out.as_ref().map(|_| fe.metrics_registry().prometheus());
     let r = fe.into_report();
+    if let (Some(path), Some(text)) = (&prom_out, &prom) {
+        std::fs::write(path, text)
+            .map_err(|e| anyhow::anyhow!("--prom-out {}: {e}", path.display()))?;
+        println!("prometheus exposition -> {}", path.display());
+    }
+    if let Some(p) = &trace_out {
+        println!("trace -> {}", p.display());
+    }
     let mut m = r.metrics;
     println!("--- serve report ---");
     println!("requests            {}", m.total_requests);
@@ -328,6 +378,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for (task, acc, n) in &r.per_task {
         println!("  task {task:10} acc {:.0}%  (n={n})", acc * 100.0);
     }
+    if let Some(p) = &r.profile {
+        print!("{}", p.table());
+    }
     Ok(())
 }
 
@@ -414,7 +467,9 @@ fn main() -> Result<()> {
                  [--dispatch round-robin|least-loaded|session-affinity] \
                  [--arrival trace|poisson|gamma] \
                  [--arrival-shape steady|ramp|burst|diurnal] \
-                 [--modeled-time] [--deadline-ms D] ..."
+                 [--modeled-time] [--deadline-ms D] \
+                 [--trace-out T.jsonl] [--metrics-every N] \
+                 [--metrics-out M.jsonl] [--prom-out P.txt] [--profile] ..."
             );
             std::process::exit(2);
         }
@@ -510,6 +565,17 @@ mod tests {
         let e = cmd_serve(&args("serve --threads 0")).unwrap_err().to_string();
         assert!(e.contains("--threads"), "{e}");
         assert!(e.contains("sequential"), "error explains the 1 case: {e}");
+    }
+
+    #[test]
+    fn metrics_out_without_cadence_is_rejected_with_pairing() {
+        let e = cmd_serve(&args("serve --metrics-out m.jsonl"))
+            .unwrap_err()
+            .to_string();
+        assert!(
+            e.contains("--metrics-out") && e.contains("--metrics-every"),
+            "error must name the expected flag pairing: {e}"
+        );
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use std::time::Instant;
 
-use crate::util::stats::{Samples, Welford};
+use crate::util::stats::{Histogram, Samples, Welford};
 
 /// Per-decode-step record, reset and reused between steps.
 #[derive(Debug, Clone, Default)]
@@ -75,16 +75,22 @@ impl StepMetrics {
     /// one (multi-worker frontend: N engines step concurrently, the round
     /// reports one merged record). Counters and byte totals sum; the time
     /// fields take the max, because concurrent workers overlap on the
-    /// virtual clock; entropy averages weighted by batch rows. Merging
-    /// into a fresh default is an exact copy, so a single-worker pool
-    /// reports bit-identical metrics to the pre-pool frontend.
+    /// virtual clock; entropy averages weighted by batch rows — a record
+    /// with `batch == 0` (a worker whose round was empty, e.g. store-only
+    /// bookkeeping) contributes its counters but carries zero entropy
+    /// weight, so it can neither drag the average toward its default 0.0
+    /// nor divide by zero. Merging into a fresh default is an exact copy,
+    /// so a single-worker pool reports bit-identical metrics to the
+    /// pre-pool frontend.
     pub fn merge(&mut self, o: &StepMetrics) {
-        if self.batch == 0 {
-            *self = o.clone();
-            return;
-        }
-        let (b0, b1) = (self.batch as f32, o.batch as f32);
-        self.entropy = (self.entropy * b0 + o.entropy * b1) / (b0 + b1);
+        self.entropy = match (self.batch, o.batch) {
+            (_, 0) => self.entropy,
+            (0, _) => o.entropy,
+            (b0, b1) => {
+                (self.entropy * b0 as f32 + o.entropy * b1 as f32)
+                    / ((b0 + b1) as f32)
+            }
+        };
         self.batch += o.batch;
         self.step_seconds = self.step_seconds.max(o.step_seconds);
         self.exec_seconds = self.exec_seconds.max(o.exec_seconds);
@@ -165,13 +171,27 @@ pub struct RequestRecord {
     pub session_reused_tokens: usize,
 }
 
+/// TTFT histogram range: [0, 60) s over 120 half-second buckets. Virtual
+/// (clock-priced) seconds, so the buckets are deterministic under
+/// `TimeModel::Modeled`.
+const TTFT_HIST: (f64, f64, usize) = (0.0, 60.0, 120);
+/// Per-token latency histogram range: [0, 0.5) s over 100 buckets of 5 ms.
+const TOKEN_LAT_HIST: (f64, f64, usize) = (0.0, 0.5, 100);
+
 /// Run-level aggregation.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ServerMetrics {
     pub step_latency: Samples,
     pub token_latency: Welford,
     pub request_e2e: Samples,
     pub request_ttft: Samples,
+    /// bucketed TTFT distribution (virtual seconds), exported to the JSONL
+    /// metrics snapshot and the Prometheus exposition
+    pub ttft_hist: Histogram,
+    /// bucketed per-token latency distribution, fed with each round's
+    /// virtual duration / batch (deterministic under modeled time, unlike
+    /// the wall-measured `token_latency` Welford)
+    pub token_lat_hist: Histogram,
     pub hit_rate: Welford,
     pub gather_bytes_per_step: Welford,
     pub entropy: Welford,
@@ -212,6 +232,50 @@ pub struct ServerMetrics {
     /// per-step hit-rate trace for Figure 6
     pub hit_trace: Vec<f64>,
     pub trace_enabled: bool,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        ServerMetrics {
+            step_latency: Samples::default(),
+            token_latency: Welford::default(),
+            request_e2e: Samples::default(),
+            request_ttft: Samples::default(),
+            ttft_hist: Histogram::new(TTFT_HIST.0, TTFT_HIST.1, TTFT_HIST.2),
+            token_lat_hist: Histogram::new(
+                TOKEN_LAT_HIST.0,
+                TOKEN_LAT_HIST.1,
+                TOKEN_LAT_HIST.2,
+            ),
+            hit_rate: Welford::default(),
+            gather_bytes_per_step: Welford::default(),
+            entropy: Welford::default(),
+            total_steps: 0,
+            total_new_tokens: 0,
+            total_requests: 0,
+            total_cancelled: 0,
+            total_expired: 0,
+            total_gather_bytes: 0,
+            residency_hit_rate: Welford::default(),
+            kv_bytes: Welford::default(),
+            kv_bytes_peak: 0,
+            total_demotions: 0,
+            total_promotions: 0,
+            total_spill_seconds: 0.0,
+            total_spill_out_bytes: 0,
+            total_spill_in_bytes: 0,
+            total_disk_faults: 0,
+            total_readahead_hits: 0,
+            total_disk_seconds: 0.0,
+            disk_pages: Welford::default(),
+            disk_pages_peak: 0,
+            budget_violations: 0,
+            run_seconds: 0.0,
+            bandwidth_trace: Vec::new(),
+            hit_trace: Vec::new(),
+            trace_enabled: false,
+        }
+    }
 }
 
 impl ServerMetrics {
@@ -266,6 +330,18 @@ impl ServerMetrics {
     /// that stream a prefix and then get cancelled still count.
     pub fn on_first_token(&mut self, ttft_s: f64) {
         self.request_ttft.push(ttft_s);
+        self.ttft_hist.push(ttft_s);
+    }
+
+    /// One committed decode round's *virtual* duration over the tokens it
+    /// produced: the clock-priced per-token latency. Deterministic under
+    /// modeled time, which is what lets the bucketed distribution go into
+    /// double-run-diffed metrics snapshots (the Welford `token_latency`
+    /// keeps tracking wall time for the human-facing report).
+    pub fn on_round_dt(&mut self, round_dt_s: f64, tokens: usize) {
+        if tokens > 0 {
+            self.token_lat_hist.push(round_dt_s / tokens as f64);
+        }
     }
 
     pub fn on_cancelled(&mut self) {
@@ -426,6 +502,65 @@ mod tests {
         assert_eq!(sm.disk_pages_peak, 6);
         assert_eq!(sm.disk_pages.n, 2);
         assert!((sm.total_disk_seconds - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_of_empty_batch_keeps_counters_and_entropy_weight() {
+        // regression: a worker with an empty round (batch == 0) can still
+        // carry store counters (budget enforcement ran). Merging it first
+        // used to wholesale-copy, and the next real merge then discarded
+        // those counters through the batch==0 early-return.
+        let empty_round = StepMetrics {
+            batch: 0,
+            demotions: 3,
+            spill_out_bytes: 256,
+            spill_seconds: 0.125,
+            entropy: 0.0,
+            ..Default::default()
+        };
+        let real = StepMetrics {
+            batch: 4,
+            demotions: 1,
+            gather_bytes: 100,
+            entropy: 2.0,
+            step_seconds: 0.25,
+            ..Default::default()
+        };
+        let mut m = StepMetrics::default();
+        m.merge(&empty_round);
+        m.merge(&real);
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.demotions, 4, "empty-round counters survive");
+        assert_eq!(m.spill_out_bytes, 256);
+        assert!((m.spill_seconds - 0.125).abs() < 1e-12);
+        assert_eq!(m.entropy, 2.0, "zero-batch record has zero entropy weight");
+        // order-independence: the empty round merged second must not drag
+        // the weighted entropy average toward its default 0.0 either
+        let mut m = StepMetrics::default();
+        m.merge(&real);
+        m.merge(&empty_round);
+        assert_eq!(m.entropy, 2.0);
+        assert_eq!(m.demotions, 4);
+        // two empty rounds never produce a NaN entropy
+        let mut m = StepMetrics::default();
+        m.merge(&empty_round);
+        m.merge(&empty_round);
+        assert!(m.entropy == 0.0, "0/0 must not reach the weighted average");
+    }
+
+    #[test]
+    fn ttft_and_token_latency_histograms_fill() {
+        let mut sm = ServerMetrics::new(false);
+        sm.on_first_token(0.25);
+        sm.on_first_token(120.0); // past the range: overflow bucket
+        assert_eq!(sm.ttft_hist.total(), 2);
+        assert_eq!(sm.ttft_hist.overflow, 1);
+        assert!((sm.ttft_hist.sum - 120.25).abs() < 1e-12);
+        sm.on_round_dt(0.04, 4); // 10 ms/token
+        sm.on_round_dt(0.0, 0); // empty round: no sample
+        assert_eq!(sm.token_lat_hist.total(), 1);
+        let p50 = sm.token_lat_hist.percentile(50.0);
+        assert!((p50 - 0.01).abs() < 0.005, "p50 {p50} within one bucket");
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! Structured observability: per-request span tracing, a metrics registry
+//! with JSONL / Prometheus exporters, and executor phase profiling (the
+//! paper's §3.2 "lightweight instrumentation hooks", grown into the spine
+//! later scheduling and preemption work hangs measurements on).
+//!
+//! Span taxonomy (one JSONL object per event, documented in
+//! docs/observability.md):
+//!
+//! ```text
+//! queued → admitted → prefill → round[n] → … → finished|cancelled|expired
+//!                        │          │
+//!                        └──────────┴── demote | spill_out | spill_fault |
+//!                                       readahead   (store events, anchored
+//!                                       to the enclosing prefill/round span)
+//! ```
+//!
+//! Every timestamp is read off the frontend's virtual [`Clock`]
+//! (`coordinator::Clock`), so under `TimeModel::Modeled` a trace is
+//! byte-deterministic: two runs of the same seed — on one thread or four —
+//! serialize to identical files, and CI double-run-diffs them exactly like
+//! event logs. Events are only constructed when a sink is attached
+//! ([`Tracer::enabled`] guards every call site), so serving with tracing
+//! off pays one branch per hook.
+
+pub mod registry;
+pub mod sink;
+
+pub use registry::{hist_json, MetricsRegistry, METRICS_SCHEMA};
+pub use sink::{FileSink, NullSink, RingSink, SharedVecSink, TraceSink};
+
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+
+/// Version stamp of the trace stream's JSONL schema (the header line
+/// carries it, so archived traces are self-describing).
+pub const TRACE_SCHEMA: u64 = 1;
+
+/// Which span a store event happened inside: the admission prefill of one
+/// request, or one decode round (store work there is batch-level — pages
+/// of several requests move in one enforcement pass, so the round is the
+/// honest anchor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanCtx {
+    Prefill { id: u64 },
+    Round { round: u64 },
+}
+
+/// One span event. Serialized as a single sorted-key JSON object per line;
+/// `t`/`t0`/`t1` are virtual seconds off the frontend clock.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// request entered the batcher's admission queue (t = arrival)
+    Queued { id: u64, t: f64 },
+    /// request left the queue and was placed on an engine worker
+    Admitted { id: u64, worker: usize, t: f64 },
+    /// admission bounced (KV pressure / concurrency cap); still queued
+    Deferred { id: u64, t: f64 },
+    /// prompt prefill on the placed worker, spanning [t0, t1]
+    Prefill { id: u64, worker: usize, t0: f64, t1: f64 },
+    /// one worker's slice of decode round `round`, spanning [t0, t1];
+    /// `ids` are the requests whose sequences stepped in this batch
+    Round { round: u64, worker: usize, ids: Vec<u64>, t0: f64, t1: f64 },
+    /// store: hot page demoted to the q8 cold tier
+    Demote { ctx: SpanCtx, worker: usize, page: u64 },
+    /// store: cold page moved onto the disk spill tier
+    SpillOut { ctx: SpanCtx, worker: usize, page: u64 },
+    /// store: disk page faulted back into residency (`src` is the fault
+    /// service path: "disk", "staging" or "readahead")
+    SpillFault { ctx: SpanCtx, worker: usize, page: u64, src: &'static str },
+    /// store: readahead tick prefetched `bytes` from the disk tier
+    Readahead { ctx: SpanCtx, worker: usize, bytes: u64 },
+    /// terminal: ran to completion
+    Finished { id: u64, t: f64 },
+    /// terminal: cancelled by the caller
+    Cancelled { id: u64, t: f64 },
+    /// terminal: shed or aborted past its deadline
+    Expired { id: u64, t: f64 },
+}
+
+impl TraceEvent {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Queued { .. } => "queued",
+            TraceEvent::Admitted { .. } => "admitted",
+            TraceEvent::Deferred { .. } => "deferred",
+            TraceEvent::Prefill { .. } => "prefill",
+            TraceEvent::Round { .. } => "round",
+            TraceEvent::Demote { .. } => "demote",
+            TraceEvent::SpillOut { .. } => "spill_out",
+            TraceEvent::SpillFault { .. } => "spill_fault",
+            TraceEvent::Readahead { .. } => "readahead",
+            TraceEvent::Finished { .. } => "finished",
+            TraceEvent::Cancelled { .. } => "cancelled",
+            TraceEvent::Expired { .. } => "expired",
+        }
+    }
+
+    /// The request this event belongs to, when it names exactly one.
+    pub fn request_id(&self) -> Option<u64> {
+        match self {
+            TraceEvent::Queued { id, .. }
+            | TraceEvent::Admitted { id, .. }
+            | TraceEvent::Deferred { id, .. }
+            | TraceEvent::Prefill { id, .. }
+            | TraceEvent::Finished { id, .. }
+            | TraceEvent::Cancelled { id, .. }
+            | TraceEvent::Expired { id, .. } => Some(*id),
+            TraceEvent::Demote { ctx, .. }
+            | TraceEvent::SpillOut { ctx, .. }
+            | TraceEvent::SpillFault { ctx, .. }
+            | TraceEvent::Readahead { ctx, .. } => match ctx {
+                SpanCtx::Prefill { id } => Some(*id),
+                SpanCtx::Round { .. } => None,
+            },
+            TraceEvent::Round { .. } => None,
+        }
+    }
+
+    /// One JSONL line. `Json::Obj` sorts keys, and f64 `Display` is the
+    /// shortest round-trip of the exact bits, so identical events always
+    /// serialize to identical bytes — the double-run-diff contract.
+    pub fn to_line(&self) -> String {
+        let mut pairs: Vec<(&str, Json)> =
+            vec![("kind", Json::from(self.kind()))];
+        match self {
+            TraceEvent::Queued { id, t }
+            | TraceEvent::Deferred { id, t }
+            | TraceEvent::Finished { id, t }
+            | TraceEvent::Cancelled { id, t }
+            | TraceEvent::Expired { id, t } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("t", Json::Num(*t)));
+            }
+            TraceEvent::Admitted { id, worker, t } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("worker", Json::from(*worker)));
+                pairs.push(("t", Json::Num(*t)));
+            }
+            TraceEvent::Prefill { id, worker, t0, t1 } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("worker", Json::from(*worker)));
+                pairs.push(("t0", Json::Num(*t0)));
+                pairs.push(("t1", Json::Num(*t1)));
+            }
+            TraceEvent::Round { round, worker, ids, t0, t1 } => {
+                pairs.push(("round", Json::Num(*round as f64)));
+                pairs.push(("worker", Json::from(*worker)));
+                pairs.push((
+                    "ids",
+                    Json::Arr(ids.iter().map(|&i| Json::Num(i as f64)).collect()),
+                ));
+                pairs.push(("t0", Json::Num(*t0)));
+                pairs.push(("t1", Json::Num(*t1)));
+            }
+            TraceEvent::Demote { ctx, worker, page }
+            | TraceEvent::SpillOut { ctx, worker, page } => {
+                push_ctx(&mut pairs, ctx);
+                pairs.push(("worker", Json::from(*worker)));
+                pairs.push(("page", Json::Num(*page as f64)));
+            }
+            TraceEvent::SpillFault { ctx, worker, page, src } => {
+                push_ctx(&mut pairs, ctx);
+                pairs.push(("worker", Json::from(*worker)));
+                pairs.push(("page", Json::Num(*page as f64)));
+                pairs.push(("src", Json::from(*src)));
+            }
+            TraceEvent::Readahead { ctx, worker, bytes } => {
+                push_ctx(&mut pairs, ctx);
+                pairs.push(("worker", Json::from(*worker)));
+                pairs.push(("bytes", Json::Num(*bytes as f64)));
+            }
+        }
+        Json::obj(pairs).to_string()
+    }
+}
+
+fn push_ctx(pairs: &mut Vec<(&str, Json)>, ctx: &SpanCtx) {
+    match ctx {
+        SpanCtx::Prefill { id } => {
+            pairs.push(("ctx", Json::from("prefill")));
+            pairs.push(("id", Json::Num(*id as f64)));
+        }
+        SpanCtx::Round { round } => {
+            pairs.push(("ctx", Json::from("round")));
+            pairs.push(("round", Json::Num(*round as f64)));
+        }
+    }
+}
+
+/// Run-identifying first line of a trace stream. Deliberately carries no
+/// executor width: under modeled time the stream is executor-independent
+/// by contract, and CI diffs `--threads 1` traces against `--threads 4`
+/// traces byte-for-byte — recording the thread count would make equal
+/// streams spuriously unequal.
+#[derive(Debug, Clone)]
+pub struct RunHeader {
+    pub seed: u64,
+    pub workers: usize,
+    /// sparsity (page-selection) policy name
+    pub policy: String,
+    /// store eviction policy name
+    pub eviction: String,
+    /// summed per-worker KV byte budget (0 = unbounded)
+    pub budget_bytes: u64,
+    /// time-model name ("modeled" / "measured")
+    pub time: String,
+}
+
+impl RunHeader {
+    pub fn to_line(&self) -> String {
+        Json::obj(vec![
+            ("kind", Json::from("header")),
+            ("schema", Json::Num(TRACE_SCHEMA as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("workers", Json::from(self.workers)),
+            ("policy", Json::from(self.policy.as_str())),
+            ("eviction", Json::from(self.eviction.as_str())),
+            ("budget", Json::Num(self.budget_bytes as f64)),
+            ("time", Json::from(self.time.as_str())),
+        ])
+        .to_string()
+    }
+}
+
+/// Cheap tracing handle threaded through the frontend. `None` sink means
+/// off: `enabled()` is the single branch the hot path pays, and call sites
+/// guard event construction behind it.
+#[derive(Default)]
+pub struct Tracer {
+    sink: Option<Box<dyn TraceSink>>,
+}
+
+impl Tracer {
+    /// A disabled tracer (the default everywhere).
+    pub fn off() -> Tracer {
+        Tracer { sink: None }
+    }
+
+    pub fn to_sink(sink: Box<dyn TraceSink>) -> Tracer {
+        Tracer { sink: Some(sink) }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    pub fn emit(&mut self, ev: &TraceEvent) {
+        if let Some(s) = self.sink.as_mut() {
+            s.emit(&ev.to_line());
+        }
+    }
+
+    pub fn emit_line(&mut self, line: &str) {
+        if let Some(s) = self.sink.as_mut() {
+            s.emit(line);
+        }
+    }
+
+    pub fn flush(&mut self) {
+        if let Some(s) = self.sink.as_mut() {
+            s.flush();
+        }
+    }
+}
+
+/// Executor phase profile: wall times of the decode round's three phases,
+/// accumulated at commit. `skew` is per-round slowest−fastest worker step
+/// wall time — the direct dispatch-imbalance signal `busy_frac` hides.
+/// Everything here is *measured* (real `Instant` reads), so it never goes
+/// into determinism-diffed streams; `serve --profile` prints the table and
+/// appends `round_profile` JSONL lines to the trace.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseProfile {
+    pub rounds: u64,
+    pub dispatch: Welford,
+    pub commit: Welford,
+    pub skew: Welford,
+    pub max_skew_s: f64,
+    /// per-pool-worker step wall time (indexed by worker)
+    pub per_worker_step: Vec<Welford>,
+}
+
+impl PhaseProfile {
+    pub fn new(workers: usize) -> PhaseProfile {
+        PhaseProfile {
+            per_worker_step: vec![Welford::default(); workers],
+            ..Default::default()
+        }
+    }
+
+    /// Record one committed round: dispatch wall, per-(worker, step wall)
+    /// pairs for the workers that stepped, and the commit wall.
+    pub fn on_round(
+        &mut self,
+        dispatch_s: f64,
+        steps: &[(usize, f64)],
+        commit_s: f64,
+    ) {
+        self.rounds += 1;
+        self.dispatch.push(dispatch_s);
+        self.commit.push(commit_s);
+        for &(w, s) in steps {
+            if let Some(wf) = self.per_worker_step.get_mut(w) {
+                wf.push(s);
+            }
+        }
+        if steps.len() > 1 {
+            let max = steps.iter().map(|&(_, s)| s).fold(f64::MIN, f64::max);
+            let min = steps.iter().map(|&(_, s)| s).fold(f64::MAX, f64::min);
+            let skew = max - min;
+            self.skew.push(skew);
+            self.max_skew_s = self.max_skew_s.max(skew);
+        }
+    }
+
+    /// `round_profile` JSONL line (wall-measured; only emitted under
+    /// `--profile`, never part of determinism-diffed output).
+    pub fn round_line(
+        round: u64,
+        dispatch_s: f64,
+        steps: &[(usize, f64)],
+        commit_s: f64,
+    ) -> String {
+        Json::obj(vec![
+            ("kind", Json::from("round_profile")),
+            ("round", Json::Num(round as f64)),
+            ("dispatch_s", Json::Num(dispatch_s)),
+            (
+                "steps",
+                Json::Arr(
+                    steps
+                        .iter()
+                        .map(|&(w, s)| {
+                            Json::obj(vec![
+                                ("worker", Json::from(w)),
+                                ("step_s", Json::Num(s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("commit_s", Json::Num(commit_s)),
+        ])
+        .to_string()
+    }
+
+    /// End-of-run table for `serve --profile`.
+    pub fn table(&self) -> String {
+        let us = |x: f64| x * 1e6;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "executor phase profile ({} rounds, wall time)\n",
+            self.rounds
+        ));
+        out.push_str(&format!(
+            "  {:<10} {:>12} {:>12} {:>8}\n",
+            "phase", "mean_us", "std_us", "n"
+        ));
+        for (name, w) in [
+            ("dispatch", &self.dispatch),
+            ("commit", &self.commit),
+            ("skew", &self.skew),
+        ] {
+            out.push_str(&format!(
+                "  {:<10} {:>12.2} {:>12.2} {:>8}\n",
+                name,
+                us(w.mean()),
+                us(w.std()),
+                w.n
+            ));
+        }
+        for (i, w) in self.per_worker_step.iter().enumerate() {
+            out.push_str(&format!(
+                "  {:<10} {:>12.2} {:>12.2} {:>8}\n",
+                format!("step[w{i}]"),
+                us(w.mean()),
+                us(w.std()),
+                w.n
+            ));
+        }
+        out.push_str(&format!("  max skew: {:.2} us\n", us(self.max_skew_s)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_lines_are_stable_sorted_json() {
+        let ev = TraceEvent::Admitted { id: 7, worker: 1, t: 0.5 };
+        let line = ev.to_line();
+        assert_eq!(line, r#"{"id":7,"kind":"admitted","t":0.5,"worker":1}"#);
+        assert_eq!(line, ev.to_line(), "serialization is deterministic");
+        let round = TraceEvent::Round {
+            round: 3,
+            worker: 0,
+            ids: vec![1, 2],
+            t0: 1.0,
+            t1: 1.5,
+        };
+        let v = Json::parse(&round.to_line()).unwrap();
+        assert_eq!(v.get("kind").and_then(|j| j.as_str()), Some("round"));
+        assert_eq!(v.get("ids").and_then(|j| j.as_arr()).map(|a| a.len()), Some(2));
+    }
+
+    #[test]
+    fn store_events_anchor_to_a_span() {
+        let d = TraceEvent::Demote {
+            ctx: SpanCtx::Round { round: 9 },
+            worker: 2,
+            page: 17,
+        };
+        let v = Json::parse(&d.to_line()).unwrap();
+        assert_eq!(v.get("ctx").and_then(|j| j.as_str()), Some("round"));
+        assert_eq!(v.get("round").and_then(|j| j.as_f64()), Some(9.0));
+        assert_eq!(d.request_id(), None, "round-scoped events are batch-level");
+        let f = TraceEvent::SpillFault {
+            ctx: SpanCtx::Prefill { id: 4 },
+            worker: 0,
+            page: 3,
+            src: "disk",
+        };
+        assert_eq!(f.request_id(), Some(4));
+        let v = Json::parse(&f.to_line()).unwrap();
+        assert_eq!(v.get("src").and_then(|j| j.as_str()), Some("disk"));
+    }
+
+    #[test]
+    fn header_line_is_schema_versioned() {
+        let h = RunHeader {
+            seed: 42,
+            workers: 2,
+            policy: "tinyserve".into(),
+            eviction: "query-aware".into(),
+            budget_bytes: 1 << 20,
+            time: "modeled".into(),
+        };
+        let v = Json::parse(&h.to_line()).unwrap();
+        assert_eq!(v.get("kind").and_then(|j| j.as_str()), Some("header"));
+        assert_eq!(v.get("schema").and_then(|j| j.as_f64()), Some(1.0));
+        assert_eq!(v.get("seed").and_then(|j| j.as_f64()), Some(42.0));
+        assert_eq!(v.get("workers").and_then(|j| j.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn disabled_tracer_pays_no_sink() {
+        let mut t = Tracer::off();
+        assert!(!t.enabled());
+        // no panic, nothing recorded
+        t.emit(&TraceEvent::Queued { id: 0, t: 0.0 });
+        t.flush();
+    }
+
+    #[test]
+    fn tracer_routes_events_to_sink() {
+        let (sink, lines) = SharedVecSink::new();
+        let mut t = Tracer::to_sink(Box::new(sink));
+        assert!(t.enabled());
+        t.emit(&TraceEvent::Queued { id: 1, t: 0.25 });
+        t.emit_line("raw");
+        let got = lines.lock().unwrap();
+        assert_eq!(got.len(), 2);
+        assert!(got[0].contains(r#""kind":"queued""#));
+        assert_eq!(got[1], "raw");
+    }
+
+    #[test]
+    fn phase_profile_tracks_skew() {
+        let mut p = PhaseProfile::new(2);
+        p.on_round(1e-6, &[(0, 5e-6), (1, 9e-6)], 2e-6);
+        p.on_round(1e-6, &[(0, 5e-6)], 2e-6);
+        assert_eq!(p.rounds, 2);
+        assert_eq!(p.skew.n, 1, "single-worker rounds have no skew sample");
+        assert!((p.max_skew_s - 4e-6).abs() < 1e-12);
+        assert_eq!(p.per_worker_step[0].n, 2);
+        assert_eq!(p.per_worker_step[1].n, 1);
+        let table = p.table();
+        assert!(table.contains("dispatch"));
+        assert!(table.contains("step[w1]"));
+        let line = PhaseProfile::round_line(0, 1e-6, &[(0, 5e-6)], 2e-6);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("kind").and_then(|j| j.as_str()), Some("round_profile"));
+    }
+}

@@ -1,0 +1,213 @@
+//! Named metrics registry + exporters: the machine-readable face of
+//! `ServerMetrics`. The frontend refreshes the registry from its
+//! aggregation state at decode-round commit points and the registry
+//! renders two formats:
+//!
+//!  * a schema-versioned JSONL snapshot line (`--metrics-every N` → a time
+//!    series, one object per N rounds) containing only values that are
+//!    deterministic under `TimeModel::Modeled` — CI double-run-diffs the
+//!    stream byte-for-byte, exactly like event logs;
+//!  * a one-shot Prometheus-style text exposition dump (`--prom-out`),
+//!    which may additionally carry wall-measured values since nothing
+//!    diffs it.
+//!
+//! Names are registered implicitly on first write and kept in `BTreeMap`s,
+//! so both renderings enumerate metrics in a stable sorted order.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::stats::Histogram;
+
+/// Version stamp carried by every JSONL snapshot line (and the stream
+/// header). Bump when a field is renamed, retyped or removed; adding new
+/// fields is backward-compatible and keeps the version.
+pub const METRICS_SCHEMA: u64 = 1;
+
+/// Monotone counters, point-in-time gauges and bucketed histograms, each
+/// under a snake_case name (used verbatim in JSONL and prefixed with
+/// `tinyserve_` in the Prometheus exposition).
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Set a counter's cumulative value (the commit point re-publishes
+    /// run totals, so "set" rather than "add" keeps it idempotent).
+    pub fn counter(&mut self, name: &'static str, value: u64) {
+        self.counters.insert(name, value);
+    }
+
+    pub fn gauge(&mut self, name: &'static str, value: f64) {
+        self.gauges.insert(name, value);
+    }
+
+    /// Publish a histogram snapshot (replaces the previous one).
+    pub fn histogram(&mut self, name: &'static str, h: &Histogram) {
+        self.hists.insert(name, h.clone());
+    }
+
+    /// One JSONL time-series line: round index + virtual timestamp + every
+    /// registered metric. Callers must only feed modeled-deterministic
+    /// values if the stream is meant to be double-run-diffed.
+    pub fn snapshot_line(&self, round: u64, t: f64) -> String {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges
+                .iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(*v)))
+                .collect(),
+        );
+        let hists = Json::Obj(
+            self.hists
+                .iter()
+                .map(|(k, h)| (k.to_string(), hist_json(h)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("kind", Json::from("metrics")),
+            ("schema", Json::Num(METRICS_SCHEMA as f64)),
+            ("round", Json::Num(round as f64)),
+            ("t", Json::Num(t)),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("hists", hists),
+        ])
+        .to_string()
+    }
+
+    /// Prometheus-style text exposition of the current state. Histograms
+    /// render cumulative `_bucket{le=...}` series plus `_sum`/`_count`;
+    /// values below `lo` count toward every bucket (they are ≤ each upper
+    /// bound), values at or above `hi` only toward `+Inf`.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!(
+                "# TYPE tinyserve_{name} counter\ntinyserve_{name} {v}\n"
+            ));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!(
+                "# TYPE tinyserve_{name} gauge\ntinyserve_{name} {v}\n"
+            ));
+        }
+        for (name, h) in &self.hists {
+            out.push_str(&format!("# TYPE tinyserve_{name} histogram\n"));
+            let width = (h.hi - h.lo) / h.counts.len().max(1) as f64;
+            let mut cum = h.underflow;
+            for (i, c) in h.counts.iter().enumerate() {
+                cum += c;
+                let le = h.lo + width * (i + 1) as f64;
+                out.push_str(&format!(
+                    "tinyserve_{name}_bucket{{le=\"{le}\"}} {cum}\n"
+                ));
+            }
+            out.push_str(&format!(
+                "tinyserve_{name}_bucket{{le=\"+Inf\"}} {}\n",
+                h.total()
+            ));
+            out.push_str(&format!("tinyserve_{name}_sum {}\n", h.sum));
+            out.push_str(&format!("tinyserve_{name}_count {}\n", h.total()));
+        }
+        out
+    }
+}
+
+/// JSON form of a histogram's buckets (shared by the snapshot line and the
+/// trace stream): bounds, per-bucket counts, out-of-range tallies, sum.
+pub fn hist_json(h: &Histogram) -> Json {
+    Json::obj(vec![
+        ("lo", Json::Num(h.lo)),
+        ("hi", Json::Num(h.hi)),
+        (
+            "counts",
+            Json::Arr(h.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+        ),
+        ("underflow", Json::Num(h.underflow as f64)),
+        ("overflow", Json::Num(h.overflow as f64)),
+        ("sum", Json::Num(h.sum)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_registry() -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        r.counter("total_new_tokens", 40);
+        r.counter("total_requests", 3);
+        r.gauge("kv_bytes_in_use", 1024.0);
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        for x in [0.1, 0.3, 0.3, 0.9, 2.0] {
+            h.push(x);
+        }
+        r.histogram("ttft_seconds", &h);
+        r
+    }
+
+    #[test]
+    fn snapshot_line_is_sorted_schema_versioned_json() {
+        let r = sample_registry();
+        let line = r.snapshot_line(8, 1.5);
+        let v = Json::parse(&line).expect("valid json");
+        assert_eq!(v.get("kind").and_then(|j| j.as_str()), Some("metrics"));
+        assert_eq!(v.get("schema").and_then(|j| j.as_f64()), Some(1.0));
+        assert_eq!(v.get("round").and_then(|j| j.as_f64()), Some(8.0));
+        assert_eq!(v.get("t").and_then(|j| j.as_f64()), Some(1.5));
+        let counters = v.get("counters").unwrap();
+        assert_eq!(
+            counters.get("total_new_tokens").and_then(|j| j.as_f64()),
+            Some(40.0)
+        );
+        let hist = v.get("hists").unwrap().get("ttft_seconds").unwrap();
+        assert_eq!(hist.get("overflow").and_then(|j| j.as_f64()), Some(1.0));
+        // byte-determinism: rendering twice is identical
+        assert_eq!(line, r.snapshot_line(8, 1.5));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = sample_registry();
+        let text = r.prometheus();
+        assert!(text.contains("# TYPE tinyserve_total_requests counter"));
+        assert!(text.contains("tinyserve_total_requests 3"));
+        assert!(text.contains("# TYPE tinyserve_kv_bytes_in_use gauge"));
+        assert!(text.contains("tinyserve_kv_bytes_in_use 1024"));
+        assert!(text.contains("# TYPE tinyserve_ttft_seconds histogram"));
+        // 4 in-range + 1 overflow
+        assert!(text.contains("tinyserve_ttft_seconds_bucket{le=\"+Inf\"} 5"));
+        assert!(text.contains("tinyserve_ttft_seconds_count 5"));
+        // cumulative buckets: [0,0.25) holds 1, [0,0.5) holds 3
+        assert!(text.contains("tinyserve_ttft_seconds_bucket{le=\"0.25\"} 1"));
+        assert!(text.contains("tinyserve_ttft_seconds_bucket{le=\"0.5\"} 3"));
+        let sum = 0.1 + 0.3 + 0.3 + 0.9 + 2.0;
+        assert!(text.contains(&format!("tinyserve_ttft_seconds_sum {sum}")));
+    }
+
+    #[test]
+    fn counters_are_idempotent_republish() {
+        let mut r = MetricsRegistry::new();
+        r.counter("steps", 5);
+        r.counter("steps", 9);
+        let line = r.snapshot_line(0, 0.0);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(
+            v.get("counters").unwrap().get("steps").and_then(|j| j.as_f64()),
+            Some(9.0)
+        );
+    }
+}

@@ -1,0 +1,165 @@
+//! Line-oriented trace sinks. The tracer serializes each span event to one
+//! JSONL line and hands it to a `TraceSink`; the sink decides where it
+//! goes. Keeping the trait this narrow (strings in, nothing out) is what
+//! lets the hot path pay exactly one `Option` branch when tracing is off —
+//! no event is even constructed unless a sink is attached.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Destination for serialized trace / metrics lines.
+pub trait TraceSink {
+    fn emit(&mut self, line: &str);
+
+    /// Flush buffered lines to their backing store (no-op by default).
+    fn flush(&mut self) {}
+}
+
+/// Swallows every line. Used as an explicit "tracing disabled" sink in
+/// code that wants a sink unconditionally; the `Tracer` itself prefers
+/// `None` so disabled tracing skips serialization entirely.
+#[derive(Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn emit(&mut self, _line: &str) {}
+}
+
+/// Buffered JSONL file writer (`--trace-out`, `--metrics-out`).
+pub struct FileSink {
+    w: BufWriter<File>,
+}
+
+impl FileSink {
+    pub fn create(path: &Path) -> std::io::Result<FileSink> {
+        Ok(FileSink { w: BufWriter::new(File::create(path)?) })
+    }
+}
+
+impl TraceSink for FileSink {
+    fn emit(&mut self, line: &str) {
+        // trace I/O must never abort serving; a full disk just drops lines
+        let _ = writeln!(self.w, "{line}");
+    }
+
+    fn flush(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+impl Drop for FileSink {
+    fn drop(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+/// Bounded in-memory ring: keeps the most recent `cap` lines (flight-
+/// recorder mode — attach cheaply, inspect after an incident).
+#[derive(Debug)]
+pub struct RingSink {
+    cap: usize,
+    buf: VecDeque<String>,
+}
+
+impl RingSink {
+    pub fn new(cap: usize) -> RingSink {
+        RingSink { cap: cap.max(1), buf: VecDeque::new() }
+    }
+
+    /// Retained lines, oldest first.
+    pub fn lines(&self) -> impl Iterator<Item = &str> {
+        self.buf.iter().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+impl TraceSink for RingSink {
+    fn emit(&mut self, line: &str) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(line.to_string());
+    }
+}
+
+/// Shared in-memory sink for tests: the frontend consumes the boxed sink,
+/// so assertions read the lines through the cloned handle afterwards.
+pub struct SharedVecSink {
+    lines: Arc<Mutex<Vec<String>>>,
+}
+
+impl SharedVecSink {
+    /// Returns the sink and a handle to the lines it will collect.
+    pub fn new() -> (SharedVecSink, Arc<Mutex<Vec<String>>>) {
+        let lines = Arc::new(Mutex::new(Vec::new()));
+        (SharedVecSink { lines: lines.clone() }, lines)
+    }
+}
+
+impl TraceSink for SharedVecSink {
+    fn emit(&mut self, line: &str) {
+        self.lines.lock().expect("sink lock").push(line.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_sink_keeps_most_recent_lines() {
+        let mut s = RingSink::new(3);
+        assert!(s.is_empty());
+        for i in 0..5 {
+            s.emit(&format!("line {i}"));
+        }
+        assert_eq!(s.len(), 3);
+        let got: Vec<&str> = s.lines().collect();
+        assert_eq!(got, vec!["line 2", "line 3", "line 4"]);
+    }
+
+    #[test]
+    fn ring_sink_cap_zero_still_holds_one() {
+        let mut s = RingSink::new(0);
+        s.emit("a");
+        s.emit("b");
+        assert_eq!(s.lines().collect::<Vec<_>>(), vec!["b"]);
+    }
+
+    #[test]
+    fn shared_vec_sink_collects_through_handle() {
+        let (mut s, handle) = SharedVecSink::new();
+        s.emit("x");
+        s.emit("y");
+        drop(s);
+        assert_eq!(*handle.lock().unwrap(), vec!["x", "y"]);
+    }
+
+    #[test]
+    fn file_sink_writes_lines() {
+        let dir = std::env::temp_dir().join(format!(
+            "tinyserve-sink-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let mut s = FileSink::create(&path).unwrap();
+        s.emit("one");
+        s.emit("two");
+        s.flush();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body, "one\ntwo\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

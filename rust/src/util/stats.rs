@@ -136,6 +136,8 @@ impl Samples {
 }
 
 /// Fixed-bucket histogram for bandwidth/latency traces (Figure 7 style).
+/// Feeds the TTFT / per-token latency paths and the metrics registry's
+/// JSONL + Prometheus exports (`sum` backs the exposition's `_sum` series).
 #[derive(Debug, Clone)]
 pub struct Histogram {
     pub lo: f64,
@@ -143,14 +145,24 @@ pub struct Histogram {
     pub counts: Vec<u64>,
     pub underflow: u64,
     pub overflow: u64,
+    /// sum of every pushed value (including out-of-range ones)
+    pub sum: f64,
 }
 
 impl Histogram {
     pub fn new(lo: f64, hi: f64, buckets: usize) -> Self {
-        Histogram { lo, hi, counts: vec![0; buckets], underflow: 0, overflow: 0 }
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; buckets],
+            underflow: 0,
+            overflow: 0,
+            sum: 0.0,
+        }
     }
 
     pub fn push(&mut self, x: f64) {
+        self.sum += x;
         if x < self.lo {
             self.underflow += 1;
         } else if x >= self.hi {
@@ -165,6 +177,37 @@ impl Histogram {
 
     pub fn total(&self) -> u64 {
         self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    fn bucket_width(&self) -> f64 {
+        (self.hi - self.lo) / self.counts.len().max(1) as f64
+    }
+
+    /// Percentile estimated from the buckets (p in [0, 100]): walk the
+    /// cumulative counts to the target rank and interpolate linearly
+    /// inside the bucket that crosses it. Resolution is one bucket width
+    /// — unlike `Samples::percentile` this needs O(buckets) memory, not
+    /// O(samples). Underflow clamps to `lo`, overflow to `hi`; NaN when
+    /// empty (mirroring `Samples`).
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let rank = p.clamp(0.0, 100.0) / 100.0 * total as f64;
+        let mut cum = self.underflow as f64;
+        if rank <= cum {
+            return self.lo;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            let next = cum + c as f64;
+            if rank <= next && c > 0 {
+                let frac = (rank - cum) / c as f64;
+                return self.lo + self.bucket_width() * (i as f64 + frac);
+            }
+            cum = next;
+        }
+        self.hi
     }
 }
 
@@ -214,5 +257,49 @@ mod tests {
         assert_eq!(h.underflow, 1);
         assert_eq!(h.overflow, 1);
         assert_eq!(h.total(), 12);
+        let expect: f64 = (0..10).map(|i| i as f64 + 0.5).sum::<f64>() - 1.0 + 99.0;
+        assert!((h.sum - expect).abs() < 1e-12, "sum tracks every push");
+    }
+
+    #[test]
+    fn histogram_percentile_tracks_samples_within_bucket_width() {
+        // same data through both estimators: the bucketed percentile must
+        // land within one bucket width of the exact sample percentile
+        let mut h = Histogram::new(0.0, 100.0, 50);
+        let mut s = Samples::new();
+        let mut x = 0.37f64;
+        for _ in 0..500 {
+            x = (x * 7919.0 + 0.123).rem_euclid(100.0);
+            h.push(x);
+            s.push(x);
+        }
+        // rank conventions differ by at most one sample, so the bucketed
+        // estimate can land in a neighbouring bucket: two widths bound it
+        let width = 100.0 / 50.0;
+        for p in [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0] {
+            let exact = s.percentile(p);
+            let approx = h.percentile(p);
+            assert!(
+                (approx - exact).abs() <= 2.0 * width,
+                "p{p}: bucketed {approx} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_percentile_edge_cases() {
+        let h = Histogram::new(0.0, 1.0, 4);
+        assert!(h.percentile(50.0).is_nan(), "empty histogram");
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push(-5.0);
+        h.push(9.0);
+        assert_eq!(h.percentile(0.0), 0.0, "underflow clamps to lo");
+        assert_eq!(h.percentile(100.0), 1.0, "overflow clamps to hi");
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for _ in 0..4 {
+            h.push(2.5); // all mass in bucket [2,3)
+        }
+        let p50 = h.percentile(50.0);
+        assert!((2.0..=3.0).contains(&p50), "p50 {p50} inside the hot bucket");
     }
 }

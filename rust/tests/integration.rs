@@ -8,9 +8,10 @@
 
 use tinyserve::config::{KvDtype, ServingConfig};
 use tinyserve::coordinator::{
-    serve_trace, DispatchKind, Frontend, Lifecycle, ServeEvent, ServeOptions,
-    ServeReport, TimeModel, WorkerPool,
+    event_log_header, serve_trace, DispatchKind, Frontend, Lifecycle,
+    ServeEvent, ServeOptions, ServeReport, TimeModel, WorkerPool,
 };
+use tinyserve::trace::{SharedVecSink, Tracer};
 use tinyserve::engine::{Engine, Sampling};
 use tinyserve::kvcache::EvictionPolicyKind;
 use tinyserve::metrics::StepMetrics;
@@ -503,7 +504,8 @@ fn spill_tier_is_token_transparent_under_int8_budget() {
     // bit-exactly; the CI double-run gate diffs this log across processes
     let (_, _, _, log2) = run(Some(budget_mb), Some(spill_mb));
     assert_eq!(log1, log2, "same seed, same spill-enabled event stream");
-    write_ci_log("spill_serve_events.log", &log1);
+    let header = event_log_header(42, 1, 1, "tinyserve", Some(budget_mb));
+    write_ci_log("spill_serve_events.log", &format!("{header}\n{log1}"));
 }
 
 fn lifecycle_req(
@@ -825,7 +827,11 @@ fn openloop_pool_event_stream_is_deterministic() {
     let a = run();
     let b = run();
     assert_eq!(a, b, "same seed, same event stream (timestamps included)");
-    write_ci_log("serve_events.log", &a);
+    // schema-versioned run header: identical for same-config double runs;
+    // the cross-executor CI diff (threads 1 vs 4 dirs) skips this line
+    // because it records the executor width
+    let header = event_log_header(seed, env_threads(), 2, "tinyserve", None);
+    write_ci_log("serve_events.log", &format!("{header}\n{a}"));
 }
 
 #[test]
@@ -911,7 +917,295 @@ fn threaded_rounds_replay_sequential_event_logs_exactly() {
         }
         threaded_log = log_par;
     }
-    write_ci_log("serve_events_threads4.log", &threaded_log);
+    // this file always records the threads=4 executor, so its header is
+    // identical across the sequential- and threaded-env CI runs
+    let header = event_log_header(
+        base_seed + (configs.len() - 1) as u64,
+        4,
+        4,
+        "tinyserve",
+        Some(budget_mb),
+    );
+    write_ci_log("serve_events_threads4.log", &format!("{header}\n{threaded_log}"));
+}
+
+#[test]
+fn trace_and_metrics_streams_are_deterministic_across_executors() {
+    // Tentpole acceptance: under modeled time the structured span trace
+    // and the periodic metrics snapshots are byte-identical across two
+    // runs of the same seed AND across round executors (threads 1 vs 4).
+    // Also the CI writer for the trace/metrics artifacts.
+    let m = require!(manifest());
+    let seed = pallas_seed();
+    let run = |threads: usize| -> (String, String) {
+        let pool =
+            WorkerPool::build(&m, &serve_cfg(None), 2, DispatchKind::LeastLoaded)
+                .expect("pool");
+        let opts = ServeOptions {
+            time_model: TimeModel::Modeled,
+            seed,
+            threads,
+            metrics_every: 8,
+            ..Default::default()
+        };
+        let (trace_sink, trace_lines) = SharedVecSink::new();
+        let (metrics_sink, metrics_lines) = SharedVecSink::new();
+        let mut plugins = Pipeline::new();
+        let mut fe = Frontend::builder()
+            .options(opts)
+            .tracer(Tracer::to_sink(Box::new(trace_sink)))
+            .metrics_sink(Box::new(metrics_sink))
+            .build_pool(pool, &mut plugins);
+        fe.set_source(Box::new(bursty_openloop(seed)));
+        while fe.has_work() {
+            fe.step().expect("step");
+        }
+        let r = fe.into_report();
+        assert_eq!(r.metrics.total_requests, 12, "every request completes");
+        let t = trace_lines.lock().unwrap().join("\n");
+        let s = metrics_lines.lock().unwrap().join("\n");
+        (t, s)
+    };
+    let (t1a, m1a) = run(1);
+    let (t1b, m1b) = run(1);
+    assert_eq!(t1a, t1b, "same seed, same trace bytes");
+    assert_eq!(m1a, m1b, "same seed, same metrics snapshot bytes");
+    let (t4, m4) = run(4);
+    assert_eq!(t1a, t4, "trace stream is executor-independent");
+    assert_eq!(m1a, m4, "metrics stream is executor-independent");
+
+    // stream shape: run header first (schema-versioned, no thread count —
+    // that is what makes the cross-executor byte-diff above possible),
+    // then span / snapshot lines
+    let first = t1a.lines().next().expect("nonempty trace");
+    assert!(first.contains(r#""kind":"header""#), "header first: {first}");
+    assert!(first.contains(r#""schema":1"#), "{first}");
+    assert!(!first.contains("threads"), "header is executor-independent");
+    for kind in ["queued", "admitted", "prefill", "round", "finished"] {
+        assert!(
+            t1a.contains(&format!(r#""kind":"{kind}""#)),
+            "trace missing {kind} spans"
+        );
+    }
+    assert!(
+        m1a.lines().next().expect("nonempty metrics").contains(r#""kind":"header""#)
+    );
+    assert!(m1a.lines().nth(1).is_some(), "snapshots at --metrics-every 8");
+    assert!(m1a.lines().skip(1).all(|l| l.contains(r#""kind":"metrics""#)));
+    write_ci_log("serve_trace.jsonl", &t1a);
+    write_ci_log("serve_metrics.jsonl", &m1a);
+}
+
+#[test]
+fn trace_span_trees_are_well_formed_across_policies_and_dispatch() {
+    // Span-tree well-formedness property, swept over eviction policies x
+    // dispatch kinds x seeds under KV-budget pressure (so store events
+    // flow inside prefill and round spans). For every run the stream must
+    // parse as JSONL and satisfy:
+    //   - exactly one header line, and it comes first;
+    //   - per request: exactly one `queued`, at most one `admitted` and
+    //     one `prefill`, exactly one terminal (finished|cancelled|expired);
+    //   - the lifecycle chain is monotone in virtual time:
+    //     queued.t <= admitted.t <= prefill.t0 <= prefill.t1 <= terminal.t;
+    //   - `prefill` requires `admitted`; `finished` requires `prefill`;
+    //   - `round` spans have t0 <= t1 and only reference prefilled,
+    //     non-terminal requests;
+    //   - store events anchor to an already-opened span (a `prefill` line
+    //     for ctx=prefill, a `round` line with that number for ctx=round).
+    let m = require!(manifest());
+    use tinyserve::util::json::Json;
+    let base_seed = pallas_seed();
+    let run = |dispatch: DispatchKind,
+               eviction: EvictionPolicyKind,
+               seed: u64,
+               budget_mb: Option<f64>|
+     -> (Vec<String>, ServeReport) {
+        let cfg = ServingConfig { eviction, ..serve_cfg(budget_mb) };
+        let pool = WorkerPool::build(&m, &cfg, 2, dispatch).expect("pool");
+        let opts = ServeOptions {
+            time_model: TimeModel::Modeled,
+            seed,
+            ..Default::default()
+        };
+        let (sink, lines) = SharedVecSink::new();
+        let mut plugins = Pipeline::new();
+        let mut fe = Frontend::builder()
+            .options(opts)
+            .tracer(Tracer::to_sink(Box::new(sink)))
+            .build_pool(pool, &mut plugins);
+        fe.set_source(Box::new(bursty_openloop(seed)));
+        while fe.has_work() {
+            fe.step().expect("step");
+        }
+        let r = fe.into_report();
+        let lines = lines.lock().unwrap().clone();
+        (lines, r)
+    };
+    let num = |v: &Json, k: &str, tag: &str| -> f64 {
+        v.get(k)
+            .and_then(|j| j.as_f64())
+            .unwrap_or_else(|| panic!("{tag}: missing numeric field {k:?}"))
+    };
+    #[derive(Default)]
+    struct Span {
+        queued: u32,
+        admitted: u32,
+        prefilled: u32,
+        terminal: u32,
+        last_t: f64,
+    }
+    // returns (n_requests, n_store_events) seen in the stream
+    let check = |lines: &[String], tag: &str| -> (usize, usize) {
+        use std::collections::{HashMap, HashSet};
+        let mut spans: HashMap<u64, Span> = HashMap::new();
+        let mut rounds_seen: HashSet<u64> = HashSet::new();
+        let mut store_events = 0usize;
+        for (i, line) in lines.iter().enumerate() {
+            let v = Json::parse(line)
+                .unwrap_or_else(|e| panic!("{tag}: line {i} not JSON: {e}"));
+            let kind = v.get("kind").and_then(|j| j.as_str()).expect("kind");
+            if i == 0 {
+                assert_eq!(kind, "header", "{tag}: header must come first");
+                continue;
+            }
+            assert_ne!(kind, "header", "{tag}: duplicate header at line {i}");
+            match kind {
+                "queued" => {
+                    let id = num(&v, "id", tag) as u64;
+                    let s = spans.entry(id).or_default();
+                    assert_eq!(s.queued, 0, "{tag}: request {id} queued twice");
+                    s.queued = 1;
+                    s.last_t = num(&v, "t", tag);
+                }
+                "deferred" => {
+                    let id = num(&v, "id", tag) as u64;
+                    let s = spans
+                        .get(&id)
+                        .unwrap_or_else(|| panic!("{tag}: deferred unknown {id}"));
+                    assert_eq!(s.queued, 1);
+                    assert_eq!(s.terminal, 0, "{tag}: deferred after terminal");
+                }
+                "admitted" => {
+                    let id = num(&v, "id", tag) as u64;
+                    let t = num(&v, "t", tag);
+                    let s = spans
+                        .get_mut(&id)
+                        .unwrap_or_else(|| panic!("{tag}: admitted unknown {id}"));
+                    assert_eq!(s.queued, 1, "{tag}: {id} admitted before queued");
+                    assert_eq!(s.admitted, 0, "{tag}: {id} admitted twice");
+                    assert_eq!(s.terminal, 0);
+                    assert!(t >= s.last_t, "{tag}: {id} admitted before queued.t");
+                    s.admitted = 1;
+                    s.last_t = t;
+                }
+                "prefill" => {
+                    let id = num(&v, "id", tag) as u64;
+                    let (t0, t1) = (num(&v, "t0", tag), num(&v, "t1", tag));
+                    let s = spans
+                        .get_mut(&id)
+                        .unwrap_or_else(|| panic!("{tag}: prefill unknown {id}"));
+                    assert_eq!(s.admitted, 1, "{tag}: {id} prefill before admit");
+                    assert_eq!(s.prefilled, 0, "{tag}: {id} prefilled twice");
+                    assert!(t0 >= s.last_t && t1 >= t0, "{tag}: {id} prefill span");
+                    s.prefilled = 1;
+                    s.last_t = t1;
+                }
+                "round" => {
+                    let (t0, t1) = (num(&v, "t0", tag), num(&v, "t1", tag));
+                    assert!(t1 >= t0, "{tag}: round span t1 < t0");
+                    rounds_seen.insert(num(&v, "round", tag) as u64);
+                    let ids = v.get("ids").and_then(|j| j.as_arr()).expect("ids");
+                    assert!(!ids.is_empty(), "{tag}: round stepped no requests");
+                    for j in ids {
+                        let id = j.as_f64().expect("round id") as u64;
+                        let s = spans
+                            .get(&id)
+                            .unwrap_or_else(|| panic!("{tag}: round unknown {id}"));
+                        assert_eq!(s.prefilled, 1, "{tag}: {id} in round, no prefill");
+                        assert_eq!(s.terminal, 0, "{tag}: {id} stepped after terminal");
+                    }
+                }
+                "demote" | "spill_out" | "spill_fault" | "readahead" => {
+                    store_events += 1;
+                    match v.get("ctx").and_then(|j| j.as_str()) {
+                        Some("prefill") => {
+                            let id = num(&v, "id", tag) as u64;
+                            let s = spans.get(&id).unwrap_or_else(|| {
+                                panic!("{tag}: store event for unknown {id}")
+                            });
+                            assert_eq!(
+                                s.prefilled, 1,
+                                "{tag}: store event outside an open prefill span"
+                            );
+                        }
+                        Some("round") => {
+                            let r = num(&v, "round", tag) as u64;
+                            assert!(
+                                rounds_seen.contains(&r),
+                                "{tag}: store event anchored to unseen round {r}"
+                            );
+                        }
+                        other => panic!("{tag}: bad store ctx {other:?}"),
+                    }
+                }
+                "finished" | "cancelled" | "expired" => {
+                    let id = num(&v, "id", tag) as u64;
+                    let t = num(&v, "t", tag);
+                    let s = spans
+                        .get_mut(&id)
+                        .unwrap_or_else(|| panic!("{tag}: terminal unknown {id}"));
+                    assert_eq!(s.queued, 1);
+                    assert_eq!(s.terminal, 0, "{tag}: {id} terminated twice");
+                    if kind == "finished" {
+                        assert_eq!(s.prefilled, 1, "{tag}: {id} finished, no prefill");
+                    }
+                    assert!(t >= s.last_t, "{tag}: {id} terminal before {}", s.last_t);
+                    s.terminal = 1;
+                    s.last_t = t;
+                }
+                other => panic!("{tag}: unexpected event kind {other:?}"),
+            }
+        }
+        for (id, s) in &spans {
+            assert_eq!(s.terminal, 1, "{tag}: request {id} left without a terminal");
+        }
+        (spans.len(), store_events)
+    };
+    // unbounded probe sizes a budget that forces store traffic
+    let (probe_lines, probe) = run(
+        DispatchKind::LeastLoaded,
+        EvictionPolicyKind::QueryAware,
+        base_seed,
+        None,
+    );
+    check(&probe_lines, "probe");
+    assert!(probe.metrics.kv_bytes_peak > 0);
+    let budget_mb = probe.metrics.kv_bytes_peak as f64 * 0.7 / 1e6;
+    // each axis swept in full against a fixed partner (bounds runtime),
+    // with a distinct seed per config
+    let mut configs: Vec<(DispatchKind, EvictionPolicyKind)> = DispatchKind::all()
+        .iter()
+        .map(|&d| (d, EvictionPolicyKind::QueryAware))
+        .collect();
+    configs.extend(
+        EvictionPolicyKind::all()
+            .iter()
+            .filter(|&&e| e != EvictionPolicyKind::QueryAware)
+            .map(|&e| (DispatchKind::LeastLoaded, e)),
+    );
+    let mut total_store_events = 0usize;
+    for (i, &(dispatch, eviction)) in configs.iter().enumerate() {
+        let seed = base_seed + i as u64;
+        let tag = format!("{}/{}/seed {seed}", dispatch.name(), eviction.name());
+        let (lines, _) = run(dispatch, eviction, seed, Some(budget_mb));
+        let (n_requests, n_store) = check(&lines, &tag);
+        assert_eq!(n_requests, 12, "{tag}: every submitted request traced");
+        total_store_events += n_store;
+    }
+    assert!(
+        total_store_events > 0,
+        "a 70% KV budget must surface store events inside spans"
+    );
 }
 
 #[test]
