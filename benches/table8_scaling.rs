@@ -10,8 +10,16 @@
 //! 2. **A100 projection** (the pre-pool content): the calibrated hardware
 //!    model extrapolates the measured single-worker service rate to the
 //!    paper's 1..8-GPU testbed.
+//! 3. **Executor dispatch overhead** (artifact-free, runs first): per-round
+//!    cost of the scoped spawn/join step phase vs the persistent
+//!    channel-fed decode threads, on a no-op round so only the dispatch
+//!    machinery is priced. This is the number `--executor persistent`
+//!    saves on every decode round.
 
 use tinyserve::config::{KvDtype, ServingConfig};
+use tinyserve::coordinator::pool::{
+    execute_round_with, PersistentExecutor, RoundExecutor,
+};
 use tinyserve::coordinator::{
     DispatchKind, Frontend, ServeOptions, ServeReport, TimeModel, WorkerPool,
 };
@@ -83,7 +91,61 @@ fn serve_pool(
     Some((fe.into_report(), wall_s))
 }
 
+/// Mean per-round wall cost (µs) of running `rounds` no-op decode rounds
+/// through `exec`, reusing `persistent` when given. The round body is a
+/// single multiply per worker, so the measurement is dominated by thread
+/// spawn/join (scoped) or channel send + completion wait (persistent).
+fn dispatch_overhead_us(
+    exec: RoundExecutor,
+    persistent: Option<&PersistentExecutor>,
+    workers: usize,
+    rounds: usize,
+) -> f64 {
+    let step = |w: usize, x: u64| -> u64 { (w as u64).wrapping_mul(x) };
+    let work = || (0..workers).map(|w| (w, w as u64 + 1)).collect::<Vec<_>>();
+    for _ in 0..64 {
+        execute_round_with(exec, persistent, work(), &step);
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..rounds {
+        execute_round_with(exec, persistent, work(), &step);
+    }
+    t0.elapsed().as_secs_f64() / rounds as f64 * 1e6
+}
+
 fn main() {
+    // ---- executor dispatch overhead (no artifacts needed) ----
+    let workers = 4usize;
+    let rounds = scale(2_000);
+    let scoped_us = dispatch_overhead_us(
+        RoundExecutor::Threaded { threads: workers },
+        None,
+        workers,
+        rounds,
+    );
+    let persistent = PersistentExecutor::new(workers);
+    let persistent_us = dispatch_overhead_us(
+        RoundExecutor::Persistent { threads: workers },
+        Some(&persistent),
+        workers,
+        rounds,
+    );
+    let mut te = Table::new(
+        &format!(
+            "Table 8c: per-round dispatch overhead ({workers} workers, no-op \
+             round, {rounds} rounds)"
+        ),
+        &["executor", "us/round"],
+    );
+    te.row(vec!["scoped".into(), format!("{scoped_us:.1}")]);
+    te.row(vec!["persistent".into(), format!("{persistent_us:.1}")]);
+    te.emit(&tinyserve::results_dir(), "table8_executor");
+    println!(
+        "persistent executor: {persistent_us:.1} us/round vs scoped \
+         {scoped_us:.1} us/round ({:.2}x lower dispatch overhead)",
+        scoped_us / persistent_us.max(1e-9)
+    );
+
     let manifest = Manifest::load(&tinyserve::artifacts_dir()).expect("artifacts");
     let info = manifest.model(MODEL).expect("model").clone();
     let n_requests = scale(48);
@@ -210,6 +272,10 @@ fn main() {
                 "threads_dim",
                 Json::Arr(threads_dim.iter().map(|&t| Json::from(t)).collect()),
             ),
+            // Table 8c numbers ride along in the perf record so regressions
+            // in the persistent executor's per-round win are diffable
+            ("dispatch_scoped_us", Json::Num(scoped_us)),
+            ("dispatch_persistent_us", Json::Num(persistent_us)),
         ],
     );
 

@@ -1,0 +1,127 @@
+//! Closed-loop TCP client for the network serving front door
+//! (docs/network_serving.md): N concurrent connections, each holding one
+//! request in flight, thinking between completions, retrying on typed
+//! `retry` backpressure and reporting typed `overload` sheds.
+//!
+//! Two modes:
+//!
+//!   * `--addr HOST:PORT` — drive an external `tinyserve serve --listen`
+//!     server (the real engine path).
+//!   * no `--addr` — self-serve: bind an in-process server over the
+//!     deterministic `MockBackend` on an ephemeral loopback port and drive
+//!     it. Runs everywhere (no artifacts); with `--conns 1` the server's
+//!     virtual clock makes the whole exchange seed-deterministic, and
+//!     `--trace-out FILE` dumps the server-side connection/request trace
+//!     for byte-diffing across runs (the CI loopback smoke job does
+//!     exactly this, twice, and diffs).
+//!
+//!     cargo run --release --example serve_client -- \
+//!         --conns 1 --requests 8 --seed 7 --trace-out /tmp/net1.jsonl
+//!
+//! Backpressure demo: shrink the server with --max-conns / --queue-depth /
+//! --shed-policy shed and raise --conns to watch typed sheds instead of
+//! unbounded queueing.
+
+use anyhow::Result;
+
+use tinyserve::report::Table;
+use tinyserve::server::shed::{AdmissionConfig, ShedPolicy};
+use tinyserve::server::{MockBackend, Server, ServerConfig};
+use tinyserve::util::cli::Args;
+use tinyserve::workload::{run_closed_loop, ClientConfig};
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let mut client = ClientConfig {
+        addr: args.str_or("addr", ""),
+        conns: args.usize_or("conns", 2),
+        requests_per_conn: args.usize_or("requests", 4),
+        prompt_chars: args.usize_or("prompt-chars", 400),
+        max_new_tokens: args.usize_or("max-new", 16),
+        think_ms: args.f64_or("think-ms", 0.0),
+        seed: args.usize_or("seed", 42) as u64,
+        deadline_ms: args.f64_opt("deadline-ms"),
+        max_retries: args.usize_or("max-retries", 8),
+    };
+
+    // self-serve: spin up a MockBackend server on an ephemeral port
+    let mut self_serve = None;
+    if client.addr.is_empty() {
+        let policy_arg = args.str_or("shed-policy", "defer");
+        let policy = ShedPolicy::parse(&policy_arg).unwrap_or_else(|| {
+            eprintln!(
+                "unknown --shed-policy '{policy_arg}'; valid: {}",
+                ShedPolicy::names().join("|")
+            );
+            std::process::exit(2);
+        });
+        let cfg = ServerConfig {
+            exit_when_idle: true,
+            admission: AdmissionConfig {
+                max_conns: args.usize_or("max-conns", 64),
+                queue_depth: args.usize_or("queue-depth", 256),
+                policy,
+                ..AdmissionConfig::default()
+            },
+            ..ServerConfig::default()
+        };
+        let server = Server::bind(cfg)?;
+        client.addr = server.local_addr()?.to_string();
+        println!("self-serving MockBackend on {}", client.addr);
+        self_serve = Some(std::thread::spawn(move || {
+            let mut backend = MockBackend::new();
+            let stats = server.run(&mut backend);
+            (stats, backend)
+        }));
+    }
+
+    let t0 = std::time::Instant::now();
+    let stats = run_closed_loop(&client)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new("serve_client report", &["metric", "value"]);
+    for (k, v) in [
+        ("connections", client.conns.to_string()),
+        ("submitted", stats.submitted.to_string()),
+        ("finished", stats.finished.to_string()),
+        ("cancelled", stats.cancelled.to_string()),
+        ("expired", stats.expired.to_string()),
+        ("retried (deferred)", stats.retried.to_string()),
+        ("overloaded (shed)", stats.overloaded.to_string()),
+        ("conns shed", stats.conns_shed.to_string()),
+        ("tokens streamed", stats.tokens.to_string()),
+        ("wall time", format!("{wall:.3} s")),
+    ] {
+        t.row(vec![k.to_string(), v]);
+    }
+    t.emit(&tinyserve::results_dir(), "serve_client");
+
+    if let Some(handle) = self_serve {
+        let (server_stats, backend) = handle.join().expect("server thread");
+        let server_stats = server_stats?;
+        println!(
+            "server: accepted {} closed {} submits {} deferred {} shed {}+{}",
+            server_stats.accepted,
+            server_stats.closed,
+            server_stats.submitted,
+            server_stats.shed.submits_deferred,
+            server_stats.shed.conns_shed,
+            server_stats.shed.submits_shed,
+        );
+        assert_eq!(
+            backend.kv_bytes_in_use(),
+            0,
+            "server leaked KV bytes after a clean drain"
+        );
+        if let Some(path) = args.get("trace-out") {
+            // conn lifecycle spans, then the full event-signature stream:
+            // with --conns 1 both are pure functions of the seed, so two
+            // runs of this example must write byte-identical files
+            let mut lines = backend.trace.clone();
+            lines.extend(backend.event_log.iter().cloned());
+            std::fs::write(path, lines.join("\n") + "\n")?;
+            println!("server trace ({} lines) -> {path}", lines.len());
+        }
+    }
+    Ok(())
+}

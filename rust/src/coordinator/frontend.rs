@@ -49,15 +49,17 @@
 //! 2. **step** (parallel): execute the plan through the pool's
 //!    [`RoundExecutor`](super::pool::RoundExecutor) — sequential on the
 //!    pump thread, or each worker's `&mut Engine` + batch + forked RNG on
-//!    its own scoped OS thread (`ServeOptions::threads`, `--threads`);
-//!    workers share no mutable state during this phase;
+//!    a scoped OS thread (`--executor scoped`) or a long-lived persistent
+//!    decode thread (`--executor persistent`, the default;
+//!    `ServeOptions::threads`, `--threads`); workers share no mutable
+//!    state during this phase;
 //! 3. **commit** (serial): merge per-worker `StepMetrics` in fixed worker
 //!    order, advance the clock by the *slowest* worker while `busy`
 //!    accumulates the sum, emit token events, run plugins, retire
 //!    finished sequences, and re-queue deferred work.
 //!
 //! Every worker samples from its own RNG stream (forked from the seed in
-//! worker order at construction), so the two executors produce
+//! worker order at construction), so every executor produces
 //! byte-identical event streams under `TimeModel::Modeled` — and the
 //! serial commit phase is the architectural seam where preemption and
 //! cross-worker session migration slot in later without touching the
@@ -559,6 +561,27 @@ impl<'a> Frontend<'a> {
     /// Resident KV bytes summed across all pool workers.
     pub fn kv_bytes_in_use(&self) -> usize {
         self.pool.total_kv_bytes()
+    }
+
+    /// Requests waiting for admission: the batcher queue plus submitted
+    /// arrivals the pump has not pulled yet. The network front door's
+    /// `--queue-depth` backpressure gate reads this before every submit.
+    pub fn queued_len(&self) -> usize {
+        self.batcher.queue_len() + self.pending.len()
+    }
+
+    /// Requests currently decoding.
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Emit an externally-produced span event (the network front door's
+    /// connection lifecycle) into the run's trace stream. A no-op without
+    /// an attached tracer, like every internal hook.
+    pub fn trace_event(&mut self, ev: &TraceEvent) {
+        if self.tracer.enabled() {
+            self.tracer.emit(ev);
+        }
     }
 
     /// Run-level metrics accumulated so far.

@@ -17,7 +17,10 @@ pub use frontend::{
     event_log_header, Clock, Frontend, FrontendBuilder, Lifecycle,
     RequestHandle, ServeEvent, EVENT_LOG_SCHEMA,
 };
-pub use pool::{DispatchKind, RoundExecutor, WorkerPool, WorkerStats};
+pub use pool::{
+    DispatchKind, ExecutorKind, PersistentExecutor, RoundExecutor, WorkerPool,
+    WorkerStats,
+};
 pub use router::Router;
 #[allow(deprecated)]
 pub use server::serve_trace;

@@ -34,14 +34,17 @@
 //! [`RoundExecutor`]: `Sequential` steps each worker's batch in ascending
 //! worker order on the pump thread; `Threaded` moves each worker's
 //! exclusive `&mut Engine` (engine + `PageStore` slice + per-worker spill
-//! directory) onto a scoped OS thread and joins. Results are always
-//! merged in ascending worker order, and every worker draws from its own
-//! forked RNG stream, so the two executors are *byte-identical* under
+//! directory) onto a scoped OS thread and joins; `Persistent` feeds the
+//! same chunks to long-lived worker threads over channels (the
+//! `util::threadpool` pattern), amortizing the per-round spawn/join cost
+//! that `Threaded` pays on every decode round. Results are always merged
+//! in ascending worker order, and every worker draws from its own forked
+//! RNG stream, so all three executors are *byte-identical* under
 //! `TimeModel::Modeled` — threading changes wall time, never the event
 //! stream. Workers share no mutable state during the step phase (each
 //! owns its full store → pool → spill stack; see the lock-ordering note
-//! in docs/pagestore_design.md), which is what makes the scoped-thread
-//! path safe without any cross-worker locking.
+//! in docs/pagestore_design.md), which is what makes both threaded paths
+//! safe without any cross-worker locking.
 
 use anyhow::Result;
 
@@ -102,6 +105,10 @@ pub enum RoundExecutor {
     /// the commit phase; results merge in fixed worker order, so event
     /// streams match `Sequential` byte-for-byte under modeled time
     Threaded { threads: usize },
+    /// step workers on `threads` long-lived decode threads fed over
+    /// channels (see [`PersistentExecutor`]); identical chunking and
+    /// merge order to `Threaded`, without the per-round spawn/join
+    Persistent { threads: usize },
 }
 
 impl RoundExecutor {
@@ -118,6 +125,7 @@ impl RoundExecutor {
         match self {
             RoundExecutor::Sequential => 1,
             RoundExecutor::Threaded { threads } => (*threads).max(1),
+            RoundExecutor::Persistent { threads } => (*threads).max(1),
         }
     }
 
@@ -125,6 +133,199 @@ impl RoundExecutor {
         match self {
             RoundExecutor::Sequential => "sequential",
             RoundExecutor::Threaded { .. } => "threaded",
+            RoundExecutor::Persistent { .. } => "persistent",
+        }
+    }
+}
+
+/// Which multi-threaded step-phase implementation `--threads N` selects
+/// (`--executor` on the CLI; `ServeOptions::executor`). Orthogonal to the
+/// thread count: either kind with `threads <= 1` is the sequential path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// scoped OS threads spawned and joined every decode round
+    Scoped,
+    /// long-lived decode threads fed work over channels (the default:
+    /// same event streams, no per-round spawn/join overhead)
+    Persistent,
+}
+
+impl ExecutorKind {
+    pub fn parse(s: &str) -> Option<ExecutorKind> {
+        match s {
+            "scoped" => Some(ExecutorKind::Scoped),
+            "persistent" => Some(ExecutorKind::Persistent),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecutorKind::Scoped => "scoped",
+            ExecutorKind::Persistent => "persistent",
+        }
+    }
+
+    pub fn names() -> Vec<&'static str> {
+        vec![ExecutorKind::Scoped.name(), ExecutorKind::Persistent.name()]
+    }
+
+    /// The round executor this kind selects at a given thread count.
+    pub fn executor(&self, threads: usize) -> RoundExecutor {
+        if threads <= 1 {
+            return RoundExecutor::Sequential;
+        }
+        match self {
+            ExecutorKind::Scoped => RoundExecutor::Threaded { threads },
+            ExecutorKind::Persistent => RoundExecutor::Persistent { threads },
+        }
+    }
+}
+
+/// Type-erased round job fed to a persistent decode thread. Lifetimes are
+/// erased at the submission site (see the SAFETY note in
+/// [`PersistentExecutor::run`]); the completion channel is what makes
+/// that sound.
+type RoundJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// Long-lived decode threads for [`RoundExecutor::Persistent`].
+///
+/// `Threaded` pays a spawn + join per decode round; at serving scale that
+/// is thousands of rounds, each a few tens of microseconds of thread
+/// setup. A `PersistentExecutor` spawns its threads once and feeds each
+/// round's contiguous chunks over per-thread channels, blocking on a
+/// completion channel before returning — the same join point as
+/// `std::thread::scope`, amortized. Chunking, merge order, and panic
+/// propagation are identical to the scoped path, so the event-stream
+/// determinism contract is untouched.
+pub struct PersistentExecutor {
+    senders: Vec<std::sync::mpsc::Sender<RoundJob>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl PersistentExecutor {
+    pub fn new(threads: usize) -> PersistentExecutor {
+        let threads = threads.max(1);
+        let mut senders = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let (tx, rx) = std::sync::mpsc::channel::<RoundJob>();
+            let handle = std::thread::Builder::new()
+                .name(format!("tinyserve-decode-{i}"))
+                .spawn(move || {
+                    // jobs arrive wrapped in catch_unwind, so the loop
+                    // only ever exits when the pool drops its sender
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("spawn persistent decode thread");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        PersistentExecutor { senders, handles }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Run one round's chunks on the persistent threads: same contract as
+    /// [`execute_round`] — results in input order, panics propagate after
+    /// every chunk has completed.
+    pub fn run<T: Send, R: Send>(
+        &self,
+        work: Vec<(usize, T)>,
+        f: &(impl Fn(usize, T) -> R + Sync),
+    ) -> Vec<(usize, R)> {
+        if work.len() <= 1 {
+            return work.into_iter().map(|(w, t)| (w, f(w, t))).collect();
+        }
+        let threads = self.senders.len();
+        let chunk = work.len().div_ceil(threads);
+        let mut chunks: Vec<Vec<(usize, T)>> = Vec::new();
+        let mut it = work.into_iter();
+        loop {
+            let c: Vec<(usize, T)> = it.by_ref().take(chunk).collect();
+            if c.is_empty() {
+                break;
+            }
+            chunks.push(c);
+        }
+        let n = chunks.len();
+        // carries (chunk index, thread::Result<Vec<(usize, R)>>)
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        let mut sent = 0usize;
+        for (i, c) in chunks.into_iter().enumerate() {
+            let tx = done_tx.clone();
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    c.into_iter().map(|(w, t)| (w, f(w, t))).collect::<Vec<_>>()
+                }));
+                // a closed receiver means the caller already bailed; the
+                // result has nowhere to go and the thread moves on
+                let _ = tx.send((i, out));
+            });
+            // SAFETY: the job borrows `f` and the chunk payloads from this
+            // stack frame, but the channel demands 'static. Erasing the
+            // lifetime is sound because this function does not return (or
+            // unwind) until every submitted job closure has been
+            // *destroyed*: completions are counted on `done_rx` below, and
+            // a recv error can only occur once all `done_tx` clones — one
+            // per job, dropped when the job runs or is discarded — are
+            // gone. This is the scoped-thread join, expressed over the
+            // pool's long-lived channels.
+            let job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, RoundJob>(job)
+            };
+            if self.senders[i].send(job).is_err() {
+                // decode thread gone (only possible if it was killed out
+                // from under us); drain what was sent, then fail loudly
+                break;
+            }
+            sent += 1;
+        }
+        drop(done_tx);
+        // element type: Option<thread::Result<Vec<(usize, R)>>>, inferred
+        // from the recv below
+        let mut slots = Vec::new();
+        slots.resize_with(n, || None);
+        for _ in 0..sent {
+            match done_rx.recv() {
+                Ok((i, res)) => slots[i] = Some(res),
+                // all senders dropped: every outstanding job closure has
+                // been destroyed, so unwinding below is borrow-safe
+                Err(_) => break,
+            }
+        }
+        let mut out = Vec::new();
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        let mut missing = false;
+        for s in slots {
+            match s {
+                Some(Ok(v)) => out.extend(v),
+                Some(Err(e)) => {
+                    if panic.is_none() {
+                        panic = Some(e);
+                    }
+                }
+                None => missing = true,
+            }
+        }
+        if let Some(e) = panic {
+            std::panic::resume_unwind(e);
+        }
+        assert!(!missing, "persistent decode thread died mid-round");
+        out
+    }
+}
+
+impl Drop for PersistentExecutor {
+    fn drop(&mut self) {
+        // closing the channels ends each thread's recv loop
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
         }
     }
 }
@@ -147,9 +348,28 @@ pub fn execute_round<T: Send, R: Send>(
     work: Vec<(usize, T)>,
     f: &(impl Fn(usize, T) -> R + Sync),
 ) -> Vec<(usize, R)> {
+    execute_round_with(exec, None, work, f)
+}
+
+/// [`execute_round`] with an optional long-lived [`PersistentExecutor`].
+/// A `Persistent` round uses `persistent` when supplied (the pool's
+/// amortized path) and otherwise spins up a throwaway executor — correct,
+/// but paying the spawn cost the variant exists to avoid.
+pub fn execute_round_with<T: Send, R: Send>(
+    exec: RoundExecutor,
+    persistent: Option<&PersistentExecutor>,
+    work: Vec<(usize, T)>,
+    f: &(impl Fn(usize, T) -> R + Sync),
+) -> Vec<(usize, R)> {
     let threads = exec.threads();
     if threads == 1 || work.len() <= 1 {
         return work.into_iter().map(|(w, t)| (w, f(w, t))).collect();
+    }
+    if let RoundExecutor::Persistent { .. } = exec {
+        return match persistent {
+            Some(p) => p.run(work, f),
+            None => PersistentExecutor::new(threads).run(work, f),
+        };
     }
     let chunk = work.len().div_ceil(threads);
     let mut chunks: Vec<Vec<(usize, T)>> = Vec::new();
@@ -301,6 +521,11 @@ pub struct WorkerPool<'a> {
     pub dispatch: DispatchKind,
     rr_next: usize,
     pub stats: Vec<WorkerStats>,
+    /// long-lived decode threads, built lazily on the first
+    /// `Persistent` round and reused (rebuilt only if the thread count
+    /// changes); `None` until then, and always `None` on the
+    /// sequential/scoped paths
+    persistent: Option<PersistentExecutor>,
 }
 
 impl WorkerPool<'static> {
@@ -353,6 +578,7 @@ impl WorkerPool<'static> {
             dispatch,
             rr_next: 0,
             stats: vec![WorkerStats::default(); workers],
+            persistent: None,
         })
     }
 }
@@ -366,6 +592,7 @@ impl<'a> WorkerPool<'a> {
             dispatch: DispatchKind::RoundRobin,
             rr_next: 0,
             stats: vec![WorkerStats::default()],
+            persistent: None,
         }
     }
 
@@ -449,8 +676,15 @@ impl<'a> WorkerPool<'a> {
         work: Vec<(usize, T)>,
         f: impl Fn(usize, &mut Engine, T) -> R + Sync,
     ) -> Vec<(usize, R)> {
+        if let RoundExecutor::Persistent { threads } = exec {
+            let t = threads.max(1);
+            if self.persistent.as_ref().map(|p| p.threads()) != Some(t) {
+                self.persistent = Some(PersistentExecutor::new(t));
+            }
+        }
+        let WorkerPool { slots, persistent, .. } = self;
         let mut engines: Vec<Option<&mut Engine>> =
-            self.slots.iter_mut().map(|s| Some(s.get_mut())).collect();
+            slots.iter_mut().map(|s| Some(s.get_mut())).collect();
         let work: Vec<(usize, (&mut Engine, T))> = work
             .into_iter()
             .map(|(w, t)| {
@@ -458,7 +692,7 @@ impl<'a> WorkerPool<'a> {
                 (w, (e, t))
             })
             .collect();
-        execute_round(exec, work, &|w, payload| {
+        execute_round_with(exec, persistent.as_ref(), work, &|w, payload| {
             let (engine, t) = payload;
             f(w, engine, t)
         })
@@ -553,8 +787,30 @@ mod tests {
         );
         assert_eq!(RoundExecutor::Sequential.threads(), 1);
         assert_eq!(RoundExecutor::Threaded { threads: 4 }.threads(), 4);
+        assert_eq!(RoundExecutor::Persistent { threads: 4 }.threads(), 4);
         assert_eq!(RoundExecutor::Sequential.name(), "sequential");
         assert_eq!(RoundExecutor::Threaded { threads: 2 }.name(), "threaded");
+        assert_eq!(RoundExecutor::Persistent { threads: 2 }.name(), "persistent");
+    }
+
+    #[test]
+    fn executor_kind_parse_and_selection() {
+        for k in [ExecutorKind::Scoped, ExecutorKind::Persistent] {
+            assert_eq!(ExecutorKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ExecutorKind::parse("bogus"), None);
+        assert_eq!(ExecutorKind::names(), vec!["scoped", "persistent"]);
+        // threads <= 1 is the sequential path for either kind
+        assert_eq!(ExecutorKind::Scoped.executor(1), RoundExecutor::Sequential);
+        assert_eq!(ExecutorKind::Persistent.executor(0), RoundExecutor::Sequential);
+        assert_eq!(
+            ExecutorKind::Scoped.executor(4),
+            RoundExecutor::Threaded { threads: 4 }
+        );
+        assert_eq!(
+            ExecutorKind::Persistent.executor(4),
+            RoundExecutor::Persistent { threads: 4 }
+        );
     }
 
     #[test]
@@ -583,7 +839,45 @@ mod tests {
                 run(RoundExecutor::Threaded { threads }),
                 "threaded({threads}) diverged from sequential"
             );
+            assert_eq!(
+                base,
+                run(RoundExecutor::Persistent { threads }),
+                "persistent({threads}) diverged from sequential"
+            );
         }
+    }
+
+    #[test]
+    fn persistent_executor_reuses_threads_across_rounds() {
+        let exec = PersistentExecutor::new(3);
+        assert_eq!(exec.threads(), 3);
+        // many rounds through the same threads: results stay in input
+        // order and match the inline computation every time
+        for round in 0..50u64 {
+            let work: Vec<(usize, u64)> = (0..7).map(|w| (w, round)).collect();
+            let out = exec.run(work, &|w, r: u64| (w as u64).wrapping_mul(31) ^ r);
+            let want: Vec<(usize, u64)> =
+                (0..7).map(|w| (w, (w as u64).wrapping_mul(31) ^ round)).collect();
+            assert_eq!(out, want, "round {round} diverged");
+        }
+    }
+
+    #[test]
+    fn persistent_executor_propagates_panics_after_the_round_completes() {
+        let exec = PersistentExecutor::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let work: Vec<(usize, usize)> = (0..4).map(|w| (w, w)).collect();
+            exec.run(work, &|w, _| {
+                if w == 1 {
+                    panic!("boom in worker 1");
+                }
+                w
+            });
+        }));
+        assert!(caught.is_err(), "worker panic must propagate to the caller");
+        // the executor survives a panicked round and keeps serving
+        let out = exec.run(vec![(0, 1usize), (1, 2)], &|w, x| w + x);
+        assert_eq!(out, vec![(0, 1), (1, 3)]);
     }
 
     #[test]

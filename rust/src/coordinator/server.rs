@@ -70,6 +70,11 @@ pub struct ServeOptions {
     /// every value — threading buys wall-clock time, never different
     /// results (see the "Threading model" section of docs/serving_api.md).
     pub threads: usize,
+    /// which multi-threaded step-phase implementation `threads > 1`
+    /// selects: long-lived per-worker decode threads (`Persistent`, the
+    /// default) or per-round scoped spawn/join (`Scoped`). Byte-identical
+    /// event streams under `TimeModel::Modeled` either way (`--executor`).
+    pub executor: super::pool::ExecutorKind,
     /// emit a metrics-registry JSONL snapshot every N committed decode
     /// rounds to the frontend's metrics sink (0 = off; `--metrics-every`)
     pub metrics_every: usize,
@@ -91,6 +96,7 @@ impl Default for ServeOptions {
             time_model: TimeModel::Measured,
             seed: 42,
             threads: 1,
+            executor: super::pool::ExecutorKind::Persistent,
             metrics_every: 0,
             profile: false,
         }
@@ -98,9 +104,9 @@ impl Default for ServeOptions {
 }
 
 impl ServeOptions {
-    /// The round executor the `threads` knob selects.
+    /// The round executor the `threads` + `executor` knobs select.
     pub fn round_executor(&self) -> super::pool::RoundExecutor {
-        super::pool::RoundExecutor::with_threads(self.threads)
+        self.executor.executor(self.threads)
     }
 }
 

@@ -25,6 +25,7 @@ pub mod metrics;
 pub mod plugins;
 pub mod report;
 pub mod runtime;
+pub mod server;
 pub mod sparsity;
 pub mod trace;
 pub mod util;

@@ -4,7 +4,9 @@
 //!   info                         list models/artifacts from the manifest
 //!   generate --model M --prompt  one-shot generation (quick sanity check)
 //!   serve    --model M ...       multi-worker serving over a trace or an
-//!                                open-loop arrival process, print report
+//!                                open-loop arrival process, print report;
+//!                                with --listen ADDR, a TCP front door
+//!                                instead (docs/network_serving.md)
 //!   eval     --model M --task T  task accuracy under a policy
 //!   cost     --model M ...       hardware cost-model projections
 //!
@@ -16,14 +18,25 @@
 //! `--arrival trace|poisson|gamma` (+ `--arrival-shape
 //! steady|ramp|burst|diurnal`) switches from trace replay to the live
 //! open-loop generator; `--modeled-time` makes the virtual clock
-//! deterministic from the seed.
+//! deterministic from the seed; `--executor scoped|persistent` picks the
+//! multi-threaded step-phase implementation (persistent = long-lived
+//! per-worker decode threads, the default).
+//!
+//! Network serving: `--listen HOST:PORT` accepts concurrent TCP clients
+//! speaking the line-delimited JSON protocol instead of replaying a
+//! trace. `--max-conns` / `--queue-depth` / `--shed-policy defer|shed`
+//! bound admission (typed retry-after and overload responses instead of
+//! unbounded queueing); `--exit-when-idle` returns once every served
+//! connection has drained (smoke runs).
 
 use anyhow::Result;
 
 use tinyserve::config::{KvDtype, ServingConfig};
 use tinyserve::coordinator::{
-    DispatchKind, Frontend, ServeOptions, TimeModel, WorkerPool,
+    DispatchKind, ExecutorKind, Frontend, ServeOptions, TimeModel, WorkerPool,
 };
+use tinyserve::server::shed::{AdmissionConfig, ShedPolicy};
+use tinyserve::server::{Server, ServerConfig};
 use tinyserve::kvcache::EvictionPolicyKind;
 use tinyserve::engine::{Engine, Sampling};
 use tinyserve::metrics::StepMetrics;
@@ -82,6 +95,52 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
     cfg.readahead_pages = args.usize_or("readahead", 0);
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Network front-door flags. Returns None when `--listen` is absent; the
+/// backpressure knobs are rejected without it so a typo'd invocation can
+/// never silently fall back to trace replay.
+fn net_config(args: &Args) -> Result<Option<ServerConfig>> {
+    let listen = args.get("listen");
+    for flag in ["max-conns", "queue-depth", "shed-policy", "exit-when-idle"] {
+        if args.get(flag).is_some() && listen.is_none() {
+            anyhow::bail!(
+                "--{flag} requires --listen ADDR (it tunes the network front \
+                 door's admission; without a listener there is nothing to shed)"
+            );
+        }
+    }
+    let Some(listen) = listen else { return Ok(None) };
+    let max_conns = args.usize_or("max-conns", 64);
+    anyhow::ensure!(
+        max_conns >= 1,
+        "--max-conns must be >= 1 (it caps concurrent connections; 0 would \
+         shed every connect)"
+    );
+    let queue_depth = args.usize_or("queue-depth", 256);
+    anyhow::ensure!(
+        queue_depth >= 1,
+        "--queue-depth must be >= 1 (it caps not-yet-started submissions; 0 \
+         would bounce every submit)"
+    );
+    let policy_arg = args.str_or("shed-policy", "defer");
+    let policy = ShedPolicy::parse(&policy_arg).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown shed policy '{policy_arg}'; valid: {}",
+            ShedPolicy::names().join("|")
+        )
+    })?;
+    Ok(Some(ServerConfig {
+        listen: listen.to_string(),
+        admission: AdmissionConfig {
+            max_conns,
+            queue_depth,
+            policy,
+            ..AdmissionConfig::default()
+        },
+        exit_when_idle: args.bool("exit-when-idle"),
+        ..ServerConfig::default()
+    }))
 }
 
 fn cmd_info() -> Result<()> {
@@ -146,6 +205,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "--threads must be >= 1 (1 steps workers sequentially; N runs each \
          decode round's workers on up to N OS threads)"
     );
+    // step-phase implementation behind `--threads N`: persistent decode
+    // threads (default, amortizes spawn/join) or per-round scoped spawns;
+    // byte-identical event streams under --modeled-time either way
+    let executor = match args.get("executor") {
+        Some(e) => ExecutorKind::parse(e).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown executor '{e}'; valid: {}",
+                ExecutorKind::names().join("|")
+            )
+        })?,
+        None => ExecutorKind::Persistent,
+    };
+    let net = net_config(args)?;
     let dispatch = match args.get("dispatch") {
         Some(d) => DispatchKind::parse(d).ok_or_else(|| {
             anyhow::anyhow!(
@@ -202,6 +274,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         time_model,
         seed,
         threads,
+        executor,
         metrics_every,
         profile,
         ..Default::default()
@@ -222,63 +295,79 @@ fn cmd_serve(args: &Args) -> Result<()> {
         builder = builder.metrics_sink(Box::new(sink));
     }
     let mut fe = builder.build_pool(pool, &mut plugins);
-    if arrival == "trace" {
-        let trace_cfg = TraceConfig {
-            n_requests,
-            mean_interarrival_s: interarrival_ms / 1e3,
-            session_reuse_prob: session_prob,
-            new_tokens,
-            seed,
-            ..Default::default()
-        };
-        let mut trace = generate_trace(&trace_cfg);
-        // optional SLO on every `--deadline-every`-th request (default:
-        // all): the frontend sheds/aborts past-deadline work, and EDF
-        // admission orders the queue by urgency — same semantics as the
-        // open-loop generator's deadline knobs
-        if let Some(d) = args.f64_opt("deadline-ms") {
-            let every = args.usize_or("deadline-every", 1).max(1) as u64;
-            for req in trace.iter_mut().filter(|r| r.id % every == 0) {
-                req.deadline_ms = Some(d);
-            }
-        }
-        for req in trace {
-            fe.submit(req);
-        }
+    // network mode: TCP clients supply the workload and the server owns
+    // the pump loop, with typed backpressure bounding admission; otherwise
+    // replay a trace / open-loop source and pump to completion here
+    let net_stats = if let Some(server_cfg) = net {
+        let server = Server::bind(server_cfg)?;
+        println!("listening on {}", server.local_addr()?);
+        Some(server.run(&mut fe)?)
     } else {
-        let process = ArrivalProcess::parse(&arrival).ok_or_else(|| {
-            anyhow::anyhow!(
-                "unknown arrival '{arrival}'; valid: trace|{}",
-                ArrivalProcess::names().join("|")
-            )
-        })?;
-        let shape_arg = args.str_or("arrival-shape", "steady");
-        let shape = LoadShape::parse(&shape_arg).ok_or_else(|| {
-            anyhow::anyhow!(
-                "unknown arrival shape '{shape_arg}'; valid: {}",
-                LoadShape::names().join("|")
-            )
-        })?;
-        fe.set_source(Box::new(OpenLoopGen::new(OpenLoopConfig {
-            n_requests,
-            rate_rps: 1e3 / interarrival_ms.max(1e-6),
-            process,
-            shape,
-            new_tokens,
-            session_reuse_prob: session_prob,
-            deadline_ms: args.f64_opt("deadline-ms"),
-            deadline_every: args.usize_or("deadline-every", 1),
-            seed,
-            ..Default::default()
-        })));
-    }
-    // pump to completion, discarding per-round events (report-only run)
-    while fe.has_work() {
-        fe.step()?;
-    }
+        if arrival == "trace" {
+            let trace_cfg = TraceConfig {
+                n_requests,
+                mean_interarrival_s: interarrival_ms / 1e3,
+                session_reuse_prob: session_prob,
+                new_tokens,
+                seed,
+                ..Default::default()
+            };
+            let mut trace = generate_trace(&trace_cfg);
+            // optional SLO on every `--deadline-every`-th request (default:
+            // all): the frontend sheds/aborts past-deadline work, and EDF
+            // admission orders the queue by urgency — same semantics as the
+            // open-loop generator's deadline knobs
+            if let Some(d) = args.f64_opt("deadline-ms") {
+                let every = args.usize_or("deadline-every", 1).max(1) as u64;
+                for req in trace.iter_mut().filter(|r| r.id % every == 0) {
+                    req.deadline_ms = Some(d);
+                }
+            }
+            for req in trace {
+                fe.submit(req);
+            }
+        } else {
+            let process = ArrivalProcess::parse(&arrival).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown arrival '{arrival}'; valid: trace|{}",
+                    ArrivalProcess::names().join("|")
+                )
+            })?;
+            let shape_arg = args.str_or("arrival-shape", "steady");
+            let shape = LoadShape::parse(&shape_arg).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown arrival shape '{shape_arg}'; valid: {}",
+                    LoadShape::names().join("|")
+                )
+            })?;
+            fe.set_source(Box::new(OpenLoopGen::new(OpenLoopConfig {
+                n_requests,
+                rate_rps: 1e3 / interarrival_ms.max(1e-6),
+                process,
+                shape,
+                new_tokens,
+                session_reuse_prob: session_prob,
+                deadline_ms: args.f64_opt("deadline-ms"),
+                deadline_every: args.usize_or("deadline-every", 1),
+                seed,
+                ..Default::default()
+            })));
+        }
+        // pump to completion, discarding per-round events (report-only run)
+        while fe.has_work() {
+            fe.step()?;
+        }
+        None
+    };
     // the registry lives on the frontend; render the exposition before the
-    // report consumes it
-    let prom = prom_out.as_ref().map(|_| fe.metrics_registry().prometheus());
+    // report consumes it (network counters ride along as net_* metrics)
+    let prom = prom_out.as_ref().map(|_| {
+        let mut reg = fe.metrics_registry();
+        if let Some(s) = &net_stats {
+            s.publish(&mut reg);
+        }
+        reg.prometheus()
+    });
     let r = fe.into_report();
     if let (Some(path), Some(text)) = (&prom_out, &prom) {
         std::fs::write(path, text)
@@ -287,6 +376,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let Some(p) = &trace_out {
         println!("trace -> {}", p.display());
+    }
+    if let Some(s) = &net_stats {
+        println!(
+            "net: conns accepted {}  closed {}  submits {}  cancels {}  \
+             bad lines {}",
+            s.accepted, s.closed, s.submitted, s.cancels, s.bad_lines
+        );
+        println!(
+            "backpressure: deferred {}  shed submits {}  shed conns {}  \
+             slow-consumer deferrals {}  closes {}",
+            s.shed.submits_deferred,
+            s.shed.submits_shed,
+            s.shed.conns_shed,
+            s.shed.slow_consumer_deferrals,
+            s.shed.slow_consumer_closes
+        );
     }
     let mut m = r.metrics;
     println!("--- serve report ---");
@@ -463,7 +568,9 @@ fn main() -> Result<()> {
                  [--policy P] [--budget N] [--batch B] [--kv-budget-mb MB] \
                  [--eviction-policy lru|clock|query-aware|sieve] \
                  [--spill-budget-mb MB] [--spill-dir DIR] [--readahead N] \
-                 [--workers N] [--threads N] \
+                 [--workers N] [--threads N] [--executor scoped|persistent] \
+                 [--listen HOST:PORT] [--max-conns N] [--queue-depth N] \
+                 [--shed-policy defer|shed] [--exit-when-idle] \
                  [--dispatch round-robin|least-loaded|session-affinity] \
                  [--arrival trace|poisson|gamma] \
                  [--arrival-shape steady|ramp|burst|diurnal] \
@@ -586,6 +693,73 @@ mod tests {
             "serve --kv-budget-mb -2",
         ] {
             assert!(serving_config(&args(bad)).is_err(), "{bad} accepted");
+        }
+    }
+
+    #[test]
+    fn net_flags_without_listen_are_rejected_with_pairing() {
+        for bad in [
+            "serve --max-conns 4",
+            "serve --queue-depth 8",
+            "serve --shed-policy shed",
+            "serve --exit-when-idle",
+        ] {
+            let e = net_config(&args(bad)).unwrap_err().to_string();
+            assert!(
+                e.contains("--listen"),
+                "error for {bad:?} must name the required --listen pairing: {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_net_limits_are_rejected_with_guidance() {
+        let e = net_config(&args("serve --listen 127.0.0.1:0 --max-conns 0"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--max-conns") && e.contains(">= 1"), "{e}");
+        let e = net_config(&args("serve --listen 127.0.0.1:0 --queue-depth 0"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--queue-depth") && e.contains(">= 1"), "{e}");
+    }
+
+    #[test]
+    fn unknown_shed_policy_error_lists_valid_names() {
+        let e = net_config(&args("serve --listen 127.0.0.1:0 --shed-policy drop"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("drop"), "{e}");
+        for n in ShedPolicy::names() {
+            assert!(e.contains(n), "error {e:?} missing policy name {n}");
+        }
+    }
+
+    #[test]
+    fn listen_flags_parse_into_a_server_config() {
+        let cfg = net_config(&args(
+            "serve --listen 127.0.0.1:4460 --max-conns 8 --queue-depth 16 \
+             --shed-policy shed --exit-when-idle",
+        ))
+        .unwrap()
+        .expect("--listen enables network mode");
+        assert_eq!(cfg.listen, "127.0.0.1:4460");
+        assert_eq!(cfg.admission.max_conns, 8);
+        assert_eq!(cfg.admission.queue_depth, 16);
+        assert_eq!(cfg.admission.policy, ShedPolicy::Shed);
+        assert!(cfg.exit_when_idle);
+        assert!(
+            net_config(&args("serve")).unwrap().is_none(),
+            "no --listen means trace/open-loop mode"
+        );
+    }
+
+    #[test]
+    fn unknown_executor_error_lists_valid_names() {
+        let e = cmd_serve(&args("serve --executor turbo")).unwrap_err().to_string();
+        assert!(e.contains("turbo"), "{e}");
+        for n in ExecutorKind::names() {
+            assert!(e.contains(n), "error {e:?} missing executor name {n}");
         }
     }
 

@@ -1,0 +1,235 @@
+//! Per-connection I/O plumbing: one reader thread, one writer thread, and
+//! a bounded send path between the serving pump and each client.
+//!
+//! The pump thread never blocks on a socket. Reads arrive as [`Ctl`]
+//! messages over a shared channel (one reader thread per connection parses
+//! lines into `ClientMsg` and forwards them); writes go through a bounded
+//! `sync_channel` outbox drained by a writer thread. When a client stops
+//! reading (slow consumer) the outbox fills and further lines park in a
+//! capped `deferred` queue retried each pump round — so a stalled client
+//! costs at most `send_buffer + deferred_cap` lines of memory, never an
+//! unbounded buffer. Overflowing the cap is reported as
+//! [`SendOutcome::Overflow`]; the server responds by cancelling the
+//! connection's in-flight requests and force-closing it.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{Sender, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+
+use super::proto::ClientMsg;
+
+/// Control-plane messages funneled to the serving pump from the accept
+/// loop and every connection's reader thread.
+#[derive(Debug)]
+pub(crate) enum Ctl {
+    /// accept loop: a new TCP connection (pre-admission)
+    NewConn(TcpStream),
+    /// a parsed request line from connection `conn`
+    Msg { conn: u64, msg: ClientMsg },
+    /// an unparseable request line from connection `conn`
+    Bad { conn: u64, reason: String },
+    /// connection `conn` hung up (EOF or read error)
+    Gone { conn: u64 },
+}
+
+/// Result of queueing one response line toward a client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum SendOutcome {
+    /// handed to the writer thread
+    Sent,
+    /// outbox full (slow consumer); parked in the deferred queue
+    Deferred,
+    /// deferred queue over its cap, or the writer is gone — close the conn
+    Overflow,
+}
+
+/// Pump-side state for one live connection.
+pub(crate) struct Conn {
+    pub id: u64,
+    /// bounded outbox to the writer thread; `None` once closing
+    outbox: Option<SyncSender<String>>,
+    /// lines bounced off a full outbox, retried each pump round (FIFO
+    /// after the outbox, so per-connection ordering is preserved)
+    deferred: VecDeque<String>,
+    deferred_cap: usize,
+    /// live requests on this conn: server global id → client id
+    pub live: HashMap<u64, u64>,
+    /// client asked to close; conn shuts down once `live` drains
+    pub closing: bool,
+    /// marked for removal by the pump (overflow, hangup, protocol close)
+    pub dead: bool,
+    stream: TcpStream,
+    reader: Option<JoinHandle<()>>,
+    writer: Option<JoinHandle<()>>,
+}
+
+impl Conn {
+    /// Wrap an accepted stream: spawn its reader (lines → `ctl`) and
+    /// writer (bounded outbox → socket) threads.
+    pub fn spawn(
+        id: u64,
+        stream: TcpStream,
+        ctl: Sender<Ctl>,
+        send_buffer: usize,
+        deferred_cap: usize,
+    ) -> std::io::Result<Conn> {
+        // the accept loop's listener is non-blocking; the per-conn threads
+        // want plain blocking sockets
+        stream.set_nonblocking(false)?;
+        stream.set_nodelay(true).ok();
+
+        let read_half = stream.try_clone()?;
+        let reader = std::thread::Builder::new()
+            .name(format!("tinyserve-conn-{id}-rd"))
+            .spawn(move || {
+                let mut lines = BufReader::new(read_half).lines();
+                loop {
+                    match lines.next() {
+                        Some(Ok(line)) => {
+                            if line.trim().is_empty() {
+                                continue;
+                            }
+                            let out = match ClientMsg::parse(&line) {
+                                Ok(msg) => Ctl::Msg { conn: id, msg },
+                                Err(reason) => Ctl::Bad { conn: id, reason },
+                            };
+                            if ctl.send(out).is_err() {
+                                return; // pump is gone
+                            }
+                        }
+                        // EOF or read error: either way the client is done
+                        Some(Err(_)) | None => {
+                            let _ = ctl.send(Ctl::Gone { conn: id });
+                            return;
+                        }
+                    }
+                }
+            })?;
+
+        let write_half = stream.try_clone()?;
+        let (tx, rx) = std::sync::mpsc::sync_channel::<String>(send_buffer.max(1));
+        let writer = std::thread::Builder::new()
+            .name(format!("tinyserve-conn-{id}-wr"))
+            .spawn(move || {
+                let mut out = std::io::BufWriter::new(write_half);
+                while let Ok(line) = rx.recv() {
+                    // flush per line: token streaming wants timely delivery
+                    if out.write_all(line.as_bytes()).is_err()
+                        || out.write_all(b"\n").is_err()
+                        || out.flush().is_err()
+                    {
+                        return; // broken pipe; reader reports the hangup
+                    }
+                }
+            })?;
+
+        Ok(Conn {
+            id,
+            outbox: Some(tx),
+            deferred: VecDeque::new(),
+            deferred_cap: deferred_cap.max(1),
+            live: HashMap::new(),
+            closing: false,
+            dead: false,
+            stream,
+            reader: Some(reader),
+            writer: Some(writer),
+        })
+    }
+
+    /// Queue one response line, preserving order behind any parked lines.
+    pub fn send(&mut self, line: String) -> SendOutcome {
+        if self.dead {
+            return SendOutcome::Overflow;
+        }
+        self.flush_deferred();
+        if self.deferred.is_empty() {
+            match self.try_send(line) {
+                Ok(()) => return SendOutcome::Sent,
+                Err(Some(line)) => self.deferred.push_back(line),
+                Err(None) => return SendOutcome::Overflow, // writer gone
+            }
+        } else {
+            self.deferred.push_back(line);
+        }
+        if self.deferred.len() > self.deferred_cap {
+            SendOutcome::Overflow
+        } else {
+            SendOutcome::Deferred
+        }
+    }
+
+    /// Retry parked lines against the outbox; called each pump round.
+    pub fn flush_deferred(&mut self) {
+        while let Some(line) = self.deferred.pop_front() {
+            match self.try_send(line) {
+                Ok(()) => continue,
+                Err(Some(line)) => {
+                    self.deferred.push_front(line);
+                    return;
+                }
+                Err(None) => {
+                    self.dead = true;
+                    self.deferred.clear();
+                    return;
+                }
+            }
+        }
+    }
+
+    pub fn has_deferred(&self) -> bool {
+        !self.deferred.is_empty()
+    }
+
+    /// `Ok` = handed off; `Err(Some)` = outbox full (line returned);
+    /// `Err(None)` = writer thread exited.
+    fn try_send(&mut self, line: String) -> Result<(), Option<String>> {
+        let Some(tx) = &self.outbox else { return Err(None) };
+        match tx.try_send(line) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(line)) => Err(Some(line)),
+            Err(TrySendError::Disconnected(_)) => {
+                self.dead = true;
+                Err(None)
+            }
+        }
+    }
+
+    /// Tear the connection down and join its threads. `graceful` lets the
+    /// writer drain queued lines first (client-initiated close, where the
+    /// peer is still reading); force-close severs the socket immediately so
+    /// a non-reading peer can never wedge the pump.
+    pub fn close(&mut self, graceful: bool) {
+        self.dead = true;
+        self.deferred.clear();
+        if graceful {
+            // the drain below must stay bounded even if the peer stops
+            // reading: SO_SNDTIMEO is per-socket, so this caps every
+            // in-flight write on the writer thread's cloned handle too
+            let timeout = std::time::Duration::from_millis(500);
+            let _ = self.stream.set_write_timeout(Some(timeout));
+        } else {
+            let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        }
+        // dropping the outbox ends the writer once it drains
+        self.outbox = None;
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
+        // unblock the reader if it is still parked in read()
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Conn {
+    fn drop(&mut self) {
+        if self.reader.is_some() || self.writer.is_some() {
+            self.close(false);
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Accept loop: one thread turning inbound TCP connections into
+//! [`Ctl::NewConn`] control messages for the serving pump.
+//!
+//! The listener socket runs non-blocking with a short sleep on
+//! `WouldBlock` so the thread can notice the stop flag promptly; admission
+//! (the `max_conns` gate) happens on the pump thread, not here, keeping
+//! every shed decision on the same thread that owns the counters.
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::conn::Ctl;
+
+pub(crate) struct Listener {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Listener {
+    pub fn spawn(listener: TcpListener, ctl: Sender<Ctl>) -> std::io::Result<Listener> {
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("tinyserve-accept".into())
+            .spawn(move || {
+                while !stop_flag.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if ctl.send(Ctl::NewConn(stream)).is_err() {
+                                return; // pump is gone
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        // transient accept errors (e.g. ECONNABORTED):
+                        // back off and keep listening
+                        Err(_) => std::thread::sleep(Duration::from_millis(2)),
+                    }
+                }
+            })?;
+        Ok(Listener { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}

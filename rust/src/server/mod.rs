@@ -1,0 +1,876 @@
+//! Network serving front door: TCP token streaming with admission
+//! backpressure over the request-lifecycle frontend.
+//!
+//! `tinyserve serve --listen ADDR` binds a [`Server`] that accepts
+//! concurrent TCP connections speaking the line-delimited JSON protocol in
+//! [`proto`] (schema-versioned; `hello` first, then `submit`/`cancel`/
+//! `close` inbound and per-token lifecycle events outbound). The layering:
+//!
+//! ```text
+//!   accept loop (listener.rs)  ─┐
+//!   conn reader threads (conn.rs) ─┤→ Ctl channel → pump (this module)
+//!                                                     │ admission (shed.rs)
+//!                                                     │ submit/cancel/step
+//!                                                     ▼
+//!                                              ServeBackend (Frontend)
+//!                                                     │ ServeEvents
+//!                                                     ▼
+//!                            conn writer threads ← bounded outboxes
+//! ```
+//!
+//! All scheduling state lives on the single pump thread: it drains control
+//! messages, applies the [`shed::AdmissionGate`] (defer/shed instead of
+//! unbounded queueing), steps the backend one decode round at a time, and
+//! routes each `ServeEvent` to its connection's bounded outbox. Client
+//! disconnects and cancels free KV pages mid-flight through the frontend's
+//! existing `cancel` path. The backend is abstracted as [`ServeBackend`]
+//! so the whole network layer is testable without engine artifacts (see
+//! [`MockBackend`]).
+//!
+//! Determinism: with a single connection driven closed-loop under
+//! `TimeModel::Modeled`, the virtual clock is frozen whenever the backend
+//! is idle, so arrival timestamps — and therefore the whole event/trace
+//! stream — are a pure function of the protocol exchange and the seed. CI
+//! byte-diffs a seeded loopback run's trace across two runs on exactly
+//! this setup. Multi-connection interleaving is wall-clock racy by nature
+//! and is exercised for liveness, not byte-equality.
+
+pub mod proto;
+pub mod shed;
+
+mod conn;
+mod listener;
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Frontend, ServeEvent};
+use crate::metrics::RequestRecord;
+use crate::trace::registry::MetricsRegistry;
+use crate::trace::TraceEvent;
+use crate::workload::{tasks, Request};
+
+use conn::{Conn, Ctl, SendOutcome};
+use listener::Listener;
+use proto::{ClientMsg, ServerMsg, PROTO_SCHEMA};
+use shed::{Admission, AdmissionConfig, AdmissionGate, ShedCounters};
+
+/// What the network pump needs from a serving engine. `Frontend`
+/// implements it; [`MockBackend`] stands in for engine-free tests.
+pub trait ServeBackend {
+    /// Enqueue a request (the server assigns `req.id` and `req.arrival_s`).
+    fn submit(&mut self, req: Request);
+    /// Cancel by server-global id from any pre-terminal state, releasing
+    /// KV pages mid-flight; idempotent.
+    fn cancel(&mut self, id: u64) -> bool;
+    /// One scheduling round; returns the events it produced.
+    fn step(&mut self) -> Result<Vec<ServeEvent>>;
+    fn has_work(&self) -> bool;
+    /// Current virtual time (stamps `arrival_s` and connection spans).
+    fn now(&self) -> f64;
+    /// Requests accepted but not yet decoding — the `queue_depth` gauge.
+    fn queued_len(&self) -> usize;
+    fn kv_bytes_in_use(&self) -> usize;
+    /// Emit a connection-lifecycle span into the backend's trace stream.
+    fn trace_event(&mut self, ev: &TraceEvent);
+}
+
+impl ServeBackend for Frontend<'_> {
+    fn submit(&mut self, req: Request) {
+        Frontend::submit(self, req);
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        Frontend::cancel(self, id)
+    }
+
+    fn step(&mut self) -> Result<Vec<ServeEvent>> {
+        Frontend::step(self)
+    }
+
+    fn has_work(&self) -> bool {
+        Frontend::has_work(self)
+    }
+
+    fn now(&self) -> f64 {
+        Frontend::now(self)
+    }
+
+    fn queued_len(&self) -> usize {
+        Frontend::queued_len(self)
+    }
+
+    fn kv_bytes_in_use(&self) -> usize {
+        Frontend::kv_bytes_in_use(self)
+    }
+
+    fn trace_event(&mut self, ev: &TraceEvent) {
+        Frontend::trace_event(self, ev);
+    }
+}
+
+/// Front-door configuration (`--listen` + the `--max-conns`,
+/// `--queue-depth`, `--shed-policy` backpressure knobs).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// bind address; port 0 picks an ephemeral port (see
+    /// [`Server::local_addr`])
+    pub listen: String,
+    pub admission: AdmissionConfig,
+    /// per-connection writer outbox, in lines; beyond it lines park in the
+    /// deferred queue (slow consumer)
+    pub send_buffer: usize,
+    /// parked-line cap per connection; overflow force-closes the conn
+    pub deferred_cap: usize,
+    /// exit once at least one connection was served and everything
+    /// drained (loopback smoke runs and tests; a real deployment loops
+    /// until [`ServerHandle::stop`])
+    pub exit_when_idle: bool,
+    /// control-channel poll interval while the backend is idle
+    pub idle_poll_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            admission: AdmissionConfig::default(),
+            send_buffer: 64,
+            deferred_cap: 1024,
+            exit_when_idle: false,
+            idle_poll_ms: 5,
+        }
+    }
+}
+
+/// Run counters for one `Server::run`, published as `net_*` metrics.
+#[derive(Debug, Default, Clone)]
+pub struct ServerStats {
+    pub accepted: u64,
+    pub closed: u64,
+    pub submitted: u64,
+    pub cancels: u64,
+    pub bad_lines: u64,
+    pub shed: ShedCounters,
+}
+
+impl ServerStats {
+    pub fn publish(&self, reg: &mut MetricsRegistry) {
+        reg.counter("net_conns_accepted", self.accepted);
+        reg.counter("net_conns_closed", self.closed);
+        reg.counter("net_submits", self.submitted);
+        reg.counter("net_cancels", self.cancels);
+        reg.counter("net_bad_lines", self.bad_lines);
+        self.shed.publish(reg);
+    }
+}
+
+/// Remote stop switch for a running server (shareable across threads).
+#[derive(Clone)]
+pub struct ServerHandle {
+    stop: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// A bound TCP front door. `bind` then `run` over a backend; the pump
+/// runs on the calling thread until stopped or (with `exit_when_idle`)
+/// drained.
+pub struct Server {
+    cfg: ServerConfig,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn bind(cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("bind {}", cfg.listen))?;
+        Ok(Server { cfg, listener, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { stop: Arc::clone(&self.stop) }
+    }
+
+    /// Serve until stopped. Clean shutdown: the accept loop is joined,
+    /// every live request cancelled (freeing its KV pages) and every
+    /// connection's reader/writer threads joined before returning.
+    pub fn run<B: ServeBackend>(self, backend: &mut B) -> Result<ServerStats> {
+        let Server { cfg, listener, stop } = self;
+        let (ctl_tx, ctl_rx) = std::sync::mpsc::channel();
+        let mut listener =
+            Listener::spawn(listener, ctl_tx.clone()).context("accept loop")?;
+        let gate = AdmissionGate::new(cfg.admission.clone());
+        let mut pump = Pump {
+            cfg: &cfg,
+            backend,
+            gate,
+            conns: HashMap::new(),
+            routes: HashMap::new(),
+            next_conn: 0,
+            next_global: 1,
+            stats: ServerStats::default(),
+            ctl_tx,
+        };
+        let result = pump.run_loop(&ctl_rx, &stop);
+        listener.stop();
+        pump.shutdown();
+        let mut stats = pump.stats;
+        stats.shed = pump.gate.counters.clone();
+        result.map(|()| stats)
+    }
+}
+
+/// Single-threaded serving pump: owns every connection's send side, the
+/// admission gate, and the global↔client request-id routes.
+struct Pump<'a, B: ServeBackend> {
+    cfg: &'a ServerConfig,
+    backend: &'a mut B,
+    gate: AdmissionGate,
+    conns: HashMap<u64, Conn>,
+    /// server-global request id → (conn id, client's per-conn id)
+    routes: HashMap<u64, (u64, u64)>,
+    next_conn: u64,
+    next_global: u64,
+    stats: ServerStats,
+    ctl_tx: Sender<Ctl>,
+}
+
+impl<B: ServeBackend> Pump<'_, B> {
+    fn run_loop(&mut self, ctl_rx: &Receiver<Ctl>, stop: &AtomicBool) -> Result<()> {
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            // drain the control plane; block briefly only when idle so
+            // decoding never waits on the network
+            let busy = self.backend.has_work()
+                || self.conns.values().any(|c| c.has_deferred());
+            let mut msgs = Vec::new();
+            if !busy {
+                let timeout = Duration::from_millis(self.cfg.idle_poll_ms.max(1));
+                match ctl_rx.recv_timeout(timeout) {
+                    Ok(m) => msgs.push(m),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => return Ok(()),
+                }
+            }
+            while let Ok(m) = ctl_rx.try_recv() {
+                msgs.push(m);
+            }
+            for m in msgs {
+                self.handle_ctl(m);
+            }
+            // retry slow-consumer parked lines once per round
+            for c in self.conns.values_mut() {
+                c.flush_deferred();
+            }
+            if self.backend.has_work() {
+                let events = self.backend.step()?;
+                for ev in events {
+                    self.route(&ev);
+                }
+            }
+            self.cleanup();
+            if self.cfg.exit_when_idle
+                && self.stats.accepted > 0
+                && self.conns.is_empty()
+                && !self.backend.has_work()
+            {
+                return Ok(());
+            }
+        }
+    }
+
+    fn handle_ctl(&mut self, ctl: Ctl) {
+        match ctl {
+            Ctl::NewConn(stream) => self.new_conn(stream),
+            Ctl::Msg { conn, msg } => match msg {
+                ClientMsg::Submit { id, prompt, max_new, session, deadline_ms } => {
+                    self.submit(conn, id, prompt, max_new, session, deadline_ms)
+                }
+                ClientMsg::Cancel { id } => self.cancel(conn, id),
+                ClientMsg::Close => {
+                    if let Some(c) = self.conns.get_mut(&conn) {
+                        c.closing = true;
+                    }
+                }
+            },
+            Ctl::Bad { conn, reason } => {
+                self.stats.bad_lines += 1;
+                self.send_to(conn, ServerMsg::Error { reason });
+            }
+            Ctl::Gone { conn } => {
+                if let Some(c) = self.conns.get_mut(&conn) {
+                    // cleanup cancels its live requests and closes it
+                    c.dead = true;
+                }
+            }
+        }
+    }
+
+    fn new_conn(&mut self, stream: TcpStream) {
+        match self.gate.admit_conn(self.conns.len()) {
+            Admission::Accept => {}
+            Admission::Shed { limit, max } => {
+                // typed rejection: the client learns which limit fired
+                // instead of watching an unexplained hangup
+                let mut stream = stream;
+                let _ = stream.set_nonblocking(false);
+                let hello = ServerMsg::Hello { schema: PROTO_SCHEMA }.to_line();
+                let over =
+                    ServerMsg::Overload { id: None, limit: limit.into(), max }
+                        .to_line();
+                let _ = stream.write_all(format!("{hello}\n{over}\n").as_bytes());
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+                return;
+            }
+            Admission::Defer { .. } => unreachable!("conn gate never defers"),
+        }
+        let id = self.next_conn;
+        self.next_conn += 1;
+        let spawned = Conn::spawn(
+            id,
+            stream,
+            self.ctl_tx.clone(),
+            self.cfg.send_buffer,
+            self.cfg.deferred_cap,
+        );
+        // spawn failure (fd/thread pressure) just drops the stream; the
+        // client sees a hangup before `hello`, the retryable signal
+        let Ok(mut conn) = spawned else { return };
+        conn.send(ServerMsg::Hello { schema: PROTO_SCHEMA }.to_line());
+        let t = self.backend.now();
+        self.backend.trace_event(&TraceEvent::ConnOpen { conn: id, t });
+        self.conns.insert(id, conn);
+        self.stats.accepted += 1;
+    }
+
+    fn submit(
+        &mut self,
+        conn_id: u64,
+        client_id: u64,
+        prompt: String,
+        max_new: usize,
+        session: Option<u64>,
+        deadline_ms: Option<f64>,
+    ) {
+        let Some(conn) = self.conns.get(&conn_id) else { return };
+        if conn.closing {
+            let reason = format!("submit {client_id} after close");
+            self.send_to(conn_id, ServerMsg::Error { reason });
+            return;
+        }
+        if conn.live.values().any(|&c| c == client_id) {
+            let reason = format!("duplicate in-flight id {client_id}");
+            self.send_to(conn_id, ServerMsg::Error { reason });
+            return;
+        }
+        match self.gate.admit_submit(self.backend.queued_len()) {
+            Admission::Accept => {
+                let global = self.next_global;
+                self.next_global += 1;
+                self.backend.submit(Request {
+                    id: global,
+                    arrival_s: self.backend.now(),
+                    prompt: tasks::encode_prompt(&prompt),
+                    max_new_tokens: max_new,
+                    session,
+                    task: None,
+                    answer: None,
+                    deadline_ms,
+                });
+                self.routes.insert(global, (conn_id, client_id));
+                if let Some(c) = self.conns.get_mut(&conn_id) {
+                    c.live.insert(global, client_id);
+                }
+                self.stats.submitted += 1;
+            }
+            Admission::Defer { retry_after_ms } => {
+                self.send_to(conn_id, ServerMsg::Retry { id: client_id, retry_after_ms });
+            }
+            Admission::Shed { limit, max } => {
+                self.send_to(
+                    conn_id,
+                    ServerMsg::Overload { id: Some(client_id), limit: limit.into(), max },
+                );
+            }
+        }
+    }
+
+    fn cancel(&mut self, conn_id: u64, client_id: u64) {
+        let Some(conn) = self.conns.get(&conn_id) else { return };
+        let global = conn
+            .live
+            .iter()
+            .find(|&(_, &c)| c == client_id)
+            .map(|(&g, _)| g);
+        // unknown or already-terminal ids are an idempotent no-op, same as
+        // Frontend::cancel; the Cancelled event routes back on a later step
+        if let Some(g) = global {
+            self.backend.cancel(g);
+            self.stats.cancels += 1;
+        }
+    }
+
+    /// Forward one backend event to its connection, retiring the route on
+    /// terminal events.
+    fn route(&mut self, ev: &ServeEvent) {
+        let global = ev.id();
+        let Some(&(conn_id, client_id)) = self.routes.get(&global) else {
+            return; // connection already torn down
+        };
+        let terminal = matches!(
+            ev,
+            ServeEvent::Finished(_)
+                | ServeEvent::Cancelled { .. }
+                | ServeEvent::DeadlineExpired { .. }
+        );
+        if terminal {
+            self.routes.remove(&global);
+            if let Some(c) = self.conns.get_mut(&conn_id) {
+                c.live.remove(&global);
+            }
+        }
+        self.send_to(conn_id, ServerMsg::from_event(ev, client_id));
+    }
+
+    fn send_to(&mut self, conn_id: u64, msg: ServerMsg) {
+        let Some(conn) = self.conns.get_mut(&conn_id) else { return };
+        match conn.send(msg.to_line()) {
+            SendOutcome::Sent => {}
+            SendOutcome::Deferred => {
+                self.gate.counters.slow_consumer_deferrals += 1;
+            }
+            SendOutcome::Overflow => {
+                // a writer-gone overflow is a hangup (reader reports it);
+                // a deferred-cap overflow is a slow consumer we evict
+                if !conn.dead {
+                    conn.dead = true;
+                    self.gate.counters.slow_consumer_closes += 1;
+                }
+            }
+        }
+    }
+
+    /// Retire finished and dead connections (cancelling live work on the
+    /// dead ones so their KV pages free immediately).
+    fn cleanup(&mut self) {
+        let done: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| {
+                !c.dead && c.closing && c.live.is_empty() && !c.has_deferred()
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in done {
+            self.finish_conn(id, true);
+        }
+        let dead: Vec<u64> =
+            self.conns.iter().filter(|(_, c)| c.dead).map(|(&id, _)| id).collect();
+        for id in dead {
+            self.finish_conn(id, false);
+        }
+    }
+
+    fn finish_conn(&mut self, conn_id: u64, graceful: bool) {
+        let Some(mut conn) = self.conns.remove(&conn_id) else { return };
+        for (&global, _) in conn.live.iter() {
+            self.backend.cancel(global);
+            self.routes.remove(&global);
+        }
+        conn.live.clear();
+        conn.close(graceful);
+        let t = self.backend.now();
+        self.backend.trace_event(&TraceEvent::ConnClose { conn: conn_id, t });
+        self.stats.closed += 1;
+    }
+
+    fn shutdown(&mut self) {
+        let ids: Vec<u64> = self.conns.keys().copied().collect();
+        for id in ids {
+            self.finish_conn(id, false);
+        }
+    }
+}
+
+/// Deterministic in-process backend: requests admit up to `max_active` at
+/// a time, stream one token per step, and finish after `max_new_tokens`
+/// steps on a virtual clock. Lets the whole network layer — protocol,
+/// backpressure, disconnect-cancel, trace spans — run in tests and smoke
+/// jobs without engine artifacts.
+pub struct MockBackend {
+    /// virtual seconds per decode round
+    pub step_s: f64,
+    /// concurrent decode slots; excess submissions queue (visible to the
+    /// `queue_depth` admission gate)
+    pub max_active: usize,
+    /// KV accounting per admitted token (prompt + budgeted new tokens)
+    pub kv_bytes_per_token: usize,
+    now: f64,
+    queue: Vec<Request>,
+    active: Vec<MockActive>,
+    pending: Vec<ServeEvent>,
+    kv_in_use: usize,
+    /// trace lines captured via [`ServeBackend::trace_event`]
+    pub trace: Vec<String>,
+    /// `ServeEvent::sig(true)` of every event `step` produced, in order —
+    /// the byte-diffable determinism record for loopback smoke runs
+    pub event_log: Vec<String>,
+}
+
+struct MockActive {
+    req: Request,
+    admitted_at: f64,
+    emitted: usize,
+    kv: usize,
+}
+
+impl Default for MockBackend {
+    fn default() -> Self {
+        MockBackend::new()
+    }
+}
+
+impl MockBackend {
+    pub fn new() -> MockBackend {
+        MockBackend {
+            step_s: 0.001,
+            max_active: 4,
+            kv_bytes_per_token: 64,
+            now: 0.0,
+            queue: Vec::new(),
+            active: Vec::new(),
+            pending: Vec::new(),
+            kv_in_use: 0,
+            trace: Vec::new(),
+            event_log: Vec::new(),
+        }
+    }
+}
+
+impl ServeBackend for MockBackend {
+    fn submit(&mut self, req: Request) {
+        self.queue.push(req);
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
+            self.queue.remove(pos);
+            self.pending.push(ServeEvent::Cancelled { id, t: self.now });
+            return true;
+        }
+        if let Some(pos) = self.active.iter().position(|a| a.req.id == id) {
+            let a = self.active.remove(pos);
+            self.kv_in_use -= a.kv;
+            self.pending.push(ServeEvent::Cancelled { id, t: self.now });
+            return true;
+        }
+        false
+    }
+
+    fn step(&mut self) -> Result<Vec<ServeEvent>> {
+        let mut out = std::mem::take(&mut self.pending);
+        // admit into free decode slots
+        while self.active.len() < self.max_active && !self.queue.is_empty() {
+            let req = self.queue.remove(0);
+            let kv =
+                (req.prompt.len() + req.max_new_tokens) * self.kv_bytes_per_token;
+            self.kv_in_use += kv;
+            out.push(ServeEvent::Admitted { id: req.id, t: self.now });
+            self.active.push(MockActive {
+                req,
+                admitted_at: self.now,
+                emitted: 0,
+                kv,
+            });
+        }
+        if !self.active.is_empty() {
+            self.now += self.step_s;
+            let mut finished = Vec::new();
+            for (i, a) in self.active.iter_mut().enumerate() {
+                a.emitted += 1;
+                out.push(ServeEvent::Token {
+                    id: a.req.id,
+                    tok: a.emitted as i32,
+                    t: self.now,
+                });
+                if a.emitted >= a.req.max_new_tokens {
+                    finished.push(i);
+                }
+            }
+            for i in finished.into_iter().rev() {
+                let a = self.active.remove(i);
+                self.kv_in_use -= a.kv;
+                out.push(ServeEvent::Finished(RequestRecord {
+                    id: a.req.id,
+                    queue_seconds: a.admitted_at - a.req.arrival_s,
+                    prefill_seconds: 0.0,
+                    ttft_seconds: a.admitted_at - a.req.arrival_s + self.step_s,
+                    decode_seconds: a.emitted as f64 * self.step_s,
+                    e2e_seconds: self.now - a.req.arrival_s,
+                    prompt_tokens: a.req.prompt.len(),
+                    new_tokens: a.emitted,
+                    session_reused_tokens: 0,
+                }));
+            }
+        }
+        for ev in &out {
+            self.event_log.push(ev.sig(true));
+        }
+        Ok(out)
+    }
+
+    fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.active.is_empty() || !self.pending.is_empty()
+    }
+
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn queued_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn kv_bytes_in_use(&self) -> usize {
+        self.kv_in_use
+    }
+
+    fn trace_event(&mut self, ev: &TraceEvent) {
+        self.trace.push(ev.to_line());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn read_msg(reader: &mut BufReader<TcpStream>) -> Option<ServerMsg> {
+        let mut line = String::new();
+        if reader.read_line(&mut line).ok()? == 0 {
+            return None;
+        }
+        Some(ServerMsg::parse(line.trim_end()).expect("valid server line"))
+    }
+
+    fn spawn_server(
+        cfg: ServerConfig,
+    ) -> (SocketAddr, std::thread::JoinHandle<(ServerStats, MockBackend)>) {
+        let server = Server::bind(cfg).expect("bind loopback");
+        let addr = server.local_addr().expect("bound addr");
+        let handle = std::thread::spawn(move || {
+            let mut backend = MockBackend::new();
+            let stats = server.run(&mut backend).expect("server run");
+            (stats, backend)
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn loopback_submit_streams_tokens_then_finishes() {
+        let cfg = ServerConfig { exit_when_idle: true, ..ServerConfig::default() };
+        let (addr, server) = spawn_server(cfg);
+
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        assert_eq!(
+            read_msg(&mut reader),
+            Some(ServerMsg::Hello { schema: PROTO_SCHEMA })
+        );
+        let submit = ClientMsg::Submit {
+            id: 0,
+            prompt: "hello".into(),
+            max_new: 3,
+            session: None,
+            deadline_ms: None,
+        };
+        stream.write_all(format!("{}\n", submit.to_line()).as_bytes()).unwrap();
+
+        let mut tokens = 0;
+        loop {
+            let msg = read_msg(&mut reader).expect("stream stays open to terminal");
+            match msg {
+                ServerMsg::Admitted { id: 0, .. } => {}
+                ServerMsg::Token { id: 0, .. } => tokens += 1,
+                ServerMsg::Finished { id: 0, new_tokens, .. } => {
+                    assert_eq!(new_tokens, 3);
+                    break;
+                }
+                other => panic!("unexpected message: {other:?}"),
+            }
+        }
+        assert_eq!(tokens, 3, "every decoded token streams back");
+
+        stream.write_all(format!("{}\n", ClientMsg::Close.to_line()).as_bytes()).unwrap();
+        assert_eq!(read_msg(&mut reader), None, "server closes after close op");
+
+        let (stats, backend) = server.join().unwrap();
+        assert_eq!(stats.accepted, 1);
+        assert_eq!(stats.closed, 1);
+        assert_eq!(stats.submitted, 1);
+        assert_eq!(backend.kv_bytes_in_use(), 0);
+        // one conn_open and one conn_close span landed in the trace
+        let kinds: Vec<bool> = vec![
+            backend.trace.iter().any(|l| l.contains("conn_open")),
+            backend.trace.iter().any(|l| l.contains("conn_close")),
+        ];
+        assert_eq!(kinds, vec![true, true], "trace: {:?}", backend.trace);
+    }
+
+    #[test]
+    fn conn_over_max_conns_is_shed_with_the_limit_named() {
+        let cfg = ServerConfig {
+            exit_when_idle: true,
+            admission: AdmissionConfig { max_conns: 1, ..AdmissionConfig::default() },
+            ..ServerConfig::default()
+        };
+        let (addr, server) = spawn_server(cfg);
+
+        let mut first = TcpStream::connect(addr).expect("connect");
+        let mut reader1 = BufReader::new(first.try_clone().unwrap());
+        assert_eq!(
+            read_msg(&mut reader1),
+            Some(ServerMsg::Hello { schema: PROTO_SCHEMA })
+        );
+
+        let second = TcpStream::connect(addr).expect("connect");
+        let mut reader2 = BufReader::new(second);
+        assert_eq!(
+            read_msg(&mut reader2),
+            Some(ServerMsg::Hello { schema: PROTO_SCHEMA })
+        );
+        assert_eq!(
+            read_msg(&mut reader2),
+            Some(ServerMsg::Overload { id: None, limit: "max_conns".into(), max: 1 }),
+            "over-cap connection gets a typed overload, not a silent hangup"
+        );
+        assert_eq!(read_msg(&mut reader2), None, "then the server closes it");
+
+        first
+            .write_all(format!("{}\n", ClientMsg::Close.to_line()).as_bytes())
+            .unwrap();
+        let (stats, _) = server.join().unwrap();
+        assert_eq!(stats.accepted, 1);
+        assert_eq!(stats.shed.conns_shed, 1);
+    }
+
+    #[test]
+    fn disconnect_mid_stream_cancels_and_frees_kv() {
+        let cfg = ServerConfig { exit_when_idle: true, ..ServerConfig::default() };
+        let (addr, server) = spawn_server(cfg);
+
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        assert_eq!(
+            read_msg(&mut reader),
+            Some(ServerMsg::Hello { schema: PROTO_SCHEMA })
+        );
+        let submit = ClientMsg::Submit {
+            id: 0,
+            prompt: "long running".into(),
+            max_new: 100_000,
+            session: None,
+            deadline_ms: None,
+        };
+        stream.write_all(format!("{}\n", submit.to_line()).as_bytes()).unwrap();
+        // wait until the request is really decoding, then vanish
+        loop {
+            match read_msg(&mut reader).expect("open") {
+                ServerMsg::Token { .. } => break,
+                _ => continue,
+            }
+        }
+        drop(reader);
+        drop(stream);
+
+        let (stats, backend) = server.join().unwrap();
+        assert_eq!(
+            backend.kv_bytes_in_use(),
+            0,
+            "disconnect frees the request's KV mid-flight"
+        );
+        assert!(!backend.has_work(), "no orphaned work after disconnect");
+        assert_eq!(stats.closed, 1);
+    }
+
+    #[test]
+    fn bad_lines_get_typed_errors_not_hangups() {
+        let cfg = ServerConfig { exit_when_idle: true, ..ServerConfig::default() };
+        let (addr, server) = spawn_server(cfg);
+
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        assert_eq!(
+            read_msg(&mut reader),
+            Some(ServerMsg::Hello { schema: PROTO_SCHEMA })
+        );
+        stream.write_all(b"this is not json\n").unwrap();
+        match read_msg(&mut reader) {
+            Some(ServerMsg::Error { .. }) => {}
+            other => panic!("expected error line, got {other:?}"),
+        }
+        stream.write_all(format!("{}\n", ClientMsg::Close.to_line()).as_bytes()).unwrap();
+        assert_eq!(read_msg(&mut reader), None);
+        let (stats, _) = server.join().unwrap();
+        assert_eq!(stats.bad_lines, 1);
+    }
+
+    #[test]
+    fn mock_backend_is_deterministic_and_accounts_kv() {
+        let run = || {
+            let mut b = MockBackend::new();
+            b.max_active = 1;
+            b.submit(Request {
+                id: 1,
+                arrival_s: 0.0,
+                prompt: vec![0; 4],
+                max_new_tokens: 2,
+                session: None,
+                task: None,
+                answer: None,
+                deadline_ms: None,
+            });
+            b.submit(Request {
+                id: 2,
+                arrival_s: 0.0,
+                prompt: vec![0; 4],
+                max_new_tokens: 1,
+                session: None,
+                task: None,
+                answer: None,
+                deadline_ms: None,
+            });
+            let mut sigs = Vec::new();
+            while b.has_work() {
+                for ev in b.step().unwrap() {
+                    sigs.push(ev.sig(true));
+                }
+            }
+            assert_eq!(b.kv_bytes_in_use(), 0);
+            sigs
+        };
+        let a = run();
+        assert!(!a.is_empty());
+        assert_eq!(a, run(), "same submissions, same event stream");
+    }
+}

@@ -1,0 +1,399 @@
+//! Line-delimited JSON wire protocol for the network serving front door.
+//!
+//! One JSON object per `\n`-terminated line in each direction, built on
+//! the deterministic `util::json::Json` serializer (sorted keys, ints
+//! render without a decimal point), so identical messages always encode
+//! to identical bytes. The server's first line is always
+//! [`ServerMsg::Hello`] carrying [`PROTO_SCHEMA`] — clients reject a
+//! version they do not speak, and archived captures stay
+//! self-describing like the trace and event-log streams.
+//!
+//! Client → server operations (`"op"` field):
+//!
+//! ```text
+//! {"op":"submit","id":0,"prompt":"…","max_new":16}        // + optional
+//! {"op":"submit","id":1,"prompt":"…","max_new":16,        //   fields
+//!  "session":7,"deadline_ms":250}
+//! {"op":"cancel","id":0}
+//! {"op":"close"}
+//! ```
+//!
+//! Server → client messages (`"kind"` field) mirror the frontend's
+//! `ServeEvent` lifecycle — `admitted`, `deferred`, `token`, `finished`,
+//! `cancelled`, `expired` — plus the protocol-level `hello`, the
+//! backpressure pair `retry` (typed retry-after: resubmit later) and
+//! `overload` (typed shed naming the limit that fired), and `error` for
+//! unparseable input. Request ids on the wire are always the *client's*
+//! per-connection ids; the server translates to and from its global ids
+//! at the connection boundary. Ids must stay below 2^53 (they ride JSON
+//! numbers).
+
+use crate::coordinator::ServeEvent;
+use crate::metrics::RequestRecord;
+use crate::util::json::Json;
+
+/// Wire-protocol schema version, carried by the `hello` line. Bump on any
+/// message-shape change so old clients fail loudly instead of misparsing.
+pub const PROTO_SCHEMA: u64 = 1;
+
+/// One client → server operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    /// submit a prompt; `id` is the client's connection-local request id
+    Submit {
+        id: u64,
+        prompt: String,
+        max_new: usize,
+        session: Option<u64>,
+        deadline_ms: Option<f64>,
+    },
+    /// cancel a previously submitted request (any pre-terminal state)
+    Cancel { id: u64 },
+    /// done submitting; the server finishes streaming in-flight requests,
+    /// then closes the connection
+    Close,
+}
+
+impl ClientMsg {
+    pub fn to_line(&self) -> String {
+        match self {
+            ClientMsg::Submit { id, prompt, max_new, session, deadline_ms } => {
+                let mut pairs: Vec<(&str, Json)> = vec![
+                    ("op", Json::from("submit")),
+                    ("id", Json::Num(*id as f64)),
+                    ("prompt", Json::from(prompt.as_str())),
+                    ("max_new", Json::from(*max_new)),
+                ];
+                if let Some(s) = session {
+                    pairs.push(("session", Json::Num(*s as f64)));
+                }
+                if let Some(d) = deadline_ms {
+                    pairs.push(("deadline_ms", Json::Num(*d)));
+                }
+                Json::obj(pairs).to_string()
+            }
+            ClientMsg::Cancel { id } => Json::obj(vec![
+                ("op", Json::from("cancel")),
+                ("id", Json::Num(*id as f64)),
+            ])
+            .to_string(),
+            ClientMsg::Close => {
+                Json::obj(vec![("op", Json::from("close"))]).to_string()
+            }
+        }
+    }
+
+    /// Parse one request line. Errors are protocol errors — the server
+    /// answers them with a [`ServerMsg::Error`] instead of dropping the
+    /// connection.
+    pub fn parse(line: &str) -> Result<ClientMsg, String> {
+        let v = Json::parse(line).map_err(|e| e.to_string())?;
+        let op = v
+            .get("op")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| "missing 'op'".to_string())?;
+        let id = |key: &str| -> Result<u64, String> {
+            v.get(key)
+                .and_then(|j| j.as_f64())
+                .filter(|f| *f >= 0.0)
+                .map(|f| f as u64)
+                .ok_or_else(|| format!("missing or invalid '{key}'"))
+        };
+        match op {
+            "submit" => Ok(ClientMsg::Submit {
+                id: id("id")?,
+                prompt: v
+                    .get("prompt")
+                    .and_then(|j| j.as_str())
+                    .ok_or_else(|| "missing or invalid 'prompt'".to_string())?
+                    .to_string(),
+                max_new: v
+                    .get("max_new")
+                    .and_then(|j| j.as_usize())
+                    .filter(|&n| n > 0)
+                    .ok_or_else(|| "missing or invalid 'max_new'".to_string())?,
+                session: v.get("session").and_then(|j| j.as_f64()).map(|f| f as u64),
+                deadline_ms: v.get("deadline_ms").and_then(|j| j.as_f64()),
+            }),
+            "cancel" => Ok(ClientMsg::Cancel { id: id("id")? }),
+            "close" => Ok(ClientMsg::Close),
+            other => Err(format!("unknown op '{other}'")),
+        }
+    }
+}
+
+/// One server → client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerMsg {
+    /// first line on every accepted connection
+    Hello { schema: u64 },
+    Admitted { id: u64, t: f64 },
+    Deferred { id: u64, t: f64 },
+    Token { id: u64, tok: i32, t: f64 },
+    Finished { id: u64, new_tokens: usize, e2e_s: f64 },
+    Cancelled { id: u64, t: f64 },
+    Expired { id: u64, t: f64 },
+    /// admission backpressure (defer): resubmit after the hint
+    Retry { id: u64, retry_after_ms: f64 },
+    /// typed overload: the named limit shed this operation (or, with no
+    /// `id`, this whole connection at accept)
+    Overload { id: Option<u64>, limit: String, max: usize },
+    /// protocol error (e.g. an unparseable request line)
+    Error { reason: String },
+}
+
+impl ServerMsg {
+    /// Translate a frontend `ServeEvent` onto the wire, rewriting the
+    /// server's global request id to the connection's `client_id`.
+    pub fn from_event(ev: &ServeEvent, client_id: u64) -> ServerMsg {
+        match ev {
+            ServeEvent::Admitted { t, .. } => {
+                ServerMsg::Admitted { id: client_id, t: *t }
+            }
+            ServeEvent::Deferred { t, .. } => {
+                ServerMsg::Deferred { id: client_id, t: *t }
+            }
+            ServeEvent::Token { tok, t, .. } => {
+                ServerMsg::Token { id: client_id, tok: *tok, t: *t }
+            }
+            ServeEvent::Finished(rec) => ServerMsg::finished(rec, client_id),
+            ServeEvent::Cancelled { t, .. } => {
+                ServerMsg::Cancelled { id: client_id, t: *t }
+            }
+            ServeEvent::DeadlineExpired { t, .. } => {
+                ServerMsg::Expired { id: client_id, t: *t }
+            }
+        }
+    }
+
+    fn finished(rec: &RequestRecord, client_id: u64) -> ServerMsg {
+        ServerMsg::Finished {
+            id: client_id,
+            new_tokens: rec.new_tokens,
+            e2e_s: rec.e2e_seconds,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServerMsg::Hello { .. } => "hello",
+            ServerMsg::Admitted { .. } => "admitted",
+            ServerMsg::Deferred { .. } => "deferred",
+            ServerMsg::Token { .. } => "token",
+            ServerMsg::Finished { .. } => "finished",
+            ServerMsg::Cancelled { .. } => "cancelled",
+            ServerMsg::Expired { .. } => "expired",
+            ServerMsg::Retry { .. } => "retry",
+            ServerMsg::Overload { .. } => "overload",
+            ServerMsg::Error { .. } => "error",
+        }
+    }
+
+    pub fn to_line(&self) -> String {
+        let mut pairs: Vec<(&str, Json)> = vec![("kind", Json::from(self.kind()))];
+        match self {
+            ServerMsg::Hello { schema } => {
+                pairs.push(("schema", Json::Num(*schema as f64)));
+            }
+            ServerMsg::Admitted { id, t }
+            | ServerMsg::Deferred { id, t }
+            | ServerMsg::Cancelled { id, t }
+            | ServerMsg::Expired { id, t } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("t", Json::Num(*t)));
+            }
+            ServerMsg::Token { id, tok, t } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("tok", Json::Num(*tok as f64)));
+                pairs.push(("t", Json::Num(*t)));
+            }
+            ServerMsg::Finished { id, new_tokens, e2e_s } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("new_tokens", Json::from(*new_tokens)));
+                pairs.push(("e2e_s", Json::Num(*e2e_s)));
+            }
+            ServerMsg::Retry { id, retry_after_ms } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("retry_after_ms", Json::Num(*retry_after_ms)));
+            }
+            ServerMsg::Overload { id, limit, max } => {
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(*id as f64)));
+                }
+                pairs.push(("limit", Json::from(limit.as_str())));
+                pairs.push(("max", Json::from(*max)));
+            }
+            ServerMsg::Error { reason } => {
+                pairs.push(("reason", Json::from(reason.as_str())));
+            }
+        }
+        Json::obj(pairs).to_string()
+    }
+
+    /// Parse one response line (the client side of the protocol).
+    pub fn parse(line: &str) -> Result<ServerMsg, String> {
+        let v = Json::parse(line).map_err(|e| e.to_string())?;
+        let kind = v
+            .get("kind")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| "missing 'kind'".to_string())?;
+        let num = |key: &str| -> Result<f64, String> {
+            v.get(key)
+                .and_then(|j| j.as_f64())
+                .ok_or_else(|| format!("missing or invalid '{key}'"))
+        };
+        let id = |key: &str| -> Result<u64, String> { num(key).map(|f| f as u64) };
+        match kind {
+            "hello" => Ok(ServerMsg::Hello { schema: id("schema")? }),
+            "admitted" => Ok(ServerMsg::Admitted { id: id("id")?, t: num("t")? }),
+            "deferred" => Ok(ServerMsg::Deferred { id: id("id")?, t: num("t")? }),
+            "token" => Ok(ServerMsg::Token {
+                id: id("id")?,
+                tok: num("tok")? as i32,
+                t: num("t")?,
+            }),
+            "finished" => Ok(ServerMsg::Finished {
+                id: id("id")?,
+                new_tokens: num("new_tokens")? as usize,
+                e2e_s: num("e2e_s")?,
+            }),
+            "cancelled" => Ok(ServerMsg::Cancelled { id: id("id")?, t: num("t")? }),
+            "expired" => Ok(ServerMsg::Expired { id: id("id")?, t: num("t")? }),
+            "retry" => Ok(ServerMsg::Retry {
+                id: id("id")?,
+                retry_after_ms: num("retry_after_ms")?,
+            }),
+            "overload" => Ok(ServerMsg::Overload {
+                id: v.get("id").and_then(|j| j.as_f64()).map(|f| f as u64),
+                limit: v
+                    .get("limit")
+                    .and_then(|j| j.as_str())
+                    .ok_or_else(|| "missing 'limit'".to_string())?
+                    .to_string(),
+                max: v
+                    .get("max")
+                    .and_then(|j| j.as_usize())
+                    .ok_or_else(|| "missing 'max'".to_string())?,
+            }),
+            "error" => Ok(ServerMsg::Error {
+                reason: v
+                    .get("reason")
+                    .and_then(|j| j.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            }),
+            other => Err(format!("unknown kind '{other}'")),
+        }
+    }
+
+    /// True for messages that end a request's lifecycle on the wire.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            ServerMsg::Finished { .. }
+                | ServerMsg::Cancelled { .. }
+                | ServerMsg::Expired { .. }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_messages_roundtrip() {
+        let msgs = vec![
+            ClientMsg::Submit {
+                id: 3,
+                prompt: "find the passkey".into(),
+                max_new: 16,
+                session: Some(7),
+                deadline_ms: Some(250.0),
+            },
+            ClientMsg::Submit {
+                id: 0,
+                prompt: String::new(),
+                max_new: 1,
+                session: None,
+                deadline_ms: None,
+            },
+            ClientMsg::Cancel { id: 3 },
+            ClientMsg::Close,
+        ];
+        for m in msgs {
+            let line = m.to_line();
+            assert!(!line.contains('\n'), "one message per line: {line}");
+            assert_eq!(ClientMsg::parse(&line).unwrap(), m, "{line}");
+        }
+    }
+
+    #[test]
+    fn server_messages_roundtrip() {
+        let msgs = vec![
+            ServerMsg::Hello { schema: PROTO_SCHEMA },
+            ServerMsg::Admitted { id: 1, t: 0.5 },
+            ServerMsg::Deferred { id: 1, t: 0.25 },
+            ServerMsg::Token { id: 1, tok: -2, t: 0.75 },
+            ServerMsg::Finished { id: 1, new_tokens: 4, e2e_s: 1.5 },
+            ServerMsg::Cancelled { id: 2, t: 0.1 },
+            ServerMsg::Expired { id: 2, t: 0.2 },
+            ServerMsg::Retry { id: 5, retry_after_ms: 50.0 },
+            ServerMsg::Overload { id: Some(5), limit: "queue_depth".into(), max: 4 },
+            ServerMsg::Overload { id: None, limit: "max_conns".into(), max: 2 },
+            ServerMsg::Error { reason: "missing 'op'".into() },
+        ];
+        for m in msgs {
+            let line = m.to_line();
+            assert_eq!(ServerMsg::parse(&line).unwrap(), m, "{line}");
+        }
+    }
+
+    #[test]
+    fn encoding_is_deterministic_sorted_json() {
+        let m = ServerMsg::Token { id: 3, tok: 17, t: 0.25 };
+        assert_eq!(m.to_line(), r#"{"id":3,"kind":"token","t":0.25,"tok":17}"#);
+        assert_eq!(m.to_line(), m.to_line());
+        let c = ClientMsg::Cancel { id: 9 };
+        assert_eq!(c.to_line(), r#"{"id":9,"op":"cancel"}"#);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(ClientMsg::parse("not json").is_err());
+        assert!(ClientMsg::parse(r#"{"op":"teleport"}"#).is_err());
+        assert!(ClientMsg::parse(r#"{"op":"submit","id":0}"#).is_err(), "no prompt");
+        assert!(
+            ClientMsg::parse(r#"{"id":0,"max_new":0,"op":"submit","prompt":"x"}"#)
+                .is_err(),
+            "max_new must be positive"
+        );
+        assert!(ServerMsg::parse(r#"{"kind":"nope"}"#).is_err());
+        assert!(ServerMsg::parse(r#"{"kind":"token","id":1}"#).is_err());
+    }
+
+    #[test]
+    fn events_translate_to_client_ids() {
+        let ev = ServeEvent::Token { id: 1000, tok: 5, t: 1.0 };
+        assert_eq!(
+            ServerMsg::from_event(&ev, 3),
+            ServerMsg::Token { id: 3, tok: 5, t: 1.0 },
+            "global id 1000 rewrites to the connection's id 3"
+        );
+        let rec = RequestRecord {
+            id: 1001,
+            queue_seconds: 0.0,
+            prefill_seconds: 0.0,
+            ttft_seconds: 0.0,
+            decode_seconds: 0.0,
+            e2e_seconds: 2.0,
+            prompt_tokens: 8,
+            new_tokens: 4,
+            session_reused_tokens: 0,
+        };
+        let m = ServerMsg::from_event(&ServeEvent::Finished(rec), 0);
+        assert_eq!(m, ServerMsg::Finished { id: 0, new_tokens: 4, e2e_s: 2.0 });
+        assert!(m.is_terminal());
+        assert!(!ServerMsg::Admitted { id: 0, t: 0.0 }.is_terminal());
+    }
+}

@@ -1,0 +1,251 @@
+//! Admission backpressure for the network front door.
+//!
+//! The server never queues unboundedly. Two explicit limits gate intake,
+//! and crossing either produces a *typed* response instead of silent
+//! buffering:
+//!
+//! - `max_conns` — connection cap, checked at accept. Over the cap the
+//!   server answers `hello` + `overload{limit:"max_conns"}` and closes,
+//!   so the client learns *why* instead of timing out.
+//! - `queue_depth` — cap on work the backend has not started (queued +
+//!   pending), checked per `submit`. Over the cap the configured
+//!   [`ShedPolicy`] decides: **defer** answers `retry` with a
+//!   deterministic `retry_after_ms` hint (the client resubmits), **shed**
+//!   answers `overload{limit:"queue_depth"}` (the request is dropped).
+//!
+//! [`AdmissionGate`] is pure bookkeeping — no sockets, no clock — so the
+//! policy is unit-testable and every decision is a deterministic function
+//! of (config, current occupancy). Counters publish through the run's
+//! `trace::registry::MetricsRegistry` under `net_*` names.
+
+use crate::trace::registry::MetricsRegistry;
+
+/// What to do with a `submit` that lands while the backend queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// answer `retry` with a retry-after hint; the client owns resubmission
+    Defer,
+    /// answer `overload` naming the limit; the request is dropped
+    Shed,
+}
+
+impl ShedPolicy {
+    pub fn parse(s: &str) -> Option<ShedPolicy> {
+        match s {
+            "defer" => Some(ShedPolicy::Defer),
+            "shed" => Some(ShedPolicy::Shed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedPolicy::Defer => "defer",
+            ShedPolicy::Shed => "shed",
+        }
+    }
+
+    pub fn names() -> Vec<&'static str> {
+        vec!["defer", "shed"]
+    }
+}
+
+/// Intake limits for [`AdmissionGate`].
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// concurrent connection cap (accept-time limit)
+    pub max_conns: usize,
+    /// cap on backend work not yet started: queued + pending submissions
+    pub queue_depth: usize,
+    pub policy: ShedPolicy,
+    /// base retry hint; the emitted hint scales with how far over the cap
+    /// the queue is, so heavier backlogs push clients further out
+    pub retry_after_ms: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            max_conns: 64,
+            queue_depth: 256,
+            policy: ShedPolicy::Defer,
+            retry_after_ms: 50.0,
+        }
+    }
+}
+
+/// One admission decision.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Admission {
+    Accept,
+    /// bounced under `ShedPolicy::Defer`: client should retry after the hint
+    Defer { retry_after_ms: f64 },
+    /// shed: the named limit was hit at value `max`
+    Shed { limit: &'static str, max: usize },
+}
+
+/// Backpressure counters, published as `net_*` metrics.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ShedCounters {
+    /// connections refused at accept (`max_conns`)
+    pub conns_shed: u64,
+    /// submits answered with `retry` (`queue_depth` under `Defer`)
+    pub submits_deferred: u64,
+    /// submits answered with `overload` (`queue_depth` under `Shed`)
+    pub submits_shed: u64,
+    /// response lines parked because a connection's send buffer was full
+    pub slow_consumer_deferrals: u64,
+    /// connections force-closed after their parked backlog overflowed
+    pub slow_consumer_closes: u64,
+}
+
+impl ShedCounters {
+    pub fn publish(&self, reg: &mut MetricsRegistry) {
+        reg.counter("net_conns_shed", self.conns_shed);
+        reg.counter("net_submits_deferred", self.submits_deferred);
+        reg.counter("net_submits_shed", self.submits_shed);
+        reg.counter("net_slow_consumer_deferrals", self.slow_consumer_deferrals);
+        reg.counter("net_slow_consumer_closes", self.slow_consumer_closes);
+    }
+}
+
+/// Stateful admission decisions over [`AdmissionConfig`] limits.
+#[derive(Debug)]
+pub struct AdmissionGate {
+    pub cfg: AdmissionConfig,
+    pub counters: ShedCounters,
+}
+
+impl AdmissionGate {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionGate {
+        AdmissionGate { cfg, counters: ShedCounters::default() }
+    }
+
+    /// Accept-time gate: may a new connection join `open_conns` live ones?
+    pub fn admit_conn(&mut self, open_conns: usize) -> Admission {
+        if open_conns >= self.cfg.max_conns {
+            self.counters.conns_shed += 1;
+            return Admission::Shed { limit: "max_conns", max: self.cfg.max_conns };
+        }
+        Admission::Accept
+    }
+
+    /// Submit-time gate over the backend's not-yet-started depth.
+    pub fn admit_submit(&mut self, queued: usize) -> Admission {
+        if queued < self.cfg.queue_depth {
+            return Admission::Accept;
+        }
+        match self.cfg.policy {
+            ShedPolicy::Defer => {
+                self.counters.submits_deferred += 1;
+                Admission::Defer { retry_after_ms: self.retry_hint(queued) }
+            }
+            ShedPolicy::Shed => {
+                self.counters.submits_shed += 1;
+                Admission::Shed {
+                    limit: "queue_depth",
+                    max: self.cfg.queue_depth,
+                }
+            }
+        }
+    }
+
+    /// Deterministic retry hint: the base scaled by queue overshoot, so a
+    /// queue at 2x its cap asks clients to wait twice the base.
+    fn retry_hint(&self, queued: usize) -> f64 {
+        let depth = self.cfg.queue_depth.max(1) as f64;
+        self.cfg.retry_after_ms * (queued as f64 / depth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_points() {
+        assert_eq!(ShedPolicy::parse("defer"), Some(ShedPolicy::Defer));
+        assert_eq!(ShedPolicy::parse("shed"), Some(ShedPolicy::Shed));
+        assert_eq!(ShedPolicy::parse("drop"), None);
+        for name in ShedPolicy::names() {
+            assert_eq!(ShedPolicy::parse(name).unwrap().name(), name);
+        }
+    }
+
+    #[test]
+    fn conn_gate_sheds_over_the_cap_and_counts() {
+        let mut gate = AdmissionGate::new(AdmissionConfig {
+            max_conns: 2,
+            ..AdmissionConfig::default()
+        });
+        assert_eq!(gate.admit_conn(0), Admission::Accept);
+        assert_eq!(gate.admit_conn(1), Admission::Accept);
+        assert_eq!(
+            gate.admit_conn(2),
+            Admission::Shed { limit: "max_conns", max: 2 }
+        );
+        assert_eq!(gate.counters.conns_shed, 1);
+    }
+
+    #[test]
+    fn submit_gate_defers_with_a_scaling_hint() {
+        let mut gate = AdmissionGate::new(AdmissionConfig {
+            queue_depth: 4,
+            policy: ShedPolicy::Defer,
+            retry_after_ms: 50.0,
+            ..AdmissionConfig::default()
+        });
+        assert_eq!(gate.admit_submit(3), Admission::Accept);
+        assert_eq!(
+            gate.admit_submit(4),
+            Admission::Defer { retry_after_ms: 50.0 },
+            "at the cap the hint is exactly the base"
+        );
+        assert_eq!(
+            gate.admit_submit(8),
+            Admission::Defer { retry_after_ms: 100.0 },
+            "2x overshoot doubles the hint"
+        );
+        assert_eq!(gate.counters.submits_deferred, 2);
+        assert_eq!(gate.counters.submits_shed, 0);
+    }
+
+    #[test]
+    fn submit_gate_sheds_with_the_limit_named() {
+        let mut gate = AdmissionGate::new(AdmissionConfig {
+            queue_depth: 4,
+            policy: ShedPolicy::Shed,
+            ..AdmissionConfig::default()
+        });
+        assert_eq!(gate.admit_submit(0), Admission::Accept);
+        assert_eq!(
+            gate.admit_submit(4),
+            Admission::Shed { limit: "queue_depth", max: 4 }
+        );
+        assert_eq!(gate.counters.submits_shed, 1);
+        assert_eq!(gate.counters.submits_deferred, 0);
+    }
+
+    #[test]
+    fn counters_publish_under_net_names() {
+        let counters = ShedCounters {
+            conns_shed: 1,
+            submits_deferred: 2,
+            submits_shed: 3,
+            slow_consumer_deferrals: 4,
+            slow_consumer_closes: 5,
+        };
+        let mut reg = MetricsRegistry::new();
+        counters.publish(&mut reg);
+        let prom = reg.prometheus();
+        for needle in [
+            "net_conns_shed 1",
+            "net_submits_deferred 2",
+            "net_submits_shed 3",
+            "net_slow_consumer_deferrals 4",
+            "net_slow_consumer_closes 5",
+        ] {
+            assert!(prom.contains(needle), "missing {needle} in:\n{prom}");
+        }
+    }
+}

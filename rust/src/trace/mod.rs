@@ -12,6 +12,9 @@
 //!                        └──────────┴── demote | spill_out | spill_fault |
 //!                                       readahead   (store events, anchored
 //!                                       to the enclosing prefill/round span)
+//!
+//! conn_open → … request lifecycles … → conn_close   (network front door;
+//!                                       one span per TCP connection)
 //! ```
 //!
 //! Every timestamp is read off the frontend's virtual [`Clock`]
@@ -75,6 +78,13 @@ pub enum TraceEvent {
     Cancelled { id: u64, t: f64 },
     /// terminal: shed or aborted past its deadline
     Expired { id: u64, t: f64 },
+    /// network front door: a client connection was accepted (`conn` is
+    /// the server's accept-order connection id)
+    ConnOpen { conn: u64, t: f64 },
+    /// network front door: a connection closed (client hangup, slow-
+    /// consumer shed, or server shutdown); its in-flight requests were
+    /// cancelled through the normal `cancelled` path
+    ConnClose { conn: u64, t: f64 },
 }
 
 impl TraceEvent {
@@ -92,6 +102,8 @@ impl TraceEvent {
             TraceEvent::Finished { .. } => "finished",
             TraceEvent::Cancelled { .. } => "cancelled",
             TraceEvent::Expired { .. } => "expired",
+            TraceEvent::ConnOpen { .. } => "conn_open",
+            TraceEvent::ConnClose { .. } => "conn_close",
         }
     }
 
@@ -112,7 +124,9 @@ impl TraceEvent {
                 SpanCtx::Prefill { id } => Some(*id),
                 SpanCtx::Round { .. } => None,
             },
-            TraceEvent::Round { .. } => None,
+            TraceEvent::Round { .. }
+            | TraceEvent::ConnOpen { .. }
+            | TraceEvent::ConnClose { .. } => None,
         }
     }
 
@@ -168,6 +182,10 @@ impl TraceEvent {
                 push_ctx(&mut pairs, ctx);
                 pairs.push(("worker", Json::from(*worker)));
                 pairs.push(("bytes", Json::Num(*bytes as f64)));
+            }
+            TraceEvent::ConnOpen { conn, t } | TraceEvent::ConnClose { conn, t } => {
+                pairs.push(("conn", Json::Num(*conn as f64)));
+                pairs.push(("t", Json::Num(*t)));
             }
         }
         Json::obj(pairs).to_string()
@@ -426,6 +444,17 @@ mod tests {
         assert_eq!(f.request_id(), Some(4));
         let v = Json::parse(&f.to_line()).unwrap();
         assert_eq!(v.get("src").and_then(|j| j.as_str()), Some("disk"));
+    }
+
+    #[test]
+    fn conn_lifecycle_events_serialize_without_a_request_id() {
+        let o = TraceEvent::ConnOpen { conn: 3, t: 0.5 };
+        assert_eq!(o.to_line(), r#"{"conn":3,"kind":"conn_open","t":0.5}"#);
+        assert_eq!(o.request_id(), None, "connections span many requests");
+        let c = TraceEvent::ConnClose { conn: 3, t: 1.5 };
+        let v = Json::parse(&c.to_line()).unwrap();
+        assert_eq!(v.get("kind").and_then(|j| j.as_str()), Some("conn_close"));
+        assert_eq!(v.get("conn").and_then(|j| j.as_f64()), Some(3.0));
     }
 
     #[test]

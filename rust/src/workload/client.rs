@@ -1,0 +1,299 @@
+//! Closed-loop network client generator for the TCP front door.
+//!
+//! Open-loop sources (`openloop`) push arrivals at the frontend on a
+//! schedule regardless of completions; a *closed-loop* client is the
+//! opposite discipline: each connection keeps at most one request in
+//! flight, waits for its terminal event, thinks for an exponentially
+//! distributed pause, then submits the next. `N` concurrent connections
+//! give a classic interactive-user load where offered rate self-adjusts
+//! to server speed — the natural workload for exercising admission
+//! backpressure (a deferred submit is retried after the server's hint,
+//! not silently queued).
+//!
+//! Prompts come from the same seeded task-document generator as every
+//! other workload (`tasks::make_doc`), with each connection forking its
+//! own RNG stream, so a `(seed, conns, requests_per_conn)` triple names
+//! one reproducible request population. With a single connection and
+//! zero think time the server's virtual clock makes the whole exchange
+//! deterministic — CI byte-diffs a seeded loopback run's server trace on
+//! exactly this setup.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::server::proto::{ClientMsg, ServerMsg, PROTO_SCHEMA};
+use crate::util::rng::Rng;
+
+use super::tasks::{self, Task};
+
+/// Closed-loop load shape: `conns` connections, each submitting
+/// `requests_per_conn` seeded task documents one at a time.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// server address, e.g. `127.0.0.1:4460`
+    pub addr: String,
+    pub conns: usize,
+    pub requests_per_conn: usize,
+    /// approximate prompt length fed to the task generator
+    pub prompt_chars: usize,
+    pub max_new_tokens: usize,
+    /// mean think time between a terminal event and the next submit
+    /// (exponential; 0 disables thinking — required for determinism runs)
+    pub think_ms: f64,
+    pub seed: u64,
+    /// per-request SLO passed through to the server (None = no deadline)
+    pub deadline_ms: Option<f64>,
+    /// give up on a request after this many `retry` bounces
+    pub max_retries: usize,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            addr: "127.0.0.1:4460".into(),
+            conns: 2,
+            requests_per_conn: 4,
+            prompt_chars: 400,
+            max_new_tokens: 16,
+            think_ms: 0.0,
+            seed: 42,
+            deadline_ms: None,
+            max_retries: 8,
+        }
+    }
+}
+
+/// Aggregated request outcomes across every connection.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ClientStats {
+    pub submitted: u64,
+    pub finished: u64,
+    pub cancelled: u64,
+    pub expired: u64,
+    /// `retry` bounces honoured (defer backpressure)
+    pub retried: u64,
+    /// requests abandoned on a typed `overload` (or retry exhaustion)
+    pub overloaded: u64,
+    /// connections refused at accept (`max_conns` shed)
+    pub conns_shed: u64,
+    pub tokens: u64,
+    /// protocol `error` lines received
+    pub errors: u64,
+}
+
+impl ClientStats {
+    fn merge(&mut self, o: &ClientStats) {
+        self.submitted += o.submitted;
+        self.finished += o.finished;
+        self.cancelled += o.cancelled;
+        self.expired += o.expired;
+        self.retried += o.retried;
+        self.overloaded += o.overloaded;
+        self.conns_shed += o.conns_shed;
+        self.tokens += o.tokens;
+        self.errors += o.errors;
+    }
+}
+
+/// Drive the full closed loop: one thread per connection, forked RNG
+/// streams, merged stats. Fails on I/O errors or protocol violations —
+/// typed backpressure (`retry`/`overload`) is an expected outcome, not an
+/// error.
+pub fn run_closed_loop(cfg: &ClientConfig) -> Result<ClientStats> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut handles = Vec::new();
+    for c in 0..cfg.conns.max(1) {
+        let cfg = cfg.clone();
+        let conn_rng = rng.fork(c as u64);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("tinyserve-client-{c}"))
+                .spawn(move || run_conn(&cfg, conn_rng))
+                .context("spawn client thread")?,
+        );
+    }
+    let mut stats = ClientStats::default();
+    let mut first_err = None;
+    for h in handles {
+        match h.join().expect("client thread panicked") {
+            Ok(s) => stats.merge(&s),
+            Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(stats),
+    }
+}
+
+fn run_conn(cfg: &ClientConfig, mut rng: Rng) -> Result<ClientStats> {
+    let mut stats = ClientStats::default();
+    let mut stream =
+        TcpStream::connect(&cfg.addr).with_context(|| format!("connect {}", cfg.addr))?;
+    let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
+
+    match read_msg(&mut reader)? {
+        Some(ServerMsg::Hello { schema }) if schema == PROTO_SCHEMA => {}
+        Some(ServerMsg::Hello { schema }) => {
+            bail!("server speaks schema {schema}, client speaks {PROTO_SCHEMA}")
+        }
+        other => bail!("expected hello, got {other:?}"),
+    }
+    // an over-cap server sheds right after hello: overload then close
+    // (peek by submitting nothing yet would block, so the shed check rides
+    // on the first request's read loop below)
+
+    for r in 0..cfg.requests_per_conn {
+        if cfg.think_ms > 0.0 && r > 0 {
+            let pause = rng.exponential(1.0 / cfg.think_ms).min(cfg.think_ms * 10.0);
+            std::thread::sleep(std::time::Duration::from_micros((pause * 1000.0) as u64));
+        }
+        let task = *rng.choice(Task::all());
+        let doc = tasks::make_doc(&mut rng, task, cfg.prompt_chars);
+        let submit = ClientMsg::Submit {
+            id: r as u64,
+            prompt: doc.prompt,
+            max_new: cfg.max_new_tokens,
+            session: None,
+            deadline_ms: cfg.deadline_ms,
+        };
+        let mut attempts = 0usize;
+        'request: loop {
+            stream
+                .write_all(format!("{}\n", submit.to_line()).as_bytes())
+                .context("write submit")?;
+            stats.submitted += 1;
+            loop {
+                let Some(msg) = read_msg(&mut reader)? else {
+                    // shed at accept shows up here: the overload line may
+                    // have raced the close, so a bare EOF also counts
+                    stats.conns_shed += 1;
+                    return Ok(stats);
+                };
+                match msg {
+                    ServerMsg::Admitted { .. } | ServerMsg::Deferred { .. } => {}
+                    ServerMsg::Token { .. } => stats.tokens += 1,
+                    ServerMsg::Finished { .. } => {
+                        stats.finished += 1;
+                        break 'request;
+                    }
+                    ServerMsg::Cancelled { .. } => {
+                        stats.cancelled += 1;
+                        break 'request;
+                    }
+                    ServerMsg::Expired { .. } => {
+                        stats.expired += 1;
+                        break 'request;
+                    }
+                    ServerMsg::Retry { retry_after_ms, .. } => {
+                        attempts += 1;
+                        if attempts > cfg.max_retries {
+                            stats.overloaded += 1;
+                            break 'request;
+                        }
+                        stats.retried += 1;
+                        std::thread::sleep(std::time::Duration::from_micros(
+                            (retry_after_ms * 1000.0) as u64,
+                        ));
+                        continue 'request;
+                    }
+                    ServerMsg::Overload { id: None, .. } => {
+                        // connection-level shed (max_conns)
+                        stats.conns_shed += 1;
+                        return Ok(stats);
+                    }
+                    ServerMsg::Overload { .. } => {
+                        stats.overloaded += 1;
+                        break 'request;
+                    }
+                    ServerMsg::Error { reason } => {
+                        stats.errors += 1;
+                        bail!("protocol error from server: {reason}");
+                    }
+                    ServerMsg::Hello { .. } => bail!("unexpected second hello"),
+                }
+            }
+        }
+    }
+
+    stream
+        .write_all(format!("{}\n", ClientMsg::Close.to_line()).as_bytes())
+        .context("write close")?;
+    // drain to EOF so the server's graceful close is observed
+    while read_msg(&mut reader)?.is_some() {}
+    Ok(stats)
+}
+
+fn read_msg(reader: &mut BufReader<TcpStream>) -> Result<Option<ServerMsg>> {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).context("read server line")?;
+    if n == 0 {
+        return Ok(None);
+    }
+    ServerMsg::parse(line.trim_end())
+        .map(Some)
+        .map_err(|e| anyhow::anyhow!("bad server line {line:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::shed::AdmissionConfig;
+    use crate::server::{MockBackend, Server, ServerConfig};
+
+    fn serve_mock(
+        cfg: ServerConfig,
+    ) -> (String, std::thread::JoinHandle<(crate::server::ServerStats, MockBackend)>)
+    {
+        let server = Server::bind(cfg).expect("bind loopback");
+        let addr = server.local_addr().expect("addr").to_string();
+        let handle = std::thread::spawn(move || {
+            let mut backend = MockBackend::new();
+            let stats = server.run(&mut backend).expect("server run");
+            (stats, backend)
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn closed_loop_finishes_every_request_against_a_mock_server() {
+        let (addr, server) =
+            serve_mock(ServerConfig { exit_when_idle: true, ..ServerConfig::default() });
+        let cfg = ClientConfig {
+            addr,
+            conns: 2,
+            requests_per_conn: 3,
+            prompt_chars: 120,
+            max_new_tokens: 4,
+            ..ClientConfig::default()
+        };
+        let stats = run_closed_loop(&cfg).expect("client run");
+        assert_eq!(stats.finished, 6, "{stats:?}");
+        assert_eq!(stats.submitted, 6);
+        assert_eq!(stats.tokens, 24, "4 tokens per request stream back");
+        assert_eq!(stats.overloaded + stats.errors, 0, "{stats:?}");
+        let (server_stats, backend) = server.join().unwrap();
+        assert_eq!(server_stats.submitted, 6);
+        assert_eq!(backend.kv_bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn same_seed_same_request_population() {
+        // the prompt/task stream is a pure function of (seed, conn index,
+        // request index) — independent of server timing
+        let docs = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut conn_rng = rng.fork(0);
+            let mut out = Vec::new();
+            for _ in 0..4 {
+                let task = *conn_rng.choice(Task::all());
+                out.push(tasks::make_doc(&mut conn_rng, task, 200).prompt);
+            }
+            out
+        };
+        assert_eq!(docs(7), docs(7));
+        assert_ne!(docs(7), docs(8));
+    }
+}

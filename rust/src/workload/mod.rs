@@ -3,12 +3,17 @@
 //! "512-2048 concurrent requests, Poisson arrivals, mean inter-arrival
 //! 50ms, 100-500 generated tokens"), and the open-loop live generator
 //! (`openloop`) that feeds the frontend against its virtual clock instead
-//! of pre-materializing a `Vec<Request>`.
+//! of pre-materializing a `Vec<Request>`. `client` is the closed-loop
+//! counterpart: N concurrent TCP connections driving the network front
+//! door, each waiting for its previous request before thinking and
+//! submitting the next.
 
+pub mod client;
 pub mod openloop;
 pub mod tasks;
 
 use crate::util::rng::Rng;
+pub use client::{run_closed_loop, ClientConfig, ClientStats};
 pub use openloop::{ArrivalProcess, LoadShape, OpenLoopConfig, OpenLoopGen};
 pub use tasks::{make_doc, Doc, Task};
 

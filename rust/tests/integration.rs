@@ -8,8 +8,8 @@
 
 use tinyserve::config::{KvDtype, ServingConfig};
 use tinyserve::coordinator::{
-    event_log_header, serve_trace, DispatchKind, Frontend, Lifecycle,
-    ServeEvent, ServeOptions, ServeReport, TimeModel, WorkerPool,
+    event_log_header, serve_trace, DispatchKind, ExecutorKind, Frontend,
+    Lifecycle, ServeEvent, ServeOptions, ServeReport, TimeModel, WorkerPool,
 };
 use tinyserve::trace::{SharedVecSink, Tracer};
 use tinyserve::engine::{Engine, Sampling};
@@ -745,6 +745,17 @@ fn env_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Step-phase executor for the determinism battery (CI re-runs the whole
+/// battery with `TINYSERVE_EXECUTOR=scoped` and byte-diffs its event logs
+/// against the default persistent runs' — executor choice must never leak
+/// into the modeled-time streams).
+fn env_executor() -> ExecutorKind {
+    std::env::var("TINYSERVE_EXECUTOR")
+        .ok()
+        .and_then(|s| ExecutorKind::parse(&s))
+        .unwrap_or(ExecutorKind::Persistent)
+}
+
 /// Serialize an event stream for diffing; under `TimeModel::Modeled` the
 /// timestamps are deterministic and included bit-exactly.
 fn event_log(events: &[ServeEvent]) -> String {
@@ -808,6 +819,7 @@ fn openloop_pool_event_stream_is_deterministic() {
             time_model: TimeModel::Modeled,
             seed,
             threads: env_threads(),
+            executor: env_executor(),
             ..Default::default()
         };
         let mut plugins = Pipeline::new();
@@ -858,6 +870,7 @@ fn threaded_rounds_replay_sequential_event_logs_exactly() {
             time_model: TimeModel::Modeled,
             seed,
             threads,
+            executor: env_executor(),
             ..Default::default()
         };
         let mut plugins = Pipeline::new();
@@ -937,7 +950,7 @@ fn trace_and_metrics_streams_are_deterministic_across_executors() {
     // Also the CI writer for the trace/metrics artifacts.
     let m = require!(manifest());
     let seed = pallas_seed();
-    let run = |threads: usize| -> (String, String) {
+    let run = |threads: usize, executor: ExecutorKind| -> (String, String) {
         let pool =
             WorkerPool::build(&m, &serve_cfg(None), 2, DispatchKind::LeastLoaded)
                 .expect("pool");
@@ -945,6 +958,7 @@ fn trace_and_metrics_streams_are_deterministic_across_executors() {
             time_model: TimeModel::Modeled,
             seed,
             threads,
+            executor,
             metrics_every: 8,
             ..Default::default()
         };
@@ -966,13 +980,18 @@ fn trace_and_metrics_streams_are_deterministic_across_executors() {
         let s = metrics_lines.lock().unwrap().join("\n");
         (t, s)
     };
-    let (t1a, m1a) = run(1);
-    let (t1b, m1b) = run(1);
+    let (t1a, m1a) = run(1, ExecutorKind::Persistent);
+    let (t1b, m1b) = run(1, ExecutorKind::Persistent);
     assert_eq!(t1a, t1b, "same seed, same trace bytes");
     assert_eq!(m1a, m1b, "same seed, same metrics snapshot bytes");
-    let (t4, m4) = run(4);
+    let (t4, m4) = run(4, ExecutorKind::Persistent);
     assert_eq!(t1a, t4, "trace stream is executor-independent");
     assert_eq!(m1a, m4, "metrics stream is executor-independent");
+    // scoped spawn/join threads vs long-lived persistent workers: same
+    // dispatch/step/commit seam, so the streams must not move by a byte
+    let (t4s, m4s) = run(4, ExecutorKind::Scoped);
+    assert_eq!(t1a, t4s, "trace stream is identical under scoped threads");
+    assert_eq!(m1a, m4s, "metrics stream is identical under scoped threads");
 
     // stream shape: run header first (schema-versioned, no thread count —
     // that is what makes the cross-executor byte-diff above possible),

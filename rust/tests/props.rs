@@ -869,6 +869,15 @@ fn prop_round_executor_threaded_matches_sequential() {
                     policy.name()
                 ));
             }
+            // long-lived persistent workers must replay the same digests —
+            // same contract, different thread lifetime
+            let got = digest(RoundExecutor::Persistent { threads });
+            if got != base {
+                return Err(format!(
+                    "[{}] persistent threads={threads} diverged:\n{got:?}\n!=\n{base:?}",
+                    policy.name()
+                ));
+            }
         }
         Ok(())
     });
