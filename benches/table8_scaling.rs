@@ -15,13 +15,18 @@
 //!    channel-fed decode threads, on a no-op round so only the dispatch
 //!    machinery is priced. This is the number `--executor persistent`
 //!    saves on every decode round.
+//! 4. **SLO-class preemption** (Table 8d): a tiered bursty mix on a single
+//!    admission slot, served with and without `--preempt` — the
+//!    interactive tier's p99 TTFT is the headline, recorded in the
+//!    BENCH_table8.json perf context.
 
 use tinyserve::config::{KvDtype, ServingConfig};
 use tinyserve::coordinator::pool::{
     execute_round_with, PersistentExecutor, RoundExecutor,
 };
 use tinyserve::coordinator::{
-    DispatchKind, Frontend, ServeOptions, ServeReport, TimeModel, WorkerPool,
+    BatcherConfig, DispatchKind, Frontend, ServeOptions, ServeReport, TimeModel,
+    WorkerPool,
 };
 use tinyserve::harness::{measure_decode, scale};
 use tinyserve::hwmodel::{HwModel, Shape};
@@ -31,7 +36,7 @@ use tinyserve::runtime::Manifest;
 use tinyserve::sparsity::PolicyKind;
 use tinyserve::util::json::Json;
 use tinyserve::workload::{
-    ArrivalProcess, LoadShape, OpenLoopConfig, OpenLoopGen,
+    ArrivalProcess, LoadShape, OpenLoopConfig, OpenLoopGen, SloTier,
 };
 
 const MODEL: &str = "gpt2-345m-sim";
@@ -51,8 +56,73 @@ fn workload(n_requests: usize) -> OpenLoopConfig {
         n_sessions: 6,
         deadline_ms: None,
         deadline_every: 1,
+        tier_interactive: 0.0,
+        tier_background: 0.0,
         seed: 42,
     }
+}
+
+/// Nearest-rank quantile over an unsorted sample (sorts in place).
+fn pct(vals: &mut [f64], q: f64) -> f64 {
+    if vals.is_empty() {
+        return f64::NAN;
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals[((vals.len() - 1) as f64 * q).round() as usize]
+}
+
+/// One tiered run for Table 8d: a single admission slot plus long
+/// background decodes — the regime where a lower-tier sequence starves an
+/// interactive arrival past its TTFT target, which is exactly what
+/// `--preempt` exists to fix. Background requests decode ~1.8-2.3k tokens
+/// (~150-200 ms of modeled slot residency), well past the preemptor's
+/// 125 ms interactive starvation gate. Modeled time, so the on/off
+/// comparison is exact and seed-reproducible.
+fn serve_tiered(
+    manifest: &Manifest,
+    preempt: bool,
+    n_requests: usize,
+) -> Option<ServeReport> {
+    let cfg = ServingConfig {
+        model: SERVE_MODEL.into(),
+        policy: PolicyKind::TinyServe,
+        budget: 256,
+        max_batch: 4,
+        ..Default::default()
+    };
+    let pool =
+        WorkerPool::build(manifest, &cfg, 1, DispatchKind::LeastLoaded).ok()?;
+    let opts = ServeOptions {
+        time_model: TimeModel::Modeled,
+        batcher: BatcherConfig {
+            max_active: 1,
+            batch_timeout_s: 0.05,
+            prefill_per_round: 1,
+        },
+        preempt,
+        ..Default::default()
+    };
+    let mut plugins = Pipeline::new();
+    let mut fe = Frontend::builder().options(opts).build_pool(pool, &mut plugins);
+    fe.set_source(Box::new(OpenLoopGen::new(OpenLoopConfig {
+        n_requests,
+        rate_rps: 12.0,
+        process: ArrivalProcess::Gamma { shape: 0.4 },
+        shape: LoadShape::Bursts { period_s: 1.0, burst_s: 0.3, factor: 4.0 },
+        prompt_chars: (100, 300),
+        new_tokens: (1792, 2304),
+        session_reuse_prob: 0.0,
+        n_sessions: 1,
+        deadline_ms: None,
+        deadline_every: 1,
+        tier_interactive: 0.3,
+        tier_background: 0.5,
+        seed: 42,
+    })));
+    while fe.has_work() {
+        fe.step().ok()?;
+    }
+    Some(fe.into_report())
 }
 
 /// One pool run under modeled time. Returns the report plus the *real*
@@ -262,6 +332,61 @@ fn main() {
         }
     }
     t.emit(&tinyserve::results_dir(), "table8_scaling");
+
+    // ---- Table 8d: SLO-class preemption on a tiered bursty mix ----
+    // same scenario with and without --preempt; the headline number is the
+    // interactive tier's p99 TTFT, which preemption must improve
+    let tiered_n = scale(10);
+    let mut td = Table::new(
+        &format!(
+            "Table 8d: SLO-class preemption ({SERVE_MODEL}, tiered bursty \
+             open-loop, 1 slot, modeled time)"
+        ),
+        &[
+            "preempt",
+            "ttft p99 interactive ms",
+            "ttft p99 all ms",
+            "preemptions",
+            "finished",
+        ],
+    );
+    // NaN until both runs complete (engine may be unavailable)
+    let mut p99_tiered = [f64::NAN; 2];
+    let mut preemptions = 0u64;
+    for (slot, &preempt) in [false, true].iter().enumerate() {
+        let Some(r) = serve_tiered(&manifest, preempt, tiered_n) else {
+            println!("(engine unavailable: skipping preemption sweep)");
+            break;
+        };
+        let mut m = r.metrics;
+        let mut inter: Vec<f64> = r
+            .requests
+            .iter()
+            .filter(|rec| rec.tier == SloTier::Interactive)
+            .map(|rec| rec.ttft_seconds * 1e3)
+            .collect();
+        let p99_i = pct(&mut inter, 0.99);
+        p99_tiered[slot] = p99_i;
+        if preempt {
+            preemptions = r.batcher_stats.preempted;
+        }
+        td.row(vec![
+            if preempt { "on" } else { "off" }.to_string(),
+            format!("{p99_i:.0}"),
+            format!("{:.0}", m.request_ttft.p99() * 1e3),
+            format!("{}", r.batcher_stats.preempted),
+            format!("{}", m.total_requests),
+        ]);
+    }
+    if p99_tiered.iter().all(|p| p.is_finite()) {
+        println!(
+            "tiered burst: interactive p99 TTFT {:.0} ms -> {:.0} ms with \
+             preemption on ({} preemptions)",
+            p99_tiered[0], p99_tiered[1], preemptions
+        );
+    }
+    td.emit(&tinyserve::results_dir(), "table8_preempt");
+
     t.emit_bench(
         &tinyserve::results_dir(),
         "table8",
@@ -276,6 +401,11 @@ fn main() {
             // in the persistent executor's per-round win are diffable
             ("dispatch_scoped_us", Json::Num(scoped_us)),
             ("dispatch_persistent_us", Json::Num(persistent_us)),
+            // Table 8d: the preemption headline (NaN-free only when the
+            // tiered sweep ran; Json::Num serialises NaN as null)
+            ("ttft_p99_interactive_preempt_off_ms", Json::Num(p99_tiered[0])),
+            ("ttft_p99_interactive_preempt_on_ms", Json::Num(p99_tiered[1])),
+            ("preemptions", Json::from(preemptions as usize)),
         ],
     );
 

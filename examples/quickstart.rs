@@ -54,6 +54,7 @@ fn main() -> Result<()> {
         task: None,
         answer: Some(doc.answer.clone()),
         deadline_ms: None,
+        tier: Default::default(),
     });
 
     // 5. pump the event loop: each step yields typed events, and tokens

@@ -28,10 +28,23 @@ use tinyserve::report::Table;
 use tinyserve::server::shed::{AdmissionConfig, ShedPolicy};
 use tinyserve::server::{MockBackend, Server, ServerConfig};
 use tinyserve::util::cli::Args;
-use tinyserve::workload::{run_closed_loop, ClientConfig};
+use tinyserve::workload::{run_closed_loop, ClientConfig, SloTier};
 
 fn main() -> Result<()> {
     let args = Args::parse();
+    let tier = match args.get("tier") {
+        None => None,
+        Some(t) => match SloTier::parse(t) {
+            Some(t) => Some(t),
+            None => {
+                eprintln!(
+                    "unknown --tier '{t}'; valid: {}",
+                    SloTier::names().join("|")
+                );
+                std::process::exit(2);
+            }
+        },
+    };
     let mut client = ClientConfig {
         addr: args.str_or("addr", ""),
         conns: args.usize_or("conns", 2),
@@ -41,6 +54,7 @@ fn main() -> Result<()> {
         think_ms: args.f64_or("think-ms", 0.0),
         seed: args.usize_or("seed", 42) as u64,
         deadline_ms: args.f64_opt("deadline-ms"),
+        tier,
         max_retries: args.usize_or("max-retries", 8),
     };
 

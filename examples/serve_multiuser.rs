@@ -165,6 +165,8 @@ fn main() -> Result<()> {
             n_sessions,
             deadline_ms: if deadline_ms > 0.0 { Some(deadline_ms) } else { None },
             deadline_every: 4,
+            tier_interactive: 0.0,
+            tier_background: 0.0,
             seed,
         })));
     }

@@ -1,18 +1,21 @@
 //! Continuous batcher: deadline-aware (EDF) admission queue + active set,
 //! with the paper's batch-timeout grouping (§4.13.1, 50ms default).
 //!
-//! Admission order is earliest-deadline-first: the queue is kept sorted by
-//! `(absolute deadline, arrival, request id)`, so SLO-carrying requests
-//! jump ahead of deadline-free ones and the tie-break chain makes the pop
-//! order total and stable. Requests without deadlines sort at infinity —
-//! among themselves they pop in arrival order, which is exactly the old
-//! FIFO behaviour, so deadline-free traces schedule identically to the
-//! pre-EDF batcher.
+//! Admission order is tiered earliest-deadline-first: the queue is kept
+//! sorted by `(SLO tier rank, absolute deadline, arrival, request id)`,
+//! so interactive requests pop before batch before background, deadline
+//! carriers jump ahead of deadline-free ones within a tier, and the
+//! tie-break chain makes the pop order total and stable. Requests without
+//! deadlines sort at infinity — among themselves they pop in arrival
+//! order, which is exactly the old FIFO behaviour, so single-tier
+//! deadline-free traces schedule identically to the pre-EDF batcher.
 //!
 //! Pure state machine over virtual time — the server drives it with real
 //! measured step durations, tests drive it with synthetic clocks.
 
 use std::collections::VecDeque;
+
+use crate::workload::SloTier;
 
 /// A queued request the batcher schedules (engine-agnostic).
 #[derive(Debug, Clone, PartialEq)]
@@ -21,16 +24,25 @@ pub struct QueuedItem {
     pub arrival_s: f64,
     pub prompt_len: usize,
     /// absolute SLO deadline on the virtual clock (arrival + deadline_ms);
-    /// None sorts last (after every deadline-carrying request)
+    /// None sorts last (after every deadline-carrying request of the tier)
     pub deadline_s: Option<f64>,
+    /// SLO class; leads the EDF key, so tiers never interleave
+    pub tier: SloTier,
+    /// true when this item is a preempted request waiting to resume (its
+    /// KV snapshot is parked in the cold/spill tiers). Preempted items
+    /// are scheduled like any other queued item but are *not* new intake:
+    /// the admission gate's queue-depth count excludes them.
+    pub preempted: bool,
 }
 
 impl QueuedItem {
-    /// EDF sort key: deadline (None -> +inf), then arrival, then id. The
-    /// trailing `request_idx` makes the order total — no two distinct
-    /// items compare equal, so insertion position is unambiguous.
-    fn edf_key(&self) -> (f64, f64, usize) {
+    /// EDF sort key: tier rank, then deadline (None -> +inf), then
+    /// arrival, then id. The trailing `request_idx` makes the order total
+    /// — no two distinct items compare equal, so insertion position is
+    /// unambiguous.
+    fn edf_key(&self) -> (u8, f64, f64, usize) {
         (
+            self.tier.rank(),
             self.deadline_s.unwrap_or(f64::INFINITY),
             self.arrival_s,
             self.request_idx,
@@ -66,6 +78,8 @@ pub struct BatcherStats {
     /// enqueues where a deadline let the item overtake at least one
     /// already-queued request (EDF reordering actually engaged)
     pub edf_jumps: u64,
+    /// running requests paused and returned to the queue (preemption)
+    pub preempted: u64,
 }
 
 /// Decision for one scheduling round.
@@ -150,6 +164,36 @@ impl Batcher {
         self.hold_admissions = true;
     }
 
+    /// Return a *running* request to the queue (preemption): it gives up
+    /// its active slot and re-enters at its EDF position, flagged
+    /// `preempted` so a later `schedule` pop resumes it from its KV
+    /// snapshot instead of prefilling. Unlike `requeue_front` this does
+    /// not hold admissions — the whole point of preempting is to admit
+    /// more urgent work on the very next round.
+    pub fn requeue_preempted(&mut self, mut item: QueuedItem) {
+        self.active -= 1;
+        self.stats.admitted -= 1;
+        self.stats.preempted += 1;
+        item.preempted = true;
+        self.oldest_wait = Some(match self.oldest_wait {
+            Some(t) => t.min(item.arrival_s),
+            None => item.arrival_s,
+        });
+        self.insert_sorted(item, false);
+    }
+
+    /// Head of the EDF queue (the next item `schedule` would pop).
+    pub fn peek_head(&self) -> Option<&QueuedItem> {
+        self.queue.front()
+    }
+
+    /// Queue length counting only fresh intake — preempted items waiting
+    /// to resume already consumed prefill and hold KV snapshots, so the
+    /// admission gate must not treat them as queued submissions.
+    pub fn queued_new_len(&self) -> usize {
+        self.queue.iter().filter(|i| !i.preempted).count()
+    }
+
     /// Undo the accounting for an item `schedule` handed out that never
     /// started (shed past its deadline, or cancelled between pop and
     /// prefill): it no longer occupies an active slot and must not count
@@ -188,6 +232,12 @@ impl Batcher {
 
     pub fn active(&self) -> usize {
         self.active
+    }
+
+    /// Every admission slot is taken — the condition under which the
+    /// SLO preemptor considers evicting a lower-tier active.
+    pub fn is_full(&self) -> bool {
+        self.active >= self.cfg.max_active
     }
 
     pub fn on_finished(&mut self, n: usize) {
@@ -249,16 +299,22 @@ mod tests {
     use super::*;
 
     fn item(idx: usize, t: f64) -> QueuedItem {
-        QueuedItem { request_idx: idx, arrival_s: t, prompt_len: 100, deadline_s: None }
-    }
-
-    fn item_slo(idx: usize, t: f64, deadline: f64) -> QueuedItem {
         QueuedItem {
             request_idx: idx,
             arrival_s: t,
             prompt_len: 100,
-            deadline_s: Some(deadline),
+            deadline_s: None,
+            tier: SloTier::Batch,
+            preempted: false,
         }
+    }
+
+    fn item_slo(idx: usize, t: f64, deadline: f64) -> QueuedItem {
+        QueuedItem { deadline_s: Some(deadline), ..item(idx, t) }
+    }
+
+    fn item_tier(idx: usize, t: f64, tier: SloTier) -> QueuedItem {
+        QueuedItem { tier, ..item(idx, t) }
     }
 
     #[test]
@@ -489,6 +545,65 @@ mod tests {
             b.stats.edf_jumps, 0,
             "requeue re-insertions are not EDF reorderings"
         );
+    }
+
+    #[test]
+    fn tier_rank_leads_the_edf_key() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_active: 16,
+            batch_timeout_s: 0.0,
+            prefill_per_round: 16,
+        });
+        // a background request with a tight deadline still sorts after a
+        // deadline-free interactive one: tiers never interleave
+        b.enqueue(item_tier(0, 0.0, SloTier::Background));
+        let mut urgent_bg = item_tier(1, 0.01, SloTier::Background);
+        urgent_bg.deadline_s = Some(0.05);
+        b.enqueue(urgent_bg);
+        b.enqueue(item_tier(2, 0.03, SloTier::Interactive));
+        b.enqueue(item_tier(3, 0.02, SloTier::Batch));
+        let order: Vec<usize> = match b.schedule(1.0, None) {
+            Round::Admit(v) => v.into_iter().map(|i| i.request_idx).collect(),
+            r => panic!("{r:?}"),
+        };
+        assert_eq!(order, vec![2, 3, 1, 0]);
+    }
+
+    #[test]
+    fn requeue_preempted_keeps_position_and_accounting() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_active: 4,
+            batch_timeout_s: 0.0,
+            prefill_per_round: 4,
+        });
+        b.enqueue(item_tier(0, 0.0, SloTier::Batch));
+        let out = match b.schedule(0.1, None) {
+            Round::Admit(v) => v,
+            r => panic!("{r:?}"),
+        };
+        assert_eq!(b.active(), 1);
+        b.enqueue(item_tier(1, 0.2, SloTier::Interactive));
+        b.requeue_preempted(out[0].clone());
+        assert_eq!(b.active(), 0);
+        assert_eq!(b.stats.preempted, 1);
+        assert_eq!(b.stats.admitted, 0, "preempted item no longer counts admitted");
+        assert_eq!(b.queue_len(), 2);
+        assert_eq!(
+            b.queued_new_len(),
+            1,
+            "preempted items are not new intake for the admission gate"
+        );
+        let head = b.peek_head().expect("queue non-empty");
+        assert_eq!(head.request_idx, 1, "interactive arrival pops first");
+        // no admission hold: the next schedule round pops immediately,
+        // interactive first, then the preempted item flagged for resume
+        let order: Vec<(usize, bool)> = match b.schedule(0.3, None) {
+            Round::Admit(v) => {
+                v.into_iter().map(|i| (i.request_idx, i.preempted)).collect()
+            }
+            r => panic!("{r:?}"),
+        };
+        assert_eq!(order, vec![(1, false), (0, true)]);
     }
 
     #[test]

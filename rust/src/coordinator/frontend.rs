@@ -84,6 +84,7 @@ use crate::trace::{
     Tracer,
 };
 use crate::util::rng::Rng;
+use crate::kvcache::seq::SeqCache;
 use crate::workload::{tasks, Request, RequestSource};
 
 use super::batcher::{Batcher, BatcherConfig, QueuedItem, Round};
@@ -143,6 +144,10 @@ pub enum Lifecycle {
     Deferred,
     /// prefilled and decoding
     Active,
+    /// paused mid-decode by the SLO preemptor: KV pages snapshotted into
+    /// the cold/spill tiers, decode state stashed, and the request back in
+    /// the admission queue at its EDF position — resumes without prefill
+    Preempted,
     Finished,
     Cancelled,
     /// shed or aborted because `deadline_ms` elapsed
@@ -168,6 +173,11 @@ pub enum ServeEvent {
     Deferred { id: u64, t: f64 },
     /// one decoded token surfaced (incremental streaming)
     Token { id: u64, tok: i32, t: f64 },
+    /// request paused mid-decode to make room for a higher SLO tier; its
+    /// KV snapshot waits in the cold/spill tiers and it is still queued
+    Preempted { id: u64, t: f64 },
+    /// preempted request faulted its snapshot hot and is decoding again
+    Resumed { id: u64, t: f64 },
     /// request ran to completion; full timeline attached
     Finished(RequestRecord),
     /// request cancelled by the caller (any pre-terminal state)
@@ -183,6 +193,8 @@ impl ServeEvent {
             ServeEvent::Admitted { id, .. }
             | ServeEvent::Deferred { id, .. }
             | ServeEvent::Token { id, .. }
+            | ServeEvent::Preempted { id, .. }
+            | ServeEvent::Resumed { id, .. }
             | ServeEvent::Cancelled { id, .. }
             | ServeEvent::DeadlineExpired { id, .. } => *id,
             ServeEvent::Finished(rec) => rec.id,
@@ -204,6 +216,8 @@ impl ServeEvent {
             ServeEvent::Token { id, tok, t } => {
                 ("T", *id, format!(" {tok}"), "@", *t)
             }
+            ServeEvent::Preempted { id, t } => ("P", *id, String::new(), "@", *t),
+            ServeEvent::Resumed { id, t } => ("R", *id, String::new(), "@", *t),
             ServeEvent::Cancelled { id, t } => ("C", *id, String::new(), "@", *t),
             ServeEvent::DeadlineExpired { id, t } => {
                 ("X", *id, String::new(), "@", *t)
@@ -227,7 +241,7 @@ impl ServeEvent {
 /// Schema version of the serialized `TINYSERVE_EVENT_LOG` format (the
 /// [`event_log_header`] line carries it). Bump on any `ServeEvent::sig`
 /// format change so archived logs stay self-describing.
-pub const EVENT_LOG_SCHEMA: u64 = 1;
+pub const EVENT_LOG_SCHEMA: u64 = 2;
 
 /// Run-identifying first line for serialized event logs: schema version
 /// plus the knobs that shaped the stream. The header itself is versioned,
@@ -345,6 +359,12 @@ struct Active {
     worker: usize,
     /// pool engine worker actually decoding this request
     engine_idx: usize,
+    /// this request's own plugin pipeline, forked from the configured one
+    /// at admission: per-request state (entropy streaks, repetition
+    /// windows) never leaks across concurrent requests, survives
+    /// preemption in the stash, and travels with the request when it is
+    /// migrated or stolen across workers
+    pipeline: Pipeline,
 }
 
 /// The request-lifecycle serving frontend (see module docs).
@@ -365,6 +385,11 @@ pub struct Frontend<'a> {
     metrics: ServerMetrics,
     records: Vec<RequestRecord>,
     active: Vec<Active>,
+    /// preemption stash: decode state of paused requests, keyed by
+    /// `req_idx` lookup. Each entry's KV pages sit in its worker's
+    /// cold/spill tiers; the matching `QueuedItem` (flagged `preempted`)
+    /// waits in the batcher at its EDF position
+    preempted: Vec<Active>,
     /// every submitted request, indexed by submission order
     reqs: Vec<Request>,
     state: Vec<Lifecycle>,
@@ -446,6 +471,7 @@ impl<'a> Frontend<'a> {
             metrics,
             records: Vec::new(),
             active: Vec::new(),
+            preempted: Vec::new(),
             reqs: Vec::new(),
             state: Vec::new(),
             id_to_idx: HashMap::new(),
@@ -565,9 +591,13 @@ impl<'a> Frontend<'a> {
 
     /// Requests waiting for admission: the batcher queue plus submitted
     /// arrivals the pump has not pulled yet. The network front door's
-    /// `--queue-depth` backpressure gate reads this before every submit.
+    /// `--queue-depth` backpressure gate reads this before every submit,
+    /// so the count covers *new intake only* — preempted requests back in
+    /// the queue already paid for admission once and hold no unserved
+    /// client submission; counting them would shed fresh submits for load
+    /// the preemptor created itself.
     pub fn queued_len(&self) -> usize {
-        self.batcher.queue_len() + self.pending.len()
+        self.batcher.queued_new_len() + self.pending.len()
     }
 
     /// Requests currently decoding.
@@ -642,11 +672,14 @@ impl<'a> Frontend<'a> {
             Lifecycle::Pending => {
                 self.pending.retain(|&p| p != idx);
             }
-            // a Deferred request is physically back in the batcher queue
-            // (requeued at its EDF position), so it cancels exactly like a
-            // Queued one — it must emit Cancelled, never silently vanish
-            Lifecycle::Queued | Lifecycle::Deferred => {
+            // a Deferred or Preempted request is physically back in the
+            // batcher queue (requeued at its EDF position), so it cancels
+            // exactly like a Queued one — it must emit Cancelled, never
+            // silently vanish; a preempted one additionally releases its
+            // stashed KV snapshot
+            Lifecycle::Queued | Lifecycle::Deferred | Lifecycle::Preempted => {
                 self.batcher.remove(idx);
+                self.drop_preempted(idx);
             }
             Lifecycle::Active => {
                 let Some(pos) = self.active.iter().position(|a| a.req_idx == idx)
@@ -704,6 +737,11 @@ impl<'a> Frontend<'a> {
         self.tracer.flush();
         if let Some(s) = self.metrics_sink.as_mut() {
             s.flush();
+        }
+        // surviving preemption snapshots give their pages back before the
+        // session stores clear, mirroring the cancel/expiry release path
+        for mut a in std::mem::take(&mut self.preempted) {
+            self.pool.engine_mut(a.engine_idx).release_mid_flight(&mut a.seq);
         }
         for w in 0..self.pool.len() {
             let pool = &mut self.pool;
@@ -782,6 +820,8 @@ impl<'a> Frontend<'a> {
                 deadline_s: self.reqs[idx]
                     .deadline_ms
                     .map(|d| self.reqs[idx].arrival_s + d / 1e3),
+                tier: self.reqs[idx].tier,
+                preempted: false,
             });
         }
         let mut next_arrival = self.pending.front().map(|&i| self.reqs[i].arrival_s);
@@ -802,6 +842,10 @@ impl<'a> Frontend<'a> {
             }
             return Ok(());
         }
+        // SLO preemption sits just before the scheduling decision: pausing
+        // a low-tier active here frees its batcher slot, so the very next
+        // `schedule` can admit the starving higher-tier head
+        self.maybe_preempt();
         match self.batcher.schedule(now, next_arrival) {
             Round::Idle(t) => {
                 if t.is_finite() {
@@ -872,21 +916,41 @@ impl<'a> Frontend<'a> {
         for item in items {
             let idx = item.request_idx;
             // authoritative state guard: a cancelled item normally leaves
-            // the queue via Batcher::remove, but never trust stragglers
-            if !matches!(self.state[idx], Lifecycle::Queued | Lifecycle::Deferred) {
+            // the queue via Batcher::remove, but never trust stragglers.
+            // A preemption-flagged item is legal in Preempted (stashed) or
+            // Deferred (resume bounced once already) state; a fresh one in
+            // Queued or Deferred.
+            let state_ok = if item.preempted {
+                matches!(
+                    self.state[idx],
+                    Lifecycle::Preempted | Lifecycle::Deferred
+                )
+            } else {
+                matches!(self.state[idx], Lifecycle::Queued | Lifecycle::Deferred)
+            };
+            if !state_ok {
                 self.batcher.abort_admission(1);
                 continue;
             }
             // SLO-aware shedding: starting a request past its deadline
-            // wastes prefill + decode on an answer nobody will take
+            // wastes prefill + decode on an answer nobody will take. A
+            // preempted request shed here also frees its KV snapshot.
             if self.deadline_passed(idx) {
                 self.batcher.abort_admission(1);
+                self.drop_preempted(idx);
                 self.state[idx] = Lifecycle::Expired;
                 self.metrics.on_expired();
                 let (id, t) = (self.reqs[idx].id, self.clock.now());
                 self.events.push_back(ServeEvent::DeadlineExpired { id, t });
                 if self.tracer.enabled() {
                     self.tracer.emit(&TraceEvent::Expired { id, t });
+                }
+                continue;
+            }
+            if item.preempted {
+                match self.resume_preempted(item, &mut blocked)? {
+                    None => {}
+                    Some(bounced) => deferred.push(bounced),
                 }
                 continue;
             }
@@ -1052,11 +1116,303 @@ impl<'a> Frontend<'a> {
                 reused_tokens: reused,
                 worker: decision.worker,
                 engine_idx: w,
+                pipeline: self.plugins.fork(),
             });
         }
         // deferred items go back to the batcher at their EDF positions
         for item in deferred.into_iter().rev() {
             self.batcher.requeue_front(item);
+        }
+        Ok(())
+    }
+
+    /// Resume a preempted request from its stashed decode state: fault its
+    /// KV snapshot back to the hot tier on the worker that holds it — or,
+    /// when that worker has no free slot, port the snapshot page-by-page
+    /// to one that does (the snapshot is worker-portable, unlike live
+    /// session state). No prefill runs; the sequence continues exactly
+    /// where `preempt_active` paused it. Returns the item for requeueing
+    /// when every candidate worker bounced it.
+    fn resume_preempted(
+        &mut self,
+        item: QueuedItem,
+        blocked: &mut [bool],
+    ) -> Result<Option<QueuedItem>> {
+        let idx = item.request_idx;
+        let Some(spos) = self.preempted.iter().position(|p| p.req_idx == idx)
+        else {
+            // stash entry vanished (released by a racing terminal path):
+            // the queue item is a straggler
+            self.batcher.abort_admission(1);
+            return Ok(None);
+        };
+        let home = self.preempted[spos].engine_idx;
+        let resident = self.preempted[spos].seq.cache.resident;
+        let slot_free = |fe: &Self, w: usize| {
+            fe.active.iter().filter(|a| a.engine_idx == w).count()
+                < fe.pool.engine(w).cfg.max_active
+        };
+        let mut target = None;
+        if !blocked[home]
+            && slot_free(self, home)
+            && self.pool.engine_mut(home).kv_admission_ok(resident)
+        {
+            target = Some(home);
+        } else {
+            for w in 0..self.pool.len() {
+                if w == home || blocked[w] || !slot_free(self, w) {
+                    continue;
+                }
+                if self.pool.engine_mut(w).kv_admission_ok(resident) {
+                    target = Some(w);
+                    break;
+                }
+            }
+        }
+        let Some(w) = target else {
+            self.mark_deferred(idx);
+            return Ok(Some(item));
+        };
+        let mut a = self.preempted.swap_remove(spos);
+        let id = self.reqs[idx].id;
+        if w != home {
+            // cross-worker migration: copy the snapshot into the target
+            // pool (bit-exact for q8 pages), release the source copy, and
+            // price the transit at the NVLink-class rate
+            let (src, dst) = self.pool.engine_pair_mut(home, w);
+            let (cache, bytes) = SeqCache::port_to(
+                &a.seq.cache,
+                &mut src.pool,
+                &mut src.store,
+                &mut dst.pool,
+                &mut dst.store,
+            )?;
+            let mut old = std::mem::replace(&mut a.seq.cache, cache);
+            for e in old.pages.iter() {
+                src.store.unpin(e.id);
+            }
+            old.clear(&mut src.pool);
+            src.store.sync(&src.pool);
+            self.clock.advance(bytes as f64 / 200e9);
+            a.engine_idx = w;
+            self.metrics.on_migrated();
+            if self.tracer.enabled() {
+                self.tracer.emit(&TraceEvent::Migrated {
+                    id,
+                    from: home,
+                    to: w,
+                    bytes: bytes as u64,
+                    t: self.clock.now(),
+                });
+            }
+        }
+        // fault the snapshot hot and price the tier traffic it moved
+        let eng = self.pool.engine_mut(w);
+        for e in a.seq.cache.pages.iter() {
+            eng.store.ensure_hot(&mut eng.pool, e.id)?;
+        }
+        let mut m = StepMetrics::default();
+        eng.collect_store_stats(&mut m);
+        let dt = m.spill_seconds + m.disk_seconds;
+        self.clock.advance(dt);
+        self.pool.stats[w].busy_s += dt;
+        self.pool.note_kv_peak(w);
+        self.metrics.on_resumed();
+        let t = self.clock.now();
+        self.events.push_back(ServeEvent::Resumed { id, t });
+        if self.tracer.enabled() {
+            self.tracer.emit(&TraceEvent::Resumed { id, worker: w, t });
+            self.drain_store_trace(w, SpanCtx::Round { round: self.round_idx });
+        }
+        self.state[idx] = Lifecycle::Active;
+        self.active.push(a);
+        Ok(None)
+    }
+
+    /// Release a stashed preemption snapshot's KV pages (cancellation or
+    /// deadline expiry of a preempted request). No-op when `idx` holds no
+    /// snapshot.
+    fn drop_preempted(&mut self, idx: usize) {
+        if let Some(pos) = self.preempted.iter().position(|p| p.req_idx == idx) {
+            let mut a = self.preempted.swap_remove(pos);
+            self.pool.engine_mut(a.engine_idx).release_mid_flight(&mut a.seq);
+        }
+    }
+
+    /// Preemption check (gated by `ServeOptions::preempt`), run before
+    /// every scheduling decision: when the batcher is slot-full and its
+    /// head is a higher-SLO-tier request that has already waited out half
+    /// its TTFT target, pause the lowest-tier latest-deadline active —
+    /// snapshot its KV pages down the tier ladder, requeue it at its EDF
+    /// position flagged `preempted`, and stash its decode state (sequence,
+    /// plugin pipeline, timing) for an exact resume.
+    fn maybe_preempt(&mut self) {
+        if !self.opts.preempt || !self.batcher.is_full() {
+            return;
+        }
+        let Some(head) = self.batcher.peek_head() else { return };
+        // a preempted head resumes from its snapshot on the next free
+        // slot; preempting again on its behalf would thrash
+        if head.preempted {
+            return;
+        }
+        let now = self.clock.now();
+        if now - head.arrival_s < 0.5 * head.tier.ttft_target_s() {
+            return;
+        }
+        let head_rank = head.tier.rank();
+        let Some(pos) = self.lowest_priority_active(Some(head_rank), None)
+        else {
+            return;
+        };
+        self.preempt_active(pos);
+    }
+
+    /// The active-set position of the lowest-priority decoding request:
+    /// highest tier rank first, then latest deadline (no deadline sorts
+    /// last of all), then highest request id — a total, deterministic
+    /// order. `rank_above` restricts to strictly lower tiers than the
+    /// given rank (preemption never evicts its own tier); `on_worker`
+    /// restricts to one engine's batch (work stealing).
+    fn lowest_priority_active(
+        &self,
+        rank_above: Option<u8>,
+        on_worker: Option<usize>,
+    ) -> Option<usize> {
+        let mut best: Option<(usize, (u8, f64, u64))> = None;
+        for (i, a) in self.active.iter().enumerate() {
+            if let Some(w) = on_worker {
+                if a.engine_idx != w {
+                    continue;
+                }
+            }
+            let req = &self.reqs[a.req_idx];
+            let rank = req.tier.rank();
+            if let Some(r) = rank_above {
+                if rank <= r {
+                    continue;
+                }
+            }
+            let deadline = req
+                .deadline_ms
+                .map(|d| req.arrival_s + d / 1e3)
+                .unwrap_or(f64::INFINITY);
+            let key = (rank, deadline, req.id);
+            if best.as_ref().map(|(_, k)| key > *k).unwrap_or(true) {
+                best = Some((i, key));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Pause the active at `pos`: unpin and demote its KV pages into the
+    /// cold/spill tiers (a snapshot the budget can mostly reclaim), give
+    /// back its router and batcher slots, requeue it `preempted` at its
+    /// EDF position, and stash its decode state. The demotion traffic is
+    /// hwmodel-priced into virtual time like any other tier movement.
+    fn preempt_active(&mut self, pos: usize) {
+        let mut a = self.active.swap_remove(pos);
+        let idx = a.req_idx;
+        let w = a.engine_idx;
+        let eng = self.pool.engine_mut(w);
+        for e in a.seq.cache.pages.iter() {
+            eng.store.unpin(e.id);
+        }
+        eng.store.demote_seq(&mut eng.pool, &a.seq.cache);
+        let mut m = StepMetrics::default();
+        eng.collect_store_stats(&mut m);
+        let dt = m.spill_seconds + m.disk_seconds;
+        self.clock.advance(dt);
+        self.pool.stats[w].busy_s += dt;
+        self.router.complete(a.worker);
+        let (id, arrival_s, prompt_len, deadline_s, tier) = {
+            let req = &self.reqs[idx];
+            (
+                req.id,
+                req.arrival_s,
+                req.prompt.len(),
+                req.deadline_ms.map(|d| req.arrival_s + d / 1e3),
+                req.tier,
+            )
+        };
+        self.batcher.requeue_preempted(QueuedItem {
+            request_idx: idx,
+            arrival_s,
+            prompt_len,
+            deadline_s,
+            tier,
+            preempted: true,
+        });
+        self.state[idx] = Lifecycle::Preempted;
+        self.metrics.on_preempted();
+        let t = self.clock.now();
+        self.events.push_back(ServeEvent::Preempted { id, t });
+        if self.tracer.enabled() {
+            self.tracer.emit(&TraceEvent::Preempted { id, worker: w, t });
+            self.drain_store_trace(w, SpanCtx::Round { round: self.round_idx });
+        }
+        self.preempted.push(a);
+    }
+
+    /// Work stealing at the commit seam (gated by `ServeOptions::steal`):
+    /// when a worker sits idle while another holds at least two decoding
+    /// requests, port the loaded worker's lowest-priority sequence across
+    /// (page-by-page copy, bit-exact for q8 tiers) so the next round
+    /// decodes on both engines. At most one steal per round keeps the
+    /// event stream easy to reason about — and convergence is quick, the
+    /// imbalance shrinks by two each time.
+    fn maybe_steal(&mut self) -> Result<()> {
+        if self.pool.len() < 2 {
+            return Ok(());
+        }
+        let mut counts = vec![0usize; self.pool.len()];
+        for a in &self.active {
+            counts[a.engine_idx] += 1;
+        }
+        let Some(to) = (0..self.pool.len()).find(|&w| counts[w] == 0) else {
+            return Ok(());
+        };
+        let Some(from) = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|&(w, &c)| (c, std::cmp::Reverse(w)))
+            .filter(|&(_, &c)| c >= 2)
+            .map(|(w, _)| w)
+        else {
+            return Ok(());
+        };
+        let Some(pos) = self.lowest_priority_active(None, Some(from)) else {
+            return Ok(());
+        };
+        let resident = self.active[pos].seq.cache.resident;
+        if !self.pool.engine_mut(to).kv_admission_ok(resident) {
+            return Ok(());
+        }
+        let id = self.reqs[self.active[pos].req_idx].id;
+        let (src, dst) = self.pool.engine_pair_mut(from, to);
+        let (cache, bytes) = SeqCache::port_to(
+            &self.active[pos].seq.cache,
+            &mut src.pool,
+            &mut src.store,
+            &mut dst.pool,
+            &mut dst.store,
+        )?;
+        let mut old = std::mem::replace(&mut self.active[pos].seq.cache, cache);
+        for e in old.pages.iter() {
+            src.store.unpin(e.id);
+        }
+        old.clear(&mut src.pool);
+        src.store.sync(&src.pool);
+        let dt = bytes as f64 / 200e9;
+        self.clock.advance(dt);
+        self.pool.stats[to].busy_s += dt;
+        self.active[pos].engine_idx = to;
+        self.metrics.on_stolen();
+        if self.tracer.enabled() {
+            let t = self.clock.now();
+            self.tracer.emit(&TraceEvent::Stolen { id, from, to, t });
+            self.drain_store_trace(from, SpanCtx::Round { round: self.round_idx });
+            self.drain_store_trace(to, SpanCtx::Round { round: self.round_idx });
         }
         Ok(())
     }
@@ -1070,7 +1426,10 @@ impl<'a> Frontend<'a> {
         self.router.complete(a.worker);
         self.batcher.on_finished(1);
         self.pool.engine_mut(a.engine_idx).release_mid_flight(&mut a.seq);
-        self.plugins.reset();
+        // the aborted request's plugin state dies with its own forked
+        // pipeline (dropped with `a`); resetting the shared template here
+        // would wipe the *survivors'* streaks — the old cross-request
+        // plugin-state leak
     }
 
     /// Abort active sequences whose deadline elapsed, releasing their KV
@@ -1120,14 +1479,23 @@ impl<'a> Frontend<'a> {
         let mut batches = Vec::new();
         for w in 0..self.pool.len() {
             let cap = self.pool.engine(w).max_batch();
-            let idxs: Vec<usize> = self
+            let mut idxs: Vec<usize> = self
                 .active
                 .iter()
                 .enumerate()
                 .filter(|(_, a)| a.engine_idx == w)
                 .map(|(i, _)| i)
-                .take(cap)
                 .collect();
+            // fairness: a worker whose active set exceeds its compiled
+            // batch width steps a window that rotates with the round
+            // counter, not a fixed prefix — taking the first `cap` in
+            // stable order starved everything behind the window until an
+            // early request happened to retire
+            if idxs.len() > cap {
+                let r = self.round_idx as usize % idxs.len();
+                idxs.rotate_left(r);
+                idxs.truncate(cap);
+            }
             if !idxs.is_empty() {
                 batches.push((w, idxs));
             }
@@ -1293,22 +1661,27 @@ impl<'a> Frontend<'a> {
                     tok: o.token,
                     t: now,
                 });
-                let action = if self.plugins.is_empty() {
+                // each request steps its OWN forked pipeline: plugin state
+                // (entropy streaks, repetition windows) is per-request by
+                // contract, and the shared template would interleave every
+                // concurrent request's tokens into one streak
+                let Active { seq, pipeline, .. } = a;
+                let action = if pipeline.is_empty() {
                     PluginAction::Continue
                 } else {
-                    self.plugins.on_step(&StepView {
-                        seq: &a.seq,
+                    pipeline.on_step(&StepView {
+                        seq,
                         sample: o,
-                        attn_entropy: a.seq.last_entropy,
+                        attn_entropy: seq.last_entropy,
                         pool: &self.pool.engine(*w).pool,
                     })
                 };
                 match action {
-                    PluginAction::Stop => a.seq.finished = true,
+                    PluginAction::Stop => seq.finished = true,
                     // routed through the page store: the eviction policy's
                     // rank picks the victim, not table order
                     PluginAction::PruneColdest => {
-                        self.pool.engine_mut(*w).prune_coldest(&mut a.seq)
+                        self.pool.engine_mut(*w).prune_coldest(seq)
                     }
                     PluginAction::Continue => {}
                 }
@@ -1337,6 +1710,7 @@ impl<'a> Frontend<'a> {
                 }
                 let rec = RequestRecord {
                     id: self.reqs[idx].id,
+                    tier: self.reqs[idx].tier,
                     queue_seconds: a.admitted_s - self.reqs[idx].arrival_s,
                     prefill_seconds: a.prefill_s,
                     ttft_seconds: a
@@ -1360,10 +1734,16 @@ impl<'a> Frontend<'a> {
                 self.batcher.on_finished(1);
                 self.pool.stats[a.engine_idx].finished += 1;
                 self.pool.engine_mut(a.engine_idx).release(&mut a.seq);
-                self.plugins.reset();
+                // the request's forked pipeline drops with `a`; the shared
+                // template is never reset (see `abort_active`)
             } else {
                 i += 1;
             }
+        }
+        // the commit seam is where cross-worker movement is legal: every
+        // engine's step results are settled and no step thread is live
+        if self.opts.steal && first_err.is_none() {
+            self.maybe_steal()?;
         }
         self.round_idx += 1;
         // periodic metrics snapshot: a schema-versioned JSONL line every N
@@ -1412,6 +1792,10 @@ impl<'a> Frontend<'a> {
         r.counter("requests_finished", m.total_requests);
         r.counter("requests_cancelled", m.total_cancelled);
         r.counter("requests_expired", m.total_expired);
+        r.counter("requests_preempted", m.total_preempted);
+        r.counter("requests_resumed", m.total_resumed);
+        r.counter("requests_migrated", m.total_migrated);
+        r.counter("requests_stolen", m.total_stolen);
         r.counter("gather_bytes", m.total_gather_bytes);
         r.counter("demotions", m.total_demotions);
         r.counter("promotions", m.total_promotions);
@@ -1453,6 +1837,7 @@ mod tests {
         assert!(!Lifecycle::Queued.is_terminal());
         assert!(!Lifecycle::Deferred.is_terminal());
         assert!(!Lifecycle::Active.is_terminal());
+        assert!(!Lifecycle::Preempted.is_terminal());
         assert!(Lifecycle::Finished.is_terminal());
         assert!(Lifecycle::Cancelled.is_terminal());
         assert!(Lifecycle::Expired.is_terminal());
@@ -1462,10 +1847,13 @@ mod tests {
     fn event_id_extraction() {
         assert_eq!(ServeEvent::Admitted { id: 7, t: 0.0 }.id(), 7);
         assert_eq!(ServeEvent::Token { id: 9, tok: 3, t: 0.1 }.id(), 9);
+        assert_eq!(ServeEvent::Preempted { id: 6, t: 0.15 }.id(), 6);
+        assert_eq!(ServeEvent::Resumed { id: 6, t: 0.18 }.id(), 6);
         assert_eq!(ServeEvent::Cancelled { id: 4, t: 0.2 }.id(), 4);
         assert_eq!(ServeEvent::DeadlineExpired { id: 5, t: 0.3 }.id(), 5);
         let rec = RequestRecord {
             id: 11,
+            tier: crate::workload::SloTier::Batch,
             queue_seconds: 0.0,
             prefill_seconds: 0.0,
             ttft_seconds: 0.0,
@@ -1483,7 +1871,7 @@ mod tests {
         let h = event_log_header(42, 4, 2, "tinyserve", Some(256.0));
         assert_eq!(
             h,
-            "# tinyserve-event-log v1 seed=42 threads=4 workers=2 \
+            "# tinyserve-event-log v2 seed=42 threads=4 workers=2 \
              policy=tinyserve budget=256mb"
         );
         let h = event_log_header(7, 1, 1, "full", None);
@@ -1498,6 +1886,7 @@ mod tests {
         assert_eq!(tok.sig(true), format!("T 3 17 @{:016x}", 0.25f64.to_bits()));
         let rec = RequestRecord {
             id: 2,
+            tier: crate::workload::SloTier::Batch,
             queue_seconds: 0.0,
             prefill_seconds: 0.0,
             ttft_seconds: 0.0,
@@ -1509,5 +1898,7 @@ mod tests {
         };
         assert_eq!(ServeEvent::Finished(rec).sig(false), "F 2 p10 n4");
         assert_eq!(ServeEvent::Deferred { id: 1, t: 0.0 }.sig(false), "D 1");
+        assert_eq!(ServeEvent::Preempted { id: 8, t: 0.5 }.sig(false), "P 8");
+        assert_eq!(ServeEvent::Resumed { id: 8, t: 0.75 }.sig(false), "R 8");
     }
 }

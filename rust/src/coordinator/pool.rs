@@ -612,6 +612,22 @@ impl<'a> WorkerPool<'a> {
         self.slots[w].get_mut()
     }
 
+    /// Exclusive access to two distinct workers' engines at once — the
+    /// cross-worker KV porting path (session migration / work stealing)
+    /// reads pages out of one engine while allocating into the other.
+    /// Panics if `a == b`.
+    pub fn engine_pair_mut(&mut self, a: usize, b: usize) -> (&mut Engine, &mut Engine) {
+        assert_ne!(a, b, "engine_pair_mut needs two distinct workers");
+        let (lo, hi) = (a.min(b), a.max(b));
+        let (left, right) = self.slots.split_at_mut(hi);
+        let (el, eh) = (left[lo].get_mut(), right[0].get_mut());
+        if a < b {
+            (el, eh)
+        } else {
+            (eh, el)
+        }
+    }
+
     /// Compile every worker's decode executables up front.
     pub fn warmup(&self) -> Result<()> {
         for s in &self.slots {

@@ -82,6 +82,13 @@ pub struct ServeOptions {
     /// worker skew) and attach a `PhaseProfile` to the report
     /// (`--profile`); wall-measured, so never part of deterministic output
     pub profile: bool,
+    /// SLO-class preemption (`--preempt`): a starving higher-tier queue
+    /// head may pause the lowest-tier active, snapshotting its KV pages
+    /// into the cold/spill tiers for an exact resume
+    pub preempt: bool,
+    /// commit-seam work stealing (`--steal`): an idle pool worker ports
+    /// one sequence from the most loaded worker's batch
+    pub steal: bool,
 }
 
 impl Default for ServeOptions {
@@ -99,6 +106,8 @@ impl Default for ServeOptions {
             executor: super::pool::ExecutorKind::Persistent,
             metrics_every: 0,
             profile: false,
+            preempt: false,
+            steal: false,
         }
     }
 }

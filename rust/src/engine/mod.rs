@@ -540,6 +540,25 @@ impl Engine {
             self.store.unpin_all();
             self.store.enforce_budget(&mut self.pool);
         }
+        self.collect_store_stats(m);
+        let (hot, cold, disk) = self.store.tier_residency();
+        m.pages_hot = hot;
+        m.pages_cold = cold;
+        m.pages_disk = disk;
+        m.kv_bytes_in_use = self.store.bytes_in_use(&self.pool);
+        m.kv_budget_bytes = self.store.budget_bytes().unwrap_or(0);
+        m.batch = n;
+        m.entropy = ent_sum / n as f32;
+        m.step_seconds += t0.elapsed().as_secs_f64();
+        Ok(sampled)
+    }
+
+    /// Fold the store's stat counters accumulated since the last
+    /// collection into `m` and mark them reported. Decode steps call this
+    /// at step end; the coordinator calls it around out-of-band page
+    /// movement (preemption snapshots, resume fault-in, cross-worker
+    /// porting) so tier traffic is priced into virtual time exactly once.
+    pub fn collect_store_stats(&mut self, m: &mut StepMetrics) {
         let st = self.store.stats.clone();
         let st0 = &self.stats_reported;
         m.store_hits += (st.hits - st0.hits) as usize;
@@ -553,16 +572,6 @@ impl Engine {
         m.readahead_hits += (st.readahead_hits - st0.readahead_hits) as usize;
         m.disk_seconds += st.disk_seconds - st0.disk_seconds;
         self.stats_reported = st;
-        let (hot, cold, disk) = self.store.tier_residency();
-        m.pages_hot = hot;
-        m.pages_cold = cold;
-        m.pages_disk = disk;
-        m.kv_bytes_in_use = self.store.bytes_in_use(&self.pool);
-        m.kv_budget_bytes = self.store.budget_bytes().unwrap_or(0);
-        m.batch = n;
-        m.entropy = ent_sum / n as f32;
-        m.step_seconds += t0.elapsed().as_secs_f64();
-        Ok(sampled)
     }
 
     /// Log-probability of `token` in batch row `row` under the logits of

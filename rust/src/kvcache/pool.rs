@@ -389,6 +389,16 @@ impl PagePool {
             && self.v[layer].store_q8_row(row, self.d_kv, v.0, v.1)
     }
 
+    /// Cross-pool porting support: stamp a page's fill counter directly.
+    /// `import_rows`/`import_q8_row` deliberately leave fill counters
+    /// untouched (spill faults restore payloads of already-accounted
+    /// pages); the migration codec builds pages in a *different* pool,
+    /// so it owns the accounting and stamps the fill once per page.
+    pub fn set_filled(&mut self, page: PageId, n: usize) {
+        debug_assert!(n <= self.page_size);
+        self.filled[page as usize] = n as u16;
+    }
+
     /// Disk-spill support: reinstate a page's `[min ++ max]` bounding box
     /// for one layer (the durable copy a spill slot carries).
     pub fn set_meta(&mut self, page: PageId, layer: usize, meta: &[f32]) {

@@ -157,6 +157,65 @@ impl SeqCache {
             covered,
         )
     }
+
+    /// Port a sequence's pages into a *different* worker's pool/store
+    /// (cross-worker session migration and work stealing). Source pages
+    /// are faulted hot first (the source store prices any cold/disk
+    /// promotion), then copied page-by-page into freshly allocated pages
+    /// of the destination: int8 pools move raw quantized rows so the
+    /// port is bit-exact; f32/f16 pools round-trip through f32 staging
+    /// (same precision class, deterministic). Bounding boxes and fill
+    /// counters are carried verbatim, `base_pos`/`pos`/`resident` are
+    /// preserved, so the ported sequence decodes identically on the new
+    /// worker. The source cache is left untouched — the caller releases
+    /// it on its own pool once the move commits. Returns the ported
+    /// cache plus payload bytes copied (for transit pricing).
+    pub fn port_to(
+        src: &SeqCache,
+        src_pool: &mut PagePool,
+        src_store: &mut super::store::PageStore,
+        dst_pool: &mut PagePool,
+        dst_store: &mut super::store::PageStore,
+    ) -> anyhow::Result<(SeqCache, usize)> {
+        let d = src_pool.d_kv;
+        debug_assert_eq!(d, dst_pool.d_kv, "porting across model shapes");
+        debug_assert_eq!(src_pool.page_size, dst_pool.page_size);
+        debug_assert_eq!(src_pool.n_layers, dst_pool.n_layers);
+        let mut pages = Vec::with_capacity(src.pages.len());
+        let mut bytes = 0usize;
+        let mut kbuf = vec![0.0f32; src_pool.page_size * d];
+        let mut vbuf = vec![0.0f32; src_pool.page_size * d];
+        for e in &src.pages {
+            src_store.ensure_hot(src_pool, e.id)?;
+            let dst = dst_store.alloc(dst_pool);
+            let n = src_pool.filled(e.id);
+            for l in 0..src_pool.n_layers {
+                let mut raw = true;
+                for s in 0..n {
+                    match src_pool.q8_rows_raw(e.id, l, s) {
+                        Some((k, v)) => {
+                            dst_pool.import_q8_row(dst, l, s, k, v);
+                            bytes += 2 * (d + 4);
+                        }
+                        None => {
+                            raw = false;
+                            break;
+                        }
+                    }
+                }
+                if !raw {
+                    bytes += src_pool.gather_rows(e.id, l, n, &mut kbuf, &mut vbuf);
+                    dst_pool.import_rows(dst, l, n, &kbuf, &vbuf);
+                }
+                let meta = src_pool.meta(e.id, l).to_vec();
+                dst_pool.set_meta(dst, l, &meta);
+            }
+            dst_pool.set_filled(dst, n);
+            pages.push(PageEntry { id: dst, base_pos: e.base_pos });
+        }
+        dst_store.sync(dst_pool);
+        Ok((SeqCache { pages, pos: src.pos, resident: src.resident }, bytes))
+    }
 }
 
 #[cfg(test)]
@@ -243,5 +302,92 @@ mod tests {
         snap.clear(&mut pool);
         assert_eq!(pool.pages_in_use(), 0);
         pool.validate().unwrap();
+    }
+
+    #[test]
+    fn port_to_copies_pages_across_pools() {
+        use crate::kvcache::store::{EvictionPolicyKind, PageStore};
+        let (mut src_pool, mut seq) = setup();
+        let mut src_store = PageStore::new(None, EvictionPolicyKind::Lru);
+        let mut dst_pool = PagePool::new(1, 4, 4, KvDtype::F32);
+        let mut dst_store = PageStore::new(None, EvictionPolicyKind::Lru);
+        for i in 0..6 {
+            push_token(&mut seq, &mut src_pool, i as f32);
+        }
+        let (mut ported, bytes) = SeqCache::port_to(
+            &seq,
+            &mut src_pool,
+            &mut src_store,
+            &mut dst_pool,
+            &mut dst_store,
+        )
+        .unwrap();
+        assert!(bytes > 0);
+        assert_eq!(ported.pos, 6);
+        assert_eq!(ported.resident, 6);
+        assert_eq!(ported.n_pages(), seq.n_pages());
+        for (pe, se) in ported.pages.iter().zip(&seq.pages) {
+            assert_eq!(pe.base_pos, se.base_pos);
+            assert_eq!(dst_pool.filled(pe.id), src_pool.filled(se.id));
+            assert_eq!(dst_pool.meta(pe.id, 0), src_pool.meta(se.id, 0));
+            for s in 0..dst_pool.filled(pe.id) {
+                assert_eq!(
+                    dst_pool.key_row(pe.id, 0, s),
+                    src_pool.key_row(se.id, 0, s)
+                );
+            }
+        }
+        // ported sequence appends independently on the destination pool
+        let (page, slot) = ported.slot_for_next(&mut dst_pool);
+        dst_pool.write_token(page, slot, 0, &[9.0; 4], &[9.0; 4]);
+        ported.commit_token();
+        assert_eq!(ported.pos, 7);
+        // source untouched; cleanup balances both pools
+        assert_eq!(seq.pos, 6);
+        seq.clear(&mut src_pool);
+        ported.clear(&mut dst_pool);
+        assert_eq!(src_pool.pages_in_use(), 0);
+        assert_eq!(dst_pool.pages_in_use(), 0);
+        src_pool.validate().unwrap();
+        dst_pool.validate().unwrap();
+    }
+
+    #[test]
+    fn port_to_is_bit_exact_for_int8_pools() {
+        use crate::kvcache::store::{EvictionPolicyKind, PageStore};
+        let mut src_pool = PagePool::new(2, 8, 4, KvDtype::Int8);
+        let mut dst_pool = PagePool::new(2, 8, 4, KvDtype::Int8);
+        let mut src_store = PageStore::new(None, EvictionPolicyKind::Lru);
+        let mut dst_store = PageStore::new(None, EvictionPolicyKind::Lru);
+        let mut seq = SeqCache::new();
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..7 {
+            let row: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+            let (page, slot) = seq.slot_for_next(&mut src_pool);
+            for l in 0..2 {
+                src_pool.write_token(page, slot, l, &row, &row);
+            }
+            seq.commit_token();
+        }
+        let (ported, _) = SeqCache::port_to(
+            &seq,
+            &mut src_pool,
+            &mut src_store,
+            &mut dst_pool,
+            &mut dst_store,
+        )
+        .unwrap();
+        for (pe, se) in ported.pages.iter().zip(&seq.pages) {
+            for l in 0..2 {
+                for s in 0..src_pool.filled(se.id) {
+                    let (sk, sv) = src_pool.q8_rows_raw(se.id, l, s).unwrap();
+                    let (dk, dv) = dst_pool.q8_rows_raw(pe.id, l, s).unwrap();
+                    assert_eq!(sk.0, dk.0, "raw q8 key bytes move verbatim");
+                    assert_eq!(sk.1, dk.1);
+                    assert_eq!(sv.0, dv.0);
+                    assert_eq!(sv.1, dv.1);
+                }
+            }
+        }
     }
 }

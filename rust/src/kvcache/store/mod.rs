@@ -544,6 +544,38 @@ impl PageStore {
         }
     }
 
+    /// Preemption snapshot: push every eligible hot page of a paused
+    /// sequence into the q8 cold tier through the normal demotion
+    /// machinery (same pricing, same trace events), making its bytes
+    /// reclaimable by whoever runs next — the budget cascade can then
+    /// spill them onward to disk under pressure. Partially-filled and
+    /// pinned pages stay hot (the demotion invariants exclude them; a
+    /// trailing write-head page is small and still append-writable on
+    /// resume). Returns the number of pages demoted. On resume the
+    /// decode path's `ensure_hot` faults the pages back, so preemption
+    /// is priced but bit-preserving for int8 pools and q8-lossy exactly
+    /// once for f32/f16 pools — the same contract as budget demotion.
+    pub fn demote_seq(&mut self, pool: &mut PagePool, seq: &SeqCache) -> usize {
+        if !self.enabled() {
+            return 0;
+        }
+        self.ensure_cap(pool.cap_pages());
+        let mut n = 0;
+        for e in &seq.pages {
+            let id = e.id;
+            let st = self.state[id as usize];
+            if st.tier == Tier::Hot
+                && !st.pinned
+                && pool.refcount(id) > 0
+                && pool.filled(id) == pool.page_size
+            {
+                self.demote(pool, id);
+                n += 1;
+            }
+        }
+        n
+    }
+
     /// Demote victims until `bytes_in_use <= budget`. Called after every
     /// decode step (post-unpin) and inside alloc/promote.
     pub fn enforce_budget(&mut self, pool: &mut PagePool) {

@@ -20,7 +20,11 @@
 //! open-loop generator; `--modeled-time` makes the virtual clock
 //! deterministic from the seed; `--executor scoped|persistent` picks the
 //! multi-threaded step-phase implementation (persistent = long-lived
-//! per-worker decode threads, the default).
+//! per-worker decode threads, the default); `--preempt` enables SLO-class
+//! preemption (a starving higher-tier arrival pauses a lower-tier active
+//! via KV snapshot/resume) and `--steal` lets idle workers adopt
+//! preempted snapshots; `--tier-interactive P` / `--tier-background P`
+//! mix SLO tiers into open-loop arrivals (docs/serving_api.md).
 //!
 //! Network serving: `--listen HOST:PORT` accepts concurrent TCP clients
 //! speaking the line-delimited JSON protocol instead of replaying a
@@ -277,6 +281,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         executor,
         metrics_every,
         profile,
+        // SLO-class scheduling: --preempt lets a starving higher-tier
+        // request pause a lower-tier active (KV snapshot to the cold/spill
+        // tiers, resume by faulting hot); --steal lets an idle worker
+        // adopt a preempted snapshot at the commit seam
+        preempt: args.bool("preempt"),
+        steal: args.bool("steal"),
         ..Default::default()
     };
     let mut plugins = Pipeline::new();
@@ -349,6 +359,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 session_reuse_prob: session_prob,
                 deadline_ms: args.f64_opt("deadline-ms"),
                 deadline_every: args.usize_or("deadline-every", 1),
+                // SLO tier mix: each arrival draws interactive with prob
+                // --tier-interactive, background with --tier-background,
+                // batch otherwise (0/0 keeps the all-batch default)
+                tier_interactive: args.f64_or("tier-interactive", 0.0),
+                tier_background: args.f64_or("tier-background", 0.0),
                 seed,
                 ..Default::default()
             })));
@@ -575,6 +590,8 @@ fn main() -> Result<()> {
                  [--arrival trace|poisson|gamma] \
                  [--arrival-shape steady|ramp|burst|diurnal] \
                  [--modeled-time] [--deadline-ms D] \
+                 [--preempt] [--steal] \
+                 [--tier-interactive P] [--tier-background P] \
                  [--trace-out T.jsonl] [--metrics-every N] \
                  [--metrics-out M.jsonl] [--prom-out P.txt] [--profile] ..."
             );

@@ -160,6 +160,9 @@ impl<'a> Drop for Timer<'a> {
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
     pub id: u64,
+    /// SLO class the request was scheduled under (per-tier latency
+    /// breakdowns: interactive p99 TTFT is the preemption headline number)
+    pub tier: crate::workload::SloTier,
     pub queue_seconds: f64,
     pub prefill_seconds: f64,
     /// time to first token (queue + prefill)
@@ -202,6 +205,15 @@ pub struct ServerMetrics {
     pub total_cancelled: u64,
     /// requests shed or aborted past their deadline
     pub total_expired: u64,
+    // --- SLO-class preemption / cross-worker movement ---
+    /// actives paused for a higher tier (KV snapshotted, requeued)
+    pub total_preempted: u64,
+    /// preempted requests faulted hot and decoding again
+    pub total_resumed: u64,
+    /// resumes that ported their snapshot to a different worker
+    pub total_migrated: u64,
+    /// actives moved to an idle worker at the commit seam
+    pub total_stolen: u64,
     pub total_gather_bytes: u64,
     // --- budgeted page-store residency aggregation ---
     /// mean over steps with store activity (hits + misses > 0)
@@ -255,6 +267,10 @@ impl Default for ServerMetrics {
             total_requests: 0,
             total_cancelled: 0,
             total_expired: 0,
+            total_preempted: 0,
+            total_resumed: 0,
+            total_migrated: 0,
+            total_stolen: 0,
             total_gather_bytes: 0,
             residency_hit_rate: Welford::default(),
             kv_bytes: Welford::default(),
@@ -350,6 +366,22 @@ impl ServerMetrics {
 
     pub fn on_expired(&mut self) {
         self.total_expired += 1;
+    }
+
+    pub fn on_preempted(&mut self) {
+        self.total_preempted += 1;
+    }
+
+    pub fn on_resumed(&mut self) {
+        self.total_resumed += 1;
+    }
+
+    pub fn on_migrated(&mut self) {
+        self.total_migrated += 1;
+    }
+
+    pub fn on_stolen(&mut self) {
+        self.total_stolen += 1;
     }
 
     /// tokens/second across the run (requires `run_seconds` set).
@@ -581,6 +613,7 @@ mod tests {
         // one of the two streaming requests completed, one was cancelled
         sm.on_request(&RequestRecord {
             id: 0,
+            tier: crate::workload::SloTier::Interactive,
             queue_seconds: 0.0,
             prefill_seconds: 0.1,
             ttft_seconds: 0.25,

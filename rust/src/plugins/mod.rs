@@ -24,10 +24,17 @@ pub struct StepView<'a> {
     pub pool: &'a PagePool,
 }
 
-pub trait Plugin {
+pub trait Plugin: Send {
     fn name(&self) -> &'static str;
     fn on_step(&mut self, view: &StepView) -> PluginAction;
     fn reset(&mut self) {}
+    /// Fresh-state copy of this plugin (same configuration, cleared
+    /// per-request state). The frontend forks the configured pipeline
+    /// once per admitted request, so stateful plugins such as
+    /// [`EntropyEarlyExit`] never leak one request's streak into a
+    /// sibling's — and a preempted request's plugin state can ride along
+    /// with its KV snapshot.
+    fn fork(&self) -> Box<dyn Plugin>;
 }
 
 /// Entropy-based early exit: stop once the *output* distribution has been
@@ -66,6 +73,10 @@ impl Plugin for EntropyEarlyExit {
     fn reset(&mut self) {
         self.streak = 0;
     }
+
+    fn fork(&self) -> Box<dyn Plugin> {
+        Box::new(EntropyEarlyExit::new(self.threshold, self.patience, self.min_tokens))
+    }
 }
 
 /// Cache-pressure pruning: when a sequence holds more pages than
@@ -85,6 +96,10 @@ impl Plugin for TokenPruning {
         } else {
             PluginAction::Continue
         }
+    }
+
+    fn fork(&self) -> Box<dyn Plugin> {
+        Box::new(TokenPruning { max_pages: self.max_pages })
     }
 }
 
@@ -108,6 +123,10 @@ impl Plugin for RepetitionGuard {
             }
         }
         PluginAction::Continue
+    }
+
+    fn fork(&self) -> Box<dyn Plugin> {
+        Box::new(RepetitionGuard { max_run: self.max_run })
     }
 }
 
@@ -152,6 +171,13 @@ impl Pipeline {
         for p in self.plugins.iter_mut() {
             p.reset();
         }
+    }
+
+    /// Fresh-state copy of the whole pipeline (same plugin configuration,
+    /// per-request state cleared). One fork per admitted request keeps
+    /// plugin state request-scoped.
+    pub fn fork(&self) -> Pipeline {
+        Pipeline { plugins: self.plugins.iter().map(|p| p.fork()).collect() }
     }
 }
 
@@ -217,5 +243,24 @@ mod tests {
         assert_eq!(pipe.on_step(&view(&seq, &s, &pool)), PluginAction::Stop);
         assert_eq!(pipe.names(), vec!["repetition_guard", "token_pruning"]);
         let _ = Sampling::Greedy; // keep import used
+    }
+
+    #[test]
+    fn fork_copies_config_but_not_state() {
+        let pool = PagePool::new(1, 4, 4, KvDtype::F32);
+        let mut pipe = Pipeline::new();
+        pipe.push(Box::new(EntropyEarlyExit::new(0.5, 2, 0)));
+        let low = SampleOut { token: 1, entropy: 0.1, logprob: -0.1 };
+        let seq = seq_with(10, vec![1; 10]);
+        // build up a one-step streak on the original
+        assert_eq!(pipe.on_step(&view(&seq, &low, &pool)), PluginAction::Continue);
+        let mut fresh = pipe.fork();
+        assert_eq!(fresh.names(), pipe.names());
+        // the fork starts from zero: one low-entropy step does not stop it
+        assert_eq!(fresh.on_step(&view(&seq, &low, &pool)), PluginAction::Continue);
+        // while the original's accumulated streak now fires
+        assert_eq!(pipe.on_step(&view(&seq, &low, &pool)), PluginAction::Stop);
+        // and the fork is independent: its second step fires on its own
+        assert_eq!(fresh.on_step(&view(&seq, &low, &pool)), PluginAction::Stop);
     }
 }

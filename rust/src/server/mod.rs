@@ -55,7 +55,7 @@ use crate::coordinator::{Frontend, ServeEvent};
 use crate::metrics::RequestRecord;
 use crate::trace::registry::MetricsRegistry;
 use crate::trace::TraceEvent;
-use crate::workload::{tasks, Request};
+use crate::workload::{tasks, Request, SloTier};
 
 use conn::{Conn, Ctl, SendOutcome};
 use listener::Listener;
@@ -75,7 +75,11 @@ pub trait ServeBackend {
     fn has_work(&self) -> bool;
     /// Current virtual time (stamps `arrival_s` and connection spans).
     fn now(&self) -> f64;
-    /// Requests accepted but not yet decoding — the `queue_depth` gauge.
+    /// New client submissions accepted but not yet decoding — the count
+    /// the admission gate's `queue_depth` cap applies to. Preempted
+    /// requests waiting to resume are *not* counted: they hold no
+    /// unserved submission, and counting them would let a preemption
+    /// storm shed fresh traffic the queue could actually absorb.
     fn queued_len(&self) -> usize;
     fn kv_bytes_in_use(&self) -> usize;
     /// Emit a connection-lifecycle span into the backend's trace stream.
@@ -156,6 +160,9 @@ pub struct ServerStats {
     pub accepted: u64,
     pub closed: u64,
     pub submitted: u64,
+    /// accepted submissions broken out by SLO tier, indexed by
+    /// [`SloTier::rank`] (interactive/batch/background)
+    pub submitted_by_tier: [u64; 3],
     pub cancels: u64,
     pub bad_lines: u64,
     pub shed: ShedCounters,
@@ -166,6 +173,14 @@ impl ServerStats {
         reg.counter("net_conns_accepted", self.accepted);
         reg.counter("net_conns_closed", self.closed);
         reg.counter("net_submits", self.submitted);
+        for tier in SloTier::all() {
+            let name = match tier {
+                SloTier::Interactive => "net_submits_interactive",
+                SloTier::Batch => "net_submits_batch",
+                SloTier::Background => "net_submits_background",
+            };
+            reg.counter(name, self.submitted_by_tier[tier.rank() as usize]);
+        }
         reg.counter("net_cancels", self.cancels);
         reg.counter("net_bad_lines", self.bad_lines);
         self.shed.publish(reg);
@@ -303,8 +318,8 @@ impl<B: ServeBackend> Pump<'_, B> {
         match ctl {
             Ctl::NewConn(stream) => self.new_conn(stream),
             Ctl::Msg { conn, msg } => match msg {
-                ClientMsg::Submit { id, prompt, max_new, session, deadline_ms } => {
-                    self.submit(conn, id, prompt, max_new, session, deadline_ms)
+                ClientMsg::Submit { id, prompt, max_new, session, deadline_ms, tier } => {
+                    self.submit(conn, id, prompt, max_new, session, deadline_ms, tier)
                 }
                 ClientMsg::Cancel { id } => self.cancel(conn, id),
                 ClientMsg::Close => {
@@ -363,6 +378,7 @@ impl<B: ServeBackend> Pump<'_, B> {
         self.stats.accepted += 1;
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn submit(
         &mut self,
         conn_id: u64,
@@ -371,6 +387,7 @@ impl<B: ServeBackend> Pump<'_, B> {
         max_new: usize,
         session: Option<u64>,
         deadline_ms: Option<f64>,
+        tier: Option<SloTier>,
     ) {
         let Some(conn) = self.conns.get(&conn_id) else { return };
         if conn.closing {
@@ -387,6 +404,9 @@ impl<B: ServeBackend> Pump<'_, B> {
             Admission::Accept => {
                 let global = self.next_global;
                 self.next_global += 1;
+                // omitted tier = batch (the wire default documented in
+                // `proto`), so v1 clients keep their old scheduling class
+                let tier = tier.unwrap_or_default();
                 self.backend.submit(Request {
                     id: global,
                     arrival_s: self.backend.now(),
@@ -396,12 +416,14 @@ impl<B: ServeBackend> Pump<'_, B> {
                     task: None,
                     answer: None,
                     deadline_ms,
+                    tier,
                 });
                 self.routes.insert(global, (conn_id, client_id));
                 if let Some(c) = self.conns.get_mut(&conn_id) {
                     c.live.insert(global, client_id);
                 }
                 self.stats.submitted += 1;
+                self.stats.submitted_by_tier[tier.rank() as usize] += 1;
             }
             Admission::Defer { retry_after_ms } => {
                 self.send_to(conn_id, ServerMsg::Retry { id: client_id, retry_after_ms });
@@ -622,6 +644,7 @@ impl ServeBackend for MockBackend {
                 self.kv_in_use -= a.kv;
                 out.push(ServeEvent::Finished(RequestRecord {
                     id: a.req.id,
+                    tier: a.req.tier,
                     queue_seconds: a.admitted_at - a.req.arrival_s,
                     prefill_seconds: 0.0,
                     ttft_seconds: a.admitted_at - a.req.arrival_s + self.step_s,
@@ -703,6 +726,7 @@ mod tests {
             max_new: 3,
             session: None,
             deadline_ms: None,
+            tier: None,
         };
         stream.write_all(format!("{}\n", submit.to_line()).as_bytes()).unwrap();
 
@@ -791,6 +815,7 @@ mod tests {
             max_new: 100_000,
             session: None,
             deadline_ms: None,
+            tier: None,
         };
         stream.write_all(format!("{}\n", submit.to_line()).as_bytes()).unwrap();
         // wait until the request is really decoding, then vanish
@@ -849,6 +874,7 @@ mod tests {
                 task: None,
                 answer: None,
                 deadline_ms: None,
+                tier: SloTier::Batch,
             });
             b.submit(Request {
                 id: 2,
@@ -859,6 +885,7 @@ mod tests {
                 task: None,
                 answer: None,
                 deadline_ms: None,
+                tier: SloTier::Batch,
             });
             let mut sigs = Vec::new();
             while b.has_work() {
@@ -872,5 +899,60 @@ mod tests {
         let a = run();
         assert!(!a.is_empty());
         assert_eq!(a, run(), "same submissions, same event stream");
+    }
+
+    #[test]
+    fn cancel_of_a_finished_client_id_is_an_idempotent_no_op() {
+        // the route for a finished request is retired, so a late cancel
+        // from the client must not touch the backend, emit a Cancelled
+        // line, or disturb the connection — same idempotence contract as
+        // Frontend::cancel on a terminal request
+        let cfg = ServerConfig { exit_when_idle: true, ..ServerConfig::default() };
+        let (addr, server) = spawn_server(cfg);
+
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        assert_eq!(
+            read_msg(&mut reader),
+            Some(ServerMsg::Hello { schema: PROTO_SCHEMA })
+        );
+        let submit = ClientMsg::Submit {
+            id: 7,
+            prompt: "hello".into(),
+            max_new: 2,
+            session: None,
+            deadline_ms: None,
+            tier: None,
+        };
+        stream.write_all(format!("{}\n", submit.to_line()).as_bytes()).unwrap();
+        let mut finished = 0;
+        loop {
+            match read_msg(&mut reader).expect("stream open to terminal") {
+                ServerMsg::Finished { id: 7, .. } => {
+                    finished += 1;
+                    break;
+                }
+                ServerMsg::Cancelled { .. } => panic!("nothing was cancelled"),
+                _ => {}
+            }
+        }
+        // the request is terminal server-side; cancel it anyway
+        let cancel = ClientMsg::Cancel { id: 7 };
+        stream.write_all(format!("{}\n", cancel.to_line()).as_bytes()).unwrap();
+        stream.write_all(format!("{}\n", ClientMsg::Close.to_line()).as_bytes()).unwrap();
+        // the late cancel produces no reply at all: the next thing the
+        // client observes is the graceful close
+        while let Some(msg) = read_msg(&mut reader) {
+            assert!(
+                !matches!(msg, ServerMsg::Cancelled { .. } | ServerMsg::Error { .. }),
+                "late cancel must be silent, got {msg:?}"
+            );
+        }
+        let (stats, backend) = server.join().unwrap();
+        assert_eq!(finished, 1, "exactly one terminal event");
+        assert_eq!(stats.cancels, 0, "terminal id never reaches the backend");
+        assert_eq!(stats.submitted, 1);
+        assert_eq!(stats.closed, 1);
+        assert_eq!(backend.kv_bytes_in_use(), 0);
     }
 }

@@ -13,17 +13,19 @@
 //! ```text
 //! {"op":"submit","id":0,"prompt":"…","max_new":16}        // + optional
 //! {"op":"submit","id":1,"prompt":"…","max_new":16,        //   fields
-//!  "session":7,"deadline_ms":250}
+//!  "session":7,"deadline_ms":250,"tier":"interactive"}
 //! {"op":"cancel","id":0}
 //! {"op":"close"}
 //! ```
 //!
 //! Server → client messages (`"kind"` field) mirror the frontend's
-//! `ServeEvent` lifecycle — `admitted`, `deferred`, `token`, `finished`,
-//! `cancelled`, `expired` — plus the protocol-level `hello`, the
-//! backpressure pair `retry` (typed retry-after: resubmit later) and
-//! `overload` (typed shed naming the limit that fired), and `error` for
-//! unparseable input. Request ids on the wire are always the *client's*
+//! `ServeEvent` lifecycle — `admitted`, `deferred`, `token`, `preempted`,
+//! `resumed`, `finished`, `cancelled`, `expired` — plus the protocol-level
+//! `hello`, the backpressure pair `retry` (typed retry-after: resubmit
+//! later) and `overload` (typed shed naming the limit that fired), and
+//! `error` for unparseable input. `preempted`/`resumed` are informational
+//! pauses in the token stream, NOT terminal — a well-behaved client keeps
+//! the request open until `finished`/`cancelled`/`expired`. Request ids on the wire are always the *client's*
 //! per-connection ids; the server translates to and from its global ids
 //! at the connection boundary. Ids must stay below 2^53 (they ride JSON
 //! numbers).
@@ -31,10 +33,13 @@
 use crate::coordinator::ServeEvent;
 use crate::metrics::RequestRecord;
 use crate::util::json::Json;
+use crate::workload::SloTier;
 
 /// Wire-protocol schema version, carried by the `hello` line. Bump on any
 /// message-shape change so old clients fail loudly instead of misparsing.
-pub const PROTO_SCHEMA: u64 = 1;
+/// v2: `submit` takes an optional `tier` (SLO class); `preempted` and
+/// `resumed` stream as non-terminal lifecycle messages.
+pub const PROTO_SCHEMA: u64 = 2;
 
 /// One client → server operation.
 #[derive(Debug, Clone, PartialEq)]
@@ -46,6 +51,9 @@ pub enum ClientMsg {
         max_new: usize,
         session: Option<u64>,
         deadline_ms: Option<f64>,
+        /// SLO class (`"interactive"` / `"batch"` / `"background"`);
+        /// omitted means batch, the default tier
+        tier: Option<SloTier>,
     },
     /// cancel a previously submitted request (any pre-terminal state)
     Cancel { id: u64 },
@@ -57,7 +65,14 @@ pub enum ClientMsg {
 impl ClientMsg {
     pub fn to_line(&self) -> String {
         match self {
-            ClientMsg::Submit { id, prompt, max_new, session, deadline_ms } => {
+            ClientMsg::Submit {
+                id,
+                prompt,
+                max_new,
+                session,
+                deadline_ms,
+                tier,
+            } => {
                 let mut pairs: Vec<(&str, Json)> = vec![
                     ("op", Json::from("submit")),
                     ("id", Json::Num(*id as f64)),
@@ -69,6 +84,9 @@ impl ClientMsg {
                 }
                 if let Some(d) = deadline_ms {
                     pairs.push(("deadline_ms", Json::Num(*d)));
+                }
+                if let Some(t) = tier {
+                    pairs.push(("tier", Json::from(t.name())));
                 }
                 Json::obj(pairs).to_string()
             }
@@ -114,6 +132,13 @@ impl ClientMsg {
                     .ok_or_else(|| "missing or invalid 'max_new'".to_string())?,
                 session: v.get("session").and_then(|j| j.as_f64()).map(|f| f as u64),
                 deadline_ms: v.get("deadline_ms").and_then(|j| j.as_f64()),
+                tier: match v.get("tier").and_then(|j| j.as_str()) {
+                    None => None,
+                    Some(name) => Some(
+                        SloTier::parse(name)
+                            .ok_or_else(|| format!("unknown tier '{name}'"))?,
+                    ),
+                },
             }),
             "cancel" => Ok(ClientMsg::Cancel { id: id("id")? }),
             "close" => Ok(ClientMsg::Close),
@@ -130,6 +155,11 @@ pub enum ServerMsg {
     Admitted { id: u64, t: f64 },
     Deferred { id: u64, t: f64 },
     Token { id: u64, tok: i32, t: f64 },
+    /// non-terminal: the request is paused for a higher SLO tier and will
+    /// resume from its KV snapshot — the token stream continues later
+    Preempted { id: u64, t: f64 },
+    /// non-terminal: the paused request is decoding again
+    Resumed { id: u64, t: f64 },
     Finished { id: u64, new_tokens: usize, e2e_s: f64 },
     Cancelled { id: u64, t: f64 },
     Expired { id: u64, t: f64 },
@@ -156,6 +186,12 @@ impl ServerMsg {
             ServeEvent::Token { tok, t, .. } => {
                 ServerMsg::Token { id: client_id, tok: *tok, t: *t }
             }
+            ServeEvent::Preempted { t, .. } => {
+                ServerMsg::Preempted { id: client_id, t: *t }
+            }
+            ServeEvent::Resumed { t, .. } => {
+                ServerMsg::Resumed { id: client_id, t: *t }
+            }
             ServeEvent::Finished(rec) => ServerMsg::finished(rec, client_id),
             ServeEvent::Cancelled { t, .. } => {
                 ServerMsg::Cancelled { id: client_id, t: *t }
@@ -180,6 +216,8 @@ impl ServerMsg {
             ServerMsg::Admitted { .. } => "admitted",
             ServerMsg::Deferred { .. } => "deferred",
             ServerMsg::Token { .. } => "token",
+            ServerMsg::Preempted { .. } => "preempted",
+            ServerMsg::Resumed { .. } => "resumed",
             ServerMsg::Finished { .. } => "finished",
             ServerMsg::Cancelled { .. } => "cancelled",
             ServerMsg::Expired { .. } => "expired",
@@ -197,6 +235,8 @@ impl ServerMsg {
             }
             ServerMsg::Admitted { id, t }
             | ServerMsg::Deferred { id, t }
+            | ServerMsg::Preempted { id, t }
+            | ServerMsg::Resumed { id, t }
             | ServerMsg::Cancelled { id, t }
             | ServerMsg::Expired { id, t } => {
                 pairs.push(("id", Json::Num(*id as f64)));
@@ -257,6 +297,10 @@ impl ServerMsg {
                 new_tokens: num("new_tokens")? as usize,
                 e2e_s: num("e2e_s")?,
             }),
+            "preempted" => {
+                Ok(ServerMsg::Preempted { id: id("id")?, t: num("t")? })
+            }
+            "resumed" => Ok(ServerMsg::Resumed { id: id("id")?, t: num("t")? }),
             "cancelled" => Ok(ServerMsg::Cancelled { id: id("id")?, t: num("t")? }),
             "expired" => Ok(ServerMsg::Expired { id: id("id")?, t: num("t")? }),
             "retry" => Ok(ServerMsg::Retry {
@@ -310,6 +354,7 @@ mod tests {
                 max_new: 16,
                 session: Some(7),
                 deadline_ms: Some(250.0),
+                tier: Some(SloTier::Interactive),
             },
             ClientMsg::Submit {
                 id: 0,
@@ -317,6 +362,7 @@ mod tests {
                 max_new: 1,
                 session: None,
                 deadline_ms: None,
+                tier: None,
             },
             ClientMsg::Cancel { id: 3 },
             ClientMsg::Close,
@@ -335,6 +381,8 @@ mod tests {
             ServerMsg::Admitted { id: 1, t: 0.5 },
             ServerMsg::Deferred { id: 1, t: 0.25 },
             ServerMsg::Token { id: 1, tok: -2, t: 0.75 },
+            ServerMsg::Preempted { id: 1, t: 0.8 },
+            ServerMsg::Resumed { id: 1, t: 0.9 },
             ServerMsg::Finished { id: 1, new_tokens: 4, e2e_s: 1.5 },
             ServerMsg::Cancelled { id: 2, t: 0.1 },
             ServerMsg::Expired { id: 2, t: 0.2 },
@@ -362,6 +410,13 @@ mod tests {
     fn parse_rejects_malformed_lines() {
         assert!(ClientMsg::parse("not json").is_err());
         assert!(ClientMsg::parse(r#"{"op":"teleport"}"#).is_err());
+        assert!(
+            ClientMsg::parse(
+                r#"{"id":0,"max_new":1,"op":"submit","prompt":"x","tier":"gold"}"#
+            )
+            .is_err(),
+            "unknown tier names are protocol errors, not silent defaults"
+        );
         assert!(ClientMsg::parse(r#"{"op":"submit","id":0}"#).is_err(), "no prompt");
         assert!(
             ClientMsg::parse(r#"{"id":0,"max_new":0,"op":"submit","prompt":"x"}"#)
@@ -382,6 +437,7 @@ mod tests {
         );
         let rec = RequestRecord {
             id: 1001,
+            tier: SloTier::Batch,
             queue_seconds: 0.0,
             prefill_seconds: 0.0,
             ttft_seconds: 0.0,
@@ -395,5 +451,9 @@ mod tests {
         assert_eq!(m, ServerMsg::Finished { id: 0, new_tokens: 4, e2e_s: 2.0 });
         assert!(m.is_terminal());
         assert!(!ServerMsg::Admitted { id: 0, t: 0.0 }.is_terminal());
+        // a preempted request is paused, not done: its wire messages must
+        // never close the client's request
+        assert!(!ServerMsg::Preempted { id: 0, t: 0.0 }.is_terminal());
+        assert!(!ServerMsg::Resumed { id: 0, t: 0.0 }.is_terminal());
     }
 }

@@ -7,8 +7,11 @@
 //! - `max_conns` — connection cap, checked at accept. Over the cap the
 //!   server answers `hello` + `overload{limit:"max_conns"}` and closes,
 //!   so the client learns *why* instead of timing out.
-//! - `queue_depth` — cap on work the backend has not started (queued +
-//!   pending), checked per `submit`. Over the cap the configured
+//! - `queue_depth` — cap on *new* submissions the backend has accepted
+//!   but not started decoding (its batcher queue plus pending intake;
+//!   preempted requests waiting to resume are excluded — they hold no
+//!   unserved submission), checked per `submit` against the count the
+//!   backend's `queued_len()` reports. Over the cap the configured
 //!   [`ShedPolicy`] decides: **defer** answers `retry` with a
 //!   deterministic `retry_after_ms` hint (the client resubmits), **shed**
 //!   answers `overload{limit:"queue_depth"}` (the request is dropped).
@@ -55,7 +58,9 @@ impl ShedPolicy {
 pub struct AdmissionConfig {
     /// concurrent connection cap (accept-time limit)
     pub max_conns: usize,
-    /// cap on backend work not yet started: queued + pending submissions
+    /// cap on new submissions the backend has not started decoding — the
+    /// backend's `queued_len()`: batcher-queued + pending intake, never
+    /// preempted resumes
     pub queue_depth: usize,
     pub policy: ShedPolicy,
     /// base retry hint; the emitted hint scales with how far over the cap
@@ -208,6 +213,29 @@ mod tests {
         );
         assert_eq!(gate.counters.submits_deferred, 2);
         assert_eq!(gate.counters.submits_shed, 0);
+    }
+
+    #[test]
+    fn default_config_retry_hints_are_pinned() {
+        // the wire-visible hint under the stock config is part of the
+        // client-facing contract: pin it so a refactor of `retry_hint`
+        // cannot silently shift client backoff behaviour
+        let mut gate = AdmissionGate::new(AdmissionConfig::default());
+        assert_eq!(gate.cfg.queue_depth, 256);
+        assert_eq!(gate.cfg.retry_after_ms, 50.0);
+        assert_eq!(gate.admit_submit(255), Admission::Accept);
+        assert_eq!(
+            gate.admit_submit(256),
+            Admission::Defer { retry_after_ms: 50.0 }
+        );
+        assert_eq!(
+            gate.admit_submit(384),
+            Admission::Defer { retry_after_ms: 75.0 }
+        );
+        assert_eq!(
+            gate.admit_submit(512),
+            Admission::Defer { retry_after_ms: 100.0 }
+        );
     }
 
     #[test]

@@ -72,6 +72,18 @@ pub enum TraceEvent {
     SpillFault { ctx: SpanCtx, worker: usize, page: u64, src: &'static str },
     /// store: readahead tick prefetched `bytes` from the disk tier
     Readahead { ctx: SpanCtx, worker: usize, bytes: u64 },
+    /// scheduler: a running request was paused at the commit seam (its KV
+    /// pages were demoted toward the cold/spill tiers) and requeued
+    Preempted { id: u64, worker: usize, t: f64 },
+    /// scheduler: a preempted request re-entered the active set (pages
+    /// fault back hot on demand)
+    Resumed { id: u64, worker: usize, t: f64 },
+    /// scheduler: a preempted session's KV snapshot was ported from one
+    /// worker's pool to another's (`bytes` = payload moved, transit-priced)
+    Migrated { id: u64, from: usize, to: usize, bytes: u64, t: f64 },
+    /// scheduler: an idle worker stole a running request from a loaded
+    /// one at the commit seam (KV ported like a migration)
+    Stolen { id: u64, from: usize, to: usize, t: f64 },
     /// terminal: ran to completion
     Finished { id: u64, t: f64 },
     /// terminal: cancelled by the caller
@@ -99,6 +111,10 @@ impl TraceEvent {
             TraceEvent::SpillOut { .. } => "spill_out",
             TraceEvent::SpillFault { .. } => "spill_fault",
             TraceEvent::Readahead { .. } => "readahead",
+            TraceEvent::Preempted { .. } => "preempted",
+            TraceEvent::Resumed { .. } => "resumed",
+            TraceEvent::Migrated { .. } => "migrated",
+            TraceEvent::Stolen { .. } => "stolen",
             TraceEvent::Finished { .. } => "finished",
             TraceEvent::Cancelled { .. } => "cancelled",
             TraceEvent::Expired { .. } => "expired",
@@ -114,6 +130,10 @@ impl TraceEvent {
             | TraceEvent::Admitted { id, .. }
             | TraceEvent::Deferred { id, .. }
             | TraceEvent::Prefill { id, .. }
+            | TraceEvent::Preempted { id, .. }
+            | TraceEvent::Resumed { id, .. }
+            | TraceEvent::Migrated { id, .. }
+            | TraceEvent::Stolen { id, .. }
             | TraceEvent::Finished { id, .. }
             | TraceEvent::Cancelled { id, .. }
             | TraceEvent::Expired { id, .. } => Some(*id),
@@ -145,9 +165,24 @@ impl TraceEvent {
                 pairs.push(("id", Json::Num(*id as f64)));
                 pairs.push(("t", Json::Num(*t)));
             }
-            TraceEvent::Admitted { id, worker, t } => {
+            TraceEvent::Admitted { id, worker, t }
+            | TraceEvent::Preempted { id, worker, t }
+            | TraceEvent::Resumed { id, worker, t } => {
                 pairs.push(("id", Json::Num(*id as f64)));
                 pairs.push(("worker", Json::from(*worker)));
+                pairs.push(("t", Json::Num(*t)));
+            }
+            TraceEvent::Migrated { id, from, to, bytes, t } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("from", Json::from(*from)));
+                pairs.push(("to", Json::from(*to)));
+                pairs.push(("bytes", Json::Num(*bytes as f64)));
+                pairs.push(("t", Json::Num(*t)));
+            }
+            TraceEvent::Stolen { id, from, to, t } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("from", Json::from(*from)));
+                pairs.push(("to", Json::from(*to)));
                 pairs.push(("t", Json::Num(*t)));
             }
             TraceEvent::Prefill { id, worker, t0, t1 } => {
@@ -444,6 +479,26 @@ mod tests {
         assert_eq!(f.request_id(), Some(4));
         let v = Json::parse(&f.to_line()).unwrap();
         assert_eq!(v.get("src").and_then(|j| j.as_str()), Some("disk"));
+    }
+
+    #[test]
+    fn scheduler_events_serialize_and_carry_request_ids() {
+        let p = TraceEvent::Preempted { id: 5, worker: 1, t: 0.75 };
+        assert_eq!(p.to_line(), r#"{"id":5,"kind":"preempted","t":0.75,"worker":1}"#);
+        assert_eq!(p.request_id(), Some(5));
+        let r = TraceEvent::Resumed { id: 5, worker: 0, t: 1.25 };
+        assert_eq!(r.to_line(), r#"{"id":5,"kind":"resumed","t":1.25,"worker":0}"#);
+        let m = TraceEvent::Migrated { id: 5, from: 1, to: 0, bytes: 4096, t: 1.0 };
+        let v = Json::parse(&m.to_line()).unwrap();
+        assert_eq!(v.get("kind").and_then(|j| j.as_str()), Some("migrated"));
+        assert_eq!(v.get("from").and_then(|j| j.as_f64()), Some(1.0));
+        assert_eq!(v.get("to").and_then(|j| j.as_f64()), Some(0.0));
+        assert_eq!(v.get("bytes").and_then(|j| j.as_f64()), Some(4096.0));
+        assert_eq!(m.request_id(), Some(5));
+        let s = TraceEvent::Stolen { id: 9, from: 0, to: 2, t: 2.0 };
+        let v = Json::parse(&s.to_line()).unwrap();
+        assert_eq!(v.get("kind").and_then(|j| j.as_str()), Some("stolen"));
+        assert_eq!(s.request_id(), Some(9));
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::server::proto::{ClientMsg, ServerMsg, PROTO_SCHEMA};
 use crate::util::rng::Rng;
 
 use super::tasks::{self, Task};
+use super::SloTier;
 
 /// Closed-loop load shape: `conns` connections, each submitting
 /// `requests_per_conn` seeded task documents one at a time.
@@ -45,6 +46,9 @@ pub struct ClientConfig {
     pub seed: u64,
     /// per-request SLO passed through to the server (None = no deadline)
     pub deadline_ms: Option<f64>,
+    /// SLO tier attached to every submit (None = omit the field; the
+    /// server schedules it as `batch`, the wire default)
+    pub tier: Option<SloTier>,
     /// give up on a request after this many `retry` bounces
     pub max_retries: usize,
 }
@@ -60,6 +64,7 @@ impl Default for ClientConfig {
             think_ms: 0.0,
             seed: 42,
             deadline_ms: None,
+            tier: None,
             max_retries: 8,
         }
     }
@@ -158,6 +163,7 @@ fn run_conn(cfg: &ClientConfig, mut rng: Rng) -> Result<ClientStats> {
             max_new: cfg.max_new_tokens,
             session: None,
             deadline_ms: cfg.deadline_ms,
+            tier: cfg.tier,
         };
         let mut attempts = 0usize;
         'request: loop {
@@ -173,7 +179,12 @@ fn run_conn(cfg: &ClientConfig, mut rng: Rng) -> Result<ClientStats> {
                     return Ok(stats);
                 };
                 match msg {
-                    ServerMsg::Admitted { .. } | ServerMsg::Deferred { .. } => {}
+                    ServerMsg::Admitted { .. }
+                    | ServerMsg::Deferred { .. }
+                    // non-terminal scheduling notices: the request is
+                    // paused/resumed server-side, tokens keep flowing after
+                    | ServerMsg::Preempted { .. }
+                    | ServerMsg::Resumed { .. } => {}
                     ServerMsg::Token { .. } => stats.tokens += 1,
                     ServerMsg::Finished { .. } => {
                         stats.finished += 1;

@@ -31,6 +31,78 @@ pub trait RequestSource {
     fn take_due(&mut self, now: f64) -> Vec<Request>;
 }
 
+/// SLO class of a request. Tiers order the scheduler end to end: the
+/// batcher's EDF key leads with the tier rank, and (with preemption
+/// enabled) a waiting higher-tier request may pause a running lower-tier
+/// one at the commit seam. `Batch` is the default — single-tier traces
+/// schedule identically to the pre-tier scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum SloTier {
+    /// human-in-the-loop: tightest TTFT target, preempts lower tiers
+    Interactive,
+    /// default tier for bulk serving traffic
+    #[default]
+    Batch,
+    /// best-effort offline work: preempted first, loosest targets
+    Background,
+}
+
+impl SloTier {
+    /// Scheduling rank: lower = more urgent. Leads the EDF key.
+    pub fn rank(&self) -> u8 {
+        match self {
+            SloTier::Interactive => 0,
+            SloTier::Batch => 1,
+            SloTier::Background => 2,
+        }
+    }
+
+    /// Per-tier time-to-first-token target (seconds). The preemption
+    /// policy fires when a queued request of this tier has waited half
+    /// its target and only lower-tier work occupies the active set.
+    pub fn ttft_target_s(&self) -> f64 {
+        match self {
+            SloTier::Interactive => 0.25,
+            SloTier::Batch => 2.0,
+            SloTier::Background => 10.0,
+        }
+    }
+
+    /// Default SLO deadline for the tier, relative to arrival (ms).
+    pub fn deadline_ms(&self) -> f64 {
+        match self {
+            SloTier::Interactive => 1_000.0,
+            SloTier::Batch => 10_000.0,
+            SloTier::Background => 60_000.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SloTier> {
+        match s {
+            "interactive" => Some(SloTier::Interactive),
+            "batch" => Some(SloTier::Batch),
+            "background" => Some(SloTier::Background),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloTier::Interactive => "interactive",
+            SloTier::Batch => "batch",
+            SloTier::Background => "background",
+        }
+    }
+
+    pub fn all() -> [SloTier; 3] {
+        [SloTier::Interactive, SloTier::Batch, SloTier::Background]
+    }
+
+    pub fn names() -> Vec<&'static str> {
+        vec!["interactive", "batch", "background"]
+    }
+}
+
 /// One request in a trace.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -47,6 +119,8 @@ pub struct Request {
     /// sheds the request at admission or aborts it mid-decode (releasing
     /// its KV pages) once the deadline elapses; None = no deadline.
     pub deadline_ms: Option<f64>,
+    /// SLO class; `Batch` unless the workload or client says otherwise.
+    pub tier: SloTier,
 }
 
 #[derive(Debug, Clone)]
@@ -122,6 +196,7 @@ pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
             task: Some(task),
             answer: Some(doc.answer),
             deadline_ms: None,
+            tier: SloTier::default(),
         });
     }
     out
@@ -168,6 +243,21 @@ mod tests {
             counts[r.session.unwrap() as usize] += 1;
         }
         assert!(counts[0] > counts[9]);
+    }
+
+    #[test]
+    fn tier_ranks_order_and_parse_roundtrips() {
+        assert!(SloTier::Interactive.rank() < SloTier::Batch.rank());
+        assert!(SloTier::Batch.rank() < SloTier::Background.rank());
+        assert_eq!(SloTier::default(), SloTier::Batch);
+        for t in SloTier::all() {
+            assert_eq!(SloTier::parse(t.name()), Some(t));
+            assert!(t.ttft_target_s() > 0.0 && t.deadline_ms() > 0.0);
+        }
+        assert_eq!(SloTier::parse("bogus"), None);
+        assert!(
+            SloTier::Interactive.ttft_target_s() < SloTier::Background.ttft_target_s()
+        );
     }
 
     #[test]

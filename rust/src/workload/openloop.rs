@@ -24,7 +24,7 @@
 use crate::util::rng::Rng;
 
 use super::tasks::{self, Task};
-use super::{Request, RequestSource};
+use super::{Request, RequestSource, SloTier};
 
 /// Interarrival process at a fixed offered rate.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -121,6 +121,12 @@ pub struct OpenLoopConfig {
     pub deadline_ms: Option<f64>,
     /// 1 = every request carries the SLO, 4 = every 4th, 0 treated as 1
     pub deadline_every: usize,
+    /// fraction of requests in the interactive SLO tier (0.0 = tier mix
+    /// off; with both tier knobs at zero the RNG stream is bit-identical
+    /// to the pre-tier generator and every request is `SloTier::Batch`)
+    pub tier_interactive: f64,
+    /// fraction of requests in the background SLO tier
+    pub tier_background: f64,
     pub seed: u64,
 }
 
@@ -137,6 +143,8 @@ impl Default for OpenLoopConfig {
             n_sessions: 16,
             deadline_ms: None,
             deadline_every: 1,
+            tier_interactive: 0.0,
+            tier_background: 0.0,
             seed: 42,
         }
     }
@@ -265,23 +273,45 @@ impl OpenLoopGen {
             }
         };
         let every = self.cfg.deadline_every.max(1) as u64;
-        let deadline_ms = match self.cfg.deadline_ms {
+        let mut deadline_ms = match self.cfg.deadline_ms {
             Some(d) if id % every == 0 => Some(d),
             _ => None,
+        };
+        let max_new_tokens = self.rng.range(
+            self.cfg.new_tokens.0 as u64,
+            self.cfg.new_tokens.1 as u64 + 1,
+        ) as usize;
+        // tier draw comes last and only when the mix is configured, so
+        // mix-off configs keep the historical RNG stream bit-identical
+        let p_int = self.cfg.tier_interactive.clamp(0.0, 1.0);
+        let p_bg = self.cfg.tier_background.clamp(0.0, 1.0);
+        let tier = if p_int > 0.0 || p_bg > 0.0 {
+            let u = self.rng.range(0, 1_000_000) as f64 / 1e6;
+            let t = if u < p_int {
+                SloTier::Interactive
+            } else if u < p_int + p_bg {
+                SloTier::Background
+            } else {
+                SloTier::Batch
+            };
+            // tiered requests carry their tier's default SLO unless the
+            // deadline_every rule already attached an explicit one
+            deadline_ms = deadline_ms.or(Some(t.deadline_ms()));
+            t
+        } else {
+            SloTier::default()
         };
         self.emitted += 1;
         Some(Request {
             id,
             arrival_s: self.t,
             prompt: tasks::encode_prompt(&doc.prompt),
-            max_new_tokens: self.rng.range(
-                self.cfg.new_tokens.0 as u64,
-                self.cfg.new_tokens.1 as u64 + 1,
-            ) as usize,
+            max_new_tokens,
             session,
             task: Some(task),
             answer: Some(doc.answer),
             deadline_ms,
+            tier,
         })
     }
 }
@@ -311,13 +341,14 @@ mod tests {
 
     fn sig(r: &Request) -> String {
         format!(
-            "{} @{:016x} p{} n{} s{:?} d{:?}",
+            "{} @{:016x} p{} n{} s{:?} d{:?} t:{}",
             r.id,
             r.arrival_s.to_bits(),
             r.prompt.len(),
             r.max_new_tokens,
             r.session,
-            r.deadline_ms.map(|d| d.to_bits())
+            r.deadline_ms.map(|d| d.to_bits()),
+            r.tier.name()
         )
     }
 
@@ -336,6 +367,8 @@ mod tests {
             shape: LoadShape::Bursts { period_s: 1.0, burst_s: 0.25, factor: 5.0 },
             deadline_ms: Some(250.0),
             deadline_every: 4,
+            tier_interactive: 0.3,
+            tier_background: 0.2,
             seed,
             ..Default::default()
         };
@@ -483,6 +516,46 @@ mod tests {
         };
         for r in OpenLoopGen::new(cfg).collect_all() {
             assert_eq!(r.deadline_ms.is_some(), r.id % 4 == 0, "id {}", r.id);
+        }
+    }
+
+    #[test]
+    fn tier_mix_off_is_all_batch_and_stream_identical() {
+        let base = OpenLoopConfig { n_requests: 100, ..Default::default() };
+        let off = OpenLoopConfig {
+            tier_interactive: 0.0,
+            tier_background: 0.0,
+            ..base.clone()
+        };
+        let a: Vec<String> =
+            OpenLoopGen::new(base).collect_all().iter().map(sig).collect();
+        let b: Vec<String> =
+            OpenLoopGen::new(off.clone()).collect_all().iter().map(sig).collect();
+        assert_eq!(a, b, "zeroed tier knobs must not perturb the RNG stream");
+        for r in OpenLoopGen::new(off).collect_all() {
+            assert_eq!(r.tier, SloTier::Batch);
+            assert!(r.deadline_ms.is_none(), "no implicit SLO without a mix");
+        }
+    }
+
+    #[test]
+    fn tier_mix_fractions_and_default_deadlines() {
+        let cfg = OpenLoopConfig {
+            n_requests: 3000,
+            tier_interactive: 0.3,
+            tier_background: 0.2,
+            ..Default::default()
+        };
+        let trace = OpenLoopGen::new(cfg).collect_all();
+        let frac = |t: SloTier| {
+            trace.iter().filter(|r| r.tier == t).count() as f64 / trace.len() as f64
+        };
+        assert!((frac(SloTier::Interactive) - 0.3).abs() < 0.05);
+        assert!((frac(SloTier::Background) - 0.2).abs() < 0.05);
+        assert!((frac(SloTier::Batch) - 0.5).abs() < 0.05);
+        for r in &trace {
+            let d = r.deadline_ms.expect("tiered requests carry an SLO");
+            assert_eq!(d, r.tier.deadline_ms());
         }
     }
 

@@ -194,6 +194,8 @@ fn workers2_poisson_serve_counters_golden() {
             n_sessions: 3,
             deadline_ms: None,
             deadline_every: 1,
+            tier_interactive: 0.0,
+            tier_background: 0.0,
             seed: 42,
         })));
         while fe.has_work() {

@@ -8,20 +8,21 @@
 
 use tinyserve::config::{KvDtype, ServingConfig};
 use tinyserve::coordinator::{
-    event_log_header, serve_trace, DispatchKind, ExecutorKind, Frontend,
-    Lifecycle, ServeEvent, ServeOptions, ServeReport, TimeModel, WorkerPool,
+    event_log_header, serve_trace, BatcherConfig, DispatchKind, ExecutorKind,
+    Frontend, Lifecycle, ServeEvent, ServeOptions, ServeReport, TimeModel,
+    WorkerPool,
 };
 use tinyserve::trace::{SharedVecSink, Tracer};
 use tinyserve::engine::{Engine, Sampling};
 use tinyserve::kvcache::EvictionPolicyKind;
 use tinyserve::metrics::StepMetrics;
-use tinyserve::plugins::Pipeline;
+use tinyserve::plugins::{EntropyEarlyExit, Pipeline, RepetitionGuard};
 use tinyserve::runtime::Manifest;
 use tinyserve::sparsity::PolicyKind;
 use tinyserve::util::rng::Rng;
 use tinyserve::workload::{
     generate_trace, tasks, ArrivalProcess, LoadShape, OpenLoopConfig, OpenLoopGen,
-    TraceConfig,
+    SloTier, TraceConfig,
 };
 
 const MODEL: &str = "tiny-trained";
@@ -523,6 +524,7 @@ fn lifecycle_req(
         task: None,
         answer: None,
         deadline_ms: None,
+        tier: tinyserve::workload::SloTier::default(),
     }
 }
 
@@ -800,6 +802,8 @@ fn bursty_openloop(seed: u64) -> OpenLoopGen {
         n_sessions: 3,
         deadline_ms: None,
         deadline_every: 1,
+        tier_interactive: 0.0,
+        tier_background: 0.0,
         seed,
     })
 }
@@ -951,9 +955,8 @@ fn trace_and_metrics_streams_are_deterministic_across_executors() {
     let m = require!(manifest());
     let seed = pallas_seed();
     let run = |threads: usize, executor: ExecutorKind| -> (String, String) {
-        let pool =
-            WorkerPool::build(&m, &serve_cfg(None), 2, DispatchKind::LeastLoaded)
-                .expect("pool");
+        let pool = WorkerPool::build(&m, &serve_cfg(None), 2, DispatchKind::LeastLoaded)
+            .expect("pool");
         let opts = ServeOptions {
             time_model: TimeModel::Modeled,
             seed,
@@ -1443,6 +1446,7 @@ fn session_turns_follow_their_snapshot_across_pool_workers() {
         task: None,
         answer: Some(doc.answer.clone()),
         deadline_ms: None,
+        tier: tinyserve::workload::SloTier::default(),
     };
     let q0 = sess.question(0);
     let q1 = sess.question(1);
@@ -1637,6 +1641,7 @@ fn session_reuse_cuts_prefill_time() {
         task: None,
         answer: Some(doc.answer.clone()),
         deadline_ms: None,
+        tier: tinyserve::workload::SloTier::default(),
     };
     let trace = vec![mk(0, &q0, 0.0), mk(1, &q1, 0.1)];
     let mut plugins = Pipeline::new();
@@ -1649,4 +1654,363 @@ fn session_reuse_cuts_prefill_time() {
         "reused {}",
         rec1.session_reused_tokens
     );
+}
+
+// ---- SLO-class preemption, fairness, and abort-path regression suite ----
+
+/// Token stream one request produced, in order.
+fn tokens_of(events: &[ServeEvent], id: u64) -> Vec<i32> {
+    events
+        .iter()
+        .filter_map(|ev| match ev {
+            ServeEvent::Token { id: i, tok, .. } if *i == id => Some(*tok),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn round_window_rotation_steps_every_active_to_completion() {
+    // Fairness regression: with more actives than the engine's compiled
+    // batch width, plan_round used to step a fixed prefix of the active
+    // set in stable order — everything behind the window starved until an
+    // early request happened to retire. The rotating window must walk the
+    // whole active set, so every request finishes.
+    let m = require!(manifest());
+    let mut e = engine(&m, PolicyKind::TinyServe, 256, 2); // batch width 2
+    let mut plugins = Pipeline::new();
+    let opts = ServeOptions {
+        time_model: TimeModel::Modeled,
+        batcher: BatcherConfig {
+            max_active: 6,
+            batch_timeout_s: 0.0,
+            prefill_per_round: 6,
+        },
+        ..Default::default()
+    };
+    let mut fe = Frontend::builder().options(opts).build(&mut e, &mut plugins);
+    for i in 0..6u64 {
+        fe.submit(lifecycle_req(i, 0.0, "the river and the stone. ", 6));
+    }
+    let events = pump_all(&mut fe);
+    for i in 0..6u64 {
+        assert_eq!(
+            fe.state_of(i),
+            Some(Lifecycle::Finished),
+            "request {i} starved behind the batch window"
+        );
+        assert_eq!(tokens_of(&events, i).len(), 6, "request {i} short-streamed");
+    }
+    let r = fe.into_report();
+    assert_eq!(r.metrics.total_requests, 6);
+    assert_eq!(e.pool.pages_in_use(), 0);
+}
+
+#[test]
+fn cancelling_one_request_leaves_survivor_stream_untouched() {
+    // Abort-scoping regression: cancelling B mid-batch must not disturb
+    // A's decode — the aborted request's plugin state dies with its own
+    // forked pipeline, and resetting anything shared would change the
+    // survivor's stream. A's tokens must be byte-identical with and
+    // without the doomed co-tenant, under stateful plugins.
+    let m = require!(manifest());
+    let prompt_a = "the river and the stone and the light. ";
+    let prompt_b = "winter morning bridge over the quiet water. ";
+    let run = |with_b: bool| -> Vec<i32> {
+        let mut e = engine(&m, PolicyKind::TinyServe, 256, 4);
+        let mut plugins = Pipeline::new();
+        plugins.push(Box::new(EntropyEarlyExit::new(0.05, 3, 4)));
+        plugins.push(Box::new(RepetitionGuard { max_run: 16 }));
+        let opts = ServeOptions { time_model: TimeModel::Modeled, ..Default::default() };
+        let mut fe = Frontend::builder().options(opts).build(&mut e, &mut plugins);
+        fe.submit(lifecycle_req(0, 0.0, prompt_a, 16));
+        if with_b {
+            fe.submit(lifecycle_req(1, 0.0, prompt_b, 16));
+        }
+        let mut a_tokens = Vec::new();
+        let mut b_streamed = 0usize;
+        while fe.has_work() {
+            for ev in fe.step().expect("step") {
+                match ev {
+                    ServeEvent::Token { id: 0, tok, .. } => a_tokens.push(tok),
+                    ServeEvent::Token { id: 1, .. } => {
+                        b_streamed += 1;
+                        if b_streamed == 1 {
+                            assert!(fe.cancel(1), "B cancellable mid-stream");
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        assert_eq!(fe.state_of(0), Some(Lifecycle::Finished));
+        if with_b {
+            assert_eq!(fe.state_of(1), Some(Lifecycle::Cancelled));
+        }
+        drop(fe);
+        assert_eq!(e.pool.pages_in_use(), 0, "mid-batch abort leaked pages");
+        a_tokens
+    };
+    let solo = run(false);
+    let with_cancelled_b = run(true);
+    assert_eq!(
+        solo, with_cancelled_b,
+        "survivor's token stream changed when a co-tenant was aborted"
+    );
+}
+
+#[test]
+fn preempt_resume_decodes_token_identical_across_policies_and_seeds() {
+    // The preemption contract: pause -> KV snapshot down the tier ladder
+    // -> resume must continue the sequence *exactly* where it paused. With
+    // int8 KV the demote/fault round-trip is bit-exact and greedy sampling
+    // draws no randomness, so the background's token stream must match an
+    // uninterrupted baseline run bit-for-bit, whatever the eviction policy
+    // shuffles underneath.
+    let m = require!(manifest());
+    let bg_prompt = "the river and the stone and the light. ".repeat(3);
+    for eviction in [EvictionPolicyKind::Lru, EvictionPolicyKind::QueryAware] {
+        for seed in [7u64, 42] {
+            let cfg = || ServingConfig {
+                model: MODEL.to_string(),
+                policy: PolicyKind::TinyServe,
+                budget: 256,
+                max_batch: 4,
+                kv_dtype: KvDtype::Int8,
+                eviction,
+                ..Default::default()
+            };
+            let opts = |preempt: bool| ServeOptions {
+                time_model: TimeModel::Modeled,
+                seed,
+                preempt,
+                batcher: BatcherConfig {
+                    max_active: 1,
+                    batch_timeout_s: 0.0,
+                    prefill_per_round: 1,
+                },
+                ..Default::default()
+            };
+            // baseline: the background runs alone, uninterrupted
+            let baseline = {
+                let mut e = Engine::from_manifest(&m, cfg()).expect("engine");
+                let mut plugins = Pipeline::new();
+                let mut fe =
+                    Frontend::builder().options(opts(false)).build(&mut e, &mut plugins);
+                let mut bg = lifecycle_req(0, 0.0, &bg_prompt, 32);
+                bg.tier = SloTier::Background;
+                fe.submit(bg);
+                let events = pump_all(&mut fe);
+                assert_eq!(fe.state_of(0), Some(Lifecycle::Finished));
+                drop(fe);
+                assert_eq!(e.pool.pages_in_use(), 0);
+                tokens_of(&events, 0)
+            };
+            // preempted run: same background, interrupted mid-decode by an
+            // interactive arrival
+            let mut e = Engine::from_manifest(&m, cfg()).expect("engine");
+            let mut plugins = Pipeline::new();
+            let mut fe = Frontend::builder().options(opts(true)).build(&mut e, &mut plugins);
+            let mut bg = lifecycle_req(0, 0.0, &bg_prompt, 32);
+            bg.tier = SloTier::Background;
+            fe.submit(bg);
+            let mut events = Vec::new();
+            let mut bg_streamed = 0usize;
+            while fe.has_work() && bg_streamed < 4 {
+                for ev in fe.step().expect("step") {
+                    if matches!(ev, ServeEvent::Token { id: 0, .. }) {
+                        bg_streamed += 1;
+                    }
+                    events.push(ev);
+                }
+            }
+            assert_eq!(fe.state_of(0), Some(Lifecycle::Active), "bg decoding");
+            // the interactive arrives already starving: its arrival sits far
+            // enough in the virtual past that the preemptor's half-TTFT wait
+            // gate passes on the next scheduling round
+            let mut fg = lifecycle_req(1, fe.now() - 1.0, "winter morning. ", 4);
+            fg.tier = SloTier::Interactive;
+            fe.submit(fg);
+            events.extend(pump_all(&mut fe));
+            assert!(
+                events
+                    .iter()
+                    .any(|ev| matches!(ev, ServeEvent::Preempted { id: 0, .. })),
+                "background was never preempted ({eviction:?}, seed {seed})"
+            );
+            assert!(
+                events
+                    .iter()
+                    .any(|ev| matches!(ev, ServeEvent::Resumed { id: 0, .. })),
+                "background never resumed ({eviction:?}, seed {seed})"
+            );
+            assert_eq!(fe.state_of(0), Some(Lifecycle::Finished));
+            assert_eq!(fe.state_of(1), Some(Lifecycle::Finished));
+            drop(fe);
+            assert_eq!(e.pool.pages_in_use(), 0, "snapshot pages leaked");
+            e.pool.validate().expect("pool invariants after preempt/resume");
+            let got = tokens_of(&events, 0);
+            assert_eq!(
+                got, baseline,
+                "preempt/resume diverged from the uninterrupted decode \
+                 ({eviction:?}, seed {seed})"
+            );
+        }
+    }
+}
+
+#[test]
+fn cancel_and_expiry_are_idempotent_with_single_release() {
+    let m = require!(manifest());
+    // double-cancel an active request: the first wins, the second is a
+    // typed no-op, exactly one Cancelled event, one page release
+    let mut e = engine(&m, PolicyKind::TinyServe, 256, 2);
+    let mut plugins = Pipeline::new();
+    let opts = ServeOptions { time_model: TimeModel::Modeled, ..Default::default() };
+    let mut fe = Frontend::builder().options(opts).build(&mut e, &mut plugins);
+    fe.submit(lifecycle_req(0, 0.0, "the river and the stone. ", 24));
+    let mut events = Vec::new();
+    let mut streamed = 0usize;
+    while fe.has_work() && streamed < 2 {
+        for ev in fe.step().expect("step") {
+            if matches!(ev, ServeEvent::Token { .. }) {
+                streamed += 1;
+            }
+            events.push(ev);
+        }
+    }
+    assert!(fe.cancel(0), "first cancel succeeds");
+    assert!(!fe.cancel(0), "second cancel is a no-op on a terminal request");
+    events.extend(pump_all(&mut fe));
+    let cancels = events
+        .iter()
+        .filter(|ev| matches!(ev, ServeEvent::Cancelled { id: 0, .. }))
+        .count();
+    assert_eq!(cancels, 1, "exactly one Cancelled event");
+    assert_eq!(fe.state_of(0), Some(Lifecycle::Cancelled));
+    let r = fe.into_report();
+    assert_eq!(r.metrics.total_cancelled, 1);
+    drop(r);
+    assert_eq!(e.pool.pages_in_use(), 0);
+    e.pool.validate().expect("pool invariants after double cancel");
+
+    // cancel after deadline expiry: the expiry is the request's one
+    // terminal transition — the late cancel must not emit anything or
+    // release pages a second time
+    let mut e2 = engine(&m, PolicyKind::TinyServe, 256, 2);
+    let mut plugins2 = Pipeline::new();
+    let opts2 = ServeOptions { time_model: TimeModel::Modeled, ..Default::default() };
+    let mut fe2 = Frontend::builder().options(opts2).build(&mut e2, &mut plugins2);
+    let mut doomed = lifecycle_req(0, 0.0, "the river and the stone and the light. ", 64);
+    doomed.deadline_ms = Some(0.01);
+    fe2.submit(doomed);
+    let events2 = fe2.drain().expect("drain");
+    assert_eq!(fe2.state_of(0), Some(Lifecycle::Expired));
+    assert!(!fe2.cancel(0), "cancel after expiry is a no-op");
+    let late = fe2.drain().expect("drain after late cancel");
+    let expired_n = events2
+        .iter()
+        .chain(late.iter())
+        .filter(|ev| matches!(ev, ServeEvent::DeadlineExpired { id: 0, .. }))
+        .count();
+    let cancelled_n = events2
+        .iter()
+        .chain(late.iter())
+        .filter(|ev| matches!(ev, ServeEvent::Cancelled { id: 0, .. }))
+        .count();
+    assert_eq!(expired_n, 1, "exactly one DeadlineExpired");
+    assert_eq!(cancelled_n, 0, "no Cancelled event after expiry");
+    let r2 = fe2.into_report();
+    assert_eq!(r2.metrics.total_expired, 1);
+    assert_eq!(r2.metrics.total_cancelled, 0);
+    drop(r2);
+    assert_eq!(e2.pool.pages_in_use(), 0);
+    e2.pool.validate().expect("pool invariants after cancel-post-expiry");
+}
+
+#[test]
+fn preempt_tiered_burst_event_stream_is_deterministic() {
+    // CI preemption gate (TINYSERVE_PREEMPT=1): a preemption-heavy tiered
+    // burst over a 2-worker pool with preemption + stealing enabled must
+    // produce a bit-identical event stream across two full runs; the log
+    // is written for the workflow's cross-process double-run byte-diff.
+    if std::env::var("TINYSERVE_PREEMPT").ok().as_deref() != Some("1") {
+        eprintln!("SKIP: set TINYSERVE_PREEMPT=1 for the preemption gate");
+        return;
+    }
+    let m = require!(manifest());
+    let seed = pallas_seed();
+    let run = || -> String {
+        let pool = WorkerPool::build(&m, &serve_cfg(None), 2, DispatchKind::LeastLoaded)
+            .expect("pool");
+        let opts = ServeOptions {
+            time_model: TimeModel::Modeled,
+            threads: env_threads(),
+            executor: env_executor(),
+            preempt: true,
+            steal: true,
+            batcher: BatcherConfig {
+                max_active: 2,
+                batch_timeout_s: 0.01,
+                prefill_per_round: 2,
+            },
+            seed,
+            ..Default::default()
+        };
+        let mut plugins = Pipeline::new();
+        let mut fe = Frontend::builder().options(opts).build_pool(pool, &mut plugins);
+        // scripted starvation first: two long background requests fill both
+        // admission slots, then an interactive arrival lands already past
+        // the preemptor's wait gate — guaranteeing at least one preemption
+        for i in 0..2u64 {
+            let mut bg = lifecycle_req(
+                1000 + i,
+                0.0,
+                &"the river and the stone and the light. ".repeat(2),
+                48,
+            );
+            bg.tier = SloTier::Background;
+            fe.submit(bg);
+        }
+        let mut events = Vec::new();
+        let mut streamed = 0usize;
+        while fe.has_work() && streamed < 4 {
+            for ev in fe.step().expect("step") {
+                if matches!(ev, ServeEvent::Token { .. }) {
+                    streamed += 1;
+                }
+                events.push(ev);
+            }
+        }
+        let mut fg = lifecycle_req(1002, fe.now() - 1.0, "winter morning. ", 4);
+        fg.tier = SloTier::Interactive;
+        fe.submit(fg);
+        // then a tiered burst through the live open-loop source
+        fe.set_source(Box::new(OpenLoopGen::new(OpenLoopConfig {
+            n_requests: 10,
+            rate_rps: 40.0,
+            process: ArrivalProcess::Gamma { shape: 0.5 },
+            shape: LoadShape::Bursts { period_s: 0.5, burst_s: 0.15, factor: 4.0 },
+            prompt_chars: (100, 300),
+            new_tokens: (4, 8),
+            session_reuse_prob: 0.0,
+            n_sessions: 1,
+            deadline_ms: None,
+            deadline_every: 1,
+            tier_interactive: 0.3,
+            tier_background: 0.4,
+            seed,
+        })));
+        events.extend(pump_all(&mut fe));
+        let (r, pool) = fe.into_parts();
+        assert!(r.batcher_stats.preempted >= 1, "scenario must preempt");
+        for w in 0..pool.len() {
+            assert_eq!(pool.engine(w).pool.pages_in_use(), 0, "worker {w} leak");
+        }
+        event_log(&events)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "preemption event stream must be seed-deterministic");
+    write_ci_log("serve_preempt_tiered.log", &a);
 }

@@ -11,6 +11,7 @@ use tinyserve::kvcache::{
 };
 use tinyserve::sparsity::top_k_indices;
 use tinyserve::util::prop::prop_check;
+use tinyserve::workload::SloTier;
 
 #[test]
 fn prop_pool_alloc_free_balance() {
@@ -176,6 +177,8 @@ fn prop_batcher_conserves_requests() {
                     } else {
                         None
                     },
+                    tier: SloTier::Batch,
+                    preempted: false,
                 });
                 next_id += 1;
                 enqueued += 1;
@@ -259,6 +262,8 @@ fn prop_edf_pop_order_is_total_and_stable() {
                     } else {
                         None
                     },
+                    tier: SloTier::Batch,
+                    preempted: false,
                 }
             })
             .collect();
