@@ -1,14 +1,23 @@
 //! Table 5 — serving synthetic diagnostics (paper §4.9): repetition,
 //! rare-token recall and attention aliasing, per policy, on the trained
-//! model. Char-level accuracy gives the paper's 0-100 scale.
+//! model. Char-level accuracy gives the paper's 0-100 scale. Two
+//! analytics-derived columns ride along: the mean KV page hit rate of the
+//! selection loop and the top-k recall of bbox selection against the
+//! exact-attention oracle (`--audit-selection` machinery, audited every
+//! `AUDIT_EVERY` decode steps).
 
-use tinyserve::harness::{measure_accuracy, scale};
-use tinyserve::report::Table;
+use tinyserve::harness::{measure_accuracy_audited, scale};
+use tinyserve::report::{fmt_pct, Table};
 use tinyserve::runtime::Manifest;
 use tinyserve::sparsity::PolicyKind;
+use tinyserve::util::json::Json;
 use tinyserve::workload::tasks::Task;
 
 const MODEL: &str = "tiny-trained";
+const SEED: u64 = 7;
+/// oracle-audit cadence in decode steps; short answer decodes still get
+/// several audited steps per case
+const AUDIT_EVERY: usize = 2;
 
 fn main() {
     let manifest = Manifest::load(&tinyserve::artifacts_dir()).expect("artifacts");
@@ -22,20 +31,65 @@ fn main() {
     ];
     let mut t = Table::new(
         &format!("Table 5: serving diagnostics ({MODEL}, n={n} per cell, char acc %)"),
-        &["policy", "Repetition", "Rare Token", "Aliasing"],
+        &[
+            "policy",
+            "Repetition",
+            "Rare Token",
+            "Aliasing",
+            "KV hit %",
+            "selection recall %",
+        ],
     );
     for &policy in &policies {
         let mut cells = vec![policy.name().to_string()];
+        let mut hit_sum = 0.0f64;
+        let mut hit_n = 0usize;
+        let mut recalls: Vec<f64> = Vec::new();
         for &task in &diags {
-            match measure_accuracy(&manifest, MODEL, policy, task, n, 600, 256, 7) {
-                Ok(r) => cells.push(format!("{:.1}", r.char_acc * 100.0)),
+            match measure_accuracy_audited(
+                &manifest,
+                MODEL,
+                policy,
+                task,
+                n,
+                600,
+                256,
+                SEED,
+                AUDIT_EVERY,
+            ) {
+                Ok(r) => {
+                    cells.push(format!("{:.1}", r.char_acc * 100.0));
+                    hit_sum += r.hit_rate;
+                    hit_n += 1;
+                    recalls.extend(r.selection_recall);
+                }
                 Err(e) => {
                     eprintln!("skip {:?}/{:?}: {e}", policy, task);
                     cells.push("-".into());
                 }
             }
         }
+        cells.push(if hit_n > 0 {
+            fmt_pct(hit_sum / hit_n as f64)
+        } else {
+            "-".into()
+        });
+        cells.push(if recalls.is_empty() {
+            "-".into()
+        } else {
+            fmt_pct(recalls.iter().sum::<f64>() / recalls.len() as f64)
+        });
         t.row(cells);
     }
     t.emit(&tinyserve::results_dir(), "table5_diagnostics");
+    t.emit_bench(
+        &tinyserve::results_dir(),
+        "table5",
+        vec![
+            ("model", Json::from(MODEL)),
+            ("seed", Json::from(SEED as usize)),
+            ("n_cases", Json::from(n)),
+            ("audit_every", Json::from(AUDIT_EVERY)),
+        ],
+    );
 }

@@ -230,6 +230,18 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Fresh-intake queue depth per SLO tier, indexed by `SloTier::rank()`
+    /// (interactive, batch, background). Preempted requeues are excluded
+    /// like `queued_new_len` — the live `stats` op reports intake
+    /// pressure, not load the preemptor created itself.
+    pub fn queued_by_tier(&self) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for i in self.queue.iter().filter(|i| !i.preempted) {
+            out[(i.tier.rank() as usize).min(2)] += 1;
+        }
+        out
+    }
+
     pub fn active(&self) -> usize {
         self.active
     }

@@ -90,7 +90,9 @@ use crate::workload::{tasks, Request, RequestSource};
 use super::batcher::{Batcher, BatcherConfig, QueuedItem, Round};
 use super::pool::{WorkerPool, WorkerStats};
 use super::router::Router;
-use super::server::{ServeOptions, ServeReport, TimeModel};
+use super::server::{
+    AnalyticsSummary, LiveStats, ServeOptions, ServeReport, TimeModel, WorkerKv,
+};
 use super::session::{SessionStats, SessionStore};
 
 /// Discrete-event virtual clock. Arrivals advance it to their timestamps;
@@ -275,6 +277,7 @@ pub struct FrontendBuilder {
     source: Option<Box<dyn RequestSource>>,
     tracer: Option<Tracer>,
     metrics_sink: Option<Box<dyn TraceSink>>,
+    analytics_sink: Option<Box<dyn TraceSink>>,
 }
 
 impl FrontendBuilder {
@@ -306,6 +309,14 @@ impl FrontendBuilder {
         self
     }
 
+    /// Attach the cache-analytics sink (`--analytics-out`): per-worker
+    /// `trace::analytics` snapshots drain here at the commit seam. Implies
+    /// `ServeOptions::analytics` recorders on every engine.
+    pub fn analytics_sink(mut self, sink: Box<dyn TraceSink>) -> Self {
+        self.analytics_sink = Some(sink);
+        self
+    }
+
     /// Single borrowed engine: a one-slot pool, code-path-identical to the
     /// multi-worker frontend with `workers = 1`.
     pub fn build<'a>(
@@ -331,6 +342,9 @@ impl FrontendBuilder {
         }
         if let Some(s) = self.metrics_sink {
             fe.set_metrics_sink(s);
+        }
+        if let Some(s) = self.analytics_sink {
+            fe.set_analytics_sink(s);
         }
         fe
     }
@@ -365,6 +379,12 @@ struct Active {
     /// preemption in the stash, and travels with the request when it is
     /// migrated or stolen across workers
     pipeline: Pipeline,
+    /// committed rounds since this request last produced a token (stall
+    /// watchdog input; survives preemption in the stash)
+    rounds_since_progress: u64,
+    /// the watchdog already fired for the current stall episode — the
+    /// `stalled` event is edge-triggered, re-armed by the next token
+    stall_flagged: bool,
 }
 
 /// The request-lifecycle serving frontend (see module docs).
@@ -406,6 +426,9 @@ pub struct Frontend<'a> {
     /// metrics time-series sink (`--metrics-every`); snapshots emitted at
     /// decode-round commit points
     metrics_sink: Option<Box<dyn TraceSink>>,
+    /// cache-analytics sink (`--analytics-out`); per-worker recorder
+    /// snapshots drain here serially in worker order at the commit seam
+    analytics_sink: Option<Box<dyn TraceSink>>,
     /// committed decode rounds so far (trace round ids, snapshot cadence)
     round_idx: u64,
     /// executor phase profile (`ServeOptions::profile`)
@@ -441,6 +464,13 @@ impl<'a> Frontend<'a> {
         // counters — `busy_frac` and `utilization` divide them by THIS
         // run's clock
         pool.stats = vec![WorkerStats::default(); n];
+        // analytics recorders belong to the engines (the decode loop feeds
+        // them), so attach them before the first round
+        if opts.analytics {
+            for w in 0..n {
+                pool.engine_mut(w).enable_analytics(opts.audit_every);
+            }
+        }
         // the configured active cap is per worker: the global batcher cap
         // is min(opts cap, engine cap) * n, so pools actually scale their
         // admissible concurrency — a one-slot pool reduces to the classic
@@ -479,6 +509,7 @@ impl<'a> Frontend<'a> {
             source: None,
             tracer: Tracer::off(),
             metrics_sink: None,
+            analytics_sink: None,
             round_idx: 0,
             profile,
             events: VecDeque::new(),
@@ -514,6 +545,42 @@ impl<'a> Frontend<'a> {
     pub fn set_metrics_sink(&mut self, mut sink: Box<dyn TraceSink>) {
         sink.emit(&self.run_header().to_line());
         self.metrics_sink = Some(sink);
+    }
+
+    /// Attach the cache-analytics sink (`--analytics-out`); like the
+    /// metrics stream, the run header is its first line. Engines that do
+    /// not already carry a recorder get one, so a sink attached without
+    /// `ServeOptions::analytics` still produces a stream.
+    pub fn set_analytics_sink(&mut self, mut sink: Box<dyn TraceSink>) {
+        sink.emit(&self.run_header().to_line());
+        for w in 0..self.pool.len() {
+            if self.pool.engine(w).analytics().is_none() {
+                self.pool.engine_mut(w).enable_analytics(self.opts.audit_every);
+            }
+        }
+        self.analytics_sink = Some(sink);
+    }
+
+    /// Drain every worker's analytics recorder into the sink, serially in
+    /// worker order — called only at commit seams (and shutdown), so the
+    /// snapshot interleaving is identical however the step phase executed
+    /// and the stream byte-diffs across executor kinds/widths.
+    fn drain_analytics(&mut self) {
+        if self.analytics_sink.is_none() {
+            return;
+        }
+        let (round, t) = (self.round_idx, self.clock.now());
+        let mut lines = Vec::new();
+        for w in 0..self.pool.len() {
+            if let Some(an) = self.pool.engine_mut(w).analytics_mut() {
+                an.snapshot_into(w, round, t, &mut lines);
+            }
+        }
+        if let Some(s) = self.analytics_sink.as_mut() {
+            for l in &lines {
+                s.emit(l);
+            }
+        }
     }
 
     /// Run-identifying header shared by the trace and metrics streams.
@@ -738,6 +805,24 @@ impl<'a> Frontend<'a> {
         if let Some(s) = self.metrics_sink.as_mut() {
             s.flush();
         }
+        // final analytics drain: cumulative summaries plus any audit
+        // records and residency entries still buffered since the last
+        // cadence snapshot
+        self.drain_analytics();
+        if let Some(s) = self.analytics_sink.as_mut() {
+            s.flush();
+        }
+        let analytics: Vec<AnalyticsSummary> = (0..self.pool.len())
+            .filter_map(|w| {
+                self.pool.engine(w).analytics().map(|an| AnalyticsSummary {
+                    worker: w,
+                    accesses: an.accesses(),
+                    hit_rate: an.hit_rate(),
+                    audit_records: an.audit_records(),
+                    mean_recall: an.mean_recall(),
+                })
+            })
+            .collect();
         // surviving preemption snapshots give their pages back before the
         // session stores clear, mirroring the cancel/expiry release path
         for mut a in std::mem::take(&mut self.preempted) {
@@ -784,6 +869,7 @@ impl<'a> Frontend<'a> {
             busy_frac: if now > 0.0 { busy / now } else { 0.0 },
             worker_stats: self.pool.stats.clone(),
             profile: self.profile,
+            analytics,
         };
         (report, self.pool)
     }
@@ -1117,6 +1203,8 @@ impl<'a> Frontend<'a> {
                 worker: decision.worker,
                 engine_idx: w,
                 pipeline: self.plugins.fork(),
+                rounds_since_progress: 0,
+                stall_flagged: false,
             });
         }
         // deferred items go back to the batcher at their EDF positions
@@ -1653,8 +1741,9 @@ impl<'a> Frontend<'a> {
                 let a = &mut self.active[i];
                 if a.first_token_s.is_none() {
                     a.first_token_s = Some(now);
+                    let req = &self.reqs[a.req_idx];
                     self.metrics
-                        .on_first_token(now - self.reqs[a.req_idx].arrival_s);
+                        .on_first_token(now - req.arrival_s, req.tier);
                 }
                 self.events.push_back(ServeEvent::Token {
                     id: self.reqs[a.req_idx].id,
@@ -1684,6 +1773,40 @@ impl<'a> Frontend<'a> {
                         self.pool.engine_mut(*w).prune_coldest(seq)
                     }
                     PluginAction::Continue => {}
+                }
+            }
+        }
+        // stall watchdog (`--stall-rounds N`): evaluated at every commit
+        // over the whole active set in index order — a request outside
+        // this round's batch window made no progress by definition. The
+        // event is edge-triggered per episode; the next token re-arms it.
+        if self.opts.stall_rounds > 0 {
+            let mut progressed = vec![false; self.active.len()];
+            for (_, idxs, outs) in &rounds {
+                for (&i, _) in idxs.iter().zip(outs.iter()) {
+                    progressed[i] = true;
+                }
+            }
+            for (i, a) in self.active.iter_mut().enumerate() {
+                if progressed[i] {
+                    a.rounds_since_progress = 0;
+                    a.stall_flagged = false;
+                    continue;
+                }
+                a.rounds_since_progress += 1;
+                if a.rounds_since_progress >= self.opts.stall_rounds as u64
+                    && !a.stall_flagged
+                {
+                    a.stall_flagged = true;
+                    self.metrics.on_stalled();
+                    if self.tracer.enabled() {
+                        self.tracer.emit(&TraceEvent::Stalled {
+                            id: self.reqs[a.req_idx].id,
+                            worker: a.engine_idx,
+                            rounds: a.rounds_since_progress,
+                            t: now,
+                        });
+                    }
                 }
             }
         }
@@ -1760,6 +1883,14 @@ impl<'a> Frontend<'a> {
                 s.emit(&line);
             }
         }
+        // analytics snapshots ride the same cadence (a final drain at
+        // shutdown covers `--metrics-every 0` runs)
+        if self.analytics_sink.is_some()
+            && self.opts.metrics_every > 0
+            && self.round_idx % self.opts.metrics_every as u64 == 0
+        {
+            self.drain_analytics();
+        }
         if self.profile.is_some() {
             let commit_s = t_commit.elapsed().as_secs_f64();
             let round = self.round_idx - 1;
@@ -1796,6 +1927,7 @@ impl<'a> Frontend<'a> {
         r.counter("requests_resumed", m.total_resumed);
         r.counter("requests_migrated", m.total_migrated);
         r.counter("requests_stolen", m.total_stolen);
+        r.counter("requests_stalled", m.total_stalled);
         r.counter("gather_bytes", m.total_gather_bytes);
         r.counter("demotions", m.total_demotions);
         r.counter("promotions", m.total_promotions);
@@ -1808,9 +1940,78 @@ impl<'a> Frontend<'a> {
         r.gauge("kv_bytes_peak", m.kv_bytes_peak as f64);
         r.gauge("active_requests", self.active.len() as f64);
         r.gauge("queued_requests", self.batcher.queue_len() as f64);
+        // burn-rate gauges: virtual-clock throughput, deterministic under
+        // modeled time (wall-measured rates never enter this registry)
+        let wall = self.clock.now();
+        let rate = |v: u64| if wall > 0.0 { v as f64 / wall } else { 0.0 };
+        r.gauge("token_burn_rate", rate(m.total_new_tokens));
+        r.gauge("request_burn_rate", rate(m.total_requests));
+        // per-SLO-tier TTFT-target attainment (fraction of first tokens
+        // inside the tier's target; 0 before the tier's first token)
+        for tier in crate::workload::SloTier::all() {
+            let name = match tier.rank() {
+                0 => "ttft_attainment_interactive",
+                1 => "ttft_attainment_batch",
+                _ => "ttft_attainment_background",
+            };
+            r.gauge(name, m.ttft_attainment(tier).unwrap_or(0.0));
+        }
         r.histogram("ttft_seconds", &m.ttft_hist);
         r.histogram("token_latency_seconds", &m.token_lat_hist);
+        r.help("steps", "committed decode rounds");
+        r.help("kv_bytes_in_use", "resident KV bytes across pool workers");
+        r.help("requests_stalled", "stall-watchdog firings (no token progress)");
+        r.help("token_burn_rate", "new tokens per virtual second");
+        r.help("request_burn_rate", "finished requests per virtual second");
+        r.help(
+            "ttft_attainment_interactive",
+            "fraction of interactive-tier first tokens inside the TTFT target",
+        );
+        r.help(
+            "ttft_attainment_batch",
+            "fraction of batch-tier first tokens inside the TTFT target",
+        );
+        r.help(
+            "ttft_attainment_background",
+            "fraction of background-tier first tokens inside the TTFT target",
+        );
         r
+    }
+
+    /// Live introspection snapshot: the payload behind the wire-level
+    /// `stats` op (proto schema 3). Taken between rounds on the pump
+    /// thread, so queue depths, lifecycle counts, per-worker residency and
+    /// attainment are mutually consistent. The network front door merges
+    /// its own net_* shed counters on top.
+    pub fn live_stats(&self) -> LiveStats {
+        let workers = (0..self.pool.len())
+            .map(|w| {
+                let eng = self.pool.engine(w);
+                let (hot, cold, disk) = eng.store.tier_residency();
+                WorkerKv {
+                    kv_bytes_in_use: eng.store.bytes_in_use(&eng.pool) as u64,
+                    pages_hot: hot as u64,
+                    pages_cold: cold as u64,
+                    pages_disk: disk as u64,
+                }
+            })
+            .collect();
+        let deferred = self
+            .state
+            .iter()
+            .filter(|s| matches!(s, Lifecycle::Deferred))
+            .count() as u64;
+        LiveStats {
+            t: self.clock.now(),
+            queued_by_tier: self.batcher.queued_by_tier(),
+            active: self.active.len() as u64,
+            preempted: self.preempted.len() as u64,
+            deferred,
+            workers,
+            ttft_attained: self.metrics.ttft_attained,
+            ttft_total: self.metrics.ttft_tier_total,
+            stalled: self.metrics.total_stalled,
+        }
     }
 }
 

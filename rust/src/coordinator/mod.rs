@@ -24,5 +24,7 @@ pub use pool::{
 pub use router::Router;
 #[allow(deprecated)]
 pub use server::serve_trace;
-pub use server::{ServeOptions, ServeReport, TimeModel};
+pub use server::{
+    AnalyticsSummary, LiveStats, ServeOptions, ServeReport, TimeModel, WorkerKv,
+};
 pub use session::SessionStore;

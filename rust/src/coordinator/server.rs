@@ -89,6 +89,18 @@ pub struct ServeOptions {
     /// commit-seam work stealing (`--steal`): an idle pool worker ports
     /// one sequence from the most loaded worker's batch
     pub steal: bool,
+    /// attach per-worker cache-analytics recorders (`--analytics-out`):
+    /// snapshots drain to the frontend's analytics sink every
+    /// `metrics_every` rounds (or only at shutdown when that is 0)
+    pub analytics: bool,
+    /// audit bbox selection against the exact-attention oracle every N
+    /// engine decode steps (`--audit-selection N`; 0 = off, requires
+    /// `analytics`)
+    pub audit_every: usize,
+    /// stall watchdog (`--stall-rounds N`): emit a `stalled` trace event +
+    /// counter when an Active request makes no token progress for N
+    /// consecutive committed rounds (0 = off)
+    pub stall_rounds: usize,
 }
 
 impl Default for ServeOptions {
@@ -108,6 +120,9 @@ impl Default for ServeOptions {
             profile: false,
             preempt: false,
             steal: false,
+            analytics: false,
+            audit_every: 0,
+            stall_rounds: 0,
         }
     }
 }
@@ -117,6 +132,56 @@ impl ServeOptions {
     pub fn round_executor(&self) -> super::pool::RoundExecutor {
         self.executor.executor(self.threads)
     }
+}
+
+/// Per-worker cache-analytics summary attached to the serve report when
+/// `ServeOptions::analytics` ran (see `trace::analytics`).
+#[derive(Debug, Clone)]
+pub struct AnalyticsSummary {
+    pub worker: usize,
+    /// page accesses recorded by the decode selection loop
+    pub accesses: u64,
+    /// fraction of accesses that found their page hot
+    pub hit_rate: f64,
+    /// selection-quality audit records (`--audit-selection N`)
+    pub audit_records: u64,
+    /// overall top-k recall of bbox selection vs the exact-attention
+    /// oracle; `None` when no audit ran
+    pub mean_recall: Option<f64>,
+}
+
+/// One worker's KV residency inside a [`LiveStats`] snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerKv {
+    pub kv_bytes_in_use: u64,
+    pub pages_hot: u64,
+    pub pages_cold: u64,
+    pub pages_disk: u64,
+}
+
+/// Live introspection snapshot of a running frontend: the payload behind
+/// the wire-level `stats` op (proto schema 3). Every field is read off the
+/// pump thread between rounds, so the numbers are mutually consistent.
+/// Tier-indexed arrays follow `SloTier::rank()` order (interactive, batch,
+/// background).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LiveStats {
+    /// virtual clock at snapshot time
+    pub t: f64,
+    /// admission-queue depth per SLO tier (new intake, not preempted
+    /// requeues)
+    pub queued_by_tier: [u64; 3],
+    pub active: u64,
+    pub preempted: u64,
+    pub deferred: u64,
+    /// per-pool-worker KV residency
+    pub workers: Vec<WorkerKv>,
+    /// per-tier first tokens that met the tier's TTFT target
+    pub ttft_attained: [u64; 3],
+    /// per-tier first tokens observed
+    pub ttft_total: [u64; 3],
+    /// stall-watchdog firings so far
+    pub stalled: u64,
 }
 
 #[derive(Debug)]
@@ -141,6 +206,9 @@ pub struct ServeReport {
     pub worker_stats: Vec<WorkerStats>,
     /// executor phase wall-time profile (`ServeOptions::profile`)
     pub profile: Option<crate::trace::PhaseProfile>,
+    /// per-worker cache-analytics summary (`ServeOptions::analytics`);
+    /// empty when analytics never ran
+    pub analytics: Vec<AnalyticsSummary>,
 }
 
 /// Run a full trace through the engine: submit every request up front,

@@ -30,6 +30,7 @@ use crate::kvcache::{PagePool, PageStore, SeqCache, StoreStats};
 use crate::metrics::StepMetrics;
 use crate::runtime::{ArtifactInfo, Input, Manifest, ModelRuntime};
 use crate::sparsity::{make_policy, Policy, PolicyKind, SelectCtx};
+use crate::trace::{AccessTier, AnalyticsRecorder};
 use crate::util::rng::Rng;
 
 pub use sample::{sample, SampleOut, Sampling};
@@ -112,6 +113,12 @@ pub struct Engine {
     /// between-step work (prefill enforcement, admission) are charged to
     /// the next step instead of dropped
     stats_reported: StoreStats,
+    /// optional cache analytics (attached when `--analytics-out` is set);
+    /// boxed so disabled engines pay one pointer
+    analytics: Option<Box<AnalyticsRecorder>>,
+    /// audit bbox selection against the exact-attention oracle every N
+    /// engine decode steps (0 = off)
+    audit_every: usize,
     next_id: u64,
 }
 
@@ -185,6 +192,8 @@ impl Engine {
             logits_buf: vec![0.0; max_b * info.vocab],
             sel_scratch: Vec::new(),
             stats_reported: StoreStats::default(),
+            analytics: None,
+            audit_every: 0,
             arts,
             batch_variants,
             rt,
@@ -251,6 +260,23 @@ impl Engine {
     /// allocate outside the decode path.
     pub fn enforce_kv_budget(&mut self) {
         self.store.enforce_budget(&mut self.pool);
+    }
+
+    /// Attach a cache-analytics recorder (`trace::analytics`). With
+    /// `audit_every > 0`, every Nth engine decode step also scores every
+    /// page with the exact-attention oracle and records the top-k overlap
+    /// of the policy's selection per layer.
+    pub fn enable_analytics(&mut self, audit_every: usize) {
+        self.analytics = Some(Box::new(AnalyticsRecorder::new()));
+        self.audit_every = audit_every;
+    }
+
+    pub fn analytics(&self) -> Option<&AnalyticsRecorder> {
+        self.analytics.as_deref()
+    }
+
+    pub fn analytics_mut(&mut self) -> Option<&mut AnalyticsRecorder> {
+        self.analytics.as_deref_mut()
     }
 
     /// Admission-control check: can a prompt of `prompt_tokens` be brought
@@ -336,6 +362,15 @@ impl Engine {
         let qkv_art = self.art("qkv", b).clone();
         let post_art = self.art("post", b).clone();
 
+        // selection-quality audit cadence: every `audit_every`th engine
+        // step (engine-local step counter, so the decision is independent
+        // of executor kind/width)
+        let audit_step = self.audit_every > 0
+            && self
+                .analytics
+                .as_ref()
+                .is_some_and(|a| a.step() % self.audit_every as u64 == 0);
+
         for layer in 0..self.n_layer {
             // ---- qkv ----
             let out = self.rt.run(
@@ -404,6 +439,33 @@ impl Engine {
                     cur.iter().filter(|bp| prev.binary_search(bp).is_ok()).count();
                 cur.sort_unstable();
                 std::mem::swap(prev, &mut cur);
+
+                // cache analytics: record tier-at-access for every selected
+                // page (before the promotion below rewrites it), plus the
+                // optional exact-attention oracle audit
+                if let Some(an) = self.analytics.as_deref_mut() {
+                    for &tidx in sel.iter() {
+                        let id = cache.pages[tidx].id;
+                        let tier = if !budgeted || self.store.is_hot(id) {
+                            AccessTier::Hot
+                        } else if self.store.is_on_disk(id) {
+                            AccessTier::Disk
+                        } else {
+                            AccessTier::Cold
+                        };
+                        an.on_access(id as u64, tier);
+                    }
+                    if audit_step && !sel.is_empty() {
+                        let q = &self.qbuf[i * d_kv..(i + 1) * d_kv];
+                        let oracle =
+                            oracle_topk(q, cache, &self.pool, layer, sel.len());
+                        let overlap = sel
+                            .iter()
+                            .filter(|&&tx| oracle.binary_search(&tx).is_ok())
+                            .count();
+                        an.on_audit(layer, sel.len(), overlap);
+                    }
+                }
 
                 // residency: promote selected cold pages (and fault
                 // disk-spilled ones) back before the gather — counts the
@@ -542,6 +604,9 @@ impl Engine {
         }
         self.collect_store_stats(m);
         let (hot, cold, disk) = self.store.tier_residency();
+        if let Some(an) = self.analytics.as_deref_mut() {
+            an.on_step_end(hot, cold, disk);
+        }
         m.pages_hot = hot;
         m.pages_cold = cold;
         m.pages_disk = disk;
@@ -628,4 +693,47 @@ impl Engine {
             seq.tokens.push((rng.usize(255)) as i32);
         }
     }
+}
+
+/// Exact-attention oracle page ranking for the selection audit: score
+/// every page by the max over its filled slots of `dot(q, k_slot)` and
+/// return the indices (into `cache.pages`) of the top-`k`, sorted
+/// ascending. Ties break toward earlier pages so the ranking is fully
+/// deterministic. Cold pages are dequantized by `key_row`; disk-resident
+/// slots read back as zeros — the audit deliberately charges the policy
+/// for pages it let spill out of reach.
+fn oracle_topk(
+    q: &[f32],
+    cache: &SeqCache,
+    pool: &PagePool,
+    layer: usize,
+    k: usize,
+) -> Vec<usize> {
+    let mut scored: Vec<(usize, f32)> = Vec::with_capacity(cache.n_pages());
+    for (tidx, e) in cache.pages.iter().enumerate() {
+        let is_last = tidx + 1 == cache.n_pages();
+        let n_slots = if is_last {
+            cache.pos - e.base_pos + 1
+        } else {
+            pool.filled(e.id)
+        };
+        let mut best = f32::NEG_INFINITY;
+        for sl in 0..n_slots {
+            let krow = pool.key_row(e.id, layer, sl);
+            let dot: f32 = q.iter().zip(krow.iter()).map(|(a, b)| a * b).sum();
+            if dot > best {
+                best = dot;
+            }
+        }
+        scored.push((tidx, best));
+    }
+    scored.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    scored.truncate(k);
+    let mut idx: Vec<usize> = scored.into_iter().map(|(i, _)| i).collect();
+    idx.sort_unstable();
+    idx
 }

@@ -156,6 +156,9 @@ pub struct AccuracyMeasurement {
     pub n: usize,
     pub ms_per_token: f64,
     pub hit_rate: f64,
+    /// top-k recall of bbox page selection vs the exact-attention oracle
+    /// (`measure_accuracy_audited`); `None` when no audit ran
+    pub selection_recall: Option<f64>,
 }
 
 /// Task accuracy for one policy on the trained model: real prefill + greedy
@@ -170,6 +173,36 @@ pub fn measure_accuracy(
     budget: usize,
     seed: u64,
 ) -> Result<AccuracyMeasurement> {
+    measure_accuracy_audited(
+        manifest,
+        model,
+        policy,
+        task,
+        n_cases,
+        prompt_chars,
+        budget,
+        seed,
+        0,
+    )
+}
+
+/// `measure_accuracy` plus the selection-quality audit: every
+/// `audit_every`-th decode step scores bbox selection against the
+/// exact-attention oracle (0 = no audit, identical to `measure_accuracy`).
+/// Kept separate because the oracle runs inside `decode_step` and would
+/// otherwise pollute the latency columns of non-audited tables.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_accuracy_audited(
+    manifest: &Manifest,
+    model: &str,
+    policy: PolicyKind,
+    task: Task,
+    n_cases: usize,
+    prompt_chars: usize,
+    budget: usize,
+    seed: u64,
+    audit_every: usize,
+) -> Result<AccuracyMeasurement> {
     let cfg = ServingConfig {
         model: model.to_string(),
         policy,
@@ -178,6 +211,9 @@ pub fn measure_accuracy(
         ..Default::default()
     };
     let mut engine = Engine::from_manifest(manifest, cfg)?;
+    if audit_every > 0 {
+        engine.enable_analytics(audit_every);
+    }
     let mut rng = Rng::new(seed);
     let mut task_rng = Rng::new(seed ^ 0x5eed);
     let mut exact = 0usize;
@@ -213,6 +249,7 @@ pub fn measure_accuracy(
         n: n_cases,
         ms_per_token: lat.mean() * 1e3,
         hit_rate: hits / hit_n.max(1) as f64,
+        selection_recall: engine.analytics().and_then(|a| a.mean_recall()),
     })
 }
 

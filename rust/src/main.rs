@@ -241,8 +241,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // registry every N decode rounds into --metrics-out (default
     // metrics.jsonl); --prom-out PATH dumps a one-shot Prometheus-style
     // exposition at end of run; --profile records executor phase wall
-    // times and prints the table. Under --modeled-time the trace and
-    // metrics streams are byte-deterministic from the seed.
+    // times and prints the table; --analytics-out PATH streams per-worker
+    // cache-analytics snapshots (reuse distances, page ranks, tier
+    // residency), with --audit-selection N adding an exact-attention
+    // selection audit every Nth decode step; --stall-rounds N arms the
+    // no-progress watchdog. Under --modeled-time the trace, metrics and
+    // analytics streams are byte-deterministic from the seed.
     let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
     let metrics_every = args.usize_or("metrics-every", 0);
     let metrics_out = args.get("metrics-out").map(std::path::PathBuf::from);
@@ -253,6 +257,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "--metrics-out requires --metrics-every N (the snapshot cadence in \
          decode rounds; without a cadence no snapshot would ever be written)"
     );
+    let analytics_out = args.get("analytics-out").map(std::path::PathBuf::from);
+    let audit_every = args.usize_or("audit-selection", 0);
+    anyhow::ensure!(
+        audit_every == 0 || analytics_out.is_some(),
+        "--audit-selection requires --analytics-out PATH (audit records ride \
+         the analytics stream; without a sink they would be computed and \
+         dropped)"
+    );
+    let stall_rounds = args.usize_or("stall-rounds", 0);
     let n_requests = args.usize_or("requests", 32);
     let seed = args.usize_or("seed", 42) as u64;
     let interarrival_ms = args.f64_or("interarrival-ms", 50.0);
@@ -287,6 +300,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // adopt a preempted snapshot at the commit seam
         preempt: args.bool("preempt"),
         steal: args.bool("steal"),
+        analytics: analytics_out.is_some(),
+        audit_every,
+        stall_rounds,
         ..Default::default()
     };
     let mut plugins = Pipeline::new();
@@ -303,6 +319,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let sink = FileSink::create(&p)
             .map_err(|e| anyhow::anyhow!("--metrics-out {}: {e}", p.display()))?;
         builder = builder.metrics_sink(Box::new(sink));
+    }
+    if let Some(p) = &analytics_out {
+        let sink = FileSink::create(p)
+            .map_err(|e| anyhow::anyhow!("--analytics-out {}: {e}", p.display()))?;
+        builder = builder.analytics_sink(Box::new(sink));
     }
     let mut fe = builder.build_pool(pool, &mut plugins);
     // network mode: TCP clients supply the workload and the server owns
@@ -391,6 +412,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let Some(p) = &trace_out {
         println!("trace -> {}", p.display());
+    }
+    if let Some(p) = &analytics_out {
+        println!("analytics -> {}", p.display());
     }
     if let Some(s) = &net_stats {
         println!(
@@ -498,6 +522,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for (task, acc, n) in &r.per_task {
         println!("  task {task:10} acc {:.0}%  (n={n})", acc * 100.0);
     }
+    // selection-quality audit: per-worker page-access hit rate and (when
+    // --audit-selection ran) top-k recall of bbox selection vs the
+    // exact-attention oracle
+    if !r.analytics.is_empty() {
+        if m.total_stalled > 0 {
+            println!("stall watchdog      fired {} times", m.total_stalled);
+        }
+        for a in &r.analytics {
+            match a.mean_recall {
+                Some(rec) => println!(
+                    "  analytics w{}      accesses {}  hit {:.1}%  \
+                     selection recall {:.1}%  (audits {})",
+                    a.worker,
+                    a.accesses,
+                    a.hit_rate * 100.0,
+                    rec * 100.0,
+                    a.audit_records
+                ),
+                None => println!(
+                    "  analytics w{}      accesses {}  hit {:.1}%",
+                    a.worker,
+                    a.accesses,
+                    a.hit_rate * 100.0
+                ),
+            }
+        }
+    }
     if let Some(p) = &r.profile {
         print!("{}", p.table());
     }
@@ -593,7 +644,9 @@ fn main() -> Result<()> {
                  [--preempt] [--steal] \
                  [--tier-interactive P] [--tier-background P] \
                  [--trace-out T.jsonl] [--metrics-every N] \
-                 [--metrics-out M.jsonl] [--prom-out P.txt] [--profile] ..."
+                 [--metrics-out M.jsonl] [--prom-out P.txt] [--profile] \
+                 [--analytics-out A.jsonl] [--audit-selection N] \
+                 [--stall-rounds N] ..."
             );
             std::process::exit(2);
         }
@@ -698,6 +751,17 @@ mod tests {
             .to_string();
         assert!(
             e.contains("--metrics-out") && e.contains("--metrics-every"),
+            "error must name the expected flag pairing: {e}"
+        );
+    }
+
+    #[test]
+    fn audit_selection_without_analytics_out_is_rejected_with_pairing() {
+        let e = cmd_serve(&args("serve --audit-selection 8"))
+            .unwrap_err()
+            .to_string();
+        assert!(
+            e.contains("--audit-selection") && e.contains("--analytics-out"),
             "error must name the expected flag pairing: {e}"
         );
     }

@@ -120,19 +120,23 @@ impl StepMetrics {
 
     /// Page-level cache hit rate for this step (paper "KV Hit %"):
     /// fraction of this step's selected pages that were already hot.
+    /// A step that selected nothing has no hits to report: 0.0, never
+    /// NaN and never a phantom 100% (aggregators skip these steps).
     pub fn hit_rate(&self) -> f64 {
         if self.pages_selected == 0 {
-            return 1.0;
+            return 0.0;
         }
         self.pages_reused as f64 / self.pages_selected as f64
     }
 
     /// Residency hit rate of the budgeted store: fraction of selected
-    /// pages that did not need promotion from the cold tier.
+    /// pages that did not need promotion from the cold tier. Zero-activity
+    /// steps report 0.0 (not NaN); `ServerMetrics::on_step` already skips
+    /// them when averaging.
     pub fn residency_hit_rate(&self) -> f64 {
         let total = self.store_hits + self.store_misses;
         if total == 0 {
-            return 1.0;
+            return 0.0;
         }
         self.store_hits as f64 / total as f64
     }
@@ -214,6 +218,9 @@ pub struct ServerMetrics {
     pub total_migrated: u64,
     /// actives moved to an idle worker at the commit seam
     pub total_stolen: u64,
+    /// stall-watchdog firings: an Active made no token progress for the
+    /// configured number of committed rounds (edge-triggered per episode)
+    pub total_stalled: u64,
     pub total_gather_bytes: u64,
     // --- budgeted page-store residency aggregation ---
     /// mean over steps with store activity (hits + misses > 0)
@@ -239,6 +246,11 @@ pub struct ServerMetrics {
     /// budget is enforceable — the serving invariant)
     pub budget_violations: u64,
     pub run_seconds: f64,
+    // --- per-SLO-tier TTFT-target attainment (indexed by SloTier::rank) ---
+    /// first tokens whose TTFT met the tier's target (`ttft_target_s`)
+    pub ttft_attained: [u64; 3],
+    /// first tokens observed per tier (attainment denominator)
+    pub ttft_tier_total: [u64; 3],
     /// per-step bandwidth trace (bytes gathered each step) for Figure 7
     pub bandwidth_trace: Vec<f64>,
     /// per-step hit-rate trace for Figure 6
@@ -271,6 +283,7 @@ impl Default for ServerMetrics {
             total_resumed: 0,
             total_migrated: 0,
             total_stolen: 0,
+            total_stalled: 0,
             total_gather_bytes: 0,
             residency_hit_rate: Welford::default(),
             kv_bytes: Welford::default(),
@@ -287,6 +300,8 @@ impl Default for ServerMetrics {
             disk_pages_peak: 0,
             budget_violations: 0,
             run_seconds: 0.0,
+            ttft_attained: [0; 3],
+            ttft_tier_total: [0; 3],
             bandwidth_trace: Vec::new(),
             hit_trace: Vec::new(),
             trace_enabled: false,
@@ -306,7 +321,9 @@ impl ServerMetrics {
         if m.batch > 0 {
             self.token_latency.push(m.step_seconds / m.batch as f64);
         }
-        self.hit_rate.push(m.hit_rate());
+        if m.pages_selected > 0 {
+            self.hit_rate.push(m.hit_rate());
+        }
         self.gather_bytes_per_step.push(m.gather_bytes as f64);
         self.total_gather_bytes += m.gather_bytes as u64;
         if m.store_hits + m.store_misses > 0 {
@@ -343,10 +360,27 @@ impl ServerMetrics {
 
     /// A request's first token surfaced (the frontend sees it as a `Token`
     /// event). TTFT is recorded here rather than at completion so requests
-    /// that stream a prefix and then get cancelled still count.
-    pub fn on_first_token(&mut self, ttft_s: f64) {
+    /// that stream a prefix and then get cancelled still count. The tier
+    /// feeds the per-SLO-class attainment rate: attained iff the TTFT met
+    /// the tier's `ttft_target_s` target.
+    pub fn on_first_token(&mut self, ttft_s: f64, tier: crate::workload::SloTier) {
         self.request_ttft.push(ttft_s);
         self.ttft_hist.push(ttft_s);
+        let r = tier.rank().min(2);
+        self.ttft_tier_total[r] += 1;
+        if ttft_s <= tier.ttft_target_s() {
+            self.ttft_attained[r] += 1;
+        }
+    }
+
+    /// Fraction of a tier's first tokens that met the tier's TTFT target;
+    /// `None` when the tier saw no first tokens (no phantom 100%).
+    pub fn ttft_attainment(&self, tier: crate::workload::SloTier) -> Option<f64> {
+        let r = tier.rank().min(2);
+        if self.ttft_tier_total[r] == 0 {
+            return None;
+        }
+        Some(self.ttft_attained[r] as f64 / self.ttft_tier_total[r] as f64)
     }
 
     /// One committed decode round's *virtual* duration over the tokens it
@@ -382,6 +416,10 @@ impl ServerMetrics {
 
     pub fn on_stolen(&mut self) {
         self.total_stolen += 1;
+    }
+
+    pub fn on_stalled(&mut self) {
+        self.total_stalled += 1;
     }
 
     /// tokens/second across the run (requires `run_seconds` set).
@@ -582,9 +620,10 @@ mod tests {
 
     #[test]
     fn ttft_and_token_latency_histograms_fill() {
+        use crate::workload::SloTier;
         let mut sm = ServerMetrics::new(false);
-        sm.on_first_token(0.25);
-        sm.on_first_token(120.0); // past the range: overflow bucket
+        sm.on_first_token(0.25, SloTier::Batch);
+        sm.on_first_token(120.0, SloTier::Batch); // past the range: overflow bucket
         assert_eq!(sm.ttft_hist.total(), 2);
         assert_eq!(sm.ttft_hist.overflow, 1);
         assert!((sm.ttft_hist.sum - 120.25).abs() < 1e-12);
@@ -596,17 +635,20 @@ mod tests {
     }
 
     #[test]
-    fn residency_hit_rate_defaults_to_one() {
-        assert_eq!(StepMetrics::default().residency_hit_rate(), 1.0);
+    fn residency_hit_rate_zero_denominator_is_zero_not_nan() {
+        let r = StepMetrics::default().residency_hit_rate();
+        assert!(!r.is_nan());
+        assert_eq!(r, 0.0, "no store activity reports 0.0, not a phantom hit");
         let m = StepMetrics { store_hits: 1, store_misses: 3, ..Default::default() };
         assert_eq!(m.residency_hit_rate(), 0.25);
     }
 
     #[test]
     fn lifecycle_counters_and_first_token_ttft() {
+        use crate::workload::SloTier;
         let mut sm = ServerMetrics::new(false);
-        sm.on_first_token(0.25);
-        sm.on_first_token(0.75);
+        sm.on_first_token(0.25, SloTier::Batch);
+        sm.on_first_token(0.75, SloTier::Batch);
         sm.on_cancelled();
         sm.on_expired();
         sm.on_expired();
@@ -634,9 +676,51 @@ mod tests {
     #[test]
     fn hit_rate_edge_cases() {
         let m = StepMetrics::default();
-        assert_eq!(m.hit_rate(), 1.0);
+        assert!(!m.hit_rate().is_nan());
+        assert_eq!(m.hit_rate(), 0.0, "zero-selection step has no hits");
         let m = StepMetrics { pages_selected: 4, pages_reused: 1, ..Default::default() };
         assert_eq!(m.hit_rate(), 0.25);
+    }
+
+    #[test]
+    fn merge_over_empty_steps_keeps_hit_rates_finite_and_zero() {
+        // A round merged entirely from empty worker steps must report 0.0
+        // (not NaN, not 1.0) from both hit-rate accessors, and feeding it
+        // to ServerMetrics must not dilute the selection-weighted mean.
+        let mut m = StepMetrics::default();
+        m.merge(&StepMetrics::default());
+        m.merge(&StepMetrics::default());
+        assert_eq!(m.hit_rate(), 0.0);
+        assert_eq!(m.residency_hit_rate(), 0.0);
+        assert!(!m.hit_rate().is_nan() && !m.residency_hit_rate().is_nan());
+        let mut sm = ServerMetrics::new(false);
+        sm.on_step(&m); // zero-selection step: skipped by the aggregator
+        sm.on_step(&StepMetrics {
+            batch: 1,
+            pages_selected: 4,
+            pages_reused: 2,
+            ..Default::default()
+        });
+        assert_eq!(sm.hit_rate.n, 1, "empty steps do not dilute the mean");
+        assert!((sm.hit_rate.mean() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_tier_ttft_attainment_tracks_targets() {
+        use crate::workload::SloTier;
+        let mut sm = ServerMetrics::new(false);
+        assert_eq!(sm.ttft_attainment(SloTier::Interactive), None, "no data yet");
+        // interactive target is 0.25 s: one in, one out
+        sm.on_first_token(0.2, SloTier::Interactive);
+        sm.on_first_token(0.9, SloTier::Interactive);
+        // batch target is 2.0 s: both in
+        sm.on_first_token(1.5, SloTier::Batch);
+        sm.on_first_token(2.0, SloTier::Batch);
+        assert_eq!(sm.ttft_attainment(SloTier::Interactive), Some(0.5));
+        assert_eq!(sm.ttft_attainment(SloTier::Batch), Some(1.0));
+        assert_eq!(sm.ttft_attainment(SloTier::Background), None);
+        assert_eq!(sm.ttft_tier_total, [2, 2, 0]);
+        assert_eq!(sm.ttft_attained, [1, 2, 0]);
     }
 
     #[test]

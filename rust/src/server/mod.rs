@@ -82,6 +82,10 @@ pub trait ServeBackend {
     /// storm shed fresh traffic the queue could actually absorb.
     fn queued_len(&self) -> usize;
     fn kv_bytes_in_use(&self) -> usize;
+    /// Live introspection snapshot behind the wire `stats` op (schema 3):
+    /// queue depths by SLO tier, active/preempted/deferred counts,
+    /// per-worker KV residency, TTFT attainment, stall firings.
+    fn live_stats(&self) -> crate::coordinator::LiveStats;
     /// Emit a connection-lifecycle span into the backend's trace stream.
     fn trace_event(&mut self, ev: &TraceEvent);
 }
@@ -113,6 +117,10 @@ impl ServeBackend for Frontend<'_> {
 
     fn kv_bytes_in_use(&self) -> usize {
         Frontend::kv_bytes_in_use(self)
+    }
+
+    fn live_stats(&self) -> crate::coordinator::LiveStats {
+        Frontend::live_stats(self)
     }
 
     fn trace_event(&mut self, ev: &TraceEvent) {
@@ -322,6 +330,15 @@ impl<B: ServeBackend> Pump<'_, B> {
                     self.submit(conn, id, prompt, max_new, session, deadline_ms, tier)
                 }
                 ClientMsg::Cancel { id } => self.cancel(conn, id),
+                ClientMsg::Stats => {
+                    // backend snapshot plus this listener's shed counters —
+                    // one consistent line, never terminal for any request
+                    let msg = ServerMsg::Stats {
+                        stats: self.backend.live_stats(),
+                        net: self.gate.counters.clone(),
+                    };
+                    self.send_to(conn, msg);
+                }
                 ClientMsg::Close => {
                     if let Some(c) = self.conns.get_mut(&conn) {
                         c.closing = true;
@@ -678,6 +695,31 @@ impl ServeBackend for MockBackend {
         self.kv_in_use
     }
 
+    fn live_stats(&self) -> crate::coordinator::LiveStats {
+        // the mock has one implicit worker and no paging tiers: everything
+        // admitted counts as hot, first tokens always meet their target
+        let mut queued_by_tier = [0u64; 3];
+        for r in &self.queue {
+            queued_by_tier[(r.tier.rank() as usize).min(2)] += 1;
+        }
+        crate::coordinator::LiveStats {
+            t: self.now,
+            queued_by_tier,
+            active: self.active.len() as u64,
+            preempted: 0,
+            deferred: 0,
+            workers: vec![crate::coordinator::WorkerKv {
+                kv_bytes_in_use: self.kv_in_use as u64,
+                pages_hot: self.active.len() as u64,
+                pages_cold: 0,
+                pages_disk: 0,
+            }],
+            ttft_attained: [0; 3],
+            ttft_total: [0; 3],
+            stalled: 0,
+        }
+    }
+
     fn trace_event(&mut self, ev: &TraceEvent) {
         self.trace.push(ev.to_line());
     }
@@ -759,6 +801,38 @@ mod tests {
             backend.trace.iter().any(|l| l.contains("conn_close")),
         ];
         assert_eq!(kinds, vec![true, true], "trace: {:?}", backend.trace);
+    }
+
+    #[test]
+    fn stats_op_answers_with_a_live_snapshot() {
+        let cfg = ServerConfig { exit_when_idle: true, ..ServerConfig::default() };
+        let (addr, server) = spawn_server(cfg);
+
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        assert_eq!(
+            read_msg(&mut reader),
+            Some(ServerMsg::Hello { schema: PROTO_SCHEMA })
+        );
+        stream
+            .write_all(format!("{}\n", ClientMsg::Stats.to_line()).as_bytes())
+            .unwrap();
+        let msg = read_msg(&mut reader).expect("stats reply");
+        let ServerMsg::Stats { stats, net } = msg else {
+            panic!("expected stats, got {msg:?}");
+        };
+        // idle mock backend: empty queues, one worker row, nothing shed
+        assert_eq!(stats.queued_by_tier, [0, 0, 0]);
+        assert_eq!(stats.active, 0);
+        assert_eq!(stats.workers.len(), 1, "mock reports one worker");
+        assert_eq!(net, ShedCounters::default());
+
+        stream
+            .write_all(format!("{}\n", ClientMsg::Close.to_line()).as_bytes())
+            .unwrap();
+        assert_eq!(read_msg(&mut reader), None);
+        let (stats, _) = server.join().unwrap();
+        assert_eq!(stats.accepted, 1);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! {"op":"submit","id":1,"prompt":"…","max_new":16,        //   fields
 //!  "session":7,"deadline_ms":250,"tier":"interactive"}
 //! {"op":"cancel","id":0}
+//! {"op":"stats"}
 //! {"op":"close"}
 //! ```
 //!
@@ -22,24 +23,29 @@
 //! `ServeEvent` lifecycle — `admitted`, `deferred`, `token`, `preempted`,
 //! `resumed`, `finished`, `cancelled`, `expired` — plus the protocol-level
 //! `hello`, the backpressure pair `retry` (typed retry-after: resubmit
-//! later) and `overload` (typed shed naming the limit that fired), and
-//! `error` for unparseable input. `preempted`/`resumed` are informational
+//! later) and `overload` (typed shed naming the limit that fired), the
+//! `stats` introspection snapshot answering the client op of the same
+//! name, and `error` for unparseable input. `preempted`/`resumed` are informational
 //! pauses in the token stream, NOT terminal — a well-behaved client keeps
 //! the request open until `finished`/`cancelled`/`expired`. Request ids on the wire are always the *client's*
 //! per-connection ids; the server translates to and from its global ids
 //! at the connection boundary. Ids must stay below 2^53 (they ride JSON
 //! numbers).
 
-use crate::coordinator::ServeEvent;
+use crate::coordinator::{LiveStats, ServeEvent, WorkerKv};
 use crate::metrics::RequestRecord;
 use crate::util::json::Json;
 use crate::workload::SloTier;
+
+use super::shed::ShedCounters;
 
 /// Wire-protocol schema version, carried by the `hello` line. Bump on any
 /// message-shape change so old clients fail loudly instead of misparsing.
 /// v2: `submit` takes an optional `tier` (SLO class); `preempted` and
 /// `resumed` stream as non-terminal lifecycle messages.
-pub const PROTO_SCHEMA: u64 = 2;
+/// v3: `stats` op returns a live introspection snapshot (queue depths by
+/// tier, per-worker KV residency, TTFT attainment, `net_*` shed counters).
+pub const PROTO_SCHEMA: u64 = 3;
 
 /// One client → server operation.
 #[derive(Debug, Clone, PartialEq)]
@@ -57,6 +63,9 @@ pub enum ClientMsg {
     },
     /// cancel a previously submitted request (any pre-terminal state)
     Cancel { id: u64 },
+    /// request a live introspection snapshot; answered with a single
+    /// [`ServerMsg::Stats`] line (schema 3)
+    Stats,
     /// done submitting; the server finishes streaming in-flight requests,
     /// then closes the connection
     Close,
@@ -95,6 +104,9 @@ impl ClientMsg {
                 ("id", Json::Num(*id as f64)),
             ])
             .to_string(),
+            ClientMsg::Stats => {
+                Json::obj(vec![("op", Json::from("stats"))]).to_string()
+            }
             ClientMsg::Close => {
                 Json::obj(vec![("op", Json::from("close"))]).to_string()
             }
@@ -141,6 +153,7 @@ impl ClientMsg {
                 },
             }),
             "cancel" => Ok(ClientMsg::Cancel { id: id("id")? }),
+            "stats" => Ok(ClientMsg::Stats),
             "close" => Ok(ClientMsg::Close),
             other => Err(format!("unknown op '{other}'")),
         }
@@ -168,6 +181,9 @@ pub enum ServerMsg {
     /// typed overload: the named limit shed this operation (or, with no
     /// `id`, this whole connection at accept)
     Overload { id: Option<u64>, limit: String, max: usize },
+    /// live introspection snapshot answering a client `stats` op: backend
+    /// queue/KV state plus this listener's `net_*` shed counters
+    Stats { stats: LiveStats, net: ShedCounters },
     /// protocol error (e.g. an unparseable request line)
     Error { reason: String },
 }
@@ -223,6 +239,7 @@ impl ServerMsg {
             ServerMsg::Expired { .. } => "expired",
             ServerMsg::Retry { .. } => "retry",
             ServerMsg::Overload { .. } => "overload",
+            ServerMsg::Stats { .. } => "stats",
             ServerMsg::Error { .. } => "error",
         }
     }
@@ -262,6 +279,55 @@ impl ServerMsg {
                 }
                 pairs.push(("limit", Json::from(limit.as_str())));
                 pairs.push(("max", Json::from(*max)));
+            }
+            ServerMsg::Stats { stats, net } => {
+                let arr3 =
+                    |a: &[u64; 3]| Json::arr_f64(&a.map(|n| n as f64));
+                pairs.push(("t", Json::Num(stats.t)));
+                pairs.push(("queued", arr3(&stats.queued_by_tier)));
+                pairs.push(("active", Json::Num(stats.active as f64)));
+                pairs.push(("preempted", Json::Num(stats.preempted as f64)));
+                pairs.push(("deferred", Json::Num(stats.deferred as f64)));
+                pairs.push((
+                    "workers",
+                    Json::Arr(
+                        stats
+                            .workers
+                            .iter()
+                            .map(|w| {
+                                Json::obj(vec![
+                                    (
+                                        "kv_bytes",
+                                        Json::Num(w.kv_bytes_in_use as f64),
+                                    ),
+                                    ("hot", Json::Num(w.pages_hot as f64)),
+                                    ("cold", Json::Num(w.pages_cold as f64)),
+                                    ("disk", Json::Num(w.pages_disk as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+                pairs.push(("ttft_attained", arr3(&stats.ttft_attained)));
+                pairs.push(("ttft_total", arr3(&stats.ttft_total)));
+                pairs.push(("stalled", Json::Num(stats.stalled as f64)));
+                pairs.push(("net_conns_shed", Json::Num(net.conns_shed as f64)));
+                pairs.push((
+                    "net_submits_deferred",
+                    Json::Num(net.submits_deferred as f64),
+                ));
+                pairs.push((
+                    "net_submits_shed",
+                    Json::Num(net.submits_shed as f64),
+                ));
+                pairs.push((
+                    "net_slow_consumer_deferrals",
+                    Json::Num(net.slow_consumer_deferrals as f64),
+                ));
+                pairs.push((
+                    "net_slow_consumer_closes",
+                    Json::Num(net.slow_consumer_closes as f64),
+                ));
             }
             ServerMsg::Error { reason } => {
                 pairs.push(("reason", Json::from(reason.as_str())));
@@ -319,6 +385,65 @@ impl ServerMsg {
                     .and_then(|j| j.as_usize())
                     .ok_or_else(|| "missing 'max'".to_string())?,
             }),
+            "stats" => {
+                let arr3 = |key: &str| -> Result<[u64; 3], String> {
+                    let a = v
+                        .get(key)
+                        .and_then(|j| j.as_arr())
+                        .filter(|a| a.len() == 3)
+                        .ok_or_else(|| format!("missing or invalid '{key}'"))?;
+                    let mut out = [0u64; 3];
+                    for (slot, j) in out.iter_mut().zip(a) {
+                        *slot = j
+                            .as_f64()
+                            .ok_or_else(|| format!("non-numeric '{key}'"))?
+                            as u64;
+                    }
+                    Ok(out)
+                };
+                let workers = v
+                    .get("workers")
+                    .and_then(|j| j.as_arr())
+                    .ok_or_else(|| "missing 'workers'".to_string())?
+                    .iter()
+                    .map(|w| {
+                        let f = |key: &str| -> Result<u64, String> {
+                            w.get(key)
+                                .and_then(|j| j.as_f64())
+                                .map(|f| f as u64)
+                                .ok_or_else(|| format!("bad worker '{key}'"))
+                        };
+                        Ok(WorkerKv {
+                            kv_bytes_in_use: f("kv_bytes")?,
+                            pages_hot: f("hot")?,
+                            pages_cold: f("cold")?,
+                            pages_disk: f("disk")?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>, String>>()?;
+                Ok(ServerMsg::Stats {
+                    stats: LiveStats {
+                        t: num("t")?,
+                        queued_by_tier: arr3("queued")?,
+                        active: id("active")?,
+                        preempted: id("preempted")?,
+                        deferred: id("deferred")?,
+                        workers,
+                        ttft_attained: arr3("ttft_attained")?,
+                        ttft_total: arr3("ttft_total")?,
+                        stalled: id("stalled")?,
+                    },
+                    net: ShedCounters {
+                        conns_shed: id("net_conns_shed")?,
+                        submits_deferred: id("net_submits_deferred")?,
+                        submits_shed: id("net_submits_shed")?,
+                        slow_consumer_deferrals: id(
+                            "net_slow_consumer_deferrals",
+                        )?,
+                        slow_consumer_closes: id("net_slow_consumer_closes")?,
+                    },
+                })
+            }
             "error" => Ok(ServerMsg::Error {
                 reason: v
                     .get("reason")
@@ -365,6 +490,7 @@ mod tests {
                 tier: None,
             },
             ClientMsg::Cancel { id: 3 },
+            ClientMsg::Stats,
             ClientMsg::Close,
         ];
         for m in msgs {
@@ -389,12 +515,57 @@ mod tests {
             ServerMsg::Retry { id: 5, retry_after_ms: 50.0 },
             ServerMsg::Overload { id: Some(5), limit: "queue_depth".into(), max: 4 },
             ServerMsg::Overload { id: None, limit: "max_conns".into(), max: 2 },
+            ServerMsg::Stats {
+                stats: LiveStats {
+                    t: 1.5,
+                    queued_by_tier: [1, 2, 0],
+                    active: 3,
+                    preempted: 1,
+                    deferred: 2,
+                    workers: vec![
+                        WorkerKv {
+                            kv_bytes_in_use: 4096,
+                            pages_hot: 4,
+                            pages_cold: 2,
+                            pages_disk: 1,
+                        },
+                        WorkerKv::default(),
+                    ],
+                    ttft_attained: [1, 0, 0],
+                    ttft_total: [1, 3, 0],
+                    stalled: 1,
+                },
+                net: ShedCounters {
+                    conns_shed: 1,
+                    submits_deferred: 2,
+                    submits_shed: 3,
+                    slow_consumer_deferrals: 4,
+                    slow_consumer_closes: 5,
+                },
+            },
+            ServerMsg::Stats {
+                stats: LiveStats::default(),
+                net: ShedCounters::default(),
+            },
             ServerMsg::Error { reason: "missing 'op'".into() },
         ];
         for m in msgs {
             let line = m.to_line();
             assert_eq!(ServerMsg::parse(&line).unwrap(), m, "{line}");
         }
+    }
+
+    #[test]
+    fn stats_is_not_terminal_and_parse_checks_shape() {
+        let m = ServerMsg::Stats {
+            stats: LiveStats::default(),
+            net: ShedCounters::default(),
+        };
+        assert!(!m.is_terminal(), "stats never closes a request");
+        assert_eq!(ClientMsg::Stats.to_line(), r#"{"op":"stats"}"#);
+        // a tier array of the wrong arity is a protocol error
+        let bad = m.to_line().replace("\"queued\":[0,0,0]", "\"queued\":[0,0]");
+        assert!(ServerMsg::parse(&bad).is_err(), "{bad}");
     }
 
     #[test]

@@ -1,0 +1,474 @@
+//! KV-cache access analytics: a bounded, deterministic per-worker page
+//! access recorder (the paper's cache-reuse / hit-rate / selection-quality
+//! analysis, measured on the serving path).
+//!
+//! Each engine worker owns one [`AnalyticsRecorder`]; the decode loop feeds
+//! it every selected page (page id, layer, engine-local step, tier at
+//! access) and, under `--audit-selection N`, the per-layer top-k overlap of
+//! the bbox-selected page set against the exact-attention oracle set. The
+//! frontend drains snapshots **serially, in worker order** at the commit
+//! seam — the same seam the trace and metrics streams use — so the
+//! `--analytics-out` JSONL stream inherits the determinism contract: under
+//! `TimeModel::Modeled` it is byte-identical across executor kinds and
+//! thread widths.
+//!
+//! Everything inside is bounded: the LRU reuse stack and frequency table
+//! cap distinct tracked pages, the hit-rate windows, residency timeline
+//! and audit buffer cap their entry counts, and every overflow is counted
+//! (never silently dropped).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Version stamp carried by every analytics JSONL line. Bump when a field
+/// is renamed, retyped or removed; adding fields keeps the version.
+pub const ANALYTICS_SCHEMA: u64 = 1;
+
+/// Reuse-distance histogram buckets: bucket 0 is distance 0 (back-to-back
+/// reuse), bucket `i >= 1` covers distances in `[2^(i-1), 2^i)`, the last
+/// bucket absorbs everything larger.
+pub const REUSE_BUCKETS: usize = 16;
+
+/// Max distinct pages tracked by the LRU stack / frequency table.
+const CAP_PAGES: usize = 4096;
+/// Accesses per hit-rate-over-time window.
+const HIT_WINDOW: usize = 256;
+/// Max completed hit-rate windows retained.
+const CAP_WINDOWS: usize = 512;
+/// Residency timeline cadence (engine-local steps) and entry cap.
+const RESIDENCY_EVERY: u64 = 16;
+const CAP_RESIDENCY: usize = 4096;
+/// Max audit records buffered between snapshots.
+const CAP_AUDITS: usize = 4096;
+/// Frequency ranks reported per snapshot.
+const TOP_RANKS: usize = 16;
+
+/// Page tier observed at access time (before any promotion the access
+/// itself triggers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessTier {
+    Hot,
+    Cold,
+    Disk,
+}
+
+impl AccessTier {
+    fn index(self) -> usize {
+        match self {
+            AccessTier::Hot => 0,
+            AccessTier::Cold => 1,
+            AccessTier::Disk => 2,
+        }
+    }
+}
+
+/// One selection-quality audit: at engine-local `step`, layer `layer`, the
+/// policy selected `k` pages and `overlap` of them were also in the
+/// exact-attention oracle's top-k.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AuditRecord {
+    pub step: u64,
+    pub layer: usize,
+    pub k: usize,
+    pub overlap: usize,
+}
+
+impl AuditRecord {
+    /// Top-k recall of the selected set vs the oracle set.
+    pub fn recall(&self) -> f64 {
+        if self.k == 0 {
+            return 0.0;
+        }
+        self.overlap as f64 / self.k as f64
+    }
+}
+
+/// Bounded deterministic per-worker page-access recorder. See the module
+/// docs for the feeding/draining contract.
+#[derive(Debug, Clone)]
+pub struct AnalyticsRecorder {
+    /// LRU stack of tracked page ids, most recent last.
+    stack: Vec<u64>,
+    /// per-page access counts (bounded; spill-over counted in `untracked`)
+    freq: BTreeMap<u64, u64>,
+    untracked: u64,
+    reuse_hist: [u64; REUSE_BUCKETS],
+    /// first-touch accesses (infinite reuse distance)
+    reuse_cold: u64,
+    accesses: u64,
+    tier_counts: [u64; 3],
+    window_hits: u64,
+    window_n: u64,
+    hit_windows: Vec<f64>,
+    windows_dropped: u64,
+    residency: Vec<[u64; 4]>,
+    residency_dropped: u64,
+    audits: Vec<AuditRecord>,
+    audits_dropped: u64,
+    /// cumulative audit sums per layer: (records, overlap, k)
+    audit_by_layer: BTreeMap<usize, (u64, u64, u64)>,
+    /// engine-local decode-step counter (advanced by `on_step_end`)
+    step: u64,
+}
+
+impl Default for AnalyticsRecorder {
+    fn default() -> Self {
+        AnalyticsRecorder::new()
+    }
+}
+
+impl AnalyticsRecorder {
+    pub fn new() -> AnalyticsRecorder {
+        AnalyticsRecorder {
+            stack: Vec::new(),
+            freq: BTreeMap::new(),
+            untracked: 0,
+            reuse_hist: [0; REUSE_BUCKETS],
+            reuse_cold: 0,
+            accesses: 0,
+            tier_counts: [0; 3],
+            window_hits: 0,
+            window_n: 0,
+            hit_windows: Vec::new(),
+            windows_dropped: 0,
+            residency: Vec::new(),
+            residency_dropped: 0,
+            audits: Vec::new(),
+            audits_dropped: 0,
+            audit_by_layer: BTreeMap::new(),
+            step: 0,
+        }
+    }
+
+    /// Engine-local decode steps observed so far.
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.accesses
+    }
+
+    /// One page access from the decode selection loop. `tier` is the tier
+    /// the page was resident on *before* the access promotes it.
+    pub fn on_access(&mut self, page: u64, tier: AccessTier) {
+        self.accesses += 1;
+        self.tier_counts[tier.index()] += 1;
+        // hit-rate-over-time window: hot at access = hit
+        self.window_n += 1;
+        if tier == AccessTier::Hot {
+            self.window_hits += 1;
+        }
+        if self.window_n as usize >= HIT_WINDOW {
+            let rate = self.window_hits as f64 / self.window_n as f64;
+            if self.hit_windows.len() < CAP_WINDOWS {
+                self.hit_windows.push(rate);
+            } else {
+                self.windows_dropped += 1;
+            }
+            self.window_hits = 0;
+            self.window_n = 0;
+        }
+        // reuse distance off the bounded LRU stack: number of distinct
+        // pages touched since this page's previous access
+        if let Some(pos) = self.stack.iter().rposition(|&p| p == page) {
+            let dist = self.stack.len() - 1 - pos;
+            self.reuse_hist[reuse_bucket(dist)] += 1;
+            self.stack.remove(pos);
+            self.stack.push(page);
+        } else {
+            self.reuse_cold += 1;
+            if self.stack.len() >= CAP_PAGES {
+                self.stack.remove(0);
+            }
+            self.stack.push(page);
+        }
+        // access-frequency table
+        match self.freq.get_mut(&page) {
+            Some(c) => *c += 1,
+            None if self.freq.len() < CAP_PAGES => {
+                self.freq.insert(page, 1);
+            }
+            None => self.untracked += 1,
+        }
+    }
+
+    /// End of one engine decode step: advance the step counter and sample
+    /// the per-tier residency timeline on its cadence.
+    pub fn on_step_end(&mut self, hot: usize, cold: usize, disk: usize) {
+        if self.step % RESIDENCY_EVERY == 0 {
+            if self.residency.len() < CAP_RESIDENCY {
+                self.residency.push([self.step, hot as u64, cold as u64, disk as u64]);
+            } else {
+                self.residency_dropped += 1;
+            }
+        }
+        self.step += 1;
+    }
+
+    /// One selection-quality audit (layer-level): `k` pages selected,
+    /// `overlap` shared with the exact-attention oracle top-k.
+    pub fn on_audit(&mut self, layer: usize, k: usize, overlap: usize) {
+        let e = self.audit_by_layer.entry(layer).or_insert((0, 0, 0));
+        e.0 += 1;
+        e.1 += overlap as u64;
+        e.2 += k as u64;
+        if self.audits.len() < CAP_AUDITS {
+            self.audits.push(AuditRecord { step: self.step, layer, k, overlap });
+        } else {
+            self.audits_dropped += 1;
+        }
+    }
+
+    /// Fraction of accesses that found their page hot (0.0 when nothing
+    /// was accessed — mirrors `StepMetrics::hit_rate`'s zero-denominator
+    /// contract).
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            return 0.0;
+        }
+        self.tier_counts[0] as f64 / self.accesses as f64
+    }
+
+    /// Overall selection recall across all audits: summed oracle overlap
+    /// over summed k. `None` before the first audit.
+    pub fn mean_recall(&self) -> Option<f64> {
+        let (mut overlap, mut k) = (0u64, 0u64);
+        for (_, o, kk) in self.audit_by_layer.values() {
+            overlap += o;
+            k += kk;
+        }
+        if k == 0 {
+            return None;
+        }
+        Some(overlap as f64 / k as f64)
+    }
+
+    /// Total audit records observed (including ones already drained).
+    pub fn audit_records(&self) -> u64 {
+        self.audit_by_layer.values().map(|(n, _, _)| n).sum()
+    }
+
+    /// Per-layer audit sums: `(layer, records, overlap, k)` in layer order.
+    pub fn audit_layers(&self) -> Vec<(usize, u64, u64, u64)> {
+        self.audit_by_layer.iter().map(|(&l, &(n, o, k))| (l, n, o, k)).collect()
+    }
+
+    /// Cumulative reuse-distance histogram (bucketed, see [`REUSE_BUCKETS`]).
+    pub fn reuse_hist(&self) -> &[u64; REUSE_BUCKETS] {
+        &self.reuse_hist
+    }
+
+    /// Append this worker's snapshot lines (sorted-key JSONL) to `out`:
+    /// one cumulative `analytics` summary, a `page_ranks` line, then the
+    /// `residency` entries and `audit` records accumulated since the last
+    /// snapshot (drained). `round`/`t` come off the frontend's virtual
+    /// clock, so under modeled time every line is byte-deterministic.
+    pub fn snapshot_into(
+        &mut self,
+        worker: usize,
+        round: u64,
+        t: f64,
+        out: &mut Vec<String>,
+    ) {
+        let hist =
+            Json::Arr(self.reuse_hist.iter().map(|&c| Json::Num(c as f64)).collect());
+        let windows =
+            Json::Arr(self.hit_windows.iter().map(|&r| Json::Num(r)).collect());
+        out.push(
+            Json::obj(vec![
+                ("kind", Json::from("analytics")),
+                ("schema", Json::Num(ANALYTICS_SCHEMA as f64)),
+                ("worker", Json::from(worker)),
+                ("round", Json::Num(round as f64)),
+                ("t", Json::Num(t)),
+                ("step", Json::Num(self.step as f64)),
+                ("accesses", Json::Num(self.accesses as f64)),
+                ("hit_rate", Json::Num(self.hit_rate())),
+                ("hit_windows", windows),
+                ("windows_dropped", Json::Num(self.windows_dropped as f64)),
+                ("reuse_hist", hist),
+                ("reuse_cold", Json::Num(self.reuse_cold as f64)),
+                ("tier_hot", Json::Num(self.tier_counts[0] as f64)),
+                ("tier_cold", Json::Num(self.tier_counts[1] as f64)),
+                ("tier_disk", Json::Num(self.tier_counts[2] as f64)),
+                ("untracked", Json::Num(self.untracked as f64)),
+            ])
+            .to_string(),
+        );
+        // top-N access-frequency ranks: count desc, page id asc on ties
+        let mut ranks: Vec<(u64, u64)> =
+            self.freq.iter().map(|(&p, &c)| (p, c)).collect();
+        ranks.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        ranks.truncate(TOP_RANKS);
+        out.push(
+            Json::obj(vec![
+                ("kind", Json::from("page_ranks")),
+                ("schema", Json::Num(ANALYTICS_SCHEMA as f64)),
+                ("worker", Json::from(worker)),
+                ("round", Json::Num(round as f64)),
+                (
+                    "ranks",
+                    Json::Arr(
+                        ranks
+                            .into_iter()
+                            .map(|(p, c)| {
+                                Json::obj(vec![
+                                    ("count", Json::Num(c as f64)),
+                                    ("page", Json::Num(p as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+            .to_string(),
+        );
+        if !self.residency.is_empty() || self.residency_dropped > 0 {
+            out.push(
+                Json::obj(vec![
+                    ("kind", Json::from("residency")),
+                    ("schema", Json::Num(ANALYTICS_SCHEMA as f64)),
+                    ("worker", Json::from(worker)),
+                    ("round", Json::Num(round as f64)),
+                    (
+                        "entries",
+                        Json::Arr(
+                            self.residency
+                                .iter()
+                                .map(|e| {
+                                    Json::Arr(
+                                        e.iter().map(|&v| Json::Num(v as f64)).collect(),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("dropped", Json::Num(self.residency_dropped as f64)),
+                ])
+                .to_string(),
+            );
+            self.residency.clear();
+        }
+        for a in &self.audits {
+            out.push(
+                Json::obj(vec![
+                    ("kind", Json::from("audit")),
+                    ("schema", Json::Num(ANALYTICS_SCHEMA as f64)),
+                    ("worker", Json::from(worker)),
+                    ("round", Json::Num(round as f64)),
+                    ("step", Json::Num(a.step as f64)),
+                    ("layer", Json::from(a.layer)),
+                    ("k", Json::from(a.k)),
+                    ("overlap", Json::from(a.overlap)),
+                    ("recall", Json::Num(a.recall())),
+                ])
+                .to_string(),
+            );
+        }
+        self.audits.clear();
+    }
+}
+
+/// Log2 bucket for a reuse distance (distinct pages since last access).
+fn reuse_bucket(dist: usize) -> usize {
+    if dist == 0 {
+        return 0;
+    }
+    let lg = (usize::BITS - 1 - dist.leading_zeros()) as usize;
+    (lg + 1).min(REUSE_BUCKETS - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_buckets_are_log2() {
+        assert_eq!(reuse_bucket(0), 0);
+        assert_eq!(reuse_bucket(1), 1);
+        assert_eq!(reuse_bucket(2), 2);
+        assert_eq!(reuse_bucket(3), 2);
+        assert_eq!(reuse_bucket(4), 3);
+        assert_eq!(reuse_bucket(1 << 20), REUSE_BUCKETS - 1);
+    }
+
+    #[test]
+    fn reuse_distance_counts_distinct_pages_between_accesses() {
+        let mut r = AnalyticsRecorder::new();
+        // a, b, c, a: distance of the second `a` is 2 (b and c between)
+        r.on_access(10, AccessTier::Hot);
+        r.on_access(11, AccessTier::Hot);
+        r.on_access(12, AccessTier::Hot);
+        r.on_access(10, AccessTier::Hot);
+        assert_eq!(r.reuse_cold, 3, "first touches are cold");
+        assert_eq!(r.reuse_hist()[reuse_bucket(2)], 1);
+        // immediate re-access: distance 0
+        r.on_access(10, AccessTier::Hot);
+        assert_eq!(r.reuse_hist()[0], 1);
+    }
+
+    #[test]
+    fn hit_rate_and_tier_counts_track_tier_at_access() {
+        let mut r = AnalyticsRecorder::new();
+        assert_eq!(r.hit_rate(), 0.0, "no accesses reports 0.0, not NaN");
+        r.on_access(1, AccessTier::Hot);
+        r.on_access(2, AccessTier::Cold);
+        r.on_access(3, AccessTier::Hot);
+        r.on_access(4, AccessTier::Disk);
+        assert_eq!(r.hit_rate(), 0.5);
+        assert_eq!(r.tier_counts, [2, 1, 1]);
+    }
+
+    #[test]
+    fn audit_sums_and_mean_recall() {
+        let mut r = AnalyticsRecorder::new();
+        assert_eq!(r.mean_recall(), None);
+        r.on_audit(0, 4, 3);
+        r.on_audit(1, 4, 1);
+        assert_eq!(r.mean_recall(), Some(0.5));
+        assert_eq!(r.audit_records(), 2);
+        assert_eq!(r.audit_layers(), vec![(0, 1, 3, 4), (1, 1, 1, 4)]);
+    }
+
+    #[test]
+    fn snapshot_drains_audits_and_residency_but_keeps_cumulative_state() {
+        let mut r = AnalyticsRecorder::new();
+        r.on_access(7, AccessTier::Hot);
+        r.on_step_end(3, 1, 0); // step 0: on the residency cadence
+        r.on_audit(0, 2, 2);
+        let mut out = Vec::new();
+        r.snapshot_into(0, 5, 1.25, &mut out);
+        assert_eq!(out.len(), 4, "summary + ranks + residency + one audit");
+        assert!(out[0].contains(r#""kind":"analytics""#));
+        assert!(out[0].contains(r#""schema":1"#));
+        assert!(out[1].contains(r#""kind":"page_ranks""#));
+        assert!(out[2].contains(r#""kind":"residency""#));
+        assert!(out[3].contains(r#""kind":"audit""#));
+        assert!(out[3].contains(r#""recall":1"#));
+        // drained: a second snapshot has no residency/audit lines but the
+        // cumulative summary and ranks persist
+        let mut out2 = Vec::new();
+        r.snapshot_into(0, 6, 2.5, &mut out2);
+        assert_eq!(out2.len(), 2);
+        assert!(out2[0].contains(r#""accesses":1"#));
+        // same-state snapshots at the same (round, t) are byte-identical
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        r.clone().snapshot_into(1, 7, 3.0, &mut a);
+        r.clone().snapshot_into(1, 7, 3.0, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bounded_state_counts_overflow_instead_of_growing() {
+        let mut r = AnalyticsRecorder::new();
+        for p in 0..(CAP_PAGES as u64 + 10) {
+            r.on_access(p, AccessTier::Hot);
+        }
+        assert!(r.stack.len() <= CAP_PAGES);
+        assert!(r.freq.len() <= CAP_PAGES);
+        assert_eq!(r.untracked, 10);
+    }
+}

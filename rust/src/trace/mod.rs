@@ -25,9 +25,11 @@
 //! ([`Tracer::enabled`] guards every call site), so serving with tracing
 //! off pays one branch per hook.
 
+pub mod analytics;
 pub mod registry;
 pub mod sink;
 
+pub use analytics::{AccessTier, AnalyticsRecorder, AuditRecord, ANALYTICS_SCHEMA};
 pub use registry::{hist_json, MetricsRegistry, METRICS_SCHEMA};
 pub use sink::{FileSink, NullSink, RingSink, SharedVecSink, TraceSink};
 
@@ -90,6 +92,9 @@ pub enum TraceEvent {
     Cancelled { id: u64, t: f64 },
     /// terminal: shed or aborted past its deadline
     Expired { id: u64, t: f64 },
+    /// watchdog: an Active request made no token progress for `rounds`
+    /// consecutive committed rounds (starvation / rotation-window signal)
+    Stalled { id: u64, worker: usize, rounds: u64, t: f64 },
     /// network front door: a client connection was accepted (`conn` is
     /// the server's accept-order connection id)
     ConnOpen { conn: u64, t: f64 },
@@ -118,6 +123,7 @@ impl TraceEvent {
             TraceEvent::Finished { .. } => "finished",
             TraceEvent::Cancelled { .. } => "cancelled",
             TraceEvent::Expired { .. } => "expired",
+            TraceEvent::Stalled { .. } => "stalled",
             TraceEvent::ConnOpen { .. } => "conn_open",
             TraceEvent::ConnClose { .. } => "conn_close",
         }
@@ -136,7 +142,8 @@ impl TraceEvent {
             | TraceEvent::Stolen { id, .. }
             | TraceEvent::Finished { id, .. }
             | TraceEvent::Cancelled { id, .. }
-            | TraceEvent::Expired { id, .. } => Some(*id),
+            | TraceEvent::Expired { id, .. }
+            | TraceEvent::Stalled { id, .. } => Some(*id),
             TraceEvent::Demote { ctx, .. }
             | TraceEvent::SpillOut { ctx, .. }
             | TraceEvent::SpillFault { ctx, .. }
@@ -217,6 +224,12 @@ impl TraceEvent {
                 push_ctx(&mut pairs, ctx);
                 pairs.push(("worker", Json::from(*worker)));
                 pairs.push(("bytes", Json::Num(*bytes as f64)));
+            }
+            TraceEvent::Stalled { id, worker, rounds, t } => {
+                pairs.push(("id", Json::Num(*id as f64)));
+                pairs.push(("worker", Json::from(*worker)));
+                pairs.push(("rounds", Json::Num(*rounds as f64)));
+                pairs.push(("t", Json::Num(*t)));
             }
             TraceEvent::ConnOpen { conn, t } | TraceEvent::ConnClose { conn, t } => {
                 pairs.push(("conn", Json::Num(*conn as f64)));
@@ -499,6 +512,17 @@ mod tests {
         let v = Json::parse(&s.to_line()).unwrap();
         assert_eq!(v.get("kind").and_then(|j| j.as_str()), Some("stolen"));
         assert_eq!(s.request_id(), Some(9));
+    }
+
+    #[test]
+    fn stalled_event_serializes_with_rounds_and_request_id() {
+        let s = TraceEvent::Stalled { id: 11, worker: 1, rounds: 8, t: 2.5 };
+        assert_eq!(
+            s.to_line(),
+            r#"{"id":11,"kind":"stalled","rounds":8,"t":2.5,"worker":1}"#
+        );
+        assert_eq!(s.request_id(), Some(11));
+        assert_eq!(s.kind(), "stalled");
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub struct MetricsRegistry {
     counters: BTreeMap<&'static str, u64>,
     gauges: BTreeMap<&'static str, f64>,
     hists: BTreeMap<&'static str, Histogram>,
+    helps: BTreeMap<&'static str, &'static str>,
 }
 
 impl MetricsRegistry {
@@ -52,6 +53,12 @@ impl MetricsRegistry {
     /// Publish a histogram snapshot (replaces the previous one).
     pub fn histogram(&mut self, name: &'static str, h: &Histogram) {
         self.hists.insert(name, h.clone());
+    }
+
+    /// Register the `# HELP` docstring for a metric; metrics without one
+    /// fall back to their name in the exposition.
+    pub fn help(&mut self, name: &'static str, text: &'static str) {
+        self.helps.insert(name, text);
     }
 
     /// One JSONL time-series line: round index + virtual timestamp + every
@@ -88,42 +95,76 @@ impl MetricsRegistry {
         .to_string()
     }
 
-    /// Prometheus-style text exposition of the current state. Histograms
-    /// render cumulative `_bucket{le=...}` series plus `_sum`/`_count`;
-    /// values below `lo` count toward every bucket (they are ≤ each upper
-    /// bound), values at or above `hi` only toward `+Inf`.
+    /// Prometheus-style text exposition of the current state: a
+    /// `# HELP` + `# TYPE` pair per metric family (help text escaped per
+    /// the text format, names sanitized to the legal charset), then the
+    /// samples. Histograms render cumulative `_bucket{le=...}` series plus
+    /// `_sum`/`_count`; values below `lo` count toward every bucket (they
+    /// are ≤ each upper bound), values at or above `hi` only toward `+Inf`.
     pub fn prometheus(&self) -> String {
         let mut out = String::new();
-        for (name, v) in &self.counters {
+        let header = |out: &mut String, name: &str, kind: &str| {
+            let n = prom_name(name);
+            let help = self.helps.get(name).copied().unwrap_or(name);
             out.push_str(&format!(
-                "# TYPE tinyserve_{name} counter\ntinyserve_{name} {v}\n"
+                "# HELP tinyserve_{n} {}\n# TYPE tinyserve_{n} {kind}\n",
+                prom_escape_help(help)
             ));
+        };
+        for (name, v) in &self.counters {
+            header(&mut out, name, "counter");
+            out.push_str(&format!("tinyserve_{} {v}\n", prom_name(name)));
         }
         for (name, v) in &self.gauges {
-            out.push_str(&format!(
-                "# TYPE tinyserve_{name} gauge\ntinyserve_{name} {v}\n"
-            ));
+            header(&mut out, name, "gauge");
+            out.push_str(&format!("tinyserve_{} {v}\n", prom_name(name)));
         }
         for (name, h) in &self.hists {
-            out.push_str(&format!("# TYPE tinyserve_{name} histogram\n"));
+            header(&mut out, name, "histogram");
+            let n = prom_name(name);
             let width = (h.hi - h.lo) / h.counts.len().max(1) as f64;
             let mut cum = h.underflow;
             for (i, c) in h.counts.iter().enumerate() {
                 cum += c;
                 let le = h.lo + width * (i + 1) as f64;
                 out.push_str(&format!(
-                    "tinyserve_{name}_bucket{{le=\"{le}\"}} {cum}\n"
+                    "tinyserve_{n}_bucket{{le=\"{}\"}} {cum}\n",
+                    prom_escape_label(&le.to_string())
                 ));
             }
             out.push_str(&format!(
-                "tinyserve_{name}_bucket{{le=\"+Inf\"}} {}\n",
+                "tinyserve_{n}_bucket{{le=\"+Inf\"}} {}\n",
                 h.total()
             ));
-            out.push_str(&format!("tinyserve_{name}_sum {}\n", h.sum));
-            out.push_str(&format!("tinyserve_{name}_count {}\n", h.total()));
+            out.push_str(&format!("tinyserve_{n}_sum {}\n", h.sum));
+            out.push_str(&format!("tinyserve_{n}_count {}\n", h.total()));
         }
         out
     }
+}
+
+/// Sanitize a metric name to the exposition charset `[a-zA-Z0-9_:]`
+/// (anything else becomes `_`; a leading digit is prefixed).
+pub fn prom_name(name: &str) -> String {
+    let mut out: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    if out.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+/// Escape a `# HELP` docstring per the text format: backslash and newline.
+pub fn prom_escape_help(text: &str) -> String {
+    text.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Escape a label value per the text format: backslash, double-quote and
+/// newline.
+pub fn prom_escape_label(value: &str) -> String {
+    value.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
 }
 
 /// JSON form of a histogram's buckets (shared by the snapshot line and the
@@ -196,6 +237,54 @@ mod tests {
         assert!(text.contains("tinyserve_ttft_seconds_bucket{le=\"0.5\"} 3"));
         let sum = 0.1 + 0.3 + 0.3 + 0.9 + 2.0;
         assert!(text.contains(&format!("tinyserve_ttft_seconds_sum {sum}")));
+    }
+
+    #[test]
+    fn prometheus_exposition_golden() {
+        // Pins the full text format: HELP before TYPE per family, help
+        // text escaped (\ and newline), names sanitized to the legal
+        // charset, exact-binary histogram bounds so the rendering is
+        // byte-stable.
+        let mut r = MetricsRegistry::new();
+        r.counter("steps", 3);
+        r.help("steps", "decode steps\ncommitted");
+        r.counter("weird.name", 7);
+        r.gauge("kv_bytes_in_use", 1024.0);
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        for x in [0.125, 0.375, 1.5] {
+            h.push(x);
+        }
+        r.histogram("lat_seconds", &h);
+        r.help("lat_seconds", "latency \\ seconds");
+        let want = "\
+# HELP tinyserve_steps decode steps\\ncommitted
+# TYPE tinyserve_steps counter
+tinyserve_steps 3
+# HELP tinyserve_weird_name weird.name
+# TYPE tinyserve_weird_name counter
+tinyserve_weird_name 7
+# HELP tinyserve_kv_bytes_in_use kv_bytes_in_use
+# TYPE tinyserve_kv_bytes_in_use gauge
+tinyserve_kv_bytes_in_use 1024
+# HELP tinyserve_lat_seconds latency \\\\ seconds
+# TYPE tinyserve_lat_seconds histogram
+tinyserve_lat_seconds_bucket{le=\"0.25\"} 1
+tinyserve_lat_seconds_bucket{le=\"0.5\"} 2
+tinyserve_lat_seconds_bucket{le=\"0.75\"} 2
+tinyserve_lat_seconds_bucket{le=\"1\"} 2
+tinyserve_lat_seconds_bucket{le=\"+Inf\"} 3
+tinyserve_lat_seconds_sum 2
+tinyserve_lat_seconds_count 3
+";
+        assert_eq!(r.prometheus(), want);
+    }
+
+    #[test]
+    fn prometheus_escaping_helpers() {
+        assert_eq!(prom_name("9lives.a-b"), "_9lives_a_b");
+        assert_eq!(prom_name("ok_name:x"), "ok_name:x");
+        assert_eq!(prom_escape_help("a\\b\nc"), "a\\\\b\\nc");
+        assert_eq!(prom_escape_label("say \"hi\"\n\\"), "say \\\"hi\\\"\\n\\\\");
     }
 
     #[test]

@@ -1019,6 +1019,75 @@ fn trace_and_metrics_streams_are_deterministic_across_executors() {
 }
 
 #[test]
+fn analytics_stream_is_deterministic_across_executors() {
+    // Analytics tentpole acceptance: with per-worker recorders and the
+    // selection audit on, the `--analytics-out` JSONL is byte-identical
+    // across same-seed runs and across executor kinds/widths under
+    // modeled time (snapshots drain serially at the commit seam, in
+    // worker order). Runs under a KV budget so accesses cross tiers.
+    // Also the CI writer for the analytics artifact — `*.jsonl` CI logs
+    // are whole-file diffed across widths.
+    let m = require!(manifest());
+    let seed = pallas_seed();
+    let run = |threads: usize, executor: ExecutorKind| -> String {
+        let pool =
+            WorkerPool::build(&m, &serve_cfg(Some(0.75)), 2, DispatchKind::LeastLoaded)
+                .expect("pool");
+        let opts = ServeOptions {
+            time_model: TimeModel::Modeled,
+            seed,
+            threads,
+            executor,
+            metrics_every: 8,
+            analytics: true,
+            audit_every: 4,
+            ..Default::default()
+        };
+        let (sink, lines) = SharedVecSink::new();
+        let mut plugins = Pipeline::new();
+        let mut fe = Frontend::builder()
+            .options(opts)
+            .analytics_sink(Box::new(sink))
+            .build_pool(pool, &mut plugins);
+        fe.set_source(Box::new(bursty_openloop(seed)));
+        while fe.has_work() {
+            fe.step().expect("step");
+        }
+        let r = fe.into_report();
+        assert!(!r.analytics.is_empty(), "report carries analytics summaries");
+        assert!(
+            r.analytics.iter().any(|a| a.accesses > 0),
+            "recorders saw page accesses"
+        );
+        assert!(
+            r.analytics.iter().any(|a| a.audit_records > 0),
+            "the selection audit fired on its cadence"
+        );
+        lines.lock().unwrap().join("\n")
+    };
+    let a = run(1, ExecutorKind::Persistent);
+    let b = run(1, ExecutorKind::Persistent);
+    assert_eq!(a, b, "same seed, same analytics bytes");
+    let c = run(4, ExecutorKind::Persistent);
+    assert_eq!(a, c, "analytics stream is width-independent");
+    let d = run(4, ExecutorKind::Scoped);
+    assert_eq!(a, d, "analytics stream is executor-independent");
+
+    // stream shape: the shared run header first (schema-versioned, no
+    // thread count), then per-worker summary / rank / audit lines
+    let first = a.lines().next().expect("nonempty analytics stream");
+    assert!(first.contains(r#""kind":"header""#), "header first: {first}");
+    assert!(!first.contains("threads"), "header is executor-independent");
+    for kind in ["analytics", "page_ranks", "audit"] {
+        assert!(
+            a.contains(&format!(r#""kind":"{kind}""#)),
+            "analytics stream missing {kind} lines"
+        );
+    }
+    write_ci_log("serve_analytics.jsonl", &a);
+}
+
+#[test]
 fn trace_span_trees_are_well_formed_across_policies_and_dispatch() {
     // Span-tree well-formedness property, swept over eviction policies x
     // dispatch kinds x seeds under KV-budget pressure (so store events

@@ -933,6 +933,89 @@ fn prop_f16_roundtrip_relative_error() {
 }
 
 #[test]
+fn prop_analytics_recorder_deterministic_across_executors() {
+    // The analytics stream's executor-independence contract: identical
+    // per-worker access/audit workloads (own PagePool + budgeted PageStore
+    // driving genuine hot/cold tier transitions) must snapshot to
+    // byte-identical JSONL whether the workers run sequentially, on scoped
+    // threads or on persistent decode threads, for every eviction policy.
+    // This is the engine-free core of the CI `--analytics-out` byte-diff
+    // (the full frontend version is the artifact-gated integration test).
+    use tinyserve::coordinator::pool::{execute_round, RoundExecutor};
+    use tinyserve::trace::{AccessTier, AnalyticsRecorder};
+    prop_check("analytics_executor_equivalence", 20, |ctx| {
+        let n_workers = 1 + ctx.rng.usize(4);
+        let policy =
+            EvictionPolicyKind::all()[ctx.rng.usize(EvictionPolicyKind::all().len())];
+        let seeds: Vec<u64> = (0..n_workers).map(|_| ctx.rng.next_u64()).collect();
+        let n_steps = ctx.scaled(5, 50);
+        let digest = |exec: RoundExecutor| -> Vec<(usize, Vec<String>)> {
+            let work: Vec<(usize, u64)> = seeds.iter().cloned().enumerate().collect();
+            execute_round(exec, work, &|w, seed: u64| {
+                let mut pool = PagePool::new(2, 8, 4, KvDtype::F32);
+                let budget = 2 * pool.page_bytes();
+                let mut store = PageStore::new(Some(budget), policy);
+                let mut rng = tinyserve::util::rng::Rng::new(seed);
+                let mut an = AnalyticsRecorder::new();
+                let mut live: Vec<u32> = Vec::new();
+                let mut lines: Vec<String> = Vec::new();
+                for step in 0..n_steps {
+                    let id = store.alloc(&mut pool);
+                    live.push(id);
+                    store.enforce_budget(&mut pool);
+                    // a few accesses per step; tier recorded *before* the
+                    // access promotes the page, like the engine feed
+                    for _ in 0..1 + rng.usize(3) {
+                        let pick = live[rng.usize(live.len())];
+                        let tier = if store.is_hot(pick) {
+                            AccessTier::Hot
+                        } else if store.is_on_disk(pick) {
+                            AccessTier::Disk
+                        } else {
+                            AccessTier::Cold
+                        };
+                        an.on_access(pick as u64, tier);
+                        store.ensure_hot(&mut pool, pick).expect("promote");
+                        store.enforce_budget(&mut pool);
+                    }
+                    if step % 4 == 0 {
+                        let k = 1 + rng.usize(4);
+                        an.on_audit(step % 2, k, rng.usize(k + 1));
+                    }
+                    let (hot, cold, disk) = store.tier_residency();
+                    an.on_step_end(hot, cold, disk);
+                    // mid-run snapshot exercises the drain-vs-cumulative
+                    // split across the executor boundary too
+                    if step == n_steps / 2 {
+                        an.snapshot_into(w, step as u64, step as f64 * 0.5, &mut lines);
+                    }
+                }
+                an.snapshot_into(w, n_steps as u64, n_steps as f64 * 0.5, &mut lines);
+                for id in live {
+                    pool.release(id);
+                }
+                lines
+            })
+        };
+        let base = digest(RoundExecutor::Sequential);
+        let variants = [
+            ("threaded", RoundExecutor::Threaded { threads: 4 }),
+            ("persistent", RoundExecutor::Persistent { threads: 4 }),
+        ];
+        for (name, exec) in variants {
+            let got = digest(exec);
+            if got != base {
+                return Err(format!(
+                    "[{}] {name} diverged:\n{got:?}\n!=\n{base:?}",
+                    policy.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_json_roundtrip() {
     use tinyserve::util::json::Json;
     prop_check("json_roundtrip", 150, |ctx| {

@@ -72,6 +72,7 @@ fn submit(id: u64, max_new: usize, deadline_ms: Option<f64>) -> ClientMsg {
         max_new,
         session: None,
         deadline_ms,
+        tier: None,
     }
 }
 
@@ -254,6 +255,65 @@ fn deferred_submits_get_a_retry_hint_and_succeed_on_resubmit() {
     assert_eq!(stats.submitted, 3);
     assert_eq!(stats.shed.submits_deferred, 1);
     assert_eq!(backend.kv_bytes_in_use(), 0);
+}
+
+#[test]
+fn stats_op_snapshots_before_and_after_a_request() {
+    // The wire-level introspection op (proto schema 3): an idle backend
+    // answers `{"op":"stats"}` with an all-zero snapshot, and after a
+    // request fully drains the follow-up snapshot shows its KV released.
+    // `stats` is never terminal, so probing mid-session must not disturb
+    // the request lifecycle. CI's loopback smoke runs this by name
+    // (`cargo test --test server stats_`).
+    let cfg = ServerConfig { exit_when_idle: true, ..ServerConfig::default() };
+    let (addr, server) = serve_mock(cfg, MockBackend::new);
+
+    let (mut stream, mut reader) = connect(addr);
+    assert_eq!(
+        read_msg(&mut reader),
+        Some(ServerMsg::Hello { schema: PROTO_SCHEMA }),
+        "hello advertises the stats-capable schema"
+    );
+    assert_eq!(PROTO_SCHEMA, 3, "stats op landed in schema 3");
+
+    send(&mut stream, &ClientMsg::Stats);
+    match read_msg(&mut reader).expect("stats reply") {
+        ServerMsg::Stats { stats, net } => {
+            assert_eq!(stats.queued_by_tier, [0, 0, 0], "idle: nothing queued");
+            assert_eq!(stats.active, 0);
+            assert_eq!(stats.workers.len(), 1, "mock backend is one worker");
+            assert_eq!(stats.workers[0].kv_bytes_in_use, 0);
+            assert_eq!(net.conns_shed, 0, "nothing shed yet");
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+
+    send(&mut stream, &submit(0, 3, None));
+    loop {
+        match read_msg(&mut reader).expect("open until terminal") {
+            ServerMsg::Finished { id: 0, .. } => break,
+            ServerMsg::Admitted { .. } | ServerMsg::Token { .. } => {}
+            other => panic!("unexpected message: {other:?}"),
+        }
+    }
+    send(&mut stream, &ClientMsg::Stats);
+    match read_msg(&mut reader).expect("second stats reply") {
+        ServerMsg::Stats { stats, .. } => {
+            assert_eq!(stats.active, 0, "request drained");
+            assert_eq!(
+                stats.workers[0].kv_bytes_in_use, 0,
+                "finished request released its KV"
+            );
+            assert!(stats.t > 0.0, "virtual clock advanced through the decode");
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+
+    send(&mut stream, &ClientMsg::Close);
+    assert_eq!(read_msg(&mut reader), None);
+    let (stats, backend) = server.join().unwrap();
+    assert_eq!(stats.submitted, 1);
+    assert!(!backend.has_work());
 }
 
 #[test]
