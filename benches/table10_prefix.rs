@@ -1,0 +1,143 @@
+//! Table 10 — cross-request shared prefix cache: a multi-tenant template
+//! workload (N tenants x M templates, zipf-popular, paraphrased question
+//! tails) served with the prefix cache off vs on, across tenant/template
+//! skews. Reports prefill-compute saved (prompt tokens whose prefill was
+//! skipped by page adoption), modeled TTFT P50/P99 delta, KV bytes
+//! deduplicated, index hit rate and publish/unpublish churn — the serving
+//! win behind "query-aware selection makes KV reuse cheap": identical
+//! token streams (pinned by the property battery and the serve-level
+//! integration test) at a fraction of the prefill compute.
+//!
+//! Time is `TimeModel::Modeled`, so the TTFT columns are deterministic
+//! from the seed and the sharing-on vs sharing-off delta is exactly the
+//! skipped prefill priced out of the virtual clock.
+//!
+//! Alongside the human table this emits `results/BENCH_table10.json`,
+//! which CI uploads and guards (the hit rate of the shared-heavy cell
+//! must be non-zero).
+
+use tinyserve::harness::{measure_prefix, scale, PrefixCase};
+use tinyserve::report::Table;
+use tinyserve::runtime::Manifest;
+use tinyserve::util::json::Json;
+
+const MODEL: &str = "tiny-trained";
+const SEED: u64 = 11;
+
+fn main() {
+    let manifest = Manifest::load(&tinyserve::artifacts_dir()).expect("artifacts");
+    let n_requests = scale(48);
+
+    // (label, tenants, templates/tenant, template share of traffic)
+    let mixes: [(&str, usize, usize, f64); 3] = [
+        ("light  2x2 p=0.3", 2, 2, 0.3),
+        ("medium 4x2 p=0.6", 4, 2, 0.6),
+        ("heavy  8x4 p=0.9", 8, 4, 0.9),
+    ];
+
+    let mut t = Table::new(
+        &format!(
+            "Table 10: shared prefix cache ({MODEL}, {n_requests} reqs/cell, \
+             modeled time; off vs on per tenant/template mix)"
+        ),
+        &[
+            "mix",
+            "prefix",
+            "hit %",
+            "skip tok",
+            "skip %",
+            "dedup MB",
+            "pub/unpub",
+            "ttft P50 ms",
+            "ttft P99 ms",
+            "P50 Δ%",
+            "viol",
+            "acc %",
+        ],
+    );
+
+    let mut bench_rows: Vec<(String, f64, f64, f64, f64)> = Vec::new();
+    for (label, tenants, templates, prob) in mixes {
+        let base_case = PrefixCase {
+            n_requests,
+            n_tenants: tenants,
+            templates_per_tenant: templates,
+            template_prob: prob,
+            prefix_cache_mb: None,
+            prefix_min_pages: 1,
+            seed: SEED,
+        };
+        let off = match measure_prefix(&manifest, MODEL, &base_case) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("skip {label} (off): {e}");
+                continue;
+            }
+        };
+        let on = match measure_prefix(
+            &manifest,
+            MODEL,
+            &PrefixCase { prefix_cache_mb: Some(16.0), ..base_case.clone() },
+        ) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("skip {label} (on): {e}");
+                continue;
+            }
+        };
+        let skip_pct =
+            on.tokens_skipped as f64 / on.prompt_tokens.max(1) as f64 * 100.0;
+        let p50_delta = (off.ttft_p50_ms - on.ttft_p50_ms)
+            / off.ttft_p50_ms.max(1e-9)
+            * 100.0;
+        for (name, r) in [("off", &off), ("on", &on)] {
+            t.row(vec![
+                label.to_string(),
+                name.to_string(),
+                format!("{:.1}", r.hit_rate * 100.0),
+                format!("{}", r.tokens_skipped),
+                if name == "on" { format!("{skip_pct:.1}") } else { "-".into() },
+                format!("{:.2}", r.bytes_deduped as f64 / 1e6),
+                format!("{}/{}", r.pages_published, r.pages_unpublished),
+                format!("{:.1}", r.ttft_p50_ms),
+                format!("{:.1}", r.ttft_p99_ms),
+                if name == "on" { format!("{p50_delta:+.1}") } else { "-".into() },
+                format!("{}", r.kv_budget_violations),
+                format!("{:.1}", r.accuracy * 100.0),
+            ]);
+        }
+        println!(
+            "{label}: {skip_pct:.1}% prefill tokens skipped, \
+             TTFT P50 {:.1} -> {:.1} ms ({p50_delta:+.1}%), hit rate {:.0}%",
+            off.ttft_p50_ms,
+            on.ttft_p50_ms,
+            on.hit_rate * 100.0
+        );
+        bench_rows.push((
+            label.to_string(),
+            on.hit_rate,
+            skip_pct,
+            p50_delta,
+            on.bytes_deduped as f64,
+        ));
+    }
+
+    t.emit(&tinyserve::results_dir(), "table10_prefix");
+    // flat per-mix scalars so the CI guard can assert on them without a
+    // JSON-path tool: <mix>_{hit_rate,skip_pct,ttft_p50_delta_pct,dedup_bytes}
+    let mut owned: Vec<(String, Json)> = Vec::new();
+    for (label, hit, skip, delta, dedup) in &bench_rows {
+        let s = label.split_whitespace().next().unwrap_or("mix");
+        owned.push((format!("{s}_hit_rate"), Json::from(*hit)));
+        owned.push((format!("{s}_skip_pct"), Json::from(*skip)));
+        owned.push((format!("{s}_ttft_p50_delta_pct"), Json::from(*delta)));
+        owned.push((format!("{s}_dedup_bytes"), Json::from(*dedup)));
+    }
+    let mut context: Vec<(&str, Json)> = vec![
+        ("model", Json::from(MODEL)),
+        ("seed", Json::from(SEED as usize)),
+        ("n_requests", Json::from(n_requests)),
+    ];
+    context.extend(owned.iter().map(|(k, v)| (k.as_str(), v.clone())));
+    t.emit_bench(&tinyserve::results_dir(), "table10", context);
+}

@@ -80,6 +80,15 @@ pub struct ServingConfig {
     /// disk pages prefetched per decode step by score-driven readahead
     /// (0 = off). Requires `spill_budget_mb`.
     pub readahead_pages: usize,
+    /// cross-request shared-prefix cache budget in MB (decimal); None =
+    /// prefix sharing off. When set, each worker keeps a `PrefixIndex` of
+    /// published read-only prompt pages and admits matching requests by
+    /// refcount bump instead of re-prefilling the shared prefix.
+    pub prefix_cache_mb: Option<f64>,
+    /// minimum whole pages a prompt must match before adoption kicks in
+    /// (short matches are not worth the index traffic). Requires
+    /// `prefix_cache_mb`; 0 means "use the default of 1".
+    pub prefix_min_pages: usize,
     pub seed: u64,
 }
 
@@ -101,6 +110,8 @@ impl Default for ServingConfig {
             spill_budget_mb: None,
             spill_dir: None,
             readahead_pages: 0,
+            prefix_cache_mb: None,
+            prefix_min_pages: 0,
             seed: 42,
         }
     }
@@ -120,6 +131,11 @@ impl ServingConfig {
     /// Disk spill tier budget in bytes (decimal MB), if enabled.
     pub fn spill_budget_bytes(&self) -> Option<usize> {
         self.spill_budget_mb.map(|mb| (mb * 1e6) as usize)
+    }
+
+    /// Shared-prefix cache budget in bytes (decimal MB), if enabled.
+    pub fn prefix_cache_bytes(&self) -> Option<usize> {
+        self.prefix_cache_mb.map(|mb| (mb * 1e6) as usize)
     }
 
     /// The spill root directory to slice per-worker configs under: an
@@ -213,6 +229,22 @@ impl ServingConfig {
                  --spill-budget-mb 256 --readahead 4, or drop --readahead"
             );
         }
+        if let Some(mb) = self.prefix_cache_mb {
+            anyhow::ensure!(
+                mb > 0.0 && mb.is_finite(),
+                "prefix_cache_mb must be positive, got {mb} \
+                 (drop --prefix-cache-mb entirely to disable prefix sharing)"
+            );
+        }
+        if self.prefix_min_pages > 0 {
+            anyhow::ensure!(
+                self.prefix_cache_mb.is_some(),
+                "--prefix-min-pages requires --prefix-cache-mb: the match \
+                 threshold only applies when the shared-prefix cache is on; \
+                 pass both, e.g. --prefix-cache-mb 16 --prefix-min-pages 2, \
+                 or drop --prefix-min-pages"
+            );
+        }
         Ok(())
     }
 }
@@ -297,6 +329,36 @@ mod tests {
         };
         ok.validate().unwrap();
         assert_eq!(ok.spill_budget_bytes(), Some(16_000_000));
+    }
+
+    #[test]
+    fn prefix_flag_pairings_are_validated() {
+        // min-pages without a prefix budget: rejected, names the pairing
+        let bad = ServingConfig { prefix_min_pages: 2, ..Default::default() };
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(
+            e.contains("--prefix-min-pages") && e.contains("--prefix-cache-mb"),
+            "{e}"
+        );
+        // zero / negative / non-finite budgets
+        for mb in [0.0, -2.0, f64::NAN] {
+            let bad =
+                ServingConfig { prefix_cache_mb: Some(mb), ..Default::default() };
+            assert!(bad.validate().is_err(), "prefix budget {mb} accepted");
+        }
+        // the consistent combo passes and converts decimal MB
+        let ok = ServingConfig {
+            prefix_cache_mb: Some(16.0),
+            prefix_min_pages: 2,
+            ..Default::default()
+        };
+        ok.validate().unwrap();
+        assert_eq!(ok.prefix_cache_bytes(), Some(16_000_000));
+        assert_eq!(ServingConfig::default().prefix_cache_bytes(), None);
+        // budget alone (default threshold) is fine too
+        ServingConfig { prefix_cache_mb: Some(1.0), ..Default::default() }
+            .validate()
+            .unwrap();
     }
 
     #[test]

@@ -84,6 +84,7 @@ use crate::trace::{
     Tracer,
 };
 use crate::util::rng::Rng;
+use crate::kvcache::prefix::{PrefixIndex, PrefixStats};
 use crate::kvcache::seq::SeqCache;
 use crate::workload::{tasks, Request, RequestSource};
 
@@ -401,6 +402,11 @@ pub struct Frontend<'a> {
     /// one session store per engine worker: snapshots hold pages of that
     /// worker's pool and cannot be restored across workers
     sessions: Vec<SessionStore>,
+    /// one shared-prefix index per engine worker (empty when
+    /// `--prefix-cache-mb` is off): published entries reference that
+    /// worker's pool pages, so cross-worker adoption is structurally
+    /// impossible, like session snapshots
+    prefix: Vec<PrefixIndex>,
     router: Router,
     metrics: ServerMetrics,
     records: Vec<RequestRecord>,
@@ -487,6 +493,24 @@ impl<'a> Frontend<'a> {
         let mut seed_rng = Rng::new(opts.seed);
         let worker_rngs = (0..n).map(|w| seed_rng.fork(w as u64)).collect();
         let sessions = (0..n).map(|_| SessionStore::new(opts.max_sessions)).collect();
+        // shared-prefix indexes: each worker gets an equal slice of
+        // --prefix-cache-mb, mirroring the KV-budget split (published
+        // pages live in that worker's pool)
+        let prefix: Vec<PrefixIndex> =
+            match pool.engine(0).cfg.prefix_cache_bytes() {
+                Some(total) => {
+                    let min_pages = pool.engine(0).cfg.prefix_min_pages;
+                    (0..n)
+                        .map(|_| {
+                            PrefixIndex::new(
+                                Some((total / n.max(1)).max(1)),
+                                min_pages,
+                            )
+                        })
+                        .collect()
+                }
+                None => Vec::new(),
+            };
         let router = Router::new(opts.n_workers);
         let profile = opts.profile.then(|| PhaseProfile::new(n));
         Frontend {
@@ -497,6 +521,7 @@ impl<'a> Frontend<'a> {
             worker_rngs,
             batcher,
             sessions,
+            prefix,
             router,
             metrics,
             records: Vec::new(),
@@ -828,6 +853,15 @@ impl<'a> Frontend<'a> {
         for mut a in std::mem::take(&mut self.preempted) {
             self.pool.engine_mut(a.engine_idx).release_mid_flight(&mut a.seq);
         }
+        // prefix indexes release their page references before the session
+        // stores clear, so teardown refcounts balance in either order
+        let mut prefix_stats = PrefixStats::default();
+        for w in 0..self.pool.len() {
+            if let Some(px) = self.prefix.get_mut(w) {
+                prefix_stats.merge(&px.stats);
+                px.clear(&mut self.pool.engine_mut(w).pool);
+            }
+        }
         for w in 0..self.pool.len() {
             let pool = &mut self.pool;
             let sessions = &mut self.sessions;
@@ -861,6 +895,7 @@ impl<'a> Frontend<'a> {
             },
             per_task: per_task_out,
             session_stats,
+            prefix_stats,
             router_stats: self.router.stats.clone(),
             batcher_stats: std::mem::take(&mut self.batcher.stats),
             metrics: self.metrics,
@@ -1119,6 +1154,21 @@ impl<'a> Frontend<'a> {
                     reused = n;
                 }
             }
+            // cross-request prefix adoption (session miss only): adopt the
+            // longest published page chain by refcount bump. Only the
+            // unmatched tail prefills below — `seq.pending()` shrinks with
+            // the adopted position, so the modeled prefill price (and with
+            // it TTFT) reflects the skipped compute.
+            let mut adopted_tokens = 0usize;
+            if reused == 0 && !self.prefix.is_empty() {
+                if let Some((cache, n)) = self.prefix[w].adopt(
+                    &self.reqs[idx].prompt,
+                    &mut self.pool.engine_mut(w).pool,
+                ) {
+                    seq.cache = cache;
+                    adopted_tokens = n;
+                }
+            }
             seq.tokens = self.reqs[idx].prompt.clone();
             self.events.push_back(ServeEvent::Admitted {
                 id: self.reqs[idx].id,
@@ -1157,6 +1207,25 @@ impl<'a> Frontend<'a> {
             let prefill_t0 = self.clock.now();
             self.clock.advance(dt);
             self.pool.stats[w].busy_s += dt;
+            if adopted_tokens > 0 {
+                let pages = adopted_tokens / self.pool.engine(w).cfg.page_size;
+                let bytes = pages * self.pool.engine(w).pool.page_bytes();
+                m.prefix_pages_adopted = pages;
+                m.prefix_tokens_skipped = adopted_tokens;
+                m.prefix_bytes_deduped = bytes;
+                self.metrics.total_prefix_pages_adopted += pages as u64;
+                self.metrics.total_prefix_tokens_skipped += adopted_tokens as u64;
+                self.metrics.total_prefix_bytes_deduped += bytes as u64;
+            }
+            // publish this prompt's freshly-prefilled full pages for future
+            // cross-request adoption (budget-bounded; LRU leaves unpublish)
+            if !self.prefix.is_empty() {
+                self.prefix[w].publish(
+                    &self.reqs[idx].prompt,
+                    &seq.cache,
+                    &mut self.pool.engine_mut(w).pool,
+                );
+            }
             // snapshot the prompt prefix for future session turns
             if let Some(sid) = session {
                 let covered = seq.cache.pos;
@@ -1935,6 +2004,9 @@ impl<'a> Frontend<'a> {
         r.counter("spill_in_bytes", m.total_spill_in_bytes);
         r.counter("disk_faults", m.total_disk_faults);
         r.counter("readahead_hits", m.total_readahead_hits);
+        r.counter("prefix_pages_adopted", m.total_prefix_pages_adopted);
+        r.counter("prefix_tokens_skipped", m.total_prefix_tokens_skipped);
+        r.counter("prefix_bytes_deduped", m.total_prefix_bytes_deduped);
         r.counter("budget_violations", m.budget_violations);
         r.gauge("kv_bytes_in_use", self.pool.total_kv_bytes() as f64);
         r.gauge("kv_bytes_peak", m.kv_bytes_peak as f64);
@@ -1961,6 +2033,10 @@ impl<'a> Frontend<'a> {
         r.help("steps", "committed decode rounds");
         r.help("kv_bytes_in_use", "resident KV bytes across pool workers");
         r.help("requests_stalled", "stall-watchdog firings (no token progress)");
+        r.help(
+            "prefix_tokens_skipped",
+            "prompt tokens whose prefill was skipped via shared-prefix adoption",
+        );
         r.help("token_burn_rate", "new tokens per virtual second");
         r.help("request_burn_rate", "finished requests per virtual second");
         r.help(

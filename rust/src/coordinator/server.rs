@@ -189,6 +189,9 @@ pub struct ServeReport {
     pub metrics: ServerMetrics,
     pub requests: Vec<RequestRecord>,
     pub session_stats: SessionStats,
+    /// merged shared-prefix cache counters across workers (all zero when
+    /// `--prefix-cache-mb` is off)
+    pub prefix_stats: crate::kvcache::prefix::PrefixStats,
     pub router_stats: RouterStats,
     pub batcher_stats: BatcherStats,
     /// exact-match accuracy over requests with a known answer

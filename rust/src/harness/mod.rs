@@ -408,6 +408,126 @@ pub fn measure_eviction(
     })
 }
 
+/// One shared-prefix-cache serving measurement (Table 10 cell): a seeded
+/// multi-tenant template workload served under `TimeModel::Modeled`, with
+/// the prefix cache on (`prefix_cache_mb = Some(..)`) or off (`None`, the
+/// baseline column). Modeled time prices the skipped prefill out of the
+/// virtual clock, so TTFT deltas are deterministic from the seed.
+#[derive(Debug, Clone)]
+pub struct PrefixCase {
+    pub n_requests: usize,
+    pub n_tenants: usize,
+    pub templates_per_tenant: usize,
+    pub template_prob: f64,
+    /// None = sharing off
+    pub prefix_cache_mb: Option<f64>,
+    pub prefix_min_pages: usize,
+    pub seed: u64,
+}
+
+impl Default for PrefixCase {
+    fn default() -> Self {
+        PrefixCase {
+            n_requests: 32,
+            n_tenants: 4,
+            templates_per_tenant: 2,
+            template_prob: 0.6,
+            prefix_cache_mb: Some(16.0),
+            prefix_min_pages: 1,
+            seed: 11,
+        }
+    }
+}
+
+/// One `measure_prefix` result (Table 10 row).
+#[derive(Debug, Clone)]
+pub struct PrefixRun {
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// total prompt tokens offered by the workload
+    pub prompt_tokens: u64,
+    /// prefill tokens skipped via shared-prefix adoption
+    pub tokens_skipped: u64,
+    /// KV bytes deduplicated by adoption (hot rate)
+    pub bytes_deduped: u64,
+    /// fraction of index lookups that adopted at least one page
+    pub hit_rate: f64,
+    pub pages_published: u64,
+    pub pages_unpublished: u64,
+    /// steps that ended above the KV byte budget (0 = invariant held)
+    pub kv_budget_violations: u64,
+    /// virtual wall-clock of the run (modeled seconds)
+    pub wall_s: f64,
+    pub accuracy: f64,
+}
+
+/// Serve a seeded multi-tenant template workload through the frontend and
+/// aggregate the shared-prefix counters (Table 10).
+pub fn measure_prefix(
+    manifest: &Manifest,
+    model: &str,
+    case: &PrefixCase,
+) -> Result<PrefixRun> {
+    use crate::coordinator::{Frontend, ServeOptions, TimeModel};
+    use crate::workload::{OpenLoopConfig, OpenLoopGen};
+
+    let cfg = ServingConfig {
+        model: model.to_string(),
+        policy: PolicyKind::TinyServe,
+        budget: 256,
+        max_batch: 4,
+        prefix_cache_mb: case.prefix_cache_mb,
+        prefix_min_pages: case.prefix_min_pages,
+        ..Default::default()
+    };
+    let mut engine = Engine::from_manifest(manifest, cfg)?;
+    engine.warmup().ok();
+    let trace = OpenLoopGen::new(OpenLoopConfig {
+        n_requests: case.n_requests,
+        rate_rps: 40.0,
+        prompt_chars: (300, 700),
+        new_tokens: (8, 24),
+        // sessions off: prefix sharing, not the session store, must carry
+        // the reuse (template requests arrive with `session = None`)
+        session_reuse_prob: 0.0,
+        n_sessions: 0,
+        n_tenants: case.n_tenants,
+        templates_per_tenant: case.templates_per_tenant,
+        template_prob: case.template_prob,
+        seed: case.seed,
+        ..Default::default()
+    })
+    .collect_all();
+    let prompt_tokens: u64 = trace.iter().map(|r| r.prompt.len() as u64).sum();
+    let opts = ServeOptions {
+        time_model: TimeModel::Modeled,
+        seed: case.seed,
+        ..Default::default()
+    };
+    let mut plugins = crate::plugins::Pipeline::new();
+    let mut fe = Frontend::builder().options(opts).build(&mut engine, &mut plugins);
+    for req in &trace {
+        fe.submit(req.clone());
+    }
+    while fe.has_work() {
+        fe.step()?;
+    }
+    let r = fe.into_report();
+    Ok(PrefixRun {
+        ttft_p50_ms: r.metrics.request_ttft.p50() * 1e3,
+        ttft_p99_ms: r.metrics.request_ttft.p99() * 1e3,
+        prompt_tokens,
+        tokens_skipped: r.prefix_stats.tokens_skipped,
+        bytes_deduped: r.prefix_stats.bytes_deduped,
+        hit_rate: r.prefix_stats.hit_rate(),
+        pages_published: r.prefix_stats.pages_published,
+        pages_unpublished: r.prefix_stats.pages_unpublished,
+        kv_budget_violations: r.metrics.budget_violations,
+        wall_s: r.wall_s,
+        accuracy: r.accuracy,
+    })
+}
+
 /// Perplexity of the trained model on held-out task docs under a policy —
 /// the Table 7 "PPL" column (teacher-forcing through the serving path).
 pub fn measure_ppl(

@@ -4,11 +4,13 @@
 
 pub mod dtype;
 pub mod pool;
+pub mod prefix;
 pub mod seq;
 pub mod store;
 
 pub use dtype::Slab;
 pub use pool::{PageId, PagePool};
+pub use prefix::{PrefixIndex, PrefixStats};
 pub use seq::{PageEntry, SeqCache};
 pub use store::{
     default_spill_root, EvictionPolicyKind, PageStore, SpillConfig, SpillError,

@@ -1,0 +1,511 @@
+//! Cross-request shared prefix cache: page-granular KV dedup for common
+//! prompt prefixes (system prompts, few-shot templates).
+//!
+//! `PrefixIndex` maps page-aligned token chunks of already-prefilled
+//! prompts to the pool pages holding their KV rows. A new request hashes
+//! its prompt chunk by chunk (rolling hash over token-id chunks of
+//! `page_size`), walks the index for the longest published match, and
+//! *adopts* the matching pages by refcount bump — only the unmatched tail
+//! is prefilled. Prefill computes K/V purely from `(token, position)`, so
+//! an adopted page is bit-identical to the page the request would have
+//! produced itself: adoption is a pure compute/memory optimization and
+//! token streams are unchanged (the property battery pins this).
+//!
+//! Published pages are copy-on-write: the index holds its own pool
+//! reference, so a sharer that appends into a shared partial page trips
+//! `SeqCache`'s COW guard and privatizes first. The index is bounded by a
+//! byte budget (`--prefix-cache-mb`); over budget, leaf entries unpublish
+//! in strict LRU order (unique virtual ticks, so victim choice is
+//! deterministic) and release their page reference. Chunk token-ids are
+//! stored verbatim and compared on every walk, so a hash collision can
+//! never splice the wrong KV pages into a request.
+
+use std::collections::HashMap;
+
+use super::pool::{PageId, PagePool};
+use super::seq::{PageEntry, SeqCache};
+
+/// Index key: (chain depth in pages, cumulative chunk hash). Depth keeps
+/// equal-hash prefixes of different lengths from colliding structurally.
+type Key = (u32, u64);
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Extend a cumulative FNV-1a hash with one page-sized token chunk.
+fn extend_hash(mut h: u64, chunk: &[i32]) -> u64 {
+    for &t in chunk {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+#[derive(Debug)]
+struct Entry {
+    page: PageId,
+    /// the chunk's token ids, verbatim — collision-proof verification
+    tokens: Vec<i32>,
+    parent: Option<Key>,
+    /// published children (deeper chunks whose chain runs through here);
+    /// only childless leaves are unpublish victims, so a chain never
+    /// dangles
+    children: u32,
+    /// strictly unique LRU tick (bumped on adoption)
+    last_used: u64,
+}
+
+/// Counters for the serve report and the table10 bench. All integers, so
+/// merging across workers is exact and deterministic.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// prompts walked against the index
+    pub lookups: u64,
+    /// lookups that adopted at least one page
+    pub hits: u64,
+    /// lookups that adopted nothing
+    pub misses: u64,
+    /// shared pages adopted by refcount bump
+    pub pages_adopted: u64,
+    /// prefill tokens skipped thanks to adoption
+    pub tokens_skipped: u64,
+    /// KV bytes deduplicated (adopted pages at the hot rate)
+    pub bytes_deduped: u64,
+    /// pages published into the index over the run
+    pub pages_published: u64,
+    /// pages unpublished by budget pressure
+    pub pages_unpublished: u64,
+}
+
+impl PrefixStats {
+    pub fn merge(&mut self, o: &PrefixStats) {
+        self.lookups += o.lookups;
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.pages_adopted += o.pages_adopted;
+        self.tokens_skipped += o.tokens_skipped;
+        self.bytes_deduped += o.bytes_deduped;
+        self.pages_published += o.pages_published;
+        self.pages_unpublished += o.pages_unpublished;
+    }
+
+    /// Fraction of lookups that adopted at least one page.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+}
+
+/// Per-worker shared prefix index. Pages referenced here carry one pool
+/// refcount owned by the index itself (`publish` retains, unpublish and
+/// `clear` release), so a published page can never be freed behind the
+/// index's back — "backing page freed" is exactly the unpublish path.
+pub struct PrefixIndex {
+    entries: HashMap<Key, Entry>,
+    /// byte budget for published pages (hot rate); `None` = unbounded
+    budget_bytes: Option<usize>,
+    /// minimum matched pages before adoption pays off
+    min_pages: usize,
+    tick: u64,
+    bytes: usize,
+    pub stats: PrefixStats,
+}
+
+impl PrefixIndex {
+    pub fn new(budget_bytes: Option<usize>, min_pages: usize) -> Self {
+        PrefixIndex {
+            entries: HashMap::new(),
+            budget_bytes,
+            min_pages: min_pages.max(1),
+            tick: 0,
+            bytes: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bytes of published pages charged against the index budget.
+    pub fn bytes_published(&self) -> usize {
+        self.bytes
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Longest-prefix match: walk `prompt` in page-sized chunks against
+    /// the published chains and adopt every matching page by refcount
+    /// bump. Coverage is capped at `prompt.len() - 1` so the final prompt
+    /// token is always prefilled by the adopter (it produces the first
+    /// logits). Returns the adopted cache and the tokens covered, or
+    /// `None` when fewer than `min_pages` pages match.
+    pub fn adopt(
+        &mut self,
+        prompt: &[i32],
+        pool: &mut PagePool,
+    ) -> Option<(SeqCache, usize)> {
+        self.stats.lookups += 1;
+        let s = pool.page_size;
+        let max_cover = prompt.len().saturating_sub(1);
+        let mut matched: Vec<Key> = Vec::new();
+        let mut h = FNV_OFFSET;
+        let mut depth = 0u32;
+        for chunk in prompt.chunks_exact(s) {
+            if (depth as usize + 1) * s > max_cover {
+                break;
+            }
+            h = extend_hash(h, chunk);
+            depth += 1;
+            match self.entries.get(&(depth, h)) {
+                Some(e) if e.tokens == chunk => matched.push((depth, h)),
+                _ => break,
+            }
+        }
+        if matched.len() < self.min_pages {
+            self.stats.misses += 1;
+            return None;
+        }
+        let mut pages = Vec::with_capacity(matched.len());
+        for (i, key) in matched.iter().enumerate() {
+            let tick = self.next_tick();
+            let e = self.entries.get_mut(key).expect("matched entry");
+            e.last_used = tick;
+            pool.retain(e.page);
+            pages.push(PageEntry { id: e.page, base_pos: i * s });
+        }
+        let covered = pages.len() * s;
+        self.stats.hits += 1;
+        self.stats.pages_adopted += pages.len() as u64;
+        self.stats.tokens_skipped += covered as u64;
+        self.stats.bytes_deduped += (pages.len() * pool.page_bytes()) as u64;
+        Some((SeqCache { pages, pos: covered, resident: covered }, covered))
+    }
+
+    /// Publish a freshly-prefilled prompt's full pages into the index.
+    /// Each newly published page gains one index-owned pool reference.
+    /// Chunks already published (by this or an earlier request) are
+    /// chained through, not duplicated; a token mismatch on an existing
+    /// key (hash collision) stops the chain — nothing past it could ever
+    /// be adopted. Over-budget publishing unpublishes LRU leaves.
+    pub fn publish(
+        &mut self,
+        prompt: &[i32],
+        cache: &SeqCache,
+        pool: &mut PagePool,
+    ) {
+        let s = pool.page_size;
+        let mut h = FNV_OFFSET;
+        let mut parent: Option<Key> = None;
+        for (i, chunk) in prompt.chunks_exact(s).enumerate() {
+            // only fully-filled pages at the expected position qualify:
+            // the page's rows must be exactly this chunk's prefill output
+            let Some(e) = cache.pages.get(i) else { break };
+            if e.base_pos != i * s || pool.filled(e.id) < s {
+                break;
+            }
+            h = extend_hash(h, chunk);
+            let key = ((i + 1) as u32, h);
+            if let Some(existing) = self.entries.get(&key) {
+                if existing.tokens != chunk {
+                    break; // hash collision: never chain past a mismatch
+                }
+                parent = Some(key);
+                continue;
+            }
+            pool.retain(e.id);
+            let tick = self.next_tick();
+            self.entries.insert(
+                key,
+                Entry {
+                    page: e.id,
+                    tokens: chunk.to_vec(),
+                    parent,
+                    children: 0,
+                    last_used: tick,
+                },
+            );
+            if let Some(pk) = parent {
+                self.entries.get_mut(&pk).expect("parent entry").children += 1;
+            }
+            self.bytes += pool.page_bytes();
+            self.stats.pages_published += 1;
+            parent = Some(key);
+        }
+        self.enforce_budget(pool);
+    }
+
+    /// Unpublish LRU leaves until published bytes fit the budget.
+    fn enforce_budget(&mut self, pool: &mut PagePool) {
+        let Some(budget) = self.budget_bytes else { return };
+        while self.bytes > budget {
+            if !self.unpublish_lru(pool) {
+                break; // only reachable when the index is already empty
+            }
+        }
+    }
+
+    /// Remove the least-recently-used childless entry, releasing its page
+    /// reference. Returns false when nothing is removable.
+    fn unpublish_lru(&mut self, pool: &mut PagePool) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.children == 0)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(&k, _)| k);
+        let Some(key) = victim else { return false };
+        let e = self.entries.remove(&key).expect("victim entry");
+        if let Some(pk) = e.parent {
+            self.entries.get_mut(&pk).expect("parent entry").children -= 1;
+        }
+        pool.release(e.page);
+        self.bytes -= pool.page_bytes();
+        self.stats.pages_unpublished += 1;
+        true
+    }
+
+    /// Drop every published entry, releasing the index's page references
+    /// (run teardown; pairs with `SessionStore::clear`).
+    pub fn clear(&mut self, pool: &mut PagePool) {
+        for (_, e) in self.entries.drain() {
+            pool.release(e.page);
+        }
+        self.bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KvDtype;
+
+    fn pool() -> PagePool {
+        PagePool::new(1, 4, 4, KvDtype::F32)
+    }
+
+    /// Simulate prefill: one page-table entry per 4 tokens, rows encode
+    /// the token id so tests can check adopted content.
+    fn prefill(tokens: &[i32], pool: &mut PagePool) -> SeqCache {
+        let mut c = SeqCache::new();
+        for &t in tokens {
+            let (page, slot) = c.slot_for_next(pool);
+            pool.write_token(page, slot, 0, &[t as f32; 4], &[t as f32; 4]);
+            c.commit_token();
+        }
+        c
+    }
+
+    fn toks(n: usize, base: i32) -> Vec<i32> {
+        (0..n as i32).map(|i| base + i).collect()
+    }
+
+    #[test]
+    fn publish_then_adopt_shares_pages() {
+        let mut p = pool();
+        let mut ix = PrefixIndex::new(None, 1);
+        let prompt = toks(10, 100);
+        let cache = prefill(&prompt, &mut p);
+        ix.publish(&prompt, &cache, &mut p);
+        // pages 0 and 1 are full (8 tokens); the partial third never
+        // publishes
+        assert_eq!(ix.len(), 2);
+        assert_eq!(p.refcount(cache.pages[0].id), 2);
+        assert_eq!(p.refcount(cache.pages[2].id), 1);
+
+        // same template, different tail: both full pages adopt
+        let mut prompt2 = toks(8, 100);
+        prompt2.extend_from_slice(&[900, 901, 902]);
+        let (adopted, covered) = ix.adopt(&prompt2, &mut p).expect("hit");
+        assert_eq!(covered, 8);
+        assert_eq!(adopted.pages.len(), 2);
+        assert_eq!(adopted.pages[0].id, cache.pages[0].id, "same page shared");
+        assert_eq!(adopted.pos, 8);
+        assert_eq!(p.refcount(cache.pages[0].id), 3);
+        assert_eq!(p.key_row(adopted.pages[1].id, 0, 0), vec![104.0; 4]);
+        assert_eq!(ix.stats.hits, 1);
+        assert_eq!(ix.stats.tokens_skipped, 8);
+        assert_eq!(ix.stats.pages_adopted, 2);
+    }
+
+    #[test]
+    fn adoption_never_covers_the_last_prompt_token() {
+        let mut p = pool();
+        let mut ix = PrefixIndex::new(None, 1);
+        let prompt = toks(8, 0);
+        let cache = prefill(&prompt, &mut p);
+        ix.publish(&prompt, &cache, &mut p);
+        // identical 8-token prompt: only the first page may adopt — the
+        // final token must be prefilled by the adopter
+        let (_, covered) = ix.adopt(&prompt, &mut p).expect("hit");
+        assert_eq!(covered, 4);
+        // a 9-token prompt sharing both pages adopts both
+        let prompt9 = toks(9, 0);
+        let (_, covered) = ix.adopt(&prompt9, &mut p).expect("hit");
+        assert_eq!(covered, 8);
+    }
+
+    #[test]
+    fn divergent_chunk_stops_the_match() {
+        let mut p = pool();
+        let mut ix = PrefixIndex::new(None, 1);
+        let prompt = toks(12, 0);
+        let cache = prefill(&prompt, &mut p);
+        ix.publish(&prompt, &cache, &mut p);
+        // second chunk diverges: only page 0 matches
+        let mut alt = toks(12, 0);
+        alt[5] = -7;
+        let (_, covered) = ix.adopt(&alt, &mut p).expect("hit");
+        assert_eq!(covered, 4);
+        // fully divergent prompt: miss
+        assert!(ix.adopt(&toks(12, 500), &mut p).is_none());
+        assert_eq!(ix.stats.misses, 1);
+    }
+
+    #[test]
+    fn min_pages_gates_small_matches() {
+        let mut p = pool();
+        let mut ix = PrefixIndex::new(None, 2);
+        let prompt = toks(12, 0);
+        let cache = prefill(&prompt, &mut p);
+        ix.publish(&prompt, &cache, &mut p);
+        // only one page matches -> below min_pages, no adoption
+        let mut alt = toks(12, 0);
+        alt[5] = -7;
+        assert!(ix.adopt(&alt, &mut p).is_none());
+        // two matching pages clear the bar
+        let long = toks(12, 0);
+        let (_, covered) = ix.adopt(&long, &mut p).expect("hit");
+        assert_eq!(covered, 8);
+    }
+
+    #[test]
+    fn budget_unpublishes_lru_leaves_first() {
+        let mut p = pool();
+        let pb = p.page_bytes();
+        // room for two published pages
+        let mut ix = PrefixIndex::new(Some(2 * pb), 1);
+        let a = toks(5, 0);
+        let ca = prefill(&a, &mut p);
+        ix.publish(&a, &ca, &mut p);
+        let b = toks(5, 100);
+        let cb = prefill(&b, &mut p);
+        ix.publish(&b, &cb, &mut p);
+        assert_eq!(ix.len(), 2);
+        assert_eq!(ix.bytes_published(), 2 * pb);
+        // touch A so B becomes the LRU victim
+        let (ad, _) = ix.adopt(&toks(5, 0), &mut p).expect("hit");
+        // publishing C evicts B (LRU leaf), keeps A
+        let c = toks(5, 200);
+        let cc = prefill(&c, &mut p);
+        ix.publish(&c, &cc, &mut p);
+        assert_eq!(ix.len(), 2);
+        assert_eq!(ix.stats.pages_unpublished, 1);
+        assert!(ix.adopt(&toks(5, 100), &mut p).is_none(), "B unpublished");
+        assert!(ix.adopt(&toks(5, 0), &mut p).is_some(), "A survives");
+        assert!(ix.adopt(&toks(5, 200), &mut p).is_some(), "C survives");
+        // B's page reference was released by the unpublish
+        assert_eq!(p.refcount(cb.pages[0].id), 1);
+        let _ = ad;
+    }
+
+    #[test]
+    fn chains_unpublish_leaf_first_and_clear_balances() {
+        let mut p = pool();
+        let pb = p.page_bytes();
+        let mut ix = PrefixIndex::new(Some(3 * pb), 1);
+        let prompt = toks(13, 0); // three full pages
+        let cache = prefill(&prompt, &mut p);
+        ix.publish(&prompt, &cache, &mut p);
+        assert_eq!(ix.len(), 3);
+        // a fresh one-page publish forces one eviction: the chain's LEAF
+        // (depth 3) goes, never an interior page a child still needs
+        let b = toks(5, 500);
+        let cb = prefill(&b, &mut p);
+        ix.publish(&b, &cb, &mut p);
+        assert_eq!(ix.len(), 3);
+        let (_, covered) = ix.adopt(&toks(13, 0), &mut p).expect("hit");
+        assert_eq!(covered, 8, "depth-3 leaf gone, depth 1-2 intact");
+        // teardown releases every index reference
+        ix.clear(&mut p);
+        assert_eq!(ix.bytes_published(), 0);
+        for e in cache.pages.iter().chain(cb.pages.iter()) {
+            assert_eq!(p.refcount(e.id), 1, "only the owning cache remains");
+        }
+    }
+
+    #[test]
+    fn republish_is_idempotent() {
+        let mut p = pool();
+        let mut ix = PrefixIndex::new(None, 1);
+        let prompt = toks(9, 0);
+        let c1 = prefill(&prompt, &mut p);
+        ix.publish(&prompt, &c1, &mut p);
+        let c2 = prefill(&prompt, &mut p);
+        ix.publish(&prompt, &c2, &mut p);
+        assert_eq!(ix.len(), 2, "second publish chained, not duplicated");
+        assert_eq!(ix.stats.pages_published, 2);
+        // the index still references c1's pages, not c2's
+        assert_eq!(p.refcount(c1.pages[0].id), 2);
+        assert_eq!(p.refcount(c2.pages[0].id), 1);
+    }
+
+    #[test]
+    fn adopted_cache_appends_copy_on_write() {
+        let mut p = pool();
+        let mut ix = PrefixIndex::new(None, 1);
+        let prompt = toks(9, 0);
+        let cache = prefill(&prompt, &mut p);
+        ix.publish(&prompt, &cache, &mut p);
+        let (mut adopted, covered) = ix.adopt(&prompt, &mut p).expect("hit");
+        assert_eq!(covered, 8);
+        // finish the tail then append a decode token: the adopted full
+        // pages are never written; fresh pages take the new tokens
+        let shared: Vec<_> = adopted.pages.iter().map(|e| e.id).collect();
+        for &t in &prompt[covered..] {
+            let (page, slot) = adopted.slot_for_next(&mut p);
+            assert!(!shared.contains(&page), "no write into a shared page");
+            p.write_token(page, slot, 0, &[t as f32; 4], &[t as f32; 4]);
+            adopted.commit_token();
+        }
+        assert_eq!(adopted.pos, 9);
+        for id in &shared {
+            assert_eq!(p.refcount(*id), 3, "cache + index + adopter");
+        }
+    }
+
+    #[test]
+    fn stats_merge_sums_counters() {
+        let mut a = PrefixStats {
+            lookups: 2,
+            hits: 1,
+            misses: 1,
+            pages_adopted: 3,
+            tokens_skipped: 12,
+            bytes_deduped: 1024,
+            pages_published: 4,
+            pages_unpublished: 1,
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.lookups, 4);
+        assert_eq!(a.pages_adopted, 6);
+        assert_eq!(a.tokens_skipped, 24);
+        assert_eq!(a.bytes_deduped, 2048);
+        assert_eq!(a.pages_published, 8);
+        assert_eq!(a.pages_unpublished, 2);
+        assert!((a.hit_rate() - 0.5).abs() < 1e-12);
+    }
+}

@@ -40,12 +40,39 @@ impl SeqCache {
         }
     }
 
+    /// Copy-on-write primitive for a partially-filled page: deep-copy the
+    /// entry's page (rows *and* bounding-box metadata, carried verbatim by
+    /// `PagePool::clone_page`) into a private page at the same `base_pos`.
+    /// The single copy path shared by `snapshot`, `restore_prefix` and the
+    /// COW-append guard below — bbox handling cannot drift between them.
+    fn clone_partial_page(e: PageEntry, pool: &mut PagePool) -> PageEntry {
+        PageEntry { id: pool.clone_page(e.id), base_pos: e.base_pos }
+    }
+
+    /// Append-side COW guard: if the page about to be written is shared
+    /// (prefix-cache adoption or a restored snapshot left a refcount > 1
+    /// partial page in the table), privatize it first so `write_token`'s
+    /// exclusive-writer invariant holds for every sharer.
+    fn cow_last_page(&mut self, pool: &mut PagePool) {
+        if let Some(&e) = self.pages.last() {
+            if pool.refcount(e.id) > 1 {
+                let ne = Self::clone_partial_page(e, pool);
+                pool.release(e.id);
+                *self.pages.last_mut().unwrap() = ne;
+            }
+        }
+    }
+
     /// Begin writing token at `self.pos`: returns (page, slot), allocating
-    /// a fresh page when the previous one is full (or was evicted).
+    /// a fresh page when the previous one is full (or was evicted) and
+    /// privatizing a shared partial page (copy-on-write) before handing
+    /// out a writable slot in it.
     pub fn slot_for_next(&mut self, pool: &mut PagePool) -> (PageId, usize) {
         if self.needs_new_page(pool) {
             let id = pool.alloc();
             self.pages.push(PageEntry { id, base_pos: self.pos });
+        } else {
+            self.cow_last_page(pool);
         }
         let e = *self.pages.last().unwrap();
         (e.id, self.pos - e.base_pos)
@@ -62,6 +89,8 @@ impl SeqCache {
         if self.needs_new_page(pool) {
             let id = store.alloc(pool);
             self.pages.push(PageEntry { id, base_pos: self.pos });
+        } else {
+            self.cow_last_page(pool);
         }
         let e = *self.pages.last().unwrap();
         (e.id, self.pos - e.base_pos)
@@ -102,7 +131,7 @@ impl SeqCache {
             let last = i + 1 == self.pages.len();
             let partial = pool.filled(e.id) < pool.page_size;
             if last && partial {
-                pages.push(PageEntry { id: pool.clone_page(e.id), base_pos: e.base_pos });
+                pages.push(Self::clone_partial_page(*e, pool));
             } else {
                 pool.retain(e.id);
                 pages.push(*e);
@@ -142,10 +171,7 @@ impl SeqCache {
             if partial {
                 // a partial page is necessarily the last kept page; clone it
                 // so the restored sequence can append into it
-                pages.push(PageEntry {
-                    id: pool.clone_page(e.id),
-                    base_pos: e.base_pos,
-                });
+                pages.push(Self::clone_partial_page(*e, pool));
             } else {
                 pool.retain(e.id);
                 pages.push(*e);
@@ -302,6 +328,67 @@ mod tests {
         snap.clear(&mut pool);
         assert_eq!(pool.pages_in_use(), 0);
         pool.validate().unwrap();
+    }
+
+    #[test]
+    fn cow_append_privatizes_shared_partial_page() {
+        let (mut pool, mut seq) = setup();
+        for i in 0..6 {
+            push_token(&mut seq, &mut pool, i as f32);
+        }
+        // share the trailing partial page, as prefix adoption would
+        let shared = seq.pages[1].id;
+        pool.retain(shared);
+        assert_eq!(pool.refcount(shared), 2);
+        // the next append must copy-on-write, not mutate the shared page
+        push_token(&mut seq, &mut pool, 99.0);
+        let private = seq.pages[1].id;
+        assert_ne!(private, shared, "append cloned the shared page");
+        assert_eq!(seq.pages[1].base_pos, 4, "base_pos survives the COW copy");
+        assert_eq!(pool.refcount(shared), 1, "seq dropped its shared ref");
+        assert_eq!(pool.refcount(private), 1);
+        // shared original is untouched; the private copy has the new token
+        assert_eq!(pool.filled(shared), 2);
+        assert_eq!(pool.filled(private), 3);
+        assert_eq!(pool.key_row(private, 0, 2), vec![99.0; 4]);
+        // balance: drop both refs, pool empties
+        pool.release(shared);
+        seq.clear(&mut pool);
+        assert_eq!(pool.pages_in_use(), 0);
+        pool.validate().unwrap();
+    }
+
+    #[test]
+    fn clone_partial_page_copies_bboxes_bit_equal() {
+        let mut pool = PagePool::new(2, 4, 4, KvDtype::F32);
+        let mut seq = SeqCache::new();
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..3 {
+            let row: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+            let (page, slot) = seq.slot_for_next(&mut pool);
+            for l in 0..2 {
+                pool.write_token(page, slot, l, &row, &row);
+            }
+            seq.commit_token();
+        }
+        let src = seq.pages[0].id;
+        // exercise every partial-page copy path off the one shared helper:
+        // snapshot, restore, and the COW-append guard
+        let snap = seq.snapshot(&mut pool);
+        let restored = SeqCache::restore(&snap, &mut pool);
+        pool.retain(src);
+        push_token(&mut seq, &mut pool, 7.0); // COW-append clone, then write
+        assert_ne!(seq.pages[0].id, src, "guard fired on the shared page");
+        for copy in [snap.pages[0].id, restored.pages[0].id] {
+            for l in 0..2 {
+                let a: Vec<u32> =
+                    pool.meta(src, l).iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u32> =
+                    pool.meta(copy, l).iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b, "bboxes bit-equal after copy (layer {l})");
+            }
+        }
+        pool.release(src);
     }
 
     #[test]

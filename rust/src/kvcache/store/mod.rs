@@ -362,20 +362,27 @@ impl PageStore {
 
     /// Reconcile residency against pool refcounts: pages allocated behind
     /// the store's back (snapshot clones, prefill) become Hot; freed pages
-    /// leave the replacement structures. O(cap_pages) — called once per
-    /// enforcement point, not per token.
+    /// leave the replacement structures. A page is tracked (and charged in
+    /// `bytes_in_use`) **once per PageId** however many sequences, session
+    /// snapshots or prefix-index entries share it — the refcount is fed to
+    /// the policy as a sharer-count signal instead of inflating the byte
+    /// accounting. O(cap_pages) — called once per enforcement point, not
+    /// per token.
     pub fn sync(&mut self, pool: &PagePool) {
         if !self.enabled() {
             return;
         }
         self.ensure_cap(pool.cap_pages());
         for id in 0..pool.cap_pages() as u32 {
-            let live = pool.refcount(id) > 0;
-            match (live, self.state[id as usize].tier) {
+            let rc = pool.refcount(id);
+            match (rc > 0, self.state[id as usize].tier) {
                 (true, Tier::Untracked) => self.register_hot(id),
                 (false, Tier::Untracked) => {}
                 (false, _) => self.remove(id),
                 (true, _) => {}
+            }
+            if rc > 0 {
+                self.policy.on_sharers(id, rc);
             }
         }
     }
@@ -760,6 +767,69 @@ mod tests {
         assert_eq!(hot + cold, 6);
         for id in live {
             p.release(id);
+        }
+        s.sync(&p);
+        assert_eq!(s.bytes_in_use(&p), 0);
+    }
+
+    #[test]
+    fn shared_prefix_page_counts_once_in_bytes_in_use() {
+        let mut p = pool();
+        let budget = 2 * p.page_bytes();
+        let mut s = PageStore::new(Some(budget), EvictionPolicyKind::Lru);
+        let shared = s.alloc(&mut p);
+        fill_page(&mut p, shared, 1.0);
+        // Two more owners adopt the page (prefix index entry + a second
+        // sequence's page table) — exactly what cross-request prefix
+        // sharing does.
+        p.retain(shared);
+        p.retain(shared);
+        s.sync(&p);
+        assert_eq!(p.refcount(shared), 3);
+        assert_eq!(
+            s.bytes_in_use(&p),
+            p.page_bytes(),
+            "a 3-sharer page is charged once, not per owner"
+        );
+        // A private page alongside still fits the two-page budget: the
+        // shared page does not phantom-fill the budget per sharer.
+        let private = s.alloc(&mut p);
+        fill_page(&mut p, private, 2.0);
+        s.enforce_budget(&mut p);
+        assert!(s.bytes_in_use(&p) <= budget);
+        assert_eq!(s.bytes_in_use(&p), 2 * p.page_bytes());
+        assert_eq!(s.stats.demotions, 0, "nothing over budget, nothing demoted");
+        p.release(private);
+        for _ in 0..3 {
+            p.release(shared);
+        }
+        s.sync(&p);
+        assert_eq!(s.bytes_in_use(&p), 0);
+    }
+
+    #[test]
+    fn sync_feeds_sharers_so_query_aware_demotes_private_first() {
+        let mut p = pool();
+        // Room for one hot page plus one cold page: exactly one demotion.
+        let budget = p.page_bytes() + p.page_bytes_cold();
+        let mut s = PageStore::new(Some(budget), EvictionPolicyKind::QueryAwareCold);
+        let shared = s.alloc(&mut p);
+        fill_page(&mut p, shared, 1.0);
+        let private = s.alloc(&mut p);
+        fill_page(&mut p, private, 2.0);
+        // The shared page looks *colder* by score, but carries two extra
+        // sharers; the sharer signal must dominate the bbox score.
+        s.note_score(shared, 0.01);
+        s.note_score(private, 0.99);
+        p.retain(shared);
+        p.retain(shared);
+        s.sync(&p);
+        s.enforce_budget(&mut p);
+        assert!(s.is_cold(private), "private page demotes first");
+        assert!(!s.is_cold(shared), "3-sharer page stays hot despite cold score");
+        p.release(private);
+        for _ in 0..3 {
+            p.release(shared);
         }
         s.sync(&p);
         assert_eq!(s.bytes_in_use(&p), 0);

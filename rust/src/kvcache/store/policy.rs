@@ -87,6 +87,14 @@ pub trait EvictionPolicy: Send {
     /// signal; other policies ignore it).
     fn on_score(&mut self, _id: PageId, _score: f32) {}
 
+    /// Sharer-count observation from the store's refcount reconciliation:
+    /// how many owners (sequences, session snapshots, prefix-index
+    /// entries) currently reference this page. A shared page serves K
+    /// requests at once, so demoting it multiplies the cost across every
+    /// sharer — sharing-aware policies weight victims accordingly;
+    /// recency policies ignore the signal.
+    fn on_sharers(&mut self, _id: PageId, _sharers: u32) {}
+
     /// Page left residency entirely (freed back to the pool).
     fn on_remove(&mut self, id: PageId);
 
@@ -329,8 +337,16 @@ pub struct QueryAwareCold {
     scored: Vec<bool>,
     tracked: Vec<bool>,
     stamp: Vec<u64>,
+    /// pool refcount at the last store reconciliation (1 = private)
+    sharers: Vec<u32>,
     decay: f32,
 }
+
+/// Rank boost per extra sharer: large enough that any shared page
+/// outranks any private page's bbox score (scores are O(dot products),
+/// nowhere near 1e12), small enough that the unscored-page sentinel
+/// (-1e30) still dominates.
+const SHARER_RANK_BOOST: f64 = 1e12;
 
 impl QueryAwareCold {
     pub fn new(decay: f32) -> Self {
@@ -339,6 +355,7 @@ impl QueryAwareCold {
             scored: Vec::new(),
             tracked: Vec::new(),
             stamp: Vec::new(),
+            sharers: Vec::new(),
             decay,
         }
     }
@@ -354,6 +371,7 @@ impl EvictionPolicy for QueryAwareCold {
         self.scored.resize(cap, false);
         self.tracked.resize(cap, false);
         self.stamp.resize(cap, 0);
+        self.sharers.resize(cap, 1);
     }
 
     fn on_access(&mut self, id: PageId, now: u64) {
@@ -374,30 +392,45 @@ impl EvictionPolicy for QueryAwareCold {
         }
     }
 
+    fn on_sharers(&mut self, id: PageId, sharers: u32) {
+        let i = id as usize;
+        if i < self.sharers.len() {
+            self.sharers[i] = sharers.max(1);
+        }
+    }
+
     fn on_remove(&mut self, id: PageId) {
         let i = id as usize;
         self.tracked[i] = false;
         self.scored[i] = false;
         self.ema[i] = 0.0;
+        self.sharers[i] = 1;
     }
 
     fn victim(&mut self, evictable: &mut dyn FnMut(PageId) -> bool) -> Option<PageId> {
-        let mut best: Option<(PageId, f32, u64)> = None;
+        // victim key, minimized lexicographically: (sharers, score, stamp)
+        // — every private page demotes before any shared one (demoting a
+        // K-sharer page costs K requests a fault), then lowest bbox
+        // relevance, then oldest; unscored pages are colder than scored
+        let mut best: Option<(PageId, u32, f32, u64)> = None;
         for i in 0..self.tracked.len() {
             if !self.tracked[i] || !evictable(i as PageId) {
                 continue;
             }
+            let sh = self.sharers[i].max(1);
             let s = if self.scored[i] { self.ema[i] } else { f32::NEG_INFINITY };
             let t = self.stamp[i];
             let better = match best {
                 None => true,
-                Some((_, bs, bt)) => s < bs || (s == bs && t < bt),
+                Some((_, bsh, bs, bt)) => {
+                    sh < bsh || (sh == bsh && (s < bs || (s == bs && t < bt)))
+                }
             };
             if better {
-                best = Some((i as PageId, s, t));
+                best = Some((i as PageId, sh, s, t));
             }
         }
-        best.map(|(id, _, _)| {
+        best.map(|(id, _, _, _)| {
             self.tracked[id as usize] = false;
             id
         })
@@ -405,11 +438,18 @@ impl EvictionPolicy for QueryAwareCold {
 
     fn rank(&self, id: PageId) -> f64 {
         let i = id as usize;
+        let boost = self
+            .sharers
+            .get(i)
+            .copied()
+            .unwrap_or(1)
+            .saturating_sub(1) as f64
+            * SHARER_RANK_BOOST;
         if i < self.scored.len() && self.scored[i] {
-            self.ema[i] as f64
+            self.ema[i] as f64 + boost
         } else {
             // never-scored pages rank coldest, oldest first
-            -1e30 + self.stamp.get(i).copied().unwrap_or(0) as f64
+            -1e30 + self.stamp.get(i).copied().unwrap_or(0) as f64 + boost
         }
     }
 }
@@ -665,6 +705,45 @@ mod tests {
         assert_eq!(p.victim(&mut |_| true), Some(0), "oldest unscored first");
         assert_eq!(p.victim(&mut |_| true), Some(1));
         assert_eq!(p.victim(&mut |_| true), Some(2));
+    }
+
+    #[test]
+    fn query_aware_shared_page_outlives_private_cold() {
+        let mut p = QueryAwareCold::new(0.5);
+        p.ensure_capacity(4);
+        for id in 0..3u32 {
+            p.on_access(id, id as u64 + 1);
+        }
+        // page 0 has the WORST score but 3 sharers: private pages demote
+        // first regardless of score
+        p.on_score(0, -100.0);
+        p.on_score(1, 5.0);
+        p.on_score(2, 80.0);
+        p.on_sharers(0, 3);
+        assert_eq!(p.victim(&mut |_| true), Some(1), "lowest-score private");
+        assert_eq!(p.victim(&mut |_| true), Some(2));
+        assert_eq!(p.victim(&mut |_| true), Some(0), "shared page goes last");
+        // rank reflects the sharer boost for PruneColdest too
+        assert!(p.rank(0) > 1e11, "sharer boost dominates the bbox score");
+    }
+
+    #[test]
+    fn query_aware_sharer_signal_resets_on_remove() {
+        let mut p = QueryAwareCold::new(0.5);
+        p.ensure_capacity(2);
+        p.on_access(0, 1);
+        p.on_access(1, 2);
+        p.on_score(0, -1.0);
+        p.on_score(1, 1.0);
+        p.on_sharers(0, 4);
+        assert_eq!(p.victim(&mut |_| true), Some(1));
+        p.on_remove(0);
+        // re-tracked after removal: the stale sharer count must not leak
+        p.on_access(0, 3);
+        p.on_access(1, 4);
+        p.on_score(0, -1.0);
+        p.on_score(1, 1.0);
+        assert_eq!(p.victim(&mut |_| true), Some(0), "private again");
     }
 
     #[test]

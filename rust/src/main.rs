@@ -97,6 +97,12 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
     cfg.spill_budget_mb = args.f64_opt("spill-budget-mb");
     cfg.spill_dir = args.get("spill-dir").map(std::path::PathBuf::from);
     cfg.readahead_pages = args.usize_or("readahead", 0);
+    // cross-request shared-prefix cache: --prefix-cache-mb enables it,
+    // --prefix-min-pages sets the adoption threshold in whole pages.
+    // Inconsistent combos are rejected by validate() with the pairing
+    // spelled out, like the spill flags.
+    cfg.prefix_cache_mb = args.f64_opt("prefix-cache-mb");
+    cfg.prefix_min_pages = args.usize_or("prefix-min-pages", 0);
     cfg.validate()?;
     Ok(cfg)
 }
@@ -519,6 +525,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         r.session_stats.reused_tokens,
         r.session_stats.migrations
     );
+    if cfg.prefix_cache_mb.is_some() {
+        println!(
+            "prefix cache        hit {:.0}%  pages adopted {}  tokens skipped {}  \
+             deduped {:.2} MB  published {}  unpublished {}",
+            r.prefix_stats.hit_rate() * 100.0,
+            r.prefix_stats.pages_adopted,
+            r.prefix_stats.tokens_skipped,
+            r.prefix_stats.bytes_deduped as f64 / 1e6,
+            r.prefix_stats.pages_published,
+            r.prefix_stats.pages_unpublished
+        );
+    }
     for (task, acc, n) in &r.per_task {
         println!("  task {task:10} acc {:.0}%  (n={n})", acc * 100.0);
     }
@@ -634,6 +652,7 @@ fn main() -> Result<()> {
                  [--policy P] [--budget N] [--batch B] [--kv-budget-mb MB] \
                  [--eviction-policy lru|clock|query-aware|sieve] \
                  [--spill-budget-mb MB] [--spill-dir DIR] [--readahead N] \
+                 [--prefix-cache-mb MB] [--prefix-min-pages N] \
                  [--workers N] [--threads N] [--executor scoped|persistent] \
                  [--listen HOST:PORT] [--max-conns N] [--queue-depth N] \
                  [--shed-policy defer|shed] [--exit-when-idle] \
@@ -858,5 +877,33 @@ mod tests {
             Some(std::path::PathBuf::from("/tmp/kv-spill"))
         );
         assert_eq!(cfg.readahead_pages, 4);
+    }
+
+    #[test]
+    fn prefix_min_pages_without_cache_budget_is_rejected_with_pairing() {
+        let e = serving_config(&args("serve --prefix-min-pages 2"))
+            .unwrap_err()
+            .to_string();
+        assert!(
+            e.contains("--prefix-min-pages") && e.contains("--prefix-cache-mb"),
+            "error must name the expected flag pairing: {e}"
+        );
+        assert!(
+            serving_config(&args("serve --prefix-cache-mb 0")).is_err(),
+            "zero prefix budget accepted"
+        );
+    }
+
+    #[test]
+    fn prefix_flags_parse_into_the_config() {
+        let cfg = serving_config(&args(
+            "serve --prefix-cache-mb 16 --prefix-min-pages 2",
+        ))
+        .unwrap();
+        assert_eq!(cfg.prefix_cache_mb, Some(16.0));
+        assert_eq!(cfg.prefix_min_pages, 2);
+        let off = serving_config(&args("serve")).unwrap();
+        assert_eq!(off.prefix_cache_mb, None, "absent flag keeps sharing off");
+        assert_eq!(off.prefix_min_pages, 0);
     }
 }

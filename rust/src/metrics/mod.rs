@@ -64,6 +64,13 @@ pub struct StepMetrics {
     pub pages_hot: usize,
     pub pages_cold: usize,
     pub pages_disk: usize,
+    // --- cross-request prefix sharing (zero with the prefix cache off) ---
+    /// shared prefix pages adopted by admitted requests this round
+    pub prefix_pages_adopted: usize,
+    /// prompt tokens whose prefill was skipped via prefix adoption
+    pub prefix_tokens_skipped: usize,
+    /// KV bytes deduplicated by adoption (pages adopted x hot page bytes)
+    pub prefix_bytes_deduped: usize,
 }
 
 impl StepMetrics {
@@ -116,6 +123,9 @@ impl StepMetrics {
         self.pages_hot += o.pages_hot;
         self.pages_cold += o.pages_cold;
         self.pages_disk += o.pages_disk;
+        self.prefix_pages_adopted += o.prefix_pages_adopted;
+        self.prefix_tokens_skipped += o.prefix_tokens_skipped;
+        self.prefix_bytes_deduped += o.prefix_bytes_deduped;
     }
 
     /// Page-level cache hit rate for this step (paper "KV Hit %"):
@@ -242,6 +252,10 @@ pub struct ServerMetrics {
     pub disk_pages: Welford,
     /// max post-step disk-resident page count observed
     pub disk_pages_peak: usize,
+    // --- cross-request prefix sharing aggregation ---
+    pub total_prefix_pages_adopted: u64,
+    pub total_prefix_tokens_skipped: u64,
+    pub total_prefix_bytes_deduped: u64,
     /// steps that ended with bytes_in_use above the budget (0 when the
     /// budget is enforceable — the serving invariant)
     pub budget_violations: u64,
@@ -298,6 +312,9 @@ impl Default for ServerMetrics {
             total_disk_seconds: 0.0,
             disk_pages: Welford::default(),
             disk_pages_peak: 0,
+            total_prefix_pages_adopted: 0,
+            total_prefix_tokens_skipped: 0,
+            total_prefix_bytes_deduped: 0,
             budget_violations: 0,
             run_seconds: 0.0,
             ttft_attained: [0; 3],
@@ -341,6 +358,9 @@ impl ServerMetrics {
         self.total_disk_seconds += m.disk_seconds;
         self.disk_pages.push(m.pages_disk as f64);
         self.disk_pages_peak = self.disk_pages_peak.max(m.pages_disk);
+        self.total_prefix_pages_adopted += m.prefix_pages_adopted as u64;
+        self.total_prefix_tokens_skipped += m.prefix_tokens_skipped as u64;
+        self.total_prefix_bytes_deduped += m.prefix_bytes_deduped as u64;
         if m.kv_budget_bytes > 0 && m.kv_bytes_in_use > m.kv_budget_bytes {
             self.budget_violations += 1;
         }
@@ -616,6 +636,34 @@ mod tests {
         m.merge(&empty_round);
         m.merge(&empty_round);
         assert!(m.entropy == 0.0, "0/0 must not reach the weighted average");
+    }
+
+    #[test]
+    fn prefix_counters_sum_on_merge_and_aggregate() {
+        let a = StepMetrics {
+            batch: 2,
+            prefix_pages_adopted: 3,
+            prefix_tokens_skipped: 12,
+            prefix_bytes_deduped: 1536,
+            ..Default::default()
+        };
+        let mut m = StepMetrics {
+            batch: 1,
+            prefix_pages_adopted: 1,
+            prefix_tokens_skipped: 4,
+            prefix_bytes_deduped: 512,
+            ..Default::default()
+        };
+        m.merge(&a);
+        assert_eq!(m.prefix_pages_adopted, 4);
+        assert_eq!(m.prefix_tokens_skipped, 16);
+        assert_eq!(m.prefix_bytes_deduped, 2048);
+        let mut sm = ServerMetrics::new(false);
+        sm.on_step(&m);
+        sm.on_step(&StepMetrics { batch: 1, ..Default::default() });
+        assert_eq!(sm.total_prefix_pages_adopted, 4);
+        assert_eq!(sm.total_prefix_tokens_skipped, 16);
+        assert_eq!(sm.total_prefix_bytes_deduped, 2048);
     }
 
     #[test]

@@ -574,6 +574,20 @@ pub struct MockBackend {
     /// `ServeEvent::sig(true)` of every event `step` produced, in order —
     /// the byte-diffable determinism record for loopback smoke runs
     pub event_log: Vec<String>,
+    /// page granularity (tokens) of the mock's shared-prefix prefill
+    /// model; 0 = off (every admission prices its full prompt)
+    pub prefix_page: usize,
+    /// modeled prefill seconds per prompt token (only read when
+    /// `prefix_page > 0`; the knobs-off mock keeps `prefill_seconds: 0.0`
+    /// exactly as before, so existing determinism logs are unchanged)
+    pub prefill_s_per_token: f64,
+    /// page-aligned (chunk index, token ids) prefixes already prefilled —
+    /// the mock's stand-in for the engine-side `PrefixIndex`
+    published: std::collections::HashSet<(usize, Vec<i32>)>,
+    /// one record per admission: (request id, prompt tokens actually
+    /// prefilled, modeled prefill seconds). The wire `finished` frame has
+    /// no prefill field, so loopback tests read the win here.
+    pub prefill_log: Vec<(u64, usize, f64)>,
 }
 
 struct MockActive {
@@ -581,6 +595,8 @@ struct MockActive {
     admitted_at: f64,
     emitted: usize,
     kv: usize,
+    /// modeled prefill span for this admission (0.0 with the model off)
+    prefill_s: f64,
 }
 
 impl Default for MockBackend {
@@ -602,7 +618,43 @@ impl MockBackend {
             kv_in_use: 0,
             trace: Vec::new(),
             event_log: Vec::new(),
+            prefix_page: 0,
+            prefill_s_per_token: 0.0,
+            published: std::collections::HashSet::new(),
+            prefill_log: Vec::new(),
         }
+    }
+
+    /// Model one prompt's prefill: leading page-aligned chunks already
+    /// published are skipped (longest match, capped so at least one token
+    /// is always prefilled — mirroring the engine-side adoption cap), then
+    /// every full chunk of this prompt is published for later arrivals.
+    /// Returns (tokens prefilled, modeled prefill seconds).
+    fn model_prefill(&mut self, prompt: &[i32]) -> (usize, f64) {
+        let mut skipped = 0usize;
+        if self.prefix_page > 0 {
+            let p = self.prefix_page;
+            for (i, chunk) in prompt.chunks_exact(p).enumerate() {
+                if (i + 1) * p >= prompt.len() {
+                    break;
+                }
+                if self.published.contains(&(i, chunk.to_vec())) {
+                    skipped += p;
+                } else {
+                    break;
+                }
+            }
+            for (i, chunk) in prompt.chunks_exact(p).enumerate() {
+                self.published.insert((i, chunk.to_vec()));
+            }
+        }
+        let prefilled = prompt.len() - skipped;
+        let span = if self.prefix_page > 0 {
+            prefilled as f64 * self.prefill_s_per_token
+        } else {
+            0.0
+        };
+        (prefilled, span)
     }
 }
 
@@ -634,12 +686,15 @@ impl ServeBackend for MockBackend {
             let kv =
                 (req.prompt.len() + req.max_new_tokens) * self.kv_bytes_per_token;
             self.kv_in_use += kv;
+            let (prefilled, prefill_s) = self.model_prefill(&req.prompt);
+            self.prefill_log.push((req.id, prefilled, prefill_s));
             out.push(ServeEvent::Admitted { id: req.id, t: self.now });
             self.active.push(MockActive {
                 req,
                 admitted_at: self.now,
                 emitted: 0,
                 kv,
+                prefill_s,
             });
         }
         if !self.active.is_empty() {
@@ -663,8 +718,10 @@ impl ServeBackend for MockBackend {
                     id: a.req.id,
                     tier: a.req.tier,
                     queue_seconds: a.admitted_at - a.req.arrival_s,
-                    prefill_seconds: 0.0,
-                    ttft_seconds: a.admitted_at - a.req.arrival_s + self.step_s,
+                    prefill_seconds: a.prefill_s,
+                    ttft_seconds: a.admitted_at - a.req.arrival_s
+                        + a.prefill_s
+                        + self.step_s,
                     decode_seconds: a.emitted as f64 * self.step_s,
                     e2e_seconds: self.now - a.req.arrival_s,
                     prompt_tokens: a.req.prompt.len(),

@@ -127,6 +127,18 @@ pub struct OpenLoopConfig {
     pub tier_interactive: f64,
     /// fraction of requests in the background SLO tier
     pub tier_background: f64,
+    /// multi-tenant template mix for the shared-prefix cache: number of
+    /// tenants (zipf-popular, like sessions). 0 = template mix off — with
+    /// all three template knobs zeroed the RNG stream is bit-identical to
+    /// the pre-template generator.
+    pub n_tenants: usize,
+    /// distinct prompt templates per tenant (0 treated as 1)
+    pub templates_per_tenant: usize,
+    /// fraction of non-session requests drawn from a tenant template:
+    /// shared template preamble + a paraphrased question tail. Template
+    /// requests carry `session = None`, so only page-granular prefix
+    /// sharing (never the session store) can reuse their KV.
+    pub template_prob: f64,
     pub seed: u64,
 }
 
@@ -145,6 +157,9 @@ impl Default for OpenLoopConfig {
             deadline_every: 1,
             tier_interactive: 0.0,
             tier_background: 0.0,
+            n_tenants: 0,
+            templates_per_tenant: 0,
+            template_prob: 0.0,
             seed: 42,
         }
     }
@@ -158,6 +173,9 @@ pub struct OpenLoopGen {
     cfg: OpenLoopConfig,
     rng: Rng,
     sessions: Vec<tasks::SessionDoc>,
+    /// tenant prompt templates (n_tenants x templates_per_tenant, row per
+    /// tenant); empty when the template mix is off
+    templates: Vec<tasks::SessionDoc>,
     /// virtual time of the most recently generated arrival
     t: f64,
     emitted: u64,
@@ -172,8 +190,25 @@ impl OpenLoopGen {
         let sessions: Vec<tasks::SessionDoc> = (0..cfg.n_sessions)
             .map(|_| tasks::kvrecall_session(&mut rng, sess_chars, 8))
             .collect();
-        let mut g =
-            OpenLoopGen { cfg, rng, sessions, t: 0.0, emitted: 0, next: None };
+        // templates are drawn only when the mix is on, so off-configs keep
+        // the construction RNG stream (and every later draw) bit-identical
+        let templates: Vec<tasks::SessionDoc> = if cfg.n_tenants > 0 {
+            let per = cfg.templates_per_tenant.max(1);
+            (0..cfg.n_tenants * per)
+                .map(|_| tasks::kvrecall_session(&mut rng, sess_chars, 8))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mut g = OpenLoopGen {
+            cfg,
+            rng,
+            sessions,
+            templates,
+            t: 0.0,
+            emitted: 0,
+            next: None,
+        };
         g.next = g.gen_next();
         g
     }
@@ -262,6 +297,19 @@ impl OpenLoopGen {
             Some(sid) => {
                 let q = self.rng.usize(8);
                 (self.sessions[sid as usize].question(q), Task::KvRecall)
+            }
+            // template draw is short-circuited on `templates.is_empty()`
+            // BEFORE any RNG is consumed, so zeroed template knobs keep
+            // the historical stream bit-identical (same contract as the
+            // tier knobs below)
+            None if !self.templates.is_empty()
+                && self.rng.bool(self.cfg.template_prob) =>
+            {
+                let per = self.cfg.templates_per_tenant.max(1);
+                let tenant = self.rng.zipf(self.cfg.n_tenants, 1.1);
+                let tpl = self.rng.usize(per);
+                let q = self.rng.usize(8);
+                (self.templates[tenant * per + tpl].question(q), Task::KvRecall)
             }
             None => {
                 let task = *self.rng.choice(all);
@@ -557,6 +605,64 @@ mod tests {
             let d = r.deadline_ms.expect("tiered requests carry an SLO");
             assert_eq!(d, r.tier.deadline_ms());
         }
+    }
+
+    #[test]
+    fn template_mix_off_is_stream_identical() {
+        let base = OpenLoopConfig { n_requests: 100, ..Default::default() };
+        let off = OpenLoopConfig {
+            n_tenants: 0,
+            templates_per_tenant: 0,
+            template_prob: 0.0,
+            ..base.clone()
+        };
+        let a: Vec<String> =
+            OpenLoopGen::new(base).collect_all().iter().map(sig).collect();
+        let b: Vec<String> =
+            OpenLoopGen::new(off).collect_all().iter().map(sig).collect();
+        assert_eq!(a, b, "zeroed template knobs must not perturb the RNG stream");
+    }
+
+    #[test]
+    fn template_mix_repeats_shared_prompt_prefixes() {
+        let cfg = OpenLoopConfig {
+            n_requests: 300,
+            session_reuse_prob: 0.0,
+            n_sessions: 0,
+            n_tenants: 3,
+            templates_per_tenant: 2,
+            template_prob: 0.7,
+            ..Default::default()
+        };
+        let trace = OpenLoopGen::new(cfg).collect_all();
+        assert!(
+            trace.iter().all(|r| r.session.is_none()),
+            "template requests never carry a session id"
+        );
+        // bucket by a 32-token prompt prefix: template requests share the
+        // tenant preamble, organic ones are (near-)unique
+        let mut groups: std::collections::HashMap<Vec<i32>, usize> =
+            std::collections::HashMap::new();
+        for r in &trace {
+            if r.prompt.len() >= 32 {
+                *groups.entry(r.prompt[..32].to_vec()).or_insert(0) += 1;
+            }
+        }
+        let mut sizes: Vec<usize> = groups.values().copied().collect();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        // ~70% of 300 requests spread over 6 zipf-weighted templates: the
+        // hottest template prefix must repeat many times
+        assert!(
+            sizes[0] >= 20,
+            "hottest shared prefix repeats {} times",
+            sizes[0]
+        );
+        let shared: usize = sizes.iter().filter(|&&s| s >= 2).sum();
+        assert!(
+            shared as f64 >= 0.5 * trace.len() as f64,
+            "shared-prefix share {shared}/{}",
+            trace.len()
+        );
     }
 
     #[test]

@@ -509,6 +509,105 @@ fn spill_tier_is_token_transparent_under_int8_budget() {
     write_ci_log("spill_serve_events.log", &format!("{header}\n{log1}"));
 }
 
+#[test]
+fn prefix_sharing_is_token_transparent_and_saves_prefill() {
+    // Acceptance for the shared prefix cache: a multi-tenant template
+    // workload served with the prefix cache on must decode
+    // token-identically to the sharing-off run (adopted pages are
+    // bit-identical to the prefill they replace), while skipping a real
+    // fraction of prefill tokens and shrinking modeled TTFT. Also feeds
+    // the determinism battery: the sharing-on modeled-time event stream
+    // must replay bit-exactly (CI double-runs and cross-diffs the log).
+    let m = require!(manifest());
+    let trace = OpenLoopGen::new(OpenLoopConfig {
+        n_requests: 16,
+        rate_rps: 40.0,
+        prompt_chars: (250, 600),
+        new_tokens: (4, 10),
+        // sessions off so only the prefix index can carry cross-request
+        // reuse (template requests arrive with `session = None`)
+        session_reuse_prob: 0.0,
+        n_sessions: 0,
+        n_tenants: 2,
+        templates_per_tenant: 2,
+        template_prob: 0.7,
+        seed: 42,
+        ..Default::default()
+    })
+    .collect_all();
+    let run = |prefix_mb: Option<f64>| {
+        let cfg = ServingConfig {
+            model: MODEL.to_string(),
+            policy: PolicyKind::TinyServe,
+            budget: 256,
+            max_batch: 4,
+            prefix_cache_mb: prefix_mb,
+            prefix_min_pages: if prefix_mb.is_some() { 1 } else { 0 },
+            ..Default::default()
+        };
+        let mut e = Engine::from_manifest(&m, cfg).expect("engine");
+        let mut plugins = Pipeline::new();
+        let opts = ServeOptions {
+            time_model: TimeModel::Modeled,
+            ..Default::default()
+        };
+        let mut fe = Frontend::builder().options(opts).build(&mut e, &mut plugins);
+        for req in &trace {
+            fe.submit(req.clone());
+        }
+        let events = pump_all(&mut fe);
+        let mut tokens: std::collections::BTreeMap<u64, Vec<i32>> = Default::default();
+        for ev in &events {
+            if let ServeEvent::Token { id, tok, .. } = ev {
+                tokens.entry(*id).or_default().push(*tok);
+            }
+        }
+        let log = event_log(&events);
+        let r = fe.into_report();
+        assert_eq!(e.pool.pages_in_use(), 0, "page leak after prefix serving");
+        (tokens, r, log)
+    };
+
+    let (tok0, r0, _) = run(None);
+    assert_eq!(r0.metrics.total_requests, 16);
+    assert_eq!(
+        r0.prefix_stats.lookups, 0,
+        "sharing off: the index is never consulted"
+    );
+
+    let (tok1, r1, log1) = run(Some(16.0));
+    assert_eq!(r1.metrics.total_requests, 16, "sharing-on run completes");
+    assert!(
+        r1.prefix_stats.hits > 0,
+        "template workload must hit the prefix index"
+    );
+    assert!(
+        r1.prefix_stats.tokens_skipped > 0,
+        "adoption must skip real prefill tokens"
+    );
+    assert_eq!(
+        r1.metrics.total_prefix_tokens_skipped,
+        r1.prefix_stats.tokens_skipped,
+        "step counters and index stats agree"
+    );
+    assert_eq!(
+        tok0, tok1,
+        "prefix sharing must be token-transparent (adopted pages are \
+         bit-identical to the prefill they replace)"
+    );
+    assert!(
+        r1.metrics.request_ttft.p50() <= r0.metrics.request_ttft.p50() + 1e-9,
+        "skipped prefill is priced out of modeled time: TTFT P50 {} vs {}",
+        r1.metrics.request_ttft.p50(),
+        r0.metrics.request_ttft.p50()
+    );
+
+    let (_, _, log2) = run(Some(16.0));
+    assert_eq!(log1, log2, "same seed, same sharing-on event stream");
+    let header = event_log_header(42, 1, 1, "tinyserve", None);
+    write_ci_log("serve_prefix_events.log", &format!("{header}\n{log1}"));
+}
+
 fn lifecycle_req(
     id: u64,
     arrival_s: f64,

@@ -7,7 +7,8 @@ use tinyserve::config::KvDtype;
 use tinyserve::coordinator::batcher::{Batcher, BatcherConfig, QueuedItem, Round};
 use tinyserve::coordinator::session::SessionStore;
 use tinyserve::kvcache::{
-    default_spill_root, EvictionPolicyKind, PagePool, PageStore, SeqCache, SpillConfig,
+    default_spill_root, EvictionPolicyKind, PagePool, PageStore, PrefixIndex,
+    SeqCache, SpillConfig,
 };
 use tinyserve::sparsity::top_k_indices;
 use tinyserve::util::prop::prop_check;
@@ -550,6 +551,153 @@ fn prop_store_budget_pinning_and_conservation() {
         store.sync(&pool);
         if pool.pages_in_use() != 0 || store.bytes_in_use(&pool) != 0 {
             return Err("store/pool not empty after full release".into());
+        }
+        pool.validate().map_err(|e| e.to_string())
+    });
+}
+
+#[test]
+fn prop_prefix_sharing_is_token_identical_across_policies_and_dtypes() {
+    // The shared-prefix cache's correctness contract at the KV level:
+    // prefill writes are a pure function of (token, position), so a
+    // request that adopts published pages must end up with KV rows
+    // bit-identical to a from-scratch prefill of the same prompt — for
+    // every storage dtype and under every eviction policy's budgeted
+    // store. Also pins the COW contract (decode appends by a sharer never
+    // mutate the publisher's pages) and full-release conservation.
+    prop_check("prefix_token_identity", 60, |ctx| {
+        const PAGE: usize = 4;
+        let dt = *ctx.rng.choice(&[KvDtype::F32, KvDtype::F16]);
+        let kind = *ctx.rng.choice(&[
+            EvictionPolicyKind::Lru,
+            EvictionPolicyKind::Clock,
+            EvictionPolicyKind::QueryAware,
+            EvictionPolicyKind::Sieve,
+        ]);
+        let mut pool = PagePool::new(2, 8, PAGE, dt);
+        let mut px = PrefixIndex::new(None, 1);
+
+        // prefill writes derived purely from (token, position, layer)
+        fn prefill(
+            pool: &mut PagePool,
+            tokens: &[i32],
+            from: usize,
+            cache: &mut SeqCache,
+        ) {
+            for (pos, &t) in tokens.iter().enumerate().skip(from) {
+                let (page, slot) = cache.slot_for_next(pool);
+                for l in 0..2 {
+                    let row: Vec<f32> = (0..8)
+                        .map(|j| {
+                            t as f32 * 1e-3 + pos as f32 + (l * 8 + j) as f32 * 0.01
+                        })
+                        .collect();
+                    pool.write_token(page, slot, l, &row, &row);
+                }
+                cache.commit_token();
+            }
+        }
+        fn rows(pool: &PagePool, cache: &SeqCache, n: usize) -> Vec<Vec<f32>> {
+            let mut out = Vec::new();
+            for pos in 0..n {
+                let e = &cache.pages[pos / PAGE];
+                for l in 0..2 {
+                    out.push(pool.key_row(e.id, l, pos % PAGE));
+                }
+            }
+            out
+        }
+
+        let len_a = 8 + ctx.rng.usize(32);
+        let prompt_a: Vec<i32> =
+            (0..len_a).map(|_| 1 + ctx.rng.usize(499) as i32).collect();
+        let mut a = SeqCache::new();
+        prefill(&mut pool, &prompt_a, 0, &mut a);
+        px.publish(&prompt_a, &a, &mut pool);
+
+        // prompt B: a shared prefix of A plus a fresh tail
+        let share = 1 + ctx.rng.usize(len_a);
+        let mut prompt_b: Vec<i32> = prompt_a[..share].to_vec();
+        let tail = 1 + ctx.rng.usize(12);
+        prompt_b.extend((0..tail).map(|_| 500 + ctx.rng.usize(499) as i32));
+
+        // sharing-off baseline: full from-scratch prefill
+        let mut b_fresh = SeqCache::new();
+        prefill(&mut pool, &prompt_b, 0, &mut b_fresh);
+
+        // sharing-on: adopt the published prefix, prefill only the tail
+        let mut b_shared = SeqCache::new();
+        let covered = match px.adopt(&prompt_b, &mut pool) {
+            Some((cache, n)) => {
+                b_shared = cache;
+                n
+            }
+            None => 0,
+        };
+        if covered % PAGE != 0 || covered >= prompt_b.len() {
+            return Err(format!(
+                "adoption coverage {covered} not page-aligned below len {}",
+                prompt_b.len()
+            ));
+        }
+        prefill(&mut pool, &prompt_b, covered, &mut b_shared);
+        if rows(&pool, &b_fresh, prompt_b.len())
+            != rows(&pool, &b_shared, prompt_b.len())
+        {
+            return Err(format!(
+                "adopted KV differs from fresh prefill (dt {dt:?}, share \
+                 {share}, covered {covered})"
+            ));
+        }
+
+        // COW contract: decode appends by the sharer never touch the
+        // publisher's pages
+        let frozen_a = rows(&pool, &a, len_a);
+        for extra in 0..1 + ctx.rng.usize(2 * PAGE) {
+            let (page, slot) = b_shared.slot_for_next(&mut pool);
+            for l in 0..2 {
+                pool.write_token(page, slot, l, &[-(extra as f32); 8], &[0.5; 8]);
+            }
+            b_shared.commit_token();
+        }
+        if rows(&pool, &a, len_a) != frozen_a {
+            return Err("sharer decode appends mutated published pages".into());
+        }
+
+        // sharing-aware budgeted store: register everything live, enforce
+        // a tight budget, and the byte invariant must hold whenever a
+        // demotable page remains
+        let budget = 2 * pool.page_bytes();
+        let mut store = PageStore::new(Some(budget), kind);
+        store.sync(&pool);
+        store.enforce_budget(&mut pool);
+        let bytes = store.bytes_in_use(&pool);
+        if bytes > budget {
+            let demotable = (0..pool.cap_pages() as u32).any(|id| {
+                pool.refcount(id) > 0
+                    && store.is_hot(id)
+                    && !store.is_pinned(id)
+                    && pool.filled(id) == PAGE
+            });
+            if demotable {
+                return Err(format!(
+                    "bytes {bytes} > budget {budget} with demotable pages left"
+                ));
+            }
+        }
+
+        // full release drains everything (index refs included)
+        a.clear(&mut pool);
+        b_fresh.clear(&mut pool);
+        b_shared.clear(&mut pool);
+        px.clear(&mut pool);
+        store.sync(&pool);
+        if pool.pages_in_use() != 0 || store.bytes_in_use(&pool) != 0 {
+            return Err(format!(
+                "{} pages / {} bytes leaked after full release",
+                pool.pages_in_use(),
+                store.bytes_in_use(&pool)
+            ));
         }
         pool.validate().map_err(|e| e.to_string())
     });

@@ -352,6 +352,73 @@ fn single_conn_closed_loop_is_byte_deterministic() {
 }
 
 #[test]
+fn prefix_second_same_template_request_prefills_less_in_modeled_time() {
+    // Loopback smoke for the shared-prefix cache contract: two requests
+    // sharing a long template preamble, served back to back — the second
+    // admission must prefill strictly fewer prompt tokens (the shared
+    // page-aligned chunks are adopted, not recomputed) and its modeled
+    // prefill span must shrink accordingly. CI runs this by name
+    // (`cargo test --test server prefix_`).
+    let cfg = ServerConfig { exit_when_idle: true, ..ServerConfig::default() };
+    let page = 4usize;
+    let (addr, server) = serve_mock(cfg, move || {
+        let mut b = MockBackend::new();
+        b.prefix_page = page;
+        b.prefill_s_per_token = 0.001;
+        b
+    });
+    let template = "system: you are a terse assistant; answer from the \
+                    context only. context: alpha beta gamma delta epsilon \
+                    zeta eta theta iota kappa lambda mu. ";
+
+    let (mut stream, mut reader) = connect(addr);
+    assert_eq!(read_msg(&mut reader), Some(ServerMsg::Hello { schema: PROTO_SCHEMA }));
+    for (id, tail) in [(0u64, "question: first?"), (1u64, "question: again?")] {
+        send(
+            &mut stream,
+            &ClientMsg::Submit {
+                id,
+                prompt: format!("{template}{tail}"),
+                max_new: 3,
+                session: None,
+                deadline_ms: None,
+                tier: None,
+            },
+        );
+        loop {
+            match read_msg(&mut reader).expect("open until terminal") {
+                ServerMsg::Finished { id: fid, .. } => {
+                    assert_eq!(fid, id);
+                    break;
+                }
+                ServerMsg::Admitted { .. } | ServerMsg::Token { .. } => {}
+                other => panic!("unexpected message: {other:?}"),
+            }
+        }
+    }
+    send(&mut stream, &ClientMsg::Close);
+    assert_eq!(read_msg(&mut reader), None);
+
+    let (stats, backend) = server.join().unwrap();
+    assert_eq!(stats.submitted, 2);
+    assert_eq!(backend.prefill_log.len(), 2, "one prefill record per admission");
+    let (id0, tokens0, span0) = backend.prefill_log[0];
+    let (id1, tokens1, span1) = backend.prefill_log[1];
+    assert_eq!((id0, id1), (0, 1));
+    assert!(
+        tokens1 + 2 * page <= tokens0,
+        "second request prefilled {tokens1} tokens vs {tokens0}: the shared \
+         template must skip at least two full pages"
+    );
+    assert!(
+        span1 < span0,
+        "modeled prefill span must shrink with the skipped pages \
+         ({span1} vs {span0})"
+    );
+    assert_eq!(backend.kv_bytes_in_use(), 0);
+}
+
+#[test]
 fn disconnect_frees_real_engine_kv_mid_flight() {
     // The one real-engine scenario: a TCP client vanishes mid-decode and
     // the front door's cancel path must release the request's KV pages in
